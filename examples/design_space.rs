@@ -1,0 +1,83 @@
+//! Design-space exploration, in both directions the paper discusses:
+//!
+//! 1. **GNN design space (GraphGym)** — sweep pre/mp/post depth,
+//!    aggregation operator, residuals, and BatchNorm; every point
+//!    compiles to the same overlay in milliseconds (no re-synthesis).
+//! 2. **Hardware design space** — sweep N_pe and p_sys to see where
+//!    the paper's 8 x 16x16 configuration sits.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::GraphGymConfig;
+use graphagile::isa::{Activation, AggOp};
+use graphagile::sim::simulate;
+
+fn main() {
+    let ds = dataset("PU").unwrap();
+    let hw = HwConfig::alveo_u250();
+    let tiles = ds.tile_counts(hw.n1() as u64);
+
+    println!("== GraphGym design space on {} ==", ds.name);
+    println!(
+        "{:>4} {:>4} {:>5} {:>9} {:>4} {:>10} {:>10} {:>12}",
+        "pre", "mp", "post", "agg", "res", "LoC (us)", "LoH (ms)", "binary (KB)"
+    );
+    for n_pre in [0, 1] {
+        for n_mp in [2, 3, 4] {
+            for aggop in [AggOp::Sum, AggOp::Max] {
+                for residual in [false, true] {
+                    let cfg = GraphGymConfig {
+                        n_pre,
+                        n_mp,
+                        n_post: 1,
+                        hidden: 256,
+                        aggop,
+                        act: Activation::PRelu,
+                        residual,
+                        batchnorm: true,
+                    };
+                    let ir = cfg.build("gg", ds.meta());
+                    let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+                    let sim = simulate(&exe.program, &hw);
+                    println!(
+                        "{:>4} {:>4} {:>5} {:>9} {:>4} {:>10.1} {:>10.3} {:>12.1}",
+                        n_pre,
+                        n_mp,
+                        1,
+                        format!("{aggop:?}"),
+                        if residual { "y" } else { "n" },
+                        exe.report.total() * 1e6,
+                        sim.loh_ms(),
+                        exe.program.size_bytes() as f64 / 1e3,
+                    );
+                }
+            }
+        }
+    }
+
+    println!("\n== hardware design space (b2 on {}) ==", ds.name);
+    println!("{:>6} {:>6} {:>10} {:>8}", "n_pe", "p_sys", "LoH (ms)", "util %");
+    let ir = graphagile::ir::ZooModel::B2.build(ds.meta());
+    for n_pe in [2usize, 4, 8, 16] {
+        for p_sys in [8usize, 16, 32] {
+            let hw = HwConfig { n_pe, p_sys, ..HwConfig::alveo_u250() };
+            if hw.validate().is_err() {
+                continue;
+            }
+            let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+            let sim = simulate(&exe.program, &hw);
+            println!(
+                "{:>6} {:>6} {:>10.3} {:>8.1}",
+                n_pe,
+                p_sys,
+                sim.loh_ms(),
+                sim.utilization() * 100.0
+            );
+        }
+    }
+}

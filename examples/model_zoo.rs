@@ -1,0 +1,45 @@
+//! Model zoo sweep: run all eight paper benchmarks (b1–b8, Table 5) on a
+//! set of graphs without any hardware regeneration — the overlay pitch:
+//! one bitstream, eight models, milliseconds of compilation each.
+//!
+//! ```bash
+//! cargo run --release --example model_zoo [-- CI,CO,PU,FL]
+//! ```
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::{dataset, TileCounts};
+use graphagile::ir::ALL_MODELS;
+use graphagile::util::timed;
+
+fn main() {
+    let keys = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "CI,CO,PU,FL".to_string());
+    let hw = HwConfig::alveo_u250();
+    println!(
+        "{:>5} {:>4} {:>10} {:>10} {:>12} {:>8} {:>10}",
+        "model", "ds", "LoC (ms)", "LoH (ms)", "binary (KB)", "util %", "GFLOP/s"
+    );
+    for key in keys.split(',') {
+        let ds = dataset(key).unwrap_or_else(|| panic!("unknown dataset {key}"));
+        let (src, dst) = ds.edge_arrays();
+        let (tiles, t_part) =
+            timed(|| TileCounts::from_edges(&src, &dst, ds.n_vertices, hw.n1() as u64));
+        for m in ALL_MODELS {
+            let ir = m.build(ds.meta());
+            let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+            let sim = graphagile::sim::simulate(&exe.program, &hw);
+            println!(
+                "{:>5} {:>4} {:>10.3} {:>10.3} {:>12.1} {:>8.1} {:>10.1}",
+                m.key(),
+                ds.key,
+                (t_part + exe.report.total()) * 1e3,
+                sim.loh_ms(),
+                exe.program.size_bytes() as f64 / 1e3,
+                sim.utilization() * 100.0,
+                sim.gflops(exe.ir.total_complexity()),
+            );
+        }
+    }
+}

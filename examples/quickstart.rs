@@ -1,0 +1,81 @@
+//! Quickstart: compile a GCN (paper model b1) on Cora through the full
+//! GraphAGILE pipeline — IR build, four-pass optimizing compile, `.ga`
+//! binary generation, and cycle-level simulation of the Alveo U250
+//! overlay — then print the end-to-end latency breakdown of Table 7.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::sim::{comm_seconds, simulate};
+use graphagile::util::{fmt_bytes, fmt_ms, timed};
+
+fn main() {
+    // 1. The hardware: the paper's Alveo U250 overlay instance.
+    let hw = HwConfig::alveo_u250();
+    println!(
+        "overlay: {} PEs x {}x{} ACK @ {} MHz ({:.0} GFLOPS peak, {} on-chip)",
+        hw.n_pe,
+        hw.p_sys,
+        hw.p_sys,
+        hw.freq_hz / 1e6,
+        hw.peak_flops() / 1e9,
+        fmt_bytes(hw.on_chip_bytes()),
+    );
+
+    // 2. The instance: model b1 (2-layer GCN, hidden 16) on Cora.
+    let ds = dataset("CO").unwrap();
+    let ir = ZooModel::B1.build(ds.meta());
+    println!(
+        "\ninstance: {} on {} (|V|={}, |E|={}, f={})",
+        ir.name, ds.name, ds.n_vertices, ds.n_edges, ds.feat_len
+    );
+    println!("IR ({} layers):", ir.n_layers());
+    for l in &ir.layers {
+        println!("  layer {:2} {:?} {} -> {}", l.id, l.ltype, l.f_in, l.f_out);
+    }
+
+    // 3. Partition the graph (the synthetic Cora stand-in) and compile.
+    let (src, dst) = ds.edge_arrays();
+    let (tiles, t_part) = timed(|| {
+        graphagile::graph::TileCounts::from_edges(&src, &dst, ds.n_vertices, hw.n1() as u64)
+    });
+    let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+    println!("\nafter order-optimization + fusion ({} layers):", exe.ir.n_layers());
+    for l in &exe.ir.layers {
+        println!(
+            "  layer {:2} {:?} {} -> {}{}",
+            l.id,
+            l.ltype,
+            l.f_in,
+            l.f_out,
+            if l.act_enabled { "  (+act)" } else { "" }
+        );
+    }
+    println!(
+        "\nbinary: {} instructions, {}",
+        exe.program.total_instrs(),
+        fmt_bytes(exe.program.size_bytes()),
+    );
+
+    // 4. Simulate the overlay and assemble the Table-7 metrics.
+    let sim = simulate(&exe.program, &hw);
+    let t_loc = t_part + exe.report.total();
+    let bytes = ds.meta().input_bytes() + exe.ir.weight_bytes() + exe.program.size_bytes();
+    let t_comm = comm_seconds(&hw, bytes);
+    let t_loh = sim.loh_seconds();
+    println!("\nlatency breakdown (paper Table 7 metrics):");
+    println!("  T_LoC  (compilation)        {}", fmt_ms(t_loc * 1e3));
+    println!("  T_comm (PCIe, {} )   {}", fmt_bytes(bytes), fmt_ms(t_comm * 1e3));
+    println!("  T_LoH  (hardware execution) {}", fmt_ms(t_loh * 1e3));
+    println!("  T_E2E                       {}", fmt_ms((t_loc + t_comm + t_loh) * 1e3));
+    println!(
+        "\nACK utilization {:.1}%, effective {:.1} GFLOP/s",
+        sim.utilization() * 100.0,
+        sim.gflops(exe.ir.total_complexity()),
+    );
+}

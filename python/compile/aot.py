@@ -1,0 +1,165 @@
+"""AOT export: lower L2/L1 computations to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the rust ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Artifacts (written to ``artifacts/``):
+
+  gemm_{M}x{K}x{N}.hlo.txt          Linear tile (bias+act fused variants)
+  spdmm_e{E}_n{N}_f{F}.hlo.txt      Aggregate tile (sum; padded COO)
+  spdmm_max_e{E}_n{N}_f{F}.hlo.txt  Aggregate tile (max)
+  sddmm_e{E}_n{N}_f{F}.hlo.txt      Vector-Inner tile
+  vecadd_{M}x{F}.hlo.txt            Vector-Add tile
+  gcn2_n{N}_e{E}_f{F}_h{H}_c{C}.hlo.txt   whole 2-layer GCN forward
+  manifest.txt                      name -> arg shapes/dtypes (rust parses)
+
+Every lowered function returns a tuple (return_tuple=True) and the rust
+side unwraps with ``to_tuple1``.  Python runs ONCE at build time
+(``make artifacts``); the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import gemm_bias_act, spdmm, sddmm, vecadd
+
+# Functional-tile configuration: small enough that interpret-mode pallas
+# lowers quickly, shaped in p_sys multiples. The rust coordinator pads
+# every subshard/subfiber to these shapes (runtime/artifact registry).
+TILE_N = 128      # subshard height (functional-scale N1)
+TILE_F = 64       # subfiber width  (functional-scale N2)
+TILE_E = 1024     # padded edges per subshard
+
+# Whole-model demo graph (quickstart / e2e_inference example).
+GCN_N = 256
+GCN_E = 2048
+GCN_F = 64
+GCN_H = 32
+GCN_C = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_arg(spec):
+    d = {jnp.float32: "f32", jnp.int32: "i32"}[
+        jnp.float32 if spec.dtype == jnp.float32 else jnp.int32]
+    return f"{d}[{','.join(str(s) for s in spec.shape)}]"
+
+
+class Exporter:
+    def __init__(self, outdir):
+        self.outdir = outdir
+        self.manifest = []
+
+    def export(self, name, fn, specs):
+        lowered = jax.jit(lambda *a: (fn(*a),)).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest.append(
+            f"{name} {' '.join(_fmt_arg(s) for s in specs)}")
+        print(f"  {name}: {len(text)} chars")
+
+    def write_manifest(self):
+        path = os.path.join(self.outdir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("\n".join(self.manifest) + "\n")
+        print(f"  manifest: {len(self.manifest)} artifacts")
+
+
+def export_all(outdir):
+    os.makedirs(outdir, exist_ok=True)
+    ex = Exporter(outdir)
+    f32, i32 = jnp.float32, jnp.int32
+
+    # --- Linear / GEMM tiles (bias + fused activation variants) ---------
+    for act in ("none", "relu"):
+        suffix = "" if act == "none" else f"_{act}"
+        for (m, k, n) in ((TILE_N, TILE_F, TILE_F),):
+            ex.export(
+                f"gemm{suffix}_{m}x{k}x{n}",
+                functools.partial(gemm_bias_act, act=act),
+                [_spec((m, k)), _spec((k, n)), _spec((n,))],
+            )
+
+    # --- Aggregate / SpDMM tiles ----------------------------------------
+    for aggop in ("sum", "max"):
+        suffix = "" if aggop == "sum" else f"_{aggop}"
+        ex.export(
+            f"spdmm{suffix}_e{TILE_E}_n{TILE_N}_f{TILE_F}",
+            functools.partial(spdmm, n_out=TILE_N, aggop=aggop),
+            [
+                _spec((TILE_E,), i32), _spec((TILE_E,), i32),
+                _spec((TILE_E,), f32), _spec((1,), i32),
+                _spec((TILE_N, TILE_F)),
+            ],
+        )
+
+    # --- Vector-Inner / SDDMM tile ---------------------------------------
+    ex.export(
+        f"sddmm_e{TILE_E}_n{TILE_N}_f{TILE_F}",
+        sddmm,
+        [
+            _spec((TILE_E,), i32), _spec((TILE_E,), i32),
+            _spec((1,), i32),
+            _spec((TILE_N, TILE_F)), _spec((TILE_N, TILE_F)),
+        ],
+    )
+
+    # --- Vector-Add tile --------------------------------------------------
+    ex.export(
+        f"vecadd_{TILE_N}x{TILE_F}",
+        vecadd,
+        [_spec((TILE_N, TILE_F)), _spec((TILE_N, TILE_F))],
+    )
+
+    # --- Whole-model: 2-layer GCN (b1-shaped) for the e2e example --------
+    ex.export(
+        f"gcn2_n{GCN_N}_e{GCN_E}_f{GCN_F}_h{GCN_H}_c{GCN_C}",
+        model.gcn2_forward,
+        [
+            _spec((GCN_N, GCN_F)),
+            _spec((GCN_E,), i32), _spec((GCN_E,), i32),
+            _spec((GCN_E,), f32), _spec((1,), i32),
+            _spec((GCN_F, GCN_H)), _spec((GCN_H,)),
+            _spec((GCN_H, GCN_C)), _spec((GCN_C,)),
+        ],
+    )
+
+    ex.write_manifest()
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="output dir (default: ../artifacts, run from python/)")
+    args = p.parse_args()
+    outdir = args.out
+    # Back-compat: Makefile passes the path of one artifact file.
+    if outdir.endswith(".hlo.txt"):
+        outdir = os.path.dirname(outdir)
+    print(f"exporting HLO artifacts to {outdir}")
+    export_all(outdir)
+
+
+if __name__ == "__main__":
+    main()

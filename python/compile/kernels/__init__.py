@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels: the ACK's four execution modes.
+
+GraphAGILE's Adaptive Computation Kernel (ACK, paper Sec. 5.4) is a
+p_sys x p_sys ALU array that reconfigures among four datapaths:
+
+  * GEMM mode    -- 2-D systolic array, output-stationary dataflow
+  * SpDMM mode   -- edge-centric scatter-gather (Update/Reduce pipelines)
+  * SDDMM mode   -- edge-centric gathered inner products (adder trees)
+  * VecAdd mode  -- vector adders (residual connections)
+
+Each mode is expressed here as a Pallas kernel lowered with
+``interpret=True`` (CPU-PJRT executable HLO; see DESIGN.md
+"Hardware-Adaptation" for the FPGA->TPU mapping). The rust coordinator
+never imports this package: it loads the AOT HLO artifacts produced by
+``compile.aot``.
+"""
+
+from compile.kernels.gemm import gemm, gemm_bias_act
+from compile.kernels.spdmm import spdmm
+from compile.kernels.sddmm import sddmm
+from compile.kernels.vecadd import vecadd
+
+__all__ = ["gemm", "gemm_bias_act", "spdmm", "sddmm", "vecadd"]

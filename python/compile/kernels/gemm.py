@@ -1,0 +1,114 @@
+"""GEMM mode of the Adaptive Computation Kernel (paper Sec. 5.4, Alg. 1).
+
+In GEMM mode the ACK is a p_sys x p_sys output-stationary systolic array:
+each cycle it consumes p_sys elements of a feature-matrix column and p_sys
+elements of a weight-matrix row, accumulating H_out[i, j] in place.
+
+TPU adaptation: the systolic array maps onto the MXU; the Feature/Weight
+Buffers map onto VMEM blocks expressed through BlockSpec.  The grid walks
+output tiles (output-stationary), and the full K stripe of each operand is
+resident per instance — exactly the paper's BlockMM decomposition where a
+high-level GEMM instruction is expanded into a three-level nested loop of
+microcode (Alg. 1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's ACK dimension on Alveo U250 (p_sys = 16).  Block shapes are
+# multiples of P_SYS so the microcode loop bounds S_B/p_sys, G_B/p_sys are
+# integral, mirroring Alg. 1.
+P_SYS = 16
+
+
+def _gemm_kernel(h_ref, w_ref, o_ref):
+    """One output tile: H_T:i (bm x K) @ W_T:j (K x bn) -> H_out:ij."""
+    o_ref[...] = jnp.dot(
+        h_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _gemm_bias_act_kernel(h_ref, w_ref, b_ref, o_ref, *, act):
+    acc = jnp.dot(h_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+    acc = acc + b_ref[...]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "lrelu":
+        acc = jnp.where(acc > 0, acc, 0.01 * acc)
+    elif act == "prelu":
+        # PReLU with fixed slope 0.25 (slope folded at compile time).
+        acc = jnp.where(acc > 0, acc, 0.25 * acc)
+    elif act == "exp":
+        acc = jnp.exp(acc)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    o_ref[...] = acc
+
+
+def _check_tiles(m, k, n, bm, bn):
+    if m % bm or n % bn:
+        raise ValueError(f"GEMM tile mismatch: ({m},{k},{n}) vs bm={bm} bn={bn}")
+    # Hardware pads sub-p_sys dimensions to the array width; here a block
+    # smaller than p_sys is only legal when it covers the full dimension
+    # (the compiler's codegen guarantees p_sys-multiple tiles otherwise).
+    if (bm % P_SYS and bm != m) or (bn % P_SYS and bn != n):
+        raise ValueError(f"block ({bm},{bn}) not a multiple of p_sys={P_SYS}")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(h, w, *, bm=64, bn=64):
+    """H @ W with an output-stationary Pallas kernel.
+
+    h: (M, K) feature block  (Feature Buffer resident)
+    w: (K, N) weight block   (Weight Buffer resident)
+    """
+    m, k = h.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    _check_tiles(m, k, n, bm, bn)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), h.dtype),
+        interpret=True,
+    )(h, w)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn"))
+def gemm_bias_act(h, w, b, *, act="none", bm=64, bn=64):
+    """Fused H @ W + b with optional activation.
+
+    This is the Linear layer after the compiler's Activation/BatchNorm
+    fusion pass (paper Sec. 6.4): the bias carries the folded BatchNorm
+    shift and the activation is executed in the same kernel, so no
+    intermediate H_out round-trips through off-chip memory.
+    """
+    m, k = h.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    _check_tiles(m, k, n, bm, bn)
+    return pl.pallas_call(
+        functools.partial(_gemm_bias_act_kernel, act=act),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), h.dtype),
+        interpret=True,
+    )(h, w, b)

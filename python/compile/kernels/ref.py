@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in compile.kernels must match its oracle here to float
+tolerance; pytest + hypothesis sweep shapes/dtypes (python/tests).
+No pallas imports — these are the ground truth.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(h, w):
+    return jnp.dot(h, w, preferred_element_type=h.dtype)
+
+
+def gemm_bias_act_ref(h, w, b, act="none"):
+    acc = jnp.dot(h, w, preferred_element_type=h.dtype) + b
+    return apply_act_ref(acc, act)
+
+
+def apply_act_ref(x, act):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "lrelu":
+        return jnp.where(x > 0, x, 0.01 * x)
+    if act == "prelu":
+        return jnp.where(x > 0, x, 0.25 * x)
+    if act == "exp":
+        return jnp.exp(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def spdmm_ref(src, dst, w, n_valid, h, n_out, aggop="sum"):
+    """Dense oracle: materialize A (n_out x n_in) and reduce row-wise."""
+    e_pad = src.shape[0]
+    valid = jnp.arange(e_pad) < n_valid[0]
+    msgs = h[src] * w[:, None]  # (E_pad, F) update phase
+    if aggop in ("sum", "mean"):
+        out = jnp.zeros((n_out, h.shape[1]), h.dtype)
+        out = out.at[dst].add(jnp.where(valid[:, None], msgs, 0.0))
+        return out
+    if aggop == "max":
+        out = jnp.full((n_out, h.shape[1]), -jnp.inf, h.dtype)
+        out = out.at[dst].max(jnp.where(valid[:, None], msgs, -jnp.inf))
+        return jnp.where(jnp.isneginf(out), 0.0, out)
+    if aggop == "min":
+        out = jnp.full((n_out, h.shape[1]), jnp.inf, h.dtype)
+        out = out.at[dst].min(jnp.where(valid[:, None], msgs, jnp.inf))
+        return jnp.where(jnp.isposinf(out), 0.0, out)
+    raise ValueError(f"unknown aggop {aggop!r}")
+
+
+def sddmm_ref(src, dst, n_valid, h_left, h_right):
+    e_pad = src.shape[0]
+    valid = jnp.arange(e_pad) < n_valid[0]
+    vals = jnp.sum(h_left[src] * h_right[dst], axis=-1)
+    return jnp.where(valid, vals, 0.0)
+
+
+def vecadd_ref(a, b, act="none"):
+    return apply_act_ref(a + b, act)
+
+
+def segment_softmax_ref(scores, dst, n):
+    """Edge-score softmax grouped by destination vertex (GAT, Eq. 4)."""
+    mx = jnp.full((n,), -jnp.inf, scores.dtype).at[dst].max(scores)
+    ex = jnp.exp(scores - mx[dst])
+    den = jnp.zeros((n,), scores.dtype).at[dst].add(ex)
+    return ex / jnp.maximum(den[dst], 1e-16)

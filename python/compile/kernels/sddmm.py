@@ -1,0 +1,64 @@
+"""SDDMM mode of the Adaptive Computation Kernel (paper Sec. 5.4, Alg. 3).
+
+Sampled dense-dense matrix multiplication A ⊙ (H Hᵀ): for every non-zero
+A[i, j] (an edge), compute the inner product <h_i, h_j>.  In hardware the
+ALUs of a UR pipeline re-form into a multiply-adder tree; p_sys/2 edges
+are processed per cycle, each inner product of length |h| taking
+ceil(|h| / p_sys) cycles at the tree root accumulator.
+
+TPU adaptation: gathered row pairs + dot product inside the kernel;
+edge parallelism is the simulator's concern (sim/ack.rs::sddmm_cycles).
+
+Supports distinct left/right feature tiles (H_in(i,k), H_in(j,k) in the
+paper's Alg. 7 partition-centric scheme) so a subshard that straddles two
+row partitions can still be processed from on-chip tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sddmm_kernel(src_ref, dst_ref, nv_ref, hl_ref, hr_ref, o_ref):
+    e_pad = src_ref.shape[0]
+    f = hl_ref.shape[1]
+    n_valid = nv_ref[0]
+
+    def body(e, _):
+        valid = e < n_valid
+        s = src_ref[e]
+        d = dst_ref[e]
+        hs = pl.load(hl_ref, (pl.dslice(s, 1), pl.dslice(0, f)))
+        hd = pl.load(hr_ref, (pl.dslice(d, 1), pl.dslice(0, f)))
+        # Multiply-adder tree: elementwise product reduced at the root.
+        val = jnp.sum(hs * hd)
+        pl.store(
+            o_ref,
+            (pl.dslice(e, 1),),
+            jnp.where(valid, val, 0.0)[None],
+        )
+        return _
+
+    jax.lax.fori_loop(0, e_pad, body, 0)
+
+
+@jax.jit
+def sddmm(src, dst, n_valid, h_left, h_right):
+    """Edge weights w_e = <h_left[src_e], h_right[dst_e]>.
+
+    src, dst: (E_pad,) int32 row indices into h_left / h_right
+    n_valid:  (1,) int32 real edge count (padded tail produces 0)
+    h_left:   (N_l, F) source-side feature tile
+    h_right:  (N_r, F) destination-side feature tile
+    """
+    e_pad = src.shape[0]
+    assert dst.shape == (e_pad,)
+    assert n_valid.shape == (1,)
+    assert h_left.shape[1] == h_right.shape[1]
+    return pl.pallas_call(
+        _sddmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((e_pad,), h_left.dtype),
+        interpret=True,
+    )(src, dst, n_valid, h_left, h_right)

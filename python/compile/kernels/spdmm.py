@@ -1,0 +1,93 @@
+"""SpDMM mode of the Adaptive Computation Kernel (paper Sec. 5.4, Alg. 2/4).
+
+Edge-centric scatter-gather: each cycle p_sys/2 unprocessed COO edges are
+fetched from the Edge Buffer, routed through the Index Shuffle Network to
+the Feature Buffer bank holding h_src, and the (src.features, e) pairs are
+routed through the Data Shuffle Network to an Update/Reduce pipeline that
+applies  v_dst <- Reduce(v_dst, e.weight * h_src).
+
+TPU adaptation: the banked Feature Buffer becomes a VMEM-resident feature
+tile; the ISN/DSN routing becomes dynamic gather/scatter (pl.load/pl.store
+with computed row indices) over that tile; the edge-parallel UR pipelines
+become a sequential fori_loop here (interpret=True executes plain HLO) —
+the *parallel* cycle model lives in the rust simulator (sim/ack.rs).
+
+Edges are padded to a static count; ``n_valid`` masks the tail so one AOT
+artifact serves any tile occupancy (the compiler's subshards have varying
+edge counts).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = float("-inf")
+_POS_INF = float("inf")
+
+
+def _spdmm_kernel(src_ref, dst_ref, w_ref, nv_ref, h_ref, o_ref, *, aggop):
+    e_pad = src_ref.shape[0]
+    f = h_ref.shape[1]
+    n_valid = nv_ref[0]
+
+    if aggop in ("sum", "mean"):
+        init = jnp.zeros((o_ref.shape[0], f), dtype=o_ref.dtype)
+    elif aggop == "max":
+        init = jnp.full((o_ref.shape[0], f), _NEG_INF, dtype=o_ref.dtype)
+    elif aggop == "min":
+        init = jnp.full((o_ref.shape[0], f), _POS_INF, dtype=o_ref.dtype)
+    else:
+        raise ValueError(f"unknown aggop {aggop!r}")
+    o_ref[...] = init
+
+    def body(e, _):
+        valid = e < n_valid
+        s = src_ref[e]
+        d = jnp.where(valid, dst_ref[e], 0)
+        wt = w_ref[e]
+        # Scatter phase: ISN routes the edge to the bank holding h_src.
+        feats = pl.load(h_ref, (pl.dslice(s, 1), pl.dslice(0, f)))
+        # Update unit: vector multiply by the edge weight.
+        upd = feats * wt
+        # Gather phase / Reduce unit: apply to v_dst (RAW-hazard-free here
+        # because the loop is sequential; the hardware RAW Unit is modeled
+        # in sim/raw.rs).
+        cur = pl.load(o_ref, (pl.dslice(d, 1), pl.dslice(0, f)))
+        if aggop in ("sum", "mean"):
+            new = cur + jnp.where(valid, upd, 0.0)
+        elif aggop == "max":
+            new = jnp.where(valid, jnp.maximum(cur, upd), cur)
+        else:  # min
+            new = jnp.where(valid, jnp.minimum(cur, upd), cur)
+        pl.store(o_ref, (pl.dslice(d, 1), pl.dslice(0, f)), new)
+        return _
+
+    jax.lax.fori_loop(0, e_pad, body, 0)
+
+    if aggop == "max":
+        o_ref[...] = jnp.where(o_ref[...] == _NEG_INF, 0.0, o_ref[...])
+    elif aggop == "min":
+        o_ref[...] = jnp.where(o_ref[...] == _POS_INF, 0.0, o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "aggop"))
+def spdmm(src, dst, w, n_valid, h, *, n_out, aggop="sum"):
+    """A_B (COO, padded) times H_B with element-wise aggregation.
+
+    src, dst: (E_pad,) int32 vertex indices, rows of A_B / rows of H_B
+    w:        (E_pad,) edge weights (mean aggregation pre-normalizes w
+              on the compiler side, matching the paper's alpha_ji)
+    n_valid:  (1,) int32 count of real edges (rest is padding)
+    h:        (N_in, F) feature tile
+    n_out:    static number of output rows (subshard height N1)
+    """
+    e_pad = src.shape[0]
+    assert dst.shape == (e_pad,) and w.shape == (e_pad,)
+    assert n_valid.shape == (1,)
+    return pl.pallas_call(
+        functools.partial(_spdmm_kernel, aggop=aggop),
+        out_shape=jax.ShapeDtypeStruct((n_out, h.shape[1]), h.dtype),
+        interpret=True,
+    )(src, dst, w, n_valid, h)

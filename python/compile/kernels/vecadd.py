@@ -1,0 +1,43 @@
+"""Vector-Addition mode of the ACK (paper Sec. 5.4).
+
+An Update Unit works as a vector adder: h_u + h_v, with the Reduce Unit
+bypassed.  Used for residual connections (the Vector-Add IR layer).  The
+kernel is a tiled elementwise add; p_sys/2 vector adds per cycle is the
+simulator's timing model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref, *, act):
+    acc = a_ref[...] + b_ref[...]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm"))
+def vecadd(a, b, *, act="none", bm=64):
+    """a + b over equally partitioned feature tiles (+ fused activation)."""
+    assert a.shape == b.shape, f"{a.shape} != {b.shape}"
+    m, f = a.shape
+    bm = min(bm, m)
+    if m % bm:
+        raise ValueError(f"rows {m} not divisible by block {bm}")
+    return pl.pallas_call(
+        functools.partial(_vecadd_kernel, act=act),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, f), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,189 @@
+"""Layer-2 JAX model: GNN layer math built on the L1 Pallas kernels.
+
+This mirrors the paper's computation-layer IR (Sec. 6.1): a GNN layer is a
+DAG of {Aggregate, Linear, Vector-Inner, Vector-Add, Activation, BatchNorm}
+computation layers, each of which lowers onto one ACK execution mode.
+The rust compiler (rust/src/ir, rust/src/compiler) manipulates the same
+six-layer vocabulary; this module is the *numeric* definition used to
+produce golden outputs and the AOT artifacts.
+
+Graphs are COO edge lists padded to a static length (n_valid masks the
+tail), because AOT artifacts must have fixed shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gemm, gemm_bias_act, spdmm, sddmm, vecadd
+from compile.kernels.ref import segment_softmax_ref
+
+
+# ---------------------------------------------------------------------------
+# Computation layers (one per IR layer type)
+# ---------------------------------------------------------------------------
+
+def aggregate(src, dst, w, n_valid, h, *, aggop="sum"):
+    """Aggregate layer == SpDMM mode (paper Eq. 5)."""
+    return spdmm(src, dst, w, n_valid, h, n_out=h.shape[0], aggop=aggop)
+
+
+def linear(h, w, b=None, *, act="none"):
+    """Linear layer == GEMM mode (paper Eq. 6), with fused bias/activation
+    (the compiler's Activation/BatchNorm fusion, Sec. 6.4)."""
+    if b is None:
+        b = jnp.zeros((w.shape[1],), h.dtype)
+    return gemm_bias_act(h, w, b, act=act)
+
+
+def vector_inner(src, dst, n_valid, h):
+    """Vector-Inner layer == SDDMM mode (paper Eq. 7)."""
+    return sddmm(src, dst, n_valid, h, h)
+
+
+def vector_add(a, b, *, act="none"):
+    """Vector-Add layer == VecAdd mode (residual connections)."""
+    return vecadd(a, b, act=act)
+
+
+def batchnorm_fold(w, b, mu, sigma2, gamma, beta, eps=1e-5):
+    """Fold inference-time BatchNorm into the adjacent Linear layer
+    (paper Sec. 6.4, BatchNorm Fusion): y = (xW + b - mu)/sqrt(s2+eps)*g + B
+    becomes y = x W' + b' with W' = W*g/sqrt(s2+eps)."""
+    scale = gamma / jnp.sqrt(sigma2 + eps)
+    return w * scale[None, :], (b - mu) * scale + beta
+
+
+# ---------------------------------------------------------------------------
+# GNN layers (paper Table 5 model zoo building blocks)
+# ---------------------------------------------------------------------------
+
+def gcn_layer(h, src, dst, ew, n_valid, w, b, *, act="relu",
+              order="auto"):
+    """GCN layer (Eq. 3): h_i = act( sum_j alpha_ji h_j W ).
+
+    ``ew`` carries the symmetric-normalized alpha_ji = 1/sqrt(D_j D_i)
+    (precomputed by the graph loader — a linear Sum aggregation).
+    ``order`` mirrors the compiler's computation-order optimization
+    (Theorems 1-2): 'AL' aggregate-then-linear, 'LA' linear-then-aggregate,
+    'auto' picks by f_in vs f_out.
+    """
+    f_in, f_out = w.shape
+    if order == "auto":
+        order = "LA" if f_in > f_out else "AL"
+    if order == "LA":
+        z = linear(h, w, b)
+        z = aggregate(src, dst, ew, n_valid, z, aggop="sum")
+        return _act(z, act)
+    z = aggregate(src, dst, ew, n_valid, h, aggop="sum")
+    return linear(z, w, b, act=act)
+
+
+def sage_layer(h, src, dst, ew_mean, n_valid, w_self, w_neigh, b,
+               *, act="relu"):
+    """GraphSAGE (mean) layer: h_i = act(h_i W_self + mean_j(h_j) W_neigh).
+
+    ``ew_mean`` is 1/deg(dst) per edge, so Sum aggregation realizes Mean —
+    keeping the aggregation operator linear (order-exchange legal).
+    """
+    z_self = linear(h, w_self)
+    z_neigh = aggregate(src, dst, ew_mean, n_valid, h, aggop="sum")
+    z_neigh = linear(z_neigh, w_neigh, b)
+    return _act(vector_add(z_self, z_neigh), act)
+
+
+def gin_layer(h, src, dst, ones, n_valid, eps, w1, b1, w2, b2,
+              *, act="relu"):
+    """GIN layer: h_i = MLP((1 + eps) h_i + sum_j h_j); 2-layer MLP."""
+    z = aggregate(src, dst, ones, n_valid, h, aggop="sum")
+    z = vector_add(z, (1.0 + eps) * h)
+    z = linear(z, w1, b1, act=act)
+    return linear(z, w2, b2, act=act)
+
+
+def gat_layer(h, src, dst, n_valid, w_att, a_src, a_dst, *, act="elu",
+              lrelu_slope=0.2):
+    """GAT layer (Eq. 4), single head.
+
+    The attention logit a·[Wh_i || Wh_j] splits into a_src·Wh_i + a_dst·Wh_j;
+    the per-edge term is a Vector-Inner (SDDMM) computation, the softmax is
+    an edge-wise Activation + Aggregate normalization, and the final
+    weighted aggregation is SpDMM with the attention weights.
+    """
+    n = h.shape[0]
+    e_pad = src.shape[0]
+    z = linear(h, w_att)                            # GEMM
+    # SDDMM-style edge scores via rank-1 left/right projections:
+    # s_e = <z_src, a_src> + <z_dst, a_dst>
+    alpha_l = z @ a_src                              # (N,)
+    alpha_r = z @ a_dst
+    logits = alpha_l[src] + alpha_r[dst]
+    logits = jnp.where(logits > 0, logits, lrelu_slope * logits)
+    valid = jnp.arange(e_pad) < n_valid[0]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    att = segment_softmax_ref(logits, dst, n)       # edge-wise softmax
+    att = jnp.where(valid, att, 0.0)
+    out = aggregate(src, dst, att, n_valid, z)      # SpDMM with att weights
+    return _act(out, act)
+
+
+def sgc_model(h, src, dst, ew, n_valid, w, b, *, k=2):
+    """SGC (paper b7): h = A^k X W — k Aggregates then one Linear.
+
+    The compiler's order optimization is what makes SGC fast when
+    f_in >> n_classes: it hoists the Linear before the Aggregates
+    (Fig. 14's 260% win on b7); numerically both orders agree, which the
+    tests assert.
+    """
+    z = h
+    for _ in range(k):
+        z = aggregate(src, dst, ew, n_valid, z, aggop="sum")
+    return linear(z, w, b)
+
+
+def sgc_model_opt(h, src, dst, ew, n_valid, w, b, *, k=2):
+    """SGC with the Linear hoisted first (compiler-exchanged order)."""
+    z = linear(h, w, b)
+    for _ in range(k):
+        z = aggregate(src, dst, ew, n_valid, z, aggop="sum")
+    return z
+
+
+def _act(x, act):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "elu":
+        return jnp.where(x > 0, x, jnp.expm1(x))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+# ---------------------------------------------------------------------------
+# Whole models (AOT export targets; fixed shapes)
+# ---------------------------------------------------------------------------
+
+def gcn2_forward(x, src, dst, ew, n_valid, w1, b1, w2, b2):
+    """2-layer GCN (paper model b1/b2) over a padded-COO graph.
+
+    Layer 1 uses the compiler-optimized LA order (f_in > hidden);
+    layer 2 uses AL order (hidden < classes would flip it, but we follow
+    the per-layer auto rule exactly as the rust compiler does).
+    """
+    h = gcn_layer(x, src, dst, ew, n_valid, w1, b1, act="relu", order="auto")
+    return gcn_layer(h, src, dst, ew, n_valid, w2, b2, act="none",
+                     order="auto")
+
+
+def sage2_forward(x, src, dst, ew_mean, n_valid,
+                  ws1, wn1, b1, ws2, wn2, b2):
+    """2-layer GraphSAGE-mean (paper b3/b4)."""
+    h = sage_layer(x, src, dst, ew_mean, n_valid, ws1, wn1, b1)
+    return sage_layer(h, src, dst, ew_mean, n_valid, ws2, wn2, b2,
+                      act="none")
+
+
+def gat1_forward(x, src, dst, n_valid, w_att, a_src, a_dst):
+    """Single GAT layer (paper b6 building block)."""
+    return gat_layer(x, src, dst, n_valid, w_att, a_src, a_dst)

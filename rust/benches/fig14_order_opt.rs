@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 14: LoH speedup from the computation-order
+//! optimization, averaged over datasets, per model b1-b8.
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("fig14_order_opt", |ctx, datasets| tables::fig14(ctx, datasets));
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Fig. 15: LoH speedup from layer fusion.
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("fig15_fusion", |ctx, datasets| tables::fig15(ctx, datasets));
+}

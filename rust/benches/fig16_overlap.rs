@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 16: LoH speedup from overlapping computation
+//! with data communication (double/triple buffering).
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("fig16_overlap", |ctx, datasets| tables::fig16(ctx, datasets));
+}

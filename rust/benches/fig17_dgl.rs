@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 17: end-to-end latency vs DGL-CPU / DGL-GPU
+//! (b1-b7).
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("fig17_dgl", |ctx, datasets| tables::fig17(ctx, datasets));
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 18: end-to-end latency vs PyG-CPU / PyG-GPU
+//! (b1-b8), including the paper's OOM cells.
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("fig18_pyg", |ctx, datasets| tables::fig18(ctx, datasets));
+}

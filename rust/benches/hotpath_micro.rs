@@ -1,0 +1,85 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf targets in
+//! EXPERIMENTS.md): R-MAT edge generation, Fiber-Shard histogramming,
+//! kernel mapping, binary encode, and whole-program simulation rates.
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::{dataset, RmatParams, TileCounts};
+use graphagile::ir::ZooModel;
+use graphagile::sim::simulate;
+use graphagile::util::Rng;
+use std::time::Instant;
+
+fn rate(name: &str, items: f64, unit: &str, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:34} {secs:9.3} s   {:10.2} M{unit}/s", items / secs / 1e6);
+}
+
+fn main() {
+    println!("# hotpath_micro\n");
+    let d = dataset("FL").unwrap();
+    let n1 = 16384u64;
+
+    // 1. Synthetic edge generation (workload setup, not T_LoC).
+    let m = 5_000_000usize;
+    let mut rng = Rng::new(1);
+    let mut edges = (Vec::new(), Vec::new());
+    rate("rmat_generate (5M edges)", m as f64, "edge", || {
+        edges = RmatParams::default().sample_edges(&mut rng, d.n_vertices, m);
+    });
+
+    // 2. Fiber-Shard histogram (the dominant T_LoC term).
+    let (src, dst) = &edges;
+    let mut tc = None;
+    rate("tile_histogram (5M edges)", m as f64, "edge", || {
+        tc = Some(TileCounts::from_edges(src, dst, d.n_vertices, n1));
+    });
+
+    // 3. Kernel mapping + codegen (b5 = deepest model).
+    let hw = HwConfig::alveo_u250();
+    let tiles = d.tile_counts(n1);
+    let ir = ZooModel::B5.build(d.meta());
+    let mut exe = None;
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        exe = Some(compile(&ir, &tiles, &hw, CompileOptions::default()));
+    }
+    let secs = t0.elapsed().as_secs_f64() / 10.0;
+    let exe = exe.unwrap();
+    let n_instr = exe.program.total_instrs();
+    println!(
+        "{:34} {secs:9.5} s   {:10.2} Minstr/s  ({n_instr} instrs)",
+        "compile b5/FL (avg of 10)",
+        n_instr as f64 / secs / 1e6
+    );
+
+    // 4. Binary encode/decode round trip.
+    let t0 = Instant::now();
+    let bytes = exe.program.to_bytes();
+    let enc = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let back = graphagile::isa::Program::from_bytes(&bytes).unwrap();
+    let dec = t0.elapsed().as_secs_f64();
+    assert_eq!(back.total_instrs(), n_instr);
+    println!(
+        "{:34} enc {enc:.5} s / dec {dec:.5} s ({:.1} MB)",
+        "binary roundtrip b5/FL",
+        bytes.len() as f64 / 1e6
+    );
+
+    // 5. Simulation rate.
+    let t0 = Instant::now();
+    let runs = 10;
+    let mut cycles = 0;
+    for _ in 0..runs {
+        cycles = simulate(&exe.program, &hw).cycles;
+    }
+    let secs = t0.elapsed().as_secs_f64() / runs as f64;
+    println!(
+        "{:34} {secs:9.5} s   {:10.2} Minstr/s  ({cycles} cycles simulated)",
+        "simulate b5/FL (avg of 10)",
+        n_instr as f64 / secs / 1e6
+    );
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table 10: hardware-execution latency vs BoostGCN /
+//! HyGCN / AWB-GCN on b2 (FL, RE, YE, AP).
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("table10_accels", |ctx, _| tables::table10(ctx));
+}

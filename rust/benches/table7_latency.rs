@@ -1,0 +1,28 @@
+//! Regenerates paper Table 7: T_E2E / T_LoC / T_LoH for b1-b8 x the
+//! seven benchmark graphs.
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+use graphagile::ir::ALL_MODELS;
+
+fn main() {
+    run_bench("table7_latency", |ctx, datasets| {
+        let rows = tables::table7_rows(ctx, &ALL_MODELS, datasets);
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.model.into(),
+                    r.dataset.into(),
+                    format!("{:.3}", r.t_e2e * 1e3),
+                    format!("{:.3}", r.t_loc * 1e3),
+                    format!("{:.3}", r.t_comm * 1e3),
+                    format!("{:.3}", r.t_loh * 1e3),
+                ]
+            })
+            .collect();
+        graphagile::harness::markdown(
+            &["Model", "Dataset", "T_E2E (ms)", "T_LoC (ms)", "T_comm (ms)", "T_LoH (ms)"],
+            &cells,
+        )
+    });
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Table 8: compiled binary sizes (MB) + input sizes.
+use graphagile::harness::bench_support::run_bench;
+use graphagile::harness::tables;
+
+fn main() {
+    run_bench("table8_binary", |ctx, _| tables::table8(ctx));
+}

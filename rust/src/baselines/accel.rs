@@ -1,0 +1,124 @@
+//! Analytic LoH models of the accelerator baselines in Table 10:
+//! HyGCN (ASIC), AWB-GCN (Stratix 10 SX), BoostGCN (Stratix 10 GX),
+//! evaluated at the paper's matched workload (model b2 = 2-layer GCN,
+//! hidden 128). Each model uses the platform constants of Tables 3/6
+//! plus the architecture characteristics the respective papers report.
+
+use crate::config::{Platform, ACCEL_AWB_GCN, ACCEL_BOOSTGCN, ACCEL_HYGCN};
+use crate::ir::{LayerType, ModelIr};
+
+/// Per-layer flop/traffic demand of a GCN executed *without* GraphAGILE's
+/// compiler optimizations (the baselines schedule layers as written, but
+/// each applies its own dataflow).
+struct Demand {
+    agg_flops: f64,
+    comb_flops: f64,
+    edge_bytes: f64,
+    feat_bytes: f64,
+}
+
+fn demand(ir: &ModelIr) -> Demand {
+    let mut d = Demand { agg_flops: 0.0, comb_flops: 0.0, edge_bytes: 0.0, feat_bytes: 0.0 };
+    for l in &ir.layers {
+        match l.ltype {
+            LayerType::Aggregate | LayerType::VectorInner => {
+                d.agg_flops += l.complexity() as f64;
+                d.edge_bytes += (l.ne * 12) as f64;
+                d.feat_bytes += 2.0 * (l.nv * l.f_in * 4) as f64;
+            }
+            LayerType::Linear => {
+                d.comb_flops += l.complexity() as f64;
+                d.feat_bytes += ((l.f_in + l.f_out) * l.nv * 4) as f64;
+            }
+            _ => {
+                d.comb_flops += l.complexity() as f64;
+                d.feat_bytes += 2.0 * (l.nv * l.f_in * 4) as f64;
+            }
+        }
+    }
+    d
+}
+
+fn pipeline_time(plat: &Platform, d: &Demand, split: f64, imbalance: f64,
+                 agg_eff: f64, comb_eff: f64, reuse: f64) -> f64 {
+    // Hybrid architectures dedicate `split` of peak to aggregation and
+    // the rest to combination; the stages pipeline but load imbalance
+    // leaves bubbles (the inefficiency GraphAGILE's unified ACK removes).
+    let t_agg = d.agg_flops / (plat.peak_flops * split * agg_eff);
+    let t_comb = d.comb_flops / (plat.peak_flops * (1.0 - split) * comb_eff);
+    let t_mem = (d.edge_bytes + d.feat_bytes * reuse) / plat.mem_bw;
+    t_agg.max(t_comb).max(t_mem) * imbalance
+}
+
+/// HyGCN: hybrid aggregation (SIMD) + combination (systolic) engines with
+/// inter-engine coordination; window-sparsity elimination reduces edge
+/// traffic but the hybrid pipeline suffers imbalance (paper Sec. 8.4).
+pub fn hygcn_loh(ir: &ModelIr) -> f64 {
+    let d = demand(ir);
+    pipeline_time(&ACCEL_HYGCN, &d, 0.4, 1.9, 0.5, 0.75, 1.0)
+}
+
+/// AWB-GCN: unified SpMM engine with runtime workload rebalancing and
+/// feature-sparsity exploitation (effective flops scaled by the nonzero
+/// density of intermediate features, ~0.45 on the benchmark graphs).
+pub fn awb_gcn_loh(ir: &ModelIr) -> f64 {
+    let d = demand(ir);
+    let density = 0.45;
+    let flops = (d.agg_flops + d.comb_flops) * density;
+    let t_compute = flops / (ACCEL_AWB_GCN.peak_flops * 0.72);
+    let t_mem = (d.edge_bytes * density + d.feat_bytes) / ACCEL_AWB_GCN.mem_bw;
+    t_compute.max(t_mem) * 1.08
+}
+
+/// BoostGCN: partition-centric feature-update + aggregation pipelines;
+/// no overlay ISA (per-design bitstream) but the same Stratix-class
+/// bandwidth; hybrid imbalance is milder than HyGCN's.
+pub fn boostgcn_loh(ir: &ModelIr) -> f64 {
+    let d = demand(ir);
+    pipeline_time(&ACCEL_BOOSTGCN, &d, 0.5, 1.45, 0.5, 0.8, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+
+    fn b2(key: &str) -> ModelIr {
+        ZooModel::B2.build(dataset(key).unwrap().meta())
+    }
+
+    #[test]
+    fn hygcn_reddit_order_of_paper() {
+        // Paper Table 10: HyGCN on RE = 289 ms. Same order of magnitude.
+        let ms = hygcn_loh(&b2("RE")) * 1e3;
+        assert!((80.0..900.0).contains(&ms), "HyGCN RE {ms} ms");
+    }
+
+    #[test]
+    fn awb_gcn_fastest_on_reddit() {
+        // Paper: AWB-GCN (49.7 ms) beats everyone on RE thanks to 2.2x
+        // peak and sparsity exploitation.
+        let awb = awb_gcn_loh(&b2("RE"));
+        let boost = boostgcn_loh(&b2("RE"));
+        let hygcn = hygcn_loh(&b2("RE"));
+        assert!(awb < boost && awb < hygcn, "awb {awb} boost {boost} hygcn {hygcn}");
+        let ms = awb * 1e3;
+        assert!((15.0..200.0).contains(&ms), "AWB RE {ms} ms");
+    }
+
+    #[test]
+    fn boostgcn_flickr_order_of_paper() {
+        // Paper Table 10: BoostGCN on FL = 20.1 ms.
+        let ms = boostgcn_loh(&b2("FL")) * 1e3;
+        assert!((5.0..80.0).contains(&ms), "BoostGCN FL {ms} ms");
+    }
+
+    #[test]
+    fn all_models_scale_with_graph() {
+        for f in [hygcn_loh, awb_gcn_loh, boostgcn_loh] {
+            assert!(f(&b2("FL")) < f(&b2("RE")));
+            assert!(f(&b2("YE")) < f(&b2("AP")));
+        }
+    }
+}

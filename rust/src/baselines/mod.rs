@@ -1,0 +1,19 @@
+//! Analytic models of the systems GraphAGILE is compared against in the
+//! paper's evaluation (Sec. 8.3–8.4): PyG / DGL on the CPU-only and
+//! CPU-GPU platforms of Table 6, and the HyGCN / AWB-GCN / BoostGCN
+//! accelerators of Table 3.
+//!
+//! These are roofline-style models parameterized by each platform's
+//! published constants (peak flops, memory bandwidth, on-chip memory)
+//! plus a small number of architecture factors (framework overhead,
+//! message materialization, hybrid-pipeline imbalance, sparsity
+//! exploitation) taken from the respective papers. The goal — per
+//! DESIGN.md "Substitutions" — is to reproduce the *shape* of Figs.
+//! 17–18 and Table 10 (who wins, by roughly what factor), not absolute
+//! milliseconds measured on hardware we do not have.
+
+pub mod accel;
+pub mod roofline;
+
+pub use accel::{awb_gcn_loh, boostgcn_loh, hygcn_loh};
+pub use roofline::{framework_e2e, Framework, FrameworkResult, Processor};

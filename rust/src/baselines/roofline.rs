@@ -1,0 +1,305 @@
+//! Roofline models of PyG and DGL on the CPU-only and CPU-GPU platforms
+//! (paper Table 6, Figs. 17–18).
+//!
+//! Per computation layer, time = max(compute roofline, memory roofline)
+//! plus a per-kernel framework overhead; the frameworks execute the IR
+//! *as written* (no computation-order optimization, no fusion — the
+//! paper's Sec. 8.3 notes these could apply to CPU/GPU but are not in
+//! the released frameworks' inference paths).
+//!
+//! The architecture factors below are the published/first-order
+//! characteristics of each framework:
+//! * **PyG** materializes per-edge messages (gather -> message tensor ->
+//!   scatter): sparse traffic ~ 3 |E| f words and a matching memory
+//!   footprint (the source of its OOMs on RE/YE/AP, Fig. 18);
+//! * **DGL** uses fused SpMM (no message tensor): traffic ~ |E| edges +
+//!   2 |V| f words;
+//! * CPUs sustain a fraction of peak on irregular kernels (cache-miss
+//!   bound); GPUs add a fixed launch latency per kernel.
+
+use crate::config::{Platform, CPU_RYZEN_3990X, GPU_RTX3090};
+use crate::ir::{LayerType, ModelIr};
+
+/// Which framework.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framework {
+    PyG,
+    Dgl,
+}
+
+/// Which processor of the baseline platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Processor {
+    Cpu,
+    Gpu,
+}
+
+/// Model outcome: either a latency or an out-of-memory failure.
+#[derive(Clone, Copy, Debug)]
+pub enum FrameworkResult {
+    Seconds(f64),
+    Oom,
+}
+
+impl FrameworkResult {
+    pub fn seconds(&self) -> Option<f64> {
+        match self {
+            FrameworkResult::Seconds(s) => Some(*s),
+            FrameworkResult::Oom => None,
+        }
+    }
+}
+
+struct Factors {
+    /// Sustained fraction of peak flops on dense kernels.
+    eff_dense: f64,
+    /// Sustained fraction of peak flops on sparse kernels.
+    eff_sparse: f64,
+    /// Fixed overhead per launched kernel (s).
+    kernel_overhead: f64,
+    /// One-time runtime startup / dispatch overhead (s).
+    startup: f64,
+    /// Per-edge graph construction / format conversion overhead (s) —
+    /// the framework's preprocessing the paper includes in E2E.
+    prep_per_edge: f64,
+    /// Host->device transfer bandwidth counted in E2E (0 = none).
+    h2d_bw: f64,
+    /// Effective memory bandwidth fraction on irregular access
+    /// (cache-line-granular gathers of 4-byte features).
+    bw_irregular: f64,
+    /// Device memory capacity for the OOM rule (bytes).
+    mem_capacity: f64,
+}
+
+fn factors(fw: Framework, proc: Processor) -> (Platform, Factors) {
+    match (proc, fw) {
+        (Processor::Cpu, Framework::PyG) => (
+            CPU_RYZEN_3990X,
+            Factors {
+                eff_dense: 0.35,
+                eff_sparse: 0.004,
+                kernel_overhead: 30e-6,
+                startup: 0.3e-3,
+                prep_per_edge: 20e-9,
+                h2d_bw: 0.0,
+                bw_irregular: 0.12,
+                mem_capacity: 256e9,
+            },
+        ),
+        (Processor::Cpu, Framework::Dgl) => (
+            CPU_RYZEN_3990X,
+            Factors {
+                eff_dense: 0.35,
+                eff_sparse: 0.006,
+                kernel_overhead: 30e-6,
+                startup: 0.3e-3,
+                prep_per_edge: 15e-9,
+                h2d_bw: 0.0,
+                bw_irregular: 0.15,
+                mem_capacity: 256e9,
+            },
+        ),
+        (Processor::Gpu, Framework::PyG) => (
+            GPU_RTX3090,
+            Factors {
+                eff_dense: 0.45,
+                eff_sparse: 0.03,
+                kernel_overhead: 20e-6,
+                startup: 2.0e-3,
+                prep_per_edge: 10e-9,
+                h2d_bw: 16e9,
+                bw_irregular: 0.30,
+                mem_capacity: 24e9,
+            },
+        ),
+        (Processor::Gpu, Framework::Dgl) => (
+            GPU_RTX3090,
+            Factors {
+                eff_dense: 0.45,
+                eff_sparse: 0.06,
+                kernel_overhead: 20e-6,
+                startup: 2.0e-3,
+                prep_per_edge: 8e-9,
+                h2d_bw: 16e9,
+                bw_irregular: 0.45,
+                mem_capacity: 24e9,
+            },
+        ),
+    }
+}
+
+/// Kernels a framework launches for one IR layer (drives GPU overhead).
+fn kernels_of(lt: LayerType) -> u64 {
+    match lt {
+        LayerType::Aggregate => 3,   // gather + message + scatter-reduce
+        LayerType::Linear => 1,      // cuBLAS/MKL GEMM
+        LayerType::VectorInner => 2, // gather pairs + dot
+        LayerType::VectorAdd => 1,
+        LayerType::Activation => 1,
+        LayerType::BatchNorm => 1,
+    }
+}
+
+/// End-to-end model latency for a framework on the *unoptimized* IR.
+/// Includes the framework's preprocessing/launch overheads (the paper's
+/// E2E metric for CPU/GPU platforms).
+pub fn framework_e2e(ir: &ModelIr, fw: Framework, proc: Processor) -> FrameworkResult {
+    let (plat, f) = factors(fw, proc);
+    // OOM rule. PyG's MessagePassing materializes a per-edge message
+    // tensor at the aggregation width (GCNConv applies the linear first,
+    // so the width is min(f_in, f_out) of the surrounding transform),
+    // holding ~3 copies (message, normalized message, scatter output).
+    // Its COO preprocessing (coalesce/sort + norm) additionally peaks at
+    // a large per-edge working set on the host — the empirical blowup
+    // that makes Amazon-Products (264M edges) exceed the 3990x's 256 GB
+    // while Reddit (116M) still fits, matching Fig. 18's OOM pattern.
+    // DGL's fused SpMM keeps only feature-matrix-sized buffers.
+    let h_msg = ir
+        .layers
+        .iter()
+        .filter(|l| l.ltype == LayerType::Aggregate)
+        .map(|l| {
+            ir.layers
+                .iter()
+                .filter(|m| m.ltype == LayerType::Linear)
+                .map(|m| m.f_out.min(l.f_in))
+                .max()
+                .unwrap_or(l.f_in)
+        })
+        .max()
+        .unwrap_or(1);
+    let base_bytes = ir.graph.input_bytes() as f64;
+    let footprint = match (fw, proc) {
+        (Framework::PyG, Processor::Cpu) => {
+            base_bytes
+                + 3.0 * (ir.graph.n_edges * h_msg * 4) as f64
+                + ir.graph.n_edges as f64 * 600.0 // host preprocessing peak
+        }
+        (Framework::PyG, Processor::Gpu) => {
+            base_bytes
+                + 3.0 * (ir.graph.n_edges * h_msg * 4) as f64
+                + ir.graph.n_edges as f64 * 100.0 // device edge working set
+        }
+        (Framework::Dgl, _) => {
+            base_bytes
+                + (ir.graph.n_vertices
+                    * ir.layers.iter().map(|l| l.f_in.max(l.f_out)).max().unwrap_or(1)
+                    * 4) as f64
+                    * 3.0
+        }
+    };
+    if footprint > f.mem_capacity {
+        return FrameworkResult::Oom;
+    }
+    // Framework preprocessing the paper's E2E includes: runtime startup,
+    // graph construction (~per-edge), and the host->device input copy.
+    let mut t = f.startup + ir.graph.n_edges as f64 * f.prep_per_edge;
+    if f.h2d_bw > 0.0 {
+        t += base_bytes / f.h2d_bw;
+    }
+    for l in &ir.layers {
+        let flops = l.complexity() as f64;
+        let (eff, bytes) = match l.ltype {
+            LayerType::Aggregate | LayerType::VectorInner => {
+                // Both frameworks gather an f-wide source row per edge
+                // (cache-line-granular random access); PyG additionally
+                // materializes + scatters the message tensor.
+                let gather = (l.ne * l.f_in * 4) as f64;
+                let traffic = match fw {
+                    Framework::PyG => 3.0 * gather,
+                    Framework::Dgl => gather + (l.nv * l.f_in * 8) as f64,
+                };
+                (f.eff_sparse, traffic / f.bw_irregular)
+            }
+            LayerType::Linear => {
+                let traffic = ((l.f_in + l.f_out) * l.nv * 4) as f64;
+                (f.eff_dense, traffic)
+            }
+            _ => {
+                let traffic = 2.0 * (l.nv * l.f_in * 4) as f64;
+                (f.eff_dense, traffic)
+            }
+        };
+        let t_compute = flops / (plat.peak_flops * eff);
+        let t_memory = bytes / plat.mem_bw;
+        t += t_compute.max(t_memory) + kernels_of(l.ltype) as f64 * f.kernel_overhead;
+    }
+    FrameworkResult::Seconds(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{dataset, Dataset};
+    use crate::ir::ZooModel;
+
+    fn e2e(m: ZooModel, d: Dataset, fw: Framework, p: Processor) -> FrameworkResult {
+        framework_e2e(&m.build(d.meta()), fw, p)
+    }
+
+    #[test]
+    fn pyg_oom_matches_fig18() {
+        // Paper: PyG-GPU OOM on RE, YE, AP; fine on CI/CO/PU/FL. Our
+        // footprint model reproduces RE and AP (the giant-edge graphs);
+        // YE (7M edges) fits 24 GB under any first-order accounting —
+        // recorded as a known deviation in EXPERIMENTS.md.
+        for key in ["RE", "AP"] {
+            let r = e2e(ZooModel::B2, dataset(key).unwrap(), Framework::PyG, Processor::Gpu);
+            assert!(matches!(r, FrameworkResult::Oom), "{key} should OOM");
+        }
+        for key in ["CI", "CO", "PU", "FL"] {
+            let r = e2e(ZooModel::B2, dataset(key).unwrap(), Framework::PyG, Processor::Gpu);
+            assert!(r.seconds().is_some(), "{key} should fit");
+        }
+        // PyG-CPU OOM on AP but not RE (as in Fig. 18).
+        let r = e2e(ZooModel::B1, dataset("AP").unwrap(), Framework::PyG, Processor::Cpu);
+        assert!(matches!(r, FrameworkResult::Oom));
+        let r = e2e(ZooModel::B1, dataset("RE").unwrap(), Framework::PyG, Processor::Cpu);
+        assert!(r.seconds().is_some());
+    }
+
+    #[test]
+    fn dgl_never_ooms_on_benchmarks() {
+        for d in crate::graph::ALL_DATASETS {
+            for p in [Processor::Cpu, Processor::Gpu] {
+                let r = e2e(ZooModel::B2, d, Framework::Dgl, p);
+                assert!(r.seconds().is_some(), "{} {p:?}", d.key);
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_beats_cpu() {
+        for fw in [Framework::PyG, Framework::Dgl] {
+            let c = e2e(ZooModel::B2, dataset("FL").unwrap(), fw, Processor::Cpu)
+                .seconds()
+                .unwrap();
+            let g = e2e(ZooModel::B2, dataset("FL").unwrap(), fw, Processor::Gpu)
+                .seconds()
+                .unwrap();
+            assert!(g < c, "{fw:?}: gpu {g} >= cpu {c}");
+        }
+    }
+
+    #[test]
+    fn dgl_faster_than_pyg_on_sparse_heavy() {
+        let p = e2e(ZooModel::B1, dataset("RE").unwrap(), Framework::PyG, Processor::Cpu)
+            .seconds()
+            .unwrap();
+        let d = e2e(ZooModel::B1, dataset("RE").unwrap(), Framework::Dgl, Processor::Cpu)
+            .seconds()
+            .unwrap();
+        assert!(d < p, "dgl {d} >= pyg {p}");
+    }
+
+    #[test]
+    fn latency_scales_with_graph() {
+        let small = e2e(ZooModel::B1, dataset("CO").unwrap(), Framework::Dgl, Processor::Gpu)
+            .seconds()
+            .unwrap();
+        let big = e2e(ZooModel::B1, dataset("FL").unwrap(), Framework::Dgl, Processor::Gpu)
+            .seconds()
+            .unwrap();
+        assert!(big > small);
+    }
+}

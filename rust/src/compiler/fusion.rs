@@ -1,0 +1,220 @@
+//! Step 2 — layer fusion (paper Sec. 6.4).
+//!
+//! * **Activation fusion**: an Activation layer merges into its adjacent
+//!   (single-parent) Aggregate / Linear / Vector-Inner / Vector-Add layer;
+//!   the activation then executes in the same Tiling Block, eliminating a
+//!   round-trip of the feature map through external memory.
+//! * **BatchNorm fusion**: inference-time batch normalization is an
+//!   affine map, so it folds into the adjacent Linear layer's weights and
+//!   bias (the numeric fold itself lives in `python/compile/model.py::
+//!   batchnorm_fold`; here the IR transformation removes the layer).
+//!
+//! Both transformations preserve the DAG invariants (`ModelIr::validate`).
+
+use crate::ir::{LayerType, ModelIr};
+
+/// Fuse until fixpoint. Returns the number of layers eliminated.
+pub fn fuse(ir: &mut ModelIr) -> usize {
+    let mut removed = 0;
+    loop {
+        let step = fuse_one(ir);
+        removed += step;
+        if step == 0 {
+            debug_assert_eq!(ir.validate(), Ok(()));
+            return removed;
+        }
+    }
+}
+
+/// Find and apply one fusion; returns 1 if something fused.
+fn fuse_one(ir: &mut ModelIr) -> usize {
+    for pos in 0..ir.layers.len() {
+        let l = &ir.layers[pos];
+        match l.ltype {
+            LayerType::Activation => {
+                if l.parents.len() != 1 {
+                    continue;
+                }
+                let pid = l.parents[0];
+                let parent = ir.layer(pid);
+                // The parent must feed only this activation, and must be a
+                // fusable compute layer that has no activation yet.
+                let fusable = matches!(
+                    parent.ltype,
+                    LayerType::Aggregate
+                        | LayerType::Linear
+                        | LayerType::VectorInner
+                        | LayerType::VectorAdd
+                );
+                if !fusable || parent.children.len() != 1 || parent.act_enabled {
+                    continue;
+                }
+                let act = l.act;
+                let id = l.id;
+                remove_passthrough(ir, pos);
+                let p = ir.layer_mut(pid);
+                p.act = act;
+                p.act_enabled = true;
+                debug_assert!(!p.children.contains(&id));
+                return 1;
+            }
+            LayerType::BatchNorm => {
+                if l.parents.len() != 1 {
+                    continue;
+                }
+                let pid = l.parents[0];
+                let parent = ir.layer(pid);
+                // BatchNorm folds into Linear weights/bias only; a
+                // BatchNorm behind an activation or non-Linear parent
+                // stays standalone (rare in practice).
+                if parent.ltype != LayerType::Linear
+                    || parent.children.len() != 1
+                    || parent.act_enabled
+                {
+                    continue;
+                }
+                remove_passthrough(ir, pos);
+                ir.layer_mut(pid).batchnorm_folded = true;
+                return 1;
+            }
+            _ => {}
+        }
+    }
+    0
+}
+
+/// Remove a single-parent pass-through layer at `pos`, splicing its
+/// children onto its parent.
+fn remove_passthrough(ir: &mut ModelIr, pos: usize) {
+    let node = ir.layers[pos].clone();
+    debug_assert_eq!(node.parents.len(), 1);
+    let pid = node.parents[0];
+    // Parent inherits the node's children in place of the node.
+    {
+        let parent = ir.layer_mut(pid);
+        let at = parent
+            .children
+            .iter()
+            .position(|&c| c == node.id)
+            .expect("asymmetric edge");
+        parent.children.remove(at);
+        for &c in &node.children {
+            parent.children.insert(at, c);
+        }
+    }
+    // Children re-point at the parent.
+    for &c in &node.children {
+        let child = ir.layer_mut(c);
+        for p in child.parents.iter_mut() {
+            if *p == node.id {
+                *p = pid;
+            }
+        }
+    }
+    ir.layers.remove(pos);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphMeta;
+    use crate::ir::{GraphGymConfig, LayerIr, ZooModel};
+    use crate::isa::Activation;
+
+    fn meta() -> GraphMeta {
+        GraphMeta::new("t", 1000, 8000, 128, 8)
+    }
+
+    #[test]
+    fn gcn_activation_fuses_into_linear() {
+        let mut ir = ZooModel::B1.build(meta());
+        assert_eq!(ir.count(LayerType::Activation), 1);
+        let removed = fuse(&mut ir);
+        assert_eq!(removed, 1);
+        assert_eq!(ir.count(LayerType::Activation), 0);
+        // The first Linear now carries ReLU.
+        let lin = ir
+            .layers
+            .iter()
+            .find(|l| l.ltype == LayerType::Linear && l.act_enabled)
+            .expect("fused linear");
+        assert_eq!(lin.act, Activation::Relu);
+        ir.validate().unwrap();
+    }
+
+    #[test]
+    fn b8_batchnorms_fold_into_linears() {
+        let mut ir = ZooModel::B8.build(meta());
+        let bn_before = ir.count(LayerType::BatchNorm);
+        assert!(bn_before > 0);
+        fuse(&mut ir);
+        assert_eq!(ir.count(LayerType::BatchNorm), 0);
+        assert_eq!(ir.count(LayerType::Activation), 0);
+        assert!(ir.layers.iter().any(|l| l.batchnorm_folded));
+        ir.validate().unwrap();
+    }
+
+    #[test]
+    fn fusion_reduces_layer_count_everywhere_in_zoo() {
+        for m in crate::ir::ALL_MODELS {
+            let mut ir = m.build(meta());
+            let before = ir.n_layers();
+            let removed = fuse(&mut ir);
+            assert_eq!(ir.n_layers(), before - removed, "{}", m.key());
+            ir.validate().unwrap_or_else(|e| panic!("{}: {e}", m.key()));
+        }
+    }
+
+    #[test]
+    fn branch_point_blocks_activation_fusion() {
+        // Parent with two children cannot absorb the activation (the
+        // other child needs the pre-activation value).
+        let mut ir = ModelIr::new("t", meta());
+        let a = ir.push(LayerIr::new(0, LayerType::Linear, 128, 64, 1000, 8000));
+        let act = LayerIr::new(0, LayerType::Activation, 64, 64, 1000, 8000)
+            .with_act(Activation::Relu);
+        let _b = ir.push_with_parents(act, &[a]);
+        let side = LayerIr::new(0, LayerType::Linear, 64, 32, 1000, 8000);
+        ir.push_with_parents(side, &[a]);
+        ir.validate().unwrap();
+        assert_eq!(fuse(&mut ir), 0);
+    }
+
+    #[test]
+    fn chained_act_after_bn_both_fuse() {
+        // Lin -> BN -> Act: BN folds first, then Act fuses into the Lin.
+        let cfg = GraphGymConfig { n_pre: 1, n_mp: 0, n_post: 0, ..Default::default() };
+        let mut ir = cfg.build("pre-only", meta());
+        assert_eq!(ir.n_layers(), 3);
+        assert_eq!(fuse(&mut ir), 2);
+        assert_eq!(ir.n_layers(), 1);
+        let l = &ir.layers[0];
+        assert!(l.act_enabled && l.batchnorm_folded);
+        ir.validate().unwrap();
+    }
+
+    #[test]
+    fn fusion_preserves_complexity_of_compute_layers() {
+        // Fusion only removes element-wise layers; Aggregate/Linear
+        // complexity terms must be untouched.
+        let mut ir = ZooModel::B2.build(meta());
+        let heavy_before: u64 = ir
+            .layers
+            .iter()
+            .filter(|l| {
+                matches!(l.ltype, LayerType::Aggregate | LayerType::Linear)
+            })
+            .map(|l| l.complexity())
+            .sum();
+        fuse(&mut ir);
+        let heavy_after: u64 = ir
+            .layers
+            .iter()
+            .filter(|l| {
+                matches!(l.ltype, LayerType::Aggregate | LayerType::Linear)
+            })
+            .map(|l| l.complexity())
+            .sum();
+        assert_eq!(heavy_before, heavy_after);
+    }
+}

@@ -1,0 +1,724 @@
+//! Step 4 — kernel mapping, instruction interleaving, code generation
+//! (paper Sec. 6.6).
+//!
+//! Each layer maps to a **Layer Block**: a Control-and-Scheduling
+//! Instruction followed by the layer's **Tiling Blocks** (the unfolded
+//! outer loops of Alg. 6–8). A Tiling Block is an inseparable instruction
+//! sequence executed by one PE: memory reads (annotated with the buffer
+//! mutex `lock` bit that prevents WAR hazards under look-ahead issue),
+//! ACK compute instructions, and the result write-back.
+//!
+//! Hardware constraints honored here:
+//! * a subshard whose edge count exceeds the Edge Buffer capacity is
+//!   processed in buffer-sized chunks (MemRead + SpDMM per chunk);
+//! * a weight matrix larger than the Weight Buffer is split into
+//!   column chunks (MemRead + GEMM per chunk);
+//! * the fused activation executes on the final compute instruction of a
+//!   tile, when the accumulator holds the complete result.
+
+use super::partition::LayerGrid;
+use super::CompileOptions;
+use crate::config::HwConfig;
+use crate::graph::{PartitionConfig, TileCounts};
+use crate::ir::{LayerIr, LayerType, ModelIr};
+use crate::isa::{
+    Activation, AggOp, BufferId, Instr, LayerBlock, Program, TilingBlock,
+};
+use crate::util::ceil_div;
+
+/// Reference to one subshard's edges within a Tiling Block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubshardRef {
+    /// Source shard index k (column block of A).
+    pub k: u32,
+    /// Edge count of subshard (shard, k).
+    pub ne: u64,
+}
+
+/// Structured description of one Tiling Block — what the functional
+/// runtime needs to bind the block to actual tile data (the `.ga` binary
+/// carries the same information as DDR addresses).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TileTask {
+    /// Alg. 6: H_out(fiber, shard) = AggOp over subshards k.
+    Aggregate {
+        fiber: u32,
+        shard: u32,
+        rows: u32,
+        cols: u16,
+        aggop: AggOp,
+        act: Activation,
+        subshards: Vec<SubshardRef>,
+    },
+    /// Block matmul of one vertex row-block against the weight matrix.
+    Linear {
+        /// First vertex row of this block (row blocks are sub-shard
+        /// sized for load balance; see `partition::linear_row_block`).
+        row0: u32,
+        rows: u32,
+        f_in: u32,
+        f_out: u32,
+        act: Activation,
+        batchnorm_folded: bool,
+    },
+    /// Alg. 7: edge weights of subshard (i, j) via SDDMM.
+    VectorInner {
+        i: u32,
+        j: u32,
+        ne: u64,
+        cols_total: u32,
+        act: Activation,
+    },
+    /// Alg. 8: tile-wise H_a + H_b.
+    VectorAdd {
+        fiber: u32,
+        shard: u32,
+        rows: u32,
+        cols: u16,
+        act: Activation,
+    },
+    /// Standalone element-wise layer (fusion disabled), Activation or
+    /// BatchNorm.
+    Eltwise {
+        fiber: u32,
+        shard: u32,
+        rows: u32,
+        cols: u16,
+        act: Activation,
+        batchnorm: bool,
+    },
+}
+
+/// All Tiling Blocks of one layer, aligned 1:1 (same order) with the
+/// corresponding `LayerBlock.blocks` of the Program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerTasks {
+    pub layer_id: u16,
+    pub ltype: LayerType,
+    pub tasks: Vec<TileTask>,
+}
+
+/// DDR address map: edges first, then weights, then one feature region
+/// per layer boundary (region 0 = graph input features).
+struct AddrMap {
+    edge_base: u64,
+    /// Prefix sums (in edges) over subshards, row-major.
+    edge_prefix: Vec<u64>,
+    shards: usize,
+    weight_base: u64,
+    /// feature_region[l] = base address of the tensor produced by layer
+    /// index l-1 (region 0 is the graph input).
+    feature_region: Vec<u64>,
+    #[allow(dead_code)]
+    region_stride: u64,
+}
+
+impl AddrMap {
+    fn new(ir: &ModelIr, tiles: &TileCounts) -> AddrMap {
+        let mut edge_prefix = Vec::with_capacity(tiles.counts.len() + 1);
+        let mut acc = 0u64;
+        edge_prefix.push(0);
+        for &c in &tiles.counts {
+            acc += c;
+            edge_prefix.push(acc);
+        }
+        let edge_bytes = acc * 12;
+        let weight_base = edge_bytes;
+        // Generous static weight region (weights are small).
+        let weight_region = 64 << 20;
+        let max_f = ir.layers.iter().map(|l| l.f_in.max(l.f_out)).max().unwrap_or(1);
+        let region_stride = (ir.graph.n_vertices * max_f * 4).next_power_of_two();
+        let base = weight_base + weight_region;
+        let feature_region = (0..=ir.layers.len())
+            .map(|l| base + l as u64 * region_stride)
+            .collect();
+        AddrMap {
+            edge_base: 0,
+            edge_prefix,
+            shards: tiles.shards,
+            weight_base,
+            feature_region,
+            region_stride,
+        }
+    }
+
+    fn edge_addr(&self, shard: usize, k: usize) -> u64 {
+        self.edge_base + 12 * self.edge_prefix[shard * self.shards + k]
+    }
+
+    /// Address of subfiber (row block `shard`, fiber `fiber`) of the
+    /// tensor in `region`, laid out fiber-major as in Fig. 8.
+    fn feat_addr(&self, region: usize, shard: u64, fiber: u64, n1: u64, nv: u64) -> u64 {
+        let col_bytes = 4 * (nv * fiber); // whole fibers before this one
+        self.feature_region[region] + col_bytes + shard * n1 * 4
+    }
+}
+
+/// Map the optimized IR onto the ISA. Returns the `.ga` Program and the
+/// aligned structured tasks.
+pub fn map_program(
+    ir: &ModelIr,
+    tiles: &TileCounts,
+    grids: &[LayerGrid],
+    cfg: PartitionConfig,
+    hw: &HwConfig,
+    opts: &CompileOptions,
+) -> (Program, Vec<LayerTasks>) {
+    debug_assert_eq!(grids.len(), ir.layers.len());
+    let addr = AddrMap::new(ir, tiles);
+    // region index of each layer's *input*: parent position + 1, or 0.
+    let pos_of: std::collections::HashMap<u16, usize> =
+        ir.layers.iter().enumerate().map(|(p, l)| (l.id, p)).collect();
+
+    let mut layers = Vec::with_capacity(ir.layers.len());
+    let mut all_tasks = Vec::with_capacity(ir.layers.len());
+    for (pos, layer) in ir.layers.iter().enumerate() {
+        let grid = grids[pos];
+        let in_region = layer
+            .parents
+            .first()
+            .map(|p| pos_of[p] + 1)
+            .unwrap_or(0);
+        let in_region2 = layer
+            .parents
+            .get(1)
+            .map(|p| pos_of[p] + 1)
+            .unwrap_or(in_region);
+        let out_region = pos + 1;
+        let ctx = MapCtx {
+            layer,
+            tiles,
+            cfg,
+            hw,
+            opts,
+            addr: &addr,
+            in_region,
+            in_region2,
+            out_region,
+        };
+        let (blocks, tasks) = match layer.ltype {
+            LayerType::Aggregate => map_aggregate(&ctx),
+            LayerType::Linear => map_linear(&ctx),
+            LayerType::VectorInner => map_vector_inner(&ctx),
+            LayerType::VectorAdd => map_vector_add(&ctx),
+            LayerType::Activation | LayerType::BatchNorm => map_eltwise(&ctx),
+        };
+        debug_assert_eq!(blocks.len(), tasks.len());
+        debug_assert_eq!(blocks.len() as u64, grid.n_tiles());
+        let csi = Instr::Csi {
+            layer_id: layer.id,
+            layer_type: layer.ltype as u8,
+            n_tiling_blocks: blocks.len() as u32,
+        };
+        layers.push(LayerBlock { csi, blocks });
+        all_tasks.push(LayerTasks {
+            layer_id: layer.id,
+            ltype: layer.ltype,
+            tasks,
+        });
+    }
+    let program = Program {
+        n1: cfg.n1 as u32,
+        n2: cfg.n2 as u32,
+        model_name: ir.name.clone(),
+        graph_name: ir.graph.name.clone(),
+        layers,
+    };
+    (program, all_tasks)
+}
+
+struct MapCtx<'a> {
+    layer: &'a LayerIr,
+    tiles: &'a TileCounts,
+    cfg: PartitionConfig,
+    hw: &'a HwConfig,
+    opts: &'a CompileOptions,
+    addr: &'a AddrMap,
+    in_region: usize,
+    in_region2: usize,
+    out_region: usize,
+}
+
+impl<'a> MapCtx<'a> {
+    fn rows_of_shard(&self, j: u64) -> u32 {
+        (self.layer.nv - j * self.cfg.n1).min(self.cfg.n1) as u32
+    }
+
+    fn cols_of_fiber(&self, i: u64, f: u64) -> u16 {
+        ((f - i * self.cfg.n2).min(self.cfg.n2)) as u16
+    }
+
+    fn act(&self) -> Activation {
+        if self.layer.act_enabled { self.layer.act } else { Activation::None }
+    }
+}
+
+/// Alg. 6 — Aggregate layer.
+fn map_aggregate(ctx: &MapCtx) -> (Vec<TilingBlock>, Vec<TileTask>) {
+    let l = ctx.layer;
+    let (n1, _n2) = (ctx.cfg.n1, ctx.cfg.n2);
+    let shards = ctx.cfg.shards(l.nv);
+    let fibers = ctx.cfg.fibers(l.f_in);
+    let aggop = l.aggop.unwrap_or(AggOp::Sum);
+    let act = ctx.act();
+    let edge_cap = ctx.hw.edge_capacity as u64;
+    let mut blocks = Vec::new();
+    let mut tasks = Vec::new();
+    for i in 0..fibers {
+        let cols = ctx.cols_of_fiber(i, l.f_in);
+        for j in 0..shards {
+            let rows = ctx.rows_of_shard(j);
+            let mut instrs = vec![Instr::Init { rows, cols, aggop }];
+            let mut refs = Vec::new();
+            // Which subshards contribute?
+            let contributing: Vec<(u64, u64)> = (0..shards)
+                .map(|k| (k, ctx.tiles.get(j as usize, k as usize)))
+                .filter(|&(_, ne)| ne > 0 || !ctx.opts.skip_empty_tiles)
+                .collect();
+            let last = contributing
+                .iter()
+                .rposition(|&(_, ne)| ne > 0)
+                .unwrap_or(usize::MAX);
+            for (idx, &(k, ne)) in contributing.iter().enumerate() {
+                refs.push(SubshardRef { k: k as u32, ne });
+                // Feature subfiber H_in(k, i). A sparse subshard
+                // references at most `ne` distinct source rows, so the
+                // loader issues an index-bounded gather instead of the
+                // full subfiber (the ISN routes rows by index anyway);
+                // this caps feature traffic on low-degree graphs.
+                let rows_k = ctx.rows_of_shard(k) as u64;
+                let gather_rows = rows_k.min(ne.max(1));
+                instrs.push(Instr::MemRead {
+                    buf: BufferId::Feature0,
+                    addr: ctx.addr.feat_addr(ctx.in_region, k, i, n1, l.nv),
+                    bytes: (gather_rows * cols as u64 * 4) as u32,
+                    lock: true,
+                });
+                // Edge chunks of subshard (j, k).
+                let chunks = ceil_div(ne, edge_cap).max(1);
+                for c in 0..chunks {
+                    let ne_c = if ne == 0 {
+                        0
+                    } else {
+                        (ne - c * edge_cap).min(edge_cap)
+                    };
+                    instrs.push(Instr::MemRead {
+                        buf: BufferId::Edge0,
+                        addr: ctx.addr.edge_addr(j as usize, k as usize) + c * edge_cap * 12,
+                        bytes: (ne_c * 12) as u32,
+                        lock: true,
+                    });
+                    let is_last = idx == last && c + 1 == chunks;
+                    instrs.push(Instr::Spdmm {
+                        n_edges: ne_c as u32,
+                        feat: cols,
+                        aggop,
+                        act: if is_last { act } else { Activation::None },
+                    });
+                }
+            }
+            instrs.push(Instr::MemWrite {
+                buf: BufferId::Result,
+                addr: ctx.addr.feat_addr(ctx.out_region, j, i, n1, l.nv),
+                bytes: rows * cols as u32 * 4,
+            });
+            blocks.push(TilingBlock::new(instrs));
+            tasks.push(TileTask::Aggregate {
+                fiber: i as u32,
+                shard: j as u32,
+                rows,
+                cols,
+                aggop,
+                act,
+                subshards: refs,
+            });
+        }
+    }
+    (blocks, tasks)
+}
+
+/// Standard block matmul — Linear layer. Row blocks are sub-shard sized
+/// (`partition::linear_row_block`) so small graphs still fan out across
+/// all PEs.
+fn map_linear(ctx: &MapCtx) -> (Vec<TilingBlock>, Vec<TileTask>) {
+    let l = ctx.layer;
+    let n1 = ctx.cfg.n1;
+    let rb = super::partition::linear_row_block(l.nv, ctx.cfg, ctx.hw);
+    let n_blocks = l.nv.div_ceil(rb);
+    let fibers_in = ctx.cfg.fibers(l.f_in);
+    let act = ctx.act();
+    // Weight Buffer capacity in f32 words; chunk f_out columns to fit.
+    let w_cap = (ctx.hw.weight_rows * ctx.hw.p_sys) as u64;
+    let w_cols_max = (w_cap / l.f_in.max(1)).max(1).min(u16::MAX as u64);
+    let mut blocks = Vec::new();
+    let mut tasks = Vec::new();
+    for j in 0..n_blocks {
+        let row0 = j * rb;
+        let rows = (l.nv - row0).min(rb) as u32;
+        let mut instrs = Vec::new();
+        let mut c0 = 0u64;
+        while c0 < l.f_out {
+            let wc = (l.f_out - c0).min(w_cols_max);
+            instrs.push(Instr::MemRead {
+                buf: BufferId::Weight0,
+                addr: ctx.addr.weight_base + (l.id as u64) * (4 << 20) + c0 * l.f_in * 4,
+                bytes: (l.f_in * wc * 4) as u32,
+                lock: true,
+            });
+            for k in 0..fibers_in {
+                let cols_k = ctx.cols_of_fiber(k, l.f_in);
+                instrs.push(Instr::MemRead {
+                    buf: BufferId::Feature0,
+                    addr: ctx.addr.feat_addr(ctx.in_region, row0 / n1, k, n1, l.nv)
+                        + (row0 % n1) * 4,
+                    bytes: rows * cols_k as u32 * 4,
+                    lock: true,
+                });
+            }
+            instrs.push(Instr::Gemm {
+                rows,
+                len: l.f_in as u16,
+                cols: wc as u16,
+                act,
+                accumulate: false,
+            });
+            instrs.push(Instr::MemWrite {
+                buf: BufferId::Result,
+                addr: ctx.addr.feat_addr(ctx.out_region, row0 / n1, c0 / ctx.cfg.n2, n1, l.nv)
+                    + (row0 % n1) * 4,
+                bytes: rows * wc as u32 * 4,
+            });
+            c0 += wc;
+        }
+        blocks.push(TilingBlock::new(instrs));
+        tasks.push(TileTask::Linear {
+            row0: row0 as u32,
+            rows,
+            f_in: l.f_in as u32,
+            f_out: l.f_out as u32,
+            act,
+            batchnorm_folded: l.batchnorm_folded,
+        });
+    }
+    (blocks, tasks)
+}
+
+/// Alg. 7 — Vector-Inner (SDDMM) layer.
+fn map_vector_inner(ctx: &MapCtx) -> (Vec<TilingBlock>, Vec<TileTask>) {
+    let l = ctx.layer;
+    let n1 = ctx.cfg.n1;
+    let shards = ctx.cfg.shards(l.nv);
+    let fibers = ctx.cfg.fibers(l.f_in);
+    let act = ctx.act();
+    let edge_cap = ctx.hw.edge_capacity as u64;
+    let mut blocks = Vec::new();
+    let mut tasks = Vec::new();
+    for i in 0..shards {
+        for j in 0..shards {
+            let ne = ctx.tiles.get(i as usize, j as usize);
+            let mut instrs = Vec::new();
+            if ne > 0 || !ctx.opts.skip_empty_tiles {
+                let chunks = ceil_div(ne, edge_cap).max(1);
+                for c in 0..chunks {
+                    let ne_c = if ne == 0 {
+                        0
+                    } else {
+                        (ne - c * edge_cap).min(edge_cap)
+                    };
+                    instrs.push(Instr::MemRead {
+                        buf: BufferId::Edge0,
+                        addr: ctx.addr.edge_addr(i as usize, j as usize) + c * edge_cap * 12,
+                        bytes: (ne_c * 12) as u32,
+                        lock: true,
+                    });
+                    for k in 0..fibers {
+                        let cols_k = ctx.cols_of_fiber(k, l.f_in);
+                        // Destination-side and source-side subfibers.
+                        instrs.push(Instr::MemRead {
+                            buf: BufferId::Feature0,
+                            addr: ctx.addr.feat_addr(ctx.in_region, i, k, n1, l.nv),
+                            bytes: ctx.rows_of_shard(i) * cols_k as u32 * 4,
+                            lock: true,
+                        });
+                        instrs.push(Instr::MemRead {
+                            buf: BufferId::Feature1,
+                            addr: ctx.addr.feat_addr(ctx.in_region, j, k, n1, l.nv),
+                            bytes: ctx.rows_of_shard(j) * cols_k as u32 * 4,
+                            lock: true,
+                        });
+                        instrs.push(Instr::Sddmm {
+                            n_edges: ne_c as u32,
+                            feat: cols_k,
+                            act: if k + 1 == fibers { act } else { Activation::None },
+                        });
+                    }
+                    // Updated edge weights go back to DDR.
+                    instrs.push(Instr::MemWrite {
+                        buf: BufferId::Edge0,
+                        addr: ctx.addr.edge_addr(i as usize, j as usize) + c * edge_cap * 12,
+                        bytes: (ne_c * 12) as u32,
+                    });
+                }
+            }
+            blocks.push(TilingBlock::new(instrs));
+            tasks.push(TileTask::VectorInner {
+                i: i as u32,
+                j: j as u32,
+                ne,
+                cols_total: l.f_in as u32,
+                act,
+            });
+        }
+    }
+    (blocks, tasks)
+}
+
+/// Alg. 8 — Vector-Add layer.
+fn map_vector_add(ctx: &MapCtx) -> (Vec<TilingBlock>, Vec<TileTask>) {
+    let l = ctx.layer;
+    let n1 = ctx.cfg.n1;
+    let shards = ctx.cfg.shards(l.nv);
+    let fibers = ctx.cfg.fibers(l.f_in);
+    let act = ctx.act();
+    let mut blocks = Vec::new();
+    let mut tasks = Vec::new();
+    for i in 0..fibers {
+        let cols = ctx.cols_of_fiber(i, l.f_in);
+        for j in 0..shards {
+            let rows = ctx.rows_of_shard(j);
+            let instrs = vec![
+                Instr::MemRead {
+                    buf: BufferId::Feature0,
+                    addr: ctx.addr.feat_addr(ctx.in_region, j, i, n1, l.nv),
+                    bytes: rows * cols as u32 * 4,
+                    lock: true,
+                },
+                Instr::MemRead {
+                    buf: BufferId::Feature1,
+                    addr: ctx.addr.feat_addr(ctx.in_region2, j, i, n1, l.nv),
+                    bytes: rows * cols as u32 * 4,
+                    lock: true,
+                },
+                Instr::Vadd { rows, cols, act },
+                Instr::MemWrite {
+                    buf: BufferId::Result,
+                    addr: ctx.addr.feat_addr(ctx.out_region, j, i, n1, l.nv),
+                    bytes: rows * cols as u32 * 4,
+                },
+            ];
+            blocks.push(TilingBlock::new(instrs));
+            tasks.push(TileTask::VectorAdd {
+                fiber: i as u32,
+                shard: j as u32,
+                rows,
+                cols,
+                act,
+            });
+        }
+    }
+    (blocks, tasks)
+}
+
+/// Standalone Activation / BatchNorm layer (fusion off).
+fn map_eltwise(ctx: &MapCtx) -> (Vec<TilingBlock>, Vec<TileTask>) {
+    let l = ctx.layer;
+    let n1 = ctx.cfg.n1;
+    let shards = ctx.cfg.shards(l.nv);
+    let fibers = ctx.cfg.fibers(l.f_in);
+    let batchnorm = l.ltype == LayerType::BatchNorm;
+    // BatchNorm executes on the same element-wise path as activations
+    // (scale+shift per element; the Activation Unit's multiply-add).
+    let act = if batchnorm { Activation::None } else { l.act };
+    let mut blocks = Vec::new();
+    let mut tasks = Vec::new();
+    for i in 0..fibers {
+        let cols = ctx.cols_of_fiber(i, l.f_in);
+        for j in 0..shards {
+            let rows = ctx.rows_of_shard(j);
+            let instrs = vec![
+                Instr::MemRead {
+                    buf: BufferId::Feature0,
+                    addr: ctx.addr.feat_addr(ctx.in_region, j, i, n1, l.nv),
+                    bytes: rows * cols as u32 * 4,
+                    lock: true,
+                },
+                Instr::Act { rows, cols, act },
+                Instr::MemWrite {
+                    buf: BufferId::Result,
+                    addr: ctx.addr.feat_addr(ctx.out_region, j, i, n1, l.nv),
+                    bytes: rows * cols as u32 * 4,
+                },
+            ];
+            blocks.push(TilingBlock::new(instrs));
+            tasks.push(TileTask::Eltwise {
+                fiber: i as u32,
+                shard: j as u32,
+                rows,
+                cols,
+                act,
+                batchnorm,
+            });
+        }
+    }
+    (blocks, tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::{dataset, GraphMeta};
+    use crate::ir::ZooModel;
+
+    fn compile_model(m: ZooModel, key: &str) -> crate::compiler::Executable {
+        let ds = dataset(key).unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        compile(&m.build(ds.meta()), &tiles, &hw, CompileOptions::default())
+    }
+
+    #[test]
+    fn blocks_align_with_tasks() {
+        let exe = compile_model(ZooModel::B1, "PU");
+        for (lb, lt) in exe.program.layers.iter().zip(&exe.tasks) {
+            assert_eq!(lb.blocks.len(), lt.tasks.len());
+            if let Instr::Csi { n_tiling_blocks, .. } = lb.csi {
+                assert_eq!(n_tiling_blocks as usize, lb.blocks.len());
+            } else {
+                panic!("missing CSI");
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_blocks_have_init_and_writeback() {
+        let exe = compile_model(ZooModel::B1, "PU");
+        let agg = exe
+            .tasks
+            .iter()
+            .position(|l| l.ltype == LayerType::Aggregate)
+            .unwrap();
+        for block in &exe.program.layers[agg].blocks {
+            assert!(matches!(block.instrs.first(), Some(Instr::Init { .. })));
+            assert!(matches!(block.instrs.last(), Some(Instr::MemWrite { .. })));
+        }
+    }
+
+    #[test]
+    fn edge_chunking_respects_buffer_capacity() {
+        // Flickr has ~900K edges in few shards; every SpDMM must stay
+        // within the 65536-edge buffer.
+        let exe = compile_model(ZooModel::B2, "FL");
+        let cap = HwConfig::alveo_u250().edge_capacity as u32;
+        let mut spdmm_seen = 0;
+        for lb in &exe.program.layers {
+            for b in &lb.blocks {
+                for ins in &b.instrs {
+                    if let Instr::Spdmm { n_edges, .. } = ins {
+                        assert!(*n_edges <= cap);
+                        spdmm_seen += 1;
+                    }
+                }
+            }
+        }
+        assert!(spdmm_seen > 0);
+    }
+
+    #[test]
+    fn total_spdmm_edges_cover_graph_per_fiber_sweep() {
+        // For one Aggregate layer, the sum of SpDMM edge counts equals
+        // fibers x |E| (each fiber sweep processes every edge once).
+        let ds = dataset("PU").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = ZooModel::B7.build(ds.meta()); // starts with Aggregates
+        let exe = compile(
+            &ir,
+            &tiles,
+            &hw,
+            CompileOptions { order_opt: false, ..Default::default() },
+        );
+        let agg_layer = &exe.program.layers[0];
+        let total: u64 = agg_layer
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter_map(|i| match i {
+                Instr::Spdmm { n_edges, .. } => Some(*n_edges as u64),
+                _ => None,
+            })
+            .sum();
+        let fibers = (ds.feat_len as u64).div_ceil(hw.n2() as u64);
+        assert_eq!(total, fibers * ds.n_edges);
+    }
+
+    #[test]
+    fn weight_chunking_on_wide_layers() {
+        // Citeseer f_in = 3703: weight buffer fits 262144/3703 = 70 cols;
+        // a Linear to 128 outputs must emit >= 2 weight chunks.
+        let meta = GraphMeta::new("ci-like", 3000, 10_000, 3703, 6);
+        let hw = HwConfig::alveo_u250();
+        let tiles =
+            crate::graph::rmat::rmat_tile_counts(&meta, Default::default(), 1, hw.n1() as u64);
+        let ir = ZooModel::B2.build(meta);
+        let exe = compile(
+            &ir,
+            &tiles,
+            &hw,
+            CompileOptions { order_opt: false, fusion: true, ..Default::default() },
+        );
+        let lin = exe
+            .tasks
+            .iter()
+            .position(|l| l.ltype == LayerType::Linear)
+            .unwrap();
+        let gemms = exe.program.layers[lin].blocks[0]
+            .instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::Gemm { .. }))
+            .count();
+        assert!(gemms >= 2, "expected weight chunking, got {gemms} GEMM(s)");
+    }
+
+    #[test]
+    fn empty_subshards_skipped_by_default() {
+        let ds = dataset("PU").unwrap(); // 2 shards, sparse
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = ZooModel::B1.build(ds.meta());
+        let on = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let off = compile(
+            &ir,
+            &tiles,
+            &hw,
+            CompileOptions { skip_empty_tiles: false, ..Default::default() },
+        );
+        assert!(on.program.size_bytes() <= off.program.size_bytes());
+    }
+
+    #[test]
+    fn addresses_fit_40_bits() {
+        let exe = compile_model(ZooModel::B8, "YE");
+        for lb in &exe.program.layers {
+            for b in &lb.blocks {
+                for ins in &b.instrs {
+                    if let Instr::MemRead { addr, .. } | Instr::MemWrite { addr, .. } = ins {
+                        assert!(*addr < (1u64 << 40), "addr {addr:#x}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vector_inner_grid_is_shards_squared() {
+        let exe = compile_model(ZooModel::B6, "PU");
+        let vi = exe
+            .tasks
+            .iter()
+            .find(|l| l.ltype == LayerType::VectorInner)
+            .unwrap();
+        let shards = dataset("PU").unwrap().n_vertices.div_ceil(16384);
+        assert_eq!(vi.tasks.len() as u64, shards * shards);
+    }
+}

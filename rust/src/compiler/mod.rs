@@ -1,0 +1,172 @@
+//! The GraphAGILE software compiler (paper Sec. 6).
+//!
+//! Translation phase: the input parser produces a [`crate::ir::ModelIr`]
+//! (Sec. 6.1–6.2; see `ir::zoo` for the benchmark builders that play the
+//! role of the PyG front-end). Optimization phase — four steps:
+//!
+//! 1. [`order`] — computation order optimization (Alg. 5, Theorems 1–2),
+//! 2. [`fusion`] — Activation and BatchNorm fusion (Sec. 6.4),
+//! 3. [`partition`] — Fiber-Shard data partitioning (Sec. 6.5),
+//! 4. [`mapping`] — kernel mapping to Layer/Tiling Blocks, instruction
+//!    interleaving and mutex (WAR) annotation, code generation (Sec. 6.6).
+//!
+//! The output is an [`Executable`]: the `.ga` binary [`Program`] plus the
+//! structured tile tasks the functional runtime executes, and a
+//! [`CompileReport`] with per-pass wall-clock times (T_LoC in Table 7).
+
+pub mod fusion;
+pub mod mapping;
+pub mod order;
+pub mod partition;
+pub mod superpartition;
+
+use crate::config::HwConfig;
+use crate::graph::{PartitionConfig, TileCounts};
+use crate::ir::ModelIr;
+use crate::isa::Program;
+use crate::util::timed;
+
+pub use mapping::{LayerTasks, TileTask};
+pub use partition::LayerGrid;
+
+/// Compiler switches (all on by default; the Fig. 14–16 ablations turn
+/// individual passes off).
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    /// Step 1: computation order optimization.
+    pub order_opt: bool,
+    /// Step 2: layer fusion.
+    pub fusion: bool,
+    /// Skip empty subshards (no instructions for zero-edge tiles).
+    pub skip_empty_tiles: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { order_opt: true, fusion: true, skip_empty_tiles: true }
+    }
+}
+
+/// Per-pass wall-clock seconds; their sum is the compiler's share of the
+/// latency-of-compilation metric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileReport {
+    pub t_order: f64,
+    pub t_fusion: f64,
+    pub t_partition: f64,
+    pub t_mapping: f64,
+}
+
+impl CompileReport {
+    pub fn total(&self) -> f64 {
+        self.t_order + self.t_fusion + self.t_partition + self.t_mapping
+    }
+}
+
+/// Compiler output.
+#[derive(Clone, Debug)]
+pub struct Executable {
+    /// The optimized IR (after steps 1–2).
+    pub ir: ModelIr,
+    /// The partition configuration used (from the HwConfig buffers).
+    pub cfg: PartitionConfig,
+    /// The `.ga` binary.
+    pub program: Program,
+    /// Structured tile tasks, one per Tiling Block, in program order —
+    /// the loader metadata the functional runtime uses to bind tiles to
+    /// actual graph data.
+    pub tasks: Vec<LayerTasks>,
+    pub report: CompileReport,
+}
+
+/// Run the full compiler: (model IR, per-subshard edge counts, hardware
+/// configuration) -> executable. `tiles.n1` must equal the HwConfig's N1.
+pub fn compile(
+    model: &ModelIr,
+    tiles: &TileCounts,
+    hw: &HwConfig,
+    opts: CompileOptions,
+) -> Executable {
+    let mut report = CompileReport::default();
+    let mut ir = model.clone();
+
+    if opts.order_opt {
+        let (_, t) = timed(|| order::optimize(&mut ir));
+        report.t_order = t;
+    }
+    if opts.fusion {
+        let (_, t) = timed(|| fusion::fuse(&mut ir));
+        report.t_fusion = t;
+    }
+
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    debug_assert_eq!(
+        tiles.n1, cfg.n1,
+        "tile counts were built with a different N1 than the hardware config"
+    );
+
+    let (grids, t_part) = timed(|| partition::plan(&ir, cfg, hw));
+    report.t_partition = t_part;
+
+    let ((program, tasks), t_map) =
+        timed(|| mapping::map_program(&ir, tiles, &grids, cfg, hw, &opts));
+    report.t_mapping = t_map;
+
+    Executable { ir, cfg, program, tasks, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{dataset, GraphMeta};
+    use crate::ir::ZooModel;
+
+    #[test]
+    fn end_to_end_compile_b1_cora() {
+        let ds = dataset("CO").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = ZooModel::B1.build(ds.meta());
+        let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+        exe.ir.validate().unwrap();
+        assert!(!exe.program.layers.is_empty());
+        assert_eq!(exe.program.layers.len(), exe.tasks.len());
+        assert!(exe.program.size_bytes() > 0);
+        // Round-trip the binary.
+        let back = Program::from_bytes(&exe.program.to_bytes()).unwrap();
+        assert_eq!(back, exe.program);
+    }
+
+    #[test]
+    fn report_times_are_measured() {
+        let ds = dataset("CO").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = ZooModel::B2.build(ds.meta());
+        let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+        assert!(exe.report.total() > 0.0);
+        assert!(exe.report.t_mapping > 0.0);
+    }
+
+    #[test]
+    fn options_disable_passes() {
+        let meta = GraphMeta::new("t", 1000, 4000, 500, 4);
+        let tiles = crate::graph::rmat::rmat_tile_counts(
+            &meta,
+            Default::default(),
+            1,
+            16384,
+        );
+        let hw = HwConfig::alveo_u250();
+        let ir = ZooModel::B7.build(meta);
+        let on = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let off = compile(
+            &ir,
+            &tiles,
+            &hw,
+            CompileOptions { order_opt: false, fusion: false, ..Default::default() },
+        );
+        // SGC benefits enormously from order opt: fewer flops with it on.
+        assert!(on.ir.total_complexity() < off.ir.total_complexity());
+    }
+}

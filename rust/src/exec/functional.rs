@@ -1,0 +1,488 @@
+//! Partition-centric functional executor: runs the compiler's Tiling
+//! Blocks (the [`TileTask`] view of the `.ga` program) over real graph
+//! data, tile by tile, through a pluggable [`TileBackend`].
+//!
+//! Backends:
+//! * [`RustBackend`] — the reference operators (`exec::ops`);
+//! * `runtime::PjrtBackend` — the AOT-compiled HLO kernels (Pallas L1 /
+//!   JAX L2) executed on the PJRT CPU client.
+//!
+//! Executing the *same* compiled schedule through both and matching the
+//! golden whole-graph result proves the compiler's partitioning, kernel
+//! mapping, and the L1 kernels compose functionally (DESIGN.md Sec. 5).
+
+use super::golden::WeightStore;
+use super::ops;
+use crate::compiler::{Executable, TileTask};
+use crate::graph::PartitionedGraph;
+use crate::ir::LayerType;
+use crate::isa::{Activation, AggOp};
+use std::collections::HashMap;
+
+/// Tile-granular compute abstraction. Index arguments are tile-local.
+pub trait TileBackend {
+    fn name(&self) -> &'static str;
+
+    /// out(m x n) = h(m x k) @ w(k x n) + b (no activation — the
+    /// executor applies fused activations after tile assembly).
+    fn gemm(&mut self, h: &[f32], m: usize, k: usize, w: &[f32], n: usize, b: &[f32])
+        -> Vec<f32>;
+
+    /// Edge-centric aggregate over one subshard: returns an
+    /// (n_out x f) partial (untouched rows are 0).
+    #[allow(clippy::too_many_arguments)]
+    fn spdmm(
+        &mut self,
+        src: &[u32],
+        dst: &[u32],
+        ew: &[f32],
+        h: &[f32],
+        n_in: usize,
+        f: usize,
+        n_out: usize,
+        aggop: AggOp,
+    ) -> Vec<f32>;
+
+    /// Per-edge inner products <hl[src], hr[dst]>.
+    #[allow(clippy::too_many_arguments)]
+    fn sddmm(
+        &mut self,
+        src: &[u32],
+        dst: &[u32],
+        hl: &[f32],
+        hr: &[f32],
+        n_l: usize,
+        n_r: usize,
+        f: usize,
+    ) -> Vec<f32>;
+
+    /// Elementwise a + b.
+    fn vecadd(&mut self, a: &[f32], b: &[f32]) -> Vec<f32>;
+}
+
+/// Pure-rust backend: directly the reference operators.
+#[derive(Default)]
+pub struct RustBackend;
+
+impl TileBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn gemm(&mut self, h: &[f32], m: usize, k: usize, w: &[f32], n: usize, b: &[f32])
+        -> Vec<f32> {
+        ops::gemm_bias_act(h, m, k, w, n, b, Activation::None)
+    }
+
+    fn spdmm(
+        &mut self,
+        src: &[u32],
+        dst: &[u32],
+        ew: &[f32],
+        h: &[f32],
+        _n_in: usize,
+        f: usize,
+        n_out: usize,
+        aggop: AggOp,
+    ) -> Vec<f32> {
+        ops::spdmm(src, dst, ew, h, f, n_out, aggop)
+    }
+
+    fn sddmm(
+        &mut self,
+        src: &[u32],
+        dst: &[u32],
+        hl: &[f32],
+        hr: &[f32],
+        _n_l: usize,
+        _n_r: usize,
+        f: usize,
+    ) -> Vec<f32> {
+        ops::sddmm(src, dst, hl, hr, f)
+    }
+
+    fn vecadd(&mut self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        ops::vecadd(a, b, Activation::None)
+    }
+}
+
+/// Copy a (rows x cols) sub-tile out of a row-major (n x f) buffer.
+pub fn slice_tile(
+    buf: &[f32],
+    f: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in row0..row0 + rows {
+        out.extend_from_slice(&buf[r * f + col0..r * f + col0 + cols]);
+    }
+    out
+}
+
+/// Write a (rows x cols) sub-tile into a row-major (n x f) buffer.
+pub fn write_tile(
+    buf: &mut [f32],
+    f: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    tile: &[f32],
+) {
+    debug_assert_eq!(tile.len(), rows * cols);
+    for r in 0..rows {
+        buf[(row0 + r) * f + col0..(row0 + r) * f + col0 + cols]
+            .copy_from_slice(&tile[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// The executor. Holds the compiled program, the partition-ordered graph
+/// and the weights; `run` produces the final feature matrix.
+pub struct FunctionalExecutor<'a, B: TileBackend> {
+    pub exe: &'a Executable,
+    pub graph: &'a PartitionedGraph,
+    pub store: &'a WeightStore,
+    pub backend: B,
+}
+
+impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
+    pub fn new(
+        exe: &'a Executable,
+        graph: &'a PartitionedGraph,
+        store: &'a WeightStore,
+        backend: B,
+    ) -> Self {
+        assert_eq!(
+            exe.cfg.n1, graph.cfg.n1,
+            "graph partitioned with a different N1 than the executable"
+        );
+        FunctionalExecutor { exe, graph, store, backend }
+    }
+
+    /// Execute every Tiling Block in program order. Returns the last
+    /// layer's output (n x f_out).
+    pub fn run(&mut self, x: &[f32]) -> Vec<f32> {
+        let n = self.graph.n_vertices as usize;
+        let n1 = self.exe.cfg.n1 as usize;
+        let ir = &self.exe.ir;
+        let f0 = ir.graph.feat_len as usize;
+        assert_eq!(x.len(), n * f0);
+        let mut outputs: HashMap<u16, Vec<f32>> = HashMap::new();
+        let mut fdims: HashMap<u16, usize> = HashMap::new();
+        let mut edge_w: Vec<f32> = self.graph.w.clone();
+        let mut last = 0u16;
+        for (layer, tasks) in ir.layers.iter().zip(&self.exe.tasks) {
+            debug_assert_eq!(layer.id, tasks.layer_id);
+            let f_in = layer.f_in as usize;
+            let f_out = layer.f_out as usize;
+            let input = |pid: Option<&u16>,
+                         outputs: &HashMap<u16, Vec<f32>>|
+             -> Vec<f32> {
+                match pid {
+                    Some(p) => outputs.get(p).expect("parent not computed").clone(),
+                    None => x.to_vec(),
+                }
+            };
+            let h_in = input(layer.parents.first(), &outputs);
+            let mut out = vec![0f32; n * f_out];
+            match layer.ltype {
+                LayerType::Aggregate => {
+                    for t in &tasks.tasks {
+                        let TileTask::Aggregate {
+                            fiber, shard, rows, cols, aggop, act, subshards,
+                        } = t
+                        else {
+                            panic!("task/layer type mismatch")
+                        };
+                        let (rows, cols) = (*rows as usize, *cols as usize);
+                        let (row0, col0) =
+                            (*shard as usize * n1, *fiber as usize * self.exe.cfg.n2 as usize);
+                        let neutral = match aggop {
+                            AggOp::Sum | AggOp::Mean => 0.0f32,
+                            AggOp::Max => f32::NEG_INFINITY,
+                            AggOp::Min => f32::INFINITY,
+                        };
+                        let mut acc = vec![neutral; rows * cols];
+                        let mut touched = vec![false; rows];
+                        for sref in subshards {
+                            let k = sref.k as usize;
+                            let range = self.graph.subshard(*shard as usize, k);
+                            if range.is_empty() {
+                                continue;
+                            }
+                            let src: Vec<u32> = self.graph.src[range.clone()]
+                                .iter()
+                                .map(|&s| s - (k * n1) as u32)
+                                .collect();
+                            let dst: Vec<u32> = self.graph.dst[range.clone()]
+                                .iter()
+                                .map(|&d| d - row0 as u32)
+                                .collect();
+                            let ew = &edge_w[range.clone()];
+                            let rows_k = (n - k * n1).min(n1);
+                            let h_tile = slice_tile(&h_in, f_in, k * n1, rows_k, col0, cols);
+                            let part = self.backend.spdmm(
+                                &src, &dst, ew, &h_tile, rows_k, cols, rows, *aggop,
+                            );
+                            // Cross-subshard combine on touched rows only
+                            // (the hardware accumulates in-place in the
+                            // Feature Buffer; partials have 0 padding).
+                            for &d in &dst {
+                                touched[d as usize] = true;
+                            }
+                            match aggop {
+                                AggOp::Sum | AggOp::Mean => {
+                                    for (a, &p) in acc.iter_mut().zip(&part) {
+                                        if *a == f32::NEG_INFINITY {
+                                            *a = 0.0;
+                                        }
+                                        *a += p;
+                                    }
+                                }
+                                AggOp::Max | AggOp::Min => {
+                                    for r in 0..rows {
+                                        if !dst.contains(&(r as u32)) {
+                                            continue;
+                                        }
+                                        for c in 0..cols {
+                                            let a = &mut acc[r * cols + c];
+                                            let p = part[r * cols + c];
+                                            *a = if *aggop == AggOp::Max {
+                                                a.max(p)
+                                            } else {
+                                                a.min(p)
+                                            };
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        // Untouched rows -> 0 (kernel convention).
+                        for r in 0..rows {
+                            if !touched[r] {
+                                for c in 0..cols {
+                                    acc[r * cols + c] = 0.0;
+                                }
+                            }
+                        }
+                        ops::apply_act(&mut acc, *act);
+                        write_tile(&mut out, f_out, row0, rows, col0, cols, &acc);
+                    }
+                }
+                LayerType::Linear => {
+                    let (w, b) = self.store.get(layer.id);
+                    for t in &tasks.tasks {
+                        let TileTask::Linear { row0, rows, act, .. } = t else {
+                            panic!("task/layer type mismatch")
+                        };
+                        let rows = *rows as usize;
+                        let row0 = *row0 as usize;
+                        let h_tile = slice_tile(&h_in, f_in, row0, rows, 0, f_in);
+                        let mut o = self.backend.gemm(&h_tile, rows, f_in, w, f_out, b);
+                        ops::apply_act(&mut o, *act);
+                        write_tile(&mut out, f_out, row0, rows, 0, f_out, &o);
+                    }
+                }
+                LayerType::VectorInner => {
+                    for t in &tasks.tasks {
+                        let TileTask::VectorInner { i, j, ne, act, .. } = t else {
+                            panic!("task/layer type mismatch")
+                        };
+                        if *ne == 0 {
+                            continue;
+                        }
+                        let range = self.graph.subshard(*i as usize, *j as usize);
+                        debug_assert_eq!(range.len() as u64, *ne);
+                        let rows_j = (n - *j as usize * n1).min(n1);
+                        let rows_i = (n - *i as usize * n1).min(n1);
+                        let src: Vec<u32> = self.graph.src[range.clone()]
+                            .iter()
+                            .map(|&s| s - (*j as usize * n1) as u32)
+                            .collect();
+                        let dst: Vec<u32> = self.graph.dst[range.clone()]
+                            .iter()
+                            .map(|&d| d - (*i as usize * n1) as u32)
+                            .collect();
+                        let hl = slice_tile(&h_in, f_in, *j as usize * n1, rows_j, 0, f_in);
+                        let hr = slice_tile(&h_in, f_in, *i as usize * n1, rows_i, 0, f_in);
+                        let mut ew =
+                            self.backend.sddmm(&src, &dst, &hl, &hr, rows_j, rows_i, f_in);
+                        ops::apply_act(&mut ew, *act);
+                        edge_w[range].copy_from_slice(&ew);
+                    }
+                    // Features pass through a Vector-Inner layer.
+                    out = h_in.clone();
+                }
+                LayerType::VectorAdd => {
+                    let h2 = input(layer.parents.get(1), &outputs);
+                    for t in &tasks.tasks {
+                        let TileTask::VectorAdd { fiber, shard, rows, cols, act } = t
+                        else {
+                            panic!("task/layer type mismatch")
+                        };
+                        let (rows, cols) = (*rows as usize, *cols as usize);
+                        let (row0, col0) =
+                            (*shard as usize * n1, *fiber as usize * self.exe.cfg.n2 as usize);
+                        let a = slice_tile(&h_in, f_in, row0, rows, col0, cols);
+                        let b2 = slice_tile(&h2, f_in, row0, rows, col0, cols);
+                        let mut o = self.backend.vecadd(&a, &b2);
+                        ops::apply_act(&mut o, *act);
+                        write_tile(&mut out, f_out, row0, rows, col0, cols, &o);
+                    }
+                }
+                LayerType::Activation | LayerType::BatchNorm => {
+                    // Edge-score activation (parent is a Vector-Inner):
+                    // acts on the edge-weight state, features pass through
+                    // (mirrors golden_forward's semantics).
+                    let edge_parent = layer
+                        .parents
+                        .first()
+                        .map(|&p| {
+                            ir.layers.iter().any(|q| {
+                                q.id == p && q.ltype == LayerType::VectorInner
+                            })
+                        })
+                        .unwrap_or(false);
+                    if edge_parent && layer.ltype == LayerType::Activation {
+                        ops::apply_act(&mut edge_w, layer.act);
+                        outputs.insert(layer.id, h_in);
+                        last = layer.id;
+                        continue;
+                    }
+                    for t in &tasks.tasks {
+                        let TileTask::Eltwise { fiber, shard, rows, cols, act, batchnorm } =
+                            t
+                        else {
+                            panic!("task/layer type mismatch")
+                        };
+                        let (rows, cols) = (*rows as usize, *cols as usize);
+                        let (row0, col0) =
+                            (*shard as usize * n1, *fiber as usize * self.exe.cfg.n2 as usize);
+                        let mut tile = slice_tile(&h_in, f_in, row0, rows, col0, cols);
+                        if !batchnorm {
+                            ops::apply_act(&mut tile, *act);
+                        } // inference BN with unit scale: identity
+                        write_tile(&mut out, f_out, row0, rows, col0, cols, &tile);
+                    }
+                }
+            }
+            outputs.insert(layer.id, out);
+            fdims.insert(layer.id, f_out);
+            last = layer.id;
+        }
+        outputs.remove(&last).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::config::HwConfig;
+    use crate::exec::golden::golden_forward;
+    use crate::graph::{rmat::rmat_edges, CooGraph, GraphMeta, PartitionConfig};
+    use crate::ir::ZooModel;
+
+    fn setup(
+        model: ZooModel,
+        n: u64,
+        e: u64,
+        f: u64,
+    ) -> (Executable, PartitionedGraph, CooGraph, WeightStore) {
+        let meta = GraphMeta::new("t", n, e, f, 4);
+        let g = rmat_edges(meta, Default::default(), 9).gcn_normalized();
+        let hw = HwConfig::functional_tiles();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        let pg = PartitionedGraph::build(&g, cfg);
+        let tiles = pg.tile_counts();
+        let ir = model.build(g.meta.clone());
+        let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        (exe, pg, g, store)
+    }
+
+    fn max_err(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn functional_matches_golden_multi_shard() {
+        // 300 vertices at N1=128 -> 3 shards; exercises cross-subshard
+        // accumulation and fiber splitting (f=64 < 64? use f=32: 1 fiber
+        // at N2=64; use f=96 for 2 fibers).
+        for model in [ZooModel::B1, ZooModel::B7] {
+            let (exe, pg, g, store) = setup(model, 300, 1500, 32);
+            let x = g.random_features(5);
+            let golden = golden_forward(&exe.ir, &g, &store, &x);
+            let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+            let got = fx.run(&x);
+            let err = max_err(&golden, &got);
+            assert!(err < 1e-3, "{}: max err {err}", exe.ir.name);
+        }
+    }
+
+    #[test]
+    fn functional_matches_golden_all_models() {
+        for model in crate::ir::ALL_MODELS {
+            let (exe, pg, g, store) = setup(model, 200, 800, 16);
+            let x = g.random_features(6);
+            let golden = golden_forward(&exe.ir, &g, &store, &x);
+            let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+            let got = fx.run(&x);
+            let err = max_err(&golden, &got);
+            // b6/b8 exponentials amplify error; scale tolerance by output
+            // magnitude.
+            let scale = golden.iter().fold(1f32, |m, v| m.max(v.abs()));
+            assert!(
+                err <= 1e-3 * scale.max(1.0),
+                "{}: max err {err} (scale {scale})",
+                exe.ir.name
+            );
+        }
+    }
+
+    #[test]
+    fn tile_slicing_roundtrip() {
+        let n = 7;
+        let f = 5;
+        let buf: Vec<f32> = (0..n * f).map(|i| i as f32).collect();
+        let tile = slice_tile(&buf, f, 2, 3, 1, 2);
+        assert_eq!(tile.len(), 6);
+        assert_eq!(tile[0], (2 * f + 1) as f32);
+        let mut buf2 = vec![0f32; n * f];
+        write_tile(&mut buf2, f, 2, 3, 1, 2, &tile);
+        assert_eq!(buf2[2 * f + 1], tile[0]);
+        assert_eq!(buf2[4 * f + 2], tile[5]);
+    }
+
+    #[test]
+    fn max_aggregation_cross_shard() {
+        // GraphGym point with Max aggregation over a multi-shard graph:
+        // the touched-row combine logic must match the golden result.
+        use crate::ir::GraphGymConfig;
+        let meta = GraphMeta::new("t", 300, 2000, 16, 4);
+        let g = rmat_edges(meta, Default::default(), 13);
+        let hw = HwConfig::functional_tiles();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        let pg = PartitionedGraph::build(&g, cfg);
+        let ggcfg = GraphGymConfig {
+            aggop: crate::isa::AggOp::Max,
+            n_mp: 2,
+            hidden: 16,
+            ..Default::default()
+        };
+        let ir = ggcfg.build("gg-max", g.meta.clone());
+        let exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 44);
+        let x = g.random_features(7);
+        let golden = golden_forward(&exe.ir, &g, &store, &x);
+        let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let got = fx.run(&x);
+        let scale = golden.iter().fold(1f32, |m, v| m.max(v.abs()));
+        let err = max_err(&golden, &got);
+        assert!(err <= 1e-3 * scale.max(1.0), "max-agg err {err}");
+    }
+}

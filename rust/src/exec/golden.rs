@@ -1,0 +1,250 @@
+//! Whole-graph golden executor: runs the (optimized) IR directly over
+//! full matrices with the reference operators — the ground truth the
+//! partition-centric functional executor must reproduce bit-for-bit
+//! (rust backend) or to float tolerance (PJRT backend).
+
+use super::ops;
+use crate::graph::CooGraph;
+use crate::ir::{LayerType, ModelIr};
+use crate::isa::Activation;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Deterministic per-layer weights for Linear layers: the same store
+/// feeds the golden executor, the functional executor, and (exported as
+/// PJRT literals) the whole-model HLO artifact.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    /// layer id -> (w: f_in x f_out row-major, b: f_out).
+    weights: HashMap<u16, (Vec<f32>, Vec<f32>)>,
+}
+
+impl WeightStore {
+    /// Xavier-ish random weights for every Linear layer of `ir`.
+    pub fn deterministic(ir: &ModelIr, seed: u64) -> WeightStore {
+        let mut weights = HashMap::new();
+        for l in &ir.layers {
+            if l.ltype == LayerType::Linear {
+                let mut rng = Rng::new(seed ^ (l.id as u64) << 17);
+                let scale = (2.0 / (l.f_in + l.f_out) as f32).sqrt();
+                let w: Vec<f32> = (0..(l.f_in * l.f_out) as usize)
+                    .map(|_| rng.normal() * scale)
+                    .collect();
+                // Zero bias: the paper's GNN layers (Eq. 3) are bias-free,
+                // and the Aggregate<->Linear exchange (Theorem 1) is only
+                // semantics-preserving for pure linear maps — A(XW + b)
+                // != (AX)W + b unless b == 0. The bias path itself is
+                // exercised by the kernel-level tests and BatchNorm fold.
+                let b = vec![0f32; l.f_out as usize];
+                weights.insert(l.id, (w, b));
+            }
+        }
+        WeightStore { weights }
+    }
+
+    pub fn get(&self, layer_id: u16) -> (&[f32], &[f32]) {
+        let (w, b) = self.weights.get(&layer_id).expect("no weights for layer");
+        (w, b)
+    }
+
+    /// Total parameter bytes (for the PCIe T_comm accounting).
+    pub fn total_bytes(&self) -> u64 {
+        self.weights
+            .values()
+            .map(|(w, b)| ((w.len() + b.len()) * 4) as u64)
+            .sum()
+    }
+}
+
+/// Execute the IR over the whole graph. Returns the last layer's output
+/// (n_vertices x f_out, row-major).
+///
+/// Semantics per layer type (identical to the tile path):
+/// * Aggregate uses the *current* edge weights — initially the graph's,
+///   updated by any upstream Vector-Inner layer;
+/// * Vector-Inner replaces edge weights with <h_i, h_j> (+ fused act);
+/// * fused activations apply at layer output.
+pub fn golden_forward(ir: &ModelIr, graph: &CooGraph, store: &WeightStore, x: &[f32]) -> Vec<f32> {
+    let n = graph.n();
+    let f0 = ir.graph.feat_len as usize;
+    assert_eq!(x.len(), n * f0, "input features shape");
+    // outputs[layer id] = (buffer, f_out)
+    let mut outputs: HashMap<u16, (Vec<f32>, usize)> = HashMap::new();
+    let mut edge_w: Vec<f32> = graph.w.clone();
+    let mut last_id = 0u16;
+    for l in &ir.layers {
+        let f_in = l.f_in as usize;
+        let input_of = |pid: u16, outputs: &HashMap<u16, (Vec<f32>, usize)>| -> Vec<f32> {
+            match outputs.get(&pid) {
+                Some((buf, _)) => buf.clone(),
+                None => x.to_vec(),
+            }
+        };
+        let h_in = match l.parents.first() {
+            Some(&p) => input_of(p, &outputs),
+            None => x.to_vec(),
+        };
+        let act = if l.act_enabled { l.act } else { Activation::None };
+        let out: Vec<f32> = match l.ltype {
+            LayerType::Aggregate => {
+                let mut o = ops::spdmm(
+                    &graph.src,
+                    &graph.dst,
+                    &edge_w,
+                    &h_in,
+                    f_in,
+                    n,
+                    l.aggop.unwrap(),
+                );
+                ops::apply_act(&mut o, act);
+                o
+            }
+            LayerType::Linear => {
+                let (w, b) = store.get(l.id);
+                ops::gemm_bias_act(&h_in, n, f_in, w, l.f_out as usize, b, act)
+            }
+            LayerType::VectorInner => {
+                let mut ew = ops::sddmm(&graph.src, &graph.dst, &h_in, &h_in, f_in);
+                ops::apply_act(&mut ew, act);
+                edge_w = ew;
+                h_in // features pass through
+            }
+            LayerType::VectorAdd => {
+                let a = h_in;
+                let b = match l.parents.get(1) {
+                    Some(&p) => input_of(p, &outputs),
+                    None => a.clone(),
+                };
+                ops::vecadd(&a, &b, act)
+            }
+            LayerType::Activation => {
+                // An activation directly behind a Vector-Inner layer acts
+                // on the edge weights it produced (GAT's edge-score
+                // nonlinearity), not on the vertex features.
+                let edge_parent = l
+                    .parents
+                    .first()
+                    .map(|&p| {
+                        ir.layers
+                            .iter()
+                            .any(|q| q.id == p && q.ltype == LayerType::VectorInner)
+                    })
+                    .unwrap_or(false);
+                if edge_parent {
+                    ops::apply_act(&mut edge_w, l.act);
+                    h_in
+                } else {
+                    let mut o = h_in;
+                    ops::apply_act(&mut o, l.act);
+                    o
+                }
+            }
+            LayerType::BatchNorm => h_in, // inference BN with unit scale
+        };
+        outputs.insert(l.id, (out, l.f_out as usize));
+        last_id = l.id;
+    }
+    outputs.remove(&last_id).unwrap().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphMeta, rmat::rmat_edges};
+    use crate::ir::ZooModel;
+
+    fn small_graph() -> CooGraph {
+        let meta = GraphMeta::new("t", 64, 256, 16, 4);
+        rmat_edges(meta, Default::default(), 3).gcn_normalized()
+    }
+
+    #[test]
+    fn all_zoo_models_run_and_are_finite() {
+        let g = small_graph();
+        for m in crate::ir::ALL_MODELS {
+            let ir = m.build(g.meta.clone());
+            let store = WeightStore::deterministic(&ir, 42);
+            let x = g.random_features(1);
+            let out = golden_forward(&ir, &g, &store, &x);
+            assert_eq!(out.len(), g.n() * g.meta.n_classes as usize, "{}", m.key());
+            assert!(
+                out.iter().all(|v| v.is_finite()),
+                "{}: non-finite output",
+                m.key()
+            );
+        }
+    }
+
+    #[test]
+    fn weights_deterministic() {
+        let g = small_graph();
+        let ir = ZooModel::B1.build(g.meta.clone());
+        let a = WeightStore::deterministic(&ir, 7);
+        let b = WeightStore::deterministic(&ir, 7);
+        assert_eq!(a.get(2).0, b.get(2).0);
+        let c = WeightStore::deterministic(&ir, 8);
+        assert_ne!(a.get(2).0, c.get(2).0);
+    }
+
+    #[test]
+    fn order_optimization_preserves_numerics() {
+        // The golden executor over the *optimized* IR must match the
+        // unoptimized IR (Theorem 1's numeric content). GCN weights are
+        // linear sums, so LA == AL up to float assoc.
+        let g = small_graph();
+        let ir0 = ZooModel::B1.build(g.meta.clone());
+        let mut ir1 = ir0.clone();
+        crate::compiler::order::optimize(&mut ir1);
+        // Weight ids may sit at different layer ids after the exchange;
+        // map by Linear order instead: rebuild store keyed per IR.
+        let s0 = WeightStore::deterministic(&ir0, 11);
+        // Transfer: i-th Linear of ir0 -> i-th Linear of ir1.
+        let lin0: Vec<u16> = ir0
+            .layers
+            .iter()
+            .filter(|l| l.ltype == LayerType::Linear)
+            .map(|l| l.id)
+            .collect();
+        let lin1: Vec<u16> = ir1
+            .layers
+            .iter()
+            .filter(|l| l.ltype == LayerType::Linear)
+            .map(|l| l.id)
+            .collect();
+        let mut weights = HashMap::new();
+        for (a, b) in lin0.iter().zip(&lin1) {
+            let (w, bias) = s0.get(*a);
+            weights.insert(*b, (w.to_vec(), bias.to_vec()));
+        }
+        let s1 = WeightStore { weights };
+        let x = g.random_features(2);
+        let y0 = golden_forward(&ir0, &g, &s0, &x);
+        let y1 = golden_forward(&ir1, &g, &s1, &x);
+        let scale = y0.iter().fold(1f32, |m, v| m.max(v.abs()));
+        let max_err = y0
+            .iter()
+            .zip(&y1)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            max_err < 1e-3 * scale,
+            "order exchange changed numerics: {max_err} (scale {scale})"
+        );
+    }
+
+    #[test]
+    fn fusion_preserves_numerics() {
+        let g = small_graph();
+        let ir0 = ZooModel::B6.build(g.meta.clone());
+        let mut ir1 = ir0.clone();
+        crate::compiler::fusion::fuse(&mut ir1);
+        let s = WeightStore::deterministic(&ir0, 21);
+        // Fusion never removes Linear layers, so ids persist.
+        let x = g.random_features(3);
+        let y0 = golden_forward(&ir0, &g, &s, &x);
+        let y1 = golden_forward(&ir1, &g, &s, &x);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Functional execution: real GNN numerics for the compiled program.
+//!
+//! * [`ops`] — dense/sparse reference operators on row-major `f32`
+//!   buffers (the rust analogue of `python/compile/kernels/ref.py`),
+//! * [`golden`] — whole-graph executor over the optimized IR: the ground
+//!   truth every other execution path must match,
+//! * [`functional`] — the partition-centric executor: runs the compiler's
+//!   Tiling Blocks one by one through a [`functional::TileBackend`]
+//!   (pure-rust ops, or the PJRT runtime executing the AOT HLO kernels),
+//!   proving that ISA -> schedule -> kernels compose functionally.
+
+pub mod functional;
+pub mod golden;
+pub mod ops;
+
+pub use functional::{FunctionalExecutor, RustBackend, TileBackend};
+pub use golden::{golden_forward, WeightStore};

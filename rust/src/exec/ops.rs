@@ -1,0 +1,267 @@
+//! Reference operators on row-major `f32` buffers — the rust analogue of
+//! the pure-jnp oracle (`python/compile/kernels/ref.py`). These back the
+//! golden executor, the `RustBackend` tile executor, and the naive-CPU
+//! baseline measurements.
+
+use crate::isa::{Activation, AggOp};
+
+/// out(m x n) = h(m x k) @ w(k x n) + b, then activation.
+pub fn gemm_bias_act(
+    h: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    b: &[f32],
+    act: Activation,
+) -> Vec<f32> {
+    assert_eq!(h.len(), m * k, "h shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(b.len(), n, "bias shape");
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let hrow = &h[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.copy_from_slice(b);
+        for (kk, &hv) in hrow.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += hv * wv;
+            }
+        }
+    }
+    apply_act(&mut out, act);
+    out
+}
+
+/// Edge-centric SpDMM: out(n_out x f) = AggOp over edges (src, dst, w)
+/// of w * h[src]; `src`/`dst` index into `h` rows / `out` rows.
+pub fn spdmm(
+    src: &[u32],
+    dst: &[u32],
+    ew: &[f32],
+    h: &[f32],
+    f: usize,
+    n_out: usize,
+    aggop: AggOp,
+) -> Vec<f32> {
+    let init = match aggop {
+        AggOp::Sum | AggOp::Mean => 0.0f32,
+        AggOp::Max => f32::NEG_INFINITY,
+        AggOp::Min => f32::INFINITY,
+    };
+    let mut out = vec![init; n_out * f];
+    for ((&s, &d), &w) in src.iter().zip(dst).zip(ew) {
+        let hrow = &h[s as usize * f..(s as usize + 1) * f];
+        let orow = &mut out[d as usize * f..(d as usize + 1) * f];
+        match aggop {
+            AggOp::Sum | AggOp::Mean => {
+                for (o, &hv) in orow.iter_mut().zip(hrow) {
+                    *o += w * hv;
+                }
+            }
+            AggOp::Max => {
+                for (o, &hv) in orow.iter_mut().zip(hrow) {
+                    *o = o.max(w * hv);
+                }
+            }
+            AggOp::Min => {
+                for (o, &hv) in orow.iter_mut().zip(hrow) {
+                    *o = o.min(w * hv);
+                }
+            }
+        }
+    }
+    // Untouched vertices produce 0 (matching the kernel/ref convention).
+    if init != 0.0 {
+        for o in out.iter_mut() {
+            if !o.is_finite() {
+                *o = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Combine two partial aggregation tiles in place (cross-subshard).
+pub fn combine_partials(acc: &mut [f32], part: &[f32], aggop: AggOp) {
+    assert_eq!(acc.len(), part.len());
+    match aggop {
+        AggOp::Sum | AggOp::Mean => {
+            for (a, &p) in acc.iter_mut().zip(part) {
+                *a += p;
+            }
+        }
+        AggOp::Max => {
+            for (a, &p) in acc.iter_mut().zip(part) {
+                *a = a.max(p);
+            }
+        }
+        AggOp::Min => {
+            for (a, &p) in acc.iter_mut().zip(part) {
+                *a = a.min(p);
+            }
+        }
+    }
+}
+
+/// SDDMM: per-edge inner products of rows of `hl` and `hr`.
+pub fn sddmm(src: &[u32], dst: &[u32], hl: &[f32], hr: &[f32], f: usize) -> Vec<f32> {
+    src.iter()
+        .zip(dst)
+        .map(|(&s, &d)| {
+            let a = &hl[s as usize * f..(s as usize + 1) * f];
+            let b = &hr[d as usize * f..(d as usize + 1) * f];
+            a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+        })
+        .collect()
+}
+
+/// Elementwise a + b with fused activation.
+pub fn vecadd(a: &[f32], b: &[f32], act: Activation) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    let mut out: Vec<f32> = a.iter().zip(b).map(|(&x, &y)| x + y).collect();
+    apply_act(&mut out, act);
+    out
+}
+
+/// In-place activation (matches `ref.py::apply_act_ref` semantics).
+pub fn apply_act(x: &mut [f32], act: Activation) {
+    match act {
+        Activation::None => {}
+        Activation::Relu => x.iter_mut().for_each(|v| *v = v.max(0.0)),
+        Activation::LRelu => x
+            .iter_mut()
+            .for_each(|v| *v = if *v > 0.0 { *v } else { 0.01 * *v }),
+        Activation::PRelu => x
+            .iter_mut()
+            .for_each(|v| *v = if *v > 0.0 { *v } else { 0.25 * *v }),
+        Activation::Swish => x.iter_mut().for_each(|v| {
+            *v = *v / (1.0 + (-*v).exp());
+        }),
+        Activation::Exp => x.iter_mut().for_each(|v| *v = v.exp()),
+        Activation::Sigmoid => x.iter_mut().for_each(|v| *v = 1.0 / (1.0 + (-*v).exp())),
+        Activation::Elu => x
+            .iter_mut()
+            .for_each(|v| *v = if *v > 0.0 { *v } else { v.exp_m1() }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gemm_identity() {
+        // h @ I == h.
+        let m = 3;
+        let k = 4;
+        let h: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let mut w = vec![0f32; k * k];
+        for i in 0..k {
+            w[i * k + i] = 1.0;
+        }
+        let out = gemm_bias_act(&h, m, k, &w, k, &vec![0.0; k], Activation::None);
+        assert_eq!(out, h);
+    }
+
+    #[test]
+    fn gemm_bias_and_relu() {
+        let h = vec![1.0, -1.0];
+        let w = vec![2.0, -2.0]; // 2x1... wait: k=2, n=1
+        let out = gemm_bias_act(&h, 1, 2, &w, 1, &[-1.0], Activation::Relu);
+        // 1*2 + (-1)(-2) - 1 = 3 -> relu 3.
+        assert_eq!(out, vec![3.0]);
+        let out2 = gemm_bias_act(&h, 1, 2, &w, 1, &[-5.0], Activation::Relu);
+        assert_eq!(out2, vec![0.0]);
+    }
+
+    #[test]
+    fn spdmm_sum_ring() {
+        // Ring 0->1->2->3->0, unit weights, scalar features = id.
+        let src = [0u32, 1, 2, 3];
+        let dst = [1u32, 2, 3, 0];
+        let ew = [1f32; 4];
+        let h = [10f32, 11., 12., 13.];
+        let out = spdmm(&src, &dst, &ew, &h, 1, 4, AggOp::Sum);
+        assert_eq!(out, vec![13.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn spdmm_max_untouched_is_zero() {
+        let src = [0u32];
+        let dst = [1u32];
+        let out = spdmm(&src, &dst, &[2.0], &[3.0, 4.0], 1, 3, AggOp::Max);
+        assert_eq!(out, vec![0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn sddmm_inner_products() {
+        let h = [1f32, 2., 3., 4.]; // 2 rows x 2
+        let out = sddmm(&[0, 1], &[1, 1], &h, &h, 2);
+        assert_eq!(out, vec![1. * 3. + 2. * 4., 3. * 3. + 4. * 4.]);
+    }
+
+    #[test]
+    fn vecadd_relu() {
+        let out = vecadd(&[1.0, -3.0], &[1.0, 1.0], Activation::Relu);
+        assert_eq!(out, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn combine_partials_matches_single_pass_sum() {
+        // Sum combine over zero-filled partials is exact for any data.
+        let mut rng = Rng::new(5);
+        let n = 32;
+        let f = 8;
+        let e = 200;
+        let src: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let dst: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let ew: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+        let h: Vec<f32> = (0..n * f).map(|_| rng.normal()).collect();
+        let whole = spdmm(&src, &dst, &ew, &h, f, n, AggOp::Sum);
+        let mid = e / 2;
+        let mut acc = spdmm(&src[..mid], &dst[..mid], &ew[..mid], &h, f, n, AggOp::Sum);
+        let part = spdmm(&src[mid..], &dst[mid..], &ew[mid..], &h, f, n, AggOp::Sum);
+        combine_partials(&mut acc, &part, AggOp::Sum);
+        for (a, w) in acc.iter().zip(&whole) {
+            assert!((a - w).abs() < 1e-4, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn combine_partials_max_nonnegative() {
+        // Max combine over zero-filled partials is exact when every
+        // message is >= 0 (the touched-row masking for the general case
+        // lives in exec::functional and is tested there).
+        let mut rng = Rng::new(6);
+        let n = 16;
+        let f = 4;
+        let e = 120;
+        let src: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let dst: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let ew: Vec<f32> = (0..e).map(|_| rng.f32()).collect();
+        let h: Vec<f32> = (0..n * f).map(|_| rng.f32()).collect();
+        let whole = spdmm(&src, &dst, &ew, &h, f, n, AggOp::Max);
+        let mid = e / 2;
+        let mut acc = spdmm(&src[..mid], &dst[..mid], &ew[..mid], &h, f, n, AggOp::Max);
+        let part = spdmm(&src[mid..], &dst[mid..], &ew[mid..], &h, f, n, AggOp::Max);
+        combine_partials(&mut acc, &part, AggOp::Max);
+        for (a, w) in acc.iter().zip(&whole) {
+            assert!((a - w).abs() < 1e-5, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn activations_pointwise() {
+        let mut x = vec![-1.0f32, 0.0, 2.0];
+        apply_act(&mut x, Activation::Elu);
+        assert!((x[0] - (-0.6321206)).abs() < 1e-5);
+        assert_eq!(x[1], 0.0);
+        assert_eq!(x[2], 2.0);
+    }
+}

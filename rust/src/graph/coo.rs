@@ -1,0 +1,189 @@
+//! COO graph representation (paper Sec. 5.1): each edge is the 3-tuple
+//! (src, dst, weight). Feature matrix H is stored row-major per vertex.
+
+use crate::util::Rng;
+
+/// Metadata of an input graph instance (what the paper calls "graph meta
+/// data": the compiler only needs sizes, the functional path needs edges).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphMeta {
+    pub name: String,
+    pub n_vertices: u64,
+    pub n_edges: u64,
+    /// Input feature length (f of layer 0).
+    pub feat_len: u64,
+    /// Output classes of the task.
+    pub n_classes: u64,
+}
+
+impl GraphMeta {
+    pub fn new(name: &str, n_vertices: u64, n_edges: u64, feat_len: u64, n_classes: u64) -> Self {
+        GraphMeta {
+            name: name.to_string(),
+            n_vertices,
+            n_edges,
+            feat_len,
+            n_classes,
+        }
+    }
+
+    /// Bytes of the input: features (f32) + edges (COO 3 x u32), the
+    /// quantity moved over PCIe for T_comm and reported in Table 8 row 9.
+    pub fn input_bytes(&self) -> u64 {
+        self.n_vertices * self.feat_len * 4 + self.n_edges * 12
+    }
+}
+
+/// A materialized COO graph. `dst` is the aggregating vertex: edge e =
+/// (src, dst, w) contributes w * h_src to vertex dst (SpDMM row = dst).
+#[derive(Clone, Debug)]
+pub struct CooGraph {
+    pub meta: GraphMeta,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub w: Vec<f32>,
+}
+
+impl CooGraph {
+    pub fn new(meta: GraphMeta, src: Vec<u32>, dst: Vec<u32>, w: Vec<f32>) -> Self {
+        assert_eq!(src.len(), dst.len());
+        assert_eq!(src.len(), w.len());
+        assert_eq!(src.len() as u64, meta.n_edges);
+        CooGraph { meta, src, dst, w }
+    }
+
+    pub fn n(&self) -> usize {
+        self.meta.n_vertices as usize
+    }
+
+    pub fn m(&self) -> usize {
+        self.src.len()
+    }
+
+    /// In-degree per vertex (number of incoming edges at each dst).
+    pub fn in_degree(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n()];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Out-degree per vertex.
+    pub fn out_degree(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n()];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// Replace edge weights with GCN symmetric normalization including
+    /// self-loops: alpha_ji = 1/sqrt(D(j) D(i)) (paper Eq. 3). Appends
+    /// self-loop edges; updates n_edges.
+    pub fn gcn_normalized(mut self) -> CooGraph {
+        let n = self.n();
+        // Degrees counting the self loop.
+        let mut deg = vec![1u32; n];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        for i in 0..self.m() {
+            let (s, d) = (self.src[i] as usize, self.dst[i] as usize);
+            self.w[i] = 1.0 / ((deg[s] as f32).sqrt() * (deg[d] as f32).sqrt());
+        }
+        for v in 0..n as u32 {
+            self.src.push(v);
+            self.dst.push(v);
+            self.w.push(1.0 / deg[v as usize] as f32);
+        }
+        self.meta.n_edges = self.src.len() as u64;
+        self
+    }
+
+    /// Mean-aggregation weights: w_e = 1/in_degree(dst) so a Sum
+    /// aggregation computes the mean (keeps the operator linear).
+    pub fn mean_normalized(mut self) -> CooGraph {
+        let deg = self.in_degree();
+        for i in 0..self.m() {
+            let d = deg[self.dst[i] as usize].max(1);
+            self.w[i] = 1.0 / d as f32;
+        }
+        self
+    }
+
+    /// Deterministic random features (layer-0 H), row-major n x f.
+    pub fn random_features(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0xFEA7);
+        let len = self.n() * self.meta.feat_len as usize;
+        (0..len).map(|_| rng.normal() * 0.5).collect()
+    }
+
+    /// A ring graph: vertex i -> (i+1) % n. Deterministic test fixture.
+    pub fn ring(n: u64, feat_len: u64, n_classes: u64) -> CooGraph {
+        let meta = GraphMeta::new("ring", n, n, feat_len, n_classes);
+        let src: Vec<u32> = (0..n as u32).collect();
+        let dst: Vec<u32> = (0..n as u32).map(|i| (i + 1) % n as u32).collect();
+        let w = vec![1.0; n as usize];
+        CooGraph::new(meta, src, dst, w)
+    }
+
+    /// A star graph: all vertices point at vertex 0 (worst-case RAW
+    /// conflicts — every edge lands on one Feature Buffer bank).
+    pub fn star(n: u64, feat_len: u64, n_classes: u64) -> CooGraph {
+        let meta = GraphMeta::new("star", n, n - 1, feat_len, n_classes);
+        let src: Vec<u32> = (1..n as u32).collect();
+        let dst = vec![0u32; (n - 1) as usize];
+        let w = vec![1.0; (n - 1) as usize];
+        CooGraph::new(meta, src, dst, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_degrees() {
+        let g = CooGraph::ring(8, 4, 2);
+        assert_eq!(g.in_degree(), vec![1; 8]);
+        assert_eq!(g.out_degree(), vec![1; 8]);
+    }
+
+    #[test]
+    fn star_degrees() {
+        let g = CooGraph::star(5, 4, 2);
+        assert_eq!(g.in_degree(), vec![4, 0, 0, 0, 0]);
+        assert_eq!(g.out_degree(), vec![0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn gcn_normalization_adds_self_loops() {
+        let g = CooGraph::ring(4, 4, 2).gcn_normalized();
+        assert_eq!(g.m(), 8); // 4 edges + 4 self loops
+        // ring in-degree incl. self loop = 2 for all; alpha = 1/2.
+        for i in 0..4 {
+            assert!((g.w[i] - 0.5).abs() < 1e-6, "w[{i}]={}", g.w[i]);
+        }
+    }
+
+    #[test]
+    fn mean_normalization_sums_to_one() {
+        let g = CooGraph::star(6, 4, 2).mean_normalized();
+        let total: f32 = g.w.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "total {total}");
+    }
+
+    #[test]
+    fn input_bytes_formula() {
+        let meta = GraphMeta::new("x", 100, 1000, 32, 4);
+        assert_eq!(meta.input_bytes(), 100 * 32 * 4 + 1000 * 12);
+    }
+
+    #[test]
+    fn random_features_deterministic() {
+        let g = CooGraph::ring(8, 4, 2);
+        assert_eq!(g.random_features(1), g.random_features(1));
+        assert_ne!(g.random_features(1), g.random_features(2));
+    }
+}

@@ -1,0 +1,226 @@
+//! Dataset registry: the seven benchmark graphs of the paper (Table 4),
+//! plus small fixtures. Real datasets are substituted with deterministic
+//! R-MAT synthetics at the exact |V| / |E| / f / classes (DESIGN.md
+//! "Substitutions"): latency depends on sizes and skew, not on the actual
+//! feature values.
+
+use super::coo::{CooGraph, GraphMeta};
+use super::partition::TileCounts;
+use super::rmat::{rmat_edges, rmat_tile_counts, RmatParams};
+
+/// One Table-4 dataset row.
+#[derive(Clone, Copy, Debug)]
+pub struct Dataset {
+    pub key: &'static str,
+    pub name: &'static str,
+    pub n_vertices: u64,
+    pub n_edges: u64,
+    pub feat_len: u64,
+    pub n_classes: u64,
+    /// Community-locality of the synthetic stand-in (fraction of edges
+    /// kept within an N1-sized block; see `rmat::RmatParams::locality`).
+    /// Citation/co-purchase graphs are strongly clustered; Reddit's
+    /// dense social graph is not.
+    pub locality: f64,
+}
+
+impl Dataset {
+    pub fn meta(&self) -> GraphMeta {
+        GraphMeta::new(
+            self.key,
+            self.n_vertices,
+            self.n_edges,
+            self.feat_len,
+            self.n_classes,
+        )
+    }
+
+    /// Generator parameters for the synthetic stand-in.
+    pub fn params(&self) -> RmatParams {
+        RmatParams::with_locality(self.locality)
+    }
+
+    /// Deterministic seed per dataset (stable across runs/binaries).
+    fn seed(&self) -> u64 {
+        self.key
+            .bytes()
+            .fold(0xDA7A5EEDu64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64))
+    }
+
+    /// Materialize the synthetic stand-in (small datasets only; guards
+    /// against accidentally materializing Reddit/Amazon-scale graphs).
+    pub fn materialize(&self) -> CooGraph {
+        assert!(
+            self.n_edges <= 10_000_000,
+            "{}: {} edges — use tile_counts() for large graphs",
+            self.key,
+            self.n_edges
+        );
+        rmat_edges(self.meta(), self.params(), self.seed())
+    }
+
+    /// Stream per-subshard edge counts (works at any scale).
+    pub fn tile_counts(&self, n1: u64) -> TileCounts {
+        rmat_tile_counts(&self.meta(), self.params(), self.seed(), n1)
+    }
+
+    /// Bulk-generate the raw (src, dst) edge arrays at any scale (the
+    /// synthetic stand-in for "loading the dataset"; ~8 B/edge). The
+    /// harness generates once per dataset and times only the O(|E|)
+    /// partitioning pass over these arrays, matching what the paper's
+    /// T_LoC measures.
+    pub fn edge_arrays(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut rng = crate::util::Rng::new(self.seed());
+        self.params().sample_edges(&mut rng, self.n_vertices, self.n_edges as usize)
+    }
+
+    /// A proportionally scaled-down copy (same avg degree & feature len)
+    /// for fast CI runs: |V| and |E| divided by `factor` (min 64 verts).
+    pub fn scaled(&self, factor: u64) -> Dataset {
+        Dataset {
+            n_vertices: (self.n_vertices / factor).max(64),
+            n_edges: (self.n_edges / factor).max(128),
+            ..*self
+        }
+    }
+}
+
+/// Table 4 of the paper.
+pub const CITESEER: Dataset = Dataset {
+    key: "CI",
+    name: "Citeseer",
+    n_vertices: 3327,
+    n_edges: 4732,
+    feat_len: 3703,
+    n_classes: 6,
+    locality: 0.5,
+};
+
+pub const CORA: Dataset = Dataset {
+    key: "CO",
+    name: "Cora",
+    n_vertices: 2708,
+    n_edges: 5429,
+    feat_len: 1433,
+    n_classes: 7,
+    locality: 0.5,
+};
+
+pub const PUBMED: Dataset = Dataset {
+    key: "PU",
+    name: "Pubmed",
+    n_vertices: 19717,
+    n_edges: 44338,
+    feat_len: 500,
+    n_classes: 3,
+    locality: 0.5,
+};
+
+pub const FLICKR: Dataset = Dataset {
+    key: "FL",
+    name: "Flickr",
+    n_vertices: 89_250,
+    n_edges: 899_756,
+    feat_len: 500,
+    n_classes: 7,
+    locality: 0.3,
+};
+
+pub const REDDIT: Dataset = Dataset {
+    key: "RE",
+    name: "Reddit",
+    n_vertices: 232_965,
+    n_edges: 116_069_919,
+    feat_len: 602,
+    n_classes: 41,
+    locality: 0.2,
+};
+
+pub const YELP: Dataset = Dataset {
+    key: "YE",
+    name: "Yelp",
+    n_vertices: 716_847,
+    n_edges: 6_977_410,
+    feat_len: 300,
+    n_classes: 100,
+    locality: 0.7,
+};
+
+pub const AMAZON_PRODUCTS: Dataset = Dataset {
+    key: "AP",
+    name: "Amazon-Products",
+    n_vertices: 1_569_960,
+    n_edges: 264_339_468,
+    feat_len: 200,
+    n_classes: 107,
+    locality: 0.8,
+};
+
+pub const ALL_DATASETS: [Dataset; 7] = [
+    CITESEER, CORA, PUBMED, FLICKR, REDDIT, YELP, AMAZON_PRODUCTS,
+];
+
+/// Look up a dataset by its two-letter key (CI, CO, PU, FL, RE, YE, AP).
+pub fn dataset(key: &str) -> Option<Dataset> {
+    ALL_DATASETS.iter().find(|d| d.key.eq_ignore_ascii_case(key)).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table4() {
+        assert_eq!(ALL_DATASETS.len(), 7);
+        assert_eq!(dataset("RE").unwrap().n_edges, 116_069_919);
+        assert_eq!(dataset("co").unwrap().feat_len, 1433);
+        assert!(dataset("XX").is_none());
+    }
+
+    #[test]
+    fn small_datasets_materialize() {
+        let g = CORA.materialize();
+        assert_eq!(g.meta.n_vertices, 2708);
+        assert_eq!(g.m(), 5429);
+    }
+
+    #[test]
+    #[should_panic(expected = "use tile_counts")]
+    fn large_dataset_materialize_guard() {
+        let _ = REDDIT.materialize();
+    }
+
+    #[test]
+    fn scaled_preserves_shape() {
+        let s = REDDIT.scaled(1000);
+        assert_eq!(s.n_vertices, 232);
+        assert_eq!(s.feat_len, 602);
+        let g = rmat_edges(s.meta(), RmatParams::default(), 1);
+        assert_eq!(g.m() as u64, s.n_edges);
+    }
+
+    #[test]
+    fn tile_counts_scale_free() {
+        // Flickr at N1 = 16384: 6 shards, total edges preserved.
+        let tc = FLICKR.tile_counts(16384);
+        assert_eq!(tc.shards, 6);
+        assert_eq!(tc.total_edges(), FLICKR.n_edges);
+    }
+
+    #[test]
+    fn dataset_seeds_differ() {
+        assert_ne!(CORA.seed(), CITESEER.seed());
+    }
+
+    #[test]
+    fn input_sizes_order_of_table8_row9() {
+        // Table 8 row 9 reports input sizes in MB: CI 47, CO 12.6, PU 38,
+        // FL 181, RE 1863, YE 900, AP 4223. Our input_bytes() should land
+        // in the same ballpark (the paper stores extra indices/padding).
+        let mb = |d: &Dataset| d.meta().input_bytes() as f64 / 1e6;
+        assert!((40.0..60.0).contains(&mb(&CITESEER)), "{}", mb(&CITESEER));
+        assert!((10.0..20.0).contains(&mb(&CORA)));
+        assert!((1300.0..2000.0).contains(&mb(&REDDIT)));
+        assert!((3000.0..4500.0).contains(&mb(&AMAZON_PRODUCTS)));
+    }
+}

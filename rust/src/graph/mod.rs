@@ -1,0 +1,14 @@
+//! Graph substrate: COO storage (paper Sec. 5.1), synthetic generators,
+//! the Table-4 dataset registry, and the Fiber-Shard partitioner
+//! (Sec. 6.5) shared by the compiler, the simulator and the functional
+//! executor.
+
+pub mod coo;
+pub mod datasets;
+pub mod partition;
+pub mod rmat;
+
+pub use coo::{CooGraph, GraphMeta};
+pub use datasets::{dataset, Dataset, ALL_DATASETS};
+pub use partition::{PartitionConfig, PartitionedGraph, TileCounts};
+pub use rmat::{rmat_edges, rmat_tile_counts, RmatParams};

@@ -1,0 +1,249 @@
+//! Fiber-Shard data partitioning (paper Sec. 6.5, Fig. 8).
+//!
+//! * The adjacency matrix A (|V| x |V|, row = destination) is split into
+//!   **shards** of N1 rows; each shard splits into **subshards** of N1
+//!   columns. Subshard edges are stored contiguously (DDR mapping).
+//! * The feature matrix H (|V| x f) is split into **fibers** of N2
+//!   columns; each fiber splits into **subfibers** of N1 rows.
+//!
+//! The same (N1, N2) applies to every layer, so a layer's outputs are
+//! already partitioned for the next layer — no re-partitioning between
+//! layers (the property the partition-centric execution scheme needs).
+
+use super::coo::CooGraph;
+
+/// Partitioning configuration chosen by the compiler from the HwConfig
+/// buffer dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionConfig {
+    /// Subshard/subfiber height (rows) and subshard width (cols).
+    pub n1: u64,
+    /// Fiber width (feature columns).
+    pub n2: u64,
+}
+
+impl PartitionConfig {
+    pub fn shards(&self, n_vertices: u64) -> u64 {
+        n_vertices.div_ceil(self.n1)
+    }
+
+    pub fn fibers(&self, feat_len: u64) -> u64 {
+        feat_len.div_ceil(self.n2)
+    }
+}
+
+/// Per-subshard edge counts — all the compiler and the cycle model need
+/// for large graphs. counts[i * shards + j] = |edges(dst in shard i,
+/// src in subshard j)|.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileCounts {
+    pub n1: u64,
+    pub shards: usize,
+    pub counts: Vec<u64>,
+}
+
+impl TileCounts {
+    pub fn total_edges(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    #[inline]
+    pub fn get(&self, shard: usize, subshard: usize) -> u64 {
+        self.counts[shard * self.shards + subshard]
+    }
+
+    /// Edge count of a whole shard (row of subshards).
+    pub fn shard_edges(&self, shard: usize) -> u64 {
+        self.counts[shard * self.shards..(shard + 1) * self.shards]
+            .iter()
+            .sum()
+    }
+
+    /// Build from a materialized COO graph.
+    pub fn from_coo(g: &CooGraph, n1: u64) -> TileCounts {
+        TileCounts::from_edges(&g.src, &g.dst, g.meta.n_vertices, n1)
+    }
+
+    /// Histogram raw edge arrays into subshard counts — the O(|E|)
+    /// partitioning pass whose wall-clock is the dominant T_LoC term.
+    /// N1 is a buffer dimension (power of two), so the tile index is a
+    /// shift, not a division (~5x on the 100M+-edge graphs).
+    pub fn from_edges(src: &[u32], dst: &[u32], n_vertices: u64, n1: u64) -> TileCounts {
+        let shards = n_vertices.div_ceil(n1) as usize;
+        let mut counts = vec![0u64; shards * shards];
+        if n1.is_power_of_two() {
+            let sh = n1.trailing_zeros();
+            for (&s, &d) in src.iter().zip(dst) {
+                counts[((d >> sh) as usize) * shards + (s >> sh) as usize] += 1;
+            }
+        } else {
+            for (&s, &d) in src.iter().zip(dst) {
+                counts[(d as u64 / n1) as usize * shards + (s as u64 / n1) as usize] += 1;
+            }
+        }
+        TileCounts { n1, shards, counts }
+    }
+}
+
+/// A materialized, partition-ordered graph: edges grouped by (shard,
+/// subshard) with CSR-like offsets, exactly the DDR layout of Fig. 8.
+#[derive(Clone, Debug)]
+pub struct PartitionedGraph {
+    pub cfg: PartitionConfig,
+    pub n_vertices: u64,
+    pub shards: usize,
+    /// offsets[i * shards + j .. +1] index into src/dst/w for subshard
+    /// (i, j); length shards*shards + 1.
+    pub offsets: Vec<usize>,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub w: Vec<f32>,
+}
+
+impl PartitionedGraph {
+    /// Counting-sort edges into subshard order. O(|E| + shards^2).
+    pub fn build(g: &CooGraph, cfg: PartitionConfig) -> PartitionedGraph {
+        let n1 = cfg.n1;
+        let shards = g.meta.n_vertices.div_ceil(n1) as usize;
+        let tiles = shards * shards;
+        let mut counts = vec![0usize; tiles];
+        let tile_of = |s: u32, d: u32| -> usize {
+            (d as u64 / n1) as usize * shards + (s as u64 / n1) as usize
+        };
+        for i in 0..g.m() {
+            counts[tile_of(g.src[i], g.dst[i])] += 1;
+        }
+        let mut offsets = vec![0usize; tiles + 1];
+        for t in 0..tiles {
+            offsets[t + 1] = offsets[t] + counts[t];
+        }
+        let m = g.m();
+        let mut src = vec![0u32; m];
+        let mut dst = vec![0u32; m];
+        let mut w = vec![0f32; m];
+        let mut cursor = offsets.clone();
+        for i in 0..m {
+            let t = tile_of(g.src[i], g.dst[i]);
+            let at = cursor[t];
+            src[at] = g.src[i];
+            dst[at] = g.dst[i];
+            w[at] = g.w[i];
+            cursor[t] += 1;
+        }
+        PartitionedGraph {
+            cfg,
+            n_vertices: g.meta.n_vertices,
+            shards,
+            offsets,
+            src,
+            dst,
+            w,
+        }
+    }
+
+    /// Edge index range of subshard (i, j).
+    #[inline]
+    pub fn subshard(&self, i: usize, j: usize) -> std::ops::Range<usize> {
+        let t = i * self.shards + j;
+        self.offsets[t]..self.offsets[t + 1]
+    }
+
+    pub fn tile_counts(&self) -> TileCounts {
+        let counts = (0..self.shards * self.shards)
+            .map(|t| (self.offsets[t + 1] - self.offsets[t]) as u64)
+            .collect();
+        TileCounts { n1: self.cfg.n1, shards: self.shards, counts }
+    }
+
+    /// Check the Fiber-Shard invariants: every edge lands in exactly one
+    /// subshard and its indices fall inside that subshard's row/col range.
+    pub fn validate(&self) -> Result<(), String> {
+        let n1 = self.cfg.n1;
+        if *self.offsets.last().unwrap() != self.src.len() {
+            return Err("offsets do not cover all edges".into());
+        }
+        for i in 0..self.shards {
+            for j in 0..self.shards {
+                for e in self.subshard(i, j) {
+                    let (s, d) = (self.src[e] as u64, self.dst[e] as u64);
+                    if d / n1 != i as u64 || s / n1 != j as u64 {
+                        return Err(format!(
+                            "edge {e} ({s}->{d}) misplaced in subshard ({i},{j})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::GraphMeta;
+    use crate::graph::rmat::{rmat_edges, RmatParams};
+    use crate::util::forall;
+
+    #[test]
+    fn ring_partition() {
+        let g = CooGraph::ring(8, 4, 2);
+        let pg = PartitionedGraph::build(&g, PartitionConfig { n1: 4, n2: 4 });
+        pg.validate().unwrap();
+        assert_eq!(pg.shards, 2);
+        // Edge 3->0 and 7->4... wrap edges: (3,0) wraps? dst=(i+1)%8.
+        // Edges: (0,1)(1,2)(2,3) in (0,0); (3,4) in (1,0); (4,5)(5,6)(6,7)
+        // in (1,1); (7,0) in (0,1).
+        assert_eq!(pg.subshard(0, 0).len(), 3);
+        assert_eq!(pg.subshard(1, 0).len(), 1);
+        assert_eq!(pg.subshard(1, 1).len(), 3);
+        assert_eq!(pg.subshard(0, 1).len(), 1);
+    }
+
+    #[test]
+    fn partition_preserves_multiset() {
+        let meta = GraphMeta::new("t", 200, 2000, 8, 2);
+        let g = rmat_edges(meta, RmatParams::default(), 3);
+        let pg = PartitionedGraph::build(&g, PartitionConfig { n1: 64, n2: 8 });
+        pg.validate().unwrap();
+        let mut orig: Vec<(u32, u32)> =
+            g.src.iter().zip(&g.dst).map(|(&s, &d)| (s, d)).collect();
+        let mut part: Vec<(u32, u32)> =
+            pg.src.iter().zip(&pg.dst).map(|(&s, &d)| (s, d)).collect();
+        orig.sort_unstable();
+        part.sort_unstable();
+        assert_eq!(orig, part);
+    }
+
+    #[test]
+    fn tile_counts_agree_with_from_coo() {
+        let meta = GraphMeta::new("t", 300, 3000, 8, 2);
+        let g = rmat_edges(meta, RmatParams::default(), 5);
+        let pg = PartitionedGraph::build(&g, PartitionConfig { n1: 128, n2: 8 });
+        assert_eq!(pg.tile_counts(), TileCounts::from_coo(&g, 128));
+    }
+
+    #[test]
+    fn prop_partition_covers_every_edge_once() {
+        forall("fiber-shard-coverage", 25, |rng| {
+            let n = rng.range(2, 500);
+            let m = rng.range(1, 4000);
+            let n1 = 1 << rng.range(2, 8);
+            let meta = GraphMeta::new("p", n, m, 8, 2);
+            let g = rmat_edges(meta, RmatParams::default(), rng.next_u64());
+            let pg = PartitionedGraph::build(&g, PartitionConfig { n1, n2: 8 });
+            pg.validate().map_err(|e| e)?;
+            let covered: usize =
+                (0..pg.shards * pg.shards).map(|t| pg.offsets[t + 1] - pg.offsets[t]).sum();
+            crate::prop_assert!(covered == g.m(), "covered {covered} != {}", g.m());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partition_config_helpers() {
+        let cfg = PartitionConfig { n1: 16384, n2: 16 };
+        assert_eq!(cfg.shards(232_965), 15); // Reddit
+        assert_eq!(cfg.fibers(602), 38);
+    }
+}

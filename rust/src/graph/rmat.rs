@@ -1,0 +1,229 @@
+//! R-MAT synthetic graph generator (Chakrabarti et al.): power-law degree
+//! skew matching real-world graphs. Used to synthesize stand-ins for the
+//! Table-4 datasets (see DESIGN.md "Substitutions") at the exact |V|/|E|.
+//!
+//! Two paths:
+//! * [`rmat_edges`] materializes edges (small graphs, functional tests);
+//! * [`rmat_tile_counts`] streams edges directly into per-subshard
+//!   histograms without storing them — Reddit (116M) and Amazon-Products
+//!   (264M) never need materializing for compilation or simulation.
+
+use super::coo::{CooGraph, GraphMeta};
+use super::partition::TileCounts;
+use crate::util::Rng;
+
+/// R-MAT quadrant probabilities plus a community-locality term.
+///
+/// Real benchmark graphs (Yelp, Amazon-Products especially) have strong
+/// community structure: most edges stay inside a vertex neighborhood the
+/// size of an on-chip partition, which is precisely what determines
+/// subshard occupancy. Pure R-MAT spreads edges too uniformly across
+/// subshards, inflating cross-tile traffic. `locality` is the fraction
+/// of edges redirected to land within the source's `community`-sized
+/// block (see DESIGN.md "Substitutions").
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Probability an edge stays within the source's community block.
+    pub locality: f64,
+    /// Community block size (vertices); defaults to N1 = 16384.
+    pub community: u64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        // d = 1 - a - b - c = 0.05
+        RmatParams { a: 0.57, b: 0.19, c: 0.19, locality: 0.0, community: 16384 }
+    }
+}
+
+impl RmatParams {
+    pub fn with_locality(locality: f64) -> RmatParams {
+        RmatParams { locality, ..Default::default() }
+    }
+}
+
+impl RmatParams {
+    /// 16-bit quantized cumulative quadrant thresholds (quantization
+    /// bias ~1e-5 — irrelevant for synthetic degree-skew matching, and
+    /// ~6x faster than per-level f64 draws: four levels per u64 draw).
+    #[inline]
+    fn thresholds(&self) -> (u64, u64, u64) {
+        let q = 65536.0;
+        (
+            (self.a * q) as u64,
+            ((self.a + self.b) * q) as u64,
+            ((self.a + self.b + self.c) * q) as u64,
+        )
+    }
+
+    /// Sample one directed edge in an n x n adjacency matrix
+    /// (n rounded up to a power of two internally, rejected if >= n).
+    #[inline]
+    fn sample(&self, rng: &mut Rng, n: u64) -> (u32, u32) {
+        self.sample_with(rng, n, self.thresholds())
+    }
+
+    #[inline]
+    fn sample_with(&self, rng: &mut Rng, n: u64, t: (u64, u64, u64)) -> (u32, u32) {
+        let bits = 64 - (n - 1).leading_zeros() as u64;
+        loop {
+            let (mut r, mut c) = (0u64, 0u64);
+            let mut pool = 0u64;
+            let mut avail = 0u32;
+            for _ in 0..bits {
+                if avail == 0 {
+                    pool = rng.next_u64();
+                    avail = 4;
+                }
+                let v = pool & 0xFFFF;
+                pool >>= 16;
+                avail -= 1;
+                // Branchless quadrant select: the three cumulative
+                // thresholds partition [0, 65536) into the four R-MAT
+                // quadrants; row bit = v >= t2, col bit toggles at every
+                // threshold crossing except t2.
+                let ge1 = (v >= t.0) as u64;
+                let ge2 = (v >= t.1) as u64;
+                let ge3 = (v >= t.2) as u64;
+                r = (r << 1) | ge2;
+                c = (c << 1) | (ge1 ^ ge2 ^ ge3);
+            }
+            if r < n && c < n {
+                return (r as u32, c as u32);
+            }
+        }
+    }
+
+    /// Apply the community-locality redirection to a sampled edge.
+    #[inline]
+    fn localize(&self, rng: &mut Rng, n: u64, s: u32, d: u32) -> (u32, u32) {
+        if self.locality > 0.0 && rng.f64() < self.locality {
+            let block = (s as u64 / self.community) * self.community;
+            let width = self.community.min(n - block);
+            (s, (block + rng.below(width)) as u32)
+        } else {
+            (s, d)
+        }
+    }
+
+    /// Bulk-sample `m` edges into packed (src, dst) pairs.
+    pub fn sample_edges(&self, rng: &mut Rng, n: u64, m: usize) -> (Vec<u32>, Vec<u32>) {
+        let t = self.thresholds();
+        let mut src = Vec::with_capacity(m);
+        let mut dst = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (s, d) = self.sample_with(rng, n, t);
+            let (s, d) = self.localize(rng, n, s, d);
+            src.push(s);
+            dst.push(d);
+        }
+        (src, dst)
+    }
+}
+
+/// Materialize an R-MAT graph with exactly `meta.n_edges` edges and unit
+/// weights. Deterministic in `seed`.
+pub fn rmat_edges(meta: GraphMeta, params: RmatParams, seed: u64) -> CooGraph {
+    let mut rng = Rng::new(seed);
+    let m = meta.n_edges as usize;
+    let mut src = Vec::with_capacity(m);
+    let mut dst = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (s, d) = params.sample(&mut rng, meta.n_vertices);
+        let (s, d) = params.localize(&mut rng, meta.n_vertices, s, d);
+        src.push(s);
+        dst.push(d);
+    }
+    let w = vec![1.0f32; m];
+    CooGraph::new(meta, src, dst, w)
+}
+
+/// Stream R-MAT edges directly into Fiber-Shard tile counts: counts[i][j]
+/// = number of edges whose dst is in shard i (rows) and src in subshard j
+/// (cols), with shard height/width N1. Memory is O((|V|/N1)^2), never
+/// O(|E|) — this is what makes compiling Amazon-Products-scale synthetic
+/// graphs practical.
+pub fn rmat_tile_counts(
+    meta: &GraphMeta,
+    params: RmatParams,
+    seed: u64,
+    n1: u64,
+) -> TileCounts {
+    let mut rng = Rng::new(seed);
+    let shards = meta.n_vertices.div_ceil(n1) as usize;
+    let mut counts = vec![0u64; shards * shards];
+    for _ in 0..meta.n_edges {
+        let (s, d) = params.sample(&mut rng, meta.n_vertices);
+        let (s, d) = params.localize(&mut rng, meta.n_vertices, s, d);
+        let (si, sj) = ((d as u64 / n1) as usize, (s as u64 / n1) as usize);
+        counts[si * shards + sj] += 1;
+    }
+    TileCounts { n1, shards, counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(n: u64, m: u64) -> GraphMeta {
+        GraphMeta::new("rmat-test", n, m, 16, 4)
+    }
+
+    #[test]
+    fn exact_edge_count_and_range() {
+        let g = rmat_edges(meta(1000, 5000), RmatParams::default(), 1);
+        assert_eq!(g.m(), 5000);
+        assert!(g.src.iter().all(|&s| (s as u64) < 1000));
+        assert!(g.dst.iter().all(|&d| (d as u64) < 1000));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = rmat_edges(meta(256, 1024), RmatParams::default(), 7);
+        let b = rmat_edges(meta(256, 1024), RmatParams::default(), 7);
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.dst, b.dst);
+        let c = rmat_edges(meta(256, 1024), RmatParams::default(), 8);
+        assert_ne!(a.src, c.src);
+    }
+
+    #[test]
+    fn skewed_degrees() {
+        // a=0.57 concentrates mass in low vertex ids: max degree must be
+        // far above the mean (power-law-ish skew).
+        let g = rmat_edges(meta(1024, 16384), RmatParams::default(), 3);
+        let deg = g.in_degree();
+        let max = *deg.iter().max().unwrap() as f64;
+        let mean = 16384.0 / 1024.0;
+        assert!(max > 8.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn tile_counts_match_materialized() {
+        let m = meta(512, 4096);
+        let n1 = 128;
+        let tc = rmat_tile_counts(&m, RmatParams::default(), 9, n1);
+        let g = rmat_edges(m, RmatParams::default(), 9);
+        let shards = tc.shards;
+        let mut want = vec![0u64; shards * shards];
+        for i in 0..g.m() {
+            let (si, sj) = (
+                (g.dst[i] as u64 / n1) as usize,
+                (g.src[i] as u64 / n1) as usize,
+            );
+            want[si * shards + sj] += 1;
+        }
+        assert_eq!(tc.counts, want);
+        assert_eq!(tc.total_edges(), 4096);
+    }
+
+    #[test]
+    fn non_pow2_vertex_count() {
+        let g = rmat_edges(meta(300, 1000), RmatParams::default(), 5);
+        assert!(g.src.iter().all(|&s| (s as u64) < 300));
+        assert!(g.dst.iter().all(|&d| (d as u64) < 300));
+    }
+}

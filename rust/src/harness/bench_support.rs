@@ -1,0 +1,56 @@
+//! Shared support for the `rust/benches/*` binaries (plain `main`s —
+//! the offline vendor set has no criterion; each bench times its harness
+//! call and prints the regenerated table).
+//!
+//! Environment knobs:
+//! * `GA_SCALE`    — divide dataset sizes by N (default 1 = paper scale),
+//! * `GA_DATASETS` — comma list (default: all seven of Table 4).
+
+use super::tables::Ctx;
+use crate::graph::{dataset, Dataset, ALL_DATASETS};
+use std::time::Instant;
+
+pub fn scale_from_env() -> u64 {
+    std::env::var("GA_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+pub fn datasets_from_env() -> Vec<Dataset> {
+    match std::env::var("GA_DATASETS") {
+        Ok(list) if !list.is_empty() && list != "all" => list
+            .split(',')
+            .filter_map(|k| dataset(k.trim()))
+            .collect(),
+        _ => ALL_DATASETS.to_vec(),
+    }
+}
+
+/// Run one named bench body, print its output and wall time.
+pub fn run_bench(name: &str, body: impl FnOnce(&mut Ctx, &[Dataset]) -> String) {
+    let scale = scale_from_env();
+    let datasets = datasets_from_env();
+    let mut ctx = Ctx::new(scale);
+    eprintln!(
+        "[{name}] scale=1/{scale}, datasets={:?}",
+        datasets.iter().map(|d| d.key).collect::<Vec<_>>()
+    );
+    let t0 = Instant::now();
+    let table = body(&mut ctx, &datasets);
+    let secs = t0.elapsed().as_secs_f64();
+    println!("# {name} (regenerated in {secs:.2} s, scale 1/{scale})\n");
+    println!("{table}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_defaults() {
+        // (Do not set env in tests — just exercise the default paths.)
+        assert!(scale_from_env() >= 1);
+        assert_eq!(datasets_from_env().len(), 7);
+    }
+}

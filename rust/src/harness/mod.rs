@@ -1,0 +1,25 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (Sec. 8). Each public function returns structured rows and
+//! can render them as a markdown table; `graphagile tables --id <ID>`
+//! and the `rust/benches/*` binaries drive these.
+//!
+//! | ID  | Paper artifact                                   |
+//! |-----|--------------------------------------------------|
+//! | t4  | Table 4 — dataset statistics                     |
+//! | t5  | Table 5 — model zoo                              |
+//! | t7  | Table 7 — T_E2E / T_LoC / T_LoH per model x graph|
+//! | t8  | Table 8 — binary sizes                           |
+//! | t9  | Table 9 — qualitative comparison                 |
+//! | t10 | Table 10 — LoH vs HyGCN / AWB-GCN / BoostGCN     |
+//! | f14 | Fig. 14 — computation-order optimization impact  |
+//! | f15 | Fig. 15 — layer-fusion impact                    |
+//! | f16 | Fig. 16 — comp/comm overlap impact               |
+//! | f17 | Fig. 17 — E2E vs DGL (CPU/GPU)                   |
+//! | f18 | Fig. 18 — E2E vs PyG (CPU/GPU), with OOM cells   |
+
+pub mod bench_support;
+pub mod render;
+pub mod tables;
+
+pub use render::markdown;
+pub use tables::*;

@@ -1,0 +1,45 @@
+//! Minimal markdown table renderer for harness output.
+
+/// Render a markdown table.
+pub fn markdown(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push('|');
+    for h in headers {
+        out.push_str(&format!(" {h} |"));
+    }
+    out.push('\n');
+    out.push('|');
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for cell in row {
+            out.push_str(&format!(" {cell} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds as milliseconds with 3 significant decimals.
+pub fn ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_shape() {
+        let t = markdown(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(t, "| a | b |\n|---|---|\n| 1 | 2 |\n");
+    }
+
+    #[test]
+    fn ms_format() {
+        assert_eq!(ms(0.0123456), "12.346");
+    }
+}

@@ -1,0 +1,524 @@
+//! Table/figure generators (see module docs in `harness`).
+
+use super::render::{markdown, ms};
+use crate::baselines::{
+    awb_gcn_loh, boostgcn_loh, framework_e2e, hygcn_loh, Framework,
+    Processor,
+};
+use crate::compiler::{compile, CompileOptions, Executable};
+use crate::config::HwConfig;
+use crate::graph::{Dataset, TileCounts, ALL_DATASETS};
+use crate::ir::{ZooModel, ALL_MODELS};
+use crate::sim::{comm_seconds, simulate, SimResult};
+use crate::util::timed;
+use std::collections::HashMap;
+
+/// Shared context: hardware config + per-dataset tile-count cache with
+/// the measured partitioning time (the dominant T_LoC term, O(|V|+|E|)).
+pub struct Ctx {
+    pub hw: HwConfig,
+    /// Scale divisor for the synthetic datasets (1 = paper-scale; CI
+    /// uses a larger divisor to keep test runs fast).
+    pub scale: u64,
+    cache: HashMap<&'static str, (TileCounts, f64)>,
+}
+
+impl Ctx {
+    pub fn new(scale: u64) -> Ctx {
+        Ctx { hw: HwConfig::alveo_u250(), scale, cache: HashMap::new() }
+    }
+
+    pub fn dataset(&self, d: Dataset) -> Dataset {
+        if self.scale > 1 {
+            d.scaled(self.scale)
+        } else {
+            d
+        }
+    }
+
+    /// Tile counts + partitioning seconds for a dataset (cached).
+    ///
+    /// Edge generation (the synthetic stand-in for loading the dataset
+    /// from disk) is *not* part of T_LoC; only the O(|E|) Fiber-Shard
+    /// histogram pass is timed, matching the paper's definition of the
+    /// compiler's data-partitioning cost.
+    pub fn tiles(&mut self, d: &Dataset) -> (TileCounts, f64) {
+        let n1 = self.hw.n1() as u64;
+        let scaled = self.dataset(*d);
+        let entry = self.cache.entry(d.key).or_insert_with(|| {
+            let (src, dst) = scaled.edge_arrays();
+            let (tc, secs) =
+                timed(|| TileCounts::from_edges(&src, &dst, scaled.n_vertices, n1));
+            (tc, secs)
+        });
+        (entry.0.clone(), entry.1)
+    }
+
+    /// Compile + simulate one (model, dataset) cell.
+    pub fn run_cell(
+        &mut self,
+        model: ZooModel,
+        d: &Dataset,
+        opts: CompileOptions,
+        overlap: bool,
+    ) -> (Executable, SimResult, f64) {
+        let (tiles, t_part) = self.tiles(d);
+        let ir = model.build(self.dataset(*d).meta());
+        let hw = HwConfig { overlap, ..self.hw.clone() };
+        let exe = compile(&ir, &tiles, &hw, opts);
+        let sim = simulate(&exe.program, &hw);
+        let t_loc = t_part + exe.report.total();
+        (exe, sim, t_loc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 / Table 5 (static descriptions)
+// ---------------------------------------------------------------------------
+
+pub fn table4() -> String {
+    let rows: Vec<Vec<String>> = ALL_DATASETS
+        .iter()
+        .map(|d| {
+            vec![
+                format!("{} ({})", d.name, d.key),
+                d.n_vertices.to_string(),
+                d.n_edges.to_string(),
+                d.feat_len.to_string(),
+                d.n_classes.to_string(),
+            ]
+        })
+        .collect();
+    markdown(&["Dataset", "Vertices", "Edges", "Features", "Classes"], &rows)
+}
+
+pub fn table5() -> String {
+    let rows = vec![
+        vec!["b1", "GCN", "2", "16"],
+        vec!["b2", "GCN", "2", "128"],
+        vec!["b3", "GraphSAGE", "2", "128"],
+        vec!["b4", "GraphSAGE", "2", "256"],
+        vec!["b5", "GIN", "5", "128"],
+        vec!["b6", "GAT", "2", "64"],
+        vec!["b7", "SGC", "1 (k=2)", "-"],
+        vec!["b8", "GraphGym", "1+3+1", "256"],
+    ]
+    .into_iter()
+    .map(|r| r.into_iter().map(String::from).collect())
+    .collect::<Vec<_>>();
+    markdown(&["Model", "Layer type", "Layers", "Hidden"], &rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — end-to-end latency
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct T7Row {
+    pub model: &'static str,
+    pub dataset: &'static str,
+    pub t_e2e: f64,
+    pub t_loc: f64,
+    pub t_comm: f64,
+    pub t_loh: f64,
+}
+
+pub fn table7_rows(ctx: &mut Ctx, models: &[ZooModel], datasets: &[Dataset]) -> Vec<T7Row> {
+    let mut rows = Vec::new();
+    for m in models {
+        for d in datasets {
+            let (exe, sim, t_loc) = ctx.run_cell(*m, d, CompileOptions::default(), true);
+            let scaled = ctx.dataset(*d);
+            let bytes = scaled.meta().input_bytes()
+                + exe.ir.weight_bytes()
+                + exe.program.size_bytes();
+            let t_comm = comm_seconds(&ctx.hw, bytes);
+            let t_loh = sim.loh_seconds();
+            rows.push(T7Row {
+                model: m.key(),
+                dataset: d.key,
+                t_e2e: t_loc + t_comm + t_loh,
+                t_loc,
+                t_comm,
+                t_loh,
+            });
+        }
+    }
+    rows
+}
+
+pub fn table7(ctx: &mut Ctx) -> String {
+    let rows = table7_rows(ctx, &ALL_MODELS, &ALL_DATASETS);
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.to_string(),
+                r.dataset.to_string(),
+                ms(r.t_e2e),
+                ms(r.t_loc),
+                ms(r.t_comm),
+                ms(r.t_loh),
+            ]
+        })
+        .collect();
+    markdown(
+        &["Model", "Dataset", "T_E2E (ms)", "T_LoC (ms)", "T_comm (ms)", "T_LoH (ms)"],
+        &cells,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 8 — binary sizes
+// ---------------------------------------------------------------------------
+
+pub fn table8_rows(ctx: &mut Ctx) -> Vec<(String, Vec<f64>)> {
+    let mut rows = Vec::new();
+    for m in ALL_MODELS {
+        let mut sizes = Vec::new();
+        for d in ALL_DATASETS {
+            let (exe, _, _) = ctx.run_cell(m, &d, CompileOptions::default(), true);
+            sizes.push(exe.program.size_bytes() as f64 / 1e6);
+        }
+        rows.push((m.key().to_string(), sizes));
+    }
+    let input: Vec<f64> = ALL_DATASETS
+        .iter()
+        .map(|d| ctx.dataset(*d).meta().input_bytes() as f64 / 1e6)
+        .collect();
+    rows.push(("input graph".to_string(), input));
+    rows
+}
+
+pub fn table8(ctx: &mut Ctx) -> String {
+    let rows = table8_rows(ctx);
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, sizes)| {
+            let mut row = vec![name.clone()];
+            row.extend(sizes.iter().map(|s| format!("{s:.3}")));
+            row
+        })
+        .collect();
+    markdown(&["MB", "CI", "CO", "PU", "FL", "RE", "YE", "AP"], &cells)
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 14-16 — optimization ablations (average speedup % per model)
+// ---------------------------------------------------------------------------
+
+fn ablation(ctx: &mut Ctx, datasets: &[Dataset], variant: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for m in ALL_MODELS {
+        let mut speedups = Vec::new();
+        for d in datasets {
+            let on = CompileOptions::default();
+            let (off, overlap_off) = match variant {
+                "order" => (CompileOptions { order_opt: false, ..on }, true),
+                "fusion" => (CompileOptions { fusion: false, ..on }, true),
+                "overlap" => (on, false),
+                _ => unreachable!(),
+            };
+            let (_, sim_on, _) = ctx.run_cell(m, d, on, true);
+            let (_, sim_off, _) = ctx.run_cell(m, d, off, overlap_off);
+            speedups.push(sim_off.cycles as f64 / sim_on.cycles as f64);
+        }
+        let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+        out.push((m.key().to_string(), (avg - 1.0) * 100.0));
+    }
+    out
+}
+
+pub fn fig14_rows(ctx: &mut Ctx, datasets: &[Dataset]) -> Vec<(String, f64)> {
+    ablation(ctx, datasets, "order")
+}
+
+pub fn fig15_rows(ctx: &mut Ctx, datasets: &[Dataset]) -> Vec<(String, f64)> {
+    ablation(ctx, datasets, "fusion")
+}
+
+pub fn fig16_rows(ctx: &mut Ctx, datasets: &[Dataset]) -> Vec<(String, f64)> {
+    ablation(ctx, datasets, "overlap")
+}
+
+fn fig_markdown(rows: &[(String, f64)], what: &str) -> String {
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(m, pct)| vec![m.clone(), format!("{pct:.1}%")])
+        .collect();
+    markdown(&["Model", what], &cells)
+}
+
+pub fn fig14(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
+    fig_markdown(&fig14_rows(ctx, datasets), "avg LoH speedup from order opt")
+}
+
+pub fn fig15(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
+    fig_markdown(&fig15_rows(ctx, datasets), "avg LoH speedup from fusion")
+}
+
+pub fn fig16(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
+    fig_markdown(&fig16_rows(ctx, datasets), "avg LoH speedup from overlap")
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 17-18 — cross-platform comparison
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct CrossRow {
+    pub model: &'static str,
+    pub dataset: &'static str,
+    pub cpu: Option<f64>,
+    pub gpu: Option<f64>,
+    pub graphagile: f64,
+}
+
+pub fn cross_platform_rows(
+    ctx: &mut Ctx,
+    fw: Framework,
+    models: &[ZooModel],
+    datasets: &[Dataset],
+) -> Vec<CrossRow> {
+    let mut rows = Vec::new();
+    for m in models {
+        for d in datasets {
+            let ir = m.build(ctx.dataset(*d).meta());
+            let cpu = framework_e2e(&ir, fw, Processor::Cpu).seconds();
+            let gpu = framework_e2e(&ir, fw, Processor::Gpu).seconds();
+            let (exe, sim, t_loc) = ctx.run_cell(*m, d, CompileOptions::default(), true);
+            let bytes = ctx.dataset(*d).meta().input_bytes()
+                + exe.ir.weight_bytes()
+                + exe.program.size_bytes();
+            let ga = t_loc + comm_seconds(&ctx.hw, bytes) + sim.loh_seconds();
+            rows.push(CrossRow {
+                model: m.key(),
+                dataset: d.key,
+                cpu,
+                gpu,
+                graphagile: ga,
+            });
+        }
+    }
+    rows
+}
+
+fn cross_markdown(rows: &[CrossRow], fw: &str) -> String {
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let fmt = |v: Option<f64>| match v {
+                Some(s) => ms(s),
+                None => "OOM".to_string(),
+            };
+            let speedup = |v: Option<f64>| match v {
+                Some(s) => format!("{:.2}x", s / r.graphagile),
+                None => "-".to_string(),
+            };
+            vec![
+                r.model.to_string(),
+                r.dataset.to_string(),
+                fmt(r.cpu),
+                fmt(r.gpu),
+                ms(r.graphagile),
+                speedup(r.cpu),
+                speedup(r.gpu),
+            ]
+        })
+        .collect();
+    markdown(
+        &[
+            "Model",
+            "Dataset",
+            &format!("{fw}-CPU (ms)"),
+            &format!("{fw}-GPU (ms)"),
+            "GraphAGILE (ms)",
+            "vs CPU",
+            "vs GPU",
+        ],
+        &cells,
+    )
+}
+
+/// Fig. 17: DGL on b1-b7.
+pub fn fig17(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
+    let models = &ALL_MODELS[..7];
+    let rows = cross_platform_rows(ctx, Framework::Dgl, models, datasets);
+    cross_markdown(&rows, "DGL")
+}
+
+/// Fig. 18: PyG on b1-b8 (with the paper's OOM cells).
+pub fn fig18(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
+    let rows = cross_platform_rows(ctx, Framework::PyG, &ALL_MODELS, datasets);
+    cross_markdown(&rows, "PyG")
+}
+
+// ---------------------------------------------------------------------------
+// Table 9 — qualitative comparison (static)
+// ---------------------------------------------------------------------------
+
+pub fn table9() -> String {
+    let rows: Vec<Vec<String>> = vec![
+        vec!["HyGCN", "No", "No", "graph partitioning, sparsity elim.", "No", "Yes", "No"],
+        vec!["AWB-GCN", "No", "No", "partitioning, layout transform", "Yes", "No", "No"],
+        vec!["DeepBurning-GL", "No", "Yes (6-8 h)", "(unknown)", "No", "Yes", "No"],
+        vec!["BoostGCN", "No", "Yes (6-8 h)", "graph partitioning", "No", "Yes", "No"],
+        vec!["GraphAGILE", "Yes", "No", "software compilation", "Yes", "Yes", "Yes"],
+    ]
+    .into_iter()
+    .map(|r| r.into_iter().map(String::from).collect())
+    .collect();
+    markdown(
+        &["System", "GAT", "NHC*", "Preprocessing", "UFH", "GEMM", "SDDMM"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 10 — accelerator LoH comparison (b2 on FL/RE/YE/AP)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct T10Row {
+    pub dataset: &'static str,
+    pub boostgcn: f64,
+    pub hygcn: Option<f64>,
+    pub awb_gcn: Option<f64>,
+    pub graphagile: f64,
+}
+
+pub fn table10_rows(ctx: &mut Ctx) -> Vec<T10Row> {
+    let mut rows = Vec::new();
+    for d in ALL_DATASETS.iter().filter(|d| matches!(d.key, "FL" | "RE" | "YE" | "AP")) {
+        let ir = ZooModel::B2.build(ctx.dataset(*d).meta());
+        let (_, sim, _) = ctx.run_cell(ZooModel::B2, d, CompileOptions::default(), true);
+        rows.push(T10Row {
+            dataset: d.key,
+            boostgcn: boostgcn_loh(&ir),
+            // The paper reports HyGCN / AWB-GCN on Reddit only.
+            hygcn: (d.key == "RE").then(|| hygcn_loh(&ir)),
+            awb_gcn: (d.key == "RE").then(|| awb_gcn_loh(&ir)),
+            graphagile: sim.loh_seconds(),
+        });
+    }
+    rows
+}
+
+pub fn table10(ctx: &mut Ctx) -> String {
+    let rows = table10_rows(ctx);
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let opt = |v: Option<f64>| v.map(ms).unwrap_or_else(|| "-".into());
+            vec![
+                r.dataset.to_string(),
+                ms(r.boostgcn),
+                opt(r.hygcn),
+                opt(r.awb_gcn),
+                ms(r.graphagile),
+                format!("{:.2}x", r.boostgcn / r.graphagile),
+            ]
+        })
+        .collect();
+    markdown(
+        &["Dataset", "BoostGCN (ms)", "HyGCN (ms)", "AWB-GCN (ms)", "GraphAGILE (ms)", "vs BoostGCN"],
+        &cells,
+    )
+}
+
+/// Dispatch by table/figure id (the CLI's `tables --id`).
+pub fn by_id(ctx: &mut Ctx, id: &str, datasets: &[Dataset]) -> Option<String> {
+    Some(match id {
+        "t4" => table4(),
+        "t5" => table5(),
+        "t7" => table7(ctx),
+        "t8" => table8(ctx),
+        "t9" => table9(),
+        "t10" => table10(ctx),
+        "f14" => fig14(ctx, datasets),
+        "f15" => fig15(ctx, datasets),
+        "f16" => fig16(ctx, datasets),
+        "f17" => fig17(ctx, datasets),
+        "f18" => fig18(ctx, datasets),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+
+    fn small_ctx() -> Ctx {
+        // Scale datasets down 64x so CI stays fast; shapes still hold.
+        Ctx::new(64)
+    }
+
+    fn small_sets() -> Vec<Dataset> {
+        ["CO", "PU"].iter().map(|k| dataset(k).unwrap()).collect()
+    }
+
+    #[test]
+    fn table7_cells_are_consistent() {
+        let mut ctx = small_ctx();
+        let rows = table7_rows(&mut ctx, &[ZooModel::B1, ZooModel::B2], &small_sets());
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.t_e2e >= r.t_loh && r.t_e2e >= r.t_loc, "{r:?}");
+            assert!((r.t_e2e - (r.t_loc + r.t_comm + r.t_loh)).abs() < 1e-12);
+            assert!(r.t_loh > 0.0);
+        }
+    }
+
+    #[test]
+    fn fig14_shapes_match_paper() {
+        // Order opt: b7 (SGC) benefits most; b8 sees ~0 (pre-MLP
+        // equalizes widths) — the paper's Fig. 14 signature.
+        let mut ctx = small_ctx();
+        let sets: Vec<Dataset> = ["CI", "CO"].iter().map(|k| dataset(k).unwrap()).collect();
+        let rows = fig14_rows(&mut ctx, &sets);
+        let get = |k: &str| rows.iter().find(|(m, _)| m == k).unwrap().1;
+        assert!(get("b7") > 50.0, "b7 order-opt speedup {}", get("b7"));
+        assert!(get("b8") < 5.0, "b8 should be ~0, got {}", get("b8"));
+        assert!(get("b1") > get("b5"), "b1 {} vs b5 {}", get("b1"), get("b5"));
+    }
+
+    #[test]
+    fn fig16_overlap_positive_everywhere() {
+        let mut ctx = small_ctx();
+        let rows = fig16_rows(&mut ctx, &small_sets());
+        for (m, pct) in &rows {
+            assert!(*pct > 0.0, "{m}: overlap speedup {pct}%");
+        }
+    }
+
+    #[test]
+    fn cross_platform_graphagile_wins_cpu() {
+        // At tiny scales fixed overheads dominate; use a moderately
+        // sized graph (FL/16 ~ 56K edges) where the paper's ordering
+        // (GraphAGILE < CPU frameworks) must already hold.
+        // Compare hardware-side latency (LoH + comm): measured compile
+        // wall-clock depends on the build profile (debug tests) and is
+        // excluded here; the release benches compare full E2E.
+        let mut ctx = Ctx::new(16);
+        let d = dataset("FL").unwrap();
+        let ir = ZooModel::B2.build(ctx.dataset(d).meta());
+        let cpu = framework_e2e(&ir, Framework::Dgl, Processor::Cpu)
+            .seconds()
+            .unwrap();
+        let (exe, sim, _) = ctx.run_cell(ZooModel::B2, &d, CompileOptions::default(), true);
+        let bytes = ctx.dataset(d).meta().input_bytes()
+            + exe.ir.weight_bytes()
+            + exe.program.size_bytes();
+        let ga = comm_seconds(&ctx.hw, bytes) + sim.loh_seconds();
+        assert!(cpu > ga, "DGL-CPU {cpu} vs GraphAGILE hw {ga}");
+    }
+
+    #[test]
+    fn by_id_dispatch() {
+        let mut ctx = small_ctx();
+        assert!(by_id(&mut ctx, "t4", &[]).unwrap().contains("Reddit"));
+        assert!(by_id(&mut ctx, "t9", &[]).unwrap().contains("GraphAGILE"));
+        assert!(by_id(&mut ctx, "nope", &[]).is_none());
+    }
+}

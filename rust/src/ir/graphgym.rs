@@ -1,0 +1,188 @@
+//! GraphGym design-space models (You et al., NeurIPS'20; paper Sec. 2.1
+//! and model b8 of Table 5). A GraphGym instance is: `n_pre` MLP
+//! pre-processing layers, `n_mp` message-passing layers (with optional
+//! residual connections and BatchNorm), and `n_post` MLP post-processing
+//! layers. GraphAGILE supports the whole space; b8 is one point in it.
+
+use super::layer::{LayerIr, LayerType};
+use super::model::ModelIr;
+use crate::graph::GraphMeta;
+use crate::isa::{AggOp, Activation};
+
+/// One point in the GraphGym design space.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphGymConfig {
+    pub n_pre: usize,
+    pub n_mp: usize,
+    pub n_post: usize,
+    pub hidden: u64,
+    pub aggop: AggOp,
+    pub act: Activation,
+    /// Skip-sum residual connections across message-passing layers.
+    pub residual: bool,
+    /// BatchNorm after each Linear.
+    pub batchnorm: bool,
+}
+
+impl Default for GraphGymConfig {
+    /// The b8 benchmark of Table 5: 1 pre, 3 GNN, 1 post, hidden 256.
+    fn default() -> Self {
+        GraphGymConfig {
+            n_pre: 1,
+            n_mp: 3,
+            n_post: 1,
+            hidden: 256,
+            aggop: AggOp::Sum,
+            act: Activation::PRelu,
+            residual: true,
+            batchnorm: true,
+        }
+    }
+}
+
+impl GraphGymConfig {
+    /// Build the ModelIr for this configuration over `graph`.
+    pub fn build(&self, name: &str, graph: GraphMeta) -> ModelIr {
+        let (nv, ne) = (graph.n_vertices, graph.n_edges);
+        let h = self.hidden;
+        let mut ir = ModelIr::new(name, graph);
+        let mut f = ir.graph.feat_len;
+        let mut prev: Option<u16> = None;
+
+        let lin = |ir: &mut ModelIr, prev: Option<u16>, f_in: u64, f_out: u64| -> u16 {
+            let l = LayerIr::new(0, LayerType::Linear, f_in, f_out, nv, ne);
+            match prev {
+                Some(p) => ir.push_with_parents(l, &[p]),
+                None => ir.push_with_parents(l, &[]),
+            }
+        };
+
+        // Pre-processing MLP: Linear (+BatchNorm) + Act.
+        for _ in 0..self.n_pre {
+            let mut id = lin(&mut ir, prev, f, h);
+            f = h;
+            if self.batchnorm {
+                let bn = LayerIr::new(0, LayerType::BatchNorm, f, f, nv, ne);
+                id = ir.push_with_parents(bn, &[id]);
+            }
+            let act = LayerIr::new(0, LayerType::Activation, f, f, nv, ne)
+                .with_act(self.act);
+            prev = Some(ir.push_with_parents(act, &[id]));
+        }
+
+        // Message-passing layers: Aggregate + Linear (+BN) + Act
+        // (+ residual VectorAdd from the layer input).
+        for _ in 0..self.n_mp {
+            let input = prev;
+            let agg = LayerIr::new(0, LayerType::Aggregate, f, f, nv, ne)
+                .with_aggop(self.aggop);
+            let mut id = match input {
+                Some(p) => ir.push_with_parents(agg, &[p]),
+                None => ir.push_with_parents(agg, &[]),
+            };
+            id = lin(&mut ir, Some(id), f, h);
+            f = h;
+            if self.batchnorm {
+                let bn = LayerIr::new(0, LayerType::BatchNorm, f, f, nv, ne);
+                id = ir.push_with_parents(bn, &[id]);
+            }
+            let act = LayerIr::new(0, LayerType::Activation, f, f, nv, ne)
+                .with_act(self.act);
+            id = ir.push_with_parents(act, &[id]);
+            if self.residual {
+                if let Some(inp) = input {
+                    // Skip-sum requires equal widths; pre-processing
+                    // guarantees f == hidden from the first MP layer on.
+                    if ir.layer(inp).f_out == f {
+                        let va = LayerIr::new(0, LayerType::VectorAdd, f, f, nv, ne);
+                        id = ir.push_with_parents(va, &[id, inp]);
+                    }
+                }
+            }
+            prev = Some(id);
+        }
+
+        // Post-processing MLP (last layer maps to classes, no act).
+        for i in 0..self.n_post {
+            let out = if i + 1 == self.n_post { ir.graph.n_classes } else { h };
+            let id = lin(&mut ir, prev, f, out);
+            f = out;
+            prev = Some(id);
+        }
+        ir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> GraphMeta {
+        GraphMeta::new("t", 1000, 5000, 64, 10)
+    }
+
+    #[test]
+    fn b8_default_builds_and_validates() {
+        let ir = GraphGymConfig::default().build("b8", meta());
+        ir.validate().unwrap();
+        // 1 pre (Lin+BN+Act) + 3 mp (Agg+Lin+BN+Act+VAdd) + 1 post (Lin).
+        assert_eq!(ir.n_layers(), 3 + 3 * 5 + 1);
+        assert_eq!(ir.count(LayerType::Aggregate), 3);
+        assert_eq!(ir.count(LayerType::VectorAdd), 3);
+        assert_eq!(ir.count(LayerType::BatchNorm), 4);
+        // Output width is the class count.
+        assert_eq!(ir.layers.last().unwrap().f_out, 10);
+    }
+
+    #[test]
+    fn no_residual_no_vadd() {
+        let cfg = GraphGymConfig { residual: false, ..Default::default() };
+        let ir = cfg.build("gg", meta());
+        ir.validate().unwrap();
+        assert_eq!(ir.count(LayerType::VectorAdd), 0);
+    }
+
+    #[test]
+    fn no_pre_layer_skips_first_residual() {
+        // Without pre-processing the first MP layer changes width
+        // (f -> hidden), so its residual is dropped.
+        let cfg = GraphGymConfig { n_pre: 0, ..Default::default() };
+        let ir = cfg.build("gg", meta());
+        ir.validate().unwrap();
+        assert_eq!(ir.count(LayerType::VectorAdd), 2);
+    }
+
+    #[test]
+    fn design_space_sweep_validates() {
+        for n_pre in 0..2 {
+            for n_mp in 1..4 {
+                for residual in [false, true] {
+                    for batchnorm in [false, true] {
+                        let cfg = GraphGymConfig {
+                            n_pre,
+                            n_mp,
+                            n_post: 1,
+                            hidden: 64,
+                            residual,
+                            batchnorm,
+                            ..Default::default()
+                        };
+                        cfg.build("gg", meta()).validate().unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_aggregation_point() {
+        let cfg = GraphGymConfig { aggop: AggOp::Max, ..Default::default() };
+        let ir = cfg.build("gg-max", meta());
+        ir.validate().unwrap();
+        assert!(ir
+            .layers
+            .iter()
+            .filter(|l| l.ltype == LayerType::Aggregate)
+            .all(|l| l.aggop == Some(AggOp::Max)));
+    }
+}

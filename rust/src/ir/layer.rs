@@ -1,0 +1,164 @@
+//! The IR of one computation layer (paper Table 2 / Listing 2).
+
+use crate::isa::{AggOp, Activation};
+
+/// The six computation-layer types (Table 2). Each maps onto one ACK
+/// execution mode or the Activation Unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum LayerType {
+    /// SpDMM mode: h_i = AggOp(A_ji * h_j).
+    Aggregate = 0,
+    /// GEMM mode: H_out = H_in W.
+    Linear = 1,
+    /// SDDMM mode: e.weight = <h_i, h_j>.
+    VectorInner = 2,
+    /// VecAdd mode: H_out = H_a + H_b (residuals).
+    VectorAdd = 3,
+    /// Element-wise activation (fusable into any of the above).
+    Activation = 4,
+    /// Batch normalization (fusable into Linear).
+    BatchNorm = 5,
+}
+
+impl LayerType {
+    pub fn from_u8(v: u8) -> Option<LayerType> {
+        use LayerType::*;
+        Some(match v {
+            0 => Aggregate,
+            1 => Linear,
+            2 => VectorInner,
+            3 => VectorAdd,
+            4 => Activation,
+            5 => BatchNorm,
+            _ => return None,
+        })
+    }
+}
+
+/// One computation layer (the paper's `LayerIR`, Table 2). `nv`/`ne` are
+/// copied from the graph meta data at parse time so every complexity and
+/// partitioning decision is local to the node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerIr {
+    pub id: u16,
+    pub ltype: LayerType,
+    pub parents: Vec<u16>,
+    pub children: Vec<u16>,
+    /// Input feature dimension f_in.
+    pub f_in: u64,
+    /// Output feature dimension f_out.
+    pub f_out: u64,
+    /// |V| of the input graph.
+    pub nv: u64,
+    /// |E| of the input graph.
+    pub ne: u64,
+    /// Aggregation operator (Aggregate layers).
+    pub aggop: Option<AggOp>,
+    /// Activation function (Activation layers, or fused).
+    pub act: Activation,
+    /// Whether an activation is fused into this layer.
+    pub act_enabled: bool,
+    /// Whether a BatchNorm has been folded into this Linear layer.
+    pub batchnorm_folded: bool,
+}
+
+impl LayerIr {
+    /// Bare node of a given type; wire parents/children via ModelIr.
+    pub fn new(id: u16, ltype: LayerType, f_in: u64, f_out: u64, nv: u64, ne: u64) -> Self {
+        LayerIr {
+            id,
+            ltype,
+            parents: Vec::new(),
+            children: Vec::new(),
+            f_in,
+            f_out,
+            nv,
+            ne,
+            aggop: match ltype {
+                LayerType::Aggregate => Some(AggOp::Sum),
+                _ => None,
+            },
+            act: Activation::None,
+            act_enabled: false,
+            batchnorm_folded: false,
+        }
+    }
+
+    pub fn with_aggop(mut self, op: AggOp) -> Self {
+        debug_assert_eq!(self.ltype, LayerType::Aggregate);
+        self.aggop = Some(op);
+        self
+    }
+
+    pub fn with_act(mut self, act: Activation) -> Self {
+        self.act = act;
+        self.act_enabled = act != Activation::None;
+        self
+    }
+
+    /// Theoretical computation complexity (paper Eq. 10–11; flop counts
+    /// for the other types follow the same 2-flops-per-MAC convention).
+    pub fn complexity(&self) -> u64 {
+        match self.ltype {
+            // Eq. 10: 2 f_in |E| (f_in == f_out).
+            LayerType::Aggregate => 2 * self.f_in * self.ne,
+            // Eq. 11: 2 f_in f_out |V|.
+            LayerType::Linear => 2 * self.f_in * self.f_out * self.nv,
+            // One length-f inner product per edge.
+            LayerType::VectorInner => 2 * self.f_in * self.ne,
+            // One add per feature element.
+            LayerType::VectorAdd => self.f_in * self.nv,
+            // One activation per element.
+            LayerType::Activation => self.f_in * self.nv,
+            // Scale + shift per element.
+            LayerType::BatchNorm => 2 * self.f_in * self.nv,
+        }
+    }
+
+    /// Is this layer's aggregation operator linear (Definition 1)?
+    pub fn has_linear_aggop(&self) -> bool {
+        self.aggop.map(|op| op.is_linear()).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_type_roundtrip() {
+        for v in 0..=5u8 {
+            assert_eq!(LayerType::from_u8(v).unwrap() as u8, v);
+        }
+        assert!(LayerType::from_u8(6).is_none());
+    }
+
+    #[test]
+    fn complexity_matches_eq10_eq11() {
+        let agg = LayerIr::new(1, LayerType::Aggregate, 128, 128, 1000, 5000);
+        assert_eq!(agg.complexity(), 2 * 128 * 5000);
+        let lin = LayerIr::new(2, LayerType::Linear, 128, 16, 1000, 5000);
+        assert_eq!(lin.complexity(), 2 * 128 * 16 * 1000);
+    }
+
+    #[test]
+    fn aggregate_linearity() {
+        let sum = LayerIr::new(1, LayerType::Aggregate, 8, 8, 10, 20);
+        assert!(sum.has_linear_aggop());
+        let max = sum.clone().with_aggop(AggOp::Max);
+        assert!(!max.has_linear_aggop());
+        let lin = LayerIr::new(2, LayerType::Linear, 8, 8, 10, 20);
+        assert!(!lin.has_linear_aggop());
+    }
+
+    #[test]
+    fn with_act_sets_enable() {
+        let l = LayerIr::new(1, LayerType::Linear, 8, 8, 10, 20)
+            .with_act(Activation::Relu);
+        assert!(l.act_enabled);
+        let n = LayerIr::new(1, LayerType::Linear, 8, 8, 10, 20)
+            .with_act(Activation::None);
+        assert!(!n.act_enabled);
+    }
+}

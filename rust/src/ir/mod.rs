@@ -1,0 +1,16 @@
+//! Intermediate representation (paper Sec. 6.1–6.2).
+//!
+//! A GNN layer decomposes into a DAG of six computation-layer types; the
+//! compiler manipulates a [`ModelIr`] — an ordered list of [`LayerIr`]
+//! nodes (the paper's `ModelIR` of Listing 2) — through its four
+//! optimization passes.
+
+pub mod graphgym;
+pub mod layer;
+pub mod model;
+pub mod zoo;
+
+pub use graphgym::GraphGymConfig;
+pub use layer::{LayerIr, LayerType};
+pub use model::ModelIr;
+pub use zoo::{model_zoo, zoo_model, ZooModel, ALL_MODELS};

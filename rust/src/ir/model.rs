@@ -1,0 +1,194 @@
+//! The model-level IR (paper Listing 2's `ModelIR`): an ordered DAG of
+//! computation layers plus graph meta data, with structural validation
+//! used as an invariant by every compiler pass.
+
+use super::layer::{LayerIr, LayerType};
+use crate::graph::GraphMeta;
+use std::collections::HashMap;
+
+/// The computation graph of one (GNN model, input graph) instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelIr {
+    pub name: String,
+    pub graph: GraphMeta,
+    /// Topologically ordered layers (parents precede children).
+    pub layers: Vec<LayerIr>,
+}
+
+impl ModelIr {
+    pub fn new(name: &str, graph: GraphMeta) -> Self {
+        ModelIr { name: name.to_string(), graph, layers: Vec::new() }
+    }
+
+    /// Append a layer, chaining it to the previous layer (the common
+    /// sequential case; use `add_layer_with_parents` for DAGs).
+    pub fn push(&mut self, mut layer: LayerIr) -> u16 {
+        let id = (self.layers.len() + 1) as u16;
+        layer.id = id;
+        if let Some(prev) = self.layers.last_mut() {
+            prev.children.push(id);
+            layer.parents.push(prev.id);
+        }
+        self.layers.push(layer);
+        id
+    }
+
+    /// Append a layer with explicit parent ids (residual connections).
+    pub fn push_with_parents(&mut self, mut layer: LayerIr, parents: &[u16]) -> u16 {
+        let id = (self.layers.len() + 1) as u16;
+        layer.id = id;
+        layer.parents = parents.to_vec();
+        for &p in parents {
+            self.layer_mut(p).children.push(id);
+        }
+        self.layers.push(layer);
+        id
+    }
+
+    pub fn layer(&self, id: u16) -> &LayerIr {
+        self.layers.iter().find(|l| l.id == id).expect("unknown layer id")
+    }
+
+    pub fn layer_mut(&mut self, id: u16) -> &mut LayerIr {
+        self.layers.iter_mut().find(|l| l.id == id).expect("unknown layer id")
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total theoretical complexity (flops) — what the computation-order
+    /// pass minimizes (Theorem 2).
+    pub fn total_complexity(&self) -> u64 {
+        self.layers.iter().map(|l| l.complexity()).sum()
+    }
+
+    /// Structural invariants maintained by every pass:
+    /// * parent/child references are symmetric and point at real ids,
+    /// * layers are topologically ordered,
+    /// * feature dimensions agree across every edge of the DAG,
+    /// * Aggregate layers preserve width (f_in == f_out, Eq. 5).
+    pub fn validate(&self) -> Result<(), String> {
+        let by_id: HashMap<u16, &LayerIr> =
+            self.layers.iter().map(|l| (l.id, l)).collect();
+        if by_id.len() != self.layers.len() {
+            return Err("duplicate layer ids".into());
+        }
+        let mut seen: HashMap<u16, usize> = HashMap::new();
+        for (pos, l) in self.layers.iter().enumerate() {
+            seen.insert(l.id, pos);
+            for &p in &l.parents {
+                let parent = by_id.get(&p).ok_or(format!("layer {}: unknown parent {p}", l.id))?;
+                if !parent.children.contains(&l.id) {
+                    return Err(format!("asymmetric edge {} -> {}", p, l.id));
+                }
+                if !seen.contains_key(&p) {
+                    return Err(format!("layer {} precedes its parent {p}", l.id));
+                }
+                // Width agreement: a child consumes the parent's output.
+                let expect = parent.f_out;
+                if l.f_in != expect {
+                    return Err(format!(
+                        "layer {}: f_in {} != parent {} f_out {expect}",
+                        l.id, l.f_in, p
+                    ));
+                }
+            }
+            for &c in &l.children {
+                let child = by_id.get(&c).ok_or(format!("layer {}: unknown child {c}", l.id))?;
+                if !child.parents.contains(&l.id) {
+                    return Err(format!("asymmetric edge {} -> {c}", l.id));
+                }
+            }
+            if l.ltype == LayerType::Aggregate && l.f_in != l.f_out {
+                return Err(format!("Aggregate layer {} changes width", l.id));
+            }
+        }
+        Ok(())
+    }
+
+    /// Count layers of a given type (used by the fusion tests/ablation).
+    pub fn count(&self, t: LayerType) -> usize {
+        self.layers.iter().filter(|l| l.ltype == t).count()
+    }
+
+    /// Model parameter bytes (Linear weights + biases, f32) — part of
+    /// the PCIe transfer volume in the E2E metric.
+    pub fn weight_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| l.ltype == LayerType::Linear)
+            .map(|l| (l.f_in * l.f_out + l.f_out) * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Activation;
+
+    fn meta() -> GraphMeta {
+        GraphMeta::new("t", 100, 400, 32, 4)
+    }
+
+    fn chain() -> ModelIr {
+        let mut ir = ModelIr::new("test", meta());
+        ir.push(LayerIr::new(0, LayerType::Aggregate, 32, 32, 100, 400));
+        ir.push(LayerIr::new(0, LayerType::Linear, 32, 16, 100, 400));
+        ir.push(
+            LayerIr::new(0, LayerType::Activation, 16, 16, 100, 400)
+                .with_act(Activation::Relu),
+        );
+        ir
+    }
+
+    #[test]
+    fn chain_validates() {
+        let ir = chain();
+        ir.validate().unwrap();
+        assert_eq!(ir.n_layers(), 3);
+        assert_eq!(ir.layer(1).children, vec![2]);
+        assert_eq!(ir.layer(2).parents, vec![1]);
+    }
+
+    #[test]
+    fn residual_dag_validates() {
+        let mut ir = ModelIr::new("res", meta());
+        let a = ir.push(LayerIr::new(0, LayerType::Linear, 32, 32, 100, 400));
+        let b = ir.push(LayerIr::new(0, LayerType::Aggregate, 32, 32, 100, 400));
+        let v = LayerIr::new(0, LayerType::VectorAdd, 32, 32, 100, 400);
+        ir.push_with_parents(v, &[a, b]);
+        ir.validate().unwrap();
+        assert_eq!(ir.layer(a).children, vec![b, 3]);
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let mut ir = chain();
+        ir.layer_mut(2).f_in = 64;
+        assert!(ir.validate().is_err());
+    }
+
+    #[test]
+    fn aggregate_width_change_rejected() {
+        let mut ir = chain();
+        ir.layer_mut(1).f_out = 64;
+        assert!(ir.validate().is_err());
+    }
+
+    #[test]
+    fn complexity_totals() {
+        let ir = chain();
+        let want = 2 * 32 * 400 + 2 * 32 * 16 * 100 + 16 * 100;
+        assert_eq!(ir.total_complexity(), want);
+    }
+
+    #[test]
+    fn count_by_type() {
+        let ir = chain();
+        assert_eq!(ir.count(LayerType::Aggregate), 1);
+        assert_eq!(ir.count(LayerType::Activation), 1);
+        assert_eq!(ir.count(LayerType::BatchNorm), 0);
+    }
+}

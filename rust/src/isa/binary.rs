@@ -1,0 +1,289 @@
+//! The `.ga` executable format (compiler output; Table 8 measures sizes).
+//!
+//! Layout:
+//! ```text
+//! magic "GA01"           4 bytes
+//! n1, n2                 u32 each        (partition configuration)
+//! model/graph names      u16 len + utf8 each
+//! n_layer_blocks         u32
+//! per Layer Block:
+//!   CSI instruction      16 bytes
+//!   n_tiling_blocks      u32
+//!   per Tiling Block:
+//!     n_instrs           u32
+//!     instructions       16 bytes each
+//! HALT                   16 bytes
+//! ```
+//!
+//! The Scheduler streams this from DDR: only the CSI of the current layer
+//! is resident on-chip; Tiling Blocks are forwarded whole to PE
+//! instruction queues (Sec. 4.2).
+
+use super::encode::{decode, encode, INSTR_BYTES};
+use super::instr::Instr;
+use anyhow::{bail, Context, Result};
+
+/// An inseparable instruction sequence executed by one PE (Sec. 6.6).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TilingBlock {
+    pub instrs: Vec<Instr>,
+}
+
+impl TilingBlock {
+    pub fn new(instrs: Vec<Instr>) -> Self {
+        TilingBlock { instrs }
+    }
+
+    /// ACK-busy cycles of this block at width `p_sys`.
+    pub fn compute_cycles(&self, p_sys: usize) -> u64 {
+        self.instrs.iter().map(|i| super::microcode::instr_cycles(i, p_sys)).sum()
+    }
+
+    /// Bytes read from DDR by this block.
+    pub fn read_bytes(&self) -> u64 {
+        self.instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::MemRead { .. }))
+            .map(|i| i.mem_bytes())
+            .sum()
+    }
+
+    /// Bytes written to DDR by this block.
+    pub fn write_bytes(&self) -> u64 {
+        self.instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::MemWrite { .. }))
+            .map(|i| i.mem_bytes())
+            .sum()
+    }
+}
+
+/// One computation layer: a CSI header plus its Tiling Blocks (Sec. 6.6,
+/// "Kernel Mapping").
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerBlock {
+    pub csi: Instr,
+    pub blocks: Vec<TilingBlock>,
+}
+
+/// A complete executable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub n1: u32,
+    pub n2: u32,
+    pub model_name: String,
+    pub graph_name: String,
+    pub layers: Vec<LayerBlock>,
+}
+
+const MAGIC: &[u8; 4] = b"GA01";
+
+impl Program {
+    /// Serialize to the wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes() as usize);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.n1.to_le_bytes());
+        out.extend_from_slice(&self.n2.to_le_bytes());
+        for name in [&self.model_name, &self.graph_name] {
+            let b = name.as_bytes();
+            out.extend_from_slice(&(b.len() as u16).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for layer in &self.layers {
+            out.extend_from_slice(&encode(&layer.csi));
+            out.extend_from_slice(&(layer.blocks.len() as u32).to_le_bytes());
+            for block in &layer.blocks {
+                out.extend_from_slice(&(block.instrs.len() as u32).to_le_bytes());
+                for instr in &block.instrs {
+                    out.extend_from_slice(&encode(instr));
+                }
+            }
+        }
+        out.extend_from_slice(&encode(&Instr::Halt));
+        out
+    }
+
+    /// Parse the wire format (errors, never panics, on corrupt input).
+    pub fn from_bytes(data: &[u8]) -> Result<Program> {
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+            if *at + n > data.len() {
+                bail!("truncated program at offset {at}");
+            }
+            let s = &data[*at..*at + n];
+            *at += n;
+            Ok(s)
+        };
+        if take(&mut at, 4)? != MAGIC {
+            bail!("bad magic");
+        }
+        let rd_u32 = |at: &mut usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(take(at, 4)?.try_into().unwrap()))
+        };
+        let rd_u16 = |at: &mut usize| -> Result<u16> {
+            Ok(u16::from_le_bytes(take(at, 2)?.try_into().unwrap()))
+        };
+        let rd_instr = |at: &mut usize| -> Result<Instr> {
+            let b: [u8; INSTR_BYTES] = take(at, INSTR_BYTES)?.try_into().unwrap();
+            decode(&b)
+        };
+        let n1 = rd_u32(&mut at)?;
+        let n2 = rd_u32(&mut at)?;
+        let rd_name = |at: &mut usize| -> Result<String> {
+            let len = rd_u16(at)? as usize;
+            Ok(String::from_utf8(take(at, len)?.to_vec()).context("bad utf8 name")?)
+        };
+        let model_name = rd_name(&mut at)?;
+        let graph_name = rd_name(&mut at)?;
+        let n_layers = rd_u32(&mut at)? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let csi = rd_instr(&mut at)?;
+            if !matches!(csi, Instr::Csi { .. }) {
+                bail!("layer block does not start with CSI");
+            }
+            let n_blocks = rd_u32(&mut at)? as usize;
+            let mut blocks = Vec::with_capacity(n_blocks);
+            for _ in 0..n_blocks {
+                let n_instrs = rd_u32(&mut at)? as usize;
+                let mut instrs = Vec::with_capacity(n_instrs);
+                for _ in 0..n_instrs {
+                    instrs.push(rd_instr(&mut at)?);
+                }
+                blocks.push(TilingBlock::new(instrs));
+            }
+            layers.push(LayerBlock { csi, blocks });
+        }
+        match rd_instr(&mut at)? {
+            Instr::Halt => {}
+            other => bail!("expected HALT, got {other:?}"),
+        }
+        Ok(Program { n1, n2, model_name, graph_name, layers })
+    }
+
+    /// Serialized size (what Table 8 reports) without materializing.
+    pub fn size_bytes(&self) -> u64 {
+        let mut sz = 4 + 4 + 4; // magic + n1 + n2
+        sz += 2 + self.model_name.len() as u64;
+        sz += 2 + self.graph_name.len() as u64;
+        sz += 4; // n_layers
+        for layer in &self.layers {
+            sz += INSTR_BYTES as u64 + 4;
+            for block in &layer.blocks {
+                sz += 4 + (block.instrs.len() * INSTR_BYTES) as u64;
+            }
+        }
+        sz + INSTR_BYTES as u64 // HALT
+    }
+
+    pub fn total_instrs(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                1 + l
+                    .blocks
+                    .iter()
+                    .map(|b| b.instrs.len() as u64)
+                    .sum::<u64>()
+            })
+            .sum::<u64>()
+            + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::{Activation, AggOp, BufferId};
+
+    fn sample_program() -> Program {
+        Program {
+            n1: 16384,
+            n2: 16,
+            model_name: "b1".into(),
+            graph_name: "CO".into(),
+            layers: vec![LayerBlock {
+                csi: Instr::Csi { layer_id: 1, layer_type: 0, n_tiling_blocks: 2 },
+                blocks: vec![
+                    TilingBlock::new(vec![
+                        Instr::Init { rows: 128, cols: 16, aggop: AggOp::Sum },
+                        Instr::MemRead {
+                            buf: BufferId::Edge0,
+                            addr: 0x100,
+                            bytes: 1200,
+                            lock: true,
+                        },
+                        Instr::Spdmm {
+                            n_edges: 100,
+                            feat: 16,
+                            aggop: AggOp::Sum,
+                            act: Activation::Relu,
+                        },
+                        Instr::MemWrite { buf: BufferId::Result, addr: 0x2000, bytes: 8192 },
+                    ]),
+                    TilingBlock::new(vec![Instr::Gemm {
+                        rows: 128,
+                        len: 16,
+                        cols: 16,
+                        act: Activation::None,
+                        accumulate: false,
+                    }]),
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = sample_program();
+        let bytes = p.to_bytes();
+        assert_eq!(bytes.len() as u64, p.size_bytes());
+        let q = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut bytes = sample_program().to_bytes();
+        bytes[0] = b'X';
+        assert!(Program::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample_program().to_bytes();
+        for cut in [3, 10, bytes.len() - 1] {
+            assert!(
+                Program::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn block_accounting() {
+        let p = sample_program();
+        let b = &p.layers[0].blocks[0];
+        assert_eq!(b.read_bytes(), 1200);
+        assert_eq!(b.write_bytes(), 8192);
+        assert!(b.compute_cycles(16) > 0);
+        assert_eq!(p.total_instrs(), 1 + 4 + 1 + 1);
+    }
+
+    #[test]
+    fn layer_without_csi_rejected() {
+        // Hand-craft: replace the CSI with a GEMM.
+        let mut p = sample_program();
+        p.layers[0].csi = Instr::Gemm {
+            rows: 1,
+            len: 1,
+            cols: 1,
+            act: Activation::None,
+            accumulate: false,
+        };
+        let bytes = p.to_bytes();
+        assert!(Program::from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! `.ga` disassembler: human-readable listing of a compiled program —
+//! the debugging view of the ISA (CLI: `graphagile disasm`).
+
+use super::binary::Program;
+use super::instr::Instr;
+
+/// One instruction as assembly-ish text.
+pub fn format_instr(i: &Instr) -> String {
+    match i {
+        Instr::Csi { layer_id, layer_type, n_tiling_blocks } => format!(
+            "CSI     layer={layer_id} type={layer_type} blocks={n_tiling_blocks}"
+        ),
+        Instr::MemRead { buf, addr, bytes, lock } => format!(
+            "LD      {buf:?} <- ddr[{addr:#x}] {bytes}B{}",
+            if *lock { " lock" } else { "" }
+        ),
+        Instr::MemWrite { buf, addr, bytes } => {
+            format!("ST      {buf:?} -> ddr[{addr:#x}] {bytes}B")
+        }
+        Instr::Gemm { rows, len, cols, act, accumulate } => format!(
+            "GEMM    {rows}x{len}x{cols} act={act:?}{}",
+            if *accumulate { " acc" } else { "" }
+        ),
+        Instr::Spdmm { n_edges, feat, aggop, act } => {
+            format!("SPDMM   e={n_edges} f={feat} {aggop:?} act={act:?}")
+        }
+        Instr::Sddmm { n_edges, feat, act } => {
+            format!("SDDMM   e={n_edges} f={feat} act={act:?}")
+        }
+        Instr::Vadd { rows, cols, act } => format!("VADD    {rows}x{cols} act={act:?}"),
+        Instr::Act { rows, cols, act } => format!("ACT     {rows}x{cols} {act:?}"),
+        Instr::Init { rows, cols, aggop } => format!("INIT    {rows}x{cols} {aggop:?}"),
+        Instr::Halt => "HALT".to_string(),
+    }
+}
+
+/// Full program listing. `max_blocks_per_layer` truncates huge layers
+/// (0 = everything).
+pub fn disassemble(p: &Program, max_blocks_per_layer: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "; model={} graph={} N1={} N2={} ({} instrs, {} bytes)\n",
+        p.model_name,
+        p.graph_name,
+        p.n1,
+        p.n2,
+        p.total_instrs(),
+        p.size_bytes(),
+    ));
+    for (li, layer) in p.layers.iter().enumerate() {
+        out.push_str(&format!("\nL{li:03}: {}\n", format_instr(&layer.csi)));
+        let shown = if max_blocks_per_layer == 0 {
+            layer.blocks.len()
+        } else {
+            layer.blocks.len().min(max_blocks_per_layer)
+        };
+        for (bi, block) in layer.blocks[..shown].iter().enumerate() {
+            out.push_str(&format!("  .block {bi} ({} instrs)\n", block.instrs.len()));
+            for instr in &block.instrs {
+                out.push_str(&format!("    {}\n", format_instr(instr)));
+            }
+        }
+        if shown < layer.blocks.len() {
+            out.push_str(&format!(
+                "  ... {} more blocks elided\n",
+                layer.blocks.len() - shown
+            ));
+        }
+    }
+    out.push_str("\nHALT\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::config::HwConfig;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+
+    #[test]
+    fn disassembles_compiled_program() {
+        let ds = dataset("CO").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let exe = compile(
+            &ZooModel::B1.build(ds.meta()),
+            &tiles,
+            &hw,
+            CompileOptions::default(),
+        );
+        let text = disassemble(&exe.program, 2);
+        assert!(text.contains("CSI"));
+        assert!(text.contains("SPDMM"));
+        assert!(text.contains("GEMM"));
+        assert!(text.contains("HALT"));
+        assert!(text.contains("model=b1"));
+    }
+
+    #[test]
+    fn truncation_elides() {
+        let ds = dataset("PU").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let exe = compile(
+            &ZooModel::B2.build(ds.meta()),
+            &tiles,
+            &hw,
+            CompileOptions::default(),
+        );
+        let text = disassemble(&exe.program, 1);
+        assert!(text.contains("more blocks elided"));
+        let full = disassemble(&exe.program, 0);
+        assert!(!full.contains("elided"));
+        assert!(full.len() > text.len());
+    }
+
+    #[test]
+    fn every_variant_formats() {
+        use crate::isa::{Activation, AggOp, BufferId};
+        let variants = [
+            Instr::Csi { layer_id: 1, layer_type: 0, n_tiling_blocks: 2 },
+            Instr::MemRead { buf: BufferId::Edge0, addr: 16, bytes: 8, lock: true },
+            Instr::MemWrite { buf: BufferId::Result, addr: 0, bytes: 8 },
+            Instr::Gemm { rows: 1, len: 2, cols: 3, act: Activation::Relu, accumulate: true },
+            Instr::Spdmm { n_edges: 9, feat: 4, aggop: AggOp::Max, act: Activation::None },
+            Instr::Sddmm { n_edges: 9, feat: 4, act: Activation::None },
+            Instr::Vadd { rows: 2, cols: 2, act: Activation::None },
+            Instr::Act { rows: 2, cols: 2, act: Activation::Elu },
+            Instr::Init { rows: 2, cols: 2, aggop: AggOp::Sum },
+            Instr::Halt,
+        ];
+        for v in variants {
+            assert!(!format_instr(&v).is_empty());
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Bit-exact 128-bit wire encoding of high-level instructions (Fig. 3).
+//!
+//! Layout (little-endian u128; bit 0 is LSB):
+//!
+//! ```text
+//! [0..8)    OPCODE
+//! CSI:      [8..24) layer_id  [24..32) layer_type  [32..64) n_tiling_blocks
+//! MemRead:  [8..12) buf  [12..13) lock  [16..56) addr(40b)  [64..96) bytes
+//! MemWrite: [8..12) buf              [16..56) addr(40b)  [64..96) bytes
+//! GEMM:     [8..40) rows  [40..56) len  [56..72) cols  [72..80) act
+//!           [80..81) accumulate
+//! SpDMM:    [8..40) n_edges  [40..56) feat  [56..64) aggop  [64..72) act
+//! SDDMM:    [8..40) n_edges  [40..56) feat  [56..64) act
+//! VADD/ACT: [8..40) rows  [40..56) cols  [56..64) act
+//! INIT:     [8..40) rows  [40..56) cols  [56..64) aggop
+//! HALT:     opcode only
+//! ```
+
+use super::instr::{AggOp, Activation, BufferId, Instr, Opcode};
+use anyhow::{anyhow, bail, Result};
+
+/// Instruction width in bytes (128 bits, Sec. 5.3.1).
+pub const INSTR_BYTES: usize = 16;
+
+#[inline]
+fn put(word: &mut u128, lo: u32, width: u32, value: u128) {
+    debug_assert!(width == 128 || value < (1u128 << width), "field overflow");
+    *word |= value << lo;
+}
+
+#[inline]
+fn get(word: u128, lo: u32, width: u32) -> u128 {
+    (word >> lo) & if width == 128 { u128::MAX } else { (1u128 << width) - 1 }
+}
+
+/// Encode to the 16-byte little-endian wire format.
+pub fn encode(instr: &Instr) -> [u8; INSTR_BYTES] {
+    let mut w: u128 = 0;
+    put(&mut w, 0, 8, instr.opcode() as u8 as u128);
+    match *instr {
+        Instr::Csi { layer_id, layer_type, n_tiling_blocks } => {
+            put(&mut w, 8, 16, layer_id as u128);
+            put(&mut w, 24, 8, layer_type as u128);
+            put(&mut w, 32, 32, n_tiling_blocks as u128);
+        }
+        Instr::MemRead { buf, addr, bytes, lock } => {
+            put(&mut w, 8, 4, buf as u8 as u128);
+            put(&mut w, 12, 1, lock as u128);
+            assert!(addr < (1u64 << 40), "DDR address beyond 40 bits");
+            put(&mut w, 16, 40, addr as u128);
+            put(&mut w, 64, 32, bytes as u128);
+        }
+        Instr::MemWrite { buf, addr, bytes } => {
+            put(&mut w, 8, 4, buf as u8 as u128);
+            assert!(addr < (1u64 << 40), "DDR address beyond 40 bits");
+            put(&mut w, 16, 40, addr as u128);
+            put(&mut w, 64, 32, bytes as u128);
+        }
+        Instr::Gemm { rows, len, cols, act, accumulate } => {
+            put(&mut w, 8, 32, rows as u128);
+            put(&mut w, 40, 16, len as u128);
+            put(&mut w, 56, 16, cols as u128);
+            put(&mut w, 72, 8, act as u8 as u128);
+            put(&mut w, 80, 1, accumulate as u128);
+        }
+        Instr::Spdmm { n_edges, feat, aggop, act } => {
+            put(&mut w, 8, 32, n_edges as u128);
+            put(&mut w, 40, 16, feat as u128);
+            put(&mut w, 56, 8, aggop as u8 as u128);
+            put(&mut w, 64, 8, act as u8 as u128);
+        }
+        Instr::Sddmm { n_edges, feat, act } => {
+            put(&mut w, 8, 32, n_edges as u128);
+            put(&mut w, 40, 16, feat as u128);
+            put(&mut w, 56, 8, act as u8 as u128);
+        }
+        Instr::Vadd { rows, cols, act } | Instr::Act { rows, cols, act } => {
+            put(&mut w, 8, 32, rows as u128);
+            put(&mut w, 40, 16, cols as u128);
+            put(&mut w, 56, 8, act as u8 as u128);
+        }
+        Instr::Init { rows, cols, aggop } => {
+            put(&mut w, 8, 32, rows as u128);
+            put(&mut w, 40, 16, cols as u128);
+            put(&mut w, 56, 8, aggop as u8 as u128);
+        }
+        Instr::Halt => {}
+    }
+    w.to_le_bytes()
+}
+
+/// Decode a 16-byte word; errors on unknown opcodes or enum values
+/// (corrupt binaries must not panic the runtime).
+pub fn decode(bytes: &[u8; INSTR_BYTES]) -> Result<Instr> {
+    let w = u128::from_le_bytes(*bytes);
+    let op = Opcode::from_u8(get(w, 0, 8) as u8)
+        .ok_or_else(|| anyhow!("unknown opcode {}", get(w, 0, 8)))?;
+    let act = |lo: u32| -> Result<Activation> {
+        Activation::from_u8(get(w, lo, 8) as u8)
+            .ok_or_else(|| anyhow!("bad activation at bit {lo}"))
+    };
+    let aggop = |lo: u32| -> Result<AggOp> {
+        AggOp::from_u8(get(w, lo, 8) as u8)
+            .ok_or_else(|| anyhow!("bad aggop at bit {lo}"))
+    };
+    Ok(match op {
+        Opcode::Csi => Instr::Csi {
+            layer_id: get(w, 8, 16) as u16,
+            layer_type: get(w, 24, 8) as u8,
+            n_tiling_blocks: get(w, 32, 32) as u32,
+        },
+        Opcode::MemRead => Instr::MemRead {
+            buf: BufferId::from_u8(get(w, 8, 4) as u8)
+                .ok_or_else(|| anyhow!("bad buffer id"))?,
+            lock: get(w, 12, 1) != 0,
+            addr: get(w, 16, 40) as u64,
+            bytes: get(w, 64, 32) as u32,
+        },
+        Opcode::MemWrite => Instr::MemWrite {
+            buf: BufferId::from_u8(get(w, 8, 4) as u8)
+                .ok_or_else(|| anyhow!("bad buffer id"))?,
+            addr: get(w, 16, 40) as u64,
+            bytes: get(w, 64, 32) as u32,
+        },
+        Opcode::Gemm => Instr::Gemm {
+            rows: get(w, 8, 32) as u32,
+            len: get(w, 40, 16) as u16,
+            cols: get(w, 56, 16) as u16,
+            act: act(72)?,
+            accumulate: get(w, 80, 1) != 0,
+        },
+        Opcode::Spdmm => Instr::Spdmm {
+            n_edges: get(w, 8, 32) as u32,
+            feat: get(w, 40, 16) as u16,
+            aggop: aggop(56)?,
+            act: act(64)?,
+        },
+        Opcode::Sddmm => Instr::Sddmm {
+            n_edges: get(w, 8, 32) as u32,
+            feat: get(w, 40, 16) as u16,
+            act: act(56)?,
+        },
+        Opcode::Vadd => Instr::Vadd {
+            rows: get(w, 8, 32) as u32,
+            cols: get(w, 40, 16) as u16,
+            act: act(56)?,
+        },
+        Opcode::Act => Instr::Act {
+            rows: get(w, 8, 32) as u32,
+            cols: get(w, 40, 16) as u16,
+            act: act(56)?,
+        },
+        Opcode::Init => Instr::Init {
+            rows: get(w, 8, 32) as u32,
+            cols: get(w, 40, 16) as u16,
+            aggop: aggop(56)?,
+        },
+        Opcode::Halt => {
+            if get(w, 8, 120) != 0 {
+                bail!("HALT with non-zero payload");
+            }
+            Instr::Halt
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{forall, Rng};
+
+    fn arbitrary_instr(rng: &mut Rng) -> Instr {
+        let act = Activation::from_u8(rng.below(8) as u8).unwrap();
+        let aggop = AggOp::from_u8(rng.below(4) as u8).unwrap();
+        match rng.below(10) {
+            0 => Instr::Csi {
+                layer_id: rng.below(1 << 16) as u16,
+                layer_type: rng.below(6) as u8,
+                n_tiling_blocks: rng.next_u64() as u32,
+            },
+            1 => Instr::MemRead {
+                buf: BufferId::from_u8(rng.below(8) as u8).unwrap(),
+                addr: rng.below(1 << 40),
+                bytes: rng.next_u64() as u32,
+                lock: rng.below(2) == 1,
+            },
+            2 => Instr::MemWrite {
+                buf: BufferId::from_u8(rng.below(8) as u8).unwrap(),
+                addr: rng.below(1 << 40),
+                bytes: rng.next_u64() as u32,
+            },
+            3 => Instr::Gemm {
+                rows: rng.next_u64() as u32,
+                len: rng.below(1 << 16) as u16,
+                cols: rng.below(1 << 16) as u16,
+                act,
+                accumulate: rng.below(2) == 1,
+            },
+            4 => Instr::Spdmm {
+                n_edges: rng.next_u64() as u32,
+                feat: rng.below(1 << 16) as u16,
+                aggop,
+                act,
+            },
+            5 => Instr::Sddmm {
+                n_edges: rng.next_u64() as u32,
+                feat: rng.below(1 << 16) as u16,
+                act,
+            },
+            6 => Instr::Vadd {
+                rows: rng.next_u64() as u32,
+                cols: rng.below(1 << 16) as u16,
+                act,
+            },
+            7 => Instr::Act {
+                rows: rng.next_u64() as u32,
+                cols: rng.below(1 << 16) as u16,
+                act,
+            },
+            8 => Instr::Init {
+                rows: rng.next_u64() as u32,
+                cols: rng.below(1 << 16) as u16,
+                aggop,
+            },
+            _ => Instr::Halt,
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        forall("isa-roundtrip", 500, |rng| {
+            let instr = arbitrary_instr(rng);
+            let wire = encode(&instr);
+            let back = decode(&wire).map_err(|e| e.to_string())?;
+            crate::prop_assert!(back == instr, "{instr:?} != {back:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_unknown_opcode() {
+        let mut wire = [0u8; INSTR_BYTES];
+        wire[0] = 0xFF;
+        assert!(decode(&wire).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_enum_field() {
+        let instr = Instr::Spdmm {
+            n_edges: 10,
+            feat: 16,
+            aggop: AggOp::Sum,
+            act: Activation::Relu,
+        };
+        let mut wire = encode(&instr);
+        wire[7] = 0xEE; // clobber aggop field (bits 56..64)
+        assert!(decode(&wire).is_err());
+    }
+
+    #[test]
+    fn halt_is_canonical_zero_payload() {
+        let wire = encode(&Instr::Halt);
+        assert_eq!(&wire[1..], &[0u8; 15]);
+        assert_eq!(decode(&wire).unwrap(), Instr::Halt);
+    }
+
+    #[test]
+    fn instructions_are_128_bits() {
+        assert_eq!(INSTR_BYTES * 8, 128);
+    }
+}

@@ -1,0 +1,313 @@
+//! High-level instruction definitions (paper Sec. 5.3.1, Fig. 3).
+//!
+//! All high-level instructions are 128 bits with an 8-bit OPCODE field;
+//! the remaining fields are instruction-specific. A Tiling Block is an
+//! inseparable sequence of these, executed by one PE; the Scheduler only
+//! ever interprets the Control-and-Scheduling Instruction (CSI) that heads
+//! a Layer Block.
+
+/// Instruction opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// Control & Scheduling: layer meta data for the Scheduler.
+    Csi = 0,
+    /// DDR -> on-chip buffer read.
+    MemRead = 1,
+    /// On-chip buffer -> DDR write.
+    MemWrite = 2,
+    /// Dense matmul on the ACK systolic datapath.
+    Gemm = 3,
+    /// Edge-centric sparse-dense matmul (scatter-gather).
+    Spdmm = 4,
+    /// Edge-centric sampled dense-dense matmul (adder trees).
+    Sddmm = 5,
+    /// Vector addition (residuals).
+    Vadd = 6,
+    /// Standalone element-wise activation (when not fused).
+    Act = 7,
+    /// Initialize an output accumulator tile.
+    Init = 8,
+    /// End of program.
+    Halt = 9,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match v {
+            0 => Csi,
+            1 => MemRead,
+            2 => MemWrite,
+            3 => Gemm,
+            4 => Spdmm,
+            5 => Sddmm,
+            6 => Vadd,
+            7 => Act,
+            8 => Init,
+            9 => Halt,
+            _ => return None,
+        })
+    }
+}
+
+/// Element-wise aggregation operators (Table 2). Mean is realized as Sum
+/// with pre-normalized edge weights, keeping the operator linear.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum AggOp {
+    Sum = 0,
+    Max = 1,
+    Min = 2,
+    Mean = 3,
+}
+
+impl AggOp {
+    pub fn from_u8(v: u8) -> Option<AggOp> {
+        Some(match v {
+            0 => AggOp::Sum,
+            1 => AggOp::Max,
+            2 => AggOp::Min,
+            3 => AggOp::Mean,
+            _ => return None,
+        })
+    }
+
+    /// Linearity (Definition 1): Sum/Mean distribute over the Linear
+    /// layer's matmul; Max/Min do not.
+    pub fn is_linear(&self) -> bool {
+        matches!(self, AggOp::Sum | AggOp::Mean)
+    }
+}
+
+/// Activation functions supported by the Activation Unit (Sec. 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Activation {
+    None = 0,
+    Relu = 1,
+    PRelu = 2,
+    LRelu = 3,
+    Swish = 4,
+    Exp = 5,
+    Sigmoid = 6,
+    Elu = 7,
+}
+
+impl Activation {
+    pub fn from_u8(v: u8) -> Option<Activation> {
+        use Activation::*;
+        Some(match v {
+            0 => None,
+            1 => Relu,
+            2 => PRelu,
+            3 => LRelu,
+            4 => Swish,
+            5 => Exp,
+            6 => Sigmoid,
+            7 => Elu,
+            _ => return Option::None,
+        })
+    }
+}
+
+/// On-chip buffer identifiers. Feature buffers are triple-buffered and
+/// Edge/Weight double-buffered (Sec. 7); the mutex bit in memory
+/// instructions protects against WAR hazards between the decoder's
+/// look-ahead issue and in-flight compute (Sec. 6.6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum BufferId {
+    Edge0 = 0,
+    Edge1 = 1,
+    Weight0 = 2,
+    Weight1 = 3,
+    Feature0 = 4,
+    Feature1 = 5,
+    Feature2 = 6,
+    /// Result staging region of the Feature Buffer.
+    Result = 7,
+}
+
+impl BufferId {
+    pub fn from_u8(v: u8) -> Option<BufferId> {
+        use BufferId::*;
+        Some(match v {
+            0 => Edge0,
+            1 => Edge1,
+            2 => Weight0,
+            3 => Weight1,
+            4 => Feature0,
+            5 => Feature1,
+            6 => Feature2,
+            7 => Result,
+            _ => return None,
+        })
+    }
+
+    pub fn is_edge(&self) -> bool {
+        matches!(self, BufferId::Edge0 | BufferId::Edge1)
+    }
+}
+
+/// A decoded high-level instruction. Field widths are chosen to pack into
+/// 128 bits (see `encode`); the encoder asserts the ranges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Instr {
+    /// Layer Block header: everything the Scheduler needs to fan Tiling
+    /// Blocks out to idle PEs (Alg. 9).
+    Csi {
+        layer_id: u16,
+        layer_type: u8,
+        n_tiling_blocks: u32,
+    },
+    /// Load `bytes` from DDR address `addr` into `buf`. `lock` marks the
+    /// buffer mutex acquired until the consuming compute retires (WAR).
+    MemRead {
+        buf: BufferId,
+        addr: u64,
+        bytes: u32,
+        lock: bool,
+    },
+    /// Store `bytes` to DDR from `buf`.
+    MemWrite {
+        buf: BufferId,
+        addr: u64,
+        bytes: u32,
+    },
+    /// Block matmul H_B (rows x len) x W_B (len x cols); `accumulate`
+    /// keeps the systolic output stationary across len-chunks.
+    Gemm {
+        rows: u32,
+        len: u16,
+        cols: u16,
+        act: Activation,
+        accumulate: bool,
+    },
+    /// Edge-centric SpDMM over `n_edges` of a subshard at feature width
+    /// `feat` (paper: the edge count enables edge-centric execution).
+    Spdmm {
+        n_edges: u32,
+        feat: u16,
+        aggop: AggOp,
+        act: Activation,
+    },
+    /// Edge-centric SDDMM over `n_edges` with vectors of length `feat`.
+    Sddmm {
+        n_edges: u32,
+        feat: u16,
+        act: Activation,
+    },
+    /// Vector addition over a rows x cols tile.
+    Vadd {
+        rows: u32,
+        cols: u16,
+        act: Activation,
+    },
+    /// Standalone activation over a rows x cols tile (only emitted when
+    /// fusion is disabled — Fig. 15 ablation).
+    Act {
+        rows: u32,
+        cols: u16,
+        act: Activation,
+    },
+    /// Zero/neutral-initialize an accumulator tile of rows x cols.
+    Init {
+        rows: u32,
+        cols: u16,
+        aggop: AggOp,
+    },
+    Halt,
+}
+
+impl Instr {
+    pub fn opcode(&self) -> Opcode {
+        match self {
+            Instr::Csi { .. } => Opcode::Csi,
+            Instr::MemRead { .. } => Opcode::MemRead,
+            Instr::MemWrite { .. } => Opcode::MemWrite,
+            Instr::Gemm { .. } => Opcode::Gemm,
+            Instr::Spdmm { .. } => Opcode::Spdmm,
+            Instr::Sddmm { .. } => Opcode::Sddmm,
+            Instr::Vadd { .. } => Opcode::Vadd,
+            Instr::Act { .. } => Opcode::Act,
+            Instr::Init { .. } => Opcode::Init,
+            Instr::Halt => Opcode::Halt,
+        }
+    }
+
+    /// True for instructions executed by the ACK datapath (vs. memory /
+    /// control instructions).
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            Instr::Gemm { .. }
+                | Instr::Spdmm { .. }
+                | Instr::Sddmm { .. }
+                | Instr::Vadd { .. }
+                | Instr::Act { .. }
+                | Instr::Init { .. }
+        )
+    }
+
+    /// Bytes moved by memory instructions (0 otherwise).
+    pub fn mem_bytes(&self) -> u64 {
+        match self {
+            Instr::MemRead { bytes, .. } | Instr::MemWrite { bytes, .. } => *bytes as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_roundtrip() {
+        for v in 0..=9u8 {
+            let op = Opcode::from_u8(v).unwrap();
+            assert_eq!(op as u8, v);
+        }
+        assert!(Opcode::from_u8(10).is_none());
+    }
+
+    #[test]
+    fn aggop_linearity() {
+        assert!(AggOp::Sum.is_linear());
+        assert!(AggOp::Mean.is_linear());
+        assert!(!AggOp::Max.is_linear());
+        assert!(!AggOp::Min.is_linear());
+    }
+
+    #[test]
+    fn instr_classification() {
+        let g = Instr::Gemm {
+            rows: 128,
+            len: 64,
+            cols: 16,
+            act: Activation::Relu,
+            accumulate: false,
+        };
+        assert!(g.is_compute());
+        assert_eq!(g.opcode(), Opcode::Gemm);
+        let m = Instr::MemRead {
+            buf: BufferId::Edge0,
+            addr: 0x1000,
+            bytes: 4096,
+            lock: true,
+        };
+        assert!(!m.is_compute());
+        assert_eq!(m.mem_bytes(), 4096);
+    }
+
+    #[test]
+    fn buffer_id_roundtrip() {
+        for v in 0..=7u8 {
+            assert_eq!(BufferId::from_u8(v).unwrap() as u8, v);
+        }
+        assert!(BufferId::from_u8(8).is_none());
+        assert!(BufferId::Edge1.is_edge());
+        assert!(!BufferId::Result.is_edge());
+    }
+}

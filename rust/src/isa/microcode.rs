@@ -1,0 +1,240 @@
+//! Microcode expansion (paper Sec. 5.3.2, Alg. 1–3).
+//!
+//! The Instruction Decoder & Control Signal Generator translates each
+//! high-level instruction into fine-grained microcode for the ACK. Two
+//! forms are provided:
+//!
+//! * [`expand`] — an iterator over individual micro-ops (small instances;
+//!   used by unit tests and the functional executor's trace mode);
+//! * [`instr_cycles`] — the closed-form cycle algebra the simulator uses
+//!   (property-tested to agree with `expand` exactly).
+//!
+//! Cycle model (ACK dimension p = p_sys):
+//!   GEMM  (Alg. 1): ceil(S_B/p) * ceil(G_B/p) * Len        (one K-step/cycle)
+//!   SpDMM (Alg. 2): ceil(2 N_e / p) * ceil(f / p)          (p/2 edges/cycle)
+//!   SDDMM (Alg. 3): ceil(2 N_e / p) * ceil(f / p)          (p/2 products)
+//!   VADD:           ceil(2 rows / p) * ceil(f / p)         (p/2 adds/cycle)
+//!   ACT:            ceil(rows * cols / 16)                 (16 act elements)
+//!   INIT:           ceil(rows / p)                         (row-wide clear)
+
+use super::instr::Instr;
+use crate::util::ceil_div;
+
+/// One cycle's worth of ACK work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroOp {
+    /// Feed column k of H_T:i and row k of W_T:j into the systolic array.
+    GemmStep { i: u32, j: u32, k: u32 },
+    /// Dispatch a batch of p/2 edges through ISN -> Feature Buffer -> DSN
+    /// -> UR pipelines, over one p-wide feature chunk.
+    EdgeBatch { batch: u32, chunk: u32 },
+    /// One p-wide chunk of p/2 vector-add lanes.
+    VaddStep { batch: u32, chunk: u32 },
+    /// One batch of 16 activation elements.
+    ActStep { batch: u32 },
+    /// Clear one p-row group of the accumulator.
+    InitStep { group: u32 },
+}
+
+/// Total ACK-busy cycles for `instr` at systolic width `p_sys` — the
+/// closed form of Alg. 1–3's loop trip counts. Memory and control
+/// instructions return 0 (their cost is modeled by sim::ddr).
+pub fn instr_cycles(instr: &Instr, p_sys: usize) -> u64 {
+    let p = p_sys as u64;
+    match *instr {
+        Instr::Gemm { rows, len, cols, .. } => {
+            ceil_div(rows as u64, p) * ceil_div(cols as u64, p) * len as u64
+        }
+        Instr::Spdmm { n_edges, feat, .. } => {
+            ceil_div(2 * n_edges as u64, p) * ceil_div(feat as u64, p)
+        }
+        Instr::Sddmm { n_edges, feat, .. } => {
+            ceil_div(2 * n_edges as u64, p) * ceil_div(feat as u64, p)
+        }
+        Instr::Vadd { rows, cols, .. } => {
+            ceil_div(2 * rows as u64, p) * ceil_div(cols as u64, p)
+        }
+        Instr::Act { rows, cols, .. } => ceil_div(rows as u64 * cols as u64, 16),
+        Instr::Init { rows, .. } => ceil_div(rows as u64, p),
+        Instr::Csi { .. } | Instr::MemRead { .. } | Instr::MemWrite { .. } | Instr::Halt => 0,
+    }
+}
+
+/// Expand a high-level instruction into its microcode sequence. One
+/// `MicroOp` == one ACK cycle, so `expand(i, p).count() == instr_cycles`.
+pub fn expand(instr: &Instr, p_sys: usize) -> Box<dyn Iterator<Item = MicroOp>> {
+    let p = p_sys as u64;
+    match *instr {
+        Instr::Gemm { rows, len, cols, .. } => {
+            let (ti, tj) = (ceil_div(rows as u64, p), ceil_div(cols as u64, p));
+            Box::new((0..ti).flat_map(move |i| {
+                (0..tj).flat_map(move |j| {
+                    (0..len as u64).map(move |k| MicroOp::GemmStep {
+                        i: i as u32,
+                        j: j as u32,
+                        k: k as u32,
+                    })
+                })
+            }))
+        }
+        Instr::Spdmm { n_edges, feat, .. } | Instr::Sddmm { n_edges, feat, .. } => {
+            let batches = ceil_div(2 * n_edges as u64, p);
+            let chunks = ceil_div(feat as u64, p);
+            Box::new((0..batches).flat_map(move |b| {
+                (0..chunks).map(move |c| MicroOp::EdgeBatch {
+                    batch: b as u32,
+                    chunk: c as u32,
+                })
+            }))
+        }
+        Instr::Vadd { rows, cols, .. } => {
+            let batches = ceil_div(2 * rows as u64, p);
+            let chunks = ceil_div(cols as u64, p);
+            Box::new((0..batches).flat_map(move |b| {
+                (0..chunks).map(move |c| MicroOp::VaddStep {
+                    batch: b as u32,
+                    chunk: c as u32,
+                })
+            }))
+        }
+        Instr::Act { rows, cols, .. } => {
+            let batches = ceil_div(rows as u64 * cols as u64, 16);
+            Box::new((0..batches).map(|b| MicroOp::ActStep { batch: b as u32 }))
+        }
+        Instr::Init { rows, .. } => {
+            let groups = ceil_div(rows as u64, p);
+            Box::new((0..groups).map(|g| MicroOp::InitStep { group: g as u32 }))
+        }
+        _ => Box::new(std::iter::empty()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::{AggOp, Activation};
+    use crate::util::forall;
+
+    #[test]
+    fn gemm_cycles_match_alg1() {
+        // S_B=128, Len=64, G_B=16 at p=16: (128/16)*(16/16)*64 = 512.
+        let g = Instr::Gemm {
+            rows: 128,
+            len: 64,
+            cols: 16,
+            act: Activation::None,
+            accumulate: false,
+        };
+        assert_eq!(instr_cycles(&g, 16), 512);
+    }
+
+    #[test]
+    fn spdmm_cycles_match_alg2() {
+        // N_e=1000 at p=16: 2*1000/16 = 125 batches; f=16 -> 1 chunk.
+        let s = Instr::Spdmm {
+            n_edges: 1000,
+            feat: 16,
+            aggop: AggOp::Sum,
+            act: Activation::None,
+        };
+        assert_eq!(instr_cycles(&s, 16), 125);
+        // f=64 -> 4 chunks per batch.
+        let s2 = Instr::Spdmm {
+            n_edges: 1000,
+            feat: 64,
+            aggop: AggOp::Sum,
+            act: Activation::None,
+        };
+        assert_eq!(instr_cycles(&s2, 16), 500);
+    }
+
+    #[test]
+    fn sddmm_paper_example() {
+        // p_sys/2 inner products of length p_sys per cycle; |h| = 64 takes
+        // ceil(64/16) = 4 cycles per batch of 8 edges.
+        let s = Instr::Sddmm {
+            n_edges: 8,
+            feat: 64,
+            act: Activation::None,
+        };
+        assert_eq!(instr_cycles(&s, 16), 4);
+    }
+
+    #[test]
+    fn memory_and_control_are_free_here() {
+        use crate::isa::instr::BufferId;
+        assert_eq!(
+            instr_cycles(
+                &Instr::MemRead {
+                    buf: BufferId::Edge0,
+                    addr: 0,
+                    bytes: 1 << 20,
+                    lock: false
+                },
+                16
+            ),
+            0
+        );
+        assert_eq!(instr_cycles(&Instr::Halt, 16), 0);
+    }
+
+    #[test]
+    fn prop_expand_count_equals_cycles() {
+        forall("microcode-count", 60, |rng| {
+            let act = Activation::None;
+            let instr = match rng.below(6) {
+                0 => Instr::Gemm {
+                    rows: rng.range(1, 200) as u32,
+                    len: rng.range(1, 100) as u16,
+                    cols: rng.range(1, 70) as u16,
+                    act,
+                    accumulate: false,
+                },
+                1 => Instr::Spdmm {
+                    n_edges: rng.range(0, 3000) as u32,
+                    feat: rng.range(1, 200) as u16,
+                    aggop: AggOp::Sum,
+                    act,
+                },
+                2 => Instr::Sddmm {
+                    n_edges: rng.range(0, 3000) as u32,
+                    feat: rng.range(1, 200) as u16,
+                    act,
+                },
+                3 => Instr::Vadd {
+                    rows: rng.range(1, 500) as u32,
+                    cols: rng.range(1, 100) as u16,
+                    act,
+                },
+                4 => Instr::Act {
+                    rows: rng.range(1, 500) as u32,
+                    cols: rng.range(1, 100) as u16,
+                    act,
+                },
+                _ => Instr::Init {
+                    rows: rng.range(1, 500) as u32,
+                    cols: rng.range(1, 100) as u16,
+                    aggop: AggOp::Sum,
+                },
+            };
+            for &p in &[8usize, 16, 32] {
+                let want = instr_cycles(&instr, p);
+                let got = expand(&instr, p).count() as u64;
+                crate::prop_assert!(got == want, "{instr:?} p={p}: {got} != {want}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn psys_scaling_monotone() {
+        let s = Instr::Spdmm {
+            n_edges: 4096,
+            feat: 128,
+            aggop: AggOp::Sum,
+            act: Activation::None,
+        };
+        assert!(instr_cycles(&s, 8) > instr_cycles(&s, 16));
+        assert!(instr_cycles(&s, 16) > instr_cycles(&s, 32));
+    }
+}

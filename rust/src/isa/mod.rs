@@ -1,0 +1,19 @@
+//! The GraphAGILE instruction set architecture (paper Sec. 5.3).
+//!
+//! * [`instr`] — the 128-bit high-level instructions (Fig. 3),
+//! * [`encode`] — bit-exact encode/decode to the 16-byte wire format,
+//! * [`microcode`] — expansion of high-level instructions into the
+//!   fine-grained microcode the ACK executes (Alg. 1–3) plus the
+//!   closed-form cycle algebra the simulator uses,
+//! * [`binary`] — the `.ga` executable format produced by the compiler's
+//!   code generation (Table 8 measures its size).
+
+pub mod binary;
+pub mod disasm;
+pub mod encode;
+pub mod instr;
+pub mod microcode;
+
+pub use binary::{LayerBlock, Program, TilingBlock};
+pub use instr::{AggOp, Activation, BufferId, Instr, Opcode};
+pub use microcode::{instr_cycles, MicroOp};

@@ -1,0 +1,46 @@
+//! # GraphAGILE
+//!
+//! A full reproduction of *GraphAGILE: An FPGA-based Overlay Accelerator for
+//! Low-latency GNN Inference* (Zhang, Zeng, Prasanna — cs.DC 2023).
+//!
+//! The crate contains every layer of the system:
+//!
+//! * [`ir`] — the compiler's intermediate representation (six computation
+//!   layer types) and the paper's model zoo **b1–b8** (Table 5),
+//! * [`compiler`] — the four-pass optimizing compiler (Sec. 6): computation
+//!   order optimization, layer fusion, Fiber-Shard data partitioning, and
+//!   kernel mapping / task scheduling with mutex (WAR hazard) annotation,
+//! * [`isa`] — the 128-bit high-level instruction set (Fig. 3), microcode
+//!   expansion (Alg. 1–3), and the `.ga` executable format (Table 8),
+//! * [`sim`] — a cycle-level model of the overlay hardware (Sec. 5): PEs,
+//!   the Adaptive Computation Kernel's four execution modes, butterfly
+//!   shuffle networks, the RAW unit, banked buffers, DDR channels, PCIe,
+//!   and the dynamic tile scheduler (Alg. 9),
+//! * [`runtime`] — the PJRT functional runtime that loads AOT-compiled HLO
+//!   artifacts (produced once, at build time, by `python/compile/aot.py`)
+//!   and executes real GNN numerics on tiles — python is never on this
+//!   path,
+//! * [`exec`] — a pure-rust golden executor used for functional
+//!   equivalence checks and as the naive CPU reference,
+//! * [`baselines`] — analytic models of the comparison systems in the
+//!   paper's evaluation (PyG/DGL on CPU/GPU, HyGCN, AWB-GCN, BoostGCN),
+//! * [`harness`] — regenerates every table and figure of Sec. 8.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod compiler;
+pub mod config;
+pub mod exec;
+pub mod graph;
+pub mod harness;
+pub mod ir;
+pub mod isa;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod util;
+
+pub use config::HwConfig;
+pub use ir::{LayerIr, LayerType, ModelIr};

@@ -1,0 +1,288 @@
+//! GraphAGILE command-line interface.
+//!
+//! ```text
+//! graphagile tables --id t7 [--scale N] [--datasets CO,PU]
+//! graphagile compile --model b1 --dataset CO --out prog.ga
+//! graphagile simulate --model b1 --dataset CO [--no-order] [--no-fusion]
+//!                     [--no-overlap] [--scale N]
+//! graphagile sweep --model b2 --dataset FL      (design-space explorer)
+//! graphagile info                               (hardware + zoo summary)
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::{dataset, Dataset, ALL_DATASETS};
+use graphagile::harness::tables::{by_id, Ctx};
+use graphagile::ir::{zoo_model, ALL_MODELS};
+use graphagile::sim::simulate;
+use graphagile::util::fmt_bytes;
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: positional subcommand + `--key value` / `--flag`.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = HashMap::new();
+    while let Some(a) = it.next() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("unexpected argument {a}"))?
+            .to_string();
+        // Boolean flags: --no-order etc. take no value.
+        if key.starts_with("no-") {
+            flags.insert(key, "true".into());
+        } else {
+            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            flags.insert(key, val);
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn scale(&self) -> u64 {
+        self.get("scale").and_then(|s| s.parse().ok()).unwrap_or(1)
+    }
+
+    fn datasets(&self) -> Result<Vec<Dataset>> {
+        match self.get("datasets") {
+            None => Ok(ALL_DATASETS.to_vec()),
+            Some(list) => list
+                .split(',')
+                .map(|k| dataset(k).ok_or_else(|| anyhow!("unknown dataset {k}")))
+                .collect(),
+        }
+    }
+
+    fn options(&self) -> CompileOptions {
+        CompileOptions {
+            order_opt: self.get("no-order").is_none(),
+            fusion: self.get("no-fusion").is_none(),
+            ..Default::default()
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "tables" => cmd_tables(&args),
+        "compile" => cmd_compile(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "disasm" => cmd_disasm(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "usage: graphagile <tables|compile|simulate|sweep|disasm|serve|info> [flags]\n\
+                 see `rust/src/main.rs` docs for flag details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let id = args.get("id").context("--id required (t4,t5,t7,t8,t9,t10,f14..f18)")?;
+    let mut ctx = Ctx::new(args.scale());
+    let datasets = args.datasets()?;
+    let out = by_id(&mut ctx, id, &datasets)
+        .ok_or_else(|| anyhow!("unknown table/figure id {id}"))?;
+    println!("{out}");
+    Ok(())
+}
+
+fn model_and_dataset(args: &Args) -> Result<(graphagile::ir::ZooModel, Dataset)> {
+    let m = args.get("model").context("--model required (b1..b8)")?;
+    let d = args.get("dataset").context("--dataset required (CI,CO,PU,FL,RE,YE,AP)")?;
+    Ok((
+        zoo_model(m).ok_or_else(|| anyhow!("unknown model {m}"))?,
+        dataset(d).ok_or_else(|| anyhow!("unknown dataset {d}"))?,
+    ))
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let (m, d) = model_and_dataset(args)?;
+    let d = if args.scale() > 1 { d.scaled(args.scale()) } else { d };
+    let hw = HwConfig::alveo_u250();
+    let tiles = d.tile_counts(hw.n1() as u64);
+    let ir = m.build(d.meta());
+    let exe = compile(&ir, &tiles, &hw, args.options());
+    let bytes = exe.program.to_bytes();
+    let out = args.get("out").unwrap_or("out.ga");
+    std::fs::write(out, &bytes)?;
+    println!(
+        "compiled {} on {}: {} layers, {} instructions, {} -> {out}",
+        m.key(),
+        d.key,
+        exe.program.layers.len(),
+        exe.program.total_instrs(),
+        fmt_bytes(bytes.len() as u64),
+    );
+    println!(
+        "passes: order {:.1} us, fusion {:.1} us, partition {:.1} us, mapping {:.1} us",
+        exe.report.t_order * 1e6,
+        exe.report.t_fusion * 1e6,
+        exe.report.t_partition * 1e6,
+        exe.report.t_mapping * 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (m, d) = model_and_dataset(args)?;
+    let d = if args.scale() > 1 { d.scaled(args.scale()) } else { d };
+    let hw = HwConfig {
+        overlap: args.get("no-overlap").is_none(),
+        ..HwConfig::alveo_u250()
+    };
+    let tiles = d.tile_counts(hw.n1() as u64);
+    let ir = m.build(d.meta());
+    let exe = compile(&ir, &tiles, &hw, args.options());
+    let sim = simulate(&exe.program, &hw);
+    println!(
+        "{} on {}: LoH {:.3} ms ({} cycles), utilization {:.1}%, {:.1} GFLOP/s effective",
+        m.key(),
+        d.key,
+        sim.loh_ms(),
+        sim.cycles,
+        sim.utilization() * 100.0,
+        sim.gflops(exe.ir.total_complexity()),
+    );
+    println!("per-layer:");
+    for l in &sim.layers {
+        println!(
+            "  layer {:3} type {} blocks {:6} cycles {:10} mem {}",
+            l.layer_id,
+            l.layer_type,
+            l.n_blocks,
+            l.cycles,
+            fmt_bytes(l.mem_bytes),
+        );
+    }
+    Ok(())
+}
+
+/// Hardware design-space sweep: vary p_sys and N_pe, report LoH.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let (m, d) = model_and_dataset(args)?;
+    let d = if args.scale() > 1 { d.scaled(args.scale()) } else { d };
+    println!("design-space sweep of {} on {}:", m.key(), d.key);
+    println!("{:>6} {:>6} {:>12} {:>10}", "n_pe", "p_sys", "LoH (ms)", "util %");
+    for n_pe in [2usize, 4, 8, 16] {
+        for p_sys in [8usize, 16, 32] {
+            let hw = HwConfig { n_pe, p_sys, ..HwConfig::alveo_u250() };
+            if hw.validate().is_err() {
+                continue;
+            }
+            let tiles = d.tile_counts(hw.n1() as u64);
+            let ir = m.build(d.meta());
+            let exe = compile(&ir, &tiles, &hw, args.options());
+            let sim = simulate(&exe.program, &hw);
+            println!(
+                "{:>6} {:>6} {:>12.3} {:>10.1}",
+                n_pe,
+                p_sys,
+                sim.loh_ms(),
+                sim.utilization() * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Disassemble a `.ga` binary (or compile+disassemble a model/dataset).
+fn cmd_disasm(args: &Args) -> Result<()> {
+    let program = if let Some(path) = args.get("file") {
+        let bytes = std::fs::read(path)?;
+        graphagile::isa::Program::from_bytes(&bytes)?
+    } else {
+        let (m, d) = model_and_dataset(args)?;
+        let d = if args.scale() > 1 { d.scaled(args.scale()) } else { d };
+        let hw = HwConfig::alveo_u250();
+        let tiles = d.tile_counts(hw.n1() as u64);
+        compile(&m.build(d.meta()), &tiles, &hw, args.options()).program
+    };
+    let max_blocks = args
+        .get("blocks")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3usize);
+    println!("{}", graphagile::isa::disasm::disassemble(&program, max_blocks));
+    Ok(())
+}
+
+/// Multi-tenant serving demo: a mixed request stream over the program
+/// cache (the cloud-FPGA scenario of the paper's introduction).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use graphagile::serve::{Coordinator, Request};
+    use graphagile::util::Rng;
+    let n: usize = args.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let datasets = args.datasets()?;
+    let small: Vec<_> = datasets
+        .into_iter()
+        .filter(|d| d.n_edges < 10_000_000)
+        .collect();
+    anyhow::ensure!(!small.is_empty(), "no datasets small enough for the demo");
+    let mut rng = Rng::new(7);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request {
+            tenant: rng.below(4) as u32,
+            model: ALL_MODELS[rng.below(8) as usize],
+            dataset: small[rng.below(small.len() as u64) as usize],
+            arrival: i as f64 * 2e-4,
+        })
+        .collect();
+    let mut c = Coordinator::new(HwConfig::alveo_u250());
+    let stats = c.run(reqs);
+    println!("served {} requests across 4 tenants:", stats.completed);
+    println!("  cache hits        {} / {}", stats.cache_hits, stats.completed);
+    println!("  latency p50/p99   {:.3} ms / {:.3} ms", stats.p50 * 1e3, stats.p99 * 1e3);
+    println!("  mean latency      {:.3} ms", stats.mean * 1e3);
+    println!(
+        "  device utilization {:.1}% over {:.3} s makespan",
+        stats.device_busy / stats.makespan * 100.0,
+        stats.makespan
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let hw = HwConfig::alveo_u250();
+    println!("GraphAGILE overlay (Alveo U250 configuration)");
+    println!("  PEs: {}  p_sys: {}  freq: {} MHz", hw.n_pe, hw.p_sys, hw.freq_hz / 1e6);
+    println!(
+        "  peak {:.0} GFLOPS, on-chip {}  DDR {:.0} GB/s  PCIe {:.1} GB/s",
+        hw.peak_flops() / 1e9,
+        fmt_bytes(hw.on_chip_bytes()),
+        hw.ddr_bw / 1e9,
+        hw.pcie_bw / 1e9,
+    );
+    println!("models: {:?}", ALL_MODELS.iter().map(|m| m.key()).collect::<Vec<_>>());
+    println!(
+        "datasets: {:?}",
+        ALL_DATASETS.iter().map(|d| d.key).collect::<Vec<_>>()
+    );
+    match graphagile::runtime::find_artifacts_dir() {
+        Some(dir) => println!("artifacts: {}", dir.display()),
+        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Artifact discovery: `manifest.txt` maps artifact names to their
+//! argument signatures (`name f32[128,64] i32[1024] ...`), written by
+//! `python/compile/aot.py` alongside the `*.hlo.txt` files.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One argument of an artifact entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<(String, Vec<ArgSpec>)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().context("empty manifest line")?.to_string();
+            let mut args = Vec::new();
+            for tok in parts {
+                args.push(parse_arg(tok).with_context(|| format!("entry {name}"))?);
+            }
+            if args.is_empty() {
+                bail!("artifact {name} has no arguments");
+            }
+            entries.push((name, args));
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[ArgSpec]> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, a)| a.as_slice())
+    }
+
+    /// Find an artifact by prefix (e.g. "spdmm_e" matches
+    /// "spdmm_e1024_n128_f64").
+    pub fn find_prefix(&self, prefix: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .find(|n| n.starts_with(prefix))
+    }
+}
+
+fn parse_arg(tok: &str) -> Result<ArgSpec> {
+    let (dt, rest) = tok.split_once('[').context("missing [")?;
+    let dtype = match dt {
+        "f32" => Dtype::F32,
+        "i32" => Dtype::I32,
+        other => bail!("unknown dtype {other}"),
+    };
+    let dims_s = rest.strip_suffix(']').context("missing ]")?;
+    let dims = dims_s
+        .split(',')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArgSpec { dtype, dims })
+}
+
+/// Locate the artifacts directory: $GRAPHAGILE_ARTIFACTS, else
+/// ./artifacts relative to the working directory, else relative to the
+/// crate root (so `cargo test` finds it from any cwd).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("GRAPHAGILE_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(
+            "gemm_128x64x64 f32[128,64] f32[64,64] f32[64]\n\
+             spdmm_e1024_n128_f64 i32[1024] i32[1024] f32[1024] i32[1] f32[128,64]\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let args = m.get("spdmm_e1024_n128_f64").unwrap();
+        assert_eq!(args.len(), 5);
+        assert_eq!(args[0].dtype, Dtype::I32);
+        assert_eq!(args[4].dims, vec![128, 64]);
+        assert_eq!(args[4].numel(), 128 * 64);
+        assert_eq!(m.find_prefix("spdmm_e"), Some("spdmm_e1024_n128_f64"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("name_only\n").is_err());
+        assert!(Manifest::parse("x u8[3]\n").is_err());
+        assert!(Manifest::parse("x f32[3\n").is_err());
+    }
+
+    #[test]
+    fn finds_repo_artifacts() {
+        // `make artifacts` has run in this repo; the manifest must parse.
+        if let Some(dir) = find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find_prefix("gemm_").is_some());
+            assert!(m.find_prefix("spdmm_e").is_some());
+            assert!(m.find_prefix("sddmm_e").is_some());
+            assert!(m.find_prefix("vecadd_").is_some());
+        }
+    }
+}

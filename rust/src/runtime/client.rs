@@ -1,0 +1,136 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times from the coordinator's hot path.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
+
+use super::artifacts::{ArgSpec, Dtype, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded runtime: one PJRT CPU client plus every compiled artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// An argument value for execution.
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client and eagerly compile every artifact in the
+    /// manifest (compile once, execute many).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let manifest = Manifest::load(dir)?;
+        let mut rt = PjrtRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            executables: HashMap::new(),
+        };
+        let names: Vec<String> =
+            rt.manifest.entries.iter().map(|(n, _)| n.clone()).collect();
+        for name in names {
+            rt.compile(&name)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name` with the given arguments (shapes must
+    /// match the manifest; `f32` outputs are returned flattened).
+    pub fn execute(&self, name: &str, args: &[ArgValue]) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let specs = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        if specs.len() != args.len() {
+            anyhow::bail!("{name}: expected {} args, got {}", specs.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (spec, arg) in specs.iter().zip(args) {
+            literals.push(to_literal(spec, arg)?);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+}
+
+/// Terse [`ArgValue`] constructors for call sites.
+pub mod client_args {
+    use super::ArgValue;
+
+    pub fn f32s(v: &[f32]) -> ArgValue<'_> {
+        ArgValue::F32(v)
+    }
+
+    pub fn i32s(v: &[i32]) -> ArgValue<'_> {
+        ArgValue::I32(v)
+    }
+}
+
+fn to_literal(spec: &ArgSpec, arg: &ArgValue) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    let lit = match (spec.dtype, arg) {
+        (Dtype::F32, ArgValue::F32(v)) => {
+            if v.len() != spec.numel() {
+                anyhow::bail!("f32 arg has {} elems, want {}", v.len(), spec.numel());
+            }
+            xla::Literal::vec1(v)
+        }
+        (Dtype::I32, ArgValue::I32(v)) => {
+            if v.len() != spec.numel() {
+                anyhow::bail!("i32 arg has {} elems, want {}", v.len(), spec.numel());
+            }
+            xla::Literal::vec1(v)
+        }
+        _ => anyhow::bail!("dtype mismatch"),
+    };
+    if spec.dims.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}

@@ -1,0 +1,18 @@
+//! The PJRT functional runtime: loads the AOT HLO-text artifacts produced
+//! once at build time by `python/compile/aot.py` (L2 JAX calling the L1
+//! Pallas kernels) and executes them from rust. Python is never on this
+//! path — the binary is self-contained once `artifacts/` exists.
+//!
+//! * [`artifacts`] — manifest parsing and artifact discovery,
+//! * [`client`] — the `xla` crate wrapper: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile → execute,
+//! * [`tile_exec`] — a [`crate::exec::TileBackend`] that pads tiles to
+//!   the artifact shapes and runs them on the compiled kernels.
+
+pub mod artifacts;
+pub mod client;
+pub mod tile_exec;
+
+pub use artifacts::{find_artifacts_dir, Manifest};
+pub use client::{client_args, ArgValue, PjrtRuntime};
+pub use tile_exec::PjrtBackend;

@@ -1,0 +1,96 @@
+//! Compiled-program cache: (model, graph) -> Executable. The overlay's
+//! killer property is that this cache is filled by a milliseconds-scale
+//! software compile instead of an hours-scale hardware regeneration.
+
+use crate::compiler::{compile, CompileOptions, Executable};
+use crate::config::HwConfig;
+use crate::graph::{Dataset, TileCounts};
+use crate::ir::ZooModel;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Cache key: which benchmark model on which graph instance.
+pub type Key = (ZooModel, &'static str);
+
+pub struct ProgramCache {
+    hw: HwConfig,
+    programs: HashMap<Key, Arc<Executable>>,
+    tiles: HashMap<&'static str, Arc<TileCounts>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ProgramCache {
+    pub fn new(hw: HwConfig) -> ProgramCache {
+        ProgramCache {
+            hw,
+            programs: HashMap::new(),
+            tiles: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Get-or-compile. Returns the executable and whether it was a hit.
+    pub fn get(&mut self, model: ZooModel, ds: &Dataset) -> (Arc<Executable>, bool) {
+        let key = (model, ds.key);
+        if let Some(exe) = self.programs.get(&key) {
+            self.hits += 1;
+            return (exe.clone(), true);
+        }
+        self.misses += 1;
+        let n1 = self.hw.n1() as u64;
+        let tiles = self
+            .tiles
+            .entry(ds.key)
+            .or_insert_with(|| Arc::new(ds.tile_counts(n1)))
+            .clone();
+        let ir = model.build(ds.meta());
+        let exe = Arc::new(compile(&ir, &tiles, &self.hw, CompileOptions::default()));
+        self.programs.insert(key, exe.clone());
+        (exe, false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
+
+    /// Total bytes of cached binaries (capacity planning).
+    pub fn binary_bytes(&self) -> u64 {
+        self.programs.values().map(|e| e.program.size_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+
+    #[test]
+    fn compile_once_then_hit() {
+        let mut cache = ProgramCache::new(HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let (_, hit1) = cache.get(ZooModel::B1, &co);
+        assert!(!hit1);
+        let (_, hit2) = cache.get(ZooModel::B1, &co);
+        assert!(hit2);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn tiles_shared_across_models() {
+        // Two models on the same graph partition the graph once.
+        let mut cache = ProgramCache::new(HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        cache.get(ZooModel::B1, &co);
+        cache.get(ZooModel::B2, &co);
+        assert_eq!(cache.tiles.len(), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.binary_bytes() > 0);
+    }
+}

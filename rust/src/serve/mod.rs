@@ -1,0 +1,18 @@
+//! Multi-tenant serving coordinator (the paper's motivating deployment,
+//! Sec. 1: "in a cloud-based system, multiple users share the same FPGA.
+//! Different users may run different GNN models with different input
+//! graphs" — the overlay makes switching instant because no bitstream is
+//! regenerated).
+//!
+//! * [`cache`] — the compiled-program cache keyed by (model, graph):
+//!   first request pays the milliseconds-scale software compile; repeats
+//!   are pure lookups,
+//! * [`coordinator`] — the request loop: a queue, a worker that binds
+//!   programs to the accelerator (simulated execution latency from
+//!   `sim::engine`), and latency statistics (p50/p99) per tenant.
+
+pub mod cache;
+pub mod coordinator;
+
+pub use cache::ProgramCache;
+pub use coordinator::{Coordinator, Request, Response, ServeStats};

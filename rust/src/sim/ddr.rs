@@ -1,0 +1,77 @@
+//! FPGA DDR memory model (paper Sec. 7: four channels, 77 GB/s total;
+//! the paper uses Ramulator — we model sustained-bandwidth transfers with
+//! per-transfer fixed overhead, which is what tile-granular streaming
+//! reaches on an open-page DDR4 schedule).
+
+use crate::config::HwConfig;
+
+/// Sustained-bandwidth DDR model.
+#[derive(Clone, Copy, Debug)]
+pub struct DdrModel {
+    /// Bytes per accelerator cycle, aggregate over all channels.
+    pub bytes_per_cycle: f64,
+    /// Fixed per-transfer overhead in cycles (row activation + burst
+    /// alignment; dominates only for tiny transfers).
+    pub fixed_cycles: u64,
+    /// Channels (bandwidth shares under concurrent access).
+    pub channels: usize,
+}
+
+impl DdrModel {
+    pub fn from_hw(hw: &HwConfig) -> DdrModel {
+        DdrModel {
+            bytes_per_cycle: hw.ddr_bw / hw.freq_hz,
+            fixed_cycles: 30,
+            channels: hw.ddr_channels,
+        }
+    }
+
+    /// Cycles to move `bytes` when `sharers` agents contend for the
+    /// aggregate bandwidth (PEs executing concurrently).
+    pub fn transfer_cycles(&self, bytes: u64, sharers: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let share = self.bytes_per_cycle / sharers.max(1) as f64;
+        self.fixed_cycles + (bytes as f64 / share).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> DdrModel {
+        DdrModel::from_hw(&HwConfig::alveo_u250())
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        let m = model();
+        // 77 GB/s at 300 MHz = 256.67 B/cycle.
+        assert!((m.bytes_per_cycle - 256.66).abs() < 1.0);
+        // 1 MB solo: ~4096 cycles + overhead.
+        let c = m.transfer_cycles(1 << 20, 1);
+        assert!((4000..4500).contains(&c), "{c}");
+    }
+
+    #[test]
+    fn sharing_divides_bandwidth() {
+        let m = model();
+        let solo = m.transfer_cycles(1 << 20, 1);
+        let shared = m.transfer_cycles(1 << 20, 8);
+        assert!(shared > solo * 7, "{shared} vs {solo}");
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        assert_eq!(model().transfer_cycles(0, 4), 0);
+    }
+
+    #[test]
+    fn fixed_overhead_dominates_small() {
+        let m = model();
+        let tiny = m.transfer_cycles(64, 1);
+        assert!(tiny >= m.fixed_cycles && tiny <= m.fixed_cycles + 2);
+    }
+}

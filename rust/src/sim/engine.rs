@@ -1,0 +1,237 @@
+//! The whole-accelerator simulation: executes a compiled [`Program`]
+//! layer by layer (Alg. 9's barrier semantics), assigning Tiling Blocks
+//! to PEs dynamically and overlapping each block's computation with its
+//! DDR traffic via the double/triple buffering the hardware implements
+//! (Sec. 6.6). Produces the latency-of-hardware-execution (T_LoH).
+
+use super::ack::AckModel;
+use super::ddr::DdrModel;
+use super::scheduler::schedule_blocks;
+use crate::config::HwConfig;
+use crate::isa::{Instr, Program, TilingBlock};
+
+/// Per-layer simulation result.
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub layer_id: u16,
+    pub layer_type: u8,
+    pub n_blocks: usize,
+    /// Layer wall-clock cycles (after the PE barrier).
+    pub cycles: u64,
+    /// Sum of ACK-busy cycles over all blocks.
+    pub compute_cycles: u64,
+    /// Sum of DDR bytes moved.
+    pub mem_bytes: u64,
+}
+
+/// Whole-run result.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub cycles: u64,
+    pub layers: Vec<LayerSim>,
+    pub freq_hz: f64,
+    /// Total ACK-busy cycles across PEs (utilization numerator).
+    pub total_compute_cycles: u64,
+    pub total_mem_bytes: u64,
+    pub n_pe: usize,
+}
+
+impl SimResult {
+    /// Latency of hardware execution in seconds.
+    pub fn loh_seconds(&self) -> f64 {
+        self.cycles as f64 / self.freq_hz
+    }
+
+    pub fn loh_ms(&self) -> f64 {
+        self.loh_seconds() * 1e3
+    }
+
+    /// Average ACK utilization across the run (0..=1).
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.total_compute_cycles as f64 / (self.cycles * self.n_pe as u64) as f64
+    }
+
+    /// Effective throughput in GFLOP/s given the model's total flops.
+    pub fn gflops(&self, total_flops: u64) -> f64 {
+        total_flops as f64 / self.loh_seconds() / 1e9
+    }
+}
+
+/// Output tile height for the RAW conflict domain: the Init (Aggregate)
+/// or Gemm/Vadd/Act rows; defaults to N1.
+fn out_rows(block: &TilingBlock, n1: u64) -> u64 {
+    for i in &block.instrs {
+        match i {
+            Instr::Init { rows, .. }
+            | Instr::Gemm { rows, .. }
+            | Instr::Vadd { rows, .. }
+            | Instr::Act { rows, .. } => return *rows as u64,
+            _ => {}
+        }
+    }
+    n1
+}
+
+/// Duration of one Tiling Block on one PE.
+fn block_cycles(
+    block: &TilingBlock,
+    ack: &AckModel,
+    ddr: &DdrModel,
+    hw: &HwConfig,
+    overlap: bool,
+) -> (u64, u64, u64) {
+    let rows = out_rows(block, hw.n1() as u64);
+    let mut compute = 0u64;
+    let mut mem = 0u64;
+    let mut bytes = 0u64;
+    let mut first_load = 0u64;
+    for instr in &block.instrs {
+        match instr {
+            Instr::MemRead { bytes: b, .. } | Instr::MemWrite { bytes: b, .. } => {
+                let t = ddr.transfer_cycles(*b as u64, hw.n_pe);
+                if first_load == 0 {
+                    first_load = t;
+                }
+                mem += t;
+                bytes += *b as u64;
+            }
+            _ => compute += ack.cycles(instr, rows),
+        }
+    }
+    // Instruction issue: one cycle per instruction through the decoder.
+    let decode = block.instrs.len() as u64;
+    let serial = compute + mem + decode;
+    let duration = if overlap {
+        // Double/triple buffering pipelines loads against compute; the
+        // first load cannot be hidden (pipeline fill), and the mutex
+        // (WAR) protocol serializes at buffer granularity — modeled by
+        // the max() with fill. Never worse than serial issue (tiny tiles
+        // where the fill term would dominate just run serially).
+        (compute.max(mem) + first_load + decode).min(serial)
+    } else {
+        serial
+    };
+    (duration, compute, bytes)
+}
+
+/// Simulate the program on the hardware configuration.
+pub fn simulate(program: &Program, hw: &HwConfig) -> SimResult {
+    let ack = AckModel::from_hw(hw);
+    let ddr = DdrModel::from_hw(hw);
+    let mut layers = Vec::with_capacity(program.layers.len());
+    let mut total = 0u64;
+    let mut total_compute = 0u64;
+    let mut total_bytes = 0u64;
+    for lb in &program.layers {
+        let (layer_id, layer_type) = match lb.csi {
+            Instr::Csi { layer_id, layer_type, .. } => (layer_id, layer_type),
+            _ => (0, 0),
+        };
+        let mut durations = Vec::with_capacity(lb.blocks.len());
+        let mut compute_cycles = 0u64;
+        let mut mem_bytes = 0u64;
+        for block in &lb.blocks {
+            let (d, c, b) = block_cycles(block, &ack, &ddr, hw, hw.overlap);
+            durations.push(d);
+            compute_cycles += c;
+            mem_bytes += b;
+        }
+        // Alg. 9: CSI dispatch, then dynamic assignment, then barrier.
+        let (makespan, _) = schedule_blocks(&durations, hw.n_pe);
+        let csi_overhead = 4;
+        let cycles = makespan + csi_overhead;
+        total += cycles;
+        total_compute += compute_cycles;
+        total_bytes += mem_bytes;
+        layers.push(LayerSim {
+            layer_id,
+            layer_type,
+            n_blocks: lb.blocks.len(),
+            cycles,
+            compute_cycles,
+            mem_bytes,
+        });
+    }
+    SimResult {
+        cycles: total,
+        layers,
+        freq_hz: hw.freq_hz,
+        total_compute_cycles: total_compute,
+        total_mem_bytes: total_bytes,
+        n_pe: hw.n_pe,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+
+    fn sim(model: ZooModel, ds_key: &str, overlap: bool) -> SimResult {
+        let ds = dataset(ds_key).unwrap();
+        let hw = HwConfig { overlap, ..HwConfig::alveo_u250() };
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = model.build(ds.meta());
+        let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+        simulate(&exe.program, &hw)
+    }
+
+    #[test]
+    fn b1_cora_has_sane_latency() {
+        let r = sim(ZooModel::B1, "CO", true);
+        let ms = r.loh_ms();
+        // Paper: 0.103 ms. Same order of magnitude expected.
+        assert!((0.01..5.0).contains(&ms), "b1/CO LoH {ms} ms");
+        assert_eq!(r.layers.len(), 4); // after fusion: Agg,Lin,Agg,Lin or LA order
+    }
+
+    #[test]
+    fn overlap_reduces_latency() {
+        let with = sim(ZooModel::B2, "FL", true);
+        let without = sim(ZooModel::B2, "FL", false);
+        assert!(
+            without.cycles > with.cycles,
+            "overlap {} vs no-overlap {}",
+            with.cycles,
+            without.cycles
+        );
+        // Paper Fig. 16 reports 112%-186% speedup from overlapping.
+        let speedup = without.cycles as f64 / with.cycles as f64;
+        assert!((1.05..2.5).contains(&speedup), "overlap speedup {speedup}");
+    }
+
+    #[test]
+    fn bigger_graph_bigger_latency() {
+        let co = sim(ZooModel::B1, "CO", true);
+        let pu = sim(ZooModel::B1, "PU", true);
+        let fl = sim(ZooModel::B1, "FL", true);
+        assert!(co.cycles < pu.cycles && pu.cycles < fl.cycles);
+    }
+
+    #[test]
+    fn wider_model_slower() {
+        let b1 = sim(ZooModel::B1, "PU", true);
+        let b2 = sim(ZooModel::B2, "PU", true);
+        assert!(b1.cycles < b2.cycles);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let r = sim(ZooModel::B2, "FL", true);
+        let u = r.utilization();
+        assert!((0.0..=1.0).contains(&u), "utilization {u}");
+    }
+
+    #[test]
+    fn layer_accounting_sums() {
+        let r = sim(ZooModel::B1, "PU", true);
+        let per_layer: u64 = r.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(per_layer, r.cycles);
+        assert!(r.total_mem_bytes > 0);
+    }
+}

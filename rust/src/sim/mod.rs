@@ -1,0 +1,30 @@
+//! Cycle-level simulator of the GraphAGILE overlay (paper Sec. 5 and 7).
+//!
+//! The paper evaluates its Alveo U250 design with a cycle-accurate
+//! simulator plus Ramulator for DDR; this module is the same kind of
+//! artifact. It consumes the **compiled binary** (`isa::Program`) — not
+//! the IR — so everything it times went through the real ISA encoding:
+//!
+//! * [`shuffle`] — the butterfly Index/Data Shuffle Networks (Sec. 5.5,
+//!   Fig. 12), simulated switch-by-switch; the measured uniform-traffic
+//!   throughput calibrates the SpDMM/SDDMM derate,
+//! * [`raw`] — the RAW Unit (Sec. 7, Fig. 13): read-after-write hazard
+//!   stalls with a reorder buffer,
+//! * [`ack`] — effective cycles per compute instruction: microcode trip
+//!   counts (Alg. 1–3) x shuffle/RAW derates,
+//! * [`ddr`] — FPGA DDR channel model (77 GB/s over 4 channels),
+//! * [`pcie`] — host-to-FPGA transfer for T_comm,
+//! * [`scheduler`] — dynamic Tiling-Block-to-PE assignment (Alg. 9),
+//! * [`engine`] — the full run: per-block compute/memory overlap (double
+//!   / triple buffering), per-layer barriers, LoH.
+
+pub mod ack;
+pub mod ddr;
+pub mod engine;
+pub mod pcie;
+pub mod raw;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use engine::{simulate, LayerSim, SimResult};
+pub use pcie::comm_seconds;

@@ -1,0 +1,36 @@
+//! Host-to-FPGA PCIe transfer model: T_comm of the end-to-end latency
+//! (paper Sec. 8, Performance Metric): binary file + GNN weights +
+//! preprocessed graph moved at the sustained PCIe bandwidth (31.5 GB/s,
+//! matched to the baseline CPU-GPU platform).
+
+use crate::config::HwConfig;
+
+/// Seconds to move `bytes` from host memory to FPGA DDR.
+pub fn comm_seconds(hw: &HwConfig, bytes: u64) -> f64 {
+    bytes as f64 / hw.pcie_bw
+}
+
+/// Total bytes moved before inference can start: the processed graph
+/// (features + partition-ordered edges), the model weights, and the
+/// compiled binary.
+pub fn comm_bytes(graph_bytes: u64, weight_bytes: u64, binary_bytes: u64) -> u64 {
+    graph_bytes + weight_bytes + binary_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reddit_scale_transfer() {
+        let hw = HwConfig::alveo_u250();
+        // ~1.95 GB input at 31.5 GB/s ~= 62 ms.
+        let t = comm_seconds(&hw, 1_950_000_000);
+        assert!((0.055..0.07).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn comm_bytes_sums() {
+        assert_eq!(comm_bytes(100, 20, 3), 123);
+    }
+}

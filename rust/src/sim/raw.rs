@@ -1,0 +1,164 @@
+//! RAW Unit model (paper Sec. 7, Fig. 13).
+//!
+//! In SpDMM mode the Gather (Reduce) units read-modify-write vertex
+//! accumulators in the Feature Buffer. When two in-flight edges target
+//! the same destination vertex within the UR pipeline depth, the second
+//! must wait for the first to retire — a read-after-write hazard. The
+//! hardware inserts a reorder buffer (FIFO) that parks conflicting edges
+//! so independent ones can proceed; only when the reorder buffer is
+//! exhausted does the pipeline stall.
+//!
+//! Two models:
+//! * [`stall_factor`] — analytic expected slow-down under uniformly
+//!   random destinations (the macro model's input),
+//! * [`simulate_stream`] — an explicit pipeline simulation used to
+//!   validate the analytic curve and to expose worst cases (star graphs).
+
+/// Analytic expected slow-down factor (>= 1.0) for edge-centric SpDMM:
+/// `lanes` destinations issue per cycle into a pipeline `depth` deep,
+/// over an output tile of `rows` vertices, with a reorder buffer of
+/// `reorder` entries that hides that many conflicting edges.
+///
+/// P(conflict for one edge) = 1 - (1 - 1/rows)^(lanes * depth): the
+/// probability some in-flight edge holds the same accumulator. Each
+/// unhidden conflict costs ~depth/2 extra cycles for its lane group.
+pub fn stall_factor(rows: u64, lanes: usize, depth: usize, reorder: usize) -> f64 {
+    if rows == 0 {
+        return 1.0;
+    }
+    let in_flight = (lanes * depth) as f64;
+    let p_conflict = 1.0 - (1.0 - 1.0 / rows as f64).powf(in_flight);
+    // The reorder buffer hides conflicts as long as independent edges are
+    // available; its effectiveness decays as conflicts saturate it.
+    let hidden = (reorder as f64 / (reorder as f64 + in_flight * p_conflict)).min(1.0);
+    let visible = p_conflict * (1.0 - hidden);
+    1.0 + visible * depth as f64 / 2.0
+}
+
+/// Cycle-accurate pipeline: feed `dsts` one batch of `lanes` per cycle;
+/// a destination already in flight (issued < `depth` cycles ago) stalls
+/// its batch unless the reorder buffer (capacity `reorder`) can park it.
+/// Returns total cycles.
+pub fn simulate_stream(dsts: &[u32], lanes: usize, depth: usize, reorder: usize) -> u64 {
+    use std::collections::VecDeque;
+    // (destination, retire_cycle): an issued edge holds its accumulator
+    // for `depth` cycles (the UR pipeline latency).
+    let mut in_flight: VecDeque<(u32, u64)> = VecDeque::new();
+    let mut parked: VecDeque<u32> = VecDeque::new();
+    let mut cycles = 0u64;
+    let mut i = 0usize;
+    while i < dsts.len() || !parked.is_empty() || !in_flight.is_empty() {
+        cycles += 1;
+        // Retire edges whose pipeline latency has elapsed.
+        while in_flight.front().is_some_and(|&(_, r)| r <= cycles) {
+            in_flight.pop_front();
+        }
+        let busy = |q: &VecDeque<(u32, u64)>, d: u32| q.iter().any(|&(x, _)| x == d);
+        let mut issued = 0;
+        // Parked edges retry first (in order).
+        while issued < lanes {
+            match parked.front() {
+                Some(&d) if !busy(&in_flight, d) => {
+                    parked.pop_front();
+                    in_flight.push_back((d, cycles + depth as u64));
+                    issued += 1;
+                }
+                _ => break, // head-of-line blocked or empty
+            }
+        }
+        while issued < lanes && i < dsts.len() {
+            let d = dsts[i];
+            if busy(&in_flight, d) || parked.contains(&d) {
+                if parked.len() < reorder {
+                    parked.push_back(d);
+                    i += 1;
+                    continue; // parked; the lane can take the next edge
+                } else {
+                    break; // stall: reorder buffer full
+                }
+            }
+            in_flight.push_back((d, cycles + depth as u64));
+            i += 1;
+            issued += 1;
+        }
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn factor_bounds() {
+        // Huge tile: conflicts vanish.
+        let f = stall_factor(16384, 8, 8, 16);
+        assert!(f < 1.05, "large-tile factor {f}");
+        // Tiny tile: conflicts everywhere, factor grows but stays finite.
+        let g = stall_factor(4, 8, 8, 16);
+        assert!(g > 1.05 && g < 1.0 + 8.0, "small-tile factor {g}");
+        assert_eq!(stall_factor(0, 8, 8, 16), 1.0);
+    }
+
+    #[test]
+    fn factor_monotone_in_rows() {
+        let f1 = stall_factor(16, 8, 8, 16);
+        let f2 = stall_factor(256, 8, 8, 16);
+        let f3 = stall_factor(4096, 8, 8, 16);
+        assert!(f1 >= f2 && f2 >= f3, "{f1} {f2} {f3}");
+    }
+
+    #[test]
+    fn uniform_stream_near_ideal() {
+        let mut rng = Rng::new(1);
+        let dsts: Vec<u32> = (0..8000).map(|_| rng.below(16384) as u32).collect();
+        let cycles = simulate_stream(&dsts, 8, 8, 16);
+        let ideal = (dsts.len() / 8) as u64;
+        assert!(
+            cycles < ideal * 13 / 10,
+            "uniform stream {cycles} vs ideal {ideal}"
+        );
+    }
+
+    #[test]
+    fn star_stream_serializes() {
+        // Every edge hits vertex 0: the pipeline degrades toward one edge
+        // per `depth`-ish cycles; must be far worse than uniform.
+        let dsts = vec![0u32; 2000];
+        let star = simulate_stream(&dsts, 8, 8, 16);
+        let mut rng = Rng::new(2);
+        let uni: Vec<u32> = (0..2000).map(|_| rng.below(16384) as u32).collect();
+        let uniform = simulate_stream(&uni, 8, 8, 16);
+        assert!(star > uniform * 4, "star {star} uniform {uniform}");
+    }
+
+    #[test]
+    fn reorder_buffer_helps() {
+        let mut rng = Rng::new(3);
+        // Moderately skewed: 32 distinct destinations.
+        let dsts: Vec<u32> = (0..4000).map(|_| rng.below(32) as u32).collect();
+        let none = simulate_stream(&dsts, 8, 8, 0);
+        let some = simulate_stream(&dsts, 8, 8, 32);
+        assert!(some <= none, "reorder {some} vs none {none}");
+    }
+
+    #[test]
+    fn analytic_tracks_simulation_uniform() {
+        // The analytic factor should land within ~35% of the simulated
+        // slow-down for uniform traffic across tile sizes.
+        let mut rng = Rng::new(4);
+        for rows in [64u64, 1024, 16384] {
+            let dsts: Vec<u32> =
+                (0..16000).map(|_| rng.below(rows) as u32).collect();
+            let cycles = simulate_stream(&dsts, 8, 8, 16) as f64;
+            let ideal = (dsts.len() / 8) as f64;
+            let sim_factor = cycles / ideal;
+            let ana = stall_factor(rows, 8, 8, 16);
+            assert!(
+                (sim_factor / ana - 1.0).abs() < 0.35,
+                "rows={rows}: sim {sim_factor:.3} vs analytic {ana:.3}"
+            );
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Dynamic task scheduling (paper Alg. 9): the Scheduler reads the CSI
+//! of the current Layer Block and assigns each Tiling Block to the first
+//! idle PE; a layer barrier separates Layer Blocks.
+//!
+//! Equivalent discrete-event formulation: blocks are assigned in program
+//! order to the earliest-available PE (PEs signal Idle/Busy with a 1-bit
+//! port; "first idle" == earliest available in event time).
+
+/// Greedy earliest-idle-PE schedule. Returns (makespan, per-PE busy time).
+pub fn schedule_blocks(durations: &[u64], n_pe: usize) -> (u64, Vec<u64>) {
+    assert!(n_pe > 0);
+    let mut avail = vec![0u64; n_pe];
+    let mut busy = vec![0u64; n_pe];
+    for &d in durations {
+        // Earliest-available PE (ties: lowest index, like the priority
+        // encoder on the Idle bit-vector).
+        let (pe, _) = avail
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &t)| (t, i))
+            .unwrap();
+        avail[pe] += d;
+        busy[pe] += d;
+    }
+    (avail.into_iter().max().unwrap_or(0), busy)
+}
+
+/// Load-balance quality: makespan / (sum/n_pe); 1.0 is perfect.
+pub fn imbalance(durations: &[u64], n_pe: usize) -> f64 {
+    let (makespan, busy) = schedule_blocks(durations, n_pe);
+    let total: u64 = busy.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    makespan as f64 / (total as f64 / n_pe as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    #[test]
+    fn empty_and_trivial() {
+        assert_eq!(schedule_blocks(&[], 4).0, 0);
+        assert_eq!(schedule_blocks(&[10], 4).0, 10);
+    }
+
+    #[test]
+    fn equal_blocks_balance_perfectly() {
+        let durations = vec![5u64; 16];
+        let (makespan, busy) = schedule_blocks(&durations, 8);
+        assert_eq!(makespan, 10);
+        assert!(busy.iter().all(|&b| b == 10));
+    }
+
+    #[test]
+    fn one_giant_block_dominates() {
+        let (makespan, _) = schedule_blocks(&[100, 1, 1, 1], 4);
+        assert_eq!(makespan, 100);
+    }
+
+    #[test]
+    fn prop_makespan_bounds() {
+        // Greedy list scheduling: max(d) <= makespan <= sum/n + max(d).
+        forall("greedy-bounds", 60, |rng| {
+            let n = rng.range(1, 200) as usize;
+            let n_pe = rng.range(1, 16) as usize;
+            let durations: Vec<u64> = (0..n).map(|_| rng.range(0, 10_000)).collect();
+            let (makespan, busy) = schedule_blocks(&durations, n_pe);
+            let total: u64 = durations.iter().sum();
+            let dmax = *durations.iter().max().unwrap();
+            crate::prop_assert!(
+                makespan >= dmax && makespan >= total / n_pe as u64,
+                "lower bound violated: makespan {makespan}, dmax {dmax}"
+            );
+            crate::prop_assert!(
+                makespan <= total / n_pe as u64 + dmax + 1,
+                "greedy upper bound violated: {makespan} > {} + {dmax}",
+                total / n_pe as u64
+            );
+            let busy_total: u64 = busy.iter().sum();
+            crate::prop_assert!(busy_total == total, "lost work");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn imbalance_reasonable_for_many_blocks() {
+        let durations: Vec<u64> = (0..500).map(|i| 100 + (i % 37)).collect();
+        let ib = imbalance(&durations, 8);
+        assert!(ib < 1.05, "imbalance {ib}");
+    }
+}

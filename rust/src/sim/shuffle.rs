@@ -1,0 +1,242 @@
+//! Butterfly shuffle networks (paper Sec. 5.5, Fig. 12; HBM-Connect
+//! style [29]).
+//!
+//! The ISN routes p_sys edge indices per cycle to the Feature Buffer
+//! banks; the DSN routes the fetched (feature, edge) pairs to the UR
+//! pipelines. Both are log2(p)-stage butterflies of 2x2 switches with
+//! small FIFOs that absorb transient congestion.
+//!
+//! This module simulates the network switch-by-switch: used directly by
+//! the unit tests (any permutation routes; skewed traffic degrades) and
+//! by [`uniform_throughput`], whose measured edges/cycle calibrates the
+//! macro cycle model in [`super::ack`].
+
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// One butterfly network instance of radix `p` (power of two).
+pub struct Butterfly {
+    p: usize,
+    stages: usize,
+    fifo_depth: usize,
+    /// fifos[stage][port]: packets waiting at the input of `stage`.
+    fifos: Vec<Vec<VecDeque<Packet>>>,
+    /// Packets that reached their output this cycle.
+    pub delivered: Vec<Packet>,
+    cycles: u64,
+}
+
+/// A routed packet: `dest` is the target bank/port.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Packet {
+    pub dest: usize,
+    pub tag: u64,
+}
+
+impl Butterfly {
+    pub fn new(p: usize, fifo_depth: usize) -> Butterfly {
+        assert!(p.is_power_of_two() && p >= 2);
+        let stages = p.trailing_zeros() as usize;
+        Butterfly {
+            p,
+            stages,
+            fifo_depth,
+            fifos: vec![vec![VecDeque::new(); p]; stages + 1],
+            delivered: Vec::new(),
+            cycles: 0,
+        }
+    }
+
+    /// Try to inject a packet at input `port`; false if the stage-0 FIFO
+    /// is full (back-pressure to the Edge Buffer).
+    pub fn inject(&mut self, port: usize, pkt: Packet) -> bool {
+        if self.fifos[0][port].len() >= self.fifo_depth {
+            return false;
+        }
+        self.fifos[0][port].push_back(pkt);
+        true
+    }
+
+    /// Advance one cycle: each 2x2 switch forwards at most one packet per
+    /// output port per cycle (the source of congestion under conflicts).
+    pub fn step(&mut self) {
+        self.cycles += 1;
+        // Walk stages back-to-front so a packet moves one stage per cycle.
+        for s in (0..self.stages).rev() {
+            // Pair width at stage s: ports differing in bit
+            // (stages-1-s) form a switch.
+            let bit = self.stages - 1 - s;
+            let mask = 1usize << bit;
+            let mut granted: Vec<Option<usize>> = vec![None; self.p]; // out port -> in port
+            for port in 0..self.p {
+                if let Some(pkt) = self.fifos[s][port].front() {
+                    // Output port at this stage: keep all bits, set bit
+                    // `bit` to the destination's bit.
+                    let want_bit = (pkt.dest >> bit) & 1;
+                    let out = (port & !mask) | (want_bit << bit);
+                    // Next stage FIFO must have room; port priority: lower
+                    // input wins (round-robin omitted for determinism).
+                    let room = if s + 1 == self.stages {
+                        true // delivery stage
+                    } else {
+                        self.fifos[s + 1][out].len() < self.fifo_depth
+                    };
+                    if room && granted[out].is_none() {
+                        granted[out] = Some(port);
+                    }
+                }
+            }
+            for out in 0..self.p {
+                if let Some(inp) = granted[out] {
+                    let pkt = self.fifos[s][inp].pop_front().unwrap();
+                    if s + 1 == self.stages {
+                        debug_assert_eq!(
+                            out, pkt.dest,
+                            "butterfly misroute: port {out} != dest {}",
+                            pkt.dest
+                        );
+                        self.delivered.push(pkt);
+                    } else {
+                        self.fifos[s + 1][out].push_back(pkt);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifos.iter().all(|st| st.iter().all(|f| f.is_empty()))
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Route a whole batch list: returns cycles until all delivered.
+    /// `batches[i]` is the set of (input port, dest) injected together.
+    pub fn route_all(&mut self, batches: &[Vec<(usize, usize)>]) -> u64 {
+        let start = self.cycles;
+        let mut tag = 0u64;
+        let mut pending: VecDeque<&Vec<(usize, usize)>> = batches.iter().collect();
+        let mut current: Vec<(usize, Packet)> = Vec::new();
+        loop {
+            // Refill the injection window from the next batch.
+            if current.is_empty() {
+                if let Some(batch) = pending.pop_front() {
+                    current = batch
+                        .iter()
+                        .map(|&(port, dest)| {
+                            tag += 1;
+                            (port, Packet { dest, tag })
+                        })
+                        .collect();
+                }
+            }
+            // Inject whatever fits this cycle.
+            current.retain(|&(port, pkt)| !self.inject(port, pkt));
+            self.step();
+            if current.is_empty() && pending.is_empty() && self.is_empty() {
+                return self.cycles - start;
+            }
+        }
+    }
+}
+
+/// Measured uniform-random throughput (delivered packets per cycle) of a
+/// radix-`p` butterfly with `fifo_depth` FIFOs — the calibration constant
+/// for the SpDMM/SDDMM cycle derate. Deterministic in `seed`.
+pub fn uniform_throughput(p: usize, fifo_depth: usize, seed: u64) -> f64 {
+    let mut net = Butterfly::new(p, fifo_depth);
+    let mut rng = Rng::new(seed);
+    let n_batches = 512;
+    let batches: Vec<Vec<(usize, usize)>> = (0..n_batches)
+        .map(|_| {
+            (0..p)
+                .map(|port| (port, rng.below(p as u64) as usize))
+                .collect()
+        })
+        .collect();
+    let cycles = net.route_all(&batches);
+    let total = (n_batches * p) as f64;
+    total / cycles as f64 / p as f64 // fraction of ideal (p per cycle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    #[test]
+    fn identity_permutation_is_full_rate() {
+        let mut net = Butterfly::new(8, 4);
+        let batches: Vec<Vec<(usize, usize)>> =
+            (0..64).map(|_| (0..8).map(|i| (i, i)).collect()).collect();
+        let cycles = net.route_all(&batches);
+        // Pipeline: 64 batches + log2(8) drain.
+        assert!(cycles <= 64 + 3 + 1, "cycles {cycles}");
+        assert_eq!(net.delivered.len(), 64 * 8);
+    }
+
+    #[test]
+    fn prop_any_permutation_routes_correctly() {
+        forall("butterfly-permutation", 40, |rng| {
+            let p = 1 << rng.range(1, 6); // 2..32
+            let mut perm: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut perm);
+            let mut net = Butterfly::new(p, 4);
+            let batch: Vec<(usize, usize)> =
+                (0..p).map(|i| (i, perm[i])).collect();
+            net.route_all(std::slice::from_ref(&batch));
+            crate::prop_assert!(
+                net.delivered.len() == p,
+                "delivered {} of {p}",
+                net.delivered.len()
+            );
+            for pkt in &net.delivered {
+                crate::prop_assert!(
+                    perm.contains(&pkt.dest),
+                    "bogus dest {}",
+                    pkt.dest
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hotspot_traffic_serializes() {
+        // All packets to bank 0: throughput collapses to ~1/p.
+        let p = 16;
+        let mut net = Butterfly::new(p, 4);
+        let batches: Vec<Vec<(usize, usize)>> =
+            (0..32).map(|_| (0..p).map(|i| (i, 0usize)).collect()).collect();
+        let cycles = net.route_all(&batches);
+        assert!(cycles >= (32 * p) as u64, "hotspot cycles {cycles}");
+    }
+
+    #[test]
+    fn uniform_throughput_reasonable() {
+        for p in [8usize, 16, 32] {
+            let eta = uniform_throughput(p, 4, 42);
+            assert!(
+                (0.3..=1.0).contains(&eta),
+                "p={p}: eta={eta} out of expected band"
+            );
+        }
+    }
+
+    #[test]
+    fn throughput_deterministic_in_seed() {
+        assert_eq!(
+            uniform_throughput(16, 4, 7).to_bits(),
+            uniform_throughput(16, 4, 7).to_bits()
+        );
+    }
+
+    #[test]
+    fn deeper_fifos_do_not_hurt() {
+        let shallow = uniform_throughput(16, 2, 11);
+        let deep = uniform_throughput(16, 8, 11);
+        assert!(deep >= shallow * 0.95, "shallow {shallow} deep {deep}");
+    }
+}

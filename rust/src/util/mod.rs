@@ -1,0 +1,81 @@
+//! Small shared utilities: deterministic PRNG, timers, formatting, and a
+//! minimal property-testing harness (the offline vendor set has no
+//! proptest; `forall` gives us seeded randomized invariants with failure
+//! reporting).
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::forall;
+pub use rng::Rng;
+
+use std::time::Instant;
+
+/// Measure wall-clock time of `f`, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Human formatting for latencies expressed in milliseconds.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 1000.0 {
+        format!("{:.2} s", ms / 1000.0)
+    } else if ms >= 1.0 {
+        format!("{ms:.3} ms")
+    } else {
+        format!("{:.1} us", ms * 1000.0)
+    }
+}
+
+/// Human formatting for byte sizes.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GB", b / KB / KB / KB)
+    } else if b >= KB * KB {
+        format!("{:.3} MB", b / KB / KB)
+    } else if b >= KB {
+        format!("{:.1} KB", b / KB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(1500.0), "1.50 s");
+        assert_eq!(fmt_ms(2.5), "2.500 ms");
+        assert_eq!(fmt_ms(0.5), "500.0 us");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

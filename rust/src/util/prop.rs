@@ -1,0 +1,48 @@
+//! Minimal property-testing harness (no proptest in the offline vendor
+//! set). `forall` runs a seeded closure N times with independent RNGs and
+//! reports the failing seed so a failure reproduces exactly.
+
+use super::rng::Rng;
+
+/// Run `body` for `cases` seeded RNGs. On panic-free falsification
+/// (`body` returns `Err(msg)`), panic with the reproducing seed.
+pub fn forall(name: &str, cases: u64, mut body: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        // Decorrelate case seeds; keep them printable/reproducible.
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!("property `{name}` falsified at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience assertion for use inside `forall` bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64-below", 50, |rng| {
+            let n = rng.range(1, 1000);
+            let x = rng.below(n);
+            if x < n { Ok(()) } else { Err(format!("{x} >= {n}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn forall_reports_failures() {
+        forall("always-false", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration tests of the full compiler pipeline: every zoo model x
+//! representative datasets, binary round-trips, optimization invariants.
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::{dataset, ALL_DATASETS};
+use graphagile::ir::{LayerType, ALL_MODELS};
+use graphagile::isa::{Instr, Program};
+
+#[test]
+fn all_models_compile_on_small_datasets() {
+    let hw = HwConfig::alveo_u250();
+    for key in ["CI", "CO", "PU"] {
+        let ds = dataset(key).unwrap();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        for m in ALL_MODELS {
+            let ir = m.build(ds.meta());
+            let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+            exe.ir.validate().unwrap_or_else(|e| panic!("{}/{key}: {e}", m.key()));
+            assert_eq!(exe.program.layers.len(), exe.ir.n_layers());
+            assert_eq!(exe.program.layers.len(), exe.tasks.len());
+            let bytes = exe.program.to_bytes();
+            let back = Program::from_bytes(&bytes).unwrap();
+            assert_eq!(back, exe.program, "{}/{key} binary roundtrip", m.key());
+        }
+    }
+}
+
+#[test]
+fn binary_sizes_track_paper_shape() {
+    // Table 8 shape: binaries are sub-MB-to-MB scale, tiny vs inputs, and
+    // grow with both the model depth and the graph size.
+    let hw = HwConfig::alveo_u250();
+    // PU and FL share f = 500, isolating the graph-size effect.
+    let pu = dataset("PU").unwrap();
+    let fl = dataset("FL").unwrap();
+    let pu_tiles = pu.tile_counts(hw.n1() as u64);
+    let fl_tiles = fl.tile_counts(hw.n1() as u64);
+    let size = |m: graphagile::ir::ZooModel,
+                ds: &graphagile::graph::Dataset,
+                t: &graphagile::graph::TileCounts| {
+        compile(&m.build(ds.meta()), t, &hw, CompileOptions::default())
+            .program
+            .size_bytes()
+    };
+    use graphagile::ir::ZooModel::*;
+    let b1_pu = size(B1, &pu, &pu_tiles);
+    let b5_pu = size(B5, &pu, &pu_tiles);
+    let b1_fl = size(B1, &fl, &fl_tiles);
+    assert!(b1_pu < b5_pu, "deeper model => bigger binary");
+    assert!(b1_pu < b1_fl, "bigger graph => bigger binary (same f)");
+    assert!(b5_pu < 10 << 20, "binaries stay megabyte-scale");
+    // Negligible vs the input graph (paper Sec. 8.1).
+    assert!(b1_fl * 20 < fl.meta().input_bytes());
+}
+
+#[test]
+fn order_opt_never_increases_complexity() {
+    for m in ALL_MODELS {
+        for ds in &ALL_DATASETS[..4] {
+            let ir0 = m.build(ds.meta());
+            let mut ir1 = ir0.clone();
+            graphagile::compiler::order::optimize(&mut ir1);
+            assert!(
+                ir1.total_complexity() <= ir0.total_complexity(),
+                "{}/{}",
+                m.key(),
+                ds.key
+            );
+            ir1.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn fusion_eliminates_all_eltwise_layers_in_zoo() {
+    // Every zoo model's Activations/BatchNorms sit behind fusable
+    // parents, so the fused IR contains none.
+    let ds = dataset("PU").unwrap();
+    for m in ALL_MODELS {
+        let mut ir = m.build(ds.meta());
+        graphagile::compiler::fusion::fuse(&mut ir);
+        assert_eq!(ir.count(LayerType::Activation), 0, "{}", m.key());
+        assert_eq!(ir.count(LayerType::BatchNorm), 0, "{}", m.key());
+    }
+}
+
+#[test]
+fn unfused_program_contains_standalone_act_instrs() {
+    let hw = HwConfig::alveo_u250();
+    let ds = dataset("CO").unwrap();
+    let tiles = ds.tile_counts(hw.n1() as u64);
+    let ir = graphagile::ir::ZooModel::B1.build(ds.meta());
+    let exe = compile(
+        &ir,
+        &tiles,
+        &hw,
+        CompileOptions { fusion: false, order_opt: false, ..Default::default() },
+    );
+    let has_act = exe
+        .program
+        .layers
+        .iter()
+        .flat_map(|l| &l.blocks)
+        .flat_map(|b| &b.instrs)
+        .any(|i| matches!(i, Instr::Act { .. }));
+    assert!(has_act, "standalone Activation layer must emit Act instrs");
+}
+
+#[test]
+fn compiled_csi_counts_are_consistent() {
+    let hw = HwConfig::alveo_u250();
+    let ds = dataset("FL").unwrap();
+    let tiles = ds.tile_counts(hw.n1() as u64);
+    for m in [graphagile::ir::ZooModel::B2, graphagile::ir::ZooModel::B6] {
+        let exe = compile(&m.build(ds.meta()), &tiles, &hw, CompileOptions::default());
+        for lb in &exe.program.layers {
+            let Instr::Csi { n_tiling_blocks, layer_type, .. } = lb.csi else {
+                panic!("no CSI")
+            };
+            assert_eq!(n_tiling_blocks as usize, lb.blocks.len());
+            assert!(LayerType::from_u8(layer_type).is_some());
+        }
+    }
+}
+
+#[test]
+fn loc_scales_roughly_linearly_with_graph() {
+    // T_LoC is O(|V| + |E|): PU -> FL (20x edges) must not blow up
+    // super-linearly (generous slack for constant terms + timer noise).
+    use graphagile::graph::TileCounts;
+    use graphagile::util::timed;
+    let pu = dataset("PU").unwrap();
+    let fl = dataset("FL").unwrap();
+    let (psrc, pdst) = pu.edge_arrays();
+    let (fsrc, fdst) = fl.edge_arrays();
+    let (_, t_pu) = timed(|| TileCounts::from_edges(&psrc, &pdst, pu.n_vertices, 16384));
+    let (_, t_fl) = timed(|| TileCounts::from_edges(&fsrc, &fdst, fl.n_vertices, 16384));
+    let edge_ratio = fl.n_edges as f64 / pu.n_edges as f64;
+    assert!(
+        t_fl < t_pu * edge_ratio * 8.0 + 0.05,
+        "partitioning not ~linear: {t_pu}s -> {t_fl}s (edges x{edge_ratio:.0})"
+    );
+}

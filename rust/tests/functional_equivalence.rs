@@ -1,0 +1,202 @@
+//! Functional equivalence across all three execution paths:
+//!
+//!   golden (whole-graph rust)  ==  functional/RustBackend (tile path)
+//!                              ==  functional/PjrtBackend (AOT HLO
+//!                                  kernels from Pallas/JAX, via PJRT)
+//!
+//! This is the proof that the compiler's partition-centric schedule and
+//! the L1 kernels compose functionally (DESIGN.md Sec. 5). Tests are
+//! skipped (not failed) when `make artifacts` has not been run.
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::exec::{golden_forward, FunctionalExecutor, RustBackend, WeightStore};
+use graphagile::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
+use graphagile::ir::ZooModel;
+use graphagile::runtime::{client_args, find_artifacts_dir, PjrtBackend, PjrtRuntime};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = find_artifacts_dir()?;
+    Some(PjrtRuntime::load(&dir).expect("artifacts present but failed to load"))
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let scale = a.iter().fold(1f32, |m, v| m.max(v.abs()));
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max)
+        / scale
+}
+
+#[test]
+fn pjrt_gemm_kernel_matches_rust_ops() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    use graphagile::exec::TileBackend;
+    let mut be = PjrtBackend::new(&rt).unwrap();
+    let g = be.geom();
+    let mut rng = graphagile::util::Rng::new(1);
+    let (m, k, n) = (50, 30, 20); // deliberately unpadded shapes
+    let h: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    assert!(m <= g.n && k <= g.f && n <= g.f);
+    let got = be.gemm(&h, m, k, &w, n, &b);
+    let want = graphagile::exec::ops::gemm_bias_act(
+        &h,
+        m,
+        k,
+        &w,
+        n,
+        &b,
+        graphagile::isa::Activation::None,
+    );
+    assert!(max_rel_err(&want, &got) < 1e-4, "err {}", max_rel_err(&want, &got));
+}
+
+#[test]
+fn pjrt_spdmm_kernel_matches_rust_ops() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use graphagile::exec::TileBackend;
+    use graphagile::isa::AggOp;
+    let mut be = PjrtBackend::new(&rt).unwrap();
+    let mut rng = graphagile::util::Rng::new(2);
+    let (n_in, n_out, f, e) = (100usize, 90usize, 48usize, 700usize);
+    let src: Vec<u32> = (0..e).map(|_| rng.below(n_in as u64) as u32).collect();
+    let dst: Vec<u32> = (0..e).map(|_| rng.below(n_out as u64) as u32).collect();
+    let ew: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+    let h: Vec<f32> = (0..n_in * f).map(|_| rng.normal()).collect();
+    for aggop in [AggOp::Sum, AggOp::Max] {
+        let got = be.spdmm(&src, &dst, &ew, &h, n_in, f, n_out, aggop);
+        let want = graphagile::exec::ops::spdmm(&src, &dst, &ew, &h, f, n_out, aggop);
+        assert!(
+            max_rel_err(&want, &got) < 1e-4,
+            "{aggop:?} err {}",
+            max_rel_err(&want, &got)
+        );
+    }
+}
+
+#[test]
+fn pjrt_sddmm_and_vecadd_match_rust_ops() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use graphagile::exec::TileBackend;
+    let mut be = PjrtBackend::new(&rt).unwrap();
+    let mut rng = graphagile::util::Rng::new(3);
+    let (n, f, e) = (110usize, 40usize, 1500usize); // e > 1024: chunking
+    let src: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+    let dst: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+    let h: Vec<f32> = (0..n * f).map(|_| rng.normal()).collect();
+    let got = be.sddmm(&src, &dst, &h, &h, n, n, f);
+    let want = graphagile::exec::ops::sddmm(&src, &dst, &h, &h, f);
+    assert!(max_rel_err(&want, &got) < 1e-4);
+
+    let a: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+    let got = be.vecadd(&a, &b);
+    let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    assert_eq!(got.len(), want.len());
+    assert!(max_rel_err(&want, &got) < 1e-5);
+}
+
+#[test]
+fn full_pipeline_pjrt_matches_golden() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let meta = GraphMeta::new("t", 300, 1500, 32, 4);
+    let g = rmat_edges(meta, Default::default(), 9).gcn_normalized();
+    let hw = HwConfig::functional_tiles();
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let pg = PartitionedGraph::build(&g, cfg);
+    for model in [ZooModel::B1, ZooModel::B7] {
+        let ir = model.build(g.meta.clone());
+        let exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        let x = g.random_features(5);
+        let golden = golden_forward(&exe.ir, &g, &store, &x);
+
+        let mut rust_fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let rust_out = rust_fx.run(&x);
+        assert!(max_rel_err(&golden, &rust_out) < 1e-3);
+
+        let be = PjrtBackend::new(&rt).unwrap();
+        let mut pjrt_fx = FunctionalExecutor::new(&exe, &pg, &store, be);
+        let pjrt_out = pjrt_fx.run(&x);
+        let err = max_rel_err(&golden, &pjrt_out);
+        assert!(err < 1e-3, "{}: pjrt vs golden err {err}", exe.ir.name);
+        assert!(pjrt_fx.backend.launches > 0, "pjrt path did not run kernels");
+    }
+}
+
+#[test]
+fn whole_model_gcn2_artifact_matches_rust() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use client_args::{f32s, i32s};
+    use graphagile::exec::ops;
+    use graphagile::isa::Activation;
+    // Artifact geometry: gcn2_n256_e2048_f64_h32_c8.
+    let name = rt
+        .manifest()
+        .find_prefix("gcn2_")
+        .expect("gcn2 artifact")
+        .to_string();
+    let nums: Vec<usize> = name
+        .strip_prefix("gcn2_")
+        .unwrap()
+        .split(['n', 'e', 'f', 'h', 'c', '_'])
+        .filter_map(|t| t.parse().ok())
+        .collect();
+    let (n, e, f, hdim, c) = (nums[0], nums[1], nums[2], nums[3], nums[4]);
+    let mut rng = graphagile::util::Rng::new(7);
+    let x: Vec<f32> = (0..n * f).map(|_| rng.normal() * 0.5).collect();
+    let src: Vec<i32> = (0..e).map(|_| rng.below(n as u64) as i32).collect();
+    let dst: Vec<i32> = (0..e).map(|_| rng.below(n as u64) as i32).collect();
+    let ew: Vec<f32> = (0..e).map(|_| rng.f32()).collect();
+    let nv = [e as i32];
+    let w1: Vec<f32> = (0..f * hdim).map(|_| rng.normal() * 0.1).collect();
+    let b1 = vec![0f32; hdim];
+    let w2: Vec<f32> = (0..hdim * c).map(|_| rng.normal() * 0.1).collect();
+    let b2 = vec![0f32; c];
+    let got = rt
+        .execute(
+            &name,
+            &[
+                f32s(&x),
+                i32s(&src),
+                i32s(&dst),
+                f32s(&ew),
+                i32s(&nv),
+                f32s(&w1),
+                f32s(&b1),
+                f32s(&w2),
+                f32s(&b2),
+            ],
+        )
+        .unwrap();
+    // Rust replica of model.py::gcn2_forward (auto order):
+    // layer 1 (f > h): LA — linear, aggregate, relu;
+    // layer 2 (h > c): LA — linear, aggregate.
+    let srcu: Vec<u32> = src.iter().map(|&v| v as u32).collect();
+    let dstu: Vec<u32> = dst.iter().map(|&v| v as u32).collect();
+    let z = ops::gemm_bias_act(&x, n, f, &w1, hdim, &b1, Activation::None);
+    let mut z = ops::spdmm(&srcu, &dstu, &ew, &z, hdim, n, graphagile::isa::AggOp::Sum);
+    ops::apply_act(&mut z, Activation::Relu);
+    let z2 = ops::gemm_bias_act(&z, n, hdim, &w2, c, &b2, Activation::None);
+    let want = ops::spdmm(&srcu, &dstu, &ew, &z2, c, n, graphagile::isa::AggOp::Sum);
+    let err = max_rel_err(&want, &got);
+    assert!(err < 1e-3, "gcn2 artifact vs rust: err {err}");
+}

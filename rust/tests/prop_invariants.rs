@@ -1,0 +1,150 @@
+//! Cross-module property tests (seeded randomized invariants via
+//! `util::forall`): compiler output structure, partition coverage,
+//! functional equivalence over random models and graphs.
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::exec::{golden_forward, FunctionalExecutor, RustBackend, WeightStore};
+use graphagile::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
+use graphagile::ir::{GraphGymConfig, ZooModel, ALL_MODELS};
+use graphagile::isa::{AggOp, Instr};
+use graphagile::prop_assert;
+use graphagile::util::forall;
+
+#[test]
+fn prop_program_edge_totals_match_graph() {
+    // For every Aggregate layer of a compiled program, the SpDMM edge
+    // counts sum to fibers(f) x |E| — no edge lost or duplicated by
+    // partitioning + chunking.
+    forall("edge-conservation", 12, |rng| {
+        let n = rng.range(100, 3000);
+        let e = rng.range(200, 20_000);
+        let f = rng.range(8, 600);
+        let meta = GraphMeta::new("p", n, e, f, 4);
+        let hw = HwConfig::alveo_u250();
+        let tiles = graphagile::graph::rmat::rmat_tile_counts(
+            &meta,
+            Default::default(),
+            rng.next_u64(),
+            hw.n1() as u64,
+        );
+        let ir = ZooModel::B7.build(meta); // two Aggregates up front
+        let exe = compile(
+            &ir,
+            &tiles,
+            &hw,
+            CompileOptions { order_opt: false, ..Default::default() },
+        );
+        let fibers = f.div_ceil(hw.n2() as u64);
+        let agg = &exe.program.layers[0];
+        let total: u64 = agg
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter_map(|i| match i {
+                Instr::Spdmm { n_edges, .. } => Some(*n_edges as u64),
+                _ => None,
+            })
+            .sum();
+        prop_assert!(total == fibers * e, "{total} != {fibers} x {e}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_functional_equals_golden_on_random_graphgym_points() {
+    forall("functional-equivalence-graphgym", 6, |rng| {
+        let n = rng.range(80, 400);
+        let e = rng.range(150, 2500);
+        let meta = GraphMeta::new("p", n, e, 16, 4);
+        let g = rmat_edges(meta, Default::default(), rng.next_u64()).gcn_normalized();
+        let hw = HwConfig::functional_tiles();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        let pg = PartitionedGraph::build(&g, cfg);
+        let gg = GraphGymConfig {
+            n_pre: rng.below(2) as usize,
+            n_mp: 1 + rng.below(3) as usize,
+            n_post: 1,
+            hidden: 16,
+            aggop: if rng.below(2) == 0 { AggOp::Sum } else { AggOp::Max },
+            residual: rng.below(2) == 1,
+            batchnorm: rng.below(2) == 1,
+            ..Default::default()
+        };
+        let ir = gg.build("gg-rand", g.meta.clone());
+        let exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, rng.next_u64());
+        let x = g.random_features(rng.next_u64());
+        let golden = golden_forward(&exe.ir, &g, &store, &x);
+        let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let got = fx.run(&x);
+        let scale = golden.iter().fold(1f32, |m, v| m.max(v.abs()));
+        let err = golden
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        prop_assert!(
+            err <= 1e-3 * scale.max(1.0),
+            "err {err} at scale {scale} for {gg:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulated_cycles_monotone_in_edges() {
+    // More edges (same everything else) must never simulate faster.
+    forall("cycles-monotone-edges", 8, |rng| {
+        let n = rng.range(500, 5000);
+        let e1 = rng.range(1000, 30_000);
+        let e2 = e1 * 2;
+        let hw = HwConfig::alveo_u250();
+        let seed = rng.next_u64();
+        let mut cycles = Vec::new();
+        for e in [e1, e2] {
+            let meta = GraphMeta::new("p", n, e, 64, 4);
+            let tiles = graphagile::graph::rmat::rmat_tile_counts(
+                &meta,
+                Default::default(),
+                seed,
+                hw.n1() as u64,
+            );
+            let ir = ZooModel::B1.build(meta);
+            let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+            cycles.push(graphagile::sim::simulate(&exe.program, &hw).cycles);
+        }
+        prop_assert!(cycles[1] >= cycles[0], "{} < {}", cycles[1], cycles[0]);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_zoo_binary_decodes_everywhere() {
+    // Serialize with one build, decode with the library parser, and the
+    // per-block compute-cycle accounting must be preserved exactly.
+    forall("binary-stability", 5, |rng| {
+        let meta = GraphMeta::new("p", rng.range(100, 2000), rng.range(200, 10_000), 128, 8);
+        let hw = HwConfig::alveo_u250();
+        let tiles = graphagile::graph::rmat::rmat_tile_counts(
+            &meta,
+            Default::default(),
+            rng.next_u64(),
+            hw.n1() as u64,
+        );
+        for m in ALL_MODELS {
+            let exe = compile(&m.build(meta.clone()), &tiles, &hw, CompileOptions::default());
+            let back =
+                graphagile::isa::Program::from_bytes(&exe.program.to_bytes()).unwrap();
+            for (a, b) in exe.program.layers.iter().zip(&back.layers) {
+                for (x, y) in a.blocks.iter().zip(&b.blocks) {
+                    prop_assert!(
+                        x.compute_cycles(16) == y.compute_cycles(16),
+                        "cycle accounting changed across serialization"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}

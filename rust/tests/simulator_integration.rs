@@ -1,0 +1,113 @@
+//! Simulator integration: paper-shape assertions over the cycle model —
+//! the Fig. 14/15/16 ablation signatures and cross-model orderings at
+//! full dataset scale (small/medium graphs to keep test time sane).
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::sim::simulate;
+
+fn loh(
+    m: ZooModel,
+    key: &str,
+    opts: CompileOptions,
+    overlap: bool,
+) -> f64 {
+    let ds = dataset(key).unwrap();
+    let hw = HwConfig { overlap, ..HwConfig::alveo_u250() };
+    let tiles = ds.tile_counts(hw.n1() as u64);
+    let exe = compile(&m.build(ds.meta()), &tiles, &hw, opts);
+    simulate(&exe.program, &hw).loh_seconds()
+}
+
+const ON: CompileOptions =
+    CompileOptions { order_opt: true, fusion: true, skip_empty_tiles: true };
+
+#[test]
+fn fig14_signature_order_opt() {
+    // b1 and b7 gain a lot (big f_in -> small f_out); the gain on CI
+    // (f=3703) is dramatic, echoing the paper's 82% / 260% averages.
+    let no_order = CompileOptions { order_opt: false, ..ON };
+    for m in [ZooModel::B1, ZooModel::B7] {
+        let with = loh(m, "CI", ON, true);
+        let without = loh(m, "CI", no_order, true);
+        let speedup = without / with;
+        assert!(speedup > 1.5, "{m:?} order-opt speedup {speedup}");
+    }
+    // b8: pre-MLP equalizes widths; no effect (paper: 0%).
+    let with = loh(ZooModel::B8, "PU", ON, true);
+    let without = loh(ZooModel::B8, "PU", no_order, true);
+    assert!((without / with - 1.0).abs() < 0.02, "b8 must be ~0%");
+}
+
+#[test]
+fn fig15_signature_fusion() {
+    // Fusion removes eltwise round-trips: a few percent, always >= 0.
+    let no_fusion = CompileOptions { fusion: false, ..ON };
+    for m in [ZooModel::B1, ZooModel::B3, ZooModel::B8] {
+        let with = loh(m, "FL", ON, true);
+        let without = loh(m, "FL", no_fusion, true);
+        let pct = (without / with - 1.0) * 100.0;
+        assert!((0.0..60.0).contains(&pct), "{m:?} fusion {pct}%");
+    }
+}
+
+#[test]
+fn fig16_signature_overlap() {
+    // Overlap buys tens of percent to ~2x (paper: 112%-186%).
+    for m in [ZooModel::B1, ZooModel::B2, ZooModel::B5] {
+        let with = loh(m, "FL", ON, true);
+        let without = loh(m, "FL", ON, false);
+        let speedup = without / with;
+        assert!(
+            (1.1..2.8).contains(&speedup),
+            "{m:?} overlap speedup {speedup}"
+        );
+    }
+}
+
+#[test]
+fn table7_cross_model_orderings() {
+    // Per-column orderings of Table 7 that are structural: b1 < b2 < b4,
+    // b5 is the heaviest of the non-GraphGym models on PU/FL.
+    for key in ["PU", "FL"] {
+        let t = |m| loh(m, key, ON, true);
+        assert!(t(ZooModel::B1) < t(ZooModel::B2), "{key}: b1 < b2");
+        assert!(t(ZooModel::B2) < t(ZooModel::B4), "{key}: b2 < b4");
+        assert!(t(ZooModel::B5) > t(ZooModel::B3), "{key}: b5 heaviest");
+    }
+}
+
+#[test]
+fn utilization_improves_with_model_width() {
+    // Wider models amortize memory traffic: b2 (hidden 128) must hit
+    // higher ACK utilization than b1 (hidden 16) on the same graph.
+    let ds = dataset("FL").unwrap();
+    let hw = HwConfig::alveo_u250();
+    let tiles = ds.tile_counts(hw.n1() as u64);
+    let util = |m: ZooModel| {
+        let exe = compile(&m.build(ds.meta()), &tiles, &hw, CompileOptions::default());
+        simulate(&exe.program, &hw).utilization()
+    };
+    assert!(util(ZooModel::B2) > util(ZooModel::B1));
+}
+
+#[test]
+fn more_pes_not_slower() {
+    let ds = dataset("FL").unwrap();
+    let cycles = |n_pe: usize| {
+        let hw = HwConfig { n_pe, ..HwConfig::alveo_u250() };
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let exe = compile(
+            &ZooModel::B2.build(ds.meta()),
+            &tiles,
+            &hw,
+            CompileOptions::default(),
+        );
+        simulate(&exe.program, &hw).cycles
+    };
+    let c4 = cycles(4);
+    let c8 = cycles(8);
+    assert!(c8 <= c4, "8 PEs ({c8}) slower than 4 ({c4})");
+}
