@@ -1,29 +1,36 @@
 //! End-to-end functional inference — the driver that proves all three
-//! layers of the stack compose (DESIGN.md Sec. 5):
+//! layers of the stack compose (DESIGN.md Sec. 5), now phrased through
+//! the engine layer: every execution substrate implements
+//! [`graphagile::engine::InferenceEngine`] and consumes the *same*
+//! compiled [`graphagile::compiler::Executable`].
 //!
 //!   L1 Pallas kernels (GEMM/SpDMM/SDDMM/VecAdd, interpret=True)
 //!     -> AOT-lowered by python/compile/aot.py to HLO text (build time)
 //!   L2 JAX model (2-layer GCN) -> whole-model HLO artifact
-//!   L3 rust coordinator: compiles the GNN to the GraphAGILE ISA, then
-//!      *executes the compiled schedule* tile-by-tile on the PJRT CPU
-//!      client — python never runs here.
+//!   L3 rust: compiles the GNN to the GraphAGILE ISA, then executes the
+//!      compiled schedule through four engines — python never runs here:
 //!
-//! The run checks three ways of computing the same inference:
-//!   golden (whole-graph rust)  vs  tile path w/ rust ops
-//!                              vs  tile path w/ PJRT kernels
-//! and additionally executes the whole-model gcn2 HLO artifact.
+//!   golden (whole-graph rust)   — ground truth
+//!   functional (rust tile ops)  — compiled schedule, reference kernels
+//!   pjrt (Pallas/JAX HLO tiles) — compiled schedule, AOT kernels
+//!   sim (cycle model)           — the same executable's virtual T_LoH
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_inference
+//! # Prerequisite: the offline vendor set has no `xla` crate — add it to
+//! # [dependencies] in Cargo.toml first (see the `pjrt` feature note).
+//! make artifacts && cargo run --release --features pjrt --example e2e_inference
 //! ```
 
 use graphagile::compiler::{compile, CompileOptions};
 use graphagile::config::HwConfig;
-use graphagile::exec::{golden_forward, FunctionalExecutor, RustBackend, WeightStore};
+use graphagile::engine::{
+    EngineInput, FunctionalEngine, GoldenEngine, InferenceEngine, PjrtEngine, SimEngine,
+};
+use graphagile::exec::WeightStore;
 use graphagile::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
 use graphagile::ir::ZooModel;
-use graphagile::runtime::{client_args, find_artifacts_dir, PjrtBackend, PjrtRuntime};
-use graphagile::sim::simulate;
+use graphagile::runtime::{client_args, find_artifacts_dir, PjrtRuntime};
+use graphagile::util::fmt_bytes;
 use std::time::Instant;
 
 fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
@@ -37,8 +44,11 @@ fn main() -> anyhow::Result<()> {
     println!("loading + compiling AOT artifacts from {} ...", dir.display());
     let t0 = Instant::now();
     let rt = PjrtRuntime::load(&dir)?;
-    println!("  {} artifacts compiled in {:.2} s (once, at startup)",
-        rt.manifest().entries.len(), t0.elapsed().as_secs_f64());
+    println!(
+        "  {} artifacts compiled in {:.2} s (once, at startup)",
+        rt.manifest().entries.len(),
+        t0.elapsed().as_secs_f64()
+    );
 
     // --- The workload: a 300-vertex R-MAT graph, 2-layer GCN (b1). ----
     let meta = GraphMeta::new("demo", 300, 1500, 32, 4);
@@ -56,40 +66,45 @@ fn main() -> anyhow::Result<()> {
         g.meta.name,
         g.n(),
         g.m(),
-        exe.program
-            .layers
-            .iter()
-            .map(|l| l.blocks.len())
-            .sum::<usize>(),
+        exe.report.blocks,
     );
 
-    // --- Path 1: golden whole-graph reference. -------------------------
-    let t0 = Instant::now();
-    let golden = golden_forward(&exe.ir, &g, &store, &x);
-    let t_golden = t0.elapsed().as_secs_f64();
-
-    // --- Path 2: compiled schedule, rust tile backend. -----------------
-    let t0 = Instant::now();
-    let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
-    let rust_out = fx.run(&x);
-    let t_rust = t0.elapsed().as_secs_f64();
-    let err_rust = max_rel_err(&golden, &rust_out);
-
-    // --- Path 3: compiled schedule, PJRT (Pallas/JAX HLO kernels). -----
-    let be = PjrtBackend::new(&rt)?;
-    let t0 = Instant::now();
-    let mut fx = FunctionalExecutor::new(&exe, &pg, &store, be);
-    let pjrt_out = fx.run(&x);
-    let t_pjrt = t0.elapsed().as_secs_f64();
-    let launches = fx.backend.launches;
-    let err_pjrt = max_rel_err(&golden, &pjrt_out);
-
-    println!("\nfunctional equivalence (max relative error vs golden):");
-    println!("  golden whole-graph      {t_golden:9.4} s        (reference)");
-    println!("  tile path / rust ops    {t_rust:9.4} s   err {err_rust:.2e}");
-    println!("  tile path / PJRT        {t_pjrt:9.4} s   err {err_pjrt:.2e}   ({launches} kernel launches)");
-    anyhow::ensure!(err_rust < 1e-3, "rust tile path diverged");
-    anyhow::ensure!(err_pjrt < 1e-3, "pjrt tile path diverged");
+    // --- One Executable, four engines. ---------------------------------
+    let input = EngineInput { graph: &g, partitioned: &pg, store: &store, x: &x };
+    let mut engines: Vec<Box<dyn InferenceEngine + '_>> = vec![
+        Box::new(GoldenEngine),
+        Box::new(FunctionalEngine),
+        Box::new(PjrtEngine::new(&rt)),
+        Box::new(SimEngine::new(HwConfig::alveo_u250())),
+    ];
+    let mut golden: Option<Vec<f32>> = None;
+    println!("\nengines over the same compiled program:");
+    for engine in engines.iter_mut() {
+        let p = engine.run(&exe, Some(&input))?;
+        let vs = match (&golden, &p.output) {
+            (Some(gold), Some(out)) => format!("err {:.2e} vs golden", max_rel_err(gold, out)),
+            (None, Some(_)) => "(reference)".to_string(),
+            _ => format!("{} cycles (virtual)", p.cycles),
+        };
+        println!(
+            "  {:<10} {:>9.4} s  {:>6} launches  {:>10}  {}",
+            p.engine,
+            p.latency_s,
+            p.kernel_launches,
+            fmt_bytes(p.bytes_moved),
+            vs
+        );
+        if let (Some(gold), Some(out)) = (&golden, &p.output) {
+            anyhow::ensure!(
+                max_rel_err(gold, out) < 1e-3,
+                "{} diverged from golden",
+                p.engine
+            );
+        }
+        if golden.is_none() {
+            golden = p.output;
+        }
+    }
 
     // --- Whole-model artifact: L2's gcn2 forward as one executable. ----
     let name = rt
@@ -119,8 +134,8 @@ fn main() -> anyhow::Result<()> {
         f32s(&xs), i32s(&src), i32s(&dst), f32s(&ew), i32s(&nv),
         f32s(&w1), f32s(&b1), f32s(&w2), f32s(&b2),
     ];
-    // Warm once, then time a batch of requests through the coordinator's
-    // request loop (python is nowhere in this process).
+    // Warm once, then time a batch of requests (python is nowhere in
+    // this process).
     rt.execute(&name, &args)?;
     let reps = 50;
     let t0 = Instant::now();
@@ -138,12 +153,6 @@ fn main() -> anyhow::Result<()> {
     );
     anyhow::ensure!(out.len() == n * c && out.iter().all(|v| v.is_finite()));
 
-    // --- And the performance claim for the same workload. --------------
-    let sim = simulate(&exe.program, &HwConfig::alveo_u250());
-    println!(
-        "\nsimulated overlay LoH for this workload: {:.3} ms (vs paper-scale graphs in EXPERIMENTS.md)",
-        sim.loh_ms()
-    );
     println!("\ne2e_inference OK");
     Ok(())
 }

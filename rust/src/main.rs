@@ -229,12 +229,22 @@ fn cmd_disasm(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-tenant serving demo: a mixed request stream over the program
-/// cache (the cloud-FPGA scenario of the paper's introduction).
+/// Multi-tenant serving demo: a mixed request stream over a fleet of
+/// overlay devices (the cloud-FPGA scenario of the paper's
+/// introduction). Deterministic: the same flags print the same stats.
+///
+/// Flags: `--requests N` (default 64), `--devices N` (default 1),
+/// `--no-affinity`, `--no-coalesce`, `--datasets CO,PU`.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use graphagile::serve::{Coordinator, Request};
+    use graphagile::serve::{Coordinator, FleetConfig, Request};
     use graphagile::util::Rng;
     let n: usize = args.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let cfg = FleetConfig {
+        n_devices: args.get("devices").and_then(|s| s.parse().ok()).unwrap_or(1),
+        affinity: args.get("no-affinity").is_none(),
+        coalesce: args.get("no-coalesce").is_none(),
+    };
+    anyhow::ensure!(cfg.n_devices >= 1, "--devices must be >= 1");
     let datasets = args.datasets()?;
     let small: Vec<_> = datasets
         .into_iter()
@@ -250,17 +260,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
             arrival: i as f64 * 2e-4,
         })
         .collect();
-    let mut c = Coordinator::new(HwConfig::alveo_u250());
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
     let stats = c.run(reqs);
-    println!("served {} requests across 4 tenants:", stats.completed);
-    println!("  cache hits        {} / {}", stats.cache_hits, stats.completed);
+    println!(
+        "served {} requests across 4 tenants on {} device(s):",
+        stats.completed,
+        c.n_devices()
+    );
+    println!(
+        "  cache hits        {} / {} ({} coalesced)",
+        stats.cache_hits, stats.completed, stats.coalesced
+    );
     println!("  latency p50/p99   {:.3} ms / {:.3} ms", stats.p50 * 1e3, stats.p99 * 1e3);
     println!("  mean latency      {:.3} ms", stats.mean * 1e3);
-    println!(
-        "  device utilization {:.1}% over {:.3} s makespan",
-        stats.device_busy / stats.makespan * 100.0,
-        stats.makespan
-    );
+    let util = if stats.makespan > 0.0 {
+        stats.device_busy / (stats.makespan * c.n_devices() as f64) * 100.0
+    } else {
+        0.0
+    };
+    println!("  fleet utilization {util:.1}% over {:.3} s makespan", stats.makespan);
+    for d in c.devices() {
+        println!(
+            "  device {}: {} programs ({}), busy {:.3} s",
+            d.id,
+            d.cache_len(),
+            fmt_bytes(d.cache_bytes()),
+            d.busy
+        );
+    }
     Ok(())
 }
 

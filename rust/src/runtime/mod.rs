@@ -8,11 +8,20 @@
 //!   `HloModuleProto::from_text_file` → compile → execute,
 //! * [`tile_exec`] — a [`crate::exec::TileBackend`] that pads tiles to
 //!   the artifact shapes and runs them on the compiled kernels.
+//!
+//! The PJRT client needs the `xla` crate, which is not in the offline
+//! vendor set; `client`/`tile_exec` are therefore behind the `pjrt`
+//! feature (see Cargo.toml). Artifact discovery stays always-on so the
+//! CLI can report whether `make artifacts` has run.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod tile_exec;
 
 pub use artifacts::{find_artifacts_dir, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::{client_args, ArgValue, PjrtRuntime};
+#[cfg(feature = "pjrt")]
 pub use tile_exec::PjrtBackend;

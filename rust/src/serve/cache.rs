@@ -51,6 +51,12 @@ impl ProgramCache {
         (exe, false)
     }
 
+    /// Whether `key` is already compiled here (affinity-routing probe —
+    /// does not touch the hit/miss counters).
+    pub fn contains(&self, key: &Key) -> bool {
+        self.programs.contains_key(key)
+    }
+
     pub fn len(&self) -> usize {
         self.programs.len()
     }

@@ -1,14 +1,21 @@
 //! The serving request loop: tenants submit (model, graph) inference
-//! requests; the coordinator compiles-or-reuses the program, accounts the
-//! accelerator timeline (one overlay, FIFO with per-model affinity
-//! batching), and reports per-tenant latency percentiles.
+//! requests; the coordinator routes each across a fleet of N overlay
+//! devices ([`super::device::Device`]) via the policy in
+//! [`super::dispatcher::Dispatcher`] — coalesce identical in-flight
+//! work, else prefer a cache-warm device — and accounts every latency on
+//! the deterministic virtual clock ([`super::clock`]).
 //!
-//! Execution latency comes from the cycle-level simulator (one overlay
-//! "device"); the functional PJRT path is exercised separately by
-//! `examples/e2e_inference.rs` — this module is about the *coordination*
-//! behaviour: cache warmup, queueing, batching, fairness.
+//! Compile stalls are charged from the modeled
+//! [`crate::compiler::CompileReport::total`], execution from the cycle
+//! simulator (one overlay design ⇒ one exec time per (model, graph),
+//! memoized fleet-wide). Nothing reads wall-clock time, so a replayed
+//! workload produces bit-identical [`ServeStats`].
 
-use super::cache::ProgramCache;
+use super::cache::Key;
+use super::clock::VirtualClock;
+use super::device::Device;
+use super::dispatcher::{Dispatcher, Route};
+use crate::compiler::Executable;
 use crate::config::HwConfig;
 use crate::graph::Dataset;
 use crate::ir::ZooModel;
@@ -26,83 +33,179 @@ pub struct Request {
 }
 
 /// Completion record.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Response {
     pub tenant: u32,
     pub model: ZooModel,
-    /// Compile time paid by this request (0 on cache hit).
+    /// Device that executed (or will execute) the work.
+    pub device: u32,
+    /// Compile stall paid by this request (0 on a warm hit).
     pub t_compile: f64,
     /// Simulated accelerator execution time.
     pub t_exec: f64,
-    /// Queueing delay before the accelerator was free.
+    /// Queueing delay between program-ready and device-free.
     pub t_queue: f64,
     /// arrival -> completion.
     pub latency: f64,
     pub cache_hit: bool,
+    /// Rode an identical in-flight job (no extra device work).
+    pub coalesced: bool,
 }
 
-/// Aggregate statistics.
-#[derive(Clone, Debug, Default)]
+/// Aggregate statistics. `PartialEq` so replay determinism is testable
+/// as plain equality.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeStats {
     pub completed: u64,
     pub cache_hits: u64,
+    pub coalesced: u64,
     pub p50: f64,
     pub p99: f64,
     pub mean: f64,
+    /// Sum of execution seconds across devices.
     pub device_busy: f64,
     pub makespan: f64,
 }
 
-/// Single-overlay coordinator.
+/// Fleet shape and routing policy.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    pub n_devices: usize,
+    pub affinity: bool,
+    pub coalesce: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig { n_devices: 1, affinity: true, coalesce: true }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice: the smallest
+/// value with at least `ceil(p * n)` observations ≤ it.
+///
+/// Panics on an empty slice (a percentile of nothing has no answer).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Multi-device coordinator.
 pub struct Coordinator {
-    cache: ProgramCache,
-    /// Simulated exec time memo per (model, graph).
-    exec_memo: HashMap<(ZooModel, &'static str), f64>,
+    devices: Vec<Device>,
+    dispatcher: Dispatcher,
+    clock: VirtualClock,
+    /// Modeled exec seconds per (model, graph): every device is the same
+    /// overlay design, so execution time is a fleet-wide property.
+    exec_memo: HashMap<Key, f64>,
     hw: HwConfig,
-    /// Accelerator-free time on the serving clock.
-    device_free: f64,
     pub responses: Vec<Response>,
 }
 
 impl Coordinator {
+    /// Single-overlay coordinator (the paper's deployment).
     pub fn new(hw: HwConfig) -> Coordinator {
+        Coordinator::fleet(hw, FleetConfig::default())
+    }
+
+    pub fn fleet(hw: HwConfig, cfg: FleetConfig) -> Coordinator {
+        assert!(cfg.n_devices >= 1, "fleet needs at least one device");
         Coordinator {
-            cache: ProgramCache::new(hw.clone()),
+            devices: (0..cfg.n_devices).map(|i| Device::new(i, hw.clone())).collect(),
+            dispatcher: Dispatcher { affinity: cfg.affinity, coalesce: cfg.coalesce },
+            clock: VirtualClock::new(),
             exec_memo: HashMap::new(),
             hw,
-            device_free: 0.0,
             responses: Vec::new(),
         }
     }
 
-    /// Process requests in arrival order (the scheduler's dynamic
-    /// batching happens *inside* a program via Alg. 9; across requests
-    /// the overlay runs FIFO — switching models costs nothing but the
-    /// binary pointer swap, which is the overlay's selling point).
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// Virtual time of the last processed event.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Fleet-wide cache hit rate over processed responses (coalesced
+    /// responses count as hits: they never touched a compiler).
+    pub fn hit_rate(&self) -> f64 {
+        if self.responses.is_empty() {
+            return 0.0;
+        }
+        self.responses.iter().filter(|r| r.cache_hit).count() as f64
+            / self.responses.len() as f64
+    }
+
+    /// Process a workload: arrival events in deterministic order (time,
+    /// then tenant/model/graph for simultaneous arrivals), each routed
+    /// by the dispatcher, scheduled on a device timeline, and accounted
+    /// on the virtual clock.
     pub fn run(&mut self, mut requests: Vec<Request>) -> ServeStats {
-        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        requests.sort_by(|a, b| {
+            a.arrival
+                .total_cmp(&b.arrival)
+                .then(a.tenant.cmp(&b.tenant))
+                .then(a.model.key().cmp(b.model.key()))
+                .then(a.dataset.key.cmp(b.dataset.key))
+        });
         for rq in requests {
-            let t0 = std::time::Instant::now();
-            let (exe, hit) = self.cache.get(rq.model, &rq.dataset);
-            let t_compile = if hit { 0.0 } else { t0.elapsed().as_secs_f64() };
-            let t_exec = *self
-                .exec_memo
-                .entry((rq.model, rq.dataset.key))
-                .or_insert_with(|| simulate(&exe.program, &self.hw).loh_seconds());
-            // Ready once compiled; waits for the device.
-            let ready = rq.arrival + t_compile;
-            let start = ready.max(self.device_free);
-            let done = start + t_exec;
-            self.device_free = done;
-            self.responses.push(Response {
-                tenant: rq.tenant,
-                model: rq.model,
-                t_compile,
-                t_exec,
-                t_queue: start - ready,
-                latency: done - rq.arrival,
-                cache_hit: hit,
-            });
+            self.clock.advance_to(rq.arrival);
+            let key: Key = (rq.model, rq.dataset.key);
+            for d in &mut self.devices {
+                d.retire_started(rq.arrival);
+            }
+            let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
+            let resp = match route {
+                Route::Coalesce(dev, j) => {
+                    let job = &mut self.devices[dev].jobs[j];
+                    job.riders += 1;
+                    Response {
+                        tenant: rq.tenant,
+                        model: rq.model,
+                        device: dev as u32,
+                        t_compile: 0.0,
+                        t_exec: job.t_exec,
+                        t_queue: (job.start - rq.arrival).max(0.0),
+                        latency: job.done - rq.arrival,
+                        cache_hit: true,
+                        coalesced: true,
+                    }
+                }
+                Route::Device(dev) => {
+                    let memo = &mut self.exec_memo;
+                    let hw = &self.hw;
+                    let mut exec_seconds = |exe: &Executable| {
+                        *memo
+                            .entry(key)
+                            .or_insert_with(|| simulate(&exe.program, hw).loh_seconds())
+                    };
+                    let device = &mut self.devices[dev];
+                    let (_exe, j) =
+                        device.admit(rq.arrival, rq.model, &rq.dataset, &mut exec_seconds);
+                    let job = device.jobs[j];
+                    Response {
+                        tenant: rq.tenant,
+                        model: rq.model,
+                        device: dev as u32,
+                        t_compile: job.ready - rq.arrival,
+                        t_exec: job.t_exec,
+                        t_queue: job.start - job.ready,
+                        latency: job.done - rq.arrival,
+                        cache_hit: job.cache_hit,
+                        coalesced: false,
+                    }
+                }
+            };
+            self.clock.advance_to(rq.arrival + resp.latency);
+            self.responses.push(resp);
         }
         self.stats()
     }
@@ -113,16 +216,15 @@ impl Coordinator {
             return ServeStats::default();
         }
         lats.sort_by(f64::total_cmp);
-        let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
-        let busy: f64 = self.responses.iter().map(|r| r.t_exec).sum();
         ServeStats {
             completed: self.responses.len() as u64,
             cache_hits: self.responses.iter().filter(|r| r.cache_hit).count() as u64,
-            p50: pct(0.50),
-            p99: pct(0.99),
+            coalesced: self.responses.iter().filter(|r| r.coalesced).count() as u64,
+            p50: percentile(&lats, 0.50),
+            p99: percentile(&lats, 0.99),
             mean: lats.iter().sum::<f64>() / lats.len() as f64,
-            device_busy: busy,
-            makespan: self.device_free,
+            device_busy: self.devices.iter().map(|d| d.busy).sum(),
+            makespan: self.clock.now(),
         }
     }
 }
@@ -153,7 +255,8 @@ mod tests {
         let mut c = Coordinator::new(HwConfig::alveo_u250());
         let stats = c.run(mixed_workload(60, 1));
         assert_eq!(stats.completed, 60);
-        // 3 models x 2 graphs = at most 6 compiles; everything else hits.
+        // 3 models x 2 graphs = at most 6 compiles; everything else hits
+        // (a coalesced ride counts as a hit).
         assert!(stats.cache_hits >= 54, "hits {}", stats.cache_hits);
         assert!(stats.p99 >= stats.p50);
         assert!(stats.device_busy <= stats.makespan + 1e-9);
@@ -180,17 +283,19 @@ mod tests {
 
     #[test]
     fn queueing_appears_under_burst() {
-        // All requests arrive at t=0: later ones must queue.
+        // All requests arrive at t=0 on one device with coalescing off:
+        // later ones must queue.
         let pu = dataset("PU").unwrap();
         let reqs: Vec<Request> = (0..8)
-            .map(|_| Request {
-                tenant: 0,
+            .map(|i| Request {
+                tenant: i,
                 model: ZooModel::B2,
                 dataset: pu,
                 arrival: 0.0,
             })
             .collect();
-        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let cfg = FleetConfig { coalesce: false, ..FleetConfig::default() };
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
         let stats = c.run(reqs);
         let queued = c.responses.iter().filter(|r| r.t_queue > 0.0).count();
         assert!(queued >= 6, "queued {queued}");
@@ -199,9 +304,98 @@ mod tests {
     }
 
     #[test]
+    fn identical_burst_coalesces_into_one_execution() {
+        let pu = dataset("PU").unwrap();
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| Request { tenant: i, model: ZooModel::B2, dataset: pu, arrival: 0.0 })
+            .collect();
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(reqs);
+        // The first request compiles; the other seven ride its job while
+        // it waits on the (virtual) compile.
+        assert_eq!(stats.completed, 8);
+        assert_eq!(stats.coalesced, 7, "coalesced {}", stats.coalesced);
+        let exec_once = c.responses[0].t_exec;
+        assert!((stats.device_busy - exec_once).abs() < 1e-12, "one execution total");
+        assert_eq!(c.devices()[0].jobs.len(), 1);
+        assert_eq!(c.devices()[0].jobs[0].riders, 7);
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        // The satellite guarantee: no wall-clock leaks into serving
+        // stats — two runs of the same workload agree exactly.
+        let run = || {
+            let cfg = FleetConfig { n_devices: 3, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            let stats = c.run(mixed_workload(40, 7));
+            (stats, c.responses)
+        };
+        let (s1, r1) = run();
+        let (s2, r2) = run();
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn four_devices_beat_one_on_saturating_burst() {
+        // A saturating burst (coalescing off, so every request is real
+        // device work): four overlays must finish strictly sooner than
+        // one, and cache-affinity must keep the fleet hit rate at least
+        // at the single-device level (at most one compile per distinct
+        // key fleet-wide).
+        let run = |n_devices: usize| {
+            let cfg =
+                FleetConfig { n_devices, coalesce: false, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            let stats = c.run(mixed_workload(48, 3));
+            (stats, c)
+        };
+        let (s1, _) = run(1);
+        let (s4, c4) = run(4);
+        assert_eq!(s1.completed, s4.completed);
+        assert!(
+            s4.makespan < s1.makespan,
+            "4-device makespan {} !< 1-device {}",
+            s4.makespan,
+            s1.makespan
+        );
+        assert!(
+            s4.cache_hits >= s1.cache_hits,
+            "fleet hits {} < single-device {}",
+            s4.cache_hits,
+            s1.cache_hits
+        );
+        // The burst spread across the fleet.
+        let active = c4.devices().iter().filter(|d| d.busy > 0.0).count();
+        assert!(active >= 2, "only {active} devices did work");
+        // Per-device caches: fleet-wide at most one compile per key.
+        let compiles: usize = c4.devices().iter().map(|d| d.cache_len()).sum();
+        assert!(compiles <= 6, "{compiles} compiles for 6 distinct keys");
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        // The satellite fix: (len-1)*p truncation under-reported p99 (on
+        // 100 samples it indexed 98.01 -> 98, i.e. the 99th sample, but
+        // on small n it collapsed toward p50). Nearest-rank is exact.
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.00), 100.0);
+        let small = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&small, 0.50), 30.0);
+        assert_eq!(percentile(&small, 0.99), 50.0);
+        // The old truncating formula pinned p99 of 5 samples to index
+        // (5-1)*0.99 = 3 (40.0) — the tail sample was unreachable.
+        assert_eq!(percentile(&small, 0.25), 20.0);
+    }
+
+    #[test]
     fn empty_workload() {
         let mut c = Coordinator::new(HwConfig::alveo_u250());
         let stats = c.run(vec![]);
         assert_eq!(stats.completed, 0);
+        assert_eq!(stats, ServeStats::default());
     }
 }

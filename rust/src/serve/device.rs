@@ -1,0 +1,178 @@
+//! One overlay device of the serving fleet: a per-device program cache,
+//! a compile-warmth ledger, and a busy timeline on the fleet's virtual
+//! clock. Devices never read wall-clock time — all scheduling arithmetic
+//! is over virtual seconds, so a fleet replay is bit-identical.
+
+use super::cache::{Key, ProgramCache};
+use super::clock;
+use crate::compiler::Executable;
+use crate::config::HwConfig;
+use crate::graph::Dataset;
+use crate::ir::ZooModel;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A scheduled unit of accelerator work (the virtual timeline does not
+/// distinguish in-flight from completed — `done` may be in the future).
+#[derive(Clone, Copy, Debug)]
+pub struct Job {
+    pub key: Key,
+    /// When the program is ready to start (arrival + any compile stall).
+    pub ready: f64,
+    pub start: f64,
+    pub done: f64,
+    pub t_exec: f64,
+    pub cache_hit: bool,
+    /// Requests coalesced onto this job beyond the one that created it.
+    pub riders: u32,
+}
+
+pub struct Device {
+    pub id: usize,
+    cache: ProgramCache,
+    /// Virtual time each key's compile finishes on this device. A hit on
+    /// a still-compiling entry waits for it rather than recompiling.
+    warm_at: HashMap<Key, f64>,
+    /// When the accelerator is next free.
+    pub free_at: f64,
+    /// Accumulated execution seconds (utilization numerator).
+    pub busy: f64,
+    pub jobs: Vec<Job>,
+    /// Index of the first job that may not have started yet. Start times
+    /// are nondecreasing per device (each job begins no earlier than its
+    /// predecessor's completion), so everything before this index has
+    /// started for any later arrival — the coalescing scan never needs
+    /// to revisit it.
+    first_pending: usize,
+}
+
+impl Device {
+    pub fn new(id: usize, hw: HwConfig) -> Device {
+        Device {
+            id,
+            cache: ProgramCache::new(hw),
+            warm_at: HashMap::new(),
+            free_at: 0.0,
+            busy: 0.0,
+            jobs: Vec::new(),
+            first_pending: 0,
+        }
+    }
+
+    /// Advance the pending cursor past jobs that have started by `now`.
+    /// Arrivals are processed in nondecreasing time order, so the cursor
+    /// only ever moves forward (amortized O(1) per request).
+    pub fn retire_started(&mut self, now: f64) {
+        while self.first_pending < self.jobs.len()
+            && self.jobs[self.first_pending].start < now
+        {
+            self.first_pending += 1;
+        }
+    }
+
+    /// Jobs not yet started as of the last [`Device::retire_started`]
+    /// call, with their indices into `jobs`.
+    pub fn pending_jobs(&self) -> impl Iterator<Item = (usize, &Job)> + '_ {
+        let base = self.first_pending;
+        self.jobs[base..].iter().enumerate().map(move |(i, j)| (base + i, j))
+    }
+
+    /// Cache-warm for `key` (the affinity-routing predicate).
+    pub fn is_warm(&self, key: &Key) -> bool {
+        self.cache.contains(key)
+    }
+
+    /// Number of programs compiled on this device.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Bytes of compiled binaries resident on this device.
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache.binary_bytes()
+    }
+
+    /// Admit one request at `arrival`: compile-or-reuse the program,
+    /// charge the virtual compile cost on a miss (or the residual stall
+    /// when the compile from an earlier miss is still in flight), then
+    /// queue behind in-flight work. `exec_seconds` supplies the modeled
+    /// execution time of an executable (memoized fleet-wide by the
+    /// coordinator). Returns the executable and the new job's index.
+    pub fn admit(
+        &mut self,
+        arrival: f64,
+        model: ZooModel,
+        ds: &Dataset,
+        exec_seconds: &mut dyn FnMut(&Executable) -> f64,
+    ) -> (Arc<Executable>, usize) {
+        let key: Key = (model, ds.key);
+        let (exe, hit) = self.cache.get(model, ds);
+        let ready = match self.warm_at.get(&key) {
+            Some(&warm) => arrival.max(warm),
+            None => {
+                let warm = arrival + clock::compile_cost(&exe.report);
+                self.warm_at.insert(key, warm);
+                warm
+            }
+        };
+        let t_exec = exec_seconds(&exe);
+        let start = ready.max(self.free_at);
+        let done = start + t_exec;
+        self.free_at = done;
+        self.busy += t_exec;
+        self.jobs.push(Job { key, ready, start, done, t_exec, cache_hit: hit, riders: 0 });
+        (exe, self.jobs.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+
+    #[test]
+    fn miss_pays_compile_then_hits_are_free() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &Executable| 1e-4;
+        let (_, j0) = dev.admit(0.0, ZooModel::B1, &co, &mut exec);
+        let first = dev.jobs[j0];
+        assert!(!first.cache_hit);
+        assert!(first.ready > 0.0, "miss must stall on the virtual compile");
+        // Much later, same key: warm, starts immediately.
+        let (_, j1) = dev.admit(1.0, ZooModel::B1, &co, &mut exec);
+        let second = dev.jobs[j1];
+        assert!(second.cache_hit);
+        assert_eq!(second.ready, 1.0);
+        assert_eq!(dev.cache_len(), 1);
+        assert!(dev.is_warm(&(ZooModel::B1, "CO")));
+    }
+
+    #[test]
+    fn hit_during_inflight_compile_waits_for_it() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &Executable| 1e-4;
+        let (_, j0) = dev.admit(0.0, ZooModel::B2, &co, &mut exec);
+        let warm = dev.jobs[j0].ready;
+        // Arrives while the first compile is still in flight: the cache
+        // already holds the program, but readiness waits for the compile.
+        let mid = warm * 0.5;
+        let (_, j1) = dev.admit(mid, ZooModel::B2, &co, &mut exec);
+        assert!(dev.jobs[j1].cache_hit);
+        assert_eq!(dev.jobs[j1].ready, warm);
+    }
+
+    #[test]
+    fn queueing_behind_inflight_work() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &Executable| 1.0; // huge exec: forces queueing
+        dev.admit(0.0, ZooModel::B1, &co, &mut exec);
+        let (_, j1) = dev.admit(0.0, ZooModel::B1, &co, &mut exec);
+        let job = dev.jobs[j1];
+        assert!(job.start >= 1.0, "second job must queue behind the first");
+        assert_eq!(dev.busy, 2.0);
+        assert_eq!(dev.free_at, job.done);
+    }
+}

@@ -1,0 +1,163 @@
+//! Routing policy for the serving fleet: cross-request coalescing of
+//! identical in-flight work, then cache-affinity device selection.
+//! Pure functions over device state — all tie-breaks are by device id,
+//! so routing is deterministic.
+
+use super::cache::Key;
+use super::device::Device;
+
+/// Where a request goes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Dispatch to a device (compile-or-hit there, then queue).
+    Device(usize),
+    /// Ride an identical not-yet-started job: (device id, job index).
+    /// One execution serves many responses.
+    Coalesce(usize, usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Dispatcher {
+    /// Prefer devices whose cache already holds the (model, graph)
+    /// program over the globally least-loaded device.
+    pub affinity: bool,
+    /// Merge requests identical to a job that has not started yet.
+    pub coalesce: bool,
+}
+
+impl Dispatcher {
+    pub fn route(&self, devices: &[Device], key: &Key, arrival: f64) -> Route {
+        let target = self.dispatch_device(devices, key, arrival);
+        if self.coalesce {
+            // An identical job that has not started by `arrival` can
+            // serve this request too; pick the one finishing first. Only
+            // each device's pending tail is scanned (the coordinator
+            // retires started jobs before routing).
+            let mut best: Option<(f64, usize, usize)> = None;
+            for d in devices {
+                for (j, job) in d.pending_jobs() {
+                    if job.key == *key && job.start >= arrival {
+                        let cand = (job.done, d.id, j);
+                        if best.map_or(true, |b| cand < b) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+            }
+            if let Some((done, dev, j)) = best {
+                // Ride only when it finishes no later than dispatching
+                // the same work fresh would: same key ⇒ same exec time,
+                // so compare against the target device's queue floor
+                // (a cold dispatch also pays a compile, conservatively
+                // counted as 0 here — under-coalescing only costs a
+                // duplicate execution, never latency).
+                let floor = devices[target].free_at.max(arrival);
+                let t_exec = devices[dev].jobs[j].t_exec;
+                if done <= floor + t_exec {
+                    return Route::Coalesce(dev, j);
+                }
+            }
+        }
+        Route::Device(target)
+    }
+
+    /// The device a fresh dispatch would go to: cache-warm first (when
+    /// affinity is on), else least-loaded; ties to the lowest id.
+    fn dispatch_device(&self, devices: &[Device], key: &Key, arrival: f64) -> usize {
+        let pick = |warm_only: bool| -> Option<usize> {
+            devices
+                .iter()
+                .filter(|d| !warm_only || d.is_warm(key))
+                .map(|d| (d.free_at.max(arrival), d.id))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .map(|(_, id)| id)
+        };
+        if self.affinity {
+            // Warm devices skip the compile entirely; even a queued warm
+            // device usually beats a cold one (compile >> queue at the
+            // paper's request rates), and keeping keys sticky maximizes
+            // fleet-wide hit rate.
+            if let Some(id) = pick(true) {
+                return id;
+            }
+        }
+        pick(false).expect("fleet has at least one device")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+
+    fn fleet(n: usize) -> Vec<Device> {
+        (0..n).map(|i| Device::new(i, HwConfig::alveo_u250())).collect()
+    }
+
+    #[test]
+    fn cold_fleet_routes_to_least_loaded() {
+        let mut devs = fleet(3);
+        devs[0].free_at = 5.0;
+        devs[1].free_at = 1.0;
+        devs[2].free_at = 3.0;
+        let d = Dispatcher { affinity: true, coalesce: true };
+        let key = (ZooModel::B1, "CO");
+        assert_eq!(d.route(&devs, &key, 0.0), Route::Device(1));
+    }
+
+    #[test]
+    fn affinity_prefers_warm_device() {
+        let mut devs = fleet(2);
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &crate::compiler::Executable| 1e-4;
+        devs[1].admit(0.0, ZooModel::B1, &co, &mut exec);
+        // Device 1 is warm but busier; affinity still picks it.
+        let key = (ZooModel::B1, "CO");
+        let arrival = devs[1].free_at + 1.0; // after its job started
+        let on = Dispatcher { affinity: true, coalesce: false };
+        let off = Dispatcher { affinity: false, coalesce: false };
+        assert_eq!(on.route(&devs, &key, arrival), Route::Device(1));
+        // Without affinity the tie on (idle, idle) breaks to device 0.
+        assert_eq!(off.route(&devs, &key, arrival), Route::Device(0));
+    }
+
+    #[test]
+    fn coalesce_rides_unstarted_identical_job() {
+        let mut devs = fleet(2);
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &crate::compiler::Executable| 1e-4;
+        let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec);
+        let start = devs[0].jobs[j].start;
+        let d = Dispatcher { affinity: true, coalesce: true };
+        let key = (ZooModel::B1, "CO");
+        // Before the job starts: ride it.
+        assert_eq!(d.route(&devs, &key, start * 0.5), Route::Coalesce(0, j));
+        // After it started: a fresh dispatch (warm, device 0).
+        assert_eq!(d.route(&devs, &key, start + 1.0), Route::Device(0));
+        // Different key never coalesces.
+        let other = (ZooModel::B2, "CO");
+        assert!(matches!(d.route(&devs, &other, start * 0.5), Route::Device(_)));
+    }
+
+    #[test]
+    fn ride_rejected_when_idle_device_finishes_sooner() {
+        // Device 0 is warm but has a deep queue; device 1 is idle. With
+        // affinity off the dispatch target is the idle device, and the
+        // ride (behind the queue) would finish later — so no coalesce.
+        let mut devs = fleet(2);
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &crate::compiler::Executable| 1.0;
+        devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // running by 0.5
+        let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // queued
+        let key = (ZooModel::B1, "CO");
+        let off = Dispatcher { affinity: false, coalesce: true };
+        assert_eq!(off.route(&devs, &key, 0.5), Route::Device(1));
+        // With affinity the dispatch target is the warm (queued) device
+        // itself, so riding the queued job ties on completion and wins
+        // by not duplicating the execution.
+        let on = Dispatcher { affinity: true, coalesce: true };
+        assert_eq!(on.route(&devs, &key, 0.5), Route::Coalesce(0, j));
+    }
+}

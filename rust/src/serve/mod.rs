@@ -1,18 +1,32 @@
-//! Multi-tenant serving coordinator (the paper's motivating deployment,
+//! Multi-tenant serving fleet (the paper's motivating deployment,
 //! Sec. 1: "in a cloud-based system, multiple users share the same FPGA.
 //! Different users may run different GNN models with different input
 //! graphs" — the overlay makes switching instant because no bitstream is
-//! regenerated).
+//! regenerated). Scaled out: N identical overlay devices behind one
+//! deterministic coordinator.
 //!
 //! * [`cache`] — the compiled-program cache keyed by (model, graph):
 //!   first request pays the milliseconds-scale software compile; repeats
 //!   are pure lookups,
-//! * [`coordinator`] — the request loop: a queue, a worker that binds
-//!   programs to the accelerator (simulated execution latency from
-//!   `sim::engine`), and latency statistics (p50/p99) per tenant.
+//! * [`clock`] — the virtual clock: compile stalls charged from the
+//!   deterministic [`crate::compiler::CompileReport::total`] model,
+//!   execution from the cycle simulator — never `Instant::now()`,
+//! * [`device`] — one overlay: per-device cache, warmth ledger, busy
+//!   timeline,
+//! * [`dispatcher`] — routing policy: coalesce identical in-flight
+//!   requests, else prefer a cache-warm device (affinity), else the
+//!   least-loaded one,
+//! * [`coordinator`] — the event loop binding it together, plus latency
+//!   statistics (nearest-rank p50/p99).
 
 pub mod cache;
+pub mod clock;
 pub mod coordinator;
+pub mod device;
+pub mod dispatcher;
 
 pub use cache::ProgramCache;
-pub use coordinator::{Coordinator, Request, Response, ServeStats};
+pub use clock::VirtualClock;
+pub use coordinator::{percentile, Coordinator, FleetConfig, Request, Response, ServeStats};
+pub use device::Device;
+pub use dispatcher::{Dispatcher, Route};

@@ -1,0 +1,87 @@
+//! Property-style coverage for the `.ga` binary format (Table 8): every
+//! compiled program must survive `Program::from_bytes(to_bytes())`
+//! exactly, across the whole zoo x dataset grid and under randomized
+//! compiler options (`util::prop` / `util::rng` drive the cases).
+
+use graphagile::compiler::{compile, CompileOptions, Executable};
+use graphagile::config::HwConfig;
+use graphagile::graph::{Dataset, ALL_DATASETS};
+use graphagile::ir::{ZooModel, ALL_MODELS};
+use graphagile::isa::Program;
+use graphagile::prop_assert;
+use graphagile::util::forall;
+
+/// Compile one (model, dataset) instance at CI scale.
+fn build(model: ZooModel, d: &Dataset, hw: &HwConfig, opts: CompileOptions) -> Executable {
+    // Scale the synthetic datasets down so the full grid stays fast;
+    // the wire format does not care about graph size.
+    let d = d.scaled(128);
+    let tiles = d.tile_counts(hw.n1() as u64);
+    let ir = model.build(d.meta());
+    compile(&ir, &tiles, hw, opts)
+}
+
+#[test]
+fn every_zoo_model_on_every_dataset_roundtrips() {
+    let hw = HwConfig::alveo_u250();
+    for model in ALL_MODELS {
+        for d in &ALL_DATASETS {
+            let exe = build(model, d, &hw, CompileOptions::default());
+            let bytes = exe.program.to_bytes();
+            assert_eq!(
+                bytes.len() as u64,
+                exe.program.size_bytes(),
+                "{}/{}: size_bytes out of sync with serializer",
+                model.key(),
+                d.key
+            );
+            let back = Program::from_bytes(&bytes)
+                .unwrap_or_else(|e| panic!("{}/{}: decode failed: {e:#}", model.key(), d.key));
+            assert_eq!(back, exe.program, "{}/{} roundtrip", model.key(), d.key);
+        }
+    }
+}
+
+#[test]
+fn roundtrip_holds_under_random_options() {
+    let hw = HwConfig::alveo_u250();
+    forall("ga-roundtrip-options", 16, |rng| {
+        let model = ALL_MODELS[rng.below(ALL_MODELS.len() as u64) as usize];
+        let d = ALL_DATASETS[rng.below(ALL_DATASETS.len() as u64) as usize];
+        let opts = CompileOptions {
+            order_opt: rng.below(2) == 0,
+            fusion: rng.below(2) == 0,
+            skip_empty_tiles: rng.below(2) == 0,
+        };
+        let exe = build(model, &d, &hw, opts);
+        let back = Program::from_bytes(&exe.program.to_bytes())
+            .map_err(|e| format!("{}/{} {opts:?}: decode failed: {e:#}", model.key(), d.key))?;
+        prop_assert!(
+            back == exe.program,
+            "{}/{} {opts:?}: decoded program differs",
+            model.key(),
+            d.key
+        );
+        prop_assert!(
+            back.total_instrs() == exe.program.total_instrs(),
+            "instr count drifted through the wire"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_or_corrupt_binaries_are_rejected() {
+    let hw = HwConfig::alveo_u250();
+    let exe = build(ZooModel::B1, &ALL_DATASETS[1], &hw, CompileOptions::default());
+    let bytes = exe.program.to_bytes();
+    forall("ga-truncation", 32, |rng| {
+        let cut = rng.below(bytes.len() as u64 - 1) as usize;
+        prop_assert!(
+            Program::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut}/{} must be rejected",
+            bytes.len()
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,208 @@
+//! Offline stand-in for the `anyhow` crate (the build environment has no
+//! crates.io access; see DESIGN.md "Substitutions"). Implements exactly
+//! the subset the repository uses: [`Error`], [`Result`], the `anyhow!`,
+//! `bail!` and `ensure!` macros, and the [`Context`] extension trait on
+//! `Result` and `Option`.
+//!
+//! Semantics match anyhow where it matters to callers: `{err}` prints the
+//! outermost message, `{err:#}` and `{err:?}` print the whole
+//! colon-separated context chain, `?` converts any `std::error::Error`,
+//! and `.context()` wraps an error (or a `None`) with an outer message.
+
+use std::fmt;
+
+/// An error: a chain of messages, outermost context first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.msgs.insert(0, c.to_string());
+        self
+    }
+
+    fn from_std(e: &(dyn std::error::Error + 'static)) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+
+    /// The full context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.msgs.join(": "))
+        } else {
+            f.write_str(&self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msgs.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+
+    /// Anything `.context()` accepts as the wrapped error. The concrete
+    /// impl for [`Error`] does not overlap the std-error blanket because
+    /// `Error` deliberately does not implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Early-return with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($tt:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($tt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::fs::read("/definitely/not/a/real/path/42");
+        let _ = e.context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let err = fails_io().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert_eq!(format!("{err:?}"), full);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{err}"), "missing value");
+        assert_eq!(Some(7).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x != 1, "one is not allowed: {x}");
+            ensure!(x != 2);
+            if x == 3 {
+                bail!("three is out");
+            }
+            Err(anyhow!("fallthrough {}", x))
+        }
+        assert_eq!(format!("{}", f(1).unwrap_err()), "one is not allowed: 1");
+        assert!(format!("{}", f(2).unwrap_err()).contains("x != 2"));
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is out");
+        assert_eq!(format!("{}", f(4).unwrap_err()), "fallthrough 4");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("x").is_err());
+    }
+}
