@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     let input = EngineInput { graph: &g, partitioned: &pg, store: &store, x: &x };
     let mut engines: Vec<Box<dyn InferenceEngine + '_>> = vec![
         Box::new(GoldenEngine),
-        Box::new(FunctionalEngine),
+        Box::new(FunctionalEngine::default()),
         Box::new(PjrtEngine::new(&rt)),
         Box::new(SimEngine::new(HwConfig::alveo_u250())),
     ];

@@ -37,8 +37,8 @@ fn main() {
         .unwrap_or(400);
     let mut rows = Vec::new();
     println!(
-        "{:>8} {:>14} {:>10} {:>10} {:>7} {:>10}",
-        "devices", "thr (req/s)", "p50 (ms)", "p99 (ms)", "hits", "coalesced"
+        "{:>8} {:>14} {:>10} {:>10} {:>7} {:>10} {:>8}",
+        "devices", "thr (req/s)", "p50 (ms)", "p99 (ms)", "hits", "coalesced", "remaps"
     );
     for devices in [1usize, 2, 4] {
         let cfg = FleetConfig { n_devices: devices, ..FleetConfig::default() };
@@ -46,18 +46,19 @@ fn main() {
         let stats = c.run(workload(n, 11));
         let thr = stats.completed as f64 / stats.makespan;
         println!(
-            "{:>8} {:>14.0} {:>10.3} {:>10.3} {:>7} {:>10}",
+            "{:>8} {:>14.0} {:>10.3} {:>10.3} {:>7} {:>10} {:>8}",
             devices,
             thr,
             stats.p50 * 1e3,
             stats.p99 * 1e3,
             stats.cache_hits,
-            stats.coalesced
+            stats.coalesced,
+            stats.remaps
         );
         rows.push(format!(
             "    {{\"devices\": {}, \"throughput_rps\": {:.1}, \"p50_ms\": {:.4}, \
              \"p99_ms\": {:.4}, \"mean_ms\": {:.4}, \"hit_rate\": {:.4}, \
-             \"coalesced\": {}, \"makespan_s\": {:.6}}}",
+             \"coalesced\": {}, \"remaps\": {}, \"makespan_s\": {:.6}}}",
             devices,
             thr,
             stats.p50 * 1e3,
@@ -65,6 +66,7 @@ fn main() {
             stats.mean * 1e3,
             c.hit_rate(),
             stats.coalesced,
+            stats.remaps,
             stats.makespan,
         ));
     }

@@ -1,6 +1,14 @@
 //! Step 4 — kernel mapping, instruction interleaving, code generation
 //! (paper Sec. 6.6).
 //!
+//! The kernel choices emitted here are *provisional*: they encode the
+//! static per-layer mapping (Aggregate -> SpDMM, Linear -> GEMM,
+//! Vector-Inner -> SDDMM, ...), and — when
+//! `CompileOptions::dynamic_thresholds` is on — the pass also profiles
+//! tile densities and embeds a `crate::sparsity::ThresholdTable` in the
+//! binary (the GA02 section) so engines can re-map GEMM<->SpDMM per
+//! Tiling Block once runtime densities are known.
+//!
 //! Each layer maps to a **Layer Block**: a Control-and-Scheduling
 //! Instruction followed by the layer's **Tiling Blocks** (the unfolded
 //! outer loops of Alg. 6–8). A Tiling Block is an inseparable instruction
@@ -217,11 +225,20 @@ pub fn map_program(
             tasks,
         });
     }
+    // Provisional kernel choices are what the instructions above encode;
+    // the threshold table rides along so engines can override them per
+    // Tiling Block once runtime densities are known (crate::sparsity).
+    let thresholds = if opts.dynamic_thresholds {
+        Some(crate::sparsity::build_table(ir, tiles))
+    } else {
+        None
+    };
     let program = Program {
         n1: cfg.n1 as u32,
         n2: cfg.n2 as u32,
         model_name: ir.name.clone(),
         graph_name: ir.graph.name.clone(),
+        thresholds,
         layers,
     };
     (program, all_tasks)
@@ -708,6 +725,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn threshold_table_follows_the_option() {
+        let ds = dataset("PU").unwrap();
+        let hw = HwConfig::alveo_u250();
+        let tiles = ds.tile_counts(hw.n1() as u64);
+        let ir = ZooModel::B1.build(ds.meta());
+        let on = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let tt = on.program.thresholds.as_ref().expect("default emits the GA02 section");
+        // One provisional entry per emitted layer, ids aligned.
+        assert_eq!(tt.entries.len(), on.program.layers.len());
+        for lb in &on.program.layers {
+            if let Instr::Csi { layer_id, .. } = lb.csi {
+                assert!(tt.entry(layer_id).is_some(), "no entry for layer {layer_id}");
+            }
+        }
+        let off = compile(
+            &ir,
+            &tiles,
+            &hw,
+            CompileOptions { dynamic_thresholds: false, ..Default::default() },
+        );
+        assert!(off.program.thresholds.is_none());
     }
 
     #[test]

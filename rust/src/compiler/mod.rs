@@ -39,11 +39,20 @@ pub struct CompileOptions {
     pub fusion: bool,
     /// Skip empty subshards (no instructions for zero-edge tiles).
     pub skip_empty_tiles: bool,
+    /// Profile densities and embed the threshold table (the optional
+    /// GA02 section) so engines can re-map kernels at run time; off
+    /// emits a legacy GA01 binary with purely static mapping.
+    pub dynamic_thresholds: bool,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { order_opt: true, fusion: true, skip_empty_tiles: true }
+        CompileOptions {
+            order_opt: true,
+            fusion: true,
+            skip_empty_tiles: true,
+            dynamic_thresholds: true,
+        }
     }
 }
 

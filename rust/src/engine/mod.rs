@@ -5,7 +5,7 @@
 //!
 //! * [`GoldenEngine`] — the whole-graph rust reference (ground truth),
 //! * [`FunctionalEngine`] — the partition-centric tile executor over the
-//!   pure-rust ops (and, behind the `pjrt` feature, [`PjrtEngine`] over
+//!   pure-rust ops (and, behind the `pjrt` feature, `PjrtEngine` over
 //!   the AOT-compiled Pallas/JAX kernels),
 //! * [`SimEngine`] — the cycle-level overlay model (T_LoH).
 //!
@@ -19,7 +19,7 @@
 //!              └──────────────┴───────────┴──────────────┘
 //!                              ▼
 //!                         ExecProfile
-//!              (latency, cycles, launches, bytes, output)
+//!          (latency, cycles, launches, bytes, re-maps, output)
 //! ```
 //!
 //! Every engine returns the same [`ExecProfile`] shape, so callers — the
@@ -34,7 +34,7 @@ use crate::compiler::Executable;
 use crate::config::HwConfig;
 use crate::exec::{golden_forward, CountingBackend, FunctionalExecutor, RustBackend, WeightStore};
 use crate::graph::{CooGraph, PartitionedGraph};
-use crate::sim::simulate;
+use crate::sim::{simulate, simulate_dynamic};
 use crate::util::timed;
 use anyhow::{bail, Result};
 
@@ -62,22 +62,46 @@ pub struct ExecProfile {
     pub kernel_launches: u64,
     /// Bytes streamed through kernels (functional) or DDR (sim).
     pub bytes_moved: u64,
+    /// Density-driven kernel re-maps this run (see [`crate::sparsity`]):
+    /// subshard tasks run on the dense path (functional) or compute
+    /// instructions charged at a cheaper mode (sim). 0 when dynamic
+    /// re-mapping is off or the engine has no dynamic path.
+    pub remaps: u64,
     /// Final feature matrix, when the engine computes real numerics.
     pub output: Option<Vec<f32>>,
 }
 
 /// An execution substrate for compiled programs.
 pub trait InferenceEngine {
+    /// Short stable identifier of the substrate (`"golden"`,
+    /// `"functional"`, `"pjrt"`, `"sim"`), echoed in
+    /// [`ExecProfile::engine`] so profiles stay attributable after
+    /// engines are boxed behind the trait.
     fn name(&self) -> &'static str;
 
     /// True when repeated runs of the same executable produce
-    /// bit-identical profiles (virtual time, no wall-clock).
+    /// bit-identical profiles (virtual time, no wall-clock). The serving
+    /// fleet replays only on deterministic engines; wall-clock engines
+    /// (golden, functional, pjrt) report measured latency that varies
+    /// run to run.
     fn deterministic(&self) -> bool {
         false
     }
 
+    /// Enable or disable density-aware dynamic kernel re-mapping
+    /// ([`crate::sparsity`]): when on, the engine consults the
+    /// executable's threshold table (the `.ga` GA02 section) per Tiling
+    /// Block and overrides the provisional GEMM/SpDMM choice where the
+    /// measured density crosses it. Engines without a dynamic path
+    /// (golden; pjrt) ignore the call — the default is a no-op —
+    /// because they either never consult the kernel mapping or execute
+    /// fixed AOT-compiled kernels.
+    fn set_dynamic_remap(&mut self, _enabled: bool) {}
+
     /// Run `exe`, returning the unified profile. `data` carries the
-    /// functional payload; engines that only model time accept `None`.
+    /// functional payload (graph, partitioning, weights, input
+    /// features); engines that only model time accept `None` and never
+    /// materialize features, so Reddit-scale programs still profile.
     fn run(&mut self, exe: &Executable, data: Option<&EngineInput<'_>>) -> Result<ExecProfile>;
 }
 
@@ -121,19 +145,30 @@ impl InferenceEngine for GoldenEngine {
             cycles: 0,
             kernel_launches: exe.ir.layers.len() as u64,
             bytes_moved: bytes,
+            remaps: 0,
             output: Some(out),
         })
     }
 }
 
 /// Compiled-schedule executor over the pure-rust tile ops: proves the
-/// ISA -> schedule -> kernels composition functionally.
+/// ISA -> schedule -> kernels composition functionally. With `dynamic`
+/// set (or via [`InferenceEngine::set_dynamic_remap`]), dense-enough
+/// aggregation subshards run on the densified GEMM path instead of the
+/// SpDMM edge stream — same numerics, re-mapped kernel.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct FunctionalEngine;
+pub struct FunctionalEngine {
+    /// Density-aware dynamic kernel re-mapping on/off.
+    pub dynamic: bool,
+}
 
 impl InferenceEngine for FunctionalEngine {
     fn name(&self) -> &'static str {
         "functional"
+    }
+
+    fn set_dynamic_remap(&mut self, enabled: bool) {
+        self.dynamic = enabled;
     }
 
     fn run(&mut self, exe: &Executable, data: Option<&EngineInput<'_>>) -> Result<ExecProfile> {
@@ -147,6 +182,7 @@ impl InferenceEngine for FunctionalEngine {
             d.store,
             CountingBackend::new(RustBackend),
         );
+        fx.dynamic = self.dynamic;
         let (out, secs) = timed(|| fx.run(d.x));
         Ok(ExecProfile {
             engine: "functional",
@@ -154,21 +190,27 @@ impl InferenceEngine for FunctionalEngine {
             cycles: 0,
             kernel_launches: fx.backend.launches,
             bytes_moved: fx.backend.bytes,
+            remaps: fx.remaps,
             output: Some(out),
         })
     }
 }
 
 /// Cycle-level overlay model: virtual time from the compiled binary,
-/// never touches feature values (runs at any graph scale).
+/// never touches feature values (runs at any graph scale). With
+/// `dynamic` set, the model charges each compute instruction at the
+/// cheaper of its encoded mode and the density-selected re-map
+/// ([`crate::sim::simulate_dynamic`]).
 #[derive(Clone, Debug)]
 pub struct SimEngine {
     pub hw: HwConfig,
+    /// Density-aware dynamic kernel re-mapping on/off.
+    pub dynamic: bool,
 }
 
 impl SimEngine {
     pub fn new(hw: HwConfig) -> SimEngine {
-        SimEngine { hw }
+        SimEngine { hw, dynamic: false }
     }
 }
 
@@ -181,14 +223,23 @@ impl InferenceEngine for SimEngine {
         true
     }
 
+    fn set_dynamic_remap(&mut self, enabled: bool) {
+        self.dynamic = enabled;
+    }
+
     fn run(&mut self, exe: &Executable, _data: Option<&EngineInput<'_>>) -> Result<ExecProfile> {
-        let sim = simulate(&exe.program, &self.hw);
+        let sim = if self.dynamic {
+            simulate_dynamic(&exe.program, &self.hw)
+        } else {
+            simulate(&exe.program, &self.hw)
+        };
         Ok(ExecProfile {
             engine: "sim",
             latency_s: sim.loh_seconds(),
             cycles: sim.cycles,
             kernel_launches: sim.layers.iter().map(|l| l.n_blocks as u64).sum(),
             bytes_moved: sim.total_mem_bytes,
+            remaps: sim.remaps,
             output: None,
         })
     }
@@ -228,6 +279,7 @@ impl<'rt> InferenceEngine for PjrtEngine<'rt> {
             cycles: 0,
             kernel_launches: fx.backend.launches,
             bytes_moved: fx.backend.bytes,
+            remaps: 0,
             output: Some(out),
         })
     }
@@ -238,7 +290,7 @@ impl<'rt> InferenceEngine for PjrtEngine<'rt> {
 pub fn default_engines(hw: &HwConfig) -> Vec<Box<dyn InferenceEngine>> {
     vec![
         Box::new(GoldenEngine),
-        Box::new(FunctionalEngine),
+        Box::new(FunctionalEngine::default()),
         Box::new(SimEngine::new(hw.clone())),
     ]
 }
@@ -288,6 +340,55 @@ mod tests {
     }
 
     #[test]
+    fn dynamic_remap_preserves_golden_equivalence() {
+        // A dense single-tile graph (d ~ 0.33, far above the dense_hi
+        // threshold): dynamic re-mapping must actually trigger, and the
+        // re-mapped numerics must still match the golden reference.
+        let meta = GraphMeta::new("dense", 96, 3000, 32, 4);
+        let g = rmat_edges(meta, Default::default(), 11).gcn_normalized();
+        let hw = HwConfig::functional_tiles();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        let pg = PartitionedGraph::build(&g, cfg);
+        for model in [ZooModel::B1, ZooModel::B5] {
+            let ir = model.build(g.meta.clone());
+            let exe = compile(
+                &ir,
+                &pg.tile_counts(),
+                &hw,
+                crate::compiler::CompileOptions::default(),
+            );
+            assert!(exe.program.thresholds.is_some());
+            let store = WeightStore::deterministic(&exe.ir, 33);
+            let x = g.random_features(5);
+            let input = EngineInput { graph: &g, partitioned: &pg, store: &store, x: &x };
+            let golden = GoldenEngine.run(&exe, Some(&input)).unwrap();
+            let mut fe = FunctionalEngine::default();
+            fe.set_dynamic_remap(true);
+            let dynp = fe.run(&exe, Some(&input)).unwrap();
+            assert!(dynp.remaps > 0, "{}: dense tiles must re-map", exe.ir.name);
+            let (a, b) = (golden.output.as_ref().unwrap(), dynp.output.as_ref().unwrap());
+            assert_eq!(a.len(), b.len());
+            let scale = a.iter().fold(1f32, |m, v| m.max(v.abs()));
+            let err = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+            assert!(
+                err <= 1e-3 * scale.max(1.0),
+                "{}: dynamic vs golden max err {err} (scale {scale})",
+                exe.ir.name
+            );
+            // The static functional path reports no re-maps on the same
+            // executable.
+            let statp = FunctionalEngine::default().run(&exe, Some(&input)).unwrap();
+            assert_eq!(statp.remaps, 0);
+            // And the dynamic cycle model is never slower than static.
+            let mut se = SimEngine::new(HwConfig::alveo_u250());
+            let stat_sim = se.run(&exe, None).unwrap();
+            se.set_dynamic_remap(true);
+            let dyn_sim = se.run(&exe, None).unwrap();
+            assert!(dyn_sim.cycles <= stat_sim.cycles);
+        }
+    }
+
+    #[test]
     fn sim_engine_is_deterministic_and_data_free() {
         let (exe, ..) = setup(ZooModel::B7);
         let mut e = SimEngine::new(HwConfig::alveo_u250());
@@ -303,7 +404,7 @@ mod tests {
     fn functional_engines_reject_missing_data() {
         let (exe, ..) = setup(ZooModel::B1);
         assert!(GoldenEngine.run(&exe, None).is_err());
-        assert!(FunctionalEngine.run(&exe, None).is_err());
+        assert!(FunctionalEngine::default().run(&exe, None).is_err());
         assert!(SimEngine::new(HwConfig::alveo_u250()).run(&exe, None).is_ok());
     }
 
@@ -320,7 +421,7 @@ mod tests {
             let input =
                 EngineInput { graph: &g, partitioned: &other, store: &store, x: &x };
             assert!(
-                FunctionalEngine.run(&exe, Some(&input)).is_err(),
+                FunctionalEngine::default().run(&exe, Some(&input)).is_err(),
                 "{cfg:?} must be rejected"
             );
         }

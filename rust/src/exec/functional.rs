@@ -17,6 +17,7 @@ use crate::compiler::{Executable, TileTask};
 use crate::graph::PartitionedGraph;
 use crate::ir::LayerType;
 use crate::isa::{Activation, AggOp};
+use crate::sparsity::{choose_mode, tile_density, KernelMode};
 use std::collections::HashMap;
 
 /// Tile-granular compute abstraction. Index arguments are tile-local.
@@ -43,7 +44,7 @@ pub trait TileBackend {
         aggop: AggOp,
     ) -> Vec<f32>;
 
-    /// Per-edge inner products <hl[src], hr[dst]>.
+    /// Per-edge inner products `<hl[src], hr[dst]>`.
     #[allow(clippy::too_many_arguments)]
     fn sddmm(
         &mut self,
@@ -210,11 +211,22 @@ pub fn write_tile(
 
 /// The executor. Holds the compiled program, the partition-ordered graph
 /// and the weights; `run` produces the final feature matrix.
+///
+/// With `dynamic` set, the executor consults the executable's density
+/// threshold table (the GA02 section) per subshard and re-maps
+/// dense-enough Sum/Mean aggregations from the SpDMM path onto the GEMM
+/// path — a densified adjacency tile times the feature subfiber, the
+/// exact weighted sum the edge stream computes — so results are
+/// bit-equivalent up to float summation order.
 pub struct FunctionalExecutor<'a, B: TileBackend> {
     pub exe: &'a Executable,
     pub graph: &'a PartitionedGraph,
     pub store: &'a WeightStore,
     pub backend: B,
+    /// Density-aware dynamic kernel re-mapping on/off.
+    pub dynamic: bool,
+    /// Subshard tasks executed on a re-mapped kernel this run.
+    pub remaps: u64,
 }
 
 impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
@@ -228,7 +240,7 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
             exe.cfg.n1, graph.cfg.n1,
             "graph partitioned with a different N1 than the executable"
         );
-        FunctionalExecutor { exe, graph, store, backend }
+        FunctionalExecutor { exe, graph, store, backend, dynamic: false, remaps: 0 }
     }
 
     /// Execute every Tiling Block in program order. Returns the last
@@ -259,6 +271,15 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
             let mut out = vec![0f32; n * f_out];
             match layer.ltype {
                 LayerType::Aggregate => {
+                    // Re-map inputs are per layer: hoist the threshold
+                    // table and this layer's provisional mode out of the
+                    // per-subshard loop (mirrors sim::engine).
+                    let remap_tt =
+                        if self.dynamic { self.exe.program.thresholds.as_ref() } else { None };
+                    let provisional = remap_tt
+                        .and_then(|tt| tt.entry(layer.id))
+                        .map(|e| e.provisional)
+                        .unwrap_or(KernelMode::Spdmm);
                     for t in &tasks.tasks {
                         let TileTask::Aggregate {
                             fiber, shard, rows, cols, aggop, act, subshards,
@@ -293,9 +314,39 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
                             let ew = &edge_w[range.clone()];
                             let rows_k = (n - k * n1).min(n1);
                             let h_tile = slice_tile(&h_in, f_in, k * n1, rows_k, col0, cols);
-                            let part = self.backend.spdmm(
-                                &src, &dst, ew, &h_tile, rows_k, cols, rows, *aggop,
-                            );
+                            // Dynamic re-map: a dense-enough Sum/Mean
+                            // subshard runs as a densified-adjacency GEMM
+                            // (the same weighted sum, computed on the
+                            // dense path the ACK would be re-mapped to).
+                            // Max/Min are not a matmul — never re-mapped.
+                            let dense_mode = matches!(aggop, AggOp::Sum | AggOp::Mean)
+                                && remap_tt.is_some_and(|tt| {
+                                    let d = tile_density(
+                                        sref.ne,
+                                        rows as u64,
+                                        rows_k as u64,
+                                    );
+                                    choose_mode(provisional, d, tt) == KernelMode::Gemm
+                                });
+                            let part = if dense_mode {
+                                self.remaps += 1;
+                                let mut a = vec![0f32; rows * rows_k];
+                                for ((&s, &d), &w) in src.iter().zip(&dst).zip(ew) {
+                                    a[d as usize * rows_k + s as usize] += w;
+                                }
+                                self.backend.gemm(
+                                    &a,
+                                    rows,
+                                    rows_k,
+                                    &h_tile,
+                                    cols,
+                                    &vec![0f32; cols],
+                                )
+                            } else {
+                                self.backend.spdmm(
+                                    &src, &dst, ew, &h_tile, rows_k, cols, rows, *aggop,
+                                )
+                            };
                             // Cross-subshard combine on touched rows only
                             // (the hardware accumulates in-place in the
                             // Feature Buffer; partials have 0 padding).

@@ -62,7 +62,7 @@ impl WeightStore {
 /// Semantics per layer type (identical to the tile path):
 /// * Aggregate uses the *current* edge weights — initially the graph's,
 ///   updated by any upstream Vector-Inner layer;
-/// * Vector-Inner replaces edge weights with <h_i, h_j> (+ fused act);
+/// * Vector-Inner replaces edge weights with `<h_i, h_j>` (+ fused act);
 /// * fused activations apply at layer output.
 pub fn golden_forward(ir: &ModelIr, graph: &CooGraph, store: &WeightStore, x: &[f32]) -> Vec<f32> {
     let n = graph.n();

@@ -1,4 +1,9 @@
-//! Minimal markdown table renderer for harness output.
+//! Minimal renderers for harness output: markdown tables plus the
+//! serving-fleet summary block (the one place `ServeStats` is turned
+//! into text, so every counter the coordinator tracks — including
+//! coalesce and kernel re-map telemetry — is actually printed).
+
+use crate::serve::ServeStats;
 
 /// Render a markdown table.
 pub fn markdown(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -28,6 +33,30 @@ pub fn ms(s: f64) -> String {
     format!("{:.3}", s * 1e3)
 }
 
+/// Render the fleet counters of a serving run — every `ServeStats`
+/// field, one aligned line each, including the coalesce and kernel
+/// re-map counters that earlier revisions tracked but never printed.
+pub fn serve_summary(stats: &ServeStats) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("  completed         {}\n", stats.completed));
+    out.push_str(&format!(
+        "  cache hits        {} / {} ({} coalesced)\n",
+        stats.cache_hits, stats.completed, stats.coalesced
+    ));
+    out.push_str(&format!("  kernel re-maps    {}\n", stats.remaps));
+    out.push_str(&format!(
+        "  latency p50/p99   {} ms / {} ms\n",
+        ms(stats.p50),
+        ms(stats.p99)
+    ));
+    out.push_str(&format!("  mean latency      {} ms\n", ms(stats.mean)));
+    out.push_str(&format!(
+        "  device busy       {:.3} s over {:.3} s makespan\n",
+        stats.device_busy, stats.makespan
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -41,5 +70,27 @@ mod tests {
     #[test]
     fn ms_format() {
         assert_eq!(ms(0.0123456), "12.346");
+    }
+
+    #[test]
+    fn serve_summary_prints_every_counter() {
+        let stats = ServeStats {
+            completed: 8,
+            cache_hits: 7,
+            coalesced: 3,
+            remaps: 42,
+            p50: 0.001,
+            p99: 0.002,
+            mean: 0.0015,
+            device_busy: 0.5,
+            makespan: 1.0,
+        };
+        let s = serve_summary(&stats);
+        // The regression this guards: coalesce/remap counters tracked
+        // but missing from the rendered output.
+        assert!(s.contains("3 coalesced"), "{s}");
+        assert!(s.contains("re-maps    42"), "{s}");
+        assert!(s.contains("7 / 8"), "{s}");
+        assert!(s.contains("1.000 ms / 2.000 ms"), "{s}");
     }
 }

@@ -11,7 +11,7 @@ pub enum LayerType {
     Aggregate = 0,
     /// GEMM mode: H_out = H_in W.
     Linear = 1,
-    /// SDDMM mode: e.weight = <h_i, h_j>.
+    /// SDDMM mode: e.weight = `<h_i, h_j>`.
     VectorInner = 2,
     /// VecAdd mode: H_out = H_a + H_b (residuals).
     VectorAdd = 3,

@@ -1,10 +1,11 @@
 //! The `.ga` executable format (compiler output; Table 8 measures sizes).
 //!
-//! Layout:
+//! Layout (version 2):
 //! ```text
-//! magic "GA01"           4 bytes
+//! magic "GA02"           4 bytes         ("GA01" = no threshold section)
 //! n1, n2                 u32 each        (partition configuration)
 //! model/graph names      u16 len + utf8 each
+//! threshold section      u8 flag + ThresholdTable body (GA02 only)
 //! n_layer_blocks         u32
 //! per Layer Block:
 //!   CSI instruction      16 bytes
@@ -15,12 +16,20 @@
 //! HALT                   16 bytes
 //! ```
 //!
+//! Version history: `GA01` is the original format; `GA02` inserts the
+//! optional density-threshold section (`crate::sparsity::ThresholdTable`)
+//! between the names and the Layer Blocks. The writer emits `GA01`
+//! byte-identically when no table is attached, and the reader accepts
+//! both magics — old binaries keep loading, new readers see
+//! `thresholds: None` for them.
+//!
 //! The Scheduler streams this from DDR: only the CSI of the current layer
 //! is resident on-chip; Tiling Blocks are forwarded whole to PE
 //! instruction queues (Sec. 4.2).
 
 use super::encode::{decode, encode, INSTR_BYTES};
 use super::instr::Instr;
+use crate::sparsity::ThresholdTable;
 use anyhow::{bail, Context, Result};
 
 /// An inseparable instruction sequence executed by one PE (Sec. 6.6).
@@ -73,22 +82,31 @@ pub struct Program {
     pub n2: u32,
     pub model_name: String,
     pub graph_name: String,
+    /// Optional density-threshold table for runtime kernel re-mapping
+    /// (the GA02 section; `None` round-trips as a legacy GA01 binary).
+    pub thresholds: Option<ThresholdTable>,
     pub layers: Vec<LayerBlock>,
 }
 
-const MAGIC: &[u8; 4] = b"GA01";
+const MAGIC_V1: &[u8; 4] = b"GA01";
+const MAGIC_V2: &[u8; 4] = b"GA02";
 
 impl Program {
-    /// Serialize to the wire format.
+    /// Serialize to the wire format. Emits legacy `GA01` bytes when no
+    /// threshold table is attached, `GA02` otherwise.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.size_bytes() as usize);
-        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(if self.thresholds.is_some() { MAGIC_V2 } else { MAGIC_V1 });
         out.extend_from_slice(&self.n1.to_le_bytes());
         out.extend_from_slice(&self.n2.to_le_bytes());
         for name in [&self.model_name, &self.graph_name] {
             let b = name.as_bytes();
             out.extend_from_slice(&(b.len() as u16).to_le_bytes());
             out.extend_from_slice(b);
+        }
+        if let Some(tt) = &self.thresholds {
+            out.push(1);
+            out.extend_from_slice(&tt.to_bytes());
         }
         out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
         for layer in &self.layers {
@@ -116,9 +134,11 @@ impl Program {
             *at += n;
             Ok(s)
         };
-        if take(&mut at, 4)? != MAGIC {
-            bail!("bad magic");
-        }
+        let version = match take(&mut at, 4)? {
+            m if m == MAGIC_V1 => 1,
+            m if m == MAGIC_V2 => 2,
+            _ => bail!("bad magic"),
+        };
         let rd_u32 = |at: &mut usize| -> Result<u32> {
             Ok(u32::from_le_bytes(take(at, 4)?.try_into().unwrap()))
         };
@@ -137,6 +157,19 @@ impl Program {
         };
         let model_name = rd_name(&mut at)?;
         let graph_name = rd_name(&mut at)?;
+        let thresholds = if version >= 2 {
+            match take(&mut at, 1)?[0] {
+                0 => None,
+                1 => {
+                    let (tt, used) = ThresholdTable::from_bytes(&data[at..])?;
+                    at += used;
+                    Some(tt)
+                }
+                v => bail!("bad threshold-section flag {v}"),
+            }
+        } else {
+            None
+        };
         let n_layers = rd_u32(&mut at)? as usize;
         let mut layers = Vec::with_capacity(n_layers);
         for _ in 0..n_layers {
@@ -160,7 +193,7 @@ impl Program {
             Instr::Halt => {}
             other => bail!("expected HALT, got {other:?}"),
         }
-        Ok(Program { n1, n2, model_name, graph_name, layers })
+        Ok(Program { n1, n2, model_name, graph_name, thresholds, layers })
     }
 
     /// Serialized size (what Table 8 reports) without materializing.
@@ -168,6 +201,9 @@ impl Program {
         let mut sz = 4 + 4 + 4; // magic + n1 + n2
         sz += 2 + self.model_name.len() as u64;
         sz += 2 + self.graph_name.len() as u64;
+        if let Some(tt) = &self.thresholds {
+            sz += 1 + tt.size_bytes(); // GA02 section flag + body
+        }
         sz += 4; // n_layers
         for layer in &self.layers {
             sz += INSTR_BYTES as u64 + 4;
@@ -204,6 +240,7 @@ mod tests {
             n2: 16,
             model_name: "b1".into(),
             graph_name: "CO".into(),
+            thresholds: None,
             layers: vec![LayerBlock {
                 csi: Instr::Csi { layer_id: 1, layer_type: 0, n_tiling_blocks: 2 },
                 blocks: vec![
@@ -240,8 +277,38 @@ mod tests {
         let p = sample_program();
         let bytes = p.to_bytes();
         assert_eq!(bytes.len() as u64, p.size_bytes());
+        assert_eq!(&bytes[..4], b"GA01", "no thresholds -> legacy wire bytes");
         let q = Program::from_bytes(&bytes).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn threshold_section_roundtrip_and_versioned_magic() {
+        use crate::sparsity::{KernelMode, ThresholdEntry, ThresholdTable};
+        let mut p = sample_program();
+        p.thresholds = Some(ThresholdTable {
+            dense_hi: 0.125,
+            sparse_lo: 0.0625,
+            entries: vec![ThresholdEntry {
+                layer_id: 1,
+                provisional: KernelMode::Spdmm,
+                feat_density: 1.0,
+                adj_density: 0.2,
+            }],
+        });
+        let bytes = p.to_bytes();
+        assert_eq!(&bytes[..4], b"GA02");
+        assert_eq!(bytes.len() as u64, p.size_bytes());
+        let q = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(p, q);
+        // Corrupting the section flag is rejected, not silently skipped.
+        let flag_at = 4 + 4 + 4 + 2 + 2 + 2 + 2; // header + "b1" + "CO"
+        assert_eq!(bytes[flag_at], 1);
+        let mut bad = bytes.clone();
+        bad[flag_at] = 7;
+        assert!(Program::from_bytes(&bad).is_err());
+        // Truncating inside the section is rejected too.
+        assert!(Program::from_bytes(&bytes[..flag_at + 5]).is_err());
     }
 
     #[test]

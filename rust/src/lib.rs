@@ -30,6 +30,11 @@
 //! * [`serve`] — the multi-tenant serving fleet: N overlay devices, a
 //!   deterministic virtual clock, per-device program caches with
 //!   cache-affinity routing and cross-request coalescing,
+//! * [`sparsity`] — density-aware dynamic kernel re-mapping
+//!   (Dynasparse-style): an exact per-tile adjacency profiler, an
+//!   analytic feature-density estimator, and the threshold table the
+//!   compiler embeds in the `.ga` binary so engines can override
+//!   GEMM/SpDMM per Tiling Block at run time,
 //! * [`baselines`] — analytic models of the comparison systems in the
 //!   paper's evaluation (PyG/DGL on CPU/GPU, HyGCN, AWB-GCN, BoostGCN),
 //! * [`harness`] — regenerates every table and figure of Sec. 8.
@@ -49,6 +54,7 @@ pub mod isa;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod sparsity;
 pub mod util;
 
 pub use config::HwConfig;

@@ -234,7 +234,8 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// introduction). Deterministic: the same flags print the same stats.
 ///
 /// Flags: `--requests N` (default 64), `--devices N` (default 1),
-/// `--no-affinity`, `--no-coalesce`, `--datasets CO,PU`.
+/// `--no-affinity`, `--no-coalesce`, `--no-dynamic` (static kernel
+/// mapping), `--datasets CO,PU`.
 fn cmd_serve(args: &Args) -> Result<()> {
     use graphagile::serve::{Coordinator, FleetConfig, Request};
     use graphagile::util::Rng;
@@ -243,6 +244,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_devices: args.get("devices").and_then(|s| s.parse().ok()).unwrap_or(1),
         affinity: args.get("no-affinity").is_none(),
         coalesce: args.get("no-coalesce").is_none(),
+        dynamic: args.get("no-dynamic").is_none(),
     };
     anyhow::ensure!(cfg.n_devices >= 1, "--devices must be >= 1");
     let datasets = args.datasets()?;
@@ -267,18 +269,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.completed,
         c.n_devices()
     );
-    println!(
-        "  cache hits        {} / {} ({} coalesced)",
-        stats.cache_hits, stats.completed, stats.coalesced
-    );
-    println!("  latency p50/p99   {:.3} ms / {:.3} ms", stats.p50 * 1e3, stats.p99 * 1e3);
-    println!("  mean latency      {:.3} ms", stats.mean * 1e3);
+    print!("{}", graphagile::harness::serve_summary(&stats));
     let util = if stats.makespan > 0.0 {
         stats.device_busy / (stats.makespan * c.n_devices() as f64) * 100.0
     } else {
         0.0
     };
-    println!("  fleet utilization {util:.1}% over {:.3} s makespan", stats.makespan);
+    println!("  fleet utilization {util:.1}%");
     for d in c.devices() {
         println!(
             "  device {}: {} programs ({}), busy {:.3} s",

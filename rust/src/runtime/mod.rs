@@ -4,9 +4,9 @@
 //! path — the binary is self-contained once `artifacts/` exists.
 //!
 //! * [`artifacts`] — manifest parsing and artifact discovery,
-//! * [`client`] — the `xla` crate wrapper: `PjRtClient::cpu()` →
+//! * `client` — the `xla` crate wrapper: `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → compile → execute,
-//! * [`tile_exec`] — a [`crate::exec::TileBackend`] that pads tiles to
+//! * `tile_exec` — a [`crate::exec::TileBackend`] that pads tiles to
 //!   the artifact shapes and runs them on the compiled kernels.
 //!
 //! The PJRT client needs the `xla` crate, which is not in the offline

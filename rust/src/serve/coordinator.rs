@@ -19,7 +19,7 @@ use crate::compiler::Executable;
 use crate::config::HwConfig;
 use crate::graph::Dataset;
 use crate::ir::ZooModel;
-use crate::sim::simulate;
+use crate::sim::{simulate, simulate_dynamic};
 use std::collections::HashMap;
 
 /// One inference request.
@@ -50,6 +50,9 @@ pub struct Response {
     pub cache_hit: bool,
     /// Rode an identical in-flight job (no extra device work).
     pub coalesced: bool,
+    /// Density-driven kernel re-maps in the execution serving this
+    /// request (riders report the re-maps of the job they rode).
+    pub remaps: u64,
 }
 
 /// Aggregate statistics. `PartialEq` so replay determinism is testable
@@ -59,6 +62,9 @@ pub struct ServeStats {
     pub completed: u64,
     pub cache_hits: u64,
     pub coalesced: u64,
+    /// Kernel re-maps summed over *executed* jobs (coalesced riders are
+    /// excluded so one execution is not counted once per rider).
+    pub remaps: u64,
     pub p50: f64,
     pub p99: f64,
     pub mean: f64,
@@ -73,11 +79,15 @@ pub struct FleetConfig {
     pub n_devices: usize,
     pub affinity: bool,
     pub coalesce: bool,
+    /// Serve with density-aware dynamic kernel re-mapping (execution
+    /// time and re-map counts from [`crate::sim::simulate_dynamic`],
+    /// which is never slower than the static mapping).
+    pub dynamic: bool,
 }
 
 impl Default for FleetConfig {
     fn default() -> FleetConfig {
-        FleetConfig { n_devices: 1, affinity: true, coalesce: true }
+        FleetConfig { n_devices: 1, affinity: true, coalesce: true, dynamic: true }
     }
 }
 
@@ -96,10 +106,12 @@ pub struct Coordinator {
     devices: Vec<Device>,
     dispatcher: Dispatcher,
     clock: VirtualClock,
-    /// Modeled exec seconds per (model, graph): every device is the same
-    /// overlay design, so execution time is a fleet-wide property.
-    exec_memo: HashMap<Key, f64>,
+    /// Modeled (exec seconds, kernel re-maps) per (model, graph): every
+    /// device is the same overlay design, so execution is a fleet-wide
+    /// property.
+    exec_memo: HashMap<Key, (f64, u64)>,
     hw: HwConfig,
+    dynamic: bool,
     pub responses: Vec<Response>,
 }
 
@@ -117,6 +129,7 @@ impl Coordinator {
             clock: VirtualClock::new(),
             exec_memo: HashMap::new(),
             hw,
+            dynamic: cfg.dynamic,
             responses: Vec::new(),
         }
     }
@@ -165,6 +178,7 @@ impl Coordinator {
             let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
             let resp = match route {
                 Route::Coalesce(dev, j) => {
+                    let remaps = self.exec_memo.get(&key).map_or(0, |e| e.1);
                     let job = &mut self.devices[dev].jobs[j];
                     job.riders += 1;
                     Response {
@@ -177,15 +191,24 @@ impl Coordinator {
                         latency: job.done - rq.arrival,
                         cache_hit: true,
                         coalesced: true,
+                        remaps,
                     }
                 }
                 Route::Device(dev) => {
                     let memo = &mut self.exec_memo;
                     let hw = &self.hw;
+                    let dynamic = self.dynamic;
                     let mut exec_seconds = |exe: &Executable| {
-                        *memo
-                            .entry(key)
-                            .or_insert_with(|| simulate(&exe.program, hw).loh_seconds())
+                        memo.entry(key)
+                            .or_insert_with(|| {
+                                let sim = if dynamic {
+                                    simulate_dynamic(&exe.program, hw)
+                                } else {
+                                    simulate(&exe.program, hw)
+                                };
+                                (sim.loh_seconds(), sim.remaps)
+                            })
+                            .0
                     };
                     let device = &mut self.devices[dev];
                     let (_exe, j) =
@@ -201,6 +224,7 @@ impl Coordinator {
                         latency: job.done - rq.arrival,
                         cache_hit: job.cache_hit,
                         coalesced: false,
+                        remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
                     }
                 }
             };
@@ -220,6 +244,12 @@ impl Coordinator {
             completed: self.responses.len() as u64,
             cache_hits: self.responses.iter().filter(|r| r.cache_hit).count() as u64,
             coalesced: self.responses.iter().filter(|r| r.coalesced).count() as u64,
+            remaps: self
+                .responses
+                .iter()
+                .filter(|r| !r.coalesced)
+                .map(|r| r.remaps)
+                .sum(),
             p50: percentile(&lats, 0.50),
             p99: percentile(&lats, 0.99),
             mean: lats.iter().sum::<f64>() / lats.len() as f64,
@@ -389,6 +419,30 @@ mod tests {
         // The old truncating formula pinned p99 of 5 samples to index
         // (5-1)*0.99 = 3 (40.0) — the tail sample was unreachable.
         assert_eq!(percentile(&small, 0.25), 20.0);
+    }
+
+    #[test]
+    fn remap_counters_are_deterministic_and_not_double_counted() {
+        let run = |dynamic: bool| {
+            let cfg = FleetConfig { dynamic, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            let stats = c.run(mixed_workload(30, 5));
+            (stats, c.responses)
+        };
+        let (s1, r1) = run(true);
+        let (s2, r2) = run(true);
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+        // Riders echo their job's remap count but only executed jobs are
+        // summed into the stats.
+        let executed: u64 = r1.iter().filter(|r| !r.coalesced).map(|r| r.remaps).sum();
+        assert_eq!(s1.remaps, executed);
+        // Static serving reports zero re-maps everywhere.
+        let (s0, r0) = run(false);
+        assert_eq!(s0.remaps, 0);
+        assert!(r0.iter().all(|r| r.remaps == 0));
+        // Dynamic execution times are never slower (memoized per key).
+        assert!(s1.makespan <= s0.makespan + 1e-12);
     }
 
     #[test]

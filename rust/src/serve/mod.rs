@@ -18,6 +18,12 @@
 //!   least-loaded one,
 //! * [`coordinator`] — the event loop binding it together, plus latency
 //!   statistics (nearest-rank p50/p99).
+//!
+//! The fleet serves with density-aware dynamic kernel re-mapping by
+//! default ([`FleetConfig`](coordinator::FleetConfig)`::dynamic`):
+//! execution times and per-request re-map counters come from
+//! [`crate::sim::simulate_dynamic`], which is never slower than the
+//! static mapping.
 
 pub mod cache;
 pub mod clock;

@@ -16,13 +16,18 @@
 use super::raw::stall_factor;
 use super::shuffle::uniform_throughput;
 use crate::config::HwConfig;
-use crate::isa::{instr_cycles, Instr};
+use crate::isa::{instr_cycles, AggOp, Instr};
+use crate::sparsity::{choose_mode, tile_density, KernelMode, ThresholdEntry, ThresholdTable};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::sync::OnceLock;
 
 /// Mode-switch overhead: one cycle (paper Sec. 5.4).
 pub const MODE_SWITCH_CYCLES: u64 = 1;
+
+/// Overhead of a runtime re-map decision: read the profiled density,
+/// compare against the threshold table, select the ACK mode.
+pub const REMAP_DECISION_CYCLES: u64 = 2;
 
 fn shuffle_eta(p_sys: usize, fifo_depth: usize) -> f64 {
     static CACHE: OnceLock<Mutex<HashMap<(usize, usize), f64>>> = OnceLock::new();
@@ -76,6 +81,82 @@ impl AckModel {
                 (base as f64 / self.eta_shuffle).ceil() as u64 + MODE_SWITCH_CYCLES
             }
             _ => base + MODE_SWITCH_CYCLES,
+        }
+    }
+
+    /// Density-aware effective cycles (Dynasparse-style): consult the
+    /// threshold table for this instruction's Tiling Block and charge
+    /// the re-mapped mode when the cycle model says it is strictly
+    /// cheaper (including [`REMAP_DECISION_CYCLES`]). Returns the
+    /// charged cycles and whether a re-map happened.
+    ///
+    /// Only GEMM<->SpDMM re-map (they compute the same weighted sum).
+    /// The adjacency-tile density is exact (`n_edges` over the tile
+    /// area, with `out_rows` standing in for both tile dimensions —
+    /// Fiber-Shard subshards are N1-square except at the graph edge);
+    /// the feature density comes from the compiler's analytic estimate
+    /// in the table entry. Because a re-map is only accepted when
+    /// modeled cheaper, dynamic simulation is never slower than static.
+    ///
+    /// Granularity caveat: decisions are per *buffered chunk* — a
+    /// subshard larger than the Edge Buffer arrives as several SpDMM
+    /// instructions, each seeing its own `n_edges` over the full tile
+    /// area, so an over-capacity dense tile under-reports density and
+    /// keeps its edge-stream mapping. That is the implementable
+    /// contract (the ACK only ever re-maps work that is resident in
+    /// its buffers), and the `<` guard keeps it conservative: a chunk
+    /// whose dense equivalent does not pay for itself is never
+    /// re-mapped.
+    pub fn cycles_dynamic(
+        &self,
+        instr: &Instr,
+        out_rows: u64,
+        tt: &ThresholdTable,
+        entry: Option<&ThresholdEntry>,
+    ) -> (u64, bool) {
+        let static_cycles = self.cycles(instr, out_rows);
+        match *instr {
+            Instr::Spdmm { n_edges, feat, act, .. } => {
+                let src_rows = out_rows.max(1);
+                let d = tile_density(n_edges as u64, out_rows.max(1), src_rows);
+                let provisional =
+                    entry.map(|e| e.provisional).unwrap_or(KernelMode::Spdmm);
+                if choose_mode(provisional, d, tt) == KernelMode::Gemm {
+                    let dense = Instr::Gemm {
+                        rows: out_rows.min(u32::MAX as u64) as u32,
+                        len: src_rows.min(u16::MAX as u64) as u16,
+                        cols: feat,
+                        act,
+                        accumulate: true,
+                    };
+                    let dynamic = self.cycles(&dense, out_rows) + REMAP_DECISION_CYCLES;
+                    if dynamic < static_cycles {
+                        return (dynamic, true);
+                    }
+                }
+                (static_cycles, false)
+            }
+            Instr::Gemm { rows, len, cols, act, .. } => {
+                let fd = entry.map(|e| e.feat_density).unwrap_or(1.0);
+                if choose_mode(KernelMode::Gemm, fd, tt) == KernelMode::Spdmm {
+                    // Nonzeros of the input tile as an equivalent edge
+                    // stream through the SpDMM path.
+                    let ne = (fd as f64 * rows as f64 * len as f64)
+                        .min(u32::MAX as f64) as u32;
+                    let sparse = Instr::Spdmm {
+                        n_edges: ne,
+                        feat: cols,
+                        aggop: AggOp::Sum,
+                        act,
+                    };
+                    let dynamic = self.cycles(&sparse, out_rows) + REMAP_DECISION_CYCLES;
+                    if dynamic < static_cycles {
+                        return (dynamic, true);
+                    }
+                }
+                (static_cycles, false)
+            }
+            _ => (static_cycles, false),
         }
     }
 }
@@ -146,6 +227,43 @@ mod tests {
             lock: true,
         };
         assert_eq!(m.cycles(&r, 16384), 0);
+    }
+
+    #[test]
+    fn dynamic_remaps_dense_tiles_and_never_charges_more() {
+        let m = model();
+        let tt = ThresholdTable {
+            dense_hi: 0.125,
+            sparse_lo: 0.0625,
+            entries: vec![],
+        };
+        // A 256x256 tile at density 0.75: the edge stream alone exceeds
+        // the dense GEMM trip count, so the re-map must win for any
+        // measured shuffle throughput.
+        let dense = Instr::Spdmm {
+            n_edges: 49152,
+            feat: 16,
+            aggop: AggOp::Sum,
+            act: Activation::None,
+        };
+        let (dc, remapped) = m.cycles_dynamic(&dense, 256, &tt, None);
+        let sc = m.cycles(&dense, 256);
+        assert!(remapped, "0.75-dense tile must re-map to GEMM");
+        assert!(dc < sc, "re-mapped {dc} must beat static {sc}");
+        // A Reddit-scale sparse tile stays on the static mapping, at
+        // exactly the static cost.
+        let sparse = Instr::Spdmm {
+            n_edges: 65536,
+            feat: 16,
+            aggop: AggOp::Sum,
+            act: Activation::None,
+        };
+        let (c, r) = m.cycles_dynamic(&sparse, 16384, &tt, None);
+        assert!(!r);
+        assert_eq!(c, m.cycles(&sparse, 16384));
+        // Non-remappable instructions pass through untouched.
+        let v = Instr::Vadd { rows: 128, cols: 16, act: Activation::None };
+        assert_eq!(m.cycles_dynamic(&v, 128, &tt, None), (m.cycles(&v, 128), false));
     }
 
     #[test]

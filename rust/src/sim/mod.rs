@@ -17,6 +17,12 @@
 //! * [`scheduler`] — dynamic Tiling-Block-to-PE assignment (Alg. 9),
 //! * [`engine`] — the full run: per-block compute/memory overlap (double
 //!   / triple buffering), per-layer barriers, LoH.
+//!
+//! Two entry points: [`simulate`] charges the static compile-time kernel
+//! mapping; [`simulate_dynamic`] additionally consults the program's
+//! density-threshold table (`crate::sparsity`) and charges each compute
+//! instruction at the cheaper of its encoded mode and the
+//! density-selected re-map — never slower than static by construction.
 
 pub mod ack;
 pub mod ddr;
@@ -26,5 +32,5 @@ pub mod raw;
 pub mod scheduler;
 pub mod shuffle;
 
-pub use engine::{simulate, LayerSim, SimResult};
+pub use engine::{simulate, simulate_dynamic, simulate_with, LayerSim, SimResult};
 pub use pcie::comm_seconds;

@@ -1,0 +1,391 @@
+//! Density-aware dynamic kernel re-mapping (after Dynasparse, arXiv
+//! 2303.12901 — the same group's follow-up to GraphAGILE).
+//!
+//! GraphAGILE's kernel-mapping pass (Sec. 6.6) picks GEMM vs SpDMM vs
+//! SDDMM per layer from *static* whole-graph metadata. But the sparsity
+//! that matters materializes at runtime: per-partition subgraphs and
+//! intermediate feature matrices have densities that differ wildly from
+//! the whole-graph average. This module moves the decision to run time:
+//!
+//! * **Profiler** — [`tile_density`] / [`adjacency_density`] compute the
+//!   *exact* density of adjacency subshards from the Fiber-Shard tile
+//!   counts; [`feature_density_estimates`] is the cheap analytic
+//!   estimator for intermediate feature matrices (GEMM outputs are
+//!   dense, ReLU halves density, aggregation fills rows at a rate set
+//!   by the mean degree — no feature values are ever inspected).
+//! * **Threshold table** — [`build_table`] turns the profile into a
+//!   [`ThresholdTable`]: one *provisional* [`KernelMode`] per layer
+//!   (exactly what the emitted instructions encode) plus the
+//!   [`ThresholdTable::dense_hi`] / [`ThresholdTable::sparse_lo`]
+//!   hysteresis band derived from the ACK's analytic break-even
+//!   ([`break_even_density`]). The table is serialized into the `.ga`
+//!   binary as the optional GA02 section (`isa::binary`).
+//! * **Re-mapper** — [`choose_mode`] is the per-Tiling-Block runtime
+//!   decision both the functional executor (`exec::functional`, real
+//!   numerics through the dense path) and the cycle model (`sim::ack`,
+//!   charging the re-mapped mode) consult through
+//!   [`crate::engine::InferenceEngine::set_dynamic_remap`].
+//!
+//! The re-map never changes results — a densified subshard GEMM computes
+//! exactly the weighted-sum aggregation SpDMM computes — so golden
+//! equivalence holds regardless of which mode executes, and the cycle
+//! model only accepts a re-map that it models as strictly cheaper, so
+//! dynamic mapping is never slower than static.
+
+use crate::graph::TileCounts;
+use crate::ir::{LayerType, ModelIr};
+use crate::isa::Activation;
+use anyhow::{bail, Result};
+
+/// Execution mode of one Tiling Block on the Adaptive Computation Kernel
+/// (paper Sec. 5.4: the ACK reconfigures between these in one cycle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelMode {
+    /// Dense systolic matrix multiply.
+    Gemm = 0,
+    /// Edge-centric sparse-dense multiply (aggregation).
+    Spdmm = 1,
+    /// Sampled dense-dense multiply (per-edge inner products).
+    Sddmm = 2,
+    /// Element-wise path (VectorAdd / Activation / BatchNorm).
+    Eltwise = 3,
+}
+
+impl KernelMode {
+    /// Wire encoding (one byte in the GA02 threshold section).
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode the wire byte; errors on unknown modes (corrupt binary).
+    pub fn from_u8(v: u8) -> Result<KernelMode> {
+        Ok(match v {
+            0 => KernelMode::Gemm,
+            1 => KernelMode::Spdmm,
+            2 => KernelMode::Sddmm,
+            3 => KernelMode::Eltwise,
+            _ => bail!("bad kernel mode {v}"),
+        })
+    }
+}
+
+/// Per-layer row of the threshold table: the compiler's provisional
+/// kernel choice plus the densities it was derived from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThresholdEntry {
+    pub layer_id: u16,
+    /// Compile-time kernel choice (what the emitted instructions encode).
+    pub provisional: KernelMode,
+    /// Analytic estimate of this layer's *input* feature density.
+    pub feat_density: f32,
+    /// Exact whole-graph adjacency density over non-empty subshards
+    /// (0 for layers that never touch the adjacency).
+    pub adj_density: f32,
+}
+
+/// The compiler-emitted re-mapping contract: provisional per-layer modes
+/// plus the density band inside which the provisional choice stands.
+/// Serialized as the optional GA02 section of the `.ga` binary.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ThresholdTable {
+    /// At or above this tile density, a sparse-mapped (SpDMM) block is a
+    /// candidate for dense GEMM re-mapping.
+    pub dense_hi: f32,
+    /// At or below this density, a dense-mapped (GEMM) block is a
+    /// candidate for sparse re-mapping. Kept strictly below `dense_hi`
+    /// so borderline tiles do not flip-flop (hysteresis).
+    pub sparse_lo: f32,
+    pub entries: Vec<ThresholdEntry>,
+}
+
+/// Bytes per serialized [`ThresholdEntry`]: u16 id + u8 mode + two f32.
+pub const ENTRY_BYTES: usize = 11;
+
+impl ThresholdTable {
+    /// Table row for `layer_id`, if the compiler emitted one.
+    pub fn entry(&self, layer_id: u16) -> Option<&ThresholdEntry> {
+        self.entries.iter().find(|e| e.layer_id == layer_id)
+    }
+
+    /// Serialized size of the GA02 section body.
+    pub fn size_bytes(&self) -> u64 {
+        4 + 4 + 4 + (self.entries.len() * ENTRY_BYTES) as u64
+    }
+
+    /// Serialize the section body (two f32 thresholds, entry count,
+    /// then the fixed-width entries).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes() as usize);
+        out.extend_from_slice(&self.dense_hi.to_le_bytes());
+        out.extend_from_slice(&self.sparse_lo.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&e.layer_id.to_le_bytes());
+            out.push(e.provisional.as_u8());
+            out.extend_from_slice(&e.feat_density.to_le_bytes());
+            out.extend_from_slice(&e.adj_density.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a section body from the front of `data`. Returns the table
+    /// and the number of bytes consumed; errors (never panics) on
+    /// truncated or corrupt input.
+    pub fn from_bytes(data: &[u8]) -> Result<(ThresholdTable, usize)> {
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+            if *at + n > data.len() {
+                bail!("truncated threshold table at offset {at}");
+            }
+            let s = &data[*at..*at + n];
+            *at += n;
+            Ok(s)
+        };
+        let rd_f32 = |at: &mut usize| -> Result<f32> {
+            Ok(f32::from_le_bytes(take(at, 4)?.try_into().unwrap()))
+        };
+        let dense_hi = rd_f32(&mut at)?;
+        let sparse_lo = rd_f32(&mut at)?;
+        let n = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+        let mut entries = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let layer_id = u16::from_le_bytes(take(&mut at, 2)?.try_into().unwrap());
+            let provisional = KernelMode::from_u8(take(&mut at, 1)?[0])?;
+            let feat_density = rd_f32(&mut at)?;
+            let adj_density = rd_f32(&mut at)?;
+            entries.push(ThresholdEntry { layer_id, provisional, feat_density, adj_density });
+        }
+        Ok((ThresholdTable { dense_hi, sparse_lo, entries }, at))
+    }
+}
+
+/// SpDMM effective-cycle derate assumed by the analytic break-even:
+/// shuffle-network conflicts plus RAW-unit stalls (paper Sec. 5.4–5.5)
+/// roughly double the ideal edge-stream trip count on skewed tiles.
+const SPDMM_DERATE: f32 = 2.0;
+
+/// Tile density at which a dense GEMM of an adjacency subshard costs the
+/// same modeled cycles as streaming its edges through SpDMM.
+///
+/// Both modes sustain `p_sys^2`-scale MACs per cycle (Alg. 1–2), but the
+/// edge stream moves `2·ne` index/value pairs where the dense tile moves
+/// `rows·cols` elements, so SpDMM work scales with `2·d` and the ratio
+/// is independent of `p_sys`: break-even at `d = 1 / (2·derate)`.
+pub fn break_even_density() -> f32 {
+    1.0 / (2.0 * SPDMM_DERATE)
+}
+
+/// Exact density of one adjacency subshard: edges over tile area.
+pub fn tile_density(ne: u64, rows: u64, cols: u64) -> f32 {
+    ne as f32 / (rows * cols).max(1) as f32
+}
+
+/// Exact mean density over the *non-empty* subshards of the adjacency —
+/// the quantity whose divergence from the whole-graph average motivates
+/// per-tile decisions (empty tiles are skipped at compile time already).
+pub fn adjacency_density(tiles: &TileCounts, nv: u64) -> f32 {
+    let n1 = tiles.n1;
+    let shards = tiles.shards;
+    let mut edges = 0u64;
+    let mut area = 0u64;
+    for i in 0..shards {
+        let rows = (nv - (i as u64) * n1).min(n1);
+        for j in 0..shards {
+            let ne = tiles.get(i, j);
+            if ne == 0 {
+                continue;
+            }
+            let cols = (nv - (j as u64) * n1).min(n1);
+            edges += ne;
+            area += rows * cols;
+        }
+    }
+    edges as f32 / area.max(1) as f32
+}
+
+/// Cheap analytic estimator of each layer's *input* feature-matrix
+/// density (index-aligned with `ir.layers`). No feature values are
+/// inspected — the chain is closed-form over the layer DAG:
+///
+/// * graph input features: dense (1.0);
+/// * Linear output: dense (a GEMM fills every element);
+/// * Aggregate output: a row is nonzero when any in-neighbor row is —
+///   `1 - (1 - d_in)^mean_degree`;
+/// * VectorAdd: union of the two parents' supports;
+/// * ReLU (fused or standalone): halves density (symmetric inputs);
+/// * VectorInner / BatchNorm: features pass through.
+pub fn feature_density_estimates(ir: &ModelIr) -> Vec<f32> {
+    use std::collections::HashMap;
+    let mut out_d: HashMap<u16, f32> = HashMap::new();
+    let mut inputs = Vec::with_capacity(ir.layers.len());
+    for layer in &ir.layers {
+        let d_in = layer
+            .parents
+            .first()
+            .and_then(|p| out_d.get(p).copied())
+            .unwrap_or(1.0);
+        inputs.push(d_in);
+        let mean_deg = (layer.ne as f32 / layer.nv.max(1) as f32).max(1.0);
+        let mut d_out = match layer.ltype {
+            LayerType::Linear => 1.0,
+            LayerType::Aggregate => 1.0 - (1.0 - d_in).powf(mean_deg),
+            LayerType::VectorAdd => {
+                let d2 = layer
+                    .parents
+                    .get(1)
+                    .and_then(|p| out_d.get(p).copied())
+                    .unwrap_or(d_in);
+                (d_in + d2).min(1.0)
+            }
+            LayerType::VectorInner | LayerType::Activation | LayerType::BatchNorm => d_in,
+        };
+        let relu = layer.act == Activation::Relu
+            && (layer.act_enabled || layer.ltype == LayerType::Activation);
+        if relu {
+            d_out *= 0.5;
+        }
+        out_d.insert(layer.id, d_out.clamp(0.0, 1.0));
+    }
+    inputs
+}
+
+/// Build the threshold table the compiler embeds in the `.ga` binary:
+/// the hysteresis band sits below the analytic break-even (so the
+/// runtime evaluates candidates the cycle model then accepts or
+/// rejects), and each layer records its provisional mode plus the
+/// densities that justified it.
+pub fn build_table(ir: &ModelIr, tiles: &TileCounts) -> ThresholdTable {
+    let dense_hi = break_even_density() * 0.5;
+    let sparse_lo = dense_hi * 0.5;
+    let feats = feature_density_estimates(ir);
+    let adj = adjacency_density(tiles, ir.graph.n_vertices);
+    let entries = ir
+        .layers
+        .iter()
+        .zip(&feats)
+        .map(|(l, &fd)| {
+            let touches_adj =
+                matches!(l.ltype, LayerType::Aggregate | LayerType::VectorInner);
+            // The provisional mode is exactly what the emitted
+            // instructions encode (Aggregate -> SpDMM, Linear -> GEMM,
+            // ...): per-tile densities override it at run time, the
+            // whole-graph average merely rides along in `adj_density`.
+            let provisional = match l.ltype {
+                LayerType::Aggregate => KernelMode::Spdmm,
+                LayerType::Linear => KernelMode::Gemm,
+                LayerType::VectorInner => KernelMode::Sddmm,
+                LayerType::VectorAdd
+                | LayerType::Activation
+                | LayerType::BatchNorm => KernelMode::Eltwise,
+            };
+            ThresholdEntry {
+                layer_id: l.id,
+                provisional,
+                feat_density: fd,
+                adj_density: if touches_adj { adj } else { 0.0 },
+            }
+        })
+        .collect();
+    ThresholdTable { dense_hi, sparse_lo, entries }
+}
+
+/// The per-Tiling-Block runtime decision: override the provisional mode
+/// when the measured density leaves the hysteresis band. Only the
+/// GEMM<->SpDMM pair re-maps (they compute the same weighted sum two
+/// ways); SDDMM and the element-wise path have no cheaper alternative.
+pub fn choose_mode(provisional: KernelMode, density: f32, tt: &ThresholdTable) -> KernelMode {
+    match provisional {
+        KernelMode::Spdmm if density >= tt.dense_hi => KernelMode::Gemm,
+        KernelMode::Gemm if density <= tt.sparse_lo => KernelMode::Spdmm,
+        m => m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+
+    #[test]
+    fn kernel_mode_wire_roundtrip() {
+        for m in [KernelMode::Gemm, KernelMode::Spdmm, KernelMode::Sddmm, KernelMode::Eltwise] {
+            assert_eq!(KernelMode::from_u8(m.as_u8()).unwrap(), m);
+        }
+        assert!(KernelMode::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn table_roundtrips_and_sizes() {
+        let tt = ThresholdTable {
+            dense_hi: 0.125,
+            sparse_lo: 0.0625,
+            entries: vec![
+                ThresholdEntry {
+                    layer_id: 1,
+                    provisional: KernelMode::Spdmm,
+                    feat_density: 1.0,
+                    adj_density: 0.002,
+                },
+                ThresholdEntry {
+                    layer_id: 2,
+                    provisional: KernelMode::Gemm,
+                    feat_density: 0.5,
+                    adj_density: 0.0,
+                },
+            ],
+        };
+        let bytes = tt.to_bytes();
+        assert_eq!(bytes.len() as u64, tt.size_bytes());
+        let (back, used) = ThresholdTable::from_bytes(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, tt);
+        // Truncations are rejected, never panic.
+        for cut in 0..bytes.len() {
+            assert!(ThresholdTable::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn densities_are_sane() {
+        let ds = dataset("CO").unwrap();
+        let tiles = ds.tile_counts(16384);
+        let d = adjacency_density(&tiles, ds.n_vertices);
+        // Cora-scale graphs are far below the dense band.
+        assert!(d > 0.0 && d < 0.05, "CO density {d}");
+        assert_eq!(tile_density(50, 10, 10), 0.5);
+        assert_eq!(tile_density(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn feature_estimator_tracks_the_dag() {
+        let ds = dataset("CO").unwrap();
+        let ir = ZooModel::B1.build(ds.meta());
+        let est = feature_density_estimates(&ir);
+        assert_eq!(est.len(), ir.layers.len());
+        // The graph input is dense; every estimate is a probability.
+        assert_eq!(est[0], 1.0);
+        assert!(est.iter().all(|d| (0.0..=1.0).contains(d)));
+    }
+
+    #[test]
+    fn hysteresis_band_drives_choose_mode() {
+        let ds = dataset("CO").unwrap();
+        let tiles = ds.tile_counts(16384);
+        let ir = ZooModel::B1.build(ds.meta());
+        let tt = build_table(&ir, &tiles);
+        assert!(0.0 < tt.sparse_lo && tt.sparse_lo < tt.dense_hi);
+        assert!(tt.dense_hi < break_even_density());
+        assert_eq!(tt.entries.len(), ir.layers.len());
+        // Inside the band the provisional choice stands; outside it flips.
+        let mid = (tt.sparse_lo + tt.dense_hi) * 0.5;
+        assert_eq!(choose_mode(KernelMode::Spdmm, mid, &tt), KernelMode::Spdmm);
+        assert_eq!(choose_mode(KernelMode::Gemm, mid, &tt), KernelMode::Gemm);
+        assert_eq!(choose_mode(KernelMode::Spdmm, tt.dense_hi, &tt), KernelMode::Gemm);
+        assert_eq!(choose_mode(KernelMode::Gemm, tt.sparse_lo, &tt), KernelMode::Spdmm);
+        // SDDMM / element-wise never re-map.
+        assert_eq!(choose_mode(KernelMode::Sddmm, 1.0, &tt), KernelMode::Sddmm);
+        assert_eq!(choose_mode(KernelMode::Eltwise, 0.0, &tt), KernelMode::Eltwise);
+    }
+}

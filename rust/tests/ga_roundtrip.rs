@@ -27,6 +27,12 @@ fn every_zoo_model_on_every_dataset_roundtrips() {
     for model in ALL_MODELS {
         for d in &ALL_DATASETS {
             let exe = build(model, d, &hw, CompileOptions::default());
+            assert!(
+                exe.program.thresholds.is_some(),
+                "{}/{}: default compile must embed the GA02 threshold section",
+                model.key(),
+                d.key
+            );
             let bytes = exe.program.to_bytes();
             assert_eq!(
                 bytes.len() as u64,
@@ -52,8 +58,13 @@ fn roundtrip_holds_under_random_options() {
             order_opt: rng.below(2) == 0,
             fusion: rng.below(2) == 0,
             skip_empty_tiles: rng.below(2) == 0,
+            dynamic_thresholds: rng.below(2) == 0,
         };
         let exe = build(model, &d, &hw, opts);
+        prop_assert!(
+            exe.program.thresholds.is_some() == opts.dynamic_thresholds,
+            "threshold section must track the compile option"
+        );
         let back = Program::from_bytes(&exe.program.to_bytes())
             .map_err(|e| format!("{}/{} {opts:?}: decode failed: {e:#}", model.key(), d.key))?;
         prop_assert!(
@@ -68,6 +79,51 @@ fn roundtrip_holds_under_random_options() {
         );
         Ok(())
     });
+}
+
+#[test]
+fn threshold_section_roundtrips_in_presence_and_absence() {
+    let hw = HwConfig::alveo_u250();
+    // Presence: the default compile carries the GA02 section.
+    let with = build(ZooModel::B2, &ALL_DATASETS[1], &hw, CompileOptions::default());
+    let tt = with.program.thresholds.clone().expect("GA02 section expected");
+    assert!(!tt.entries.is_empty());
+    let bytes = with.program.to_bytes();
+    assert_eq!(&bytes[..4], b"GA02");
+    let back = Program::from_bytes(&bytes).unwrap();
+    assert_eq!(back.thresholds.as_ref(), Some(&tt));
+    assert_eq!(back, with.program);
+    // Absence: disabling the option produces legacy GA01 wire bytes.
+    let without = build(
+        ZooModel::B2,
+        &ALL_DATASETS[1],
+        &hw,
+        CompileOptions { dynamic_thresholds: false, ..Default::default() },
+    );
+    let lbytes = without.program.to_bytes();
+    assert_eq!(&lbytes[..4], b"GA01");
+    let lback = Program::from_bytes(&lbytes).unwrap();
+    assert!(lback.thresholds.is_none());
+    assert_eq!(lback, without.program);
+    // Old and new binaries describe the same instruction stream.
+    assert_eq!(lback.total_instrs(), back.total_instrs());
+}
+
+#[test]
+fn legacy_ga01_binaries_still_load() {
+    // Simulate a pre-GA02 binary: strip the table from a modern program
+    // and serialize — the writer falls back to the GA01 layout, and the
+    // reader reports `thresholds: None` instead of erroring.
+    let hw = HwConfig::alveo_u250();
+    let exe = build(ZooModel::B1, &ALL_DATASETS[2], &hw, CompileOptions::default());
+    let mut legacy = exe.program.clone();
+    legacy.thresholds = None;
+    let bytes = legacy.to_bytes();
+    assert_eq!(&bytes[..4], b"GA01");
+    assert_eq!(bytes.len() as u64, legacy.size_bytes());
+    let back = Program::from_bytes(&bytes).unwrap();
+    assert!(back.thresholds.is_none());
+    assert_eq!(back, legacy);
 }
 
 #[test]

@@ -21,8 +21,12 @@ fn loh(
     simulate(&exe.program, &hw).loh_seconds()
 }
 
-const ON: CompileOptions =
-    CompileOptions { order_opt: true, fusion: true, skip_empty_tiles: true };
+const ON: CompileOptions = CompileOptions {
+    order_opt: true,
+    fusion: true,
+    skip_empty_tiles: true,
+    dynamic_thresholds: true,
+};
 
 #[test]
 fn fig14_signature_order_opt() {
