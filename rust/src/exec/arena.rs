@@ -1,0 +1,235 @@
+//! [`BufferArena`] — a size-class-keyed pool of reusable `f32`/`u32`
+//! buffers for the execution hot loop.
+//!
+//! The functional executor allocates the same tile shapes over and over
+//! (feature tiles, aggregation accumulators, per-edge value vectors).
+//! The arena recycles those buffers instead of returning them to the
+//! heap: a buffer is pooled under the largest power-of-two size class
+//! its capacity covers, and `take` hands back any pooled buffer whose
+//! class covers the requested length. After one warm run every steady-
+//! state request is served from the pool — [`ArenaStats::fresh`] stops
+//! growing (the escaping final output matrix is the one exception; see
+//! `exec::functional`).
+//!
+//! The arena is deliberately not thread-safe: each executor (and each
+//! serving device) owns its own arena, mirroring the per-overlay
+//! Feature/Result buffers of the hardware. Kernel-internal parallelism
+//! (`exec::kernels`) splits borrowed slices and never allocates.
+
+use std::collections::HashMap;
+
+/// Smallest pooled size class (floats/words). Tiny buffers are cheap to
+/// allocate and pooling them would fragment the class map.
+const MIN_CLASS: usize = 64;
+
+/// Per-class cap on pooled buffers; extras are dropped so a pathological
+/// workload cannot grow the pool without bound.
+const MAX_PER_CLASS: usize = 64;
+
+/// Allocation counters for the zero-alloc steady-state guarantee.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers newly allocated from the heap (pool misses).
+    pub fresh: u64,
+    /// Buffers served from the pool (pool hits).
+    pub reused: u64,
+    /// Buffers returned to the pool.
+    pub recycled: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of takes served without touching the heap.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.fresh + self.reused;
+        if total == 0 {
+            return 0.0;
+        }
+        self.reused as f64 / total as f64
+    }
+}
+
+/// A reusable-buffer pool keyed by power-of-two size class.
+#[derive(Debug, Default)]
+pub struct BufferArena {
+    f32_pool: HashMap<usize, Vec<Vec<f32>>>,
+    u32_pool: HashMap<usize, Vec<Vec<u32>>>,
+    stats: ArenaStats,
+}
+
+/// Size class that must *hold* a buffer of `len`: the smallest pooled
+/// power of two >= len.
+fn class_for(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_CLASS)
+}
+
+/// Size class a buffer of `capacity` can *serve*: the largest pooled
+/// power of two <= capacity (0 when the capacity is below the floor).
+fn class_of_capacity(capacity: usize) -> usize {
+    if capacity < MIN_CLASS {
+        return 0;
+    }
+    if capacity.is_power_of_two() {
+        capacity
+    } else {
+        capacity.next_power_of_two() >> 1
+    }
+}
+
+impl BufferArena {
+    pub fn new() -> BufferArena {
+        BufferArena::default()
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// A zero-filled f32 buffer of exactly `len` elements.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        self.take_f32_filled(len, 0.0)
+    }
+
+    /// A `fill`-filled f32 buffer of exactly `len` elements.
+    pub fn take_f32_filled(&mut self, len: usize, fill: f32) -> Vec<f32> {
+        let class = class_for(len);
+        match self.f32_pool.get_mut(&class).and_then(Vec::pop) {
+            Some(mut buf) => {
+                self.stats.reused += 1;
+                buf.clear();
+                buf.resize(len, fill);
+                buf
+            }
+            None => {
+                self.stats.fresh += 1;
+                let mut buf = Vec::with_capacity(class);
+                buf.resize(len, fill);
+                buf
+            }
+        }
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn copy_f32(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut buf = self.take_f32(src.len());
+        buf.copy_from_slice(src);
+        buf
+    }
+
+    /// Return an f32 buffer to the pool.
+    pub fn recycle_f32(&mut self, buf: Vec<f32>) {
+        let class = class_of_capacity(buf.capacity());
+        if class == 0 {
+            return; // below the pooling floor: let it drop
+        }
+        let pool = self.f32_pool.entry(class).or_default();
+        if pool.len() < MAX_PER_CLASS {
+            self.stats.recycled += 1;
+            pool.push(buf);
+        }
+    }
+
+    /// A zero-filled u32 buffer of exactly `len` elements (flag /
+    /// index scratch — e.g. touched-row bitmaps).
+    pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
+        let class = class_for(len);
+        match self.u32_pool.get_mut(&class).and_then(Vec::pop) {
+            Some(mut buf) => {
+                self.stats.reused += 1;
+                buf.clear();
+                buf.resize(len, 0);
+                buf
+            }
+            None => {
+                self.stats.fresh += 1;
+                let mut buf = Vec::with_capacity(class);
+                buf.resize(len, 0);
+                buf
+            }
+        }
+    }
+
+    /// Return a u32 buffer to the pool.
+    pub fn recycle_u32(&mut self, buf: Vec<u32>) {
+        let class = class_of_capacity(buf.capacity());
+        if class == 0 {
+            return;
+        }
+        let pool = self.u32_pool.entry(class).or_default();
+        if pool.len() < MAX_PER_CLASS {
+            self.stats.recycled += 1;
+            pool.push(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_sized_and_filled() {
+        let mut a = BufferArena::new();
+        let b = a.take_f32_filled(100, f32::NEG_INFINITY);
+        assert_eq!(b.len(), 100);
+        assert!(b.iter().all(|&v| v == f32::NEG_INFINITY));
+        assert_eq!(a.stats().fresh, 1);
+    }
+
+    #[test]
+    fn recycle_then_take_reuses_without_reallocating() {
+        let mut a = BufferArena::new();
+        let b = a.take_f32(100); // class 128
+        let cap = b.capacity();
+        a.recycle_f32(b);
+        // Any length in the same class reuses the same allocation.
+        let c = a.take_f32_filled(120, 1.0);
+        assert_eq!(c.capacity(), cap);
+        assert_eq!(c.len(), 120);
+        assert!(c.iter().all(|&v| v == 1.0));
+        let s = a.stats();
+        assert_eq!((s.fresh, s.reused, s.recycled), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smaller_class_does_not_steal_larger_request() {
+        let mut a = BufferArena::new();
+        let small = a.take_f32(64);
+        a.recycle_f32(small);
+        // 1000 needs class 1024; the pooled class-64 buffer cannot serve
+        // it, so this take is fresh (no hidden realloc-on-resize).
+        let big = a.take_f32(1000);
+        assert!(big.capacity() >= 1000);
+        assert_eq!(a.stats().fresh, 2);
+    }
+
+    #[test]
+    fn u32_pool_is_independent() {
+        let mut a = BufferArena::new();
+        let t = a.take_u32(100);
+        assert!(t.iter().all(|&v| v == 0));
+        a.recycle_u32(t);
+        let t2 = a.take_u32(90);
+        assert_eq!(t2.len(), 90);
+        let s = a.stats();
+        assert_eq!((s.fresh, s.reused), (1, 1));
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mut a = BufferArena::new();
+        // Warm-up: the shapes a fake workload uses.
+        for &len in &[128usize, 8192, 64, 512] {
+            let b = a.take_f32(len);
+            a.recycle_f32(b);
+        }
+        let fresh_after_warmup = a.stats().fresh;
+        for _ in 0..10 {
+            for &len in &[128usize, 8192, 64, 512] {
+                let b = a.take_f32(len);
+                a.recycle_f32(b);
+            }
+        }
+        assert_eq!(a.stats().fresh, fresh_after_warmup, "steady state allocated");
+    }
+}

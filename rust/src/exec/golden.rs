@@ -1,10 +1,20 @@
 //! Whole-graph golden executor: runs the (optimized) IR directly over
-//! full matrices with the reference operators — the ground truth the
-//! partition-centric functional executor must reproduce bit-for-bit
-//! (rust backend) or to float tolerance (PJRT backend).
+//! full matrices — the ground truth the partition-centric functional
+//! executor must reproduce bit-for-bit (rust backend) or to float
+//! tolerance (PJRT backend).
+//!
+//! Two kernel sets run the same layer loop: [`golden_forward`] routes
+//! through the optimized backend (`exec::kernels` — blocked GEMM, a
+//! whole-graph destination-row CSR built once per run and reused across
+//! aggregation layers, layer buffers recycled through a
+//! [`BufferArena`]), while [`golden_forward_reference`] keeps the naive
+//! scalar COO kernels (`ops::reference`) and per-call allocation — the
+//! fixed baseline `BENCH_kernels.json` measures speedups against.
 
+use super::arena::BufferArena;
+use super::kernels;
 use super::ops;
-use crate::graph::CooGraph;
+use crate::graph::{CooGraph, CsrSubshard};
 use crate::ir::{LayerType, ModelIr};
 use crate::isa::Activation;
 use crate::util::Rng;
@@ -54,10 +64,35 @@ impl WeightStore {
             .map(|(w, b)| ((w.len() + b.len()) * 4) as u64)
             .sum()
     }
+
+    /// Content fingerprint (FNV-1a over layer ids, dims, and **every**
+    /// weight/bias bit pattern, in sorted-layer order), used to tie a
+    /// cached [`kernels::PackedWeightSet`] to the exact store it was
+    /// packed from — any single changed value changes the fingerprint,
+    /// so a stale pack can never be applied to different weights. One
+    /// read-only O(total weights) pass, far cheaper than repacking.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x100000001b3)
+        }
+        let mut ids: Vec<u16> = self.weights.keys().copied().collect();
+        ids.sort_unstable();
+        let mut h: u64 = 0xcbf29ce484222325;
+        for id in ids {
+            let (w, b) = &self.weights[&id];
+            h = mix(h, id as u64);
+            h = mix(h, w.len() as u64);
+            h = mix(h, b.len() as u64);
+            for &v in w.iter().chain(b) {
+                h = mix(h, v.to_bits() as u64);
+            }
+        }
+        h
+    }
 }
 
-/// Execute the IR over the whole graph. Returns the last layer's output
-/// (n_vertices x f_out, row-major).
+/// Execute the IR over the whole graph with the optimized kernels.
+/// Returns the last layer's output (n_vertices x f_out, row-major).
 ///
 /// Semantics per layer type (identical to the tile path):
 /// * Aggregate uses the *current* edge weights — initially the graph's,
@@ -65,57 +100,148 @@ impl WeightStore {
 /// * Vector-Inner replaces edge weights with `<h_i, h_j>` (+ fused act);
 /// * fused activations apply at layer output.
 pub fn golden_forward(ir: &ModelIr, graph: &CooGraph, store: &WeightStore, x: &[f32]) -> Vec<f32> {
+    let mut arena = BufferArena::new();
+    golden_forward_in(ir, graph, store, x, &mut arena)
+}
+
+/// [`golden_forward`] with a caller-owned [`BufferArena`]: layer
+/// buffers and the per-run edge-weight copy are recycled through it, so
+/// repeated runs (e.g. an engine serving many requests) reuse the same
+/// allocations.
+pub fn golden_forward_in(
+    ir: &ModelIr,
+    graph: &CooGraph,
+    store: &WeightStore,
+    x: &[f32],
+    arena: &mut BufferArena,
+) -> Vec<f32> {
+    forward_impl(ir, graph, store, x, arena, false)
+}
+
+/// [`golden_forward`] over the naive scalar kernels (`ops::reference`)
+/// with per-call allocation — the fixed baseline the kernel-backend
+/// bench and property tests compare against.
+pub fn golden_forward_reference(
+    ir: &ModelIr,
+    graph: &CooGraph,
+    store: &WeightStore,
+    x: &[f32],
+) -> Vec<f32> {
+    let mut arena = BufferArena::new();
+    forward_impl(ir, graph, store, x, &mut arena, true)
+}
+
+fn forward_impl(
+    ir: &ModelIr,
+    graph: &CooGraph,
+    store: &WeightStore,
+    x: &[f32],
+    arena: &mut BufferArena,
+    reference: bool,
+) -> Vec<f32> {
     let n = graph.n();
     let f0 = ir.graph.feat_len as usize;
     assert_eq!(x.len(), n * f0, "input features shape");
+    // Whole-graph destination-row CSR, built once on first use and
+    // reused by every Aggregate / Vector-Inner layer (optimized path).
+    let mut csr_cache: Option<CsrSubshard> = None;
     // outputs[layer id] = (buffer, f_out)
     let mut outputs: HashMap<u16, (Vec<f32>, usize)> = HashMap::new();
-    let mut edge_w: Vec<f32> = graph.w.clone();
+    let mut edge_w: Vec<f32> = arena.copy_f32(&graph.w);
     let mut last_id = 0u16;
     for l in &ir.layers {
         let f_in = l.f_in as usize;
-        let input_of = |pid: u16, outputs: &HashMap<u16, (Vec<f32>, usize)>| -> Vec<f32> {
-            match outputs.get(&pid) {
-                Some((buf, _)) => buf.clone(),
-                None => x.to_vec(),
-            }
-        };
+        let input_of =
+            |pid: u16, outputs: &HashMap<u16, (Vec<f32>, usize)>, arena: &mut BufferArena| {
+                match outputs.get(&pid) {
+                    Some((buf, _)) => arena.copy_f32(buf),
+                    None => arena.copy_f32(x),
+                }
+            };
         let h_in = match l.parents.first() {
-            Some(&p) => input_of(p, &outputs),
-            None => x.to_vec(),
+            Some(&p) => input_of(p, &outputs, arena),
+            None => arena.copy_f32(x),
         };
         let act = if l.act_enabled { l.act } else { Activation::None };
         let out: Vec<f32> = match l.ltype {
             LayerType::Aggregate => {
-                let mut o = ops::spdmm(
-                    &graph.src,
-                    &graph.dst,
-                    &edge_w,
-                    &h_in,
-                    f_in,
-                    n,
-                    l.aggop.unwrap(),
-                );
-                ops::apply_act(&mut o, act);
-                o
+                let aggop = l.aggop.unwrap();
+                if reference {
+                    let mut o = ops::reference::spdmm(
+                        &graph.src, &graph.dst, &edge_w, &h_in, f_in, n, aggop,
+                    );
+                    ops::apply_act(&mut o, act);
+                    arena.recycle_f32(h_in);
+                    o
+                } else {
+                    let csr = csr_cache.get_or_insert_with(|| {
+                        kernels::csr_from_coo(&graph.src, &graph.dst, n)
+                    });
+                    let neutral = match aggop {
+                        crate::isa::AggOp::Sum | crate::isa::AggOp::Mean => 0.0f32,
+                        crate::isa::AggOp::Max => f32::NEG_INFINITY,
+                        crate::isa::AggOp::Min => f32::INFINITY,
+                    };
+                    let mut o = arena.take_f32_filled(n * f_in, neutral);
+                    let mut touched = arena.take_u32(n);
+                    kernels::spdmm_csr_into(csr, &edge_w, &h_in, f_in, aggop, &mut o, &mut touched);
+                    if neutral != 0.0 {
+                        for (r, &t) in touched.iter().enumerate() {
+                            if t == 0 {
+                                o[r * f_in..(r + 1) * f_in].fill(0.0);
+                            }
+                        }
+                    }
+                    arena.recycle_u32(touched);
+                    ops::apply_act(&mut o, act);
+                    arena.recycle_f32(h_in);
+                    o
+                }
             }
             LayerType::Linear => {
                 let (w, b) = store.get(l.id);
-                ops::gemm_bias_act(&h_in, n, f_in, w, l.f_out as usize, b, act)
+                let f_out = l.f_out as usize;
+                let o = if reference {
+                    ops::reference::gemm_bias_act(&h_in, n, f_in, w, f_out, b, act)
+                } else {
+                    let mut o = arena.take_f32(n * f_out);
+                    kernels::gemm_into(&h_in, n, f_in, w, f_out, b, &mut o);
+                    ops::apply_act(&mut o, act);
+                    o
+                };
+                arena.recycle_f32(h_in);
+                o
             }
             LayerType::VectorInner => {
-                let mut ew = ops::sddmm(&graph.src, &graph.dst, &h_in, &h_in, f_in);
-                ops::apply_act(&mut ew, act);
-                edge_w = ew;
+                if reference {
+                    let mut ew = ops::reference::sddmm(&graph.src, &graph.dst, &h_in, &h_in, f_in);
+                    ops::apply_act(&mut ew, act);
+                    edge_w = ew;
+                } else {
+                    let csr = csr_cache.get_or_insert_with(|| {
+                        kernels::csr_from_coo(&graph.src, &graph.dst, n)
+                    });
+                    let mut vals = arena.take_f32(graph.m());
+                    kernels::sddmm_csr_into(csr, &h_in, &h_in, f_in, &mut vals);
+                    // Scatter CSR slot order back to edge order.
+                    for (slot, &v) in vals.iter().enumerate() {
+                        edge_w[csr.perm[slot] as usize] = v;
+                    }
+                    arena.recycle_f32(vals);
+                    ops::apply_act(&mut edge_w, act);
+                }
                 h_in // features pass through
             }
             LayerType::VectorAdd => {
                 let a = h_in;
                 let b = match l.parents.get(1) {
-                    Some(&p) => input_of(p, &outputs),
-                    None => a.clone(),
+                    Some(&p) => input_of(p, &outputs, arena),
+                    None => arena.copy_f32(&a),
                 };
-                ops::vecadd(&a, &b, act)
+                let o = ops::vecadd(&a, &b, act);
+                arena.recycle_f32(a);
+                arena.recycle_f32(b);
+                o
             }
             LayerType::Activation => {
                 // An activation directly behind a Vector-Inner layer acts
@@ -144,7 +270,12 @@ pub fn golden_forward(ir: &ModelIr, graph: &CooGraph, store: &WeightStore, x: &[
         outputs.insert(l.id, (out, l.f_out as usize));
         last_id = l.id;
     }
-    outputs.remove(&last_id).unwrap().0
+    let result = outputs.remove(&last_id).unwrap().0;
+    for (_, (buf, _)) in outputs.drain() {
+        arena.recycle_f32(buf);
+    }
+    arena.recycle_f32(edge_w);
+    result
 }
 
 #[cfg(test)]
@@ -184,6 +315,23 @@ mod tests {
         assert_eq!(a.get(2).0, b.get(2).0);
         let c = WeightStore::deterministic(&ir, 8);
         assert_ne!(a.get(2).0, c.get(2).0);
+    }
+
+    #[test]
+    fn fingerprint_covers_every_weight() {
+        let g = small_graph();
+        let ir = ZooModel::B1.build(g.meta.clone());
+        let a = WeightStore::deterministic(&ir, 7);
+        assert_eq!(a.fingerprint(), WeightStore::deterministic(&ir, 7).fingerprint());
+        // Flipping ONE value anywhere must change the fingerprint (the
+        // packed-weight cache key can never validate stale weights).
+        let mut weights = a.weights.clone();
+        let id = *weights.keys().next().unwrap();
+        let (w, _) = weights.get_mut(&id).unwrap();
+        let mid = w.len() / 2;
+        w[mid] += 1.0;
+        let b = WeightStore { weights };
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! The optimized kernel backend: cache-blocked, register-tiled GEMM over
+//! pre-packed weight panels, destination-row CSR SpDMM/SDDMM, and
+//! row-block data parallelism on scoped OS threads.
+//!
+//! This is the software analogue of GraphAGILE's Adaptive Computation
+//! Kernel datapath: one set of kernels behind `exec::functional`'s
+//! [`super::TileBackend`] and the golden whole-graph path, tuned for the
+//! cache hierarchy instead of the systolic array. The naive scalar
+//! reference kernels are kept at `exec::ops::reference` — property tests
+//! (`rust/tests/kernel_backend.rs`) pin these kernels against them, and
+//! `cargo bench --bench kernel_backend` records the speedup.
+//!
+//! Design:
+//! * **GEMM** — `out[M x N] = H[M x K] @ W + b` walks W in `NC`-column
+//!   panels and `KC`-row blocks; an `MR`-row micro-kernel accumulates
+//!   `MR` output-row segments in a stack-resident register block, so
+//!   each loaded weight value is reused `MR` times and the panel stays
+//!   cache-hot across the whole M sweep. Zero rows of H (post-ReLU
+//!   sparsity) are skipped per quad. [`PackedWeights`] reorders W into
+//!   the panel layout **once per executable** — not per tile call.
+//! * **SpDMM / SDDMM** — subshards arrive as destination-row CSR
+//!   ([`crate::graph::CsrSubshard`], built once at partition time), so
+//!   aggregation is an independent reduction per output row: the
+//!   accumulator row stays in registers/L1 across all of the row's
+//!   edges instead of being re-fetched per random COO scatter, touched
+//!   rows are free (a CSR row is non-empty), and rows are disjoint —
+//!   which makes the parallel split trivially safe.
+//! * **Parallelism** — `std::thread::scope` over contiguous row blocks,
+//!   only above a work threshold (tiny tiles stay serial; spawning
+//!   would cost more than it buys). The offline vendor set has no
+//!   `rayon`, so the fan-out is hand-rolled on scoped threads; worker
+//!   count comes from `GA_KERNEL_THREADS` (fallback `GA_BENCH_THREADS`,
+//!   then `available_parallelism`), so benches and CI pin it for
+//!   deterministic timing. Splits are row-disjoint, so results are
+//!   bit-identical at any thread count.
+//!
+//! Nothing here allocates on the hot path: every kernel writes into
+//! caller-provided buffers (see [`super::arena::BufferArena`]).
+
+use super::golden::WeightStore;
+use crate::graph::CsrSubshard;
+use crate::ir::{LayerType, ModelIr};
+use crate::isa::AggOp;
+use std::collections::HashMap;
+
+/// Feature columns per weight panel (L1-sized: NC * 4 B per acc row).
+pub const NC: usize = 128;
+/// K rows per panel block.
+pub const KC: usize = 128;
+/// Output rows per micro-kernel (register block height).
+pub const MR: usize = 4;
+
+/// Below this many flops (2*M*K*N) a GEMM runs serially.
+const PAR_MIN_FLOPS: usize = 1 << 21;
+/// Below this much edge work (nnz * f) SpDMM/SDDMM run serially.
+const PAR_MIN_EDGE_WORK: usize = 1 << 19;
+
+/// Worker count for the kernel fan-out: `GA_KERNEL_THREADS`, else
+/// `GA_BENCH_THREADS` (the bench/CI pin), else the machine's available
+/// parallelism; clamped to [1, 16]. Read per call so benches can flip
+/// between single- and multi-threaded phases in one process.
+pub fn kernel_threads() -> usize {
+    let parse = |key: &str| std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok());
+    parse("GA_KERNEL_THREADS")
+        .or_else(|| parse("GA_BENCH_THREADS"))
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+        .clamp(1, 16)
+}
+
+/// A Linear layer's weight matrix, reordered once into the panel layout
+/// the blocked GEMM consumes: for each `NC`-column panel, the panel's
+/// `k` row segments are stored contiguously (row `kk` of panel `p` is
+/// `panels[p_base + kk * panel_width ..]`). Only the panels are stored
+/// (packing is a permutation, so memory stays 1x the weights);
+/// backends without a packed kernel reconstruct the row-major view via
+/// [`PackedWeights::unpack`].
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    pub k: usize,
+    pub n: usize,
+    panels: Vec<f32>,
+}
+
+impl PackedWeights {
+    pub fn pack(w: &[f32], k: usize, n: usize) -> PackedWeights {
+        assert_eq!(w.len(), k * n, "weight shape");
+        let mut panels = Vec::with_capacity(k * n);
+        let mut j0 = 0;
+        while j0 < n {
+            let wp = (n - j0).min(NC);
+            for kk in 0..k {
+                panels.extend_from_slice(&w[kk * n + j0..kk * n + j0 + wp]);
+            }
+            j0 += wp;
+        }
+        PackedWeights { k, n, panels }
+    }
+
+    /// Reconstruct the original row-major (k x n) matrix — the exact
+    /// inverse of [`PackedWeights::pack`]. Allocates; only fallback
+    /// paths without a packed kernel (PJRT, the naive reference) use
+    /// it.
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut w = vec![0f32; self.k * self.n];
+        let mut panel_base = 0usize;
+        let mut j0 = 0usize;
+        while j0 < self.n {
+            let wp = (self.n - j0).min(NC);
+            for kk in 0..self.k {
+                w[kk * self.n + j0..kk * self.n + j0 + wp].copy_from_slice(
+                    &self.panels[panel_base + kk * wp..panel_base + (kk + 1) * wp],
+                );
+            }
+            panel_base += self.k * wp;
+            j0 += wp;
+        }
+        w
+    }
+}
+
+/// Every Linear layer's [`PackedWeights`], packed once per
+/// (executable, weight store) pair and reused across runs — the
+/// "weights are packed once, not per call" lifecycle. The fingerprint
+/// ties the set to the exact [`WeightStore`] contents so a cached set
+/// is never applied to different weights.
+#[derive(Clone, Debug, Default)]
+pub struct PackedWeightSet {
+    pub fingerprint: u64,
+    by_layer: HashMap<u16, PackedWeights>,
+}
+
+impl PackedWeightSet {
+    pub fn build(ir: &ModelIr, store: &WeightStore) -> PackedWeightSet {
+        let mut by_layer = HashMap::new();
+        for l in &ir.layers {
+            if l.ltype == LayerType::Linear {
+                let (w, _) = store.get(l.id);
+                by_layer
+                    .insert(l.id, PackedWeights::pack(w, l.f_in as usize, l.f_out as usize));
+            }
+        }
+        PackedWeightSet { fingerprint: store.fingerprint(), by_layer }
+    }
+
+    pub fn get(&self, layer_id: u16) -> &PackedWeights {
+        self.by_layer.get(&layer_id).expect("no packed weights for layer")
+    }
+}
+
+/// Weight source for the blocked GEMM: raw row-major or packed panels.
+#[derive(Clone, Copy)]
+enum WSrc<'a> {
+    /// (row-major k x n weights, n)
+    Raw(&'a [f32], usize),
+    Panels(&'a [f32]),
+}
+
+#[inline(always)]
+fn wseg<'a>(wsrc: WSrc<'a>, kk: usize, j0: usize, wp: usize, panel_base: usize) -> &'a [f32] {
+    match wsrc {
+        WSrc::Raw(w, n) => &w[kk * n + j0..kk * n + j0 + wp],
+        WSrc::Panels(p) => &p[panel_base + kk * wp..panel_base + (kk + 1) * wp],
+    }
+}
+
+/// Serial blocked GEMM over one block of rows: out = h @ w + b.
+fn gemm_block(h: &[f32], rows: usize, k: usize, n: usize, wsrc: WSrc, b: &[f32], out: &mut [f32]) {
+    for r in 0..rows {
+        out[r * n..(r + 1) * n].copy_from_slice(b);
+    }
+    let mut panel_base = 0usize;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let wp = (n - j0).min(NC);
+        let mut k0 = 0usize;
+        while k0 < k {
+            let kb = (k - k0).min(KC);
+            let mut r = 0usize;
+            while r + MR <= rows {
+                // Register block: MR output-row segments on the stack,
+                // so the inner loop has no aliasing and vectorizes.
+                let mut acc = [[0f32; NC]; MR];
+                for (q, accq) in acc.iter_mut().enumerate() {
+                    let at = (r + q) * n + j0;
+                    accq[..wp].copy_from_slice(&out[at..at + wp]);
+                }
+                let [acc0, acc1, acc2, acc3] = &mut acc;
+                for kk in k0..k0 + kb {
+                    let a0 = h[r * k + kk];
+                    let a1 = h[(r + 1) * k + kk];
+                    let a2 = h[(r + 2) * k + kk];
+                    let a3 = h[(r + 3) * k + kk];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue; // post-ReLU row sparsity
+                    }
+                    let wrow = wseg(wsrc, kk, j0, wp, panel_base);
+                    let it = acc0[..wp]
+                        .iter_mut()
+                        .zip(acc1[..wp].iter_mut())
+                        .zip(acc2[..wp].iter_mut())
+                        .zip(acc3[..wp].iter_mut())
+                        .zip(wrow.iter());
+                    for ((((o0, o1), o2), o3), &wv) in it {
+                        *o0 += a0 * wv;
+                        *o1 += a1 * wv;
+                        *o2 += a2 * wv;
+                        *o3 += a3 * wv;
+                    }
+                }
+                for (q, accq) in acc.iter().enumerate() {
+                    let at = (r + q) * n + j0;
+                    out[at..at + wp].copy_from_slice(&accq[..wp]);
+                }
+                r += MR;
+            }
+            // Remainder rows, one at a time.
+            while r < rows {
+                for kk in k0..k0 + kb {
+                    let a = h[r * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let wrow = wseg(wsrc, kk, j0, wp, panel_base);
+                    let orow = &mut out[r * n + j0..r * n + j0 + wp];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += a * wv;
+                    }
+                }
+                r += 1;
+            }
+            k0 += kb;
+        }
+        panel_base += k * wp;
+        j0 += wp;
+    }
+}
+
+fn gemm_parallel(h: &[f32], m: usize, k: usize, n: usize, wsrc: WSrc, b: &[f32], out: &mut [f32]) {
+    let threads = kernel_threads();
+    if threads <= 1 || 2 * m * k * n < PAR_MIN_FLOPS || m < 2 * MR {
+        gemm_block(h, m, k, n, wsrc, b, out);
+        return;
+    }
+    // Contiguous row chunks (multiples of MR keep quads whole); rows
+    // are disjoint, so the split is safe and bit-identical to serial.
+    let per = (m.div_ceil(threads)).div_ceil(MR) * MR;
+    std::thread::scope(|s| {
+        for (hc, oc) in h.chunks(per * k).zip(out.chunks_mut(per * n)) {
+            let rows = oc.len() / n;
+            s.spawn(move || gemm_block(hc, rows, k, n, wsrc, b, oc));
+        }
+    });
+}
+
+/// out(m x n) = h(m x k) @ w(k x n) + b — blocked and row-parallel,
+/// reading W row-major in place (the ad-hoc path, e.g. densified
+/// adjacency tiles; Linear layers go through [`gemm_packed_into`]).
+pub fn gemm_into(h: &[f32], m: usize, k: usize, w: &[f32], n: usize, b: &[f32], out: &mut [f32]) {
+    assert_eq!(h.len(), m * k, "h shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(b.len(), n, "bias shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    gemm_parallel(h, m, k, n, WSrc::Raw(w, n), b, out);
+}
+
+/// out(m x n) = h @ W + b against weights packed once per executable.
+pub fn gemm_packed_into(h: &[f32], m: usize, pw: &PackedWeights, b: &[f32], out: &mut [f32]) {
+    assert_eq!(h.len(), m * pw.k, "h shape");
+    assert_eq!(b.len(), pw.n, "bias shape");
+    assert_eq!(out.len(), m * pw.n, "out shape");
+    gemm_parallel(h, m, pw.k, pw.n, WSrc::Panels(&pw.panels), b, out);
+}
+
+/// Serial CSR aggregation over local rows [r0, r0 + acc_rows/f):
+/// accumulates each row's edges into its accumulator row in place.
+fn spdmm_rows(
+    csr: &CsrSubshard,
+    ew: &[f32],
+    h: &[f32],
+    f: usize,
+    aggop: AggOp,
+    acc_rows: &mut [f32],
+    touched: &mut [u32],
+    r0: usize,
+) {
+    for (ri, orow) in acc_rows.chunks_mut(f).enumerate() {
+        let r = r0 + ri;
+        let lo = csr.row_offsets[r] as usize;
+        let hi = csr.row_offsets[r + 1] as usize;
+        if lo == hi {
+            continue;
+        }
+        touched[ri] = 1;
+        match aggop {
+            AggOp::Sum | AggOp::Mean => {
+                for slot in lo..hi {
+                    let c = csr.cols[slot] as usize;
+                    let wv = ew[csr.perm[slot] as usize];
+                    let hrow = &h[c * f..(c + 1) * f];
+                    for (o, &hv) in orow.iter_mut().zip(hrow) {
+                        *o += wv * hv;
+                    }
+                }
+            }
+            AggOp::Max => {
+                for slot in lo..hi {
+                    let c = csr.cols[slot] as usize;
+                    let wv = ew[csr.perm[slot] as usize];
+                    let hrow = &h[c * f..(c + 1) * f];
+                    for (o, &hv) in orow.iter_mut().zip(hrow) {
+                        *o = o.max(wv * hv);
+                    }
+                }
+            }
+            AggOp::Min => {
+                for slot in lo..hi {
+                    let c = csr.cols[slot] as usize;
+                    let wv = ew[csr.perm[slot] as usize];
+                    let hrow = &h[c * f..(c + 1) * f];
+                    for (o, &hv) in orow.iter_mut().zip(hrow) {
+                        *o = o.min(wv * hv);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Aggregate one CSR subshard *into* `acc` (rows x f, pre-initialized
+/// with the aggregation's neutral element — or earlier subshards'
+/// partials: in-place accumulation makes cross-subshard combining
+/// free). Rows with at least one edge are flagged in `touched`
+/// (callers zero untouched Max/Min rows afterwards; the kernel
+/// convention). Edge weights are gathered through `csr.perm`, so
+/// SDDMM-updated weights stay live. Row-parallel above the work
+/// threshold; rows are disjoint, so any thread count is bit-identical.
+pub fn spdmm_csr_into(
+    csr: &CsrSubshard,
+    ew: &[f32],
+    h: &[f32],
+    f: usize,
+    aggop: AggOp,
+    acc: &mut [f32],
+    touched: &mut [u32],
+) {
+    let rows = csr.rows as usize;
+    assert_eq!(acc.len(), rows * f, "acc shape");
+    assert_eq!(touched.len(), rows, "touched shape");
+    assert_eq!(ew.len(), csr.nnz(), "edge weights");
+    if f == 0 || rows == 0 {
+        return;
+    }
+    let threads = kernel_threads();
+    if threads <= 1 || csr.nnz() * f < PAR_MIN_EDGE_WORK || rows < 2 {
+        spdmm_rows(csr, ew, h, f, aggop, acc, touched, 0);
+        return;
+    }
+    let per = rows.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        for (ci, (ac, tc)) in
+            acc.chunks_mut(per * f).zip(touched.chunks_mut(per)).enumerate()
+        {
+            let r0 = ci * per;
+            s.spawn(move || spdmm_rows(csr, ew, h, f, aggop, ac, tc, r0));
+        }
+    });
+}
+
+/// Inner product with 4-way accumulator ILP (reassociates the sum; the
+/// equivalence tests carry an epsilon for it).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let ac = a.chunks_exact(4);
+    let bc = b.chunks_exact(4);
+    let ra = ac.remainder();
+    let rb = bc.remainder();
+    let mut acc = [0f32; 4];
+    for (ca, cb) in ac.zip(bc) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for (&x, &y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// Serial SDDMM over local rows [r0, r1): `vals_part[slot - base]` =
+/// `<hl[cols[slot]], hr[row]>` with `base = row_offsets[r0]`.
+fn sddmm_rows(
+    csr: &CsrSubshard,
+    hl: &[f32],
+    hr: &[f32],
+    f: usize,
+    vals_part: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    let base = csr.row_offsets[r0] as usize;
+    for r in r0..r1 {
+        let hrrow = &hr[r * f..(r + 1) * f];
+        for slot in csr.row(r) {
+            let c = csr.cols[slot] as usize;
+            vals_part[slot - base] = dot(&hl[c * f..(c + 1) * f], hrrow);
+        }
+    }
+}
+
+/// Per-edge inner products in CSR slot order: vals[slot] =
+/// `<hl[csr.cols[slot]], hr[row(slot)]>`. Grouping by destination row
+/// keeps the `hr` row hot across the row's edges; callers scatter
+/// `vals` back to edge order through `csr.perm`.
+pub fn sddmm_csr_into(csr: &CsrSubshard, hl: &[f32], hr: &[f32], f: usize, vals: &mut [f32]) {
+    let rows = csr.rows as usize;
+    assert_eq!(vals.len(), csr.nnz(), "vals shape");
+    if csr.nnz() == 0 {
+        return;
+    }
+    let threads = kernel_threads();
+    if threads <= 1 || csr.nnz() * f < PAR_MIN_EDGE_WORK || rows < 2 {
+        sddmm_rows(csr, hl, hr, f, vals, 0, rows);
+        return;
+    }
+    // Contiguous row ranges; `vals` splits raggedly at row boundaries
+    // (slot ranges are disjoint by construction).
+    let per = rows.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = vals;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + per).min(rows);
+            let len = (csr.row_offsets[r1] - csr.row_offsets[r0]) as usize;
+            let (part, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            s.spawn(move || sddmm_rows(csr, hl, hr, f, part, r0, r1));
+            r0 = r1;
+        }
+    });
+}
+
+/// Whole-graph COO -> destination-row CSR (the golden path builds this
+/// once per run and reuses it across aggregation layers).
+pub fn csr_from_coo(src: &[u32], dst: &[u32], n_out: usize) -> CsrSubshard {
+    CsrSubshard::from_local_coo(dst.iter().copied(), src.iter().copied(), n_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_gemm(h: &[f32], m: usize, k: usize, w: &[f32], n: usize, b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = b[j] as f64;
+                for kk in 0..k {
+                    s += h[i * k + kk] as f64 * w[kk * n + j] as f64;
+                }
+                out[i * n + j] = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_gemm_matches_f64_reference_over_shapes() {
+        let mut rng = Rng::new(71);
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 5, 7), (4, 128, 128), (17, 200, 33), (65, 96, 130)]
+        {
+            let h: Vec<f32> = (0..m * k)
+                .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let want = naive_gemm(&h, m, k, &w, n, &b);
+            let mut got = vec![0f32; m * n];
+            gemm_into(&h, m, k, &w, n, &b, &mut got);
+            for (g, wv) in got.iter().zip(&want) {
+                assert!((g - wv).abs() < 1e-3 * (1.0 + wv.abs()), "{m}x{k}x{n}: {g} vs {wv}");
+            }
+            // Packed panels compute the same partial-sum order as the
+            // raw path (identical blocking), so results match exactly.
+            let pw = PackedWeights::pack(&w, k, n);
+            let mut packed = vec![0f32; m * n];
+            gemm_packed_into(&h, m, &pw, &b, &mut packed);
+            assert_eq!(got, packed, "{m}x{k}x{n}: packed != raw");
+        }
+    }
+
+    #[test]
+    fn spdmm_csr_basics_and_touched() {
+        // Ring 0->1->2->3->0 plus an untouched vertex 4.
+        let src = [0u32, 1, 2, 3];
+        let dst = [1u32, 2, 3, 0];
+        let csr = csr_from_coo(&src, &dst, 5);
+        let ew = [1f32, 1.0, 1.0, 1.0];
+        let h = [10f32, 11., 12., 13., 99.];
+        let mut acc = vec![0f32; 5];
+        let mut touched = vec![0u32; 5];
+        spdmm_csr_into(&csr, &ew, &h, 1, AggOp::Sum, &mut acc, &mut touched);
+        assert_eq!(acc, vec![13.0, 10.0, 11.0, 12.0, 0.0]);
+        assert_eq!(touched, vec![1, 1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn spdmm_csr_max_keeps_negative_maxima() {
+        // The satellite fix: a legitimate negative maximum must survive
+        // (the old !is_finite full scan only worked by accident; the
+        // touched flags make the untouched-row zeroing exact).
+        let src = [0u32];
+        let dst = [1u32];
+        let csr = csr_from_coo(&src, &dst, 3);
+        let mut acc = vec![f32::NEG_INFINITY; 3];
+        let mut touched = vec![0u32; 3];
+        spdmm_csr_into(&csr, &[1.0], &[-5.0, 0.0, 0.0], 1, AggOp::Max, &mut acc, &mut touched);
+        assert_eq!(touched, vec![0, 1, 0]);
+        assert_eq!(acc[1], -5.0);
+    }
+
+    #[test]
+    fn sddmm_csr_inner_products_via_perm() {
+        let h = [1f32, 2., 3., 4.]; // 2 rows x 2
+        let src = [0u32, 1];
+        let dst = [1u32, 1];
+        let csr = csr_from_coo(&src, &dst, 2);
+        let mut vals = vec![0f32; 2];
+        sddmm_csr_into(&csr, &h, &h, 2, &mut vals);
+        // Scatter back to edge order through perm.
+        let mut by_edge = vec![0f32; 2];
+        for (slot, &v) in vals.iter().enumerate() {
+            by_edge[csr.perm[slot] as usize] = v;
+        }
+        assert_eq!(by_edge, vec![1. * 3. + 2. * 4., 3. * 3. + 4. * 4.]);
+    }
+
+    #[test]
+    fn dot_matches_sequential_sum() {
+        let mut rng = Rng::new(9);
+        for len in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let want: f32 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "len {len}");
+        }
+    }
+
+    #[test]
+    fn packing_roundtrips_and_is_a_permutation() {
+        let mut rng = Rng::new(12);
+        let (k, n) = (5usize, NC + 7); // two panels, one ragged
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let pw = PackedWeights::pack(&w, k, n);
+        // unpack is the exact inverse of pack.
+        assert_eq!(pw.unpack(), w);
+        let mut sorted_raw: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+        let mut sorted_packed: Vec<u32> = pw.panels.iter().map(|v| v.to_bits()).collect();
+        sorted_raw.sort_unstable();
+        sorted_packed.sort_unstable();
+        assert_eq!(sorted_raw, sorted_packed);
+    }
+}

@@ -1,17 +1,31 @@
 //! Functional execution: real GNN numerics for the compiled program.
 //!
-//! * [`ops`] — dense/sparse reference operators on row-major `f32`
-//!   buffers (the rust analogue of `python/compile/kernels/ref.py`),
+//! * [`ops`] — operator entry points on row-major `f32` buffers (the
+//!   rust analogue of `python/compile/kernels/ref.py`): optimized
+//!   kernels at the top level, the naive scalar originals under
+//!   `ops::reference` as the measurable baseline,
+//! * [`kernels`] — the optimized kernel backend: blocked/register-tiled
+//!   GEMM over per-executable packed weight panels, destination-row CSR
+//!   SpDMM/SDDMM, and row-block parallelism on scoped threads,
+//! * [`arena`] — [`BufferArena`], the size-class buffer pool behind the
+//!   zero-alloc steady-state hot loop,
 //! * [`golden`] — whole-graph executor over the optimized IR: the ground
 //!   truth every other execution path must match,
 //! * [`functional`] — the partition-centric executor: runs the compiler's
 //!   Tiling Blocks one by one through a [`functional::TileBackend`]
-//!   (pure-rust ops, or the PJRT runtime executing the AOT HLO kernels),
-//!   proving that ISA -> schedule -> kernels compose functionally.
+//!   (optimized rust kernels, the naive reference backend, or the PJRT
+//!   runtime executing the AOT HLO kernels), proving that ISA ->
+//!   schedule -> kernels compose functionally.
 
+pub mod arena;
 pub mod functional;
 pub mod golden;
+pub mod kernels;
 pub mod ops;
 
-pub use functional::{CountingBackend, FunctionalExecutor, RustBackend, TileBackend};
-pub use golden::{golden_forward, WeightStore};
+pub use arena::{ArenaStats, BufferArena};
+pub use functional::{
+    CountingBackend, FunctionalExecutor, ReferenceBackend, RustBackend, TileBackend,
+};
+pub use golden::{golden_forward, golden_forward_in, golden_forward_reference, WeightStore};
+pub use kernels::{PackedWeightSet, PackedWeights};

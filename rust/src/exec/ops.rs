@@ -1,11 +1,22 @@
-//! Reference operators on row-major `f32` buffers — the rust analogue of
-//! the pure-jnp oracle (`python/compile/kernels/ref.py`). These back the
-//! golden executor, the `RustBackend` tile executor, and the naive-CPU
-//! baseline measurements.
+//! Operator entry points on row-major `f32` buffers — the rust analogue
+//! of the pure-jnp oracle (`python/compile/kernels/ref.py`). These back
+//! the golden executor, the `RustBackend` tile executor, and the
+//! naive-CPU baseline measurements.
+//!
+//! The top-level functions route through the optimized kernel backend
+//! (`exec::kernels`: blocked GEMM, destination-row CSR aggregation,
+//! row-block parallelism). The original scalar COO triple-loops are
+//! kept verbatim in [`reference`] as the measurable baseline — property
+//! tests (`rust/tests/kernel_backend.rs`) pin optimized against
+//! reference across random shapes, and `cargo bench --bench
+//! kernel_backend` records the speedup in `BENCH_kernels.json`.
 
+use super::kernels;
 use crate::isa::{Activation, AggOp};
 
-/// out(m x n) = h(m x k) @ w(k x n) + b, then activation.
+/// out(m x n) = h(m x k) @ w(k x n) + b, then activation. Blocked and
+/// row-parallel; packs nothing (one-shot calls — the tile executor uses
+/// per-executable [`kernels::PackedWeights`] instead).
 pub fn gemm_bias_act(
     h: &[f32],
     m: usize,
@@ -15,30 +26,19 @@ pub fn gemm_bias_act(
     b: &[f32],
     act: Activation,
 ) -> Vec<f32> {
-    assert_eq!(h.len(), m * k, "h shape");
-    assert_eq!(w.len(), k * n, "w shape");
-    assert_eq!(b.len(), n, "bias shape");
     let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        let hrow = &h[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        orow.copy_from_slice(b);
-        for (kk, &hv) in hrow.iter().enumerate() {
-            if hv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += hv * wv;
-            }
-        }
-    }
+    kernels::gemm_into(h, m, k, w, n, b, &mut out);
     apply_act(&mut out, act);
     out
 }
 
 /// Edge-centric SpDMM: out(n_out x f) = AggOp over edges (src, dst, w)
 /// of w * h[src]; `src`/`dst` index into `h` rows / `out` rows.
+/// Converts the COO stream to destination-row CSR once, then reduces
+/// per output row. Untouched vertices produce 0 (the kernel/ref
+/// convention), tracked through per-row touched flags — not the old
+/// full-output `!is_finite` scan, which re-scanned the whole tile and
+/// clobbered rows whose legitimate Max/Min aggregate is non-finite.
 pub fn spdmm(
     src: &[u32],
     dst: &[u32],
@@ -53,33 +53,14 @@ pub fn spdmm(
         AggOp::Max => f32::NEG_INFINITY,
         AggOp::Min => f32::INFINITY,
     };
+    let csr = kernels::csr_from_coo(src, dst, n_out);
     let mut out = vec![init; n_out * f];
-    for ((&s, &d), &w) in src.iter().zip(dst).zip(ew) {
-        let hrow = &h[s as usize * f..(s as usize + 1) * f];
-        let orow = &mut out[d as usize * f..(d as usize + 1) * f];
-        match aggop {
-            AggOp::Sum | AggOp::Mean => {
-                for (o, &hv) in orow.iter_mut().zip(hrow) {
-                    *o += w * hv;
-                }
-            }
-            AggOp::Max => {
-                for (o, &hv) in orow.iter_mut().zip(hrow) {
-                    *o = o.max(w * hv);
-                }
-            }
-            AggOp::Min => {
-                for (o, &hv) in orow.iter_mut().zip(hrow) {
-                    *o = o.min(w * hv);
-                }
-            }
-        }
-    }
-    // Untouched vertices produce 0 (matching the kernel/ref convention).
+    let mut touched = vec![0u32; n_out];
+    kernels::spdmm_csr_into(&csr, ew, h, f, aggop, &mut out, &mut touched);
     if init != 0.0 {
-        for o in out.iter_mut() {
-            if !o.is_finite() {
-                *o = 0.0;
+        for (r, &t) in touched.iter().enumerate() {
+            if t == 0 {
+                out[r * f..(r + 1) * f].fill(0.0);
             }
         }
     }
@@ -108,16 +89,22 @@ pub fn combine_partials(acc: &mut [f32], part: &[f32], aggop: AggOp) {
     }
 }
 
-/// SDDMM: per-edge inner products of rows of `hl` and `hr`.
+/// SDDMM: per-edge inner products of rows of `hl` and `hr`. Rows are
+/// grouped by destination (CSR) so each `hr` row is loaded once per
+/// vertex, then results scatter back to edge order.
 pub fn sddmm(src: &[u32], dst: &[u32], hl: &[f32], hr: &[f32], f: usize) -> Vec<f32> {
-    src.iter()
-        .zip(dst)
-        .map(|(&s, &d)| {
-            let a = &hl[s as usize * f..(s as usize + 1) * f];
-            let b = &hr[d as usize * f..(d as usize + 1) * f];
-            a.iter().zip(b).map(|(&x, &y)| x * y).sum()
-        })
-        .collect()
+    if f == 0 || src.is_empty() {
+        return vec![0f32; src.len()];
+    }
+    let n_out = hr.len() / f;
+    let csr = kernels::csr_from_coo(src, dst, n_out);
+    let mut vals = vec![0f32; src.len()];
+    kernels::sddmm_csr_into(&csr, hl, hr, f, &mut vals);
+    let mut out = vec![0f32; src.len()];
+    for (slot, &v) in vals.iter().enumerate() {
+        out[csr.perm[slot] as usize] = v;
+    }
+    out
 }
 
 /// Elementwise a + b with fused activation.
@@ -150,6 +137,124 @@ pub fn apply_act(x: &mut [f32], act: Activation) {
     }
 }
 
+/// The original naive scalar kernels, kept as the measurable baseline:
+/// triple loops over the COO edge list that allocate a fresh output per
+/// call and ignore the cache hierarchy. Do not "optimize" these — their
+/// whole value is being the fixed reference point for the equivalence
+/// property tests and `BENCH_kernels.json`.
+pub mod reference {
+    use super::apply_act;
+    use crate::isa::{Activation, AggOp};
+
+    /// Naive i-k-j GEMM: out = h @ w + b, then activation.
+    pub fn gemm_bias_act(
+        h: &[f32],
+        m: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        b: &[f32],
+        act: Activation,
+    ) -> Vec<f32> {
+        assert_eq!(h.len(), m * k, "h shape");
+        assert_eq!(w.len(), k * n, "w shape");
+        assert_eq!(b.len(), n, "bias shape");
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let hrow = &h[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            orow.copy_from_slice(b);
+            for (kk, &hv) in hrow.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += hv * wv;
+                }
+            }
+        }
+        apply_act(&mut out, act);
+        out
+    }
+
+    /// Naive edge-centric SpDMM: random scatter over the COO stream.
+    /// (The untouched-vertex cleanup uses a touched bitmap — the one
+    /// correctness fix applied to the baseline, since the old
+    /// `!is_finite` scan clobbered legitimate non-finite aggregates.)
+    pub fn spdmm(
+        src: &[u32],
+        dst: &[u32],
+        ew: &[f32],
+        h: &[f32],
+        f: usize,
+        n_out: usize,
+        aggop: AggOp,
+    ) -> Vec<f32> {
+        let init = match aggop {
+            AggOp::Sum | AggOp::Mean => 0.0f32,
+            AggOp::Max => f32::NEG_INFINITY,
+            AggOp::Min => f32::INFINITY,
+        };
+        let mut out = vec![init; n_out * f];
+        for ((&s, &d), &w) in src.iter().zip(dst).zip(ew) {
+            let hrow = &h[s as usize * f..(s as usize + 1) * f];
+            let orow = &mut out[d as usize * f..(d as usize + 1) * f];
+            match aggop {
+                AggOp::Sum | AggOp::Mean => {
+                    for (o, &hv) in orow.iter_mut().zip(hrow) {
+                        *o += w * hv;
+                    }
+                }
+                AggOp::Max => {
+                    for (o, &hv) in orow.iter_mut().zip(hrow) {
+                        *o = o.max(w * hv);
+                    }
+                }
+                AggOp::Min => {
+                    for (o, &hv) in orow.iter_mut().zip(hrow) {
+                        *o = o.min(w * hv);
+                    }
+                }
+            }
+        }
+        // Untouched vertices produce 0 (matching the kernel/ref
+        // convention).
+        if init != 0.0 {
+            let mut touched = vec![false; n_out];
+            for &d in dst {
+                touched[d as usize] = true;
+            }
+            for (r, &t) in touched.iter().enumerate() {
+                if !t {
+                    out[r * f..(r + 1) * f].fill(0.0);
+                }
+            }
+        }
+        out
+    }
+
+    /// Naive SDDMM: per-edge inner products in edge order.
+    pub fn sddmm(src: &[u32], dst: &[u32], hl: &[f32], hr: &[f32], f: usize) -> Vec<f32> {
+        src.iter()
+            .zip(dst)
+            .map(|(&s, &d)| {
+                let a = &hl[s as usize * f..(s as usize + 1) * f];
+                let b = &hr[d as usize * f..(d as usize + 1) * f];
+                a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+            })
+            .collect()
+    }
+
+    /// Elementwise a + b with fused activation.
+    pub fn vecadd(a: &[f32], b: &[f32], act: Activation) -> Vec<f32> {
+        assert_eq!(a.len(), b.len());
+        let mut out: Vec<f32> = a.iter().zip(b).map(|(&x, &y)| x + y).collect();
+        apply_act(&mut out, act);
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,12 +272,14 @@ mod tests {
         }
         let out = gemm_bias_act(&h, m, k, &w, k, &vec![0.0; k], Activation::None);
         assert_eq!(out, h);
+        let naive = reference::gemm_bias_act(&h, m, k, &w, k, &vec![0.0; k], Activation::None);
+        assert_eq!(naive, h);
     }
 
     #[test]
     fn gemm_bias_and_relu() {
         let h = vec![1.0, -1.0];
-        let w = vec![2.0, -2.0]; // 2x1... wait: k=2, n=1
+        let w = vec![2.0, -2.0]; // k=2, n=1
         let out = gemm_bias_act(&h, 1, 2, &w, 1, &[-1.0], Activation::Relu);
         // 1*2 + (-1)(-2) - 1 = 3 -> relu 3.
         assert_eq!(out, vec![3.0]);
@@ -189,6 +296,7 @@ mod tests {
         let h = [10f32, 11., 12., 13.];
         let out = spdmm(&src, &dst, &ew, &h, 1, 4, AggOp::Sum);
         assert_eq!(out, vec![13.0, 10.0, 11.0, 12.0]);
+        assert_eq!(out, reference::spdmm(&src, &dst, &ew, &h, 1, 4, AggOp::Sum));
     }
 
     #[test]
@@ -200,10 +308,29 @@ mod tests {
     }
 
     #[test]
+    fn spdmm_touched_nonfinite_aggregate_survives() {
+        // The satellite fix, on both kernels: a *touched* row whose
+        // legitimate aggregate overflows to +inf must keep it — the old
+        // full-output `!is_finite` scan zeroed it like an untouched row.
+        let src = [0u32];
+        let dst = [1u32];
+        let h = [f32::MAX, 0.0, 0.0];
+        for out in [
+            spdmm(&src, &dst, &[4.0], &h, 1, 3, AggOp::Max),
+            reference::spdmm(&src, &dst, &[4.0], &h, 1, 3, AggOp::Max),
+        ] {
+            assert_eq!(out[0], 0.0);
+            assert!(out[1].is_infinite() && out[1] > 0.0, "clobbered: {}", out[1]);
+            assert_eq!(out[2], 0.0);
+        }
+    }
+
+    #[test]
     fn sddmm_inner_products() {
         let h = [1f32, 2., 3., 4.]; // 2 rows x 2
         let out = sddmm(&[0, 1], &[1, 1], &h, &h, 2);
         assert_eq!(out, vec![1. * 3. + 2. * 4., 3. * 3. + 4. * 4.]);
+        assert_eq!(out, reference::sddmm(&[0, 1], &[1, 1], &h, &h, 2));
     }
 
     #[test]
@@ -263,5 +390,29 @@ mod tests {
         assert!((x[0] - (-0.6321206)).abs() < 1e-5);
         assert_eq!(x[1], 0.0);
         assert_eq!(x[2], 2.0);
+    }
+
+    #[test]
+    fn optimized_matches_reference_randomized() {
+        // Smoke-level pin (the full property suite lives in
+        // rust/tests/kernel_backend.rs).
+        let mut rng = Rng::new(31);
+        let (n, f, e) = (40usize, 24usize, 300usize);
+        let src: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let dst: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let ew: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+        let h: Vec<f32> = (0..n * f).map(|_| rng.normal()).collect();
+        for agg in [AggOp::Sum, AggOp::Mean, AggOp::Max, AggOp::Min] {
+            let a = spdmm(&src, &dst, &ew, &h, f, n, agg);
+            let b = reference::spdmm(&src, &dst, &ew, &h, f, n, agg);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{agg:?}: {x} vs {y}");
+            }
+        }
+        let a = sddmm(&src, &dst, &h, &h, f);
+        let b = reference::sddmm(&src, &dst, &h, &h, f);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "sddmm: {x} vs {y}");
+        }
     }
 }

@@ -10,5 +10,5 @@ pub mod rmat;
 
 pub use coo::{CooGraph, GraphMeta};
 pub use datasets::{dataset, Dataset, ALL_DATASETS};
-pub use partition::{PartitionConfig, PartitionedGraph, TileCounts};
+pub use partition::{CsrSubshard, PartitionConfig, PartitionedGraph, TileCounts};
 pub use rmat::{rmat_edges, rmat_tile_counts, RmatParams};

@@ -85,8 +85,101 @@ impl TileCounts {
     }
 }
 
+/// One subshard's edges in destination-row CSR form, built once at
+/// partition time so aggregation kernels run as independent
+/// per-destination-row reductions instead of random scatter over the
+/// COO stream (and SDDMM reuses the same row grouping for
+/// destination-side feature-row reuse).
+///
+/// All indices are tile-local: row `r` is destination vertex
+/// `shard * N1 + r`, column `cols[slot]` is source vertex
+/// `k * N1 + cols[slot]`. Edge *weights* are not copied: `perm[slot]`
+/// is the within-subshard edge index (into the subshard's range of
+/// `src`/`dst`/`w`), so kernels gather the *live* weight array — which
+/// an upstream SDDMM layer may have rewritten — and SDDMM scatters its
+/// results back through the same map.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrSubshard {
+    /// Destination rows of this shard (= shard height, <= N1).
+    pub rows: u32,
+    /// len rows + 1; CSR slot range of local row r is
+    /// `row_offsets[r]..row_offsets[r+1]`.
+    pub row_offsets: Vec<u32>,
+    /// Local source column per CSR slot.
+    pub cols: Vec<u32>,
+    /// Within-subshard edge index per CSR slot.
+    pub perm: Vec<u32>,
+}
+
+impl CsrSubshard {
+    /// Build from tile-local COO arrays (counting sort by row; stable,
+    /// so edges within a row keep their subshard order).
+    pub fn from_local_coo(local_dst: impl Iterator<Item = u32> + Clone, local_src: impl Iterator<Item = u32>, rows: usize) -> CsrSubshard {
+        let mut row_offsets = vec![0u32; rows + 1];
+        for d in local_dst.clone() {
+            row_offsets[d as usize + 1] += 1;
+        }
+        for r in 0..rows {
+            row_offsets[r + 1] += row_offsets[r];
+        }
+        let nnz = row_offsets[rows] as usize;
+        let mut cols = vec![0u32; nnz];
+        let mut perm = vec![0u32; nnz];
+        let mut cursor: Vec<u32> = row_offsets[..rows].to_vec();
+        for (e, (d, s)) in local_dst.zip(local_src).enumerate() {
+            let at = cursor[d as usize] as usize;
+            cols[at] = s;
+            perm[at] = e as u32;
+            cursor[d as usize] += 1;
+        }
+        CsrSubshard { rows: rows as u32, row_offsets, cols, perm }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// CSR slot range of local destination row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> std::ops::Range<usize> {
+        self.row_offsets[r] as usize..self.row_offsets[r + 1] as usize
+    }
+
+    /// Internal consistency: offsets monotone and covering, columns and
+    /// permutation in range, permutation a bijection.
+    pub fn validate(&self, n_cols: usize) -> Result<(), String> {
+        let rows = self.rows as usize;
+        if self.row_offsets.len() != rows + 1 || self.row_offsets[0] != 0 {
+            return Err("bad row_offsets shape".into());
+        }
+        if self.row_offsets[rows] as usize != self.nnz() {
+            return Err("row_offsets do not cover nnz".into());
+        }
+        for r in 0..rows {
+            if self.row_offsets[r] > self.row_offsets[r + 1] {
+                return Err(format!("row_offsets not monotone at {r}"));
+            }
+        }
+        let mut seen = vec![false; self.nnz()];
+        for slot in 0..self.nnz() {
+            if self.cols[slot] as usize >= n_cols {
+                return Err(format!("column {} out of range", self.cols[slot]));
+            }
+            let p = self.perm[slot] as usize;
+            if p >= self.nnz() || seen[p] {
+                return Err(format!("perm slot {slot} invalid"));
+            }
+            seen[p] = true;
+        }
+        Ok(())
+    }
+}
+
 /// A materialized, partition-ordered graph: edges grouped by (shard,
-/// subshard) with CSR-like offsets, exactly the DDR layout of Fig. 8.
+/// subshard) with CSR-like offsets, exactly the DDR layout of Fig. 8 —
+/// plus a per-subshard destination-row CSR index ([`CsrSubshard`]) for
+/// the optimized aggregation kernels.
 #[derive(Clone, Debug)]
 pub struct PartitionedGraph {
     pub cfg: PartitionConfig,
@@ -98,6 +191,8 @@ pub struct PartitionedGraph {
     pub src: Vec<u32>,
     pub dst: Vec<u32>,
     pub w: Vec<f32>,
+    /// Destination-row CSR per subshard, tile order (i * shards + j).
+    pub csr: Vec<CsrSubshard>,
 }
 
 impl PartitionedGraph {
@@ -130,6 +225,7 @@ impl PartitionedGraph {
             w[at] = g.w[i];
             cursor[t] += 1;
         }
+        let csr = Self::build_csr(&offsets, &src, &dst, g.meta.n_vertices, n1, shards);
         PartitionedGraph {
             cfg,
             n_vertices: g.meta.n_vertices,
@@ -138,7 +234,42 @@ impl PartitionedGraph {
             src,
             dst,
             w,
+            csr,
         }
+    }
+
+    /// Destination-row CSR for every subshard (the second, row-granular
+    /// half of the counting sort). O(|E| + shards * |V|).
+    fn build_csr(
+        offsets: &[usize],
+        src: &[u32],
+        dst: &[u32],
+        n_vertices: u64,
+        n1: u64,
+        shards: usize,
+    ) -> Vec<CsrSubshard> {
+        let mut csr = Vec::with_capacity(shards * shards);
+        for i in 0..shards {
+            let row_base = (i as u64 * n1) as u32;
+            let rows = (n_vertices - i as u64 * n1).min(n1) as usize;
+            for j in 0..shards {
+                let col_base = (j as u64 * n1) as u32;
+                let t = i * shards + j;
+                let range = offsets[t]..offsets[t + 1];
+                csr.push(CsrSubshard::from_local_coo(
+                    dst[range.clone()].iter().map(move |&d| d - row_base),
+                    src[range].iter().map(move |&s| s - col_base),
+                    rows,
+                ));
+            }
+        }
+        csr
+    }
+
+    /// The destination-row CSR of subshard (i, j).
+    #[inline]
+    pub fn csr(&self, i: usize, j: usize) -> &CsrSubshard {
+        &self.csr[i * self.shards + j]
     }
 
     /// Edge index range of subshard (i, j).
@@ -170,6 +301,36 @@ impl PartitionedGraph {
                         return Err(format!(
                             "edge {e} ({s}->{d}) misplaced in subshard ({i},{j})"
                         ));
+                    }
+                }
+            }
+        }
+        // CSR cross-check: every slot maps back (through perm) to an
+        // edge of the subshard with the matching destination row and
+        // source column.
+        if self.csr.len() != self.shards * self.shards {
+            return Err("csr index missing subshards".into());
+        }
+        for i in 0..self.shards {
+            for j in 0..self.shards {
+                let csr = self.csr(i, j);
+                let range = self.subshard(i, j);
+                let cols = (self.n_vertices - j as u64 * n1).min(n1) as usize;
+                csr.validate(cols).map_err(|e| format!("csr ({i},{j}): {e}"))?;
+                if csr.nnz() != range.len() {
+                    return Err(format!("csr ({i},{j}) nnz != edge count"));
+                }
+                for r in 0..csr.rows as usize {
+                    for slot in csr.row(r) {
+                        let e = range.start + csr.perm[slot] as usize;
+                        let (s, d) = (self.src[e] as u64, self.dst[e] as u64);
+                        if d != i as u64 * n1 + r as u64
+                            || s != j as u64 * n1 + csr.cols[slot] as u64
+                        {
+                            return Err(format!(
+                                "csr ({i},{j}) slot {slot} maps to wrong edge"
+                            ));
+                        }
                     }
                 }
             }
@@ -238,6 +399,69 @@ mod tests {
             crate::prop_assert!(covered == g.m(), "covered {covered} != {}", g.m());
             Ok(())
         });
+    }
+
+    #[test]
+    fn csr_roundtrips_to_coo_per_subshard() {
+        // The CSR index must reproduce the exact (src, dst, w) multiset
+        // of every subshard, with weights gathered through `perm`.
+        forall("csr-coo-roundtrip", 20, |rng| {
+            let n = rng.range(2, 400);
+            let m = rng.range(1, 3000);
+            let n1 = 1 << rng.range(3, 8);
+            let meta = GraphMeta::new("p", n, m, 8, 2);
+            let g = rmat_edges(meta, RmatParams::default(), rng.next_u64());
+            let pg = PartitionedGraph::build(&g, PartitionConfig { n1, n2: 8 });
+            pg.validate().map_err(|e| e)?;
+            for i in 0..pg.shards {
+                for j in 0..pg.shards {
+                    let range = pg.subshard(i, j);
+                    let csr = pg.csr(i, j);
+                    crate::prop_assert!(
+                        csr.nnz() == range.len(),
+                        "({i},{j}): nnz {} != {}",
+                        csr.nnz(),
+                        range.len()
+                    );
+                    let mut from_csr: Vec<(u32, u32, u32)> = Vec::new();
+                    for r in 0..csr.rows as usize {
+                        for slot in csr.row(r) {
+                            let e = range.start + csr.perm[slot] as usize;
+                            from_csr.push((
+                                j as u32 * n1 as u32 + csr.cols[slot],
+                                i as u32 * n1 as u32 + r as u32,
+                                pg.w[e].to_bits(),
+                            ));
+                        }
+                    }
+                    let mut from_coo: Vec<(u32, u32, u32)> = range
+                        .map(|e| (pg.src[e], pg.dst[e], pg.w[e].to_bits()))
+                        .collect();
+                    from_csr.sort_unstable();
+                    from_coo.sort_unstable();
+                    crate::prop_assert!(
+                        from_csr == from_coo,
+                        "({i},{j}): csr multiset mismatch"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn csr_rows_are_sorted_and_touch_free() {
+        // Row emptiness is the touched-row predicate the kernels rely
+        // on: a row with offsets[r] == offsets[r+1] has no edges.
+        let g = CooGraph::ring(8, 4, 2);
+        let pg = PartitionedGraph::build(&g, PartitionConfig { n1: 4, n2: 4 });
+        let csr = pg.csr(0, 0); // edges (0,1)(1,2)(2,3): rows 1..=3 touched
+        assert_eq!(csr.rows, 4);
+        assert_eq!(csr.row(0).len(), 0);
+        assert_eq!(csr.row(1).len(), 1);
+        assert_eq!(csr.cols[csr.row(1).start], 0);
+        assert_eq!(csr.row(2).len(), 1);
+        assert_eq!(csr.row(3).len(), 1);
     }
 
     #[test]

@@ -20,8 +20,11 @@
 //!   artifacts (produced once, at build time, by `python/compile/aot.py`)
 //!   and executes real GNN numerics on tiles — python is never on this
 //!   path,
-//! * [`exec`] — a pure-rust golden executor used for functional
-//!   equivalence checks and as the naive CPU reference,
+//! * [`exec`] — the pure-rust executors and their kernel backend:
+//!   golden whole-graph + partition-centric tile execution over
+//!   blocked GEMM / CSR SpDMM / SDDMM kernels with a zero-alloc buffer
+//!   arena (the naive scalar originals survive as `ops::reference`,
+//!   the measured baseline),
 //! * [`engine`] — the execution-substrate abstraction: one
 //!   [`engine::InferenceEngine`] trait over the golden executor, the
 //!   functional tile runtimes and the cycle simulator, all consuming the

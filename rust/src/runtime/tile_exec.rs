@@ -5,6 +5,7 @@
 
 use super::client::{ArgValue, PjrtRuntime};
 use crate::exec::TileBackend;
+use crate::graph::CsrSubshard;
 use crate::isa::AggOp;
 
 /// Artifact tile geometry (must match python/compile/aot.py TILE_*).
@@ -80,6 +81,28 @@ impl<'rt> PjrtBackend<'rt> {
         }
         out
     }
+
+    /// The AOT artifacts consume COO edge streams; rebuild the
+    /// subshard's slot-ordered COO (local src/dst plus live weights
+    /// gathered through `perm`) from the CSR index.
+    fn coo_of(csr: &CsrSubshard, ew: Option<&[f32]>) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+        let nnz = csr.nnz();
+        let mut src = vec![0u32; nnz];
+        let mut dst = vec![0u32; nnz];
+        let mut w = vec![0f32; nnz];
+        let mut at = 0;
+        for r in 0..csr.rows as usize {
+            for slot in csr.row(r) {
+                src[at] = csr.cols[slot];
+                dst[at] = r as u32;
+                if let Some(ew) = ew {
+                    w[at] = ew[csr.perm[slot] as usize];
+                }
+                at += 1;
+            }
+        }
+        (src, dst, w)
+    }
 }
 
 impl<'rt> TileBackend for PjrtBackend<'rt> {
@@ -87,8 +110,16 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
         "pjrt"
     }
 
-    fn gemm(&mut self, h: &[f32], m: usize, k: usize, w: &[f32], n: usize, b: &[f32])
-        -> Vec<f32> {
+    fn gemm(
+        &mut self,
+        h: &[f32],
+        m: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        b: &[f32],
+        out: &mut [f32],
+    ) {
         let g = self.geom;
         // Artifact is (N x F) @ (F x F): pad m->N, k->F, n->F.
         let hp = self.pad2(h, m, k, g.n, g.f);
@@ -96,48 +127,44 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
         let mut bp = vec![0f32; g.f];
         bp[..n].copy_from_slice(b);
         self.launches += 1;
-        let out = self
+        let padded = self
             .rt
             .execute(
                 &self.gemm_name,
                 &[ArgValue::F32(&hp), ArgValue::F32(&wp), ArgValue::F32(&bp)],
             )
             .expect("pjrt gemm");
-        self.unpad2(&out, m, n, g.f)
+        out.copy_from_slice(&self.unpad2(&padded, m, n, g.f));
     }
 
-    fn spdmm(
+    fn spdmm_csr(
         &mut self,
-        src: &[u32],
-        dst: &[u32],
+        csr: &CsrSubshard,
         ew: &[f32],
         h: &[f32],
-        n_in: usize,
         f: usize,
-        n_out: usize,
         aggop: AggOp,
-    ) -> Vec<f32> {
+        acc: &mut [f32],
+        touched: &mut [u32],
+    ) {
         let g = self.geom;
         let name = match aggop {
             AggOp::Sum | AggOp::Mean => &self.spdmm_name,
             AggOp::Max => &self.spdmm_max_name,
             AggOp::Min => panic!("min aggregation has no AOT artifact (use RustBackend)"),
         };
+        let n_out = csr.rows as usize;
+        let n_in = h.len() / f.max(1);
+        let (src, dst, w) = Self::coo_of(csr, Some(ew));
         let hp = self.pad2(h, n_in, f, g.n, g.f);
-        // Neutral init + touched-row combine: chunk partials have 0 for
-        // untouched rows, which would clobber negative maxima/minima.
-        let neutral = match aggop {
-            AggOp::Sum | AggOp::Mean => 0.0f32,
-            AggOp::Max => f32::NEG_INFINITY,
-            AggOp::Min => f32::INFINITY,
-        };
-        let mut out = vec![neutral; n_out * f];
-        let mut touched = vec![false; n_out];
-        // Edge stream in artifact-sized chunks.
+        // `acc` arrives neutral-initialized (or holding earlier
+        // subshards' partials); combine each chunk in — on Max/Min only
+        // the chunk's touched rows, since chunk partials pad untouched
+        // rows with 0, which would clobber negative maxima/minima.
         for chunk in src
             .chunks(g.e)
             .zip(dst.chunks(g.e))
-            .zip(ew.chunks(g.e))
+            .zip(w.chunks(g.e))
             .map(|((s, d), w)| (s, d, w))
         {
             let (s, d, w) = chunk;
@@ -167,7 +194,7 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
             let part = self.unpad2(&part, n_out, f, g.f);
             match aggop {
                 AggOp::Sum | AggOp::Mean => {
-                    for (o, &p) in out.iter_mut().zip(&part) {
+                    for (o, &p) in acc.iter_mut().zip(&part) {
                         *o += p;
                     }
                 }
@@ -175,7 +202,7 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
                     for &di in d {
                         let r = di as usize;
                         for c in 0..f {
-                            let o = &mut out[r * f + c];
+                            let o = &mut acc[r * f + c];
                             let p = part[r * f + c];
                             *o = if aggop == AggOp::Max { o.max(p) } else { o.min(p) };
                         }
@@ -183,36 +210,19 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
                 }
             }
             for &di in d {
-                touched[di as usize] = true;
+                touched[di as usize] = 1;
             }
         }
-        // Untouched rows -> 0 (kernel convention).
-        if neutral != 0.0 {
-            for (r, t) in touched.iter().enumerate() {
-                if !*t {
-                    for c in 0..f {
-                        out[r * f + c] = 0.0;
-                    }
-                }
-            }
-        }
-        out
     }
 
-    fn sddmm(
-        &mut self,
-        src: &[u32],
-        dst: &[u32],
-        hl: &[f32],
-        hr: &[f32],
-        n_l: usize,
-        n_r: usize,
-        f: usize,
-    ) -> Vec<f32> {
+    fn sddmm_csr(&mut self, csr: &CsrSubshard, hl: &[f32], hr: &[f32], f: usize, vals: &mut [f32]) {
         let g = self.geom;
+        let n_l = hl.len() / f.max(1);
+        let n_r = hr.len() / f.max(1);
+        let (src, dst, _) = Self::coo_of(csr, None);
         let hlp = self.pad2(hl, n_l, f, g.n, g.f);
         let hrp = self.pad2(hr, n_r, f, g.n, g.f);
-        let mut out = Vec::with_capacity(src.len());
+        let mut at = 0;
         for (s, d) in src.chunks(g.e).zip(dst.chunks(g.e)) {
             let mut si = vec![0i32; g.e];
             let mut di = vec![0i32; g.e];
@@ -222,7 +232,7 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
             }
             let nv = [s.len() as i32];
             self.launches += 1;
-            let vals = self
+            let chunk_vals = self
                 .rt
                 .execute(
                     &self.sddmm_name,
@@ -235,20 +245,17 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
                     ],
                 )
                 .expect("pjrt sddmm");
-            out.extend_from_slice(&vals[..s.len()]);
+            vals[at..at + s.len()].copy_from_slice(&chunk_vals[..s.len()]);
+            at += s.len();
         }
-        out
     }
 
-    fn vecadd(&mut self, a: &[f32], b: &[f32]) -> Vec<f32> {
+    fn vecadd(&mut self, a: &[f32], b: &[f32], out: &mut [f32]) {
         let g = self.geom;
-        // Flatten-agnostic: process in tile-sized row groups of width f.
+        // Flatten-agnostic: pad the flat buffer into (N x F) tiles.
         debug_assert_eq!(a.len(), b.len());
-        // Treat as (len/f') rows where f' divides len; simplest: pad the
-        // flat buffer into (N x F) tiles.
         let total = a.len();
         let per_tile = g.n * g.f;
-        let mut out = Vec::with_capacity(total);
         let mut at = 0;
         while at < total {
             let take = (total - at).min(per_tile);
@@ -261,10 +268,9 @@ impl<'rt> TileBackend for PjrtBackend<'rt> {
                 .rt
                 .execute(&self.vecadd_name, &[ArgValue::F32(&ap), ArgValue::F32(&bp)])
                 .expect("pjrt vecadd");
-            out.extend_from_slice(&o[..take]);
+            out[at..at + take].copy_from_slice(&o[..take]);
             at += take;
         }
-        out
     }
 }
 

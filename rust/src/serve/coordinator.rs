@@ -17,9 +17,13 @@ use super::device::Device;
 use super::dispatcher::{Dispatcher, Route};
 use crate::compiler::Executable;
 use crate::config::HwConfig;
+use crate::engine::{EngineInput, ExecProfile};
+use crate::exec::{CountingBackend, FunctionalExecutor, RustBackend};
 use crate::graph::Dataset;
 use crate::ir::ZooModel;
 use crate::sim::{simulate, simulate_dynamic};
+use crate::util::timed;
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 /// One inference request.
@@ -234,6 +238,59 @@ impl Coordinator {
         self.stats()
     }
 
+    /// Execute real numerics for one compiled program on a specific
+    /// device's functional substrate — the fleet's audit path for
+    /// spot-checking that a served (model, graph) pair still produces
+    /// golden-equivalent outputs. Tile buffers come from the *device's*
+    /// own [`crate::exec::BufferArena`] (the software analogue of its
+    /// resident Feature Buffer), so repeated replays on a device are
+    /// allocation-free in steady state. The virtual clock is untouched:
+    /// a replay is offline verification, not a served request.
+    pub fn functional_replay(
+        &mut self,
+        device: usize,
+        exe: &Executable,
+        input: &EngineInput<'_>,
+    ) -> Result<ExecProfile> {
+        if device >= self.devices.len() {
+            bail!("no device {device} in a {}-device fleet", self.devices.len());
+        }
+        if exe.cfg != input.partitioned.cfg {
+            bail!(
+                "graph partitioned with (N1={}, N2={}) but executable wants (N1={}, N2={})",
+                input.partitioned.cfg.n1,
+                input.partitioned.cfg.n2,
+                exe.cfg.n1,
+                exe.cfg.n2
+            );
+        }
+        let arena = std::mem::take(&mut self.devices[device].arena);
+        let packed = self.devices[device].packed.take();
+        let mut fx = FunctionalExecutor::with_state(
+            exe,
+            input.partitioned,
+            input.store,
+            CountingBackend::new(RustBackend),
+            arena,
+            packed,
+        );
+        fx.dynamic = self.dynamic;
+        let (out, secs) = timed(|| fx.run(input.x));
+        let profile = ExecProfile {
+            engine: "functional",
+            latency_s: secs,
+            cycles: 0,
+            kernel_launches: fx.backend.launches,
+            bytes_moved: fx.backend.bytes,
+            remaps: fx.remaps,
+            output: Some(out),
+        };
+        let (arena, packed) = fx.into_state();
+        self.devices[device].arena = arena;
+        self.devices[device].packed = Some(packed);
+        Ok(profile)
+    }
+
     pub fn stats(&self) -> ServeStats {
         let mut lats: Vec<f64> = self.responses.iter().map(|r| r.latency).collect();
         if lats.is_empty() {
@@ -443,6 +500,52 @@ mod tests {
         assert!(r0.iter().all(|r| r.remaps == 0));
         // Dynamic execution times are never slower (memoized per key).
         assert!(s1.makespan <= s0.makespan + 1e-12);
+    }
+
+    #[test]
+    fn functional_replay_uses_the_device_arena() {
+        use crate::compiler::{compile, CompileOptions};
+        use crate::exec::{golden_forward, WeightStore};
+        use crate::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
+        use crate::ir::ZooModel;
+
+        let meta = GraphMeta::new("t", 300, 1500, 32, 4);
+        let g = rmat_edges(meta, Default::default(), 9).gcn_normalized();
+        let hw = HwConfig::functional_tiles();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        let pg = PartitionedGraph::build(&g, cfg);
+        let ir = ZooModel::B1.build(g.meta.clone());
+        let exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        let x = g.random_features(5);
+        let input = crate::engine::EngineInput {
+            graph: &g,
+            partitioned: &pg,
+            store: &store,
+            x: &x,
+        };
+        let fleet = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+        let mut c = Coordinator::fleet(hw, fleet);
+        assert!(c.functional_replay(7, &exe, &input).is_err(), "bad device id");
+        let p1 = c.functional_replay(0, &exe, &input).unwrap();
+        let cold_fresh = c.devices()[0].arena.stats().fresh;
+        assert!(cold_fresh > 0);
+        // The replayed numerics match the golden reference.
+        let golden = golden_forward(&exe.ir, &g, &store, &x);
+        let out = p1.output.as_ref().unwrap();
+        let err = golden
+            .iter()
+            .zip(out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(err < 1e-3, "replay vs golden max err {err}");
+        // A second replay on the same device is served from its arena.
+        let p2 = c.functional_replay(0, &exe, &input).unwrap();
+        assert_eq!(p1.output, p2.output);
+        let warm_fresh = c.devices()[0].arena.stats().fresh - cold_fresh;
+        assert!(warm_fresh <= 1, "warm replay allocated {warm_fresh} buffers");
+        // The other device's arena is untouched (per-device pools).
+        assert_eq!(c.devices()[1].arena.stats().fresh, 0);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use super::cache::{Key, ProgramCache};
 use super::clock;
 use crate::compiler::Executable;
 use crate::config::HwConfig;
+use crate::exec::{BufferArena, PackedWeightSet};
 use crate::graph::Dataset;
 use crate::ir::ZooModel;
 use std::collections::HashMap;
@@ -37,6 +38,17 @@ pub struct Device {
     pub free_at: f64,
     /// Accumulated execution seconds (utilization numerator).
     pub busy: f64,
+    /// Device-resident reusable tile buffers — the software analogue of
+    /// the overlay's Feature/Result buffers. Functional replays on this
+    /// device ([`crate::serve::Coordinator::functional_replay`]) draw
+    /// from and recycle into this pool, so repeated replays allocate
+    /// nothing in steady state.
+    pub arena: BufferArena,
+    /// Packed Linear-layer weights of the last functionally-replayed
+    /// program (fingerprint-checked on reuse, rebuilt on mismatch), so
+    /// back-to-back replays of the same (model, graph) pair skip
+    /// repacking entirely.
+    pub packed: Option<PackedWeightSet>,
     pub jobs: Vec<Job>,
     /// Index of the first job that may not have started yet. Start times
     /// are nondecreasing per device (each job begins no earlier than its
@@ -54,6 +66,8 @@ impl Device {
             warm_at: HashMap::new(),
             free_at: 0.0,
             busy: 0.0,
+            arena: BufferArena::new(),
+            packed: None,
             jobs: Vec::new(),
             first_pending: 0,
         }

@@ -44,7 +44,8 @@ fn pjrt_gemm_kernel_matches_rust_ops() {
     let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
     let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
     assert!(m <= g.n && k <= g.f && n <= g.f);
-    let got = be.gemm(&h, m, k, &w, n, &b);
+    let mut got = vec![0f32; m * n];
+    be.gemm(&h, m, k, &w, n, &b, &mut got);
     let want = graphagile::exec::ops::gemm_bias_act(
         &h,
         m,
@@ -72,8 +73,20 @@ fn pjrt_spdmm_kernel_matches_rust_ops() {
     let dst: Vec<u32> = (0..e).map(|_| rng.below(n_out as u64) as u32).collect();
     let ew: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
     let h: Vec<f32> = (0..n_in * f).map(|_| rng.normal()).collect();
+    // The backend consumes CSR subshards with perm-gathered weights.
+    let csr = graphagile::exec::kernels::csr_from_coo(&src, &dst, n_out);
     for aggop in [AggOp::Sum, AggOp::Max] {
-        let got = be.spdmm(&src, &dst, &ew, &h, n_in, f, n_out, aggop);
+        let neutral = if aggop == AggOp::Max { f32::NEG_INFINITY } else { 0.0 };
+        let mut got = vec![neutral; n_out * f];
+        let mut touched = vec![0u32; n_out];
+        be.spdmm_csr(&csr, &ew, &h, f, aggop, &mut got, &mut touched);
+        if neutral != 0.0 {
+            for (r, &t) in touched.iter().enumerate() {
+                if t == 0 {
+                    got[r * f..(r + 1) * f].fill(0.0);
+                }
+            }
+        }
         let want = graphagile::exec::ops::spdmm(&src, &dst, &ew, &h, f, n_out, aggop);
         assert!(
             max_rel_err(&want, &got) < 1e-4,
@@ -96,13 +109,21 @@ fn pjrt_sddmm_and_vecadd_match_rust_ops() {
     let src: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
     let dst: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
     let h: Vec<f32> = (0..n * f).map(|_| rng.normal()).collect();
-    let got = be.sddmm(&src, &dst, &h, &h, n, n, f);
+    let csr = graphagile::exec::kernels::csr_from_coo(&src, &dst, n);
+    let mut vals = vec![0f32; e];
+    be.sddmm_csr(&csr, &h, &h, f, &mut vals);
+    // Scatter CSR slot order back to edge order before comparing.
+    let mut got = vec![0f32; e];
+    for (slot, &v) in vals.iter().enumerate() {
+        got[csr.perm[slot] as usize] = v;
+    }
     let want = graphagile::exec::ops::sddmm(&src, &dst, &h, &h, f);
     assert!(max_rel_err(&want, &got) < 1e-4);
 
     let a: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
     let b: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
-    let got = be.vecadd(&a, &b);
+    let mut got = vec![0f32; 5000];
+    be.vecadd(&a, &b, &mut got);
     let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
     assert_eq!(got.len(), want.len());
     assert!(max_rel_err(&want, &got) < 1e-5);

@@ -1,0 +1,186 @@
+//! Property suite pinning the optimized kernel backend against the
+//! naive reference kernels (`ops::reference`) across random shapes, all
+//! aggregation ops and activations — plus CSR<->COO round-trips on
+//! [`PartitionedGraph`] and the zero-alloc steady-state guarantee. The
+//! epsilon accounts for reassociated float sums (blocked GEMM and the
+//! 4-way SDDMM dot change summation order, never values).
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::exec::ops::{self, reference};
+use graphagile::exec::{
+    golden_forward, golden_forward_reference, FunctionalExecutor, ReferenceBackend, RustBackend,
+    WeightStore,
+};
+use graphagile::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
+use graphagile::ir::ZooModel;
+use graphagile::isa::{Activation, AggOp};
+use graphagile::prop_assert;
+use graphagile::util::forall;
+
+const ACTS: [Activation; 8] = [
+    Activation::None,
+    Activation::Relu,
+    Activation::LRelu,
+    Activation::PRelu,
+    Activation::Swish,
+    Activation::Exp,
+    Activation::Sigmoid,
+    Activation::Elu,
+];
+
+const AGGS: [AggOp; 4] = [AggOp::Sum, AggOp::Mean, AggOp::Max, AggOp::Min];
+
+fn close(a: &[f32], b: &[f32], eps: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} != {}", a.len(), b.len()));
+    }
+    let scale = b.iter().fold(1f32, |m, v| m.max(v.abs()));
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > eps * scale {
+            return Err(format!("[{i}] {x} vs {y} (scale {scale})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_gemm_optimized_matches_reference() {
+    forall("gemm-opt-vs-ref", 40, |rng| {
+        let m = rng.range(1, 130) as usize;
+        let k = rng.range(1, 200) as usize;
+        let n = rng.range(1, 300) as usize;
+        let act = ACTS[rng.below(ACTS.len() as u64) as usize];
+        // ~25% exact zeros exercise the sparsity skip paths.
+        let h: Vec<f32> = (0..m * k)
+            .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.normal() * 0.3 })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.3).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let want = reference::gemm_bias_act(&h, m, k, &w, n, &b, act);
+        let got = ops::gemm_bias_act(&h, m, k, &w, n, &b, act);
+        close(&got, &want, 1e-3).map_err(|e| format!("{m}x{k}x{n} {act:?}: {e}"))
+    });
+}
+
+#[test]
+fn prop_spdmm_optimized_matches_reference_all_aggops() {
+    forall("spdmm-opt-vs-ref", 40, |rng| {
+        let n_in = rng.range(1, 300) as usize;
+        let n_out = rng.range(1, 300) as usize;
+        let f = rng.range(1, 96) as usize;
+        let e = rng.range(0, 4000) as usize;
+        let agg = AGGS[rng.below(AGGS.len() as u64) as usize];
+        let src: Vec<u32> = (0..e).map(|_| rng.below(n_in as u64) as u32).collect();
+        let dst: Vec<u32> = (0..e).map(|_| rng.below(n_out as u64) as u32).collect();
+        let ew: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+        let h: Vec<f32> = (0..n_in * f).map(|_| rng.normal()).collect();
+        let want = reference::spdmm(&src, &dst, &ew, &h, f, n_out, agg);
+        let got = ops::spdmm(&src, &dst, &ew, &h, f, n_out, agg);
+        // Max/Min pick the same element regardless of order: exact.
+        let eps = if matches!(agg, AggOp::Max | AggOp::Min) { 0.0 } else { 1e-3 };
+        close(&got, &want, eps).map_err(|e| format!("{agg:?} e={} f={f}: {e}", src.len()))
+    });
+}
+
+#[test]
+fn prop_sddmm_optimized_matches_reference() {
+    forall("sddmm-opt-vs-ref", 40, |rng| {
+        let n = rng.range(1, 300) as usize;
+        let f = rng.range(1, 96) as usize;
+        let e = rng.range(0, 4000) as usize;
+        let src: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let dst: Vec<u32> = (0..e).map(|_| rng.below(n as u64) as u32).collect();
+        let h: Vec<f32> = (0..n * f).map(|_| rng.normal()).collect();
+        let want = reference::sddmm(&src, &dst, &h, &h, f);
+        let got = ops::sddmm(&src, &dst, &h, &h, f);
+        close(&got, &want, 1e-3).map_err(|err| format!("e={e} f={f}: {err}"))
+    });
+}
+
+#[test]
+fn prop_partitioned_csr_roundtrips_to_coo() {
+    // Satellite: CSR<->COO round-trip on PartitionedGraph — every
+    // subshard's CSR view reproduces the exact edge multiset, and the
+    // perm gather hits the exact per-edge weights.
+    forall("partitioned-csr-roundtrip", 15, |rng| {
+        let n = rng.range(2, 600);
+        let m = rng.range(1, 5000);
+        let n1 = 1 << rng.range(3, 9);
+        let meta = GraphMeta::new("p", n, m, 8, 2);
+        let g = rmat_edges(meta, Default::default(), rng.next_u64());
+        let pg = PartitionedGraph::build(&g, PartitionConfig { n1, n2: 8 });
+        pg.validate().map_err(|e| e)?;
+        let mut total = 0usize;
+        for i in 0..pg.shards {
+            for j in 0..pg.shards {
+                let range = pg.subshard(i, j);
+                let csr = pg.csr(i, j);
+                total += csr.nnz();
+                let mut from_csr: Vec<(u32, u32, u32)> = Vec::new();
+                for r in 0..csr.rows as usize {
+                    for slot in csr.row(r) {
+                        let e = range.start + csr.perm[slot] as usize;
+                        from_csr.push((
+                            j as u32 * n1 as u32 + csr.cols[slot],
+                            i as u32 * n1 as u32 + r as u32,
+                            pg.w[e].to_bits(),
+                        ));
+                    }
+                }
+                let mut from_coo: Vec<(u32, u32, u32)> = range
+                    .map(|e| (pg.src[e], pg.dst[e], pg.w[e].to_bits()))
+                    .collect();
+                from_csr.sort_unstable();
+                from_coo.sort_unstable();
+                prop_assert!(from_csr == from_coo, "({i},{j}) multiset mismatch");
+            }
+        }
+        prop_assert!(total == g.m(), "csr covers {total} of {} edges", g.m());
+        Ok(())
+    });
+}
+
+#[test]
+fn golden_reference_matches_golden_optimized_across_zoo() {
+    let meta = GraphMeta::new("t", 220, 1100, 16, 4);
+    let g = rmat_edges(meta, Default::default(), 21).gcn_normalized();
+    for model in graphagile::ir::ALL_MODELS {
+        let ir = model.build(g.meta.clone());
+        let store = WeightStore::deterministic(&ir, 42);
+        let x = g.random_features(3);
+        let want = golden_forward_reference(&ir, &g, &store, &x);
+        let got = golden_forward(&ir, &g, &store, &x);
+        close(&got, &want, 1e-3).unwrap_or_else(|e| panic!("{}: {e}", model.key()));
+    }
+}
+
+#[test]
+fn tile_backends_agree_and_warm_arena_is_allocation_free() {
+    let meta = GraphMeta::new("t", 300, 1600, 32, 4);
+    let g = rmat_edges(meta, Default::default(), 17).gcn_normalized();
+    let hw = HwConfig::functional_tiles();
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let pg = PartitionedGraph::build(&g, cfg);
+    for model in [ZooModel::B1, ZooModel::B5, ZooModel::B7] {
+        let ir = model.build(g.meta.clone());
+        let exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        let x = g.random_features(5);
+        let naive = FunctionalExecutor::new(&exe, &pg, &store, ReferenceBackend).run(&x);
+        let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let opt = fx.run(&x);
+        close(&opt, &naive, 1e-3).unwrap_or_else(|e| panic!("{}: {e}", exe.ir.name));
+        // Steady state: rebuild the executor around the warm state; the
+        // only fresh allocation allowed is the replacement for the
+        // output matrix that escaped to the caller.
+        let (arena, packed) = fx.into_state();
+        let cold_fresh = arena.stats().fresh;
+        let mut warm =
+            FunctionalExecutor::with_state(&exe, &pg, &store, RustBackend, arena, Some(packed));
+        let again = warm.run(&x);
+        assert_eq!(opt, again, "{}: warm run changed numerics", exe.ir.name);
+        let fresh = warm.arena.stats().fresh - cold_fresh;
+        assert!(fresh <= 1, "{}: warm run allocated {fresh} buffers", exe.ir.name);
+    }
+}
