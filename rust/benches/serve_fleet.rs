@@ -21,11 +21,13 @@ fn workload(n: usize, seed: u64) -> Vec<Request> {
     ];
     let mut rng = Rng::new(seed);
     (0..n)
-        .map(|i| Request {
-            tenant: rng.below(8) as u32,
-            model: models[rng.below(4) as usize],
-            dataset: graphs[rng.below(3) as usize],
-            arrival: i as f64 * 5e-5,
+        .map(|i| {
+            Request::full(
+                rng.below(8) as u32,
+                models[rng.below(4) as usize],
+                graphs[rng.below(3) as usize],
+                i as f64 * 5e-5,
+            )
         })
         .collect()
 }

@@ -1,0 +1,185 @@
+//! Shape-bucketed compilation for mini-batch ego-networks.
+//!
+//! Thousands of distinct ego-nets would mean thousands of distinct
+//! `Executable`s if each were compiled at its exact (|V|, |E|). Instead,
+//! sampled shapes are rounded **up** to power-of-two buckets
+//! ([`BucketShape::for_graph`]): every ego-net with `v <= 2^a` vertices
+//! and `e <= 2^b` edges executes the one program compiled for
+//! `(2^a, 2^b)`, so a serving fleet sees a handful of bucket keys — and
+//! near-perfect program-cache hit rates — no matter how diverse the
+//! requests are.
+//!
+//! Why padding is sound:
+//! * **vertices** — the ego-net is re-homed in a `2^a`-vertex graph
+//!   whose extra vertices are isolated and whose extra feature rows are
+//!   zero ([`crate::graph::sample::EgoNet::padded_features`]). No edge
+//!   references a padded row, Linear/eltwise layers are row-local, and
+//!   aggregation zeroes untouched rows — live-row results are
+//!   bit-identical to the unpadded execution (pinned by
+//!   `rust/tests/minibatch.rs`);
+//! * **edges** — the bucket's edge count only sizes the instruction
+//!   stream (a timing model input). The functional executor binds tiles
+//!   to the *member* graph's partition, so the canonical edge placement
+//!   ([`canonical_tiles`]) never affects numerics.
+//!
+//! Bucket programs are compiled with [`bucket_options`]: every subshard
+//! gets a task (a member ego-net decides at run time which tiles hold
+//! edges, so none may be skipped at compile time), and the GA02
+//! threshold table is omitted (canonical densities say nothing about
+//! members; the static kernel mapping is authoritative).
+
+use super::{compile, CompileOptions, Executable};
+use crate::config::HwConfig;
+use crate::graph::{GraphMeta, TileCounts};
+use crate::ir::ZooModel;
+
+/// Smallest vertex bucket: tiny ego-nets all share one program.
+pub const MIN_BUCKET_VERTICES: u64 = 64;
+/// Smallest edge bucket.
+pub const MIN_BUCKET_EDGES: u64 = 256;
+
+/// A compiled-program shape class: vertex/edge counts rounded up to
+/// powers of two, plus the (exact) feature length and class count the
+/// model was built for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BucketShape {
+    /// Vertex bucket (power of two, >= [`MIN_BUCKET_VERTICES`]).
+    pub v: u32,
+    /// Edge bucket (power of two, >= [`MIN_BUCKET_EDGES`]).
+    pub e: u32,
+    /// Input feature length (exact — it shapes every weight matrix).
+    pub f: u32,
+    /// Output classes (exact).
+    pub c: u32,
+}
+
+impl BucketShape {
+    /// The bucket covering a `(n_vertices, n_edges)` ego-net.
+    pub fn of(n_vertices: u64, n_edges: u64, feat_len: u64, n_classes: u64) -> BucketShape {
+        BucketShape {
+            v: n_vertices.max(MIN_BUCKET_VERTICES).next_power_of_two() as u32,
+            e: n_edges.max(MIN_BUCKET_EDGES).next_power_of_two() as u32,
+            f: feat_len as u32,
+            c: n_classes as u32,
+        }
+    }
+
+    /// The bucket covering `meta`.
+    pub fn for_graph(meta: &GraphMeta) -> BucketShape {
+        BucketShape::of(meta.n_vertices, meta.n_edges, meta.feat_len, meta.n_classes)
+    }
+
+    /// The exact (unrounded) shape of `meta` — the baseline the
+    /// padding-equivalence test compares bucket execution against.
+    pub fn exact(meta: &GraphMeta) -> BucketShape {
+        BucketShape {
+            v: meta.n_vertices.max(1) as u32,
+            e: meta.n_edges.max(1) as u32,
+            f: meta.feat_len as u32,
+            c: meta.n_classes as u32,
+        }
+    }
+
+    /// Graph metadata of the canonical bucket instance.
+    pub fn meta(&self) -> GraphMeta {
+        GraphMeta::new("bucket", self.v as u64, self.e as u64, self.f as u64, self.c as u64)
+    }
+}
+
+/// Canonical per-subshard edge counts for a bucket: `e` edges spread
+/// uniformly over the `shards^2` grid (remainder to the leading tiles).
+/// Total is exactly `e`, so the modeled execution time of the bucket
+/// program is a stable upper-envelope cost for every member ego-net.
+pub fn canonical_tiles(shape: BucketShape, n1: u64) -> TileCounts {
+    let shards = (shape.v as u64).div_ceil(n1) as usize;
+    let cells = (shards * shards) as u64;
+    let (base, rem) = (shape.e as u64 / cells, shape.e as u64 % cells);
+    let counts = (0..cells).map(|i| base + u64::from(i < rem)).collect();
+    TileCounts { n1, shards, counts }
+}
+
+/// Compile options for bucket executables (see the module docs).
+pub fn bucket_options() -> CompileOptions {
+    CompileOptions {
+        skip_empty_tiles: false,
+        dynamic_thresholds: false,
+        ..CompileOptions::default()
+    }
+}
+
+/// Compile the canonical program of `(model, shape)` — the one
+/// executable every member ego-net of the bucket runs on.
+pub fn compile_bucket(model: ZooModel, shape: BucketShape, hw: &HwConfig) -> Executable {
+    let tiles = canonical_tiles(shape, hw.n1() as u64);
+    let ir = model.build(shape.meta());
+    compile(&ir, &tiles, hw, bucket_options())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::LayerType;
+
+    #[test]
+    fn rounding_hits_the_floors_and_powers_of_two() {
+        let tiny = BucketShape::of(1, 0, 32, 4);
+        assert_eq!((tiny.v, tiny.e), (64, 256));
+        let mid = BucketShape::of(300, 1500, 32, 4);
+        assert_eq!((mid.v, mid.e), (512, 2048));
+        // Exact powers of two stay put (no off-by-one doubling).
+        let pow = BucketShape::of(512, 2048, 32, 4);
+        assert_eq!((pow.v, pow.e), (512, 2048));
+    }
+
+    #[test]
+    fn nearby_shapes_share_a_bucket() {
+        let a = BucketShape::of(130, 900, 64, 8);
+        let b = BucketShape::of(255, 1024, 64, 8);
+        assert_eq!(a, b);
+        let c = BucketShape::of(257, 1024, 64, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn canonical_tiles_cover_the_bucket_exactly() {
+        let shape = BucketShape::of(300, 1500, 32, 4);
+        let tiles = canonical_tiles(shape, 128);
+        assert_eq!(tiles.shards, 4); // 512 / 128
+        assert_eq!(tiles.total_edges(), shape.e as u64);
+        // Uniform spread: counts differ by at most one.
+        let (lo, hi) = (
+            tiles.counts.iter().min().unwrap(),
+            tiles.counts.iter().max().unwrap(),
+        );
+        assert!(hi - lo <= 1, "counts not uniform: {lo}..{hi}");
+    }
+
+    #[test]
+    fn bucket_program_tasks_every_tile() {
+        // skip_empty_tiles off: each Aggregate task references every
+        // source subshard, so any member edge distribution is covered.
+        let shape = BucketShape::of(300, 1500, 32, 4);
+        let hw = HwConfig::functional_tiles();
+        let exe = compile_bucket(ZooModel::B1, shape, &hw);
+        assert!(exe.program.thresholds.is_none(), "buckets omit GA02");
+        let shards = (shape.v as u64).div_ceil(hw.n1() as u64) as usize;
+        for lt in &exe.tasks {
+            if lt.ltype == LayerType::Aggregate {
+                for t in &lt.tasks {
+                    if let crate::compiler::TileTask::Aggregate { subshards, .. } = t {
+                        assert_eq!(subshards.len(), shards);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_shape_reflects_meta() {
+        let meta = GraphMeta::new("ego", 37, 91, 16, 4);
+        let ex = BucketShape::exact(&meta);
+        assert_eq!((ex.v, ex.e, ex.f, ex.c), (37, 91, 16, 4));
+        let rounded = BucketShape::for_graph(&meta);
+        assert_eq!((rounded.v, rounded.e), (64, 256));
+    }
+}

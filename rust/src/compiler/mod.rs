@@ -13,7 +13,13 @@
 //! The output is an [`Executable`]: the `.ga` binary [`Program`] plus the
 //! structured tile tasks the functional runtime executes, and a
 //! [`CompileReport`] with per-pass wall-clock times (T_LoC in Table 7).
+//!
+//! [`bucket`] adds the mini-batch entry point: sampled ego-networks are
+//! compiled once per power-of-two shape class ([`BucketShape`]) instead
+//! of once per request, so the serving fleet's program cache absorbs
+//! arbitrarily diverse mini-batch streams.
 
+pub mod bucket;
 pub mod fusion;
 pub mod mapping;
 pub mod order;
@@ -26,6 +32,7 @@ use crate::ir::ModelIr;
 use crate::isa::Program;
 use crate::util::timed;
 
+pub use bucket::{compile_bucket, BucketShape};
 pub use mapping::{LayerTasks, TileTask};
 pub use partition::LayerGrid;
 

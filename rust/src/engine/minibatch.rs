@@ -1,0 +1,171 @@
+//! Functional mini-batch execution through the shape-bucketed
+//! executable cache.
+//!
+//! [`MiniBatchRunner`] is the numerics-producing counterpart of the
+//! serving fleet's bucket path: it compiles one canonical program per
+//! `(model, `[`BucketShape`]`)`, keeps per-bucket warm state (a
+//! [`BufferArena`] and the packed weight panels), and runs any member
+//! ego-net by re-homing it in the bucket's padded vertex space. Padding
+//! rows are zero and edge-free, so live-row outputs are bit-identical
+//! to an exact-shape execution (pinned in `rust/tests/minibatch.rs`).
+//!
+//! The runner is what the golden-equivalence chain tests against: full
+//! neighborhood sampling to the model's Aggregate depth must reproduce
+//! the whole-graph golden outputs on target rows for every zoo model.
+
+use crate::compiler::bucket::{compile_bucket, BucketShape};
+use crate::compiler::Executable;
+use crate::config::HwConfig;
+use crate::exec::{BufferArena, FunctionalExecutor, PackedWeightSet, RustBackend, WeightStore};
+use crate::graph::sample::EgoNet;
+use crate::graph::PartitionedGraph;
+use crate::ir::ZooModel;
+use std::collections::HashMap;
+
+/// Per-run result of a mini-batch execution.
+#[derive(Clone, Debug)]
+pub struct MiniBatchProfile {
+    /// The bucket the ego-net executed in.
+    pub shape: BucketShape,
+    /// Whether the bucket program was already compiled in this runner.
+    pub bucket_hit: bool,
+    /// Output rows of the target vertices (`n_targets x n_classes`,
+    /// row-major, in the ego-net's local target order).
+    pub targets_out: Vec<f32>,
+    pub sampled_vertices: u64,
+    pub sampled_edges: u64,
+    /// Rows the bucket padded the ego-net to.
+    pub padded_vertices: u64,
+}
+
+/// One bucket's compiled program plus its warm execution state.
+struct BucketEntry {
+    exe: Executable,
+    store: WeightStore,
+    arena: BufferArena,
+    packed: Option<PackedWeightSet>,
+}
+
+/// Bucket-cached functional executor for ego-networks.
+pub struct MiniBatchRunner {
+    hw: HwConfig,
+    weight_seed: u64,
+    entries: HashMap<(ZooModel, BucketShape), BucketEntry>,
+    pub bucket_hits: u64,
+    pub bucket_misses: u64,
+}
+
+impl MiniBatchRunner {
+    /// `weight_seed` feeds [`WeightStore::deterministic`] per bucket
+    /// program; because layer ids and dimensions are independent of
+    /// graph size, the same seed yields the same weights as the
+    /// whole-graph model — which is what makes golden cross-checks
+    /// possible.
+    pub fn new(hw: HwConfig, weight_seed: u64) -> MiniBatchRunner {
+        MiniBatchRunner {
+            hw,
+            weight_seed,
+            entries: HashMap::new(),
+            bucket_hits: 0,
+            bucket_misses: 0,
+        }
+    }
+
+    /// Distinct bucket programs compiled so far.
+    pub fn buckets(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Execute `ego` under `model` in its covering bucket. `x_full` is
+    /// the *parent graph's* feature matrix; the runner gathers and
+    /// zero-pads the sampled rows itself.
+    pub fn run(&mut self, model: ZooModel, ego: &EgoNet, x_full: &[f32]) -> MiniBatchProfile {
+        let shape = BucketShape::for_graph(&ego.graph.meta);
+        self.run_shaped(model, shape, ego, x_full)
+    }
+
+    /// [`MiniBatchRunner::run`] with an explicit shape. The
+    /// padding-equivalence test passes [`BucketShape::exact`] here to
+    /// compare unpadded against bucket-padded execution.
+    pub fn run_shaped(
+        &mut self,
+        model: ZooModel,
+        shape: BucketShape,
+        ego: &EgoNet,
+        x_full: &[f32],
+    ) -> MiniBatchProfile {
+        assert_eq!(shape.f as u64, ego.graph.meta.feat_len, "bucket/ego feature length");
+        assert_eq!(shape.c as u64, ego.graph.meta.n_classes, "bucket/ego class count");
+        assert!((shape.v as usize) >= ego.n(), "bucket smaller than the ego-net");
+        let key = (model, shape);
+        let hit = self.entries.contains_key(&key);
+        if hit {
+            self.bucket_hits += 1;
+        } else {
+            self.bucket_misses += 1;
+        }
+        let hw = self.hw.clone();
+        let seed = self.weight_seed;
+        let entry = self.entries.entry(key).or_insert_with(|| {
+            let exe = compile_bucket(model, shape, &hw);
+            let store = WeightStore::deterministic(&exe.ir, seed);
+            BucketEntry { exe, store, arena: BufferArena::new(), packed: None }
+        });
+        let f = ego.graph.meta.feat_len as usize;
+        let padded = ego.padded_graph(shape.v as u64);
+        let pg = PartitionedGraph::build(&padded, entry.exe.cfg);
+        let x = ego.padded_features(x_full, f, shape.v as usize);
+        let arena = std::mem::take(&mut entry.arena);
+        let packed = entry.packed.take();
+        let mut fx = FunctionalExecutor::with_state(
+            &entry.exe,
+            &pg,
+            &entry.store,
+            RustBackend,
+            arena,
+            packed,
+        );
+        let out = fx.run(&x);
+        let (arena, packed) = fx.into_state();
+        entry.arena = arena;
+        entry.packed = Some(packed);
+        let c = ego.graph.meta.n_classes as usize;
+        MiniBatchProfile {
+            shape,
+            bucket_hit: hit,
+            targets_out: out[..ego.n_targets * c].to_vec(),
+            sampled_vertices: ego.n() as u64,
+            sampled_edges: ego.m() as u64,
+            padded_vertices: shape.v as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::rmat_edges;
+    use crate::graph::{GraphMeta, Sampler};
+
+    #[test]
+    fn bucket_cache_hits_on_nearby_egonets() {
+        let meta = GraphMeta::new("t", 400, 2400, 16, 4);
+        let g = rmat_edges(meta, Default::default(), 21).gcn_normalized();
+        let x = g.random_features(3);
+        let sampler = Sampler::new(g);
+        let mut runner = MiniBatchRunner::new(HwConfig::functional_tiles(), 33);
+        let a = sampler.sample(&[1, 2], &[4, 4], 5);
+        let b = sampler.sample(&[7, 9], &[4, 4], 6);
+        let pa = runner.run(ZooModel::B1, &a, &x);
+        let pb = runner.run(ZooModel::B1, &b, &x);
+        assert!(!pa.bucket_hit);
+        // Different targets, same size class: one compiled program.
+        if pa.shape == pb.shape {
+            assert!(pb.bucket_hit);
+            assert_eq!(runner.buckets(), 1);
+        }
+        assert_eq!((runner.bucket_hits + runner.bucket_misses) as usize, 2);
+        assert_eq!(pa.targets_out.len(), a.n_targets * 4);
+        assert!(pa.targets_out.iter().all(|v| v.is_finite()));
+    }
+}

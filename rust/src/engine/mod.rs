@@ -30,6 +30,8 @@
 //! serving coordinator run Reddit-scale programs it could never hold in
 //! memory.
 
+pub mod minibatch;
+
 use crate::compiler::Executable;
 use crate::config::HwConfig;
 use crate::exec::{
@@ -40,6 +42,8 @@ use crate::graph::{CooGraph, PartitionedGraph};
 use crate::sim::{simulate, simulate_dynamic};
 use crate::util::timed;
 use anyhow::{bail, Result};
+
+pub use minibatch::{MiniBatchProfile, MiniBatchRunner};
 
 /// The functional payload: graph + weights + input features. Timing-only
 /// engines ignore it (and accept `None`).

@@ -586,16 +586,19 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
                 }
                 LayerType::VectorInner => {
                     for t in &tasks.tasks {
-                        let TileTask::VectorInner { i, j, ne, act, .. } = t else {
+                        let TileTask::VectorInner { i, j, act, .. } = t else {
                             panic!("task/layer type mismatch")
                         };
-                        if *ne == 0 {
+                        // The *graph* decides which tiles hold edges: a
+                        // shape-bucketed executable carries canonical
+                        // (not member) edge counts, so the task's `ne`
+                        // is timing metadata only.
+                        let csr = graph.csr(*i as usize, *j as usize);
+                        if csr.nnz() == 0 {
                             continue;
                         }
-                        let csr = graph.csr(*i as usize, *j as usize);
                         let range = graph.subshard(*i as usize, *j as usize);
-                        debug_assert_eq!(range.len() as u64, *ne);
-                        debug_assert_eq!(csr.nnz() as u64, *ne);
+                        debug_assert_eq!(range.len(), csr.nnz());
                         let rows_j = (n - *j as usize * n1).min(n1);
                         let rows_i = (n - *i as usize * n1).min(n1);
                         // Full-width row blocks: contiguous, no copies.

@@ -1,14 +1,17 @@
 //! Graph substrate: COO storage (paper Sec. 5.1), synthetic generators,
-//! the Table-4 dataset registry, and the Fiber-Shard partitioner
-//! (Sec. 6.5) shared by the compiler, the simulator and the functional
-//! executor.
+//! the Table-4 dataset registry, the Fiber-Shard partitioner (Sec. 6.5)
+//! shared by the compiler, the simulator and the functional executor,
+//! and the k-hop ego-network samplers behind the mini-batch serving
+//! path.
 
 pub mod coo;
 pub mod datasets;
 pub mod partition;
 pub mod rmat;
+pub mod sample;
 
 pub use coo::{CooGraph, GraphMeta};
 pub use datasets::{dataset, Dataset, ALL_DATASETS};
 pub use partition::{CsrSubshard, PartitionConfig, PartitionedGraph, TileCounts};
 pub use rmat::{rmat_edges, rmat_tile_counts, RmatParams};
+pub use sample::{full_fanout, EgoNet, Sampler, FULL_NEIGHBORHOOD};

@@ -1,0 +1,340 @@
+//! Deterministic k-hop ego-network samplers for mini-batch inference
+//! (the latency-bound serving regime of arXiv 2206.08536: per-request
+//! inference over a handful of target vertices, with cost proportional
+//! to the sampled neighborhood instead of the whole graph).
+//!
+//! A [`Sampler`] owns one whole-graph destination-row CSR (built once,
+//! O(|V| + |E|), the same index the optimized kernels use) and extracts
+//! induced ego-networks from it:
+//!
+//! * **full-neighborhood** sampling (`fanout[h] == `[`FULL_NEIGHBORHOOD`])
+//!   keeps every in-edge of every frontier vertex — after `k` hops the
+//!   target rows of a `k`-Aggregate model reproduce the whole-graph
+//!   outputs exactly (the golden-equivalence property the test suite
+//!   pins);
+//! * **fanout-capped** sampling (GraphSAGE-style, e.g. `[25, 10]`) caps
+//!   each vertex's expansion per hop with a seed-stamped deterministic
+//!   draw, keeping tail-degree vertices from blowing up the ego-net.
+//!
+//! Determinism: the per-vertex neighbor draw is seeded by
+//! `(seed, hop, vertex)` alone — independent of traversal order, thread
+//! count, or any global RNG state — so the same request always yields
+//! the same ego-net, bit for bit. Extraction itself touches only the
+//! sampled rows of the CSR: O(sampled edges) per request.
+
+use super::coo::{CooGraph, GraphMeta};
+use super::partition::CsrSubshard;
+use crate::util::Rng;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+/// Per-hop fanout value meaning "keep every in-neighbor".
+pub const FULL_NEIGHBORHOOD: u32 = u32::MAX;
+
+/// A `hops`-deep full-neighborhood fanout vector.
+pub fn full_fanout(hops: usize) -> Vec<u32> {
+    vec![FULL_NEIGHBORHOOD; hops]
+}
+
+/// An extracted ego-network: the induced subgraph on the sampled
+/// vertices (relabeled to a compact local id space, targets first in
+/// request order) plus the local -> global vertex map.
+///
+/// Edge direction and weights are preserved verbatim from the parent
+/// graph; local edge order is (hop, destination-in-frontier-order,
+/// ascending CSR slot), which is itself deterministic.
+#[derive(Clone, Debug)]
+pub struct EgoNet {
+    /// The induced subgraph; `meta` inherits `feat_len`/`n_classes`
+    /// from the parent graph.
+    pub graph: CooGraph,
+    /// Local vertex id -> parent-graph vertex id (targets occupy
+    /// locals `0..n_targets`).
+    pub origin: Vec<u32>,
+    /// Number of (deduplicated) target vertices.
+    pub n_targets: usize,
+    /// The request seed the sample was drawn with.
+    pub seed: u64,
+}
+
+impl EgoNet {
+    /// Sampled vertex count (targets + neighborhood).
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    /// Sampled edge count.
+    pub fn m(&self) -> usize {
+        self.graph.m()
+    }
+
+    /// Gather the sampled vertices' feature rows from the parent
+    /// feature matrix `x` (row-major, `f` columns), in local-id order.
+    pub fn gather_features(&self, x: &[f32], f: usize) -> Vec<f32> {
+        self.padded_features(x, f, self.n())
+    }
+
+    /// [`EgoNet::gather_features`] zero-padded to `padded_n` rows — the
+    /// input shape of a bucket executable. Padding rows are zero and
+    /// edge-free, so they are inert through Sum/Mean/Max aggregation:
+    /// no edge references a padded row, and untouched rows are zeroed
+    /// by the kernels' touched-row convention.
+    pub fn padded_features(&self, x: &[f32], f: usize, padded_n: usize) -> Vec<f32> {
+        assert!(padded_n >= self.n(), "padded_n {padded_n} < sampled {}", self.n());
+        let mut out = vec![0f32; padded_n * f];
+        for (l, &g) in self.origin.iter().enumerate() {
+            let at = g as usize * f;
+            out[l * f..(l + 1) * f].copy_from_slice(&x[at..at + f]);
+        }
+        out
+    }
+
+    /// The same edges re-homed in a `padded_n`-vertex graph (the bucket
+    /// shape). The extra vertices are isolated, so every kernel result
+    /// on the live rows is bit-identical to the unpadded execution.
+    pub fn padded_graph(&self, padded_n: u64) -> CooGraph {
+        assert!(padded_n >= self.n() as u64);
+        let meta = GraphMeta::new(
+            &self.graph.meta.name,
+            padded_n,
+            self.graph.meta.n_edges,
+            self.graph.meta.feat_len,
+            self.graph.meta.n_classes,
+        );
+        CooGraph::new(
+            meta,
+            self.graph.src.clone(),
+            self.graph.dst.clone(),
+            self.graph.w.clone(),
+        )
+    }
+}
+
+/// Per-(seed, hop, vertex) RNG seed: decorrelated so a vertex's draw is
+/// independent of when (or how often) the traversal reaches it.
+fn vertex_seed(seed: u64, hop: u32, v: u32) -> u64 {
+    let h = seed ^ 0x5EED_CAFE_F00Du64;
+    let h = h.wrapping_mul(0x100000001B3) ^ (((hop as u64) << 32) | v as u64);
+    h.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Ego-network extractor over one parent graph: the whole-graph
+/// destination-row CSR is built once and shared by every sample.
+pub struct Sampler {
+    graph: CooGraph,
+    csr: CsrSubshard,
+}
+
+impl Sampler {
+    /// Build the whole-graph in-edge index. O(|V| + |E|), done once.
+    pub fn new(graph: CooGraph) -> Sampler {
+        let csr = CsrSubshard::from_local_coo(
+            graph.dst.iter().copied(),
+            graph.src.iter().copied(),
+            graph.n(),
+        );
+        Sampler { graph, csr }
+    }
+
+    pub fn graph(&self) -> &CooGraph {
+        &self.graph
+    }
+
+    /// Extract the k-hop ego-network of `targets` (`k = fanout.len()`).
+    /// Hop `h` expands every vertex first discovered at depth `h`,
+    /// keeping at most `fanout[h]` of its in-edges
+    /// ([`FULL_NEIGHBORHOOD`] keeps all). Each vertex is expanded at
+    /// most once — under full-neighborhood sampling the expansion is
+    /// exhaustive, so repeat visits would only duplicate edges.
+    pub fn sample(&self, targets: &[u32], fanout: &[u32], seed: u64) -> EgoNet {
+        assert!(!targets.is_empty(), "mini-batch needs at least one target");
+        let n = self.graph.n() as u32;
+        let mut local: HashMap<u32, u32> = HashMap::new();
+        let mut origin: Vec<u32> = Vec::new();
+        for &t in targets {
+            assert!(t < n, "target {t} out of range (|V| = {n})");
+            if let Entry::Vacant(e) = local.entry(t) {
+                e.insert(origin.len() as u32);
+                origin.push(t);
+            }
+        }
+        let n_targets = origin.len();
+        let mut src: Vec<u32> = Vec::new();
+        let mut dst: Vec<u32> = Vec::new();
+        let mut w: Vec<f32> = Vec::new();
+        let mut frontier: Vec<u32> = origin.clone();
+        let mut slots: Vec<usize> = Vec::new();
+        for (hop, &cap) in fanout.iter().enumerate() {
+            let mut next: Vec<u32> = Vec::new();
+            for &v in &frontier {
+                let v_local = local[&v];
+                let row = self.csr.row(v as usize);
+                let deg = row.len();
+                slots.clear();
+                slots.extend(row);
+                if (cap as usize) < deg {
+                    // Deterministic partial Fisher-Yates: pick `cap`
+                    // distinct slots, then restore ascending slot order
+                    // so the ego-net's edge layout is stable.
+                    let mut rng = Rng::new(vertex_seed(seed, hop as u32, v));
+                    let k = cap as usize;
+                    for i in 0..k {
+                        let j = i + rng.below((deg - i) as u64) as usize;
+                        slots.swap(i, j);
+                    }
+                    slots.truncate(k);
+                    slots.sort_unstable();
+                }
+                for &slot in &slots {
+                    let u = self.csr.cols[slot];
+                    let u_local = match local.entry(u) {
+                        Entry::Occupied(o) => *o.get(),
+                        Entry::Vacant(e) => {
+                            let id = origin.len() as u32;
+                            e.insert(id);
+                            origin.push(u);
+                            next.push(u);
+                            id
+                        }
+                    };
+                    src.push(u_local);
+                    dst.push(v_local);
+                    w.push(self.graph.w[self.csr.perm[slot] as usize]);
+                }
+            }
+            frontier = next;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+        let meta = GraphMeta::new(
+            "ego",
+            origin.len() as u64,
+            src.len() as u64,
+            self.graph.meta.feat_len,
+            self.graph.meta.n_classes,
+        );
+        EgoNet {
+            graph: CooGraph::new(meta, src, dst, w),
+            origin,
+            n_targets,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat_edges, RmatParams};
+
+    fn skewed(n: u64, m: u64, seed: u64) -> CooGraph {
+        rmat_edges(GraphMeta::new("t", n, m, 8, 2), RmatParams::default(), seed)
+            .gcn_normalized()
+    }
+
+    #[test]
+    fn ring_one_hop_is_the_predecessor() {
+        // Ring i -> (i+1): in-neighborhood of vertex 3 is vertex 2.
+        let s = Sampler::new(CooGraph::ring(8, 4, 2));
+        let ego = s.sample(&[3], &[FULL_NEIGHBORHOOD], 1);
+        assert_eq!(ego.n_targets, 1);
+        assert_eq!(ego.origin, vec![3, 2]);
+        assert_eq!(ego.m(), 1);
+        assert_eq!((ego.graph.src[0], ego.graph.dst[0]), (1, 0));
+        // Two hops: 3 <- 2 <- 1.
+        let ego2 = s.sample(&[3], &full_fanout(2), 1);
+        assert_eq!(ego2.origin, vec![3, 2, 1]);
+        assert_eq!(ego2.m(), 2);
+    }
+
+    #[test]
+    fn full_sampling_of_all_vertices_is_the_whole_graph() {
+        let g = skewed(200, 1200, 5);
+        let s = Sampler::new(g.clone());
+        let targets: Vec<u32> = (0..200).collect();
+        let ego = s.sample(&targets, &full_fanout(1), 9);
+        assert_eq!(ego.n(), g.n());
+        assert_eq!(ego.m(), g.m());
+        // Identity relabeling (targets in id order), same edge multiset.
+        assert_eq!(ego.origin, targets);
+        let mut a: Vec<(u32, u32, u32)> = ego
+            .graph
+            .src
+            .iter()
+            .zip(&ego.graph.dst)
+            .zip(&ego.graph.w)
+            .map(|((&s, &d), &w)| (s, d, w.to_bits()))
+            .collect();
+        let mut b: Vec<(u32, u32, u32)> = g
+            .src
+            .iter()
+            .zip(&g.dst)
+            .zip(&g.w)
+            .map(|((&s, &d), &w)| (s, d, w.to_bits()))
+            .collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fanout_caps_expansion() {
+        let g = skewed(512, 8192, 3);
+        let s = Sampler::new(g);
+        let ego = s.sample(&[0, 1], &[4, 2], 7);
+        // Hop 0 emits <= 2 * 4 edges; hop 1 <= (new vertices) * 2.
+        assert!(ego.m() <= 8 + (ego.n() - 2) * 2, "{} edges", ego.m());
+        // Every edge references sampled-local vertices only.
+        assert!(ego.graph.src.iter().all(|&v| (v as usize) < ego.n()));
+        assert!(ego.graph.dst.iter().all(|&v| (v as usize) < ego.n()));
+    }
+
+    #[test]
+    fn same_seed_same_egonet_different_seed_differs() {
+        let g = skewed(512, 8192, 3);
+        let s = Sampler::new(g);
+        let a = s.sample(&[0, 5, 9], &[3, 2], 11);
+        let b = s.sample(&[0, 5, 9], &[3, 2], 11);
+        assert_eq!(a.origin, b.origin);
+        assert_eq!(a.graph.src, b.graph.src);
+        assert_eq!(a.graph.dst, b.graph.dst);
+        assert_eq!(a.graph.w, b.graph.w);
+        // Some seed in a small set must draw a different neighborhood
+        // (vertex 0 of a skewed R-MAT has degree far above the cap).
+        let differs = (12..18).any(|seed| {
+            let c = s.sample(&[0, 5, 9], &[3, 2], seed);
+            c.origin != a.origin || c.graph.src != a.graph.src
+        });
+        assert!(differs, "capped sampling ignored the seed");
+    }
+
+    #[test]
+    fn duplicate_targets_are_deduplicated() {
+        let s = Sampler::new(CooGraph::ring(8, 4, 2));
+        let ego = s.sample(&[3, 3, 5, 3], &[FULL_NEIGHBORHOOD], 1);
+        assert_eq!(ego.n_targets, 2);
+        assert_eq!(&ego.origin[..2], &[3, 5]);
+    }
+
+    #[test]
+    fn padded_features_zero_fill_and_graph_keeps_edges() {
+        let s = Sampler::new(CooGraph::ring(8, 2, 2));
+        let ego = s.sample(&[3], &[FULL_NEIGHBORHOOD], 1);
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect(); // 8 x 2
+        let xf = ego.padded_features(&x, 2, 4);
+        // Local 0 = vertex 3, local 1 = vertex 2; rows 2..4 are padding.
+        assert_eq!(&xf[..4], &[6.0, 7.0, 4.0, 5.0]);
+        assert!(xf[4..].iter().all(|&v| v == 0.0));
+        let pg = ego.padded_graph(16);
+        assert_eq!(pg.meta.n_vertices, 16);
+        assert_eq!(pg.m(), ego.m());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_target_panics() {
+        let s = Sampler::new(CooGraph::ring(8, 4, 2));
+        let _ = s.sample(&[8], &[1], 1);
+    }
+}

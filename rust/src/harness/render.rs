@@ -34,21 +34,45 @@ pub fn ms(s: f64) -> String {
 }
 
 /// Render the fleet counters of a serving run — every `ServeStats`
-/// field, one aligned line each, including the coalesce and kernel
-/// re-map counters that earlier revisions tracked but never printed.
+/// field, one aligned line each. The mini-batch block (sampled
+/// neighborhood sizes, bucket hits, micro-batched riders, per-class
+/// p50s) only renders when the workload contained mini-batch requests,
+/// so whole-graph runs keep their familiar shape — but no counter the
+/// coordinator tracks is ever silently dropped.
 pub fn serve_summary(stats: &ServeStats) -> String {
     let mut out = String::new();
-    out.push_str(&format!("  completed         {}\n", stats.completed));
+    out.push_str(&format!(
+        "  completed         {} ({} mini-batch)\n",
+        stats.completed, stats.minibatched
+    ));
     out.push_str(&format!(
         "  cache hits        {} / {} ({} coalesced)\n",
         stats.cache_hits, stats.completed, stats.coalesced
     ));
+    if stats.minibatched > 0 {
+        out.push_str(&format!(
+            "  bucket hits       {} / {} mini-batch\n",
+            stats.bucket_hits, stats.minibatched
+        ));
+        out.push_str(&format!("  batched riders    {}\n", stats.batched));
+        out.push_str(&format!(
+            "  sampled           {} vertices, {} edges\n",
+            stats.sampled_vertices, stats.sampled_edges
+        ));
+    }
     out.push_str(&format!("  kernel re-maps    {}\n", stats.remaps));
     out.push_str(&format!(
         "  latency p50/p99   {} ms / {} ms\n",
         ms(stats.p50),
         ms(stats.p99)
     ));
+    if stats.minibatched > 0 {
+        out.push_str(&format!(
+            "  p50 mini / full   {} ms / {} ms\n",
+            ms(stats.p50_mini),
+            ms(stats.p50_full)
+        ));
+    }
     out.push_str(&format!("  mean latency      {} ms\n", ms(stats.mean)));
     out.push_str(&format!(
         "  device busy       {:.3} s over {:.3} s makespan\n",
@@ -74,23 +98,53 @@ mod tests {
 
     #[test]
     fn serve_summary_prints_every_counter() {
+        // Distinct sentinel values per field: the regression this
+        // guards is a counter tracked by the coordinator but silently
+        // dropped from the rendered table.
         let stats = ServeStats {
             completed: 8,
             cache_hits: 7,
             coalesced: 3,
+            minibatched: 5,
+            batched: 2,
+            bucket_hits: 4,
+            sampled_vertices: 123,
+            sampled_edges: 456,
             remaps: 42,
             p50: 0.001,
             p99: 0.002,
             mean: 0.0015,
+            p50_mini: 0.0005,
+            p50_full: 0.003,
             device_busy: 0.5,
             makespan: 1.0,
         };
         let s = serve_summary(&stats);
-        // The regression this guards: coalesce/remap counters tracked
-        // but missing from the rendered output.
         assert!(s.contains("3 coalesced"), "{s}");
         assert!(s.contains("re-maps    42"), "{s}");
         assert!(s.contains("7 / 8"), "{s}");
+        assert!(s.contains("(5 mini-batch)"), "{s}");
+        assert!(s.contains("4 / 5 mini-batch"), "{s}");
+        assert!(s.contains("batched riders    2"), "{s}");
+        assert!(s.contains("123 vertices, 456 edges"), "{s}");
         assert!(s.contains("1.000 ms / 2.000 ms"), "{s}");
+        assert!(s.contains("0.500 ms / 3.000 ms"), "{s}");
+        assert!(s.contains("0.500 s over 1.000 s"), "{s}");
+    }
+
+    #[test]
+    fn serve_summary_hides_minibatch_block_for_whole_graph_runs() {
+        let stats = ServeStats {
+            completed: 4,
+            cache_hits: 3,
+            p50: 0.001,
+            p99: 0.002,
+            mean: 0.0015,
+            ..ServeStats::default()
+        };
+        let s = serve_summary(&stats);
+        assert!(s.contains("(0 mini-batch)"), "{s}");
+        assert!(!s.contains("bucket hits"), "{s}");
+        assert!(!s.contains("p50 mini"), "{s}");
     }
 }

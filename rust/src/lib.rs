@@ -32,7 +32,10 @@
 //!   [`engine::ExecProfile`],
 //! * [`serve`] — the multi-tenant serving fleet: N overlay devices, a
 //!   deterministic virtual clock, per-device program caches with
-//!   cache-affinity routing and cross-request coalescing,
+//!   cache-affinity routing, cross-request coalescing, and a mini-batch
+//!   request class (k-hop ego-network sampling + shape-bucketed
+//!   executables + micro-batched dispatch) so per-request cost tracks
+//!   the sampled neighborhood instead of the whole graph,
 //! * [`sparsity`] — density-aware dynamic kernel re-mapping
 //!   (Dynasparse-style): an exact per-tile adjacency profiler, an
 //!   analytic feature-density estimator, and the threshold table the

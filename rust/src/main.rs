@@ -6,6 +6,8 @@
 //! graphagile simulate --model b1 --dataset CO [--no-order] [--no-fusion]
 //!                     [--no-overlap] [--scale N]
 //! graphagile sweep --model b2 --dataset FL      (design-space explorer)
+//! graphagile serve --requests 256 --devices 4   (multi-tenant fleet demo)
+//! graphagile serve --minibatch --fanout 25,10   (ego-network serving path)
 //! graphagile info                               (hardware + zoo summary)
 //! ```
 
@@ -41,8 +43,10 @@ fn parse_args() -> Result<Args> {
             .strip_prefix("--")
             .ok_or_else(|| anyhow!("unexpected argument {a}"))?
             .to_string();
-        // Boolean flags: --no-order etc. take no value.
-        if key.starts_with("no-") {
+        // Boolean flags take no value: the --no-* switches and
+        // --minibatch. Every other flag requires a value — a missing
+        // one stays a hard error rather than silently parsing as true.
+        if key.starts_with("no-") || key == "minibatch" {
             flags.insert(key, "true".into());
         } else {
             let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
@@ -236,6 +240,12 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// Flags: `--requests N` (default 64), `--devices N` (default 1),
 /// `--no-affinity`, `--no-coalesce`, `--no-dynamic` (static kernel
 /// mapping), `--datasets CO,PU`.
+///
+/// Mini-batch mode: `--minibatch` serves per-request ego-network
+/// inference instead of whole graphs — each request samples 1–4 target
+/// vertices with a `--fanout 25,10`-capped k-hop neighborhood and
+/// executes through the shape-bucketed program cache.
+/// `--no-batch` disables micro-batched dispatch.
 fn cmd_serve(args: &Args) -> Result<()> {
     use graphagile::serve::{Coordinator, FleetConfig, Request};
     use graphagile::util::Rng;
@@ -244,9 +254,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_devices: args.get("devices").and_then(|s| s.parse().ok()).unwrap_or(1),
         affinity: args.get("no-affinity").is_none(),
         coalesce: args.get("no-coalesce").is_none(),
+        microbatch: args.get("no-batch").is_none(),
         dynamic: args.get("no-dynamic").is_none(),
     };
     anyhow::ensure!(cfg.n_devices >= 1, "--devices must be >= 1");
+    let minibatch = args.get("minibatch").is_some();
+    let fanout: Vec<u32> = match args.get("fanout") {
+        None => vec![25, 10],
+        Some(list) => list
+            .split(',')
+            .map(|v| v.trim().parse().map_err(|_| anyhow!("bad --fanout entry {v}")))
+            .collect::<Result<_>>()?,
+    };
     let datasets = args.datasets()?;
     let small: Vec<_> = datasets
         .into_iter()
@@ -255,11 +274,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     anyhow::ensure!(!small.is_empty(), "no datasets small enough for the demo");
     let mut rng = Rng::new(7);
     let reqs: Vec<Request> = (0..n)
-        .map(|i| Request {
-            tenant: rng.below(4) as u32,
-            model: ALL_MODELS[rng.below(8) as usize],
-            dataset: small[rng.below(small.len() as u64) as usize],
-            arrival: i as f64 * 2e-4,
+        .map(|i| {
+            let tenant = rng.below(4) as u32;
+            let model = ALL_MODELS[rng.below(8) as usize];
+            let ds = small[rng.below(small.len() as u64) as usize];
+            let arrival = i as f64 * 2e-4;
+            if minibatch {
+                let k = 1 + rng.below(4) as usize;
+                let targets = (0..k).map(|_| rng.below(ds.n_vertices) as u32).collect();
+                Request::minibatch(tenant, model, ds, targets, fanout.clone(), i as u64, arrival)
+            } else {
+                Request::full(tenant, model, ds, arrival)
+            }
         })
         .collect();
     let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);

@@ -1,16 +1,30 @@
-//! Compiled-program cache: (model, graph) -> Executable. The overlay's
+//! Compiled-program cache: request key -> Executable. The overlay's
 //! killer property is that this cache is filled by a milliseconds-scale
 //! software compile instead of an hours-scale hardware regeneration.
+//!
+//! Two key classes share the cache:
+//! * [`Key::Whole`] — whole-graph inference of (model, dataset);
+//! * [`Key::Bucket`] — a shape-bucketed mini-batch program
+//!   ([`crate::compiler::BucketShape`]): thousands of distinct ego-nets
+//!   round up to a handful of buckets, so the mini-batch hit rate stays
+//!   near 100% under arbitrarily diverse request streams.
 
-use crate::compiler::{compile, CompileOptions, Executable};
+use crate::compiler::bucket::compile_bucket;
+use crate::compiler::{compile, BucketShape, CompileOptions, Executable};
 use crate::config::HwConfig;
 use crate::graph::{Dataset, TileCounts};
 use crate::ir::ZooModel;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Cache key: which benchmark model on which graph instance.
-pub type Key = (ZooModel, &'static str);
+/// Cache key: which compiled program a request needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Key {
+    /// Whole-graph inference: (model, dataset key).
+    Whole(ZooModel, &'static str),
+    /// Mini-batch inference: (model, shape bucket).
+    Bucket(ZooModel, BucketShape),
+}
 
 pub struct ProgramCache {
     hw: HwConfig,
@@ -31,9 +45,10 @@ impl ProgramCache {
         }
     }
 
-    /// Get-or-compile. Returns the executable and whether it was a hit.
+    /// Get-or-compile the whole-graph program of (model, dataset).
+    /// Returns the executable and whether it was a hit.
     pub fn get(&mut self, model: ZooModel, ds: &Dataset) -> (Arc<Executable>, bool) {
-        let key = (model, ds.key);
+        let key = Key::Whole(model, ds.key);
         if let Some(exe) = self.programs.get(&key) {
             self.hits += 1;
             return (exe.clone(), true);
@@ -47,6 +62,20 @@ impl ProgramCache {
             .clone();
         let ir = model.build(ds.meta());
         let exe = Arc::new(compile(&ir, &tiles, &self.hw, CompileOptions::default()));
+        self.programs.insert(key, exe.clone());
+        (exe, false)
+    }
+
+    /// Get-or-compile the canonical bucket program of (model, shape).
+    /// Every member ego-net of the bucket executes this one program.
+    pub fn get_bucket(&mut self, model: ZooModel, shape: BucketShape) -> (Arc<Executable>, bool) {
+        let key = Key::Bucket(model, shape);
+        if let Some(exe) = self.programs.get(&key) {
+            self.hits += 1;
+            return (exe.clone(), true);
+        }
+        self.misses += 1;
+        let exe = Arc::new(compile_bucket(model, shape, &self.hw));
         self.programs.insert(key, exe.clone());
         (exe, false)
     }
@@ -98,5 +127,21 @@ mod tests {
         assert_eq!(cache.tiles.len(), 1);
         assert_eq!(cache.len(), 2);
         assert!(cache.binary_bytes() > 0);
+    }
+
+    #[test]
+    fn bucket_programs_cache_by_shape() {
+        let mut cache = ProgramCache::new(HwConfig::alveo_u250());
+        let a = BucketShape::of(100, 900, 64, 8);
+        let b = BucketShape::of(120, 1000, 64, 8); // same bucket
+        let c = BucketShape::of(300, 900, 64, 8); // larger vertex bucket
+        assert_eq!(a, b);
+        let (_, h1) = cache.get_bucket(ZooModel::B1, a);
+        let (_, h2) = cache.get_bucket(ZooModel::B1, b);
+        let (_, h3) = cache.get_bucket(ZooModel::B1, c);
+        assert!(!h1 && h2 && !h3);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&Key::Bucket(ZooModel::B1, a)));
+        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO")));
     }
 }

@@ -41,6 +41,29 @@ pub fn compile_cost(report: &CompileReport) -> f64 {
     report.total()
 }
 
+/// Modeled host-side sampling setup per mini-batch request (CSR row
+/// lookups, hash-map init).
+pub const SAMPLE_SETUP_S: f64 = 2e-6;
+/// Modeled cost per sampled vertex (relabeling + feature-row gather).
+pub const SAMPLE_PER_VERTEX_S: f64 = 3e-9;
+/// Modeled cost per sampled edge (slot scan + weight gather).
+pub const SAMPLE_PER_EDGE_S: f64 = 5e-9;
+
+/// Fixed per-device-visit dispatch overhead of a mini-batch job
+/// (descriptor setup + PCIe doorbell). Micro-batched riders append to
+/// an already-scheduled visit and share this one overhead — which is
+/// exactly the batching win the dispatcher chases.
+pub const VISIT_OVERHEAD_S: f64 = 4e-5;
+
+/// Deterministic modeled cost of extracting one ego-net. Linear in the
+/// sampled neighborhood — the whole point of the mini-batch path is
+/// that no per-request cost scales with the full graph.
+pub fn sample_cost(vertices: u64, edges: u64) -> f64 {
+    SAMPLE_SETUP_S
+        + vertices as f64 * SAMPLE_PER_VERTEX_S
+        + edges as f64 * SAMPLE_PER_EDGE_S
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +88,16 @@ mod tests {
         // Measured wall-clock fields do not leak into the virtual cost.
         let noisy = CompileReport { t_mapping: 123.0, ..small };
         assert_eq!(compile_cost(&noisy), compile_cost(&small));
+    }
+
+    #[test]
+    fn sample_cost_scales_with_the_neighborhood() {
+        let tiny = sample_cost(8, 16);
+        let big = sample_cost(8_000, 160_000);
+        assert!(tiny > 0.0);
+        assert!(big > tiny);
+        // A visit's fixed overhead dominates a tiny sample: batching
+        // riders must be worth something.
+        assert!(VISIT_OVERHEAD_S > tiny);
     }
 }

@@ -1,39 +1,98 @@
-//! The serving request loop: tenants submit (model, graph) inference
-//! requests; the coordinator routes each across a fleet of N overlay
-//! devices ([`super::device::Device`]) via the policy in
-//! [`super::dispatcher::Dispatcher`] — coalesce identical in-flight
-//! work, else prefer a cache-warm device — and accounts every latency on
-//! the deterministic virtual clock ([`super::clock`]).
+//! The serving request loop: tenants submit inference requests — whole
+//! graphs or mini-batch ego-networks — and the coordinator routes each
+//! across a fleet of N overlay devices ([`super::device::Device`]) via
+//! the policy in [`super::dispatcher::Dispatcher`] — coalesce identical
+//! in-flight work, micro-batch compatible mini-batches, else prefer a
+//! cache-warm device — and accounts every latency on the deterministic
+//! virtual clock ([`super::clock`]).
 //!
 //! Compile stalls are charged from the modeled
-//! [`crate::compiler::CompileReport::total`], execution from the cycle
-//! simulator (one overlay design ⇒ one exec time per (model, graph),
-//! memoized fleet-wide). Nothing reads wall-clock time, so a replayed
-//! workload produces bit-identical [`ServeStats`].
+//! [`crate::compiler::CompileReport::total`], sampling stalls from
+//! [`super::clock::sample_cost`], execution from the cycle simulator
+//! (one overlay design ⇒ one exec time per program, memoized
+//! fleet-wide). Nothing reads wall-clock time, so a replayed workload
+//! produces bit-identical [`ServeStats`].
+//!
+//! Mini-batch requests ([`Target::MiniBatch`]) sample a k-hop ego-net
+//! from the dataset (deterministic in the request seed), round its
+//! shape up to a power-of-two bucket
+//! ([`crate::compiler::BucketShape`]), and execute the bucket's cached
+//! program — so per-request cost is proportional to the sampled
+//! neighborhood, and thousands of distinct ego-nets share a handful of
+//! compiled programs.
 
 use super::cache::Key;
-use super::clock::VirtualClock;
+use super::clock::{self, VirtualClock};
 use super::device::Device;
 use super::dispatcher::{Dispatcher, Route};
-use crate::compiler::Executable;
+use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
 use crate::engine::{EngineInput, ExecProfile};
 use crate::exec::{CountingBackend, FunctionalExecutor, RustBackend};
-use crate::graph::Dataset;
+use crate::graph::{Dataset, Sampler};
 use crate::ir::ZooModel;
 use crate::sim::{simulate, simulate_dynamic};
 use crate::util::timed;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
+/// What a request asks to run over.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Target {
+    /// Inference over the whole dataset graph (the original request
+    /// class).
+    FullGraph,
+    /// Inference over the k-hop ego-network of `targets`
+    /// (`k = fanout.len()`; [`crate::graph::FULL_NEIGHBORHOOD`] per hop
+    /// keeps every in-neighbor). Sampling is deterministic in `seed`.
+    MiniBatch {
+        targets: Vec<u32>,
+        fanout: Vec<u32>,
+        seed: u64,
+    },
+}
+
+impl Target {
+    pub fn is_minibatch(&self) -> bool {
+        matches!(self, Target::MiniBatch { .. })
+    }
+}
+
 /// One inference request.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Request {
     pub tenant: u32,
     pub model: ZooModel,
     pub dataset: Dataset,
+    pub target: Target,
     /// Arrival time on the serving clock (seconds).
     pub arrival: f64,
+}
+
+impl Request {
+    /// A whole-graph request (the pre-mini-batch request shape).
+    pub fn full(tenant: u32, model: ZooModel, dataset: Dataset, arrival: f64) -> Request {
+        Request { tenant, model, dataset, target: Target::FullGraph, arrival }
+    }
+
+    /// A mini-batch request over `targets` with per-hop `fanout`.
+    pub fn minibatch(
+        tenant: u32,
+        model: ZooModel,
+        dataset: Dataset,
+        targets: Vec<u32>,
+        fanout: Vec<u32>,
+        seed: u64,
+        arrival: f64,
+    ) -> Request {
+        Request {
+            tenant,
+            model,
+            dataset,
+            target: Target::MiniBatch { targets, fanout, seed },
+            arrival,
+        }
+    }
 }
 
 /// Completion record.
@@ -45,7 +104,11 @@ pub struct Response {
     pub device: u32,
     /// Compile stall paid by this request (0 on a warm hit).
     pub t_compile: f64,
-    /// Simulated accelerator execution time.
+    /// Host-side sampling stall (0 for whole-graph requests).
+    pub t_sample: f64,
+    /// Simulated accelerator execution time (for a mini-batch creator
+    /// this includes the fixed visit overhead; riders report their item
+    /// time only).
     pub t_exec: f64,
     /// Queueing delay between program-ready and device-free.
     pub t_queue: f64,
@@ -54,6 +117,14 @@ pub struct Response {
     pub cache_hit: bool,
     /// Rode an identical in-flight job (no extra device work).
     pub coalesced: bool,
+    /// Mini-batch request micro-batched onto an existing device visit.
+    pub batched: bool,
+    /// Whether this was a mini-batch request.
+    pub minibatch: bool,
+    /// Ego-net vertices sampled for this request (0 for whole-graph).
+    pub sampled_vertices: u64,
+    /// Ego-net edges sampled for this request (0 for whole-graph).
+    pub sampled_edges: u64,
     /// Density-driven kernel re-maps in the execution serving this
     /// request (riders report the re-maps of the job they rode).
     pub remaps: u64,
@@ -66,12 +137,27 @@ pub struct ServeStats {
     pub completed: u64,
     pub cache_hits: u64,
     pub coalesced: u64,
+    /// Completed mini-batch requests.
+    pub minibatched: u64,
+    /// Mini-batch requests that micro-batched onto an existing visit.
+    pub batched: u64,
+    /// Mini-batch requests whose bucket program was already compiled
+    /// on the serving device (riders count: they never compile).
+    pub bucket_hits: u64,
+    /// Ego-net vertices sampled across all mini-batch requests.
+    pub sampled_vertices: u64,
+    /// Ego-net edges sampled across all mini-batch requests.
+    pub sampled_edges: u64,
     /// Kernel re-maps summed over *executed* jobs (coalesced riders are
     /// excluded so one execution is not counted once per rider).
     pub remaps: u64,
     pub p50: f64,
     pub p99: f64,
     pub mean: f64,
+    /// p50 over mini-batch responses only (0 when there are none).
+    pub p50_mini: f64,
+    /// p50 over whole-graph responses only (0 when there are none).
+    pub p50_full: f64,
     /// Sum of execution seconds across devices.
     pub device_busy: f64,
     pub makespan: f64,
@@ -83,6 +169,9 @@ pub struct FleetConfig {
     pub n_devices: usize,
     pub affinity: bool,
     pub coalesce: bool,
+    /// Micro-batch compatible mini-batch requests into one device
+    /// visit.
+    pub microbatch: bool,
     /// Serve with density-aware dynamic kernel re-mapping (execution
     /// time and re-map counts from [`crate::sim::simulate_dynamic`],
     /// which is never slower than the static mapping).
@@ -91,7 +180,13 @@ pub struct FleetConfig {
 
 impl Default for FleetConfig {
     fn default() -> FleetConfig {
-        FleetConfig { n_devices: 1, affinity: true, coalesce: true, dynamic: true }
+        FleetConfig {
+            n_devices: 1,
+            affinity: true,
+            coalesce: true,
+            microbatch: true,
+            dynamic: true,
+        }
     }
 }
 
@@ -105,15 +200,52 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// p50 of an unsorted latency class, 0 when the class is empty.
+fn class_p50(mut lats: Vec<f64>) -> f64 {
+    if lats.is_empty() {
+        return 0.0;
+    }
+    lats.sort_by(f64::total_cmp);
+    percentile(&lats, 0.50)
+}
+
+/// Fleet-wide modeled execution memo: (exec seconds, kernel re-maps)
+/// per program key, simulated on first use. One helper for both
+/// request classes so the memoization policy cannot drift between
+/// them. Borrows only the memo and hardware config, so callers can
+/// hold a device mutably at the same time.
+fn memo_exec<'a>(
+    memo: &'a mut HashMap<Key, (f64, u64)>,
+    hw: &'a HwConfig,
+    dynamic: bool,
+    key: Key,
+) -> impl FnMut(&Executable) -> f64 + 'a {
+    move |exe: &Executable| {
+        memo.entry(key)
+            .or_insert_with(|| {
+                let sim = if dynamic {
+                    simulate_dynamic(&exe.program, hw)
+                } else {
+                    simulate(&exe.program, hw)
+                };
+                (sim.loh_seconds(), sim.remaps)
+            })
+            .0
+    }
+}
+
 /// Multi-device coordinator.
 pub struct Coordinator {
     devices: Vec<Device>,
     dispatcher: Dispatcher,
     clock: VirtualClock,
-    /// Modeled (exec seconds, kernel re-maps) per (model, graph): every
+    /// Modeled (exec seconds, kernel re-maps) per program key: every
     /// device is the same overlay design, so execution is a fleet-wide
     /// property.
     exec_memo: HashMap<Key, (f64, u64)>,
+    /// Per-dataset ego-net extractors, built on first mini-batch use
+    /// (materialize + whole-graph CSR, amortized across requests).
+    samplers: HashMap<&'static str, Sampler>,
     hw: HwConfig,
     dynamic: bool,
     pub responses: Vec<Response>,
@@ -129,9 +261,14 @@ impl Coordinator {
         assert!(cfg.n_devices >= 1, "fleet needs at least one device");
         Coordinator {
             devices: (0..cfg.n_devices).map(|i| Device::new(i, hw.clone())).collect(),
-            dispatcher: Dispatcher { affinity: cfg.affinity, coalesce: cfg.coalesce },
+            dispatcher: Dispatcher {
+                affinity: cfg.affinity,
+                coalesce: cfg.coalesce,
+                microbatch: cfg.microbatch,
+            },
             clock: VirtualClock::new(),
             exec_memo: HashMap::new(),
+            samplers: HashMap::new(),
             hw,
             dynamic: cfg.dynamic,
             responses: Vec::new(),
@@ -152,7 +289,8 @@ impl Coordinator {
     }
 
     /// Fleet-wide cache hit rate over processed responses (coalesced
-    /// responses count as hits: they never touched a compiler).
+    /// and batched responses count as hits: they never touched a
+    /// compiler).
     pub fn hit_rate(&self) -> f64 {
         if self.responses.is_empty() {
             return 0.0;
@@ -162,9 +300,9 @@ impl Coordinator {
     }
 
     /// Process a workload: arrival events in deterministic order (time,
-    /// then tenant/model/graph for simultaneous arrivals), each routed
-    /// by the dispatcher, scheduled on a device timeline, and accounted
-    /// on the virtual clock.
+    /// then tenant/model/graph/target for simultaneous arrivals), each
+    /// routed by the dispatcher, scheduled on a device timeline, and
+    /// accounted on the virtual clock.
     pub fn run(&mut self, mut requests: Vec<Request>) -> ServeStats {
         requests.sort_by(|a, b| {
             a.arrival
@@ -172,70 +310,179 @@ impl Coordinator {
                 .then(a.tenant.cmp(&b.tenant))
                 .then(a.model.key().cmp(b.model.key()))
                 .then(a.dataset.key.cmp(b.dataset.key))
+                .then(a.target.cmp(&b.target))
         });
         for rq in requests {
             self.clock.advance_to(rq.arrival);
-            let key: Key = (rq.model, rq.dataset.key);
             for d in &mut self.devices {
                 d.retire_started(rq.arrival);
             }
-            let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
-            let resp = match route {
-                Route::Coalesce(dev, j) => {
-                    let remaps = self.exec_memo.get(&key).map_or(0, |e| e.1);
-                    let job = &mut self.devices[dev].jobs[j];
-                    job.riders += 1;
-                    Response {
-                        tenant: rq.tenant,
-                        model: rq.model,
-                        device: dev as u32,
-                        t_compile: 0.0,
-                        t_exec: job.t_exec,
-                        t_queue: (job.start - rq.arrival).max(0.0),
-                        latency: job.done - rq.arrival,
-                        cache_hit: true,
-                        coalesced: true,
-                        remaps,
-                    }
-                }
-                Route::Device(dev) => {
-                    let memo = &mut self.exec_memo;
-                    let hw = &self.hw;
-                    let dynamic = self.dynamic;
-                    let mut exec_seconds = |exe: &Executable| {
-                        memo.entry(key)
-                            .or_insert_with(|| {
-                                let sim = if dynamic {
-                                    simulate_dynamic(&exe.program, hw)
-                                } else {
-                                    simulate(&exe.program, hw)
-                                };
-                                (sim.loh_seconds(), sim.remaps)
-                            })
-                            .0
-                    };
-                    let device = &mut self.devices[dev];
-                    let (_exe, j) =
-                        device.admit(rq.arrival, rq.model, &rq.dataset, &mut exec_seconds);
-                    let job = device.jobs[j];
-                    Response {
-                        tenant: rq.tenant,
-                        model: rq.model,
-                        device: dev as u32,
-                        t_compile: job.ready - rq.arrival,
-                        t_exec: job.t_exec,
-                        t_queue: job.start - job.ready,
-                        latency: job.done - rq.arrival,
-                        cache_hit: job.cache_hit,
-                        coalesced: false,
-                        remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
-                    }
+            let resp = match &rq.target {
+                Target::FullGraph => self.serve_full(&rq),
+                Target::MiniBatch { targets, fanout, seed } => {
+                    self.serve_minibatch(&rq, targets, fanout, *seed)
                 }
             };
             self.clock.advance_to(rq.arrival + resp.latency);
             self.responses.push(resp);
         }
         self.stats()
+    }
+
+    fn serve_full(&mut self, rq: &Request) -> Response {
+        let key = Key::Whole(rq.model, rq.dataset.key);
+        let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
+        match route {
+            Route::Coalesce(dev, j) => {
+                let remaps = self.exec_memo.get(&key).map_or(0, |e| e.1);
+                let job = &mut self.devices[dev].jobs[j];
+                job.riders += 1;
+                Response {
+                    tenant: rq.tenant,
+                    model: rq.model,
+                    device: dev as u32,
+                    t_compile: 0.0,
+                    t_sample: 0.0,
+                    t_exec: job.t_exec,
+                    t_queue: (job.start - rq.arrival).max(0.0),
+                    latency: job.done - rq.arrival,
+                    cache_hit: true,
+                    coalesced: true,
+                    batched: false,
+                    minibatch: false,
+                    sampled_vertices: 0,
+                    sampled_edges: 0,
+                    remaps,
+                }
+            }
+            Route::Device(dev) => {
+                // Inner scope: the memoizing closure's &mut borrow of
+                // exec_memo must end before the memo is read below.
+                let job = {
+                    let mut exec_seconds =
+                        memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
+                    let device = &mut self.devices[dev];
+                    let (_exe, j) =
+                        device.admit(rq.arrival, rq.model, &rq.dataset, &mut exec_seconds);
+                    device.jobs[j]
+                };
+                Response {
+                    tenant: rq.tenant,
+                    model: rq.model,
+                    device: dev as u32,
+                    t_compile: job.ready - rq.arrival,
+                    t_sample: 0.0,
+                    t_exec: job.t_exec,
+                    t_queue: job.start - job.ready,
+                    latency: job.done - rq.arrival,
+                    cache_hit: job.cache_hit,
+                    coalesced: false,
+                    batched: false,
+                    minibatch: false,
+                    sampled_vertices: 0,
+                    sampled_edges: 0,
+                    remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
+                }
+            }
+            Route::Batch(..) => unreachable!("whole-graph requests never micro-batch"),
+        }
+    }
+
+    fn serve_minibatch(
+        &mut self,
+        rq: &Request,
+        targets: &[u32],
+        fanout: &[u32],
+        seed: u64,
+    ) -> Response {
+        let ego = {
+            // GCN-normalize like the functional paths (MiniBatchRunner,
+            // golden tests) do: the self-loop edges are part of every
+            // ego-net there, so modeled sample sizes and bucket shapes
+            // stay cross-checkable against a functional replay of the
+            // same trace.
+            let sampler = self
+                .samplers
+                .entry(rq.dataset.key)
+                .or_insert_with(|| Sampler::new(rq.dataset.materialize().gcn_normalized()));
+            sampler.sample(targets, fanout, seed)
+        };
+        let shape = BucketShape::for_graph(&ego.graph.meta);
+        let (sampled_v, sampled_e) = (ego.n() as u64, ego.m() as u64);
+        let t_sample = clock::sample_cost(sampled_v, sampled_e);
+        let key = Key::Bucket(rq.model, shape);
+        // A visit can only be ridden once the rider's ego-net exists:
+        // route against the post-sampling ready time, not the arrival.
+        let ready = rq.arrival + t_sample;
+        let route = self.dispatcher.route_minibatch(&self.devices, &key, ready);
+        match route {
+            Route::Batch(dev, j) => {
+                // The tail visit's bucket program is compiled (or
+                // compiling) on this device, so its exec time is
+                // already memoized.
+                let (t_item, remaps) = *self
+                    .exec_memo
+                    .get(&key)
+                    .expect("batched onto a visit whose exec time is memoized");
+                let device = &mut self.devices[dev];
+                device.extend_batch(j, t_item);
+                let job = device.jobs[j];
+                Response {
+                    tenant: rq.tenant,
+                    model: rq.model,
+                    device: dev as u32,
+                    t_compile: 0.0,
+                    t_sample,
+                    t_exec: t_item,
+                    t_queue: (job.start - ready).max(0.0),
+                    latency: job.done - rq.arrival,
+                    cache_hit: true,
+                    coalesced: false,
+                    batched: true,
+                    minibatch: true,
+                    sampled_vertices: sampled_v,
+                    sampled_edges: sampled_e,
+                    remaps,
+                }
+            }
+            Route::Device(dev) => {
+                // Inner scope: the memoizing closure's &mut borrow of
+                // exec_memo must end before the memo is read below.
+                let job = {
+                    let mut exec_seconds =
+                        memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
+                    let device = &mut self.devices[dev];
+                    let (_exe, j) = device.admit_minibatch(
+                        rq.arrival,
+                        rq.model,
+                        shape,
+                        t_sample,
+                        &mut exec_seconds,
+                    );
+                    device.jobs[j]
+                };
+                Response {
+                    tenant: rq.tenant,
+                    model: rq.model,
+                    device: dev as u32,
+                    t_compile: (job.ready - rq.arrival - t_sample).max(0.0),
+                    t_sample,
+                    t_exec: job.t_exec,
+                    t_queue: job.start - job.ready,
+                    latency: job.done - rq.arrival,
+                    cache_hit: job.cache_hit,
+                    coalesced: false,
+                    batched: false,
+                    minibatch: true,
+                    sampled_vertices: sampled_v,
+                    sampled_edges: sampled_e,
+                    remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
+                }
+            }
+            Route::Coalesce(..) => {
+                unreachable!("mini-batch requests micro-batch, never coalesce")
+            }
+        }
     }
 
     /// Execute real numerics for one compiled program on a specific
@@ -297,10 +544,26 @@ impl Coordinator {
             return ServeStats::default();
         }
         lats.sort_by(f64::total_cmp);
+        let class = |mini: bool| -> Vec<f64> {
+            self.responses
+                .iter()
+                .filter(|r| r.minibatch == mini)
+                .map(|r| r.latency)
+                .collect()
+        };
         ServeStats {
             completed: self.responses.len() as u64,
             cache_hits: self.responses.iter().filter(|r| r.cache_hit).count() as u64,
             coalesced: self.responses.iter().filter(|r| r.coalesced).count() as u64,
+            minibatched: self.responses.iter().filter(|r| r.minibatch).count() as u64,
+            batched: self.responses.iter().filter(|r| r.batched).count() as u64,
+            bucket_hits: self
+                .responses
+                .iter()
+                .filter(|r| r.minibatch && r.cache_hit)
+                .count() as u64,
+            sampled_vertices: self.responses.iter().map(|r| r.sampled_vertices).sum(),
+            sampled_edges: self.responses.iter().map(|r| r.sampled_edges).sum(),
             remaps: self
                 .responses
                 .iter()
@@ -310,6 +573,8 @@ impl Coordinator {
             p50: percentile(&lats, 0.50),
             p99: percentile(&lats, 0.99),
             mean: lats.iter().sum::<f64>() / lats.len() as f64,
+            p50_mini: class_p50(class(true)),
+            p50_full: class_p50(class(false)),
             device_busy: self.devices.iter().map(|d| d.busy).sum(),
             makespan: self.clock.now(),
         }
@@ -319,7 +584,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::dataset;
+    use crate::graph::{dataset, FULL_NEIGHBORHOOD};
     use crate::util::Rng;
 
     fn mixed_workload(n: usize, seed: u64) -> Vec<Request> {
@@ -328,11 +593,35 @@ mod tests {
         let models = [ZooModel::B1, ZooModel::B2, ZooModel::B7];
         let graphs = [dataset("CO").unwrap(), dataset("PU").unwrap()];
         (0..n)
-            .map(|i| Request {
-                tenant: rng.below(3) as u32,
-                model: models[rng.below(3) as usize],
-                dataset: graphs[rng.below(2) as usize],
-                arrival: i as f64 * 1e-4,
+            .map(|i| {
+                Request::full(
+                    rng.below(3) as u32,
+                    models[rng.below(3) as usize],
+                    graphs[rng.below(2) as usize],
+                    i as f64 * 1e-4,
+                )
+            })
+            .collect()
+    }
+
+    fn minibatch_workload(n: usize, seed: u64, spacing: f64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let models = [ZooModel::B1, ZooModel::B7];
+        let co = dataset("CO").unwrap();
+        (0..n)
+            .map(|i| {
+                let k = 1 + rng.below(3) as usize;
+                let targets: Vec<u32> =
+                    (0..k).map(|_| rng.below(co.n_vertices) as u32).collect();
+                Request::minibatch(
+                    rng.below(4) as u32,
+                    models[rng.below(2) as usize],
+                    co,
+                    targets,
+                    vec![8, 4],
+                    seed ^ i as u64,
+                    i as f64 * spacing,
+                )
             })
             .collect()
     }
@@ -347,6 +636,11 @@ mod tests {
         assert!(stats.cache_hits >= 54, "hits {}", stats.cache_hits);
         assert!(stats.p99 >= stats.p50);
         assert!(stats.device_busy <= stats.makespan + 1e-9);
+        // A whole-graph workload samples nothing.
+        assert_eq!(stats.minibatched, 0);
+        assert_eq!(stats.sampled_edges, 0);
+        assert_eq!(stats.p50_full, stats.p50);
+        assert_eq!(stats.p50_mini, 0.0);
     }
 
     #[test]
@@ -355,11 +649,13 @@ mod tests {
         // is a cache hit — the "no FPGA reconfiguration" property.
         let co = dataset("CO").unwrap();
         let reqs: Vec<Request> = (0..20)
-            .map(|i| Request {
-                tenant: 0,
-                model: if i % 2 == 0 { ZooModel::B1 } else { ZooModel::B6 },
-                dataset: co,
-                arrival: i as f64 * 1e-3,
+            .map(|i| {
+                Request::full(
+                    0,
+                    if i % 2 == 0 { ZooModel::B1 } else { ZooModel::B6 },
+                    co,
+                    i as f64 * 1e-3,
+                )
             })
             .collect();
         let mut c = Coordinator::new(HwConfig::alveo_u250());
@@ -374,12 +670,7 @@ mod tests {
         // later ones must queue.
         let pu = dataset("PU").unwrap();
         let reqs: Vec<Request> = (0..8)
-            .map(|i| Request {
-                tenant: i,
-                model: ZooModel::B2,
-                dataset: pu,
-                arrival: 0.0,
-            })
+            .map(|i| Request::full(i, ZooModel::B2, pu, 0.0))
             .collect();
         let cfg = FleetConfig { coalesce: false, ..FleetConfig::default() };
         let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
@@ -394,7 +685,7 @@ mod tests {
     fn identical_burst_coalesces_into_one_execution() {
         let pu = dataset("PU").unwrap();
         let reqs: Vec<Request> = (0..8)
-            .map(|i| Request { tenant: i, model: ZooModel::B2, dataset: pu, arrival: 0.0 })
+            .map(|i| Request::full(i, ZooModel::B2, pu, 0.0))
             .collect();
         let mut c = Coordinator::new(HwConfig::alveo_u250());
         let stats = c.run(reqs);
@@ -503,6 +794,79 @@ mod tests {
     }
 
     #[test]
+    fn minibatch_requests_sample_bucket_and_batch() {
+        // A mini-batch burst over one small dataset: two models, a few
+        // buckets, plenty of compatible visits to micro-batch.
+        let reqs = minibatch_workload(40, 3, 1e-5);
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(reqs);
+        assert_eq!(stats.completed, 40);
+        assert_eq!(stats.minibatched, 40);
+        assert!(stats.sampled_vertices > 0 && stats.sampled_edges > 0);
+        // Bucketing: far fewer compiled programs than requests.
+        let compiles: usize = c.devices().iter().map(|d| d.cache_len()).sum();
+        assert!(compiles <= 12, "{compiles} bucket programs for 40 requests");
+        assert_eq!(stats.bucket_hits, 40 - compiles as u64);
+        // The tight burst batches at least one visit.
+        assert!(stats.batched > 0, "no micro-batching under a tight burst");
+        assert_eq!(stats.p50_mini, stats.p50);
+        assert_eq!(stats.p50_full, 0.0);
+        // Every mini-batch latency includes its sampling stall.
+        assert!(c.responses.iter().all(|r| r.t_sample > 0.0));
+    }
+
+    #[test]
+    fn minibatch_replay_is_bit_identical() {
+        let run = || {
+            let cfg = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            let mut reqs = minibatch_workload(24, 9, 5e-5);
+            reqs.extend(mixed_workload(24, 9));
+            let stats = c.run(reqs);
+            (stats, c.responses)
+        };
+        let (s1, r1) = run();
+        let (s2, r2) = run();
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+        // Mixed workload: both latency classes are populated.
+        assert!(s1.p50_mini > 0.0 && s1.p50_full > 0.0);
+        assert_eq!(s1.minibatched, 24);
+    }
+
+    #[test]
+    fn microbatching_reduces_device_time_without_hurting_latency() {
+        let run = |microbatch: bool| {
+            let cfg = FleetConfig { microbatch, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            c.run(minibatch_workload(32, 5, 1e-6))
+        };
+        let on = run(true);
+        let off = run(false);
+        assert!(on.batched > 0);
+        assert_eq!(off.batched, 0);
+        // Riders share the fixed visit overhead: the fleet does
+        // strictly less device work for the same request stream.
+        assert!(
+            on.device_busy < off.device_busy,
+            "batched busy {} !< unbatched {}",
+            on.device_busy,
+            off.device_busy
+        );
+        // ...and never at the cost of latency: on a single device the
+        // batched schedule dominates (every visit starts no later), so
+        // the deterministic percentiles cannot regress.
+        assert!(
+            on.p50 <= off.p50 + 1e-12 && on.p99 <= off.p99 + 1e-12,
+            "batching hurt latency: p50 {} vs {}, p99 {} vs {}",
+            on.p50,
+            off.p50,
+            on.p99,
+            off.p99
+        );
+    }
+
+    #[test]
     fn functional_replay_uses_the_device_arena() {
         use crate::compiler::{compile, CompileOptions};
         use crate::exec::{golden_forward, WeightStore};
@@ -546,6 +910,32 @@ mod tests {
         assert!(warm_fresh <= 1, "warm replay allocated {warm_fresh} buffers");
         // The other device's arena is untouched (per-device pools).
         assert_eq!(c.devices()[1].arena.stats().fresh, 0);
+    }
+
+    #[test]
+    fn full_neighborhood_minibatch_of_everything_still_buckets() {
+        // Degenerate mini-batch: every vertex targeted, full fanout —
+        // the ego-net is the whole graph, and the request still routes
+        // through the bucket path deterministically.
+        let co = dataset("CO").unwrap();
+        let all: Vec<u32> = (0..co.n_vertices as u32).collect();
+        let rq = Request::minibatch(
+            0,
+            ZooModel::B1,
+            co,
+            all,
+            vec![FULL_NEIGHBORHOOD],
+            1,
+            0.0,
+        );
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(vec![rq]);
+        assert_eq!(stats.minibatched, 1);
+        assert_eq!(stats.sampled_vertices, co.n_vertices);
+        // The serving sampler works over the GCN-normalized graph, so
+        // every vertex's self-loop edge is part of the neighborhood.
+        assert_eq!(stats.sampled_edges, co.n_edges + co.n_vertices);
+        assert_eq!(stats.bucket_hits, 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use super::cache::{Key, ProgramCache};
 use super::clock;
-use crate::compiler::Executable;
+use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
 use crate::exec::{BufferArena, PackedWeightSet};
 use crate::graph::Dataset;
@@ -15,17 +15,27 @@ use std::sync::Arc;
 
 /// A scheduled unit of accelerator work (the virtual timeline does not
 /// distinguish in-flight from completed — `done` may be in the future).
+///
+/// For a mini-batch job the unit is one device *visit*: the creator's
+/// ego-net plus any micro-batched riders, sharing one
+/// [`clock::VISIT_OVERHEAD_S`]. `t_exec` is the visit total.
 #[derive(Clone, Copy, Debug)]
 pub struct Job {
     pub key: Key,
-    /// When the program is ready to start (arrival + any compile stall).
+    /// When the program is ready to start (arrival + any sampling and
+    /// compile stalls).
     pub ready: f64,
     pub start: f64,
     pub done: f64,
     pub t_exec: f64,
     pub cache_hit: bool,
-    /// Requests coalesced onto this job beyond the one that created it.
+    /// Requests coalesced onto this job beyond the one that created it
+    /// (identical whole-graph work: no extra device time).
     pub riders: u32,
+    /// Mini-batch items micro-batched onto this visit beyond the one
+    /// that created it (each adds its own execution time but shares the
+    /// visit overhead).
+    pub batched: u32,
 }
 
 pub struct Device {
@@ -106,12 +116,48 @@ impl Device {
         self.cache.binary_bytes()
     }
 
-    /// Admit one request at `arrival`: compile-or-reuse the program,
-    /// charge the virtual compile cost on a miss (or the residual stall
-    /// when the compile from an earlier miss is still in flight), then
-    /// queue behind in-flight work. `exec_seconds` supplies the modeled
-    /// execution time of an executable (memoized fleet-wide by the
-    /// coordinator). Returns the executable and the new job's index.
+    /// Schedule one ready-at-`ready` unit of work whose executable was
+    /// fetched with `hit`: queue behind in-flight work, advance the busy
+    /// timeline, record the job.
+    fn push_job(&mut self, key: Key, ready: f64, t_exec: f64, hit: bool) -> usize {
+        let start = ready.max(self.free_at);
+        let done = start + t_exec;
+        self.free_at = done;
+        self.busy += t_exec;
+        self.jobs.push(Job {
+            key,
+            ready,
+            start,
+            done,
+            t_exec,
+            cache_hit: hit,
+            riders: 0,
+            batched: 0,
+        });
+        self.jobs.len() - 1
+    }
+
+    /// Compile-or-reuse readiness for `key`: on a miss, the virtual
+    /// compile stall starts at `at`; a hit on a still-compiling entry
+    /// waits for it rather than recompiling.
+    fn ready_at(&mut self, key: Key, at: f64, exe: &Executable) -> f64 {
+        match self.warm_at.get(&key) {
+            Some(&warm) => at.max(warm),
+            None => {
+                let warm = at + clock::compile_cost(&exe.report);
+                self.warm_at.insert(key, warm);
+                warm
+            }
+        }
+    }
+
+    /// Admit one whole-graph request at `arrival`: compile-or-reuse the
+    /// program, charge the virtual compile cost on a miss (or the
+    /// residual stall when the compile from an earlier miss is still in
+    /// flight), then queue behind in-flight work. `exec_seconds`
+    /// supplies the modeled execution time of an executable (memoized
+    /// fleet-wide by the coordinator). Returns the executable and the
+    /// new job's index.
     pub fn admit(
         &mut self,
         arrival: f64,
@@ -119,23 +165,50 @@ impl Device {
         ds: &Dataset,
         exec_seconds: &mut dyn FnMut(&Executable) -> f64,
     ) -> (Arc<Executable>, usize) {
-        let key: Key = (model, ds.key);
+        let key = Key::Whole(model, ds.key);
         let (exe, hit) = self.cache.get(model, ds);
-        let ready = match self.warm_at.get(&key) {
-            Some(&warm) => arrival.max(warm),
-            None => {
-                let warm = arrival + clock::compile_cost(&exe.report);
-                self.warm_at.insert(key, warm);
-                warm
-            }
-        };
+        let ready = self.ready_at(key, arrival, &exe);
         let t_exec = exec_seconds(&exe);
-        let start = ready.max(self.free_at);
-        let done = start + t_exec;
-        self.free_at = done;
-        self.busy += t_exec;
-        self.jobs.push(Job { key, ready, start, done, t_exec, cache_hit: hit, riders: 0 });
-        (exe, self.jobs.len() - 1)
+        let j = self.push_job(key, ready, t_exec, hit);
+        (exe, j)
+    }
+
+    /// Admit one mini-batch request: the bucket program compiles (or
+    /// hits) like any other, but readiness additionally waits out the
+    /// host-side sampling stall, and the device visit carries a fixed
+    /// [`clock::VISIT_OVERHEAD_S`] on top of the item's execution time.
+    pub fn admit_minibatch(
+        &mut self,
+        arrival: f64,
+        model: ZooModel,
+        shape: BucketShape,
+        t_sample: f64,
+        exec_seconds: &mut dyn FnMut(&Executable) -> f64,
+    ) -> (Arc<Executable>, usize) {
+        let key = Key::Bucket(model, shape);
+        let (exe, hit) = self.cache.get_bucket(model, shape);
+        let ready = self.ready_at(key, arrival + t_sample, &exe);
+        let t_visit = clock::VISIT_OVERHEAD_S + exec_seconds(&exe);
+        let j = self.push_job(key, ready, t_visit, hit);
+        (exe, j)
+    }
+
+    /// Micro-batch one more compatible mini-batch item onto the tail
+    /// job `j`, which must not have started: the visit stretches by the
+    /// item's execution time, and the rider shares the already-paid
+    /// visit overhead and compile stall.
+    pub fn extend_batch(&mut self, j: usize, t_item: f64) {
+        debug_assert_eq!(j + 1, self.jobs.len(), "micro-batch extends only the tail job");
+        let job = &mut self.jobs[j];
+        debug_assert!(
+            matches!(job.key, Key::Bucket(..)),
+            "only mini-batch visits micro-batch"
+        );
+        job.t_exec += t_item;
+        job.done += t_item;
+        job.batched += 1;
+        self.free_at = self.free_at.max(job.done);
+        self.busy += t_item;
     }
 }
 
@@ -159,7 +232,7 @@ mod tests {
         assert!(second.cache_hit);
         assert_eq!(second.ready, 1.0);
         assert_eq!(dev.cache_len(), 1);
-        assert!(dev.is_warm(&(ZooModel::B1, "CO")));
+        assert!(dev.is_warm(&Key::Whole(ZooModel::B1, "CO")));
     }
 
     #[test]
@@ -188,5 +261,30 @@ mod tests {
         assert!(job.start >= 1.0, "second job must queue behind the first");
         assert_eq!(dev.busy, 2.0);
         assert_eq!(dev.free_at, job.done);
+    }
+
+    #[test]
+    fn minibatch_visit_pays_overhead_and_batches_share_it() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        let shape = BucketShape::of(200, 900, 64, 8);
+        let t_item = 1e-4;
+        let mut exec = |_: &Executable| t_item;
+        let (_, j) = dev.admit_minibatch(0.0, ZooModel::B1, shape, 1e-6, &mut exec);
+        let job = dev.jobs[j];
+        assert!(!job.cache_hit);
+        assert!(job.ready >= 1e-6, "readiness waits out the sampling stall");
+        assert!((job.t_exec - (clock::VISIT_OVERHEAD_S + t_item)).abs() < 1e-12);
+        // A rider extends the visit by its item time only.
+        let done0 = job.done;
+        dev.extend_batch(j, t_item);
+        let job = dev.jobs[j];
+        assert_eq!(job.batched, 1);
+        assert!((job.done - (done0 + t_item)).abs() < 1e-12);
+        assert_eq!(dev.free_at, job.done);
+        // Same bucket later: cache hit, no second compile.
+        let (_, j2) = dev.admit_minibatch(1.0, ZooModel::B1, shape, 1e-6, &mut exec);
+        assert!(dev.jobs[j2].cache_hit);
+        assert_eq!(dev.cache_len(), 1);
+        assert!(dev.is_warm(&Key::Bucket(ZooModel::B1, shape)));
     }
 }

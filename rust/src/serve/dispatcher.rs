@@ -1,7 +1,8 @@
 //! Routing policy for the serving fleet: cross-request coalescing of
-//! identical in-flight work, then cache-affinity device selection.
-//! Pure functions over device state — all tie-breaks are by device id,
-//! so routing is deterministic.
+//! identical in-flight work, cache-affinity device selection, and
+//! micro-batching of compatible mini-batch requests into one device
+//! visit. Pure functions over device state — all tie-breaks are by
+//! device id, so routing is deterministic.
 
 use super::cache::Key;
 use super::device::Device;
@@ -14,15 +15,22 @@ pub enum Route {
     /// Ride an identical not-yet-started job: (device id, job index).
     /// One execution serves many responses.
     Coalesce(usize, usize),
+    /// Micro-batch onto a compatible not-yet-started mini-batch visit:
+    /// (device id, job index). The rider adds its own execution time
+    /// but shares the visit overhead and compile stall.
+    Batch(usize, usize),
 }
 
 #[derive(Clone, Copy, Debug)]
 pub struct Dispatcher {
-    /// Prefer devices whose cache already holds the (model, graph)
-    /// program over the globally least-loaded device.
+    /// Prefer devices whose cache already holds the requested program
+    /// over the globally least-loaded device.
     pub affinity: bool,
     /// Merge requests identical to a job that has not started yet.
     pub coalesce: bool,
+    /// Micro-batch compatible mini-batch requests into one device
+    /// visit.
+    pub microbatch: bool,
 }
 
 impl Dispatcher {
@@ -61,6 +69,29 @@ impl Dispatcher {
         Route::Device(target)
     }
 
+    /// Mini-batch routing: the device choice is the same as a fresh
+    /// dispatch, but when that device's *tail* job is a pending visit
+    /// for the same bucket, the request rides it. `ready` is the
+    /// earliest time the rider's work exists (arrival + its sampling
+    /// stall): a visit that starts before `ready` would execute an
+    /// ego-net not yet sampled, so it cannot be ridden. Extending the
+    /// tail can never delay other jobs (nothing is queued behind it),
+    /// and the rider finishes no later than a fresh dispatch would —
+    /// `tail.done + t_item` vs `free_at + overhead + t_item` with
+    /// `tail.done == free_at` — while saving the visit overhead.
+    pub fn route_minibatch(&self, devices: &[Device], key: &Key, ready: f64) -> Route {
+        let target = self.dispatch_device(devices, key, ready);
+        if self.microbatch {
+            if let Some(j) = devices[target].jobs.len().checked_sub(1) {
+                let job = &devices[target].jobs[j];
+                if job.key == *key && job.start >= ready {
+                    return Route::Batch(target, j);
+                }
+            }
+        }
+        Route::Device(target)
+    }
+
     /// The device a fresh dispatch would go to: cache-warm first (when
     /// affinity is on), else least-loaded; ties to the lowest id.
     fn dispatch_device(&self, devices: &[Device], key: &Key, arrival: f64) -> usize {
@@ -88,9 +119,12 @@ impl Dispatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::BucketShape;
     use crate::config::HwConfig;
     use crate::graph::dataset;
     use crate::ir::ZooModel;
+
+    const ALL_ON: Dispatcher = Dispatcher { affinity: true, coalesce: true, microbatch: true };
 
     fn fleet(n: usize) -> Vec<Device> {
         (0..n).map(|i| Device::new(i, HwConfig::alveo_u250())).collect()
@@ -102,9 +136,8 @@ mod tests {
         devs[0].free_at = 5.0;
         devs[1].free_at = 1.0;
         devs[2].free_at = 3.0;
-        let d = Dispatcher { affinity: true, coalesce: true };
-        let key = (ZooModel::B1, "CO");
-        assert_eq!(d.route(&devs, &key, 0.0), Route::Device(1));
+        let key = Key::Whole(ZooModel::B1, "CO");
+        assert_eq!(ALL_ON.route(&devs, &key, 0.0), Route::Device(1));
     }
 
     #[test]
@@ -114,10 +147,10 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
         devs[1].admit(0.0, ZooModel::B1, &co, &mut exec);
         // Device 1 is warm but busier; affinity still picks it.
-        let key = (ZooModel::B1, "CO");
+        let key = Key::Whole(ZooModel::B1, "CO");
         let arrival = devs[1].free_at + 1.0; // after its job started
-        let on = Dispatcher { affinity: true, coalesce: false };
-        let off = Dispatcher { affinity: false, coalesce: false };
+        let on = Dispatcher { coalesce: false, ..ALL_ON };
+        let off = Dispatcher { affinity: false, coalesce: false, ..ALL_ON };
         assert_eq!(on.route(&devs, &key, arrival), Route::Device(1));
         // Without affinity the tie on (idle, idle) breaks to device 0.
         assert_eq!(off.route(&devs, &key, arrival), Route::Device(0));
@@ -130,15 +163,14 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
         let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec);
         let start = devs[0].jobs[j].start;
-        let d = Dispatcher { affinity: true, coalesce: true };
-        let key = (ZooModel::B1, "CO");
+        let key = Key::Whole(ZooModel::B1, "CO");
         // Before the job starts: ride it.
-        assert_eq!(d.route(&devs, &key, start * 0.5), Route::Coalesce(0, j));
+        assert_eq!(ALL_ON.route(&devs, &key, start * 0.5), Route::Coalesce(0, j));
         // After it started: a fresh dispatch (warm, device 0).
-        assert_eq!(d.route(&devs, &key, start + 1.0), Route::Device(0));
+        assert_eq!(ALL_ON.route(&devs, &key, start + 1.0), Route::Device(0));
         // Different key never coalesces.
-        let other = (ZooModel::B2, "CO");
-        assert!(matches!(d.route(&devs, &other, start * 0.5), Route::Device(_)));
+        let other = Key::Whole(ZooModel::B2, "CO");
+        assert!(matches!(ALL_ON.route(&devs, &other, start * 0.5), Route::Device(_)));
     }
 
     #[test]
@@ -151,13 +183,41 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1.0;
         devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // running by 0.5
         let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // queued
-        let key = (ZooModel::B1, "CO");
-        let off = Dispatcher { affinity: false, coalesce: true };
+        let key = Key::Whole(ZooModel::B1, "CO");
+        let off = Dispatcher { affinity: false, ..ALL_ON };
         assert_eq!(off.route(&devs, &key, 0.5), Route::Device(1));
         // With affinity the dispatch target is the warm (queued) device
         // itself, so riding the queued job ties on completion and wins
         // by not duplicating the execution.
-        let on = Dispatcher { affinity: true, coalesce: true };
-        assert_eq!(on.route(&devs, &key, 0.5), Route::Coalesce(0, j));
+        assert_eq!(ALL_ON.route(&devs, &key, 0.5), Route::Coalesce(0, j));
+    }
+
+    #[test]
+    fn minibatch_batches_onto_compatible_tail_visit() {
+        let mut devs = fleet(2);
+        let shape = BucketShape::of(100, 800, 64, 8);
+        let mut exec = |_: &crate::compiler::Executable| 1e-4;
+        let (_, j) = devs[0].admit_minibatch(0.0, ZooModel::B1, shape, 1e-6, &mut exec);
+        let start = devs[0].jobs[j].start;
+        let key = Key::Bucket(ZooModel::B1, shape);
+        // Unstarted compatible tail: batch onto it.
+        assert_eq!(
+            ALL_ON.route_minibatch(&devs, &key, start * 0.5),
+            Route::Batch(0, j)
+        );
+        // Micro-batching off: fresh dispatch to the warm device.
+        let off = Dispatcher { microbatch: false, ..ALL_ON };
+        assert_eq!(off.route_minibatch(&devs, &key, start * 0.5), Route::Device(0));
+        // A different bucket never batches.
+        let other = Key::Bucket(ZooModel::B1, BucketShape::of(5000, 800, 64, 8));
+        assert!(matches!(
+            ALL_ON.route_minibatch(&devs, &other, start * 0.5),
+            Route::Device(_)
+        ));
+        // After the visit started: fresh dispatch.
+        assert_eq!(
+            ALL_ON.route_minibatch(&devs, &key, start + 1.0),
+            Route::Device(0)
+        );
     }
 }

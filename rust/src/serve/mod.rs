@@ -14,10 +14,18 @@
 //! * [`device`] — one overlay: per-device cache, warmth ledger, busy
 //!   timeline,
 //! * [`dispatcher`] — routing policy: coalesce identical in-flight
-//!   requests, else prefer a cache-warm device (affinity), else the
+//!   requests, micro-batch compatible mini-batches into one device
+//!   visit, else prefer a cache-warm device (affinity), else the
 //!   least-loaded one,
 //! * [`coordinator`] — the event loop binding it together, plus latency
 //!   statistics (nearest-rank p50/p99).
+//!
+//! Two request classes share the fleet
+//! ([`Target`](coordinator::Target)): whole-graph inference, and
+//! mini-batch inference over sampled k-hop ego-networks
+//! ([`crate::graph::Sampler`]) executed through shape-bucketed programs
+//! ([`crate::compiler::BucketShape`]) so per-request cost tracks the
+//! sampled neighborhood, not the full graph.
 //!
 //! The fleet serves with density-aware dynamic kernel re-mapping by
 //! default ([`FleetConfig`](coordinator::FleetConfig)`::dynamic`):
@@ -31,8 +39,10 @@ pub mod coordinator;
 pub mod device;
 pub mod dispatcher;
 
-pub use cache::ProgramCache;
+pub use cache::{Key, ProgramCache};
 pub use clock::VirtualClock;
-pub use coordinator::{percentile, Coordinator, FleetConfig, Request, Response, ServeStats};
+pub use coordinator::{
+    percentile, Coordinator, FleetConfig, Request, Response, ServeStats, Target,
+};
 pub use device::Device;
 pub use dispatcher::{Dispatcher, Route};

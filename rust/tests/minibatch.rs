@@ -1,0 +1,281 @@
+//! Mini-batch path integration suite:
+//!
+//! * **sampler determinism** — the same (targets, fanout, seed) always
+//!   extracts the same ego-net, independent of sampler instance;
+//! * **bucket-padding equivalence** — executing an ego-net padded to
+//!   its power-of-two bucket is *bit-identical* on live rows to the
+//!   exact-shape execution (padding rows are zero and edge-free, so
+//!   they are inert through every layer type);
+//! * **golden equivalence** — full-neighborhood sampling to the
+//!   model's Aggregate depth reproduces the whole-graph golden outputs
+//!   on target rows, for every zoo model (the acceptance criterion);
+//! * **serve-level counters** — mixed mini-batch + whole-graph fleet
+//!   runs replay bit-identically and account sampling/bucket/batch
+//!   telemetry.
+
+use graphagile::compiler::bucket::{canonical_tiles, compile_bucket};
+use graphagile::compiler::{compile, BucketShape, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::engine::MiniBatchRunner;
+use graphagile::exec::{golden_forward, WeightStore};
+use graphagile::graph::{
+    full_fanout, rmat_edges, CooGraph, GraphMeta, Sampler, TileCounts,
+};
+use graphagile::ir::{LayerType, ZooModel, ALL_MODELS};
+
+const WEIGHT_SEED: u64 = 33;
+
+fn test_graph(n: u64, e: u64, f: u64, seed: u64) -> CooGraph {
+    rmat_edges(GraphMeta::new("t", n, e, f, 4), Default::default(), seed).gcn_normalized()
+}
+
+/// Hops a model needs for exact mini-batch inference: one per
+/// Aggregate layer (Vector-Inner layers read only endpoint features of
+/// sampled edges, which the same budget covers).
+fn hops_of(model: ZooModel, meta: &GraphMeta) -> usize {
+    model.build(meta.clone()).count(LayerType::Aggregate)
+}
+
+#[test]
+fn sampler_determinism_across_instances() {
+    // Two independently-built samplers over the same graph: identical
+    // draws. The per-vertex RNG is seeded by (seed, hop, vertex) alone,
+    // so nothing about instance history or traversal order leaks in.
+    let g = test_graph(400, 4000, 8, 3);
+    let s1 = Sampler::new(g.clone());
+    let s2 = Sampler::new(g);
+    for seed in [0u64, 7, 1 << 40] {
+        let a = s1.sample(&[1, 19, 200], &[5, 3], seed);
+        let b = s2.sample(&[1, 19, 200], &[5, 3], seed);
+        assert_eq!(a.origin, b.origin, "seed {seed}");
+        assert_eq!(a.graph.src, b.graph.src, "seed {seed}");
+        assert_eq!(a.graph.dst, b.graph.dst, "seed {seed}");
+        assert_eq!(a.graph.w, b.graph.w, "seed {seed}");
+        assert_eq!(a.n_targets, 3);
+    }
+}
+
+#[test]
+fn bucket_padding_is_bit_identical_on_live_rows() {
+    // The same ego-net executed at its exact shape and padded into its
+    // power-of-two bucket: every live row must match to the bit. Both
+    // runs share kernels and tile schedule structure; padded rows are
+    // zero-featured and edge-free, and per-row kernel arithmetic is
+    // row-independent, so not even float reassociation can differ.
+    let g = test_graph(300, 1800, 16, 9);
+    let x = g.random_features(5);
+    let meta = g.meta.clone();
+    let sampler = Sampler::new(g);
+    let hw = HwConfig::functional_tiles();
+    for model in [ZooModel::B1, ZooModel::B3, ZooModel::B6] {
+        let hops = hops_of(model, &meta);
+        let ego = sampler.sample(&[2, 57, 111, 250], &vec![6; hops], 17);
+        let exact_shape = BucketShape::exact(&ego.graph.meta);
+        let bucket_shape = BucketShape::for_graph(&ego.graph.meta);
+        assert!(bucket_shape.v >= exact_shape.v);
+        let mut runner = MiniBatchRunner::new(hw.clone(), WEIGHT_SEED);
+        let exact = runner.run_shaped(model, exact_shape, &ego, &x);
+        let padded = runner.run_shaped(model, bucket_shape, &ego, &x);
+        assert_eq!(
+            exact.targets_out, padded.targets_out,
+            "{}: padded execution diverged on live rows",
+            model.key()
+        );
+        // Distinct shapes means two compiled programs in the runner.
+        if exact_shape != bucket_shape {
+            assert_eq!(runner.buckets(), 2);
+        }
+    }
+}
+
+#[test]
+fn minibatch_matches_whole_graph_golden_on_subset_targets() {
+    // Full-neighborhood sampling of a target subset to the model's
+    // Aggregate depth: target rows match the whole-graph golden output
+    // to float tolerance (edge order inside a row differs between the
+    // sampled layout and the whole-graph CSR, so sums reassociate).
+    let g = test_graph(300, 1500, 32, 9);
+    let x = g.random_features(5);
+    let meta = g.meta.clone();
+    let hw = HwConfig::functional_tiles();
+    let tiles = TileCounts::from_coo(&g, hw.n1() as u64);
+    let sampler = Sampler::new(g);
+    let targets = [5u32, 17, 42, 299];
+    let classes = meta.n_classes as usize;
+    for model in ALL_MODELS {
+        let hops = hops_of(model, &meta);
+        let ego = sampler.sample(&targets, &full_fanout(hops), 1);
+        let mut runner = MiniBatchRunner::new(hw.clone(), WEIGHT_SEED);
+        let p = runner.run(model, &ego, &x);
+        // Golden reference over the optimized whole-graph IR — the same
+        // passes the bucket program went through, so layer ids (and the
+        // deterministic weights) line up.
+        let ir = model.build(meta.clone());
+        let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, WEIGHT_SEED);
+        let golden = golden_forward(&exe.ir, sampler.graph(), &store, &x);
+        let scale = golden.iter().fold(1f32, |m, v| m.max(v.abs()));
+        let mut err = 0f32;
+        for (i, &t) in targets.iter().enumerate() {
+            for c in 0..classes {
+                let a = p.targets_out[i * classes + c];
+                let b = golden[t as usize * classes + c];
+                err = err.max((a - b).abs());
+            }
+        }
+        assert!(
+            err <= 1e-3 * scale.max(1.0),
+            "{}: mini-batch vs golden max err {err} (scale {scale}, {} hops)",
+            model.key(),
+            hops
+        );
+    }
+}
+
+#[test]
+fn minibatch_of_all_vertices_reproduces_whole_graph_for_every_model() {
+    // The acceptance criterion: full-neighborhood sampling of ALL
+    // vertices reproduces whole-graph outputs on (all) target rows for
+    // every zoo model.
+    let g = test_graph(200, 1000, 16, 7);
+    let x = g.random_features(6);
+    let meta = g.meta.clone();
+    let hw = HwConfig::functional_tiles();
+    let tiles = TileCounts::from_coo(&g, hw.n1() as u64);
+    let sampler = Sampler::new(g);
+    let all: Vec<u32> = (0..meta.n_vertices as u32).collect();
+    for model in ALL_MODELS {
+        let hops = hops_of(model, &meta);
+        let ego = sampler.sample(&all, &full_fanout(hops), 2);
+        assert_eq!(ego.n(), meta.n_vertices as usize);
+        let mut runner = MiniBatchRunner::new(hw.clone(), WEIGHT_SEED);
+        let p = runner.run(model, &ego, &x);
+        let ir = model.build(meta.clone());
+        let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, WEIGHT_SEED);
+        let golden = golden_forward(&exe.ir, sampler.graph(), &store, &x);
+        assert_eq!(p.targets_out.len(), golden.len(), "{}", model.key());
+        let scale = golden.iter().fold(1f32, |m, v| m.max(v.abs()));
+        let err = golden
+            .iter()
+            .zip(&p.targets_out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            err <= 1e-3 * scale.max(1.0),
+            "{}: all-vertex mini-batch vs golden max err {err} (scale {scale})",
+            model.key()
+        );
+    }
+}
+
+#[test]
+fn fanout_capped_sampling_stays_close_on_high_coverage() {
+    // Not an exactness claim — a sanity bound: with fanouts near the
+    // graph's degree scale, sampled inference should track the full
+    // result within a loose relative error on most target entries.
+    // Guards against sign/indexing bugs that exactness tests on full
+    // neighborhoods cannot see.
+    let g = test_graph(300, 1500, 16, 13);
+    let x = g.random_features(8);
+    let meta = g.meta.clone();
+    let hw = HwConfig::functional_tiles();
+    let tiles = TileCounts::from_coo(&g, hw.n1() as u64);
+    let sampler = Sampler::new(g);
+    let targets = [99u32, 222, 250];
+    let model = ZooModel::B1;
+    let ir = model.build(meta.clone());
+    let exe = compile(&ir, &tiles, &hw, CompileOptions::default());
+    let store = WeightStore::deterministic(&exe.ir, WEIGHT_SEED);
+    let golden = golden_forward(&exe.ir, sampler.graph(), &store, &x);
+    let ego = sampler.sample(&targets, &[128, 64], 5);
+    let mut runner = MiniBatchRunner::new(hw, WEIGHT_SEED);
+    let p = runner.run(model, &ego, &x);
+    let classes = meta.n_classes as usize;
+    let scale = golden.iter().fold(1f32, |m, v| m.max(v.abs()));
+    for (i, &t) in targets.iter().enumerate() {
+        for c in 0..classes {
+            let a = p.targets_out[i * classes + c];
+            let b = golden[t as usize * classes + c];
+            assert!(
+                (a - b).abs() <= 0.5 * scale,
+                "capped sample wildly off at target {t} class {c}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn canonical_tiles_and_bucket_compile_line_up() {
+    let shape = BucketShape::of(900, 7000, 32, 4);
+    assert_eq!((shape.v, shape.e), (1024, 8192));
+    let hw = HwConfig::functional_tiles();
+    let tiles = canonical_tiles(shape, hw.n1() as u64);
+    assert_eq!(tiles.total_edges(), shape.e as u64);
+    let exe = compile_bucket(ZooModel::B2, shape, &hw);
+    // Bucket programs carry no GA02 section and a full task grid.
+    assert!(exe.program.thresholds.is_none());
+    assert_eq!(exe.cfg.n1, hw.n1() as u64);
+    assert!(exe.program.total_instrs() > 0);
+}
+
+#[test]
+fn serve_minibatch_mixed_fleet_replays_and_counts() {
+    use graphagile::serve::{Coordinator, FleetConfig, Request};
+
+    let co = graphagile::graph::dataset("CO").unwrap();
+    let build = || {
+        let mut reqs: Vec<Request> = (0..30)
+            .map(|i| {
+                Request::minibatch(
+                    i % 4,
+                    if i % 2 == 0 { ZooModel::B1 } else { ZooModel::B7 },
+                    co,
+                    vec![(i * 37) % 2708, (i * 91) % 2708],
+                    vec![10, 5],
+                    i as u64,
+                    // Spaced out so the mini class is not queue-bound:
+                    // its p50 then reflects per-request cost, which is
+                    // what the mini-vs-full comparison pins.
+                    i as f64 * 1e-3,
+                )
+            })
+            .collect();
+        reqs.extend(
+            (0..10).map(|i| Request::full(i, ZooModel::B2, co, i as f64 * 1e-4)),
+        );
+        reqs
+    };
+    let run = || {
+        let cfg = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        let stats = c.run(build());
+        (stats, c.responses)
+    };
+    let (s1, r1) = run();
+    let (s2, r2) = run();
+    assert_eq!(s1, s2, "mini-batch serving must replay bit-identically");
+    assert_eq!(r1, r2);
+    assert_eq!(s1.completed, 40);
+    assert_eq!(s1.minibatched, 30);
+    assert!(s1.sampled_vertices > 0 && s1.sampled_edges > 0);
+    assert!(s1.bucket_hits > 0, "bucketing produced no hits");
+    assert!(s1.p50_mini > 0.0 && s1.p50_full > 0.0);
+    // Mini-batch programs are small: their median latency sits below
+    // the whole-graph median on the same fleet.
+    assert!(
+        s1.p50_mini < s1.p50_full,
+        "mini p50 {} !< full p50 {}",
+        s1.p50_mini,
+        s1.p50_full
+    );
+    // Every mini-batch response accounts a sampling stall; whole-graph
+    // responses never do.
+    for r in &r1 {
+        if r.minibatch {
+            assert!(r.t_sample > 0.0 && r.sampled_vertices > 0);
+        } else {
+            assert!(r.t_sample == 0.0 && r.sampled_vertices == 0);
+        }
+    }
+}
