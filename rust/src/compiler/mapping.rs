@@ -117,8 +117,6 @@ struct AddrMap {
     /// feature_region[l] = base address of the tensor produced by layer
     /// index l-1 (region 0 is the graph input).
     feature_region: Vec<u64>,
-    #[allow(dead_code)]
-    region_stride: u64,
 }
 
 impl AddrMap {
@@ -146,7 +144,6 @@ impl AddrMap {
             shards: tiles.shards,
             weight_base,
             feature_region,
-            region_stride,
         }
     }
 

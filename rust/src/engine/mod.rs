@@ -31,6 +31,7 @@
 //! memory.
 
 pub mod minibatch;
+pub mod streaming;
 
 use crate::compiler::Executable;
 use crate::config::HwConfig;
@@ -44,6 +45,7 @@ use crate::util::timed;
 use anyhow::{bail, Result};
 
 pub use minibatch::{MiniBatchProfile, MiniBatchRunner};
+pub use streaming::StreamingSession;
 
 /// The functional payload: graph + weights + input features. Timing-only
 /// engines ignore it (and accept `None`).

@@ -1,0 +1,155 @@
+//! Functional inference over a streaming graph: the numerics-producing
+//! counterpart of the serving fleet's update path.
+//!
+//! A [`StreamingSession`] owns a [`DynamicGraph`] and a
+//! [`FunctionalEngine`]. Applying an [`UpdateBatch`] seals a new epoch
+//! through the incremental (dirty-subshard-only) repartition;
+//! [`StreamingSession::infer`] then compiles the requested model
+//! against that epoch's live tile counts (memoized per `(model,
+//! epoch)`), exports the incrementally maintained partition once per
+//! epoch, and runs real numerics through the warm functional engine.
+//!
+//! Because the exported partition is bit-identical to a from-scratch
+//! [`crate::graph::PartitionedGraph::build`] of the materialized epoch
+//! (the `stream` module's core invariant), the outputs are bit-identical
+//! to recompiling and re-partitioning everything from zero — which is
+//! exactly what `rust/tests/streaming.rs` pins across the model zoo.
+
+use crate::compiler::{compile, CompileOptions, Executable};
+use crate::config::HwConfig;
+use crate::engine::{EngineInput, ExecProfile, FunctionalEngine, InferenceEngine};
+use crate::exec::WeightStore;
+use crate::graph::{CooGraph, PartitionConfig, PartitionedGraph};
+use crate::ir::ZooModel;
+use crate::stream::{ApplyReport, DynamicGraph, UpdateBatch};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Apply-and-infer session over one streaming graph.
+pub struct StreamingSession {
+    hw: HwConfig,
+    weight_seed: u64,
+    pub dyng: DynamicGraph,
+    engine: FunctionalEngine,
+    /// Compiled executables per (model, epoch).
+    exes: HashMap<(ZooModel, u32), Executable>,
+    /// The current epoch's materialized graph + exported partition,
+    /// rebuilt lazily once per epoch.
+    snap: Option<(u32, CooGraph, PartitionedGraph)>,
+}
+
+impl StreamingSession {
+    /// Start a session at epoch 0 of `g`, partitioned for `hw`'s tile
+    /// shape. `weight_seed` feeds [`WeightStore::deterministic`] — the
+    /// same seed yields the same weights at every epoch (layer shapes
+    /// do not depend on graph size), so cross-epoch output drift is
+    /// purely the graph churn.
+    pub fn new(g: CooGraph, hw: HwConfig, weight_seed: u64) -> StreamingSession {
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        StreamingSession {
+            dyng: DynamicGraph::new(g, cfg),
+            hw,
+            weight_seed,
+            engine: FunctionalEngine::default(),
+            exes: HashMap::new(),
+            snap: None,
+        }
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.dyng.epoch()
+    }
+
+    /// Enable density-aware dynamic kernel re-mapping on the underlying
+    /// functional engine.
+    pub fn set_dynamic_remap(&mut self, enabled: bool) {
+        self.engine.set_dynamic_remap(enabled);
+    }
+
+    /// Apply one update batch (incremental repartition inside) and
+    /// invalidate the per-epoch snapshot. Executables of now-sealed
+    /// older epochs are unreachable (`infer` always compiles the
+    /// current epoch) and are dropped so a long stream does not grow
+    /// one dead program per (model, epoch).
+    pub fn apply(&mut self, batch: &UpdateBatch) -> ApplyReport {
+        self.snap = None;
+        let report = self.dyng.apply(batch);
+        self.exes.retain(|&(_, e), _| e >= report.epoch);
+        report
+    }
+
+    /// The current epoch's materialized graph (refreshing the snapshot
+    /// if an update sealed a newer epoch).
+    pub fn graph(&mut self) -> &CooGraph {
+        self.refresh();
+        &self.snap.as_ref().unwrap().1
+    }
+
+    fn refresh(&mut self) {
+        let e = self.dyng.epoch();
+        let stale = match &self.snap {
+            Some((se, _, _)) => *se != e,
+            None => true,
+        };
+        if stale {
+            let g = self.dyng.materialize(e);
+            let pg = self.dyng.export_partitioned();
+            self.snap = Some((e, g, pg));
+        }
+    }
+
+    /// Run `model` over the current epoch with input features `x`
+    /// (row-major, `n_vertices × feat_len` — the caller extends rows
+    /// when vertices are added). Compiles at most once per (model,
+    /// epoch).
+    pub fn infer(&mut self, model: ZooModel, x: &[f32]) -> Result<ExecProfile> {
+        self.refresh();
+        let key = (model, self.dyng.epoch());
+        let snap = &self.snap;
+        let hw = &self.hw;
+        let exe: &Executable = self.exes.entry(key).or_insert_with(|| {
+            let (_, g, pg) = snap.as_ref().expect("refreshed above");
+            let ir = model.build(g.meta.clone());
+            let tiles = pg.tile_counts();
+            compile(&ir, &tiles, hw, CompileOptions::default())
+        });
+        let (_, g, pg) = self.snap.as_ref().expect("refreshed above");
+        let store = WeightStore::deterministic(&exe.ir, self.weight_seed);
+        let input = EngineInput { graph: g, partitioned: pg, store: &store, x };
+        self.engine.run(exe, Some(&input))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::rmat_edges;
+    use crate::graph::GraphMeta;
+    use crate::stream::{ChurnGenerator, ChurnSpec};
+
+    #[test]
+    fn infer_apply_infer_tracks_the_churn() {
+        let meta = GraphMeta::new("t", 300, 1500, 16, 4);
+        let g = rmat_edges(meta, Default::default(), 9).gcn_normalized();
+        let hw = HwConfig::functional_tiles();
+        let mut s = StreamingSession::new(g, hw, 33);
+        let x = s.graph().random_features(5);
+        let p0 = s.infer(ZooModel::B1, &x).unwrap();
+        let p0_again = s.infer(ZooModel::B1, &x).unwrap();
+        assert_eq!(p0.output, p0_again.output, "same epoch, same outputs");
+        let mut gen = ChurnGenerator::new(Default::default(), 3);
+        let batch =
+            gen.next_batch(&s.dyng, ChurnSpec { inserts: 40, deletes: 10, new_vertices: 0 });
+        let r = s.apply(&batch);
+        assert_eq!(r.epoch, 1);
+        assert!(r.dirty_subshards > 0);
+        let p1 = s.infer(ZooModel::B1, &x).unwrap();
+        assert_ne!(p0.output, p1.output, "churn must change the numerics");
+        // The incremental epoch-1 output is bit-identical to a cold
+        // session rebuilt from the materialized epoch-1 graph.
+        let cold_g = s.dyng.materialize(1);
+        let mut cold = StreamingSession::new(cold_g, HwConfig::functional_tiles(), 33);
+        let p1_cold = cold.infer(ZooModel::B1, &x).unwrap();
+        assert_eq!(p1.output, p1_cold.output);
+    }
+}

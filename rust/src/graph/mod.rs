@@ -14,4 +14,4 @@ pub use coo::{CooGraph, GraphMeta};
 pub use datasets::{dataset, Dataset, ALL_DATASETS};
 pub use partition::{CsrSubshard, PartitionConfig, PartitionedGraph, TileCounts};
 pub use rmat::{rmat_edges, rmat_tile_counts, RmatParams};
-pub use sample::{full_fanout, EgoNet, Sampler, FULL_NEIGHBORHOOD};
+pub use sample::{full_fanout, sample_view, EgoNet, NeighborView, Sampler, FULL_NEIGHBORHOOD};

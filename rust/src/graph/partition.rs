@@ -180,7 +180,11 @@ impl CsrSubshard {
 /// subshard) with CSR-like offsets, exactly the DDR layout of Fig. 8 —
 /// plus a per-subshard destination-row CSR index ([`CsrSubshard`]) for
 /// the optimized aggregation kernels.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every array bit-exactly — it is what the
+/// streaming tests use to pin incremental dirty-subshard rebuilds
+/// against a from-scratch [`PartitionedGraph::build`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct PartitionedGraph {
     pub cfg: PartitionConfig,
     pub n_vertices: u64,

@@ -118,6 +118,122 @@ fn vertex_seed(seed: u64, hop: u32, v: u32) -> u64 {
     h.wrapping_mul(0x9E3779B97F4A7C15)
 }
 
+/// An in-neighborhood source the ego-net extractor can traverse: the
+/// static [`Sampler`] (whole-graph CSR) and the streaming
+/// [`crate::stream::DynamicGraph`] (base CSR + delta overlay merge)
+/// both implement it, so mini-batch sampling is one algorithm with one
+/// determinism contract regardless of whether the graph is frozen or
+/// churning.
+pub trait NeighborView {
+    /// Vertex count of the view (targets must be below it).
+    fn n_vertices(&self) -> u64;
+
+    /// Input feature length inherited by sampled ego-nets.
+    fn feat_len(&self) -> u64;
+
+    /// Class count inherited by sampled ego-nets.
+    fn n_classes(&self) -> u64;
+
+    /// Append `v`'s in-edges as `(src, weight)` pairs in the view's
+    /// canonical order. The order must be stable for a given view state
+    /// — it is what makes capped draws deterministic.
+    fn in_edges(&self, v: u32, out: &mut Vec<(u32, f32)>);
+}
+
+/// Extract the k-hop ego-network of `targets` from any
+/// [`NeighborView`] (`k = fanout.len()`). Hop `h` expands every vertex
+/// first discovered at depth `h`, keeping at most `fanout[h]` of its
+/// in-edges ([`FULL_NEIGHBORHOOD`] keeps all). Each vertex is expanded
+/// at most once — under full-neighborhood sampling the expansion is
+/// exhaustive, so repeat visits would only duplicate edges.
+///
+/// The capped draw picks *positions* within the row via a partial
+/// Fisher-Yates seeded by `(seed, hop, vertex)` and restores ascending
+/// position order, so the result depends only on the row contents and
+/// the seed — identical to what [`Sampler::sample`] always produced.
+pub fn sample_view(
+    view: &impl NeighborView,
+    targets: &[u32],
+    fanout: &[u32],
+    seed: u64,
+) -> EgoNet {
+    assert!(!targets.is_empty(), "mini-batch needs at least one target");
+    let n = view.n_vertices() as u32;
+    let mut local: HashMap<u32, u32> = HashMap::new();
+    let mut origin: Vec<u32> = Vec::new();
+    for &t in targets {
+        assert!(t < n, "target {t} out of range (|V| = {n})");
+        if let Entry::Vacant(e) = local.entry(t) {
+            e.insert(origin.len() as u32);
+            origin.push(t);
+        }
+    }
+    let n_targets = origin.len();
+    let mut src: Vec<u32> = Vec::new();
+    let mut dst: Vec<u32> = Vec::new();
+    let mut w: Vec<f32> = Vec::new();
+    let mut frontier: Vec<u32> = origin.clone();
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    let mut picks: Vec<usize> = Vec::new();
+    for (hop, &cap) in fanout.iter().enumerate() {
+        let mut next: Vec<u32> = Vec::new();
+        for &v in &frontier {
+            let v_local = local[&v];
+            row.clear();
+            view.in_edges(v, &mut row);
+            let deg = row.len();
+            picks.clear();
+            picks.extend(0..deg);
+            if (cap as usize) < deg {
+                // Deterministic partial Fisher-Yates: pick `cap`
+                // distinct positions, then restore ascending order so
+                // the ego-net's edge layout is stable.
+                let mut rng = Rng::new(vertex_seed(seed, hop as u32, v));
+                let k = cap as usize;
+                for i in 0..k {
+                    let j = i + rng.below((deg - i) as u64) as usize;
+                    picks.swap(i, j);
+                }
+                picks.truncate(k);
+                picks.sort_unstable();
+            }
+            for &p in &picks {
+                let (u, wt) = row[p];
+                let u_local = match local.entry(u) {
+                    Entry::Occupied(o) => *o.get(),
+                    Entry::Vacant(e) => {
+                        let id = origin.len() as u32;
+                        e.insert(id);
+                        origin.push(u);
+                        next.push(u);
+                        id
+                    }
+                };
+                src.push(u_local);
+                dst.push(v_local);
+                w.push(wt);
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    let meta = GraphMeta::new(
+        "ego",
+        origin.len() as u64,
+        src.len() as u64,
+        view.feat_len(),
+        view.n_classes(),
+    );
+    EgoNet {
+        graph: CooGraph::new(meta, src, dst, w),
+        origin,
+        n_targets,
+        seed,
+    }
+}
+
 /// Ego-network extractor over one parent graph: the whole-graph
 /// destination-row CSR is built once and shared by every sample.
 pub struct Sampler {
@@ -140,85 +256,29 @@ impl Sampler {
         &self.graph
     }
 
-    /// Extract the k-hop ego-network of `targets` (`k = fanout.len()`).
-    /// Hop `h` expands every vertex first discovered at depth `h`,
-    /// keeping at most `fanout[h]` of its in-edges
-    /// ([`FULL_NEIGHBORHOOD`] keeps all). Each vertex is expanded at
-    /// most once — under full-neighborhood sampling the expansion is
-    /// exhaustive, so repeat visits would only duplicate edges.
+    /// Extract the k-hop ego-network of `targets` (`k = fanout.len()`)
+    /// — [`sample_view`] over the whole-graph CSR.
     pub fn sample(&self, targets: &[u32], fanout: &[u32], seed: u64) -> EgoNet {
-        assert!(!targets.is_empty(), "mini-batch needs at least one target");
-        let n = self.graph.n() as u32;
-        let mut local: HashMap<u32, u32> = HashMap::new();
-        let mut origin: Vec<u32> = Vec::new();
-        for &t in targets {
-            assert!(t < n, "target {t} out of range (|V| = {n})");
-            if let Entry::Vacant(e) = local.entry(t) {
-                e.insert(origin.len() as u32);
-                origin.push(t);
-            }
-        }
-        let n_targets = origin.len();
-        let mut src: Vec<u32> = Vec::new();
-        let mut dst: Vec<u32> = Vec::new();
-        let mut w: Vec<f32> = Vec::new();
-        let mut frontier: Vec<u32> = origin.clone();
-        let mut slots: Vec<usize> = Vec::new();
-        for (hop, &cap) in fanout.iter().enumerate() {
-            let mut next: Vec<u32> = Vec::new();
-            for &v in &frontier {
-                let v_local = local[&v];
-                let row = self.csr.row(v as usize);
-                let deg = row.len();
-                slots.clear();
-                slots.extend(row);
-                if (cap as usize) < deg {
-                    // Deterministic partial Fisher-Yates: pick `cap`
-                    // distinct slots, then restore ascending slot order
-                    // so the ego-net's edge layout is stable.
-                    let mut rng = Rng::new(vertex_seed(seed, hop as u32, v));
-                    let k = cap as usize;
-                    for i in 0..k {
-                        let j = i + rng.below((deg - i) as u64) as usize;
-                        slots.swap(i, j);
-                    }
-                    slots.truncate(k);
-                    slots.sort_unstable();
-                }
-                for &slot in &slots {
-                    let u = self.csr.cols[slot];
-                    let u_local = match local.entry(u) {
-                        Entry::Occupied(o) => *o.get(),
-                        Entry::Vacant(e) => {
-                            let id = origin.len() as u32;
-                            e.insert(id);
-                            origin.push(u);
-                            next.push(u);
-                            id
-                        }
-                    };
-                    src.push(u_local);
-                    dst.push(v_local);
-                    w.push(self.graph.w[self.csr.perm[slot] as usize]);
-                }
-            }
-            frontier = next;
-            if frontier.is_empty() {
-                break;
-            }
-        }
-        let meta = GraphMeta::new(
-            "ego",
-            origin.len() as u64,
-            src.len() as u64,
-            self.graph.meta.feat_len,
-            self.graph.meta.n_classes,
-        );
-        EgoNet {
-            graph: CooGraph::new(meta, src, dst, w),
-            origin,
-            n_targets,
-            seed,
+        sample_view(self, targets, fanout, seed)
+    }
+}
+
+impl NeighborView for Sampler {
+    fn n_vertices(&self) -> u64 {
+        self.graph.meta.n_vertices
+    }
+
+    fn feat_len(&self) -> u64 {
+        self.graph.meta.feat_len
+    }
+
+    fn n_classes(&self) -> u64 {
+        self.graph.meta.n_classes
+    }
+
+    fn in_edges(&self, v: u32, out: &mut Vec<(u32, f32)>) {
+        for slot in self.csr.row(v as usize) {
+            out.push((self.csr.cols[slot], self.graph.w[self.csr.perm[slot] as usize]));
         }
     }
 }

@@ -45,9 +45,14 @@ pub fn serve_summary(stats: &ServeStats) -> String {
         "  completed         {} ({} mini-batch)\n",
         stats.completed, stats.minibatched
     ));
+    // Updates are host-side graph mutations, never cache lookups —
+    // the hit denominator is the inference count only (matching
+    // `Coordinator::hit_rate`).
     out.push_str(&format!(
         "  cache hits        {} / {} ({} coalesced)\n",
-        stats.cache_hits, stats.completed, stats.coalesced
+        stats.cache_hits,
+        stats.completed - stats.updates,
+        stats.coalesced
     ));
     if stats.minibatched > 0 {
         out.push_str(&format!(
@@ -58,6 +63,20 @@ pub fn serve_summary(stats: &ServeStats) -> String {
         out.push_str(&format!(
             "  sampled           {} vertices, {} edges\n",
             stats.sampled_vertices, stats.sampled_edges
+        ));
+    }
+    if stats.updates > 0 {
+        out.push_str(&format!(
+            "  updates           {} applied (epoch {}, {} compactions)\n",
+            stats.updates, stats.max_epoch, stats.compactions
+        ));
+        out.push_str(&format!(
+            "  dirty subshards   {} ({} edges rebuilt)\n",
+            stats.dirty_subshards, stats.rebuilt_edges
+        ));
+        out.push_str(&format!(
+            "  invalidated       {} whole-graph programs\n",
+            stats.invalidated
         ));
     }
     out.push_str(&format!("  kernel re-maps    {}\n", stats.remaps));
@@ -111,6 +130,12 @@ mod tests {
             sampled_vertices: 123,
             sampled_edges: 456,
             remaps: 42,
+            updates: 6,
+            max_epoch: 9,
+            dirty_subshards: 11,
+            rebuilt_edges: 789,
+            invalidated: 13,
+            compactions: 1,
             p50: 0.001,
             p99: 0.002,
             mean: 0.0015,
@@ -122,11 +147,16 @@ mod tests {
         let s = serve_summary(&stats);
         assert!(s.contains("3 coalesced"), "{s}");
         assert!(s.contains("re-maps    42"), "{s}");
-        assert!(s.contains("7 / 8"), "{s}");
+        // 6 of the 8 completed requests were updates: the hit-rate
+        // denominator is the 2 inference requests.
+        assert!(s.contains("7 / 2"), "{s}");
         assert!(s.contains("(5 mini-batch)"), "{s}");
         assert!(s.contains("4 / 5 mini-batch"), "{s}");
         assert!(s.contains("batched riders    2"), "{s}");
         assert!(s.contains("123 vertices, 456 edges"), "{s}");
+        assert!(s.contains("6 applied (epoch 9, 1 compactions)"), "{s}");
+        assert!(s.contains("11 (789 edges rebuilt)"), "{s}");
+        assert!(s.contains("invalidated       13 whole-graph"), "{s}");
         assert!(s.contains("1.000 ms / 2.000 ms"), "{s}");
         assert!(s.contains("0.500 ms / 3.000 ms"), "{s}");
         assert!(s.contains("0.500 s over 1.000 s"), "{s}");
@@ -146,5 +176,7 @@ mod tests {
         assert!(s.contains("(0 mini-batch)"), "{s}");
         assert!(!s.contains("bucket hits"), "{s}");
         assert!(!s.contains("p50 mini"), "{s}");
+        assert!(!s.contains("updates"), "{s}");
+        assert!(!s.contains("dirty subshards"), "{s}");
     }
 }

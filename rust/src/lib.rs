@@ -41,6 +41,12 @@
 //!   analytic feature-density estimator, and the threshold table the
 //!   compiler embeds in the `.ga` binary so engines can override
 //!   GEMM/SpDMM per Tiling Block at run time,
+//! * [`stream`] — streaming graph updates: a seeded R-MAT-skewed churn
+//!   generator, a delta-overlay [`stream::DynamicGraph`] with
+//!   epoch-versioned snapshots and compaction, and incremental
+//!   recompilation (dirty Fiber-Shard subshards only) so the serving
+//!   fleet ingests edge churn between inference requests instead of
+//!   assuming a frozen graph,
 //! * [`baselines`] — analytic models of the comparison systems in the
 //!   paper's evaluation (PyG/DGL on CPU/GPU, HyGCN, AWB-GCN, BoostGCN),
 //! * [`harness`] — regenerates every table and figure of Sec. 8.
@@ -61,6 +67,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod sparsity;
+pub mod stream;
 pub mod util;
 
 pub use config::HwConfig;

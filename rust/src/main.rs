@@ -8,6 +8,7 @@
 //! graphagile sweep --model b2 --dataset FL      (design-space explorer)
 //! graphagile serve --requests 256 --devices 4   (multi-tenant fleet demo)
 //! graphagile serve --minibatch --fanout 25,10   (ego-network serving path)
+//! graphagile serve --streaming --update-every 8 (edge-churn + epoch serving)
 //! graphagile info                               (hardware + zoo summary)
 //! ```
 
@@ -43,10 +44,11 @@ fn parse_args() -> Result<Args> {
             .strip_prefix("--")
             .ok_or_else(|| anyhow!("unexpected argument {a}"))?
             .to_string();
-        // Boolean flags take no value: the --no-* switches and
-        // --minibatch. Every other flag requires a value — a missing
-        // one stays a hard error rather than silently parsing as true.
-        if key.starts_with("no-") || key == "minibatch" {
+        // Boolean flags take no value: the --no-* switches, --minibatch
+        // and --streaming. Every other flag requires a value — a
+        // missing one stays a hard error rather than silently parsing
+        // as true.
+        if key.starts_with("no-") || key == "minibatch" || key == "streaming" {
             flags.insert(key, "true".into());
         } else {
             let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
@@ -239,26 +241,45 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 ///
 /// Flags: `--requests N` (default 64), `--devices N` (default 1),
 /// `--no-affinity`, `--no-coalesce`, `--no-dynamic` (static kernel
-/// mapping), `--datasets CO,PU`.
+/// mapping), `--datasets CO,PU`, `--visit-overhead SECONDS` (sweep the
+/// mini-batch visit overhead, default 4e-5).
 ///
 /// Mini-batch mode: `--minibatch` serves per-request ego-network
 /// inference instead of whole graphs — each request samples 1–4 target
 /// vertices with a `--fanout 25,10`-capped k-hop neighborhood and
 /// executes through the shape-bucketed program cache.
 /// `--no-batch` disables micro-batched dispatch.
+///
+/// Streaming mode: `--streaming` turns every `--update-every`-th
+/// request (default 16) into an R-MAT-skewed graph-update batch; the
+/// fleet applies it between inference requests, seals a new epoch,
+/// selectively invalidates stale whole-graph programs and keeps
+/// serving — the summary then shows the epoch/dirty-subshard/
+/// invalidation counters.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use graphagile::serve::{Coordinator, FleetConfig, Request};
+    use graphagile::serve::{Coordinator, CostModel, FleetConfig, Request};
     use graphagile::util::Rng;
     let n: usize = args.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let mut costs = CostModel::default();
+    if let Some(v) = args.get("visit-overhead") {
+        costs.visit_overhead_s = v.parse().map_err(|_| anyhow!("bad --visit-overhead {v}"))?;
+    }
     let cfg = FleetConfig {
         n_devices: args.get("devices").and_then(|s| s.parse().ok()).unwrap_or(1),
         affinity: args.get("no-affinity").is_none(),
         coalesce: args.get("no-coalesce").is_none(),
         microbatch: args.get("no-batch").is_none(),
         dynamic: args.get("no-dynamic").is_none(),
+        costs,
     };
     anyhow::ensure!(cfg.n_devices >= 1, "--devices must be >= 1");
     let minibatch = args.get("minibatch").is_some();
+    let streaming = args.get("streaming").is_some();
+    let update_every: usize = args
+        .get("update-every")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    anyhow::ensure!(update_every >= 2, "--update-every must be >= 2");
     let fanout: Vec<u32> = match args.get("fanout") {
         None => vec![25, 10],
         Some(list) => list
@@ -279,6 +300,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let model = ALL_MODELS[rng.below(8) as usize];
             let ds = small[rng.below(small.len() as u64) as usize];
             let arrival = i as f64 * 2e-4;
+            if streaming && i % update_every == update_every - 1 {
+                let inserts = (ds.n_edges / 100).clamp(16, 4096) as u32;
+                return Request::update(tenant, ds, inserts, inserts / 4, 0, i as u64, arrival);
+            }
             if minibatch {
                 let k = 1 + rng.below(4) as usize;
                 let targets = (0..k).map(|_| rng.below(ds.n_vertices) as u32).collect();

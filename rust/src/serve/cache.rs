@@ -3,16 +3,22 @@
 //! software compile instead of an hours-scale hardware regeneration.
 //!
 //! Two key classes share the cache:
-//! * [`Key::Whole`] — whole-graph inference of (model, dataset);
+//! * [`Key::Whole`] — whole-graph inference of (model, dataset,
+//!   *epoch*): streaming updates advance a dataset's epoch, so a
+//!   churned graph compiles fresh programs while sealed-epoch entries
+//!   stay consistent until selectively invalidated
+//!   ([`ProgramCache::invalidate_whole_before`]);
 //! * [`Key::Bucket`] — a shape-bucketed mini-batch program
 //!   ([`crate::compiler::BucketShape`]): thousands of distinct ego-nets
 //!   round up to a handful of buckets, so the mini-batch hit rate stays
-//!   near 100% under arbitrarily diverse request streams.
+//!   near 100% under arbitrarily diverse request streams. Bucket
+//!   programs are shape-only — no graph data is baked in — so they
+//!   deliberately carry **no** epoch and survive graph churn untouched.
 
 use crate::compiler::bucket::compile_bucket;
 use crate::compiler::{compile, BucketShape, CompileOptions, Executable};
 use crate::config::HwConfig;
-use crate::graph::{Dataset, TileCounts};
+use crate::graph::{Dataset, GraphMeta, TileCounts};
 use crate::ir::ZooModel;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -20,16 +26,18 @@ use std::sync::Arc;
 /// Cache key: which compiled program a request needs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Key {
-    /// Whole-graph inference: (model, dataset key).
-    Whole(ZooModel, &'static str),
-    /// Mini-batch inference: (model, shape bucket).
+    /// Whole-graph inference: (model, dataset key, graph epoch).
+    /// Epoch 0 is the frozen dataset; streaming updates bump it.
+    Whole(ZooModel, &'static str, u32),
+    /// Mini-batch inference: (model, shape bucket) — epoch-free by
+    /// construction.
     Bucket(ZooModel, BucketShape),
 }
 
 pub struct ProgramCache {
     hw: HwConfig,
     programs: HashMap<Key, Arc<Executable>>,
-    tiles: HashMap<&'static str, Arc<TileCounts>>,
+    tiles: HashMap<(&'static str, u32), Arc<TileCounts>>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -45,22 +53,47 @@ impl ProgramCache {
         }
     }
 
-    /// Get-or-compile the whole-graph program of (model, dataset).
-    /// Returns the executable and whether it was a hit.
+    /// Get-or-compile the whole-graph program of (model, dataset) at
+    /// epoch 0 (the frozen dataset). Returns the executable and whether
+    /// it was a hit.
     pub fn get(&mut self, model: ZooModel, ds: &Dataset) -> (Arc<Executable>, bool) {
-        let key = Key::Whole(model, ds.key);
+        self.get_at(model, ds, 0, None)
+    }
+
+    /// Get-or-compile the whole-graph program of (model, dataset,
+    /// epoch). For epoch 0 the dataset's own metadata and streamed tile
+    /// counts are used; a streamed epoch passes its `snapshot` — the
+    /// dynamic graph's current metadata (vertex/edge counts drift) and
+    /// *live* per-subshard edge counts, so the compile (and its GA02
+    /// density profile) tracks the churn.
+    pub fn get_at(
+        &mut self,
+        model: ZooModel,
+        ds: &Dataset,
+        epoch: u32,
+        snapshot: Option<(&GraphMeta, &Arc<TileCounts>)>,
+    ) -> (Arc<Executable>, bool) {
+        let key = Key::Whole(model, ds.key, epoch);
         if let Some(exe) = self.programs.get(&key) {
             self.hits += 1;
             return (exe.clone(), true);
         }
         self.misses += 1;
-        let n1 = self.hw.n1() as u64;
-        let tiles = self
-            .tiles
-            .entry(ds.key)
-            .or_insert_with(|| Arc::new(ds.tile_counts(n1)))
-            .clone();
-        let ir = model.build(ds.meta());
+        let (ir, tiles) = match snapshot {
+            // Snapshot tiles are owned by the coordinator's stream
+            // state (Arc-shared per epoch) — nothing to cache here.
+            Some((meta, tiles)) => (model.build(meta.clone()), tiles.clone()),
+            None => {
+                debug_assert_eq!(epoch, 0, "epoch > 0 requires a stream snapshot");
+                let n1 = self.hw.n1() as u64;
+                let tiles = self
+                    .tiles
+                    .entry((ds.key, 0))
+                    .or_insert_with(|| Arc::new(ds.tile_counts(n1)))
+                    .clone();
+                (model.build(ds.meta()), tiles)
+            }
+        };
         let exe = Arc::new(compile(&ir, &tiles, &self.hw, CompileOptions::default()));
         self.programs.insert(key, exe.clone());
         (exe, false)
@@ -84,6 +117,19 @@ impl ProgramCache {
     /// does not touch the hit/miss counters).
     pub fn contains(&self, key: &Key) -> bool {
         self.programs.contains_key(key)
+    }
+
+    /// Selective invalidation after a streaming update: drop every
+    /// whole-graph program (and cached tile counts) of `ds_key` with an
+    /// epoch below `epoch` — they can never be hit again. Bucket
+    /// programs are shape-only and deliberately survive. Returns the
+    /// number of programs dropped.
+    pub fn invalidate_whole_before(&mut self, ds_key: &str, epoch: u32) -> usize {
+        let before = self.programs.len();
+        self.programs
+            .retain(|k, _| !matches!(k, Key::Whole(_, d, e) if *d == ds_key && *e < epoch));
+        self.tiles.retain(|(d, e), _| !(*d == ds_key && *e < epoch));
+        before - self.programs.len()
     }
 
     pub fn len(&self) -> usize {
@@ -142,6 +188,45 @@ mod tests {
         assert!(!h1 && h2 && !h3);
         assert_eq!(cache.len(), 2);
         assert!(cache.contains(&Key::Bucket(ZooModel::B1, a)));
-        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO")));
+        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO", 0)));
+    }
+
+    #[test]
+    fn epoch_keys_and_selective_invalidation() {
+        let mut cache = ProgramCache::new(HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let pu = dataset("PU").unwrap();
+        cache.get(ZooModel::B1, &co);
+        cache.get(ZooModel::B1, &pu);
+        // An epoch-1 snapshot of CO compiles a distinct program.
+        let meta = GraphMeta::new(
+            "CO",
+            co.n_vertices + 4,
+            co.n_edges + co.n_vertices,
+            co.feat_len,
+            co.n_classes,
+        );
+        let n1 = HwConfig::alveo_u250().n1() as u64;
+        let tiles = std::sync::Arc::new(
+            crate::graph::TileCounts::from_coo(&co.materialize().gcn_normalized(), n1),
+        );
+        let (_, hit) = cache.get_at(ZooModel::B1, &co, 1, Some((&meta, &tiles)));
+        assert!(!hit);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 0)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 1)));
+        // Invalidating CO below epoch 1 drops only the stale CO entry.
+        let dropped = cache.invalidate_whole_before("CO", 1);
+        assert_eq!(dropped, 1);
+        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO", 0)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 1)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "PU", 0)));
+        // The epoch-1 entry now hits; bucket entries never invalidate.
+        let (_, hit) = cache.get_at(ZooModel::B1, &co, 1, Some((&meta, &tiles)));
+        assert!(hit);
+        let shape = BucketShape::of(100, 900, 64, 8);
+        cache.get_bucket(ZooModel::B1, shape);
+        cache.invalidate_whole_before("CO", 99);
+        assert!(cache.contains(&Key::Bucket(ZooModel::B1, shape)));
     }
 }

@@ -55,13 +55,79 @@ pub const SAMPLE_PER_EDGE_S: f64 = 5e-9;
 /// exactly the batching win the dispatcher chases.
 pub const VISIT_OVERHEAD_S: f64 = 4e-5;
 
-/// Deterministic modeled cost of extracting one ego-net. Linear in the
-/// sampled neighborhood — the whole point of the mini-batch path is
-/// that no per-request cost scales with the full graph.
+/// Modeled fixed setup of one streaming update batch (epoch bookkeeping,
+/// dirty-set init).
+pub const UPDATE_SETUP_S: f64 = 5e-6;
+/// Modeled cost per changed edge (overlay append / tombstone + tile
+/// scan).
+pub const UPDATE_PER_EDGE_S: f64 = 8e-9;
+/// Modeled cost per dirty subshard (bookkeeping + density re-profile).
+pub const UPDATE_PER_SUBSHARD_S: f64 = 1e-6;
+/// Modeled cost per edge re-sorted while rebuilding dirty subshards'
+/// CSRs (the incremental-recompilation term — a full rebuild would pay
+/// it for every edge of the graph).
+pub const UPDATE_PER_REBUILT_EDGE_S: f64 = 4e-9;
+
+/// The host-side cost coefficients of the serving fleet, promoted from
+/// hard-coded constants so
+/// [`FleetConfig`](super::coordinator::FleetConfig) carries them and
+/// benches can sweep them. The `Default` values are the original
+/// constants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    pub sample_setup_s: f64,
+    pub sample_per_vertex_s: f64,
+    pub sample_per_edge_s: f64,
+    /// Fixed per-device-visit dispatch overhead of a mini-batch job.
+    pub visit_overhead_s: f64,
+    pub update_setup_s: f64,
+    pub update_per_edge_s: f64,
+    pub update_per_subshard_s: f64,
+    pub update_per_rebuilt_edge_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel {
+            sample_setup_s: SAMPLE_SETUP_S,
+            sample_per_vertex_s: SAMPLE_PER_VERTEX_S,
+            sample_per_edge_s: SAMPLE_PER_EDGE_S,
+            visit_overhead_s: VISIT_OVERHEAD_S,
+            update_setup_s: UPDATE_SETUP_S,
+            update_per_edge_s: UPDATE_PER_EDGE_S,
+            update_per_subshard_s: UPDATE_PER_SUBSHARD_S,
+            update_per_rebuilt_edge_s: UPDATE_PER_REBUILT_EDGE_S,
+        }
+    }
+}
+
+impl CostModel {
+    /// Deterministic modeled cost of extracting one ego-net. Linear in
+    /// the sampled neighborhood — the whole point of the mini-batch
+    /// path is that no per-request cost scales with the full graph.
+    pub fn sample_cost(&self, vertices: u64, edges: u64) -> f64 {
+        self.sample_setup_s
+            + vertices as f64 * self.sample_per_vertex_s
+            + edges as f64 * self.sample_per_edge_s
+    }
+
+    /// Deterministic modeled cost of applying one streaming update
+    /// batch: linear in the changed edges, the dirty subshards, and the
+    /// edges re-sorted rebuilding them — never in the whole graph,
+    /// which is the incremental-recompilation win the streaming bench
+    /// pins against a full rebuild.
+    pub fn update_cost(&self, changed_edges: u64, dirty_subshards: u64, rebuilt_edges: u64) -> f64 {
+        self.update_setup_s
+            + changed_edges as f64 * self.update_per_edge_s
+            + dirty_subshards as f64 * self.update_per_subshard_s
+            + rebuilt_edges as f64 * self.update_per_rebuilt_edge_s
+    }
+}
+
+/// [`CostModel::sample_cost`] at the default coefficients (kept for
+/// callers outside the fleet).
 pub fn sample_cost(vertices: u64, edges: u64) -> f64 {
-    SAMPLE_SETUP_S
-        + vertices as f64 * SAMPLE_PER_VERTEX_S
-        + edges as f64 * SAMPLE_PER_EDGE_S
+    CostModel::default().sample_cost(vertices, edges)
 }
 
 #[cfg(test)]
@@ -99,5 +165,22 @@ mod tests {
         // A visit's fixed overhead dominates a tiny sample: batching
         // riders must be worth something.
         assert!(VISIT_OVERHEAD_S > tiny);
+    }
+
+    #[test]
+    fn cost_model_defaults_match_the_constants_and_sweep() {
+        let m = CostModel::default();
+        assert_eq!(m.sample_cost(8, 16), sample_cost(8, 16));
+        assert_eq!(m.visit_overhead_s, VISIT_OVERHEAD_S);
+        // Update cost scales in every term and never in graph size.
+        let base = m.update_cost(100, 10, 1000);
+        assert!(base > 0.0);
+        assert!(m.update_cost(200, 10, 1000) > base);
+        assert!(m.update_cost(100, 20, 1000) > base);
+        assert!(m.update_cost(100, 10, 2000) > base);
+        // Coefficients are sweepable (the satellite's point).
+        let swept = CostModel { visit_overhead_s: 1e-3, ..CostModel::default() };
+        assert!(swept.visit_overhead_s > m.visit_overhead_s);
+        assert_eq!(swept.sample_cost(8, 16), m.sample_cost(8, 16));
     }
 }

@@ -22,19 +22,21 @@
 //! compiled programs.
 
 use super::cache::Key;
-use super::clock::{self, VirtualClock};
+use super::clock::{CostModel, VirtualClock};
 use super::device::Device;
 use super::dispatcher::{Dispatcher, Route};
 use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
 use crate::engine::{EngineInput, ExecProfile};
 use crate::exec::{CountingBackend, FunctionalExecutor, RustBackend};
-use crate::graph::{Dataset, Sampler};
+use crate::graph::{Dataset, GraphMeta, PartitionConfig, Sampler, TileCounts};
 use crate::ir::ZooModel;
 use crate::sim::{simulate, simulate_dynamic};
+use crate::stream::{ChurnGenerator, ChurnSpec, DynamicGraph};
 use crate::util::timed;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// What a request asks to run over.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -50,11 +52,28 @@ pub enum Target {
         fanout: Vec<u32>,
         seed: u64,
     },
+    /// A streaming graph-update batch: `inserts` R-MAT-skewed edge
+    /// inserts, `deletes` live-edge delete attempts, and `grow` vertex
+    /// additions, synthesized deterministically in `seed` by
+    /// [`crate::stream::ChurnGenerator`] against the dataset's dynamic
+    /// graph. Applying it seals a new epoch: whole-graph programs of
+    /// older epochs are selectively invalidated, bucket programs
+    /// survive untouched, and later requests read the new epoch.
+    Update {
+        inserts: u32,
+        deletes: u32,
+        grow: u32,
+        seed: u64,
+    },
 }
 
 impl Target {
     pub fn is_minibatch(&self) -> bool {
         matches!(self, Target::MiniBatch { .. })
+    }
+
+    pub fn is_update(&self) -> bool {
+        matches!(self, Target::Update { .. })
     }
 }
 
@@ -93,6 +112,26 @@ impl Request {
             arrival,
         }
     }
+
+    /// A streaming graph-update request (`model` is irrelevant for
+    /// updates and fixed to a placeholder).
+    pub fn update(
+        tenant: u32,
+        dataset: Dataset,
+        inserts: u32,
+        deletes: u32,
+        grow: u32,
+        seed: u64,
+        arrival: f64,
+    ) -> Request {
+        Request {
+            tenant,
+            model: ZooModel::B1,
+            dataset,
+            target: Target::Update { inserts, deletes, grow, seed },
+            arrival,
+        }
+    }
 }
 
 /// Completion record.
@@ -128,6 +167,23 @@ pub struct Response {
     /// Density-driven kernel re-maps in the execution serving this
     /// request (riders report the re-maps of the job they rode).
     pub remaps: u64,
+    /// Whether this was a streaming update request (host-side: no
+    /// device work; `device` is a sentinel).
+    pub update: bool,
+    /// Graph epoch this response was served at (the epoch an update
+    /// sealed; 0 for never-streamed datasets).
+    pub epoch: u32,
+    /// Modeled host-side apply cost of an update (0 otherwise).
+    pub t_update: f64,
+    /// Dirty subshards the update rebuilt (0 otherwise).
+    pub dirty_subshards: u32,
+    /// Edges re-sorted rebuilding dirty subshards (0 otherwise).
+    pub rebuilt_edges: u64,
+    /// Stale whole-graph programs invalidated fleet-wide by this
+    /// update (0 otherwise).
+    pub invalidated: u32,
+    /// Whether this update triggered an overlay compaction.
+    pub compacted: bool,
 }
 
 /// Aggregate statistics. `PartialEq` so replay determinism is testable
@@ -151,6 +207,18 @@ pub struct ServeStats {
     /// Kernel re-maps summed over *executed* jobs (coalesced riders are
     /// excluded so one execution is not counted once per rider).
     pub remaps: u64,
+    /// Streaming update requests applied.
+    pub updates: u64,
+    /// Highest graph epoch reached by any streamed dataset.
+    pub max_epoch: u32,
+    /// Dirty subshards rebuilt across all updates.
+    pub dirty_subshards: u64,
+    /// Edges re-sorted rebuilding dirty subshards across all updates.
+    pub rebuilt_edges: u64,
+    /// Stale whole-graph programs invalidated across all updates.
+    pub invalidated: u64,
+    /// Overlay compactions triggered across all updates.
+    pub compactions: u64,
     pub p50: f64,
     pub p99: f64,
     pub mean: f64,
@@ -176,6 +244,10 @@ pub struct FleetConfig {
     /// time and re-map counts from [`crate::sim::simulate_dynamic`],
     /// which is never slower than the static mapping).
     pub dynamic: bool,
+    /// Host-side cost coefficients (sampling, visit overhead, update
+    /// apply) — promoted from hard-coded `clock` constants so benches
+    /// can sweep them; defaults are the original values.
+    pub costs: CostModel,
 }
 
 impl Default for FleetConfig {
@@ -186,6 +258,7 @@ impl Default for FleetConfig {
             coalesce: true,
             microbatch: true,
             dynamic: true,
+            costs: CostModel::default(),
         }
     }
 }
@@ -193,9 +266,13 @@ impl Default for FleetConfig {
 /// Nearest-rank percentile of an ascending-sorted slice: the smallest
 /// value with at least `ceil(p * n)` observations ≤ it.
 ///
-/// Panics on an empty slice (a percentile of nothing has no answer).
+/// An empty sample has no observations, so every percentile of it is
+/// reported as 0 (the serving stats' "no data" value) rather than
+/// panicking — update-only workloads produce empty latency classes.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let rank = (p * sorted.len() as f64).ceil() as usize;
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
@@ -234,6 +311,42 @@ fn memo_exec<'a>(
     }
 }
 
+/// Per-dataset streaming state: the dynamic graph plus a lazily
+/// refreshed snapshot of the current epoch's compile inputs.
+struct StreamState {
+    dyng: DynamicGraph,
+    /// `(epoch, metadata, live tile counts)` of the last snapshot;
+    /// refreshed when an update seals a newer epoch.
+    snap: Option<(u32, GraphMeta, Arc<TileCounts>)>,
+}
+
+impl StreamState {
+    /// Wrap the dataset's materialized, GCN-normalized graph — the
+    /// same base the static mini-batch sampler uses, so epoch-0
+    /// behavior is unchanged. Streaming therefore only works on
+    /// materializable (< 10M edge) datasets.
+    fn new(ds: &Dataset, hw: &HwConfig) -> StreamState {
+        let g = ds.materialize().gcn_normalized();
+        let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+        StreamState { dyng: DynamicGraph::new(g, cfg), snap: None }
+    }
+
+    /// The current epoch's compile snapshot (metadata + tile counts),
+    /// shared fleet-wide through `Arc`.
+    fn snapshot(&mut self) -> (u32, GraphMeta, Arc<TileCounts>) {
+        let e = self.dyng.epoch();
+        let stale = match &self.snap {
+            Some((se, _, _)) => *se != e,
+            None => true,
+        };
+        if stale {
+            self.snap = Some((e, self.dyng.meta().clone(), Arc::new(self.dyng.tile_counts())));
+        }
+        let (e, meta, tiles) = self.snap.as_ref().unwrap();
+        (*e, meta.clone(), tiles.clone())
+    }
+}
+
 /// Multi-device coordinator.
 pub struct Coordinator {
     devices: Vec<Device>,
@@ -246,8 +359,14 @@ pub struct Coordinator {
     /// Per-dataset ego-net extractors, built on first mini-batch use
     /// (materialize + whole-graph CSR, amortized across requests).
     samplers: HashMap<&'static str, Sampler>,
+    /// Per-dataset dynamic graphs, created by the first
+    /// [`Target::Update`] a dataset receives. Once a dataset streams,
+    /// its whole-graph compiles and mini-batch samples read the
+    /// dynamic graph's current epoch.
+    streams: HashMap<&'static str, StreamState>,
     hw: HwConfig,
     dynamic: bool,
+    costs: CostModel,
     pub responses: Vec<Response>,
 }
 
@@ -260,7 +379,13 @@ impl Coordinator {
     pub fn fleet(hw: HwConfig, cfg: FleetConfig) -> Coordinator {
         assert!(cfg.n_devices >= 1, "fleet needs at least one device");
         Coordinator {
-            devices: (0..cfg.n_devices).map(|i| Device::new(i, hw.clone())).collect(),
+            devices: (0..cfg.n_devices)
+                .map(|i| {
+                    let mut d = Device::new(i, hw.clone());
+                    d.costs = cfg.costs;
+                    d
+                })
+                .collect(),
             dispatcher: Dispatcher {
                 affinity: cfg.affinity,
                 coalesce: cfg.coalesce,
@@ -269,8 +394,10 @@ impl Coordinator {
             clock: VirtualClock::new(),
             exec_memo: HashMap::new(),
             samplers: HashMap::new(),
+            streams: HashMap::new(),
             hw,
             dynamic: cfg.dynamic,
+            costs: cfg.costs,
             responses: Vec::new(),
         }
     }
@@ -288,15 +415,22 @@ impl Coordinator {
         self.clock.now()
     }
 
-    /// Fleet-wide cache hit rate over processed responses (coalesced
-    /// and batched responses count as hits: they never touched a
-    /// compiler).
+    /// Fleet-wide cache hit rate over processed *inference* responses
+    /// (coalesced and batched responses count as hits: they never
+    /// touched a compiler; update requests are not inference and are
+    /// excluded).
     pub fn hit_rate(&self) -> f64 {
-        if self.responses.is_empty() {
+        let served = self.responses.iter().filter(|r| !r.update).count();
+        if served == 0 {
             return 0.0;
         }
-        self.responses.iter().filter(|r| r.cache_hit).count() as f64
-            / self.responses.len() as f64
+        self.responses.iter().filter(|r| !r.update && r.cache_hit).count() as f64
+            / served as f64
+    }
+
+    /// Current graph epoch of a dataset (0 until it receives updates).
+    pub fn epoch_of(&self, ds_key: &str) -> u32 {
+        self.streams.get(ds_key).map_or(0, |s| s.dyng.epoch())
     }
 
     /// Process a workload: arrival events in deterministic order (time,
@@ -322,6 +456,9 @@ impl Coordinator {
                 Target::MiniBatch { targets, fanout, seed } => {
                     self.serve_minibatch(&rq, targets, fanout, *seed)
                 }
+                Target::Update { inserts, deletes, grow, seed } => {
+                    self.serve_update(&rq, *inserts, *deletes, *grow, *seed)
+                }
             };
             self.clock.advance_to(rq.arrival + resp.latency);
             self.responses.push(resp);
@@ -329,8 +466,46 @@ impl Coordinator {
         self.stats()
     }
 
+    /// The inference-free baseline all non-update Response literals
+    /// start from.
+    fn base_response(rq: &Request, epoch: u32) -> Response {
+        Response {
+            tenant: rq.tenant,
+            model: rq.model,
+            device: 0,
+            t_compile: 0.0,
+            t_sample: 0.0,
+            t_exec: 0.0,
+            t_queue: 0.0,
+            latency: 0.0,
+            cache_hit: false,
+            coalesced: false,
+            batched: false,
+            minibatch: false,
+            sampled_vertices: 0,
+            sampled_edges: 0,
+            remaps: 0,
+            update: false,
+            epoch,
+            t_update: 0.0,
+            dirty_subshards: 0,
+            rebuilt_edges: 0,
+            invalidated: 0,
+            compacted: false,
+        }
+    }
+
     fn serve_full(&mut self, rq: &Request) -> Response {
-        let key = Key::Whole(rq.model, rq.dataset.key);
+        // A streamed dataset serves its current epoch: the key is
+        // epoch-versioned and cache misses compile against the dynamic
+        // graph's live snapshot. Note the snapshot's base is the
+        // GCN-normalized graph (matching the mini-batch sampler), so
+        // the epoch-0 -> 1 boundary includes a one-time +|V| self-loop
+        // step in the modeled edge count on top of the churn
+        // (DESIGN.md Sec. 3e).
+        let snapshot = self.streams.get_mut(rq.dataset.key).map(|st| st.snapshot());
+        let epoch = snapshot.as_ref().map_or(0, |s| s.0);
+        let key = Key::Whole(rq.model, rq.dataset.key, epoch);
         let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
         match route {
             Route::Coalesce(dev, j) => {
@@ -338,21 +513,14 @@ impl Coordinator {
                 let job = &mut self.devices[dev].jobs[j];
                 job.riders += 1;
                 Response {
-                    tenant: rq.tenant,
-                    model: rq.model,
                     device: dev as u32,
-                    t_compile: 0.0,
-                    t_sample: 0.0,
                     t_exec: job.t_exec,
                     t_queue: (job.start - rq.arrival).max(0.0),
                     latency: job.done - rq.arrival,
                     cache_hit: true,
                     coalesced: true,
-                    batched: false,
-                    minibatch: false,
-                    sampled_vertices: 0,
-                    sampled_edges: 0,
                     remaps,
+                    ..Self::base_response(rq, epoch)
                 }
             }
             Route::Device(dev) => {
@@ -362,26 +530,26 @@ impl Coordinator {
                     let mut exec_seconds =
                         memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
                     let device = &mut self.devices[dev];
-                    let (_exe, j) =
-                        device.admit(rq.arrival, rq.model, &rq.dataset, &mut exec_seconds);
+                    let snap_ref = snapshot.as_ref().map(|(_, m, t)| (m, t));
+                    let (_exe, j) = device.admit_at(
+                        rq.arrival,
+                        rq.model,
+                        &rq.dataset,
+                        epoch,
+                        snap_ref,
+                        &mut exec_seconds,
+                    );
                     device.jobs[j]
                 };
                 Response {
-                    tenant: rq.tenant,
-                    model: rq.model,
                     device: dev as u32,
                     t_compile: job.ready - rq.arrival,
-                    t_sample: 0.0,
                     t_exec: job.t_exec,
                     t_queue: job.start - job.ready,
                     latency: job.done - rq.arrival,
                     cache_hit: job.cache_hit,
-                    coalesced: false,
-                    batched: false,
-                    minibatch: false,
-                    sampled_vertices: 0,
-                    sampled_edges: 0,
                     remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
+                    ..Self::base_response(rq, epoch)
                 }
             }
             Route::Batch(..) => unreachable!("whole-graph requests never micro-batch"),
@@ -395,21 +563,25 @@ impl Coordinator {
         fanout: &[u32],
         seed: u64,
     ) -> Response {
-        let ego = {
-            // GCN-normalize like the functional paths (MiniBatchRunner,
-            // golden tests) do: the self-loop edges are part of every
-            // ego-net there, so modeled sample sizes and bucket shapes
-            // stay cross-checkable against a functional replay of the
-            // same trace.
+        // A streamed dataset samples through the dynamic graph's
+        // CSR + overlay merge at the current epoch; otherwise the
+        // static per-dataset sampler. Both are GCN-normalized at the
+        // base like the functional paths (MiniBatchRunner, golden
+        // tests), so modeled sample sizes and bucket shapes stay
+        // cross-checkable against a functional replay of the same
+        // trace — and at epoch 0 the two paths sample identically.
+        let (ego, epoch) = if let Some(st) = self.streams.get(rq.dataset.key) {
+            (st.dyng.sample(targets, fanout, seed), st.dyng.epoch())
+        } else {
             let sampler = self
                 .samplers
                 .entry(rq.dataset.key)
                 .or_insert_with(|| Sampler::new(rq.dataset.materialize().gcn_normalized()));
-            sampler.sample(targets, fanout, seed)
+            (sampler.sample(targets, fanout, seed), 0)
         };
         let shape = BucketShape::for_graph(&ego.graph.meta);
         let (sampled_v, sampled_e) = (ego.n() as u64, ego.m() as u64);
-        let t_sample = clock::sample_cost(sampled_v, sampled_e);
+        let t_sample = self.costs.sample_cost(sampled_v, sampled_e);
         let key = Key::Bucket(rq.model, shape);
         // A visit can only be ridden once the rider's ego-net exists:
         // route against the post-sampling ready time, not the arrival.
@@ -428,21 +600,18 @@ impl Coordinator {
                 device.extend_batch(j, t_item);
                 let job = device.jobs[j];
                 Response {
-                    tenant: rq.tenant,
-                    model: rq.model,
                     device: dev as u32,
-                    t_compile: 0.0,
                     t_sample,
                     t_exec: t_item,
                     t_queue: (job.start - ready).max(0.0),
                     latency: job.done - rq.arrival,
                     cache_hit: true,
-                    coalesced: false,
                     batched: true,
                     minibatch: true,
                     sampled_vertices: sampled_v,
                     sampled_edges: sampled_e,
                     remaps,
+                    ..Self::base_response(rq, epoch)
                 }
             }
             Route::Device(dev) => {
@@ -462,8 +631,6 @@ impl Coordinator {
                     device.jobs[j]
                 };
                 Response {
-                    tenant: rq.tenant,
-                    model: rq.model,
                     device: dev as u32,
                     t_compile: (job.ready - rq.arrival - t_sample).max(0.0),
                     t_sample,
@@ -471,17 +638,73 @@ impl Coordinator {
                     t_queue: job.start - job.ready,
                     latency: job.done - rq.arrival,
                     cache_hit: job.cache_hit,
-                    coalesced: false,
-                    batched: false,
                     minibatch: true,
                     sampled_vertices: sampled_v,
                     sampled_edges: sampled_e,
                     remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
+                    ..Self::base_response(rq, epoch)
                 }
             }
             Route::Coalesce(..) => {
                 unreachable!("mini-batch requests micro-batch, never coalesce")
             }
+        }
+    }
+
+    /// Apply one streaming update batch: synthesize the churn
+    /// deterministically from the request descriptor, apply it to the
+    /// dataset's dynamic graph (creating the stream on first use),
+    /// charge the modeled apply cost on the virtual clock, and
+    /// selectively invalidate stale whole-graph programs fleet-wide.
+    /// Bucket programs are shape-only and survive untouched.
+    fn serve_update(
+        &mut self,
+        rq: &Request,
+        inserts: u32,
+        deletes: u32,
+        grow: u32,
+        seed: u64,
+    ) -> Response {
+        // The dynamic graph supersedes the static sampler for this
+        // dataset (serve_minibatch consults `streams` first) — drop the
+        // sampler so two copies of the graph + CSR don't stay resident.
+        self.samplers.remove(rq.dataset.key);
+        let hw = &self.hw;
+        let st = self
+            .streams
+            .entry(rq.dataset.key)
+            .or_insert_with(|| StreamState::new(&rq.dataset, hw));
+        let spec = ChurnSpec { inserts, deletes, new_vertices: grow };
+        let batch = ChurnGenerator::new(rq.dataset.params(), seed).next_batch(&st.dyng, spec);
+        let changed = batch.changes() as u64;
+        let report = st.dyng.apply(&batch);
+        st.snap = None;
+        let t_update = self.costs.update_cost(
+            changed,
+            report.dirty_subshards as u64,
+            report.rebuilt_edges,
+        );
+        let mut invalidated = 0usize;
+        for d in &mut self.devices {
+            invalidated += d.invalidate_dataset(rq.dataset.key, report.epoch);
+        }
+        // The modeled-exec memo holds the same now-unreachable keys the
+        // device caches just dropped — prune it too, or a long stream
+        // grows one dead entry per (model, stale epoch).
+        self.exec_memo.retain(
+            |k, _| !matches!(k, Key::Whole(_, d, e) if *d == rq.dataset.key && *e < report.epoch),
+        );
+        Response {
+            // Updates are host-side: no device executes them.
+            device: u32::MAX,
+            latency: t_update,
+            update: true,
+            t_update,
+            dirty_subshards: report.dirty_subshards,
+            rebuilt_edges: report.rebuilt_edges,
+            invalidated: invalidated as u32,
+            compacted: report.compacted,
+            ..Self::base_response(rq, report.epoch)
         }
     }
 
@@ -539,17 +762,29 @@ impl Coordinator {
     }
 
     pub fn stats(&self) -> ServeStats {
-        let mut lats: Vec<f64> = self.responses.iter().map(|r| r.latency).collect();
-        if lats.is_empty() {
+        if self.responses.is_empty() {
             return ServeStats::default();
         }
+        // Latency statistics cover inference responses only: an
+        // update's modeled apply cost is not a serving latency.
+        let mut lats: Vec<f64> = self
+            .responses
+            .iter()
+            .filter(|r| !r.update)
+            .map(|r| r.latency)
+            .collect();
         lats.sort_by(f64::total_cmp);
         let class = |mini: bool| -> Vec<f64> {
             self.responses
                 .iter()
-                .filter(|r| r.minibatch == mini)
+                .filter(|r| !r.update && r.minibatch == mini)
                 .map(|r| r.latency)
                 .collect()
+        };
+        let mean = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<f64>() / lats.len() as f64
         };
         ServeStats {
             completed: self.responses.len() as u64,
@@ -570,9 +805,15 @@ impl Coordinator {
                 .filter(|r| !r.coalesced)
                 .map(|r| r.remaps)
                 .sum(),
+            updates: self.responses.iter().filter(|r| r.update).count() as u64,
+            max_epoch: self.responses.iter().map(|r| r.epoch).max().unwrap_or(0),
+            dirty_subshards: self.responses.iter().map(|r| r.dirty_subshards as u64).sum(),
+            rebuilt_edges: self.responses.iter().map(|r| r.rebuilt_edges).sum(),
+            invalidated: self.responses.iter().map(|r| r.invalidated as u64).sum(),
+            compactions: self.responses.iter().filter(|r| r.compacted).count() as u64,
             p50: percentile(&lats, 0.50),
             p99: percentile(&lats, 0.99),
-            mean: lats.iter().sum::<f64>() / lats.len() as f64,
+            mean,
             p50_mini: class_p50(class(true)),
             p50_full: class_p50(class(false)),
             device_busy: self.devices.iter().map(|d| d.busy).sum(),
@@ -767,6 +1008,11 @@ mod tests {
         // The old truncating formula pinned p99 of 5 samples to index
         // (5-1)*0.99 = 3 (40.0) — the tail sample was unreachable.
         assert_eq!(percentile(&small, 0.25), 20.0);
+        // The empty-sample edge case: every percentile of no data is
+        // the stats' 0 "no data" value, never a panic (update-only
+        // workloads have empty latency classes).
+        assert_eq!(percentile(&[], 0.50), 0.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
     }
 
     #[test]
@@ -944,5 +1190,106 @@ mod tests {
         let stats = c.run(vec![]);
         assert_eq!(stats.completed, 0);
         assert_eq!(stats, ServeStats::default());
+    }
+
+    #[test]
+    fn updates_interleave_and_invalidate_selectively() {
+        let co = dataset("CO").unwrap();
+        let mut reqs: Vec<Request> = (0..10)
+            .map(|i| Request::full(0, ZooModel::B1, co, i as f64 * 1e-3))
+            .collect();
+        // One churn batch lands mid-trace: requests before it serve
+        // epoch 0, requests after it recompile against epoch 1.
+        reqs.push(Request::update(0, co, 64, 8, 0, 1, 5.5e-3));
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(reqs);
+        assert_eq!(stats.completed, 11);
+        assert_eq!(stats.updates, 1);
+        assert_eq!(stats.max_epoch, 1);
+        assert_eq!(c.epoch_of("CO"), 1);
+        assert!(stats.dirty_subshards >= 1);
+        assert!(stats.rebuilt_edges > 0);
+        // Exactly two compiles (epoch 0 once, epoch 1 once); the stale
+        // epoch-0 program was selectively invalidated at the update.
+        assert_eq!(stats.cache_hits, 8);
+        assert_eq!(stats.invalidated, 1);
+        let resident: usize = c.devices().iter().map(|d| d.cache_len()).sum();
+        assert_eq!(resident, 1, "only the epoch-1 program stays resident");
+        // Epochs stamp the responses in arrival order.
+        let epochs: Vec<u32> = c.responses.iter().filter(|r| !r.update).map(|r| r.epoch).collect();
+        assert_eq!(&epochs[..6], &[0; 6]);
+        assert_eq!(&epochs[6..], &[1; 4]);
+        // Update latency is the modeled apply cost, and update
+        // responses stay out of the inference latency classes.
+        let upd = c.responses.iter().find(|r| r.update).unwrap();
+        assert!(upd.t_update > 0.0 && upd.latency == upd.t_update);
+        assert!(stats.p50_full > 0.0);
+        assert_eq!(stats.p50_mini, 0.0);
+    }
+
+    #[test]
+    fn streaming_replays_and_bucket_cache_survives_epochs() {
+        let co = dataset("CO").unwrap();
+        let build = || {
+            let mut reqs: Vec<Request> = (0..30)
+                .map(|i| {
+                    Request::minibatch(
+                        i % 3,
+                        ZooModel::B1,
+                        co,
+                        vec![(i * 53) % 2708],
+                        vec![6, 3],
+                        i as u64,
+                        i as f64 * 1e-3,
+                    )
+                })
+                .collect();
+            reqs.push(Request::update(0, co, 40, 10, 0, 7, 0.0101));
+            reqs.push(Request::update(0, co, 40, 10, 2, 8, 0.0202));
+            reqs
+        };
+        let run = |reqs: Vec<Request>| {
+            let mut c = Coordinator::new(HwConfig::alveo_u250());
+            let stats = c.run(reqs);
+            (stats, c.responses)
+        };
+        let (s1, r1) = run(build());
+        let (s2, r2) = run(build());
+        assert_eq!(s1, s2, "update-interleaved serving must replay bit-identically");
+        assert_eq!(r1, r2);
+        assert_eq!(s1.updates, 2);
+        assert_eq!(s1.max_epoch, 2);
+        assert_eq!(s1.minibatched, 30);
+        // Bucket programs are shape-only: the epoch bumps invalidated
+        // nothing (no whole-graph program exists) and the bucket hit
+        // rate matches the same trace served without any updates.
+        assert_eq!(s1.invalidated, 0);
+        let no_updates: Vec<Request> =
+            build().into_iter().filter(|r| !r.target.is_update()).collect();
+        let (s0, _) = run(no_updates);
+        assert_eq!(s1.bucket_hits, s0.bucket_hits, "churn must not evict buckets");
+        // Post-update samples read the churned epoch.
+        assert!(r1.iter().filter(|r| r.minibatch).any(|r| r.epoch > 0));
+    }
+
+    #[test]
+    fn update_only_workload_has_empty_latency_classes() {
+        let co = dataset("CO").unwrap();
+        let reqs = vec![
+            Request::update(0, co, 16, 4, 0, 1, 0.0),
+            Request::update(0, co, 16, 4, 0, 2, 1e-3),
+        ];
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(reqs);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.updates, 2);
+        assert_eq!(stats.max_epoch, 2);
+        // No inference: every latency statistic reads 0, no panics.
+        assert_eq!(stats.p50, 0.0);
+        assert_eq!(stats.p99, 0.0);
+        assert_eq!(stats.mean, 0.0);
+        assert_eq!(c.hit_rate(), 0.0);
+        // The virtual clock still advanced through the apply costs.
+        assert!(stats.makespan > 0.0);
     }
 }

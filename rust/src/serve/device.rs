@@ -4,11 +4,11 @@
 //! is over virtual seconds, so a fleet replay is bit-identical.
 
 use super::cache::{Key, ProgramCache};
-use super::clock;
+use super::clock::{self, CostModel};
 use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
 use crate::exec::{BufferArena, PackedWeightSet};
-use crate::graph::Dataset;
+use crate::graph::{Dataset, GraphMeta, TileCounts};
 use crate::ir::ZooModel;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -59,6 +59,9 @@ pub struct Device {
     /// back-to-back replays of the same (model, graph) pair skip
     /// repacking entirely.
     pub packed: Option<PackedWeightSet>,
+    /// Host-side cost coefficients (set from the fleet config so
+    /// benches can sweep what used to be hard-coded constants).
+    pub costs: CostModel,
     pub jobs: Vec<Job>,
     /// Index of the first job that may not have started yet. Start times
     /// are nondecreasing per device (each job begins no earlier than its
@@ -78,6 +81,7 @@ impl Device {
             busy: 0.0,
             arena: BufferArena::new(),
             packed: None,
+            costs: CostModel::default(),
             jobs: Vec::new(),
             first_pending: 0,
         }
@@ -165,12 +169,38 @@ impl Device {
         ds: &Dataset,
         exec_seconds: &mut dyn FnMut(&Executable) -> f64,
     ) -> (Arc<Executable>, usize) {
-        let key = Key::Whole(model, ds.key);
-        let (exe, hit) = self.cache.get(model, ds);
+        self.admit_at(arrival, model, ds, 0, None, exec_seconds)
+    }
+
+    /// [`Device::admit`] against a specific graph epoch: a streamed
+    /// dataset passes its current epoch plus the dynamic graph's
+    /// snapshot (metadata + live tile counts) so a cache miss compiles
+    /// against the churned graph, not the frozen dataset.
+    pub fn admit_at(
+        &mut self,
+        arrival: f64,
+        model: ZooModel,
+        ds: &Dataset,
+        epoch: u32,
+        snapshot: Option<(&GraphMeta, &Arc<TileCounts>)>,
+        exec_seconds: &mut dyn FnMut(&Executable) -> f64,
+    ) -> (Arc<Executable>, usize) {
+        let key = Key::Whole(model, ds.key, epoch);
+        let (exe, hit) = self.cache.get_at(model, ds, epoch, snapshot);
         let ready = self.ready_at(key, arrival, &exe);
         let t_exec = exec_seconds(&exe);
         let j = self.push_job(key, ready, t_exec, hit);
         (exe, j)
+    }
+
+    /// Selective invalidation after a streaming update: drop stale
+    /// whole-graph programs (epoch below `epoch`) of `ds_key` from the
+    /// program cache and the compile-warmth ledger. Bucket programs
+    /// survive untouched. Returns the number of programs dropped.
+    pub fn invalidate_dataset(&mut self, ds_key: &str, epoch: u32) -> usize {
+        self.warm_at
+            .retain(|k, _| !matches!(k, Key::Whole(_, d, e) if *d == ds_key && *e < epoch));
+        self.cache.invalidate_whole_before(ds_key, epoch)
     }
 
     /// Admit one mini-batch request: the bucket program compiles (or
@@ -188,7 +218,7 @@ impl Device {
         let key = Key::Bucket(model, shape);
         let (exe, hit) = self.cache.get_bucket(model, shape);
         let ready = self.ready_at(key, arrival + t_sample, &exe);
-        let t_visit = clock::VISIT_OVERHEAD_S + exec_seconds(&exe);
+        let t_visit = self.costs.visit_overhead_s + exec_seconds(&exe);
         let j = self.push_job(key, ready, t_visit, hit);
         (exe, j)
     }
@@ -232,7 +262,7 @@ mod tests {
         assert!(second.cache_hit);
         assert_eq!(second.ready, 1.0);
         assert_eq!(dev.cache_len(), 1);
-        assert!(dev.is_warm(&Key::Whole(ZooModel::B1, "CO")));
+        assert!(dev.is_warm(&Key::Whole(ZooModel::B1, "CO", 0)));
     }
 
     #[test]

@@ -136,7 +136,7 @@ mod tests {
         devs[0].free_at = 5.0;
         devs[1].free_at = 1.0;
         devs[2].free_at = 3.0;
-        let key = Key::Whole(ZooModel::B1, "CO");
+        let key = Key::Whole(ZooModel::B1, "CO", 0);
         assert_eq!(ALL_ON.route(&devs, &key, 0.0), Route::Device(1));
     }
 
@@ -147,7 +147,7 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
         devs[1].admit(0.0, ZooModel::B1, &co, &mut exec);
         // Device 1 is warm but busier; affinity still picks it.
-        let key = Key::Whole(ZooModel::B1, "CO");
+        let key = Key::Whole(ZooModel::B1, "CO", 0);
         let arrival = devs[1].free_at + 1.0; // after its job started
         let on = Dispatcher { coalesce: false, ..ALL_ON };
         let off = Dispatcher { affinity: false, coalesce: false, ..ALL_ON };
@@ -163,13 +163,13 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
         let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec);
         let start = devs[0].jobs[j].start;
-        let key = Key::Whole(ZooModel::B1, "CO");
+        let key = Key::Whole(ZooModel::B1, "CO", 0);
         // Before the job starts: ride it.
         assert_eq!(ALL_ON.route(&devs, &key, start * 0.5), Route::Coalesce(0, j));
         // After it started: a fresh dispatch (warm, device 0).
         assert_eq!(ALL_ON.route(&devs, &key, start + 1.0), Route::Device(0));
         // Different key never coalesces.
-        let other = Key::Whole(ZooModel::B2, "CO");
+        let other = Key::Whole(ZooModel::B2, "CO", 0);
         assert!(matches!(ALL_ON.route(&devs, &other, start * 0.5), Route::Device(_)));
     }
 
@@ -183,7 +183,7 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1.0;
         devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // running by 0.5
         let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // queued
-        let key = Key::Whole(ZooModel::B1, "CO");
+        let key = Key::Whole(ZooModel::B1, "CO", 0);
         let off = Dispatcher { affinity: false, ..ALL_ON };
         assert_eq!(off.route(&devs, &key, 0.5), Route::Device(1));
         // With affinity the dispatch target is the warm (queued) device

@@ -20,12 +20,19 @@
 //! * [`coordinator`] — the event loop binding it together, plus latency
 //!   statistics (nearest-rank p50/p99).
 //!
-//! Two request classes share the fleet
-//! ([`Target`](coordinator::Target)): whole-graph inference, and
+//! Three request classes share the fleet
+//! ([`Target`](coordinator::Target)): whole-graph inference,
 //! mini-batch inference over sampled k-hop ego-networks
 //! ([`crate::graph::Sampler`]) executed through shape-bucketed programs
 //! ([`crate::compiler::BucketShape`]) so per-request cost tracks the
-//! sampled neighborhood, not the full graph.
+//! sampled neighborhood, not the full graph — and streaming graph
+//! *updates* ([`Target::Update`](coordinator::Target::Update)):
+//! R-MAT-skewed churn batches applied to a per-dataset
+//! [`crate::stream::DynamicGraph`] between inference requests. Updates
+//! seal epochs; whole-graph cache keys are epoch-versioned with
+//! selective invalidation, bucket programs (shape-only) survive
+//! untouched, and mini-batch sampling reads the churned epoch through
+//! the CSR + delta-overlay merge.
 //!
 //! The fleet serves with density-aware dynamic kernel re-mapping by
 //! default ([`FleetConfig`](coordinator::FleetConfig)`::dynamic`):
@@ -40,7 +47,7 @@ pub mod device;
 pub mod dispatcher;
 
 pub use cache::{Key, ProgramCache};
-pub use clock::VirtualClock;
+pub use clock::{CostModel, VirtualClock};
 pub use coordinator::{
     percentile, Coordinator, FleetConfig, Request, Response, ServeStats, Target,
 };

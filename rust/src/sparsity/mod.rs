@@ -184,24 +184,73 @@ pub fn tile_density(ne: u64, rows: u64, cols: u64) -> f32 {
 /// Exact mean density over the *non-empty* subshards of the adjacency —
 /// the quantity whose divergence from the whole-graph average motivates
 /// per-tile decisions (empty tiles are skipped at compile time already).
+/// One scan shared with the streaming tracker: this is
+/// [`DensityTracker::from_tiles`] read out once.
 pub fn adjacency_density(tiles: &TileCounts, nv: u64) -> f32 {
-    let n1 = tiles.n1;
-    let shards = tiles.shards;
-    let mut edges = 0u64;
-    let mut area = 0u64;
-    for i in 0..shards {
-        let rows = (nv - (i as u64) * n1).min(n1);
-        for j in 0..shards {
-            let ne = tiles.get(i, j);
-            if ne == 0 {
-                continue;
+    DensityTracker::from_tiles(tiles, nv).density()
+}
+
+/// Incrementally maintained adjacency density — the streaming
+/// counterpart of [`adjacency_density`].
+///
+/// A full re-profile scans every subshard (O(shards²)); under edge
+/// churn only the *dirty* subshards change, so
+/// [`crate::stream::DynamicGraph`] keeps one of these and calls
+/// [`DensityTracker::retile`] per dirty tile after an update batch.
+/// The tracked value is exactly the mean density over non-empty
+/// subshards (empty tiles contribute no area — they are skipped at
+/// compile time already), so the GA02 threshold table a later
+/// epoch-compile embeds sees the same number a from-scratch profile
+/// would produce.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DensityTracker {
+    /// Total edges over non-empty subshards.
+    pub edges: u64,
+    /// Total cell area (rows × cols) over non-empty subshards.
+    pub area: u64,
+}
+
+impl DensityTracker {
+    /// Full profile — same loop as [`adjacency_density`], kept as the
+    /// re-sync path (vertex growth changes many tile areas at once).
+    pub fn from_tiles(tiles: &TileCounts, nv: u64) -> DensityTracker {
+        let n1 = tiles.n1;
+        let shards = tiles.shards;
+        let mut t = DensityTracker::default();
+        for i in 0..shards {
+            let rows = (nv - (i as u64) * n1).min(n1);
+            for j in 0..shards {
+                let ne = tiles.get(i, j);
+                if ne == 0 {
+                    continue;
+                }
+                let cols = (nv - (j as u64) * n1).min(n1);
+                t.edges += ne;
+                t.area += rows * cols;
             }
-            let cols = (nv - (j as u64) * n1).min(n1);
-            edges += ne;
-            area += rows * cols;
+        }
+        t
+    }
+
+    /// Re-profile one subshard that changed from `(old_ne, old_cells)`
+    /// to `(new_ne, new_cells)` edges/area. Tiles contribute area only
+    /// while non-empty, matching [`adjacency_density`].
+    pub fn retile(&mut self, old_ne: u64, old_cells: u64, new_ne: u64, new_cells: u64) {
+        if old_ne > 0 {
+            self.edges -= old_ne;
+            self.area -= old_cells;
+        }
+        if new_ne > 0 {
+            self.edges += new_ne;
+            self.area += new_cells;
         }
     }
-    edges as f32 / area.max(1) as f32
+
+    /// Mean density over non-empty subshards (0 when the graph has no
+    /// edges).
+    pub fn density(&self) -> f32 {
+        self.edges as f32 / self.area.max(1) as f32
+    }
 }
 
 /// Cheap analytic estimator of each layer's *input* feature-matrix
@@ -356,6 +405,32 @@ mod tests {
         assert!(d > 0.0 && d < 0.05, "CO density {d}");
         assert_eq!(tile_density(50, 10, 10), 0.5);
         assert_eq!(tile_density(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn density_tracker_matches_full_profile() {
+        let ds = dataset("PU").unwrap();
+        let nv = ds.n_vertices;
+        let mut tiles = ds.tile_counts(16384);
+        let mut t = DensityTracker::from_tiles(&tiles, nv);
+        assert_eq!(t.density(), adjacency_density(&tiles, nv));
+        // Mutate a few tiles and re-profile only them: the tracker must
+        // agree with a from-scratch scan after every step.
+        let shards = tiles.shards;
+        let n1 = tiles.n1;
+        let cells = |i: usize, j: usize| {
+            (nv - i as u64 * n1).min(n1) * (nv - j as u64 * n1).min(n1)
+        };
+        for (i, j, new_ne) in [(0usize, 0usize, 123u64), (0, 1, 0), (1, 1, 1)] {
+            let old = tiles.get(i, j);
+            tiles.counts[i * shards + j] = new_ne;
+            t.retile(old, cells(i, j), new_ne, cells(i, j));
+            assert_eq!(
+                t.density(),
+                adjacency_density(&tiles, nv),
+                "tile ({i},{j}) -> {new_ne}"
+            );
+        }
     }
 
     #[test]

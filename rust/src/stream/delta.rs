@@ -1,0 +1,864 @@
+//! The delta-overlay dynamic graph: epoch-versioned snapshots over an
+//! immutable base plus an append-only overlay, with incremental
+//! (dirty-subshard-only) maintenance of the Fiber-Shard partition.
+//!
+//! Invariants the implementation leans on (and the tests pin):
+//!
+//! * **Materialized order** — [`DynamicGraph::materialize`] emits live
+//!   base edges in base order, then live overlay edges in insertion
+//!   order. Each tile stores its edges as the *subsequence* of that
+//!   order landing in the tile (base edges were counting-sorted
+//!   stably at build; inserts only append; deletes remove in place),
+//!   so rebuilding a dirty tile's CSR from the tile store produces
+//!   exactly what a from-scratch
+//!   [`PartitionedGraph::build`](crate::graph::PartitionedGraph::build)
+//!   of the materialized graph would — bit for bit, including float
+//!   summation order in the aggregation kernels.
+//! * **Epoch stamps** — a base edge is live at epoch `E` while its
+//!   deletion stamp exceeds `E`; an overlay edge additionally needs its
+//!   insertion stamp `<= E`. Stamps are never rewritten (compaction
+//!   aside), so a sealed epoch's view can never change underneath an
+//!   in-flight reader.
+//! * **Dirty accounting** — the `(old edge count, old cell area)` of a
+//!   tile is captured at its *first* modification in a batch, so the
+//!   density tracker's incremental re-profile agrees exactly with a
+//!   full re-scan.
+
+use super::update::UpdateBatch;
+use crate::graph::sample::{sample_view, EgoNet, NeighborView};
+use crate::graph::{CooGraph, CsrSubshard, GraphMeta, PartitionConfig, PartitionedGraph, TileCounts};
+use crate::sparsity::DensityTracker;
+use std::collections::{BTreeMap, HashMap};
+
+/// Deletion-epoch sentinel: the edge has not been deleted.
+const LIVE: u32 = u32::MAX;
+
+/// Tuning knobs of the dynamic graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamConfig {
+    /// When `(overlay entries + base tombstones) / live edges` exceeds
+    /// this, [`DynamicGraph::apply`] compacts: the overlay folds back
+    /// into a fresh base CSR and the retained epoch window rebases to
+    /// the current epoch.
+    pub compact_ratio: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig { compact_ratio: 0.25 }
+    }
+}
+
+/// What one [`DynamicGraph::apply`] did — the incremental-recompilation
+/// receipt the serving fleet turns into modeled apply cost and
+/// telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ApplyReport {
+    /// The epoch this batch sealed.
+    pub epoch: u32,
+    pub inserted: u32,
+    /// Deletes that hit a live edge.
+    pub deleted: u32,
+    /// Deletes that found no live edge (already gone, or never existed).
+    pub missed_deletes: u32,
+    pub new_vertices: u32,
+    /// Subshards whose CSR was rebuilt.
+    pub dirty_subshards: u32,
+    /// Subshards in the (possibly grown) grid.
+    pub total_subshards: u32,
+    /// Edges re-sorted while rebuilding dirty subshards — the work an
+    /// incremental apply pays where a full rebuild pays O(|E|).
+    pub rebuilt_edges: u64,
+    /// Live edges after the batch.
+    pub live_edges: u64,
+    /// Whether this apply triggered an overlay compaction.
+    pub compacted: bool,
+    /// Adjacency density over non-empty subshards after the batch
+    /// (incrementally re-profiled; feeds the next epoch-compile's GA02
+    /// threshold table).
+    pub adj_density: f32,
+}
+
+/// One subshard's live edges (global vertex ids), kept in
+/// materialized-subsequence order.
+#[derive(Clone, Debug, Default)]
+struct TileStore {
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    w: Vec<f32>,
+}
+
+/// Where a live edge was found by the delete path.
+enum EdgeRef {
+    Base(usize),
+    Overlay(usize),
+}
+
+/// Cell area of tile `(i, j)` under an `nv`-vertex, `shards`-wide grid
+/// (0 for tiles outside the grid — they held no edges).
+fn cells_at(nv: u64, shards: usize, n1: u64, i: usize, j: usize) -> u64 {
+    if i >= shards || j >= shards {
+        return 0;
+    }
+    (nv - i as u64 * n1).min(n1) * (nv - j as u64 * n1).min(n1)
+}
+
+/// A mutable graph layering a delta overlay on an immutable base, with
+/// epoch-versioned snapshots and an incrementally maintained
+/// Fiber-Shard partition (see the module docs).
+pub struct DynamicGraph {
+    cfg: PartitionConfig,
+    scfg: StreamConfig,
+    /// Metadata of the *current* epoch (name/features/classes fixed;
+    /// vertex and edge counts track the stream).
+    meta: GraphMeta,
+    epoch: u32,
+    /// Oldest retained epoch (advanced by compaction).
+    base_epoch: u32,
+
+    // --- base snapshot: the sampling substrate -----------------------
+    base_src: Vec<u32>,
+    base_dst: Vec<u32>,
+    base_w: Vec<f32>,
+    /// Deletion epoch per base edge ([`LIVE`] = live).
+    base_del: Vec<u32>,
+    /// Whole-graph destination-row CSR over the base arrays.
+    base_csr: CsrSubshard,
+    /// Vertex count the base CSR was built for.
+    base_nv: u64,
+
+    // --- delta overlay ----------------------------------------------
+    ov_src: Vec<u32>,
+    ov_dst: Vec<u32>,
+    ov_w: Vec<f32>,
+    /// Insertion epoch per overlay edge.
+    ov_ins: Vec<u32>,
+    /// Deletion epoch per overlay edge ([`LIVE`] = live).
+    ov_del: Vec<u32>,
+    /// Overlay edge ids per destination vertex (insertion order).
+    ov_by_dst: HashMap<u32, Vec<u32>>,
+    live_base: u64,
+    live_overlay: u64,
+    /// `(first epoch, vertex count)` marks for epoch-consistent views
+    /// across vertex additions.
+    nv_marks: Vec<(u32, u64)>,
+
+    // --- current-epoch partition state ------------------------------
+    shards: usize,
+    tiles: Vec<TileStore>,
+    /// Destination-row CSR per tile (rebuilt only when dirty).
+    csr: Vec<CsrSubshard>,
+    /// Edge count per tile (the live [`TileCounts`]).
+    counts: Vec<u64>,
+    density: DensityTracker,
+    /// Compactions performed over the graph's lifetime.
+    pub compactions: u64,
+}
+
+impl DynamicGraph {
+    /// Wrap `g` as epoch 0 of a stream, partitioned with `cfg`.
+    pub fn new(g: CooGraph, cfg: PartitionConfig) -> DynamicGraph {
+        DynamicGraph::with_config(g, cfg, StreamConfig::default())
+    }
+
+    pub fn with_config(g: CooGraph, cfg: PartitionConfig, scfg: StreamConfig) -> DynamicGraph {
+        let pg = PartitionedGraph::build(&g, cfg);
+        let shards = pg.shards;
+        let mut tiles = Vec::with_capacity(shards * shards);
+        let mut counts = Vec::with_capacity(shards * shards);
+        for t in 0..shards * shards {
+            let r = pg.offsets[t]..pg.offsets[t + 1];
+            counts.push(r.len() as u64);
+            tiles.push(TileStore {
+                src: pg.src[r.clone()].to_vec(),
+                dst: pg.dst[r.clone()].to_vec(),
+                w: pg.w[r].to_vec(),
+            });
+        }
+        let tc = TileCounts { n1: cfg.n1, shards, counts: counts.clone() };
+        let density = DensityTracker::from_tiles(&tc, g.meta.n_vertices);
+        let base_csr =
+            CsrSubshard::from_local_coo(g.dst.iter().copied(), g.src.iter().copied(), g.n());
+        let CooGraph { meta, src, dst, w } = g;
+        let m = src.len();
+        DynamicGraph {
+            cfg,
+            scfg,
+            base_nv: meta.n_vertices,
+            nv_marks: vec![(0, meta.n_vertices)],
+            meta,
+            epoch: 0,
+            base_epoch: 0,
+            base_src: src,
+            base_dst: dst,
+            base_w: w,
+            base_del: vec![LIVE; m],
+            base_csr,
+            ov_src: Vec::new(),
+            ov_dst: Vec::new(),
+            ov_w: Vec::new(),
+            ov_ins: Vec::new(),
+            ov_del: Vec::new(),
+            ov_by_dst: HashMap::new(),
+            live_base: m as u64,
+            live_overlay: 0,
+            shards,
+            tiles,
+            csr: pg.csr,
+            counts,
+            density,
+            compactions: 0,
+        }
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Oldest epoch still reconstructible (compaction advances it).
+    pub fn base_epoch(&self) -> u32 {
+        self.base_epoch
+    }
+
+    /// Current-epoch metadata.
+    pub fn meta(&self) -> &GraphMeta {
+        &self.meta
+    }
+
+    pub fn n_vertices(&self) -> u64 {
+        self.meta.n_vertices
+    }
+
+    /// Live edges at the current epoch.
+    pub fn n_edges(&self) -> u64 {
+        self.meta.n_edges
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Incrementally profiled adjacency density over non-empty
+    /// subshards at the current epoch.
+    pub fn adj_density(&self) -> f32 {
+        self.density.density()
+    }
+
+    /// `(overlay entries + base tombstones) / live edges` — the
+    /// compaction trigger quantity.
+    pub fn overlay_ratio(&self) -> f64 {
+        let overhead = self.ov_src.len() as u64 + (self.base_src.len() as u64 - self.live_base);
+        overhead as f64 / self.meta.n_edges.max(1) as f64
+    }
+
+    /// Live per-subshard edge counts of the current epoch — what an
+    /// epoch-compile feeds the compiler (and the GA02 profiler).
+    pub fn tile_counts(&self) -> TileCounts {
+        TileCounts { n1: self.cfg.n1, shards: self.shards, counts: self.counts.clone() }
+    }
+
+    fn tile_of(&self, s: u32, d: u32) -> usize {
+        (d as u64 / self.cfg.n1) as usize * self.shards + (s as u64 / self.cfg.n1) as usize
+    }
+
+    /// Vertex count at `epoch`.
+    fn nv_at(&self, epoch: u32) -> u64 {
+        self.nv_marks
+            .iter()
+            .rev()
+            .find(|(e, _)| *e <= epoch)
+            .map(|&(_, nv)| nv)
+            .expect("epoch below the retained window")
+    }
+
+    /// Apply one update batch, sealing a new epoch. Deletes are
+    /// resolved against the *previous* epoch (a batch cannot delete its
+    /// own inserts), then inserts append. Only the dirty subshards are
+    /// re-sorted and re-profiled; everything else is untouched.
+    pub fn apply(&mut self, batch: &UpdateBatch) -> ApplyReport {
+        let new_epoch = self.epoch + 1;
+        let n1 = self.cfg.n1;
+        let old_nv = self.meta.n_vertices;
+        let old_shards = self.shards;
+        // tile -> (edge count, cell area) before this batch touched it.
+        let mut dirty: BTreeMap<usize, (u64, u64)> = BTreeMap::new();
+
+        // 1. Vertex additions (grid growth + last-shard-row resize).
+        let new_nv = old_nv + batch.new_vertices as u64;
+        if batch.new_vertices > 0 {
+            let new_shards = new_nv.div_ceil(n1) as usize;
+            if new_shards != old_shards {
+                let old_tiles = std::mem::take(&mut self.tiles);
+                let old_counts = std::mem::take(&mut self.counts);
+                let old_csr = std::mem::take(&mut self.csr);
+                let mut tiles: Vec<TileStore> =
+                    (0..new_shards * new_shards).map(|_| TileStore::default()).collect();
+                let mut counts = vec![0u64; new_shards * new_shards];
+                let mut csr = Vec::with_capacity(new_shards * new_shards);
+                for i in 0..new_shards {
+                    let rows = ((new_nv - i as u64 * n1).min(n1)) as usize;
+                    for _ in 0..new_shards {
+                        csr.push(CsrSubshard {
+                            rows: rows as u32,
+                            row_offsets: vec![0u32; rows + 1],
+                            cols: Vec::new(),
+                            perm: Vec::new(),
+                        });
+                    }
+                }
+                for (old_t, store) in old_tiles.into_iter().enumerate() {
+                    let (i, j) = (old_t / old_shards, old_t % old_shards);
+                    tiles[i * new_shards + j] = store;
+                }
+                for (old_t, c) in old_counts.into_iter().enumerate() {
+                    let (i, j) = (old_t / old_shards, old_t % old_shards);
+                    counts[i * new_shards + j] = c;
+                }
+                for (old_t, c) in old_csr.into_iter().enumerate() {
+                    let (i, j) = (old_t / old_shards, old_t % old_shards);
+                    csr[i * new_shards + j] = c;
+                }
+                self.tiles = tiles;
+                self.counts = counts;
+                self.csr = csr;
+                self.shards = new_shards;
+            }
+            // The shard containing the old vertex boundary gains rows:
+            // its whole row of subshards needs resized CSR offsets.
+            let last_old = ((old_nv - 1) / n1) as usize;
+            let rows_before = (old_nv - last_old as u64 * n1).min(n1);
+            let rows_after = (new_nv - last_old as u64 * n1).min(n1);
+            if rows_after != rows_before {
+                for j in 0..self.shards {
+                    let t = last_old * self.shards + j;
+                    dirty
+                        .entry(t)
+                        .or_insert((self.counts[t], cells_at(old_nv, old_shards, n1, last_old, j)));
+                }
+            }
+            self.nv_marks.push((new_epoch, new_nv));
+            self.meta.n_vertices = new_nv;
+        }
+
+        // 2. Deletes (against the previous epoch's live set).
+        let mut deleted = 0u32;
+        let mut missed = 0u32;
+        for &(s, d) in &batch.deletes {
+            if s as u64 >= new_nv || d as u64 >= new_nv {
+                missed += 1;
+                continue;
+            }
+            match self.find_live(s, d) {
+                None => missed += 1,
+                Some(EdgeRef::Base(e)) => {
+                    self.base_del[e] = new_epoch;
+                    self.live_base -= 1;
+                    self.remove_from_tile(s, d, &mut dirty, old_nv, old_shards);
+                    deleted += 1;
+                }
+                Some(EdgeRef::Overlay(e)) => {
+                    self.ov_del[e] = new_epoch;
+                    self.live_overlay -= 1;
+                    self.remove_from_tile(s, d, &mut dirty, old_nv, old_shards);
+                    deleted += 1;
+                }
+            }
+        }
+
+        // 3. Inserts (appended to the overlay and their tiles).
+        for &(s, d, w) in &batch.inserts {
+            assert!(
+                (s as u64) < new_nv && (d as u64) < new_nv,
+                "insert ({s}->{d}) out of range (|V| = {new_nv})"
+            );
+            let ei = self.ov_src.len() as u32;
+            self.ov_src.push(s);
+            self.ov_dst.push(d);
+            self.ov_w.push(w);
+            self.ov_ins.push(new_epoch);
+            self.ov_del.push(LIVE);
+            self.ov_by_dst.entry(d).or_default().push(ei);
+            self.live_overlay += 1;
+            let t = self.tile_of(s, d);
+            let (i, j) = (t / self.shards, t % self.shards);
+            dirty
+                .entry(t)
+                .or_insert((self.counts[t], cells_at(old_nv, old_shards, n1, i, j)));
+            let st = &mut self.tiles[t];
+            st.src.push(s);
+            st.dst.push(d);
+            st.w.push(w);
+            self.counts[t] += 1;
+        }
+
+        // 4. Rebuild only the dirty subshards' CSRs.
+        let mut rebuilt_edges = 0u64;
+        for &t in dirty.keys() {
+            let (i, j) = (t / self.shards, t % self.shards);
+            let rows = ((new_nv - i as u64 * n1).min(n1)) as usize;
+            let row_base = (i as u64 * n1) as u32;
+            let col_base = (j as u64 * n1) as u32;
+            let store = &self.tiles[t];
+            rebuilt_edges += store.src.len() as u64;
+            self.csr[t] = CsrSubshard::from_local_coo(
+                store.dst.iter().map(move |&d| d - row_base),
+                store.src.iter().map(move |&s| s - col_base),
+                rows,
+            );
+        }
+
+        // 5. Re-profile: dirty tiles only (vertex growth changes many
+        // tile areas at once, so it re-syncs with a full scan).
+        if batch.new_vertices > 0 {
+            let tc = TileCounts { n1, shards: self.shards, counts: self.counts.clone() };
+            self.density = DensityTracker::from_tiles(&tc, new_nv);
+        } else {
+            for (&t, &(old_ne, old_cells)) in &dirty {
+                let (i, j) = (t / self.shards, t % self.shards);
+                let new_cells = cells_at(new_nv, self.shards, n1, i, j);
+                self.density.retile(old_ne, old_cells, self.counts[t], new_cells);
+            }
+        }
+
+        // 6. Seal the epoch; compact when the overlay outgrew its ratio.
+        self.epoch = new_epoch;
+        self.meta.n_edges = self.live_base + self.live_overlay;
+        let mut compacted = false;
+        if self.overlay_ratio() > self.scfg.compact_ratio {
+            self.compact();
+            compacted = true;
+        }
+        ApplyReport {
+            epoch: new_epoch,
+            inserted: batch.inserts.len() as u32,
+            deleted,
+            missed_deletes: missed,
+            new_vertices: batch.new_vertices,
+            dirty_subshards: dirty.len() as u32,
+            total_subshards: (self.shards * self.shards) as u32,
+            rebuilt_edges,
+            live_edges: self.meta.n_edges,
+            compacted,
+            adj_density: self.density.density(),
+        }
+    }
+
+    /// First live edge `(s, d)` in materialized order (base slot order,
+    /// then overlay insertion order) — the same edge a scan of the
+    /// tile store would find first.
+    fn find_live(&self, s: u32, d: u32) -> Option<EdgeRef> {
+        if (d as u64) < self.base_nv {
+            for slot in self.base_csr.row(d as usize) {
+                if self.base_csr.cols[slot] == s {
+                    let e = self.base_csr.perm[slot] as usize;
+                    if self.base_del[e] == LIVE {
+                        return Some(EdgeRef::Base(e));
+                    }
+                }
+            }
+        }
+        if let Some(list) = self.ov_by_dst.get(&d) {
+            for &ei in list {
+                let e = ei as usize;
+                if self.ov_src[e] == s && self.ov_del[e] == LIVE {
+                    return Some(EdgeRef::Overlay(e));
+                }
+            }
+        }
+        None
+    }
+
+    /// Remove the first `(s, d)` occurrence from its tile store,
+    /// preserving order (the materialized-subsequence invariant).
+    fn remove_from_tile(
+        &mut self,
+        s: u32,
+        d: u32,
+        dirty: &mut BTreeMap<usize, (u64, u64)>,
+        old_nv: u64,
+        old_shards: usize,
+    ) {
+        let t = self.tile_of(s, d);
+        let (i, j) = (t / self.shards, t % self.shards);
+        dirty
+            .entry(t)
+            .or_insert((self.counts[t], cells_at(old_nv, old_shards, self.cfg.n1, i, j)));
+        let st = &mut self.tiles[t];
+        let pos = st
+            .src
+            .iter()
+            .zip(&st.dst)
+            .position(|(&a, &b)| a == s && b == d)
+            .expect("deleted edge must be present in its tile");
+        st.src.remove(pos);
+        st.dst.remove(pos);
+        st.w.remove(pos);
+        self.counts[t] -= 1;
+    }
+
+    /// Fold the overlay back into a fresh base: the current epoch's
+    /// materialized edges become the new base arrays and whole-graph
+    /// CSR, tombstones and overlay clear, and the retained epoch window
+    /// rebases to the current epoch. Tile stores and per-tile CSRs are
+    /// untouched — they always reflect the current epoch.
+    fn compact(&mut self) {
+        let g = self.materialize(self.epoch);
+        self.base_nv = g.meta.n_vertices;
+        self.base_csr =
+            CsrSubshard::from_local_coo(g.dst.iter().copied(), g.src.iter().copied(), g.n());
+        let m = g.m();
+        let CooGraph { src, dst, w, .. } = g;
+        self.base_src = src;
+        self.base_dst = dst;
+        self.base_w = w;
+        self.base_del = vec![LIVE; m];
+        self.live_base = m as u64;
+        self.ov_src.clear();
+        self.ov_dst.clear();
+        self.ov_w.clear();
+        self.ov_ins.clear();
+        self.ov_del.clear();
+        self.ov_by_dst.clear();
+        self.live_overlay = 0;
+        self.base_epoch = self.epoch;
+        self.nv_marks = vec![(self.epoch, self.meta.n_vertices)];
+        self.compactions += 1;
+    }
+
+    /// Reconstruct the COO graph of a retained `epoch` (live base edges
+    /// in base order, then live overlay edges in insertion order).
+    ///
+    /// Panics when `epoch` falls outside `[base_epoch, epoch]` — those
+    /// snapshots were folded away by compaction.
+    pub fn materialize(&self, epoch: u32) -> CooGraph {
+        assert!(
+            epoch >= self.base_epoch && epoch <= self.epoch,
+            "epoch {epoch} outside the retained window [{}, {}]",
+            self.base_epoch,
+            self.epoch
+        );
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        let mut w = Vec::new();
+        for e in 0..self.base_src.len() {
+            if self.base_del[e] > epoch {
+                src.push(self.base_src[e]);
+                dst.push(self.base_dst[e]);
+                w.push(self.base_w[e]);
+            }
+        }
+        for e in 0..self.ov_src.len() {
+            if self.ov_ins[e] <= epoch && self.ov_del[e] > epoch {
+                src.push(self.ov_src[e]);
+                dst.push(self.ov_dst[e]);
+                w.push(self.ov_w[e]);
+            }
+        }
+        let meta = GraphMeta::new(
+            &self.meta.name,
+            self.nv_at(epoch),
+            src.len() as u64,
+            self.meta.feat_len,
+            self.meta.n_classes,
+        );
+        CooGraph::new(meta, src, dst, w)
+    }
+
+    /// Assemble the current epoch's [`PartitionedGraph`] from the
+    /// incrementally maintained tile stores and CSRs — bit-identical to
+    /// `PartitionedGraph::build(&self.materialize(self.epoch()), cfg)`
+    /// without re-sorting any clean tile.
+    pub fn export_partitioned(&self) -> PartitionedGraph {
+        let tiles_n = self.shards * self.shards;
+        let m = self.counts.iter().sum::<u64>() as usize;
+        let mut offsets = Vec::with_capacity(tiles_n + 1);
+        offsets.push(0usize);
+        let mut src = Vec::with_capacity(m);
+        let mut dst = Vec::with_capacity(m);
+        let mut w = Vec::with_capacity(m);
+        for st in &self.tiles {
+            src.extend_from_slice(&st.src);
+            dst.extend_from_slice(&st.dst);
+            w.extend_from_slice(&st.w);
+            offsets.push(src.len());
+        }
+        PartitionedGraph {
+            cfg: self.cfg,
+            n_vertices: self.meta.n_vertices,
+            shards: self.shards,
+            offsets,
+            src,
+            dst,
+            w,
+            csr: self.csr.clone(),
+        }
+    }
+
+    /// Neighbor view of a retained `epoch` (sampling substrate).
+    pub fn view_at(&self, epoch: u32) -> EpochView<'_> {
+        assert!(
+            epoch >= self.base_epoch && epoch <= self.epoch,
+            "epoch {epoch} outside the retained window [{}, {}]",
+            self.base_epoch,
+            self.epoch
+        );
+        EpochView { g: self, epoch }
+    }
+
+    /// Neighbor view of the current epoch.
+    pub fn view(&self) -> EpochView<'_> {
+        self.view_at(self.epoch)
+    }
+
+    /// Sample a k-hop ego-network at the current epoch through the
+    /// base-CSR + overlay merge — same algorithm and determinism
+    /// contract as the static [`crate::graph::Sampler`].
+    pub fn sample(&self, targets: &[u32], fanout: &[u32], seed: u64) -> EgoNet {
+        sample_view(&self.view(), targets, fanout, seed)
+    }
+
+    /// [`DynamicGraph::sample`] against a retained past epoch.
+    pub fn sample_at(&self, epoch: u32, targets: &[u32], fanout: &[u32], seed: u64) -> EgoNet {
+        sample_view(&self.view_at(epoch), targets, fanout, seed)
+    }
+}
+
+/// A consistent read of one retained epoch: in-edges merge the base CSR
+/// (minus tombstones at or before the epoch) with the overlay inserts
+/// stamped at or before it.
+pub struct EpochView<'a> {
+    g: &'a DynamicGraph,
+    epoch: u32,
+}
+
+impl EpochView<'_> {
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+}
+
+impl NeighborView for EpochView<'_> {
+    fn n_vertices(&self) -> u64 {
+        self.g.nv_at(self.epoch)
+    }
+
+    fn feat_len(&self) -> u64 {
+        self.g.meta.feat_len
+    }
+
+    fn n_classes(&self) -> u64 {
+        self.g.meta.n_classes
+    }
+
+    fn in_edges(&self, v: u32, out: &mut Vec<(u32, f32)>) {
+        let g = self.g;
+        if (v as u64) < g.base_nv {
+            for slot in g.base_csr.row(v as usize) {
+                let e = g.base_csr.perm[slot] as usize;
+                if g.base_del[e] > self.epoch {
+                    out.push((g.base_csr.cols[slot], g.base_w[e]));
+                }
+            }
+        }
+        if let Some(list) = g.ov_by_dst.get(&v) {
+            for &ei in list {
+                let e = ei as usize;
+                if g.ov_ins[e] <= self.epoch && g.ov_del[e] > self.epoch {
+                    out.push((g.ov_src[e], g.ov_w[e]));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat_edges, RmatParams};
+    use crate::graph::Sampler;
+
+    fn graph(n: u64, m: u64, seed: u64) -> CooGraph {
+        rmat_edges(GraphMeta::new("t", n, m, 8, 2), RmatParams::default(), seed)
+    }
+
+    fn cfg(n1: u64) -> PartitionConfig {
+        PartitionConfig { n1, n2: 8 }
+    }
+
+    /// Reference check: incremental state == from-scratch build of the
+    /// materialized current epoch, plus live TileCounts agreement.
+    fn assert_matches_scratch(d: &DynamicGraph) {
+        let g = d.materialize(d.epoch());
+        let scratch = PartitionedGraph::build(&g, d.cfg);
+        let inc = d.export_partitioned();
+        assert_eq!(inc, scratch, "incremental partition diverged from scratch");
+        assert_eq!(d.tile_counts(), TileCounts::from_coo(&g, d.cfg.n1));
+        assert_eq!(d.n_edges(), g.meta.n_edges);
+    }
+
+    #[test]
+    fn epoch0_matches_static_paths() {
+        let g = graph(300, 2000, 5);
+        let d = DynamicGraph::new(g.clone(), cfg(64));
+        assert_eq!(d.epoch(), 0);
+        assert_matches_scratch(&d);
+        // Epoch-0 sampling == the static Sampler, bit for bit.
+        let s = Sampler::new(g);
+        let a = d.sample(&[3, 77], &[4, 2], 9);
+        let b = s.sample(&[3, 77], &[4, 2], 9);
+        assert_eq!(a.origin, b.origin);
+        assert_eq!(a.graph.src, b.graph.src);
+        assert_eq!(a.graph.dst, b.graph.dst);
+        assert_eq!(a.graph.w, b.graph.w);
+    }
+
+    #[test]
+    fn inserts_deletes_and_dirty_accounting() {
+        let g = graph(400, 3000, 7);
+        let mut d = DynamicGraph::new(g, cfg(64));
+        let total = (d.shards() * d.shards()) as u32;
+        let batch = UpdateBatch {
+            inserts: vec![(1, 2, 0.5), (1, 2, 0.5), (300, 9, 1.5)],
+            deletes: vec![(1, 2)],
+            new_vertices: 0,
+        };
+        let r = d.apply(&batch);
+        assert_eq!(r.epoch, 1);
+        assert_eq!(r.inserted, 3);
+        // The delete resolves against epoch 0 (never this batch's own
+        // inserts): it hits iff (1, 2) existed in the base graph.
+        assert_eq!(r.deleted + r.missed_deletes, 1);
+        assert!(r.dirty_subshards >= 1 && r.dirty_subshards < total);
+        assert_eq!(r.total_subshards, total);
+        assert_matches_scratch(&d);
+        // Density re-profile matches a full scan.
+        assert_eq!(
+            r.adj_density,
+            crate::sparsity::adjacency_density(&d.tile_counts(), d.n_vertices())
+        );
+        // The inserted duplicate edge now appears in vertex 2's row.
+        let mut row = Vec::new();
+        d.view().in_edges(2, &mut row);
+        let dup = row.iter().filter(|&&(s, _)| s == 1).count();
+        assert!(dup >= 2, "inserted duplicates missing ({dup})");
+    }
+
+    #[test]
+    fn deleting_an_inserted_edge_in_a_later_batch() {
+        let g = graph(200, 1000, 3);
+        let mut d = DynamicGraph::new(g, cfg(64));
+        d.apply(&UpdateBatch {
+            inserts: vec![(10, 20, 2.0)],
+            deletes: vec![],
+            new_vertices: 0,
+        });
+        let mut row = Vec::new();
+        d.view().in_edges(20, &mut row);
+        let live = row.iter().filter(|&&(s, w)| s == 10 && w == 2.0).count();
+        assert_eq!(live, 1);
+        let r = d.apply(&UpdateBatch {
+            inserts: vec![],
+            deletes: vec![(10, 20)],
+            new_vertices: 0,
+        });
+        assert_eq!(r.deleted, 1);
+        row.clear();
+        d.view().in_edges(20, &mut row);
+        assert!(!row.iter().any(|&(s, w)| s == 10 && w == 2.0));
+        assert_matches_scratch(&d);
+    }
+
+    #[test]
+    fn epoch_snapshots_are_immutable() {
+        let g = graph(300, 2000, 11);
+        let mut d = DynamicGraph::new(g, cfg(64));
+        let snap0 = d.materialize(0);
+        let ego0 = d.sample_at(0, &[5, 9], &[6, 3], 2);
+        d.apply(&UpdateBatch {
+            inserts: vec![(5, 9, 1.0), (9, 5, 1.0)],
+            deletes: vec![(snap0.src[0], snap0.dst[0])],
+            new_vertices: 0,
+        });
+        // The sealed epoch still reads exactly as before the batch.
+        let snap0_again = d.materialize(0);
+        assert_eq!(snap0.src, snap0_again.src);
+        assert_eq!(snap0.dst, snap0_again.dst);
+        assert_eq!(snap0.w, snap0_again.w);
+        let ego0_again = d.sample_at(0, &[5, 9], &[6, 3], 2);
+        assert_eq!(ego0.origin, ego0_again.origin);
+        assert_eq!(ego0.graph.src, ego0_again.graph.src);
+        // ...and the new epoch differs.
+        let snap1 = d.materialize(1);
+        assert_eq!(snap1.meta.n_edges, snap0.meta.n_edges + 2 - 1);
+    }
+
+    #[test]
+    fn vertex_growth_extends_the_grid() {
+        let g = graph(120, 800, 13);
+        let mut d = DynamicGraph::new(g, cfg(64));
+        assert_eq!(d.shards(), 2);
+        // Grow past the 2-shard boundary and wire a new vertex in.
+        let r = d.apply(&UpdateBatch {
+            inserts: vec![(120, 0, 1.0), (3, 140, 1.0)],
+            deletes: vec![],
+            new_vertices: 30,
+        });
+        assert_eq!(r.new_vertices, 30);
+        assert_eq!(d.n_vertices(), 150);
+        assert_eq!(d.shards(), 3);
+        assert_matches_scratch(&d);
+        let mut row = Vec::new();
+        d.view().in_edges(140, &mut row);
+        assert_eq!(row, vec![(3, 1.0)]);
+        // Old epoch still reports the old vertex count.
+        assert_eq!(d.materialize(0).meta.n_vertices, 120);
+        assert_eq!(d.view_at(0).n_vertices(), 120);
+    }
+
+    #[test]
+    fn compaction_folds_overlay_and_rebases() {
+        let g = graph(200, 500, 17);
+        let scfg = StreamConfig { compact_ratio: 0.10 };
+        let mut d = DynamicGraph::with_config(g, cfg(64), scfg);
+        let mut compacted_at = None;
+        for e in 0..6u32 {
+            let inserts: Vec<(u32, u32, f32)> =
+                (0..20).map(|i| ((i * 7 + e) % 200, (i * 13) % 200, 1.0)).collect();
+            let r = d.apply(&UpdateBatch { inserts, deletes: vec![], new_vertices: 0 });
+            if r.compacted {
+                compacted_at = Some(r.epoch);
+                break;
+            }
+        }
+        let at = compacted_at.expect("10% ratio must compact within 6 batches");
+        assert_eq!(d.base_epoch(), at);
+        assert_eq!(d.compactions, 1);
+        assert!(d.overlay_ratio() == 0.0);
+        assert_matches_scratch(&d);
+        // Pre-compaction epochs are folded away; the current one reads.
+        let current = d.epoch();
+        assert_eq!(d.materialize(current).meta.n_edges, d.n_edges());
+        // Post-compaction updates still work incrementally.
+        d.apply(&UpdateBatch {
+            inserts: vec![(0, 1, 3.0)],
+            deletes: vec![],
+            new_vertices: 0,
+        });
+        assert_matches_scratch(&d);
+    }
+
+    #[test]
+    #[should_panic(expected = "retained window")]
+    fn folded_epoch_is_unreadable() {
+        let g = graph(100, 300, 19);
+        let mut d = DynamicGraph::with_config(g, cfg(64), StreamConfig { compact_ratio: 0.0 });
+        // ratio 0: every apply compacts.
+        let r = d.apply(&UpdateBatch {
+            inserts: vec![(1, 2, 1.0)],
+            deletes: vec![],
+            new_vertices: 0,
+        });
+        assert!(r.compacted);
+        let _ = d.materialize(0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Streaming graph updates: delta overlay, epoch snapshots, and
+//! incremental recompilation.
+//!
+//! Every other execution path in the crate assumes the input graph is
+//! frozen at load time. This subsystem makes the graph a *stream*: edge
+//! inserts/deletes and vertex additions arrive in [`UpdateBatch`]es
+//! (synthesized R-MAT-skewed by [`ChurnGenerator`], matching the
+//! degree skew of the Table-4 stand-ins), and a [`DynamicGraph`]
+//! absorbs them between inference requests.
+//!
+//! Three ideas carry the design:
+//!
+//! * **Delta overlay** — the base graph stays immutable (its whole-graph
+//!   destination-row CSR keeps serving samplers); churn lands in an
+//!   append-only overlay (inserts) plus tombstones (deletes). When the
+//!   overlay plus tombstones exceed [`StreamConfig::compact_ratio`] of
+//!   the live edge count, compaction folds everything back into a fresh
+//!   base CSR.
+//! * **Epoch snapshots** — every applied batch seals a new epoch.
+//!   Edges carry insertion/deletion epoch stamps, so
+//!   [`DynamicGraph::view_at`] / [`DynamicGraph::materialize`]
+//!   reconstruct any retained epoch bit-exactly: an in-flight request
+//!   always reads the consistent epoch current at its arrival, never a
+//!   half-applied batch. Compaction rebases the retained window to the
+//!   current epoch.
+//! * **Incremental recompilation** — applying a batch marks only the
+//!   *dirty* Fiber-Shard subshards (the tiles churned edges land in,
+//!   plus the shard row whose height a vertex addition changed).
+//!   Only those tiles' [`crate::graph::CsrSubshard`]s are rebuilt and
+//!   only their densities re-profiled
+//!   ([`crate::sparsity::DensityTracker`]), instead of re-running the
+//!   full O(|E|) partition pass — and the result is *bit-identical* to
+//!   a from-scratch [`crate::graph::PartitionedGraph::build`] at the
+//!   same epoch (pinned across the model zoo in
+//!   `rust/tests/streaming.rs`).
+//!
+//! The serving fleet integrates through
+//! [`crate::serve::Target::Update`]: update requests interleave with
+//! inference on the virtual clock (modeled apply cost from
+//! [`crate::serve::clock::CostModel::update_cost`]), whole-graph cache
+//! keys become epoch-versioned with selective invalidation, and bucket
+//! executables — shape-only — survive epochs untouched.
+//! [`crate::engine::StreamingSession`] is the functional counterpart:
+//! apply → incremental repartition → compile-at-epoch → run.
+
+pub mod delta;
+pub mod update;
+
+pub use delta::{ApplyReport, DynamicGraph, EpochView, StreamConfig};
+pub use update::{ChurnGenerator, ChurnSpec, UpdateBatch};

@@ -1,0 +1,165 @@
+//! Update batches and the seeded churn generator.
+//!
+//! An [`UpdateBatch`] is the unit of graph mutation: edge inserts
+//! (with weights), edge deletes (resolved against the previous epoch's
+//! live set — a batch can never delete its own inserts), and vertex
+//! additions. [`ChurnGenerator`] synthesizes batches deterministically:
+//! insert endpoints are drawn from the same R-MAT quadrant walk the
+//! dataset stand-ins use (so churn concentrates on the same hub
+//! vertices real social/recommendation streams hammer), and deletes
+//! pick live in-edges of random vertices so they almost always hit.
+
+use super::delta::DynamicGraph;
+use crate::graph::rmat::RmatParams;
+use crate::graph::NeighborView;
+use crate::util::Rng;
+
+/// One batch of graph mutations, applied atomically as one epoch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UpdateBatch {
+    /// Edges to insert as `(src, dst, weight)`.
+    pub inserts: Vec<(u32, u32, f32)>,
+    /// Edges to delete as `(src, dst)`; the first *live* occurrence (in
+    /// materialized order) is removed, misses are counted, not errors.
+    pub deletes: Vec<(u32, u32)>,
+    /// Vertices appended after the current maximum id (isolated until
+    /// an insert references them).
+    pub new_vertices: u32,
+}
+
+impl UpdateBatch {
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.deletes.is_empty() && self.new_vertices == 0
+    }
+
+    /// Total mutations carried (the modeled apply cost's edge term).
+    pub fn changes(&self) -> usize {
+        self.inserts.len() + self.deletes.len() + self.new_vertices as usize
+    }
+}
+
+/// Shape of one generated churn batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChurnSpec {
+    pub inserts: u32,
+    /// Delete *attempts* (an attempt targeting an already-removed edge
+    /// is reported as a miss by the apply).
+    pub deletes: u32,
+    pub new_vertices: u32,
+}
+
+/// Deterministic, R-MAT-skewed churn source over a [`DynamicGraph`].
+///
+/// Fully determined by `(params, seed)` and the graph states it is
+/// shown — replaying the same request sequence regenerates the same
+/// batches bit for bit, which is what keeps the serving fleet's
+/// update-interleaved traces replayable.
+pub struct ChurnGenerator {
+    params: RmatParams,
+    rng: Rng,
+}
+
+impl ChurnGenerator {
+    pub fn new(params: RmatParams, seed: u64) -> ChurnGenerator {
+        ChurnGenerator { params, rng: Rng::new(seed ^ 0xC4A8_57EA_D000_0001) }
+    }
+
+    /// Draw the next batch against the graph's current epoch.
+    pub fn next_batch(&mut self, g: &DynamicGraph, spec: ChurnSpec) -> UpdateBatch {
+        let nv_cur = g.n_vertices();
+        let nv_new = nv_cur + spec.new_vertices as u64;
+        let (src, dst) = if spec.inserts > 0 && nv_new > 0 {
+            self.params.sample_edges(&mut self.rng, nv_new, spec.inserts as usize)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let inserts: Vec<(u32, u32, f32)> = src
+            .iter()
+            .zip(&dst)
+            .map(|(&s, &d)| (s, d, 0.5 + self.rng.f32()))
+            .collect();
+        let view = g.view();
+        let mut deletes = Vec::with_capacity(spec.deletes as usize);
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        for _ in 0..spec.deletes {
+            if nv_cur == 0 {
+                break;
+            }
+            let v = self.rng.below(nv_cur) as u32;
+            row.clear();
+            view.in_edges(v, &mut row);
+            if row.is_empty() {
+                continue;
+            }
+            let k = self.rng.below(row.len() as u64) as usize;
+            deletes.push((row[k].0, v));
+        }
+        UpdateBatch { inserts, deletes, new_vertices: spec.new_vertices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::rmat_edges;
+    use crate::graph::{GraphMeta, PartitionConfig};
+
+    fn dyn_graph(seed: u64) -> DynamicGraph {
+        let g = rmat_edges(
+            GraphMeta::new("t", 300, 2400, 8, 2),
+            RmatParams::default(),
+            seed,
+        );
+        DynamicGraph::new(g, PartitionConfig { n1: 64, n2: 8 })
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_in_range() {
+        let g = dyn_graph(3);
+        let spec = ChurnSpec { inserts: 50, deletes: 20, new_vertices: 4 };
+        let a = ChurnGenerator::new(RmatParams::default(), 7).next_batch(&g, spec);
+        let b = ChurnGenerator::new(RmatParams::default(), 7).next_batch(&g, spec);
+        assert_eq!(a, b);
+        assert_eq!(a.inserts.len(), 50);
+        assert!(a.inserts.iter().all(|&(s, d, w)| {
+            (s as u64) < 304 && (d as u64) < 304 && (0.5..1.5).contains(&w)
+        }));
+        assert!(!a.deletes.is_empty(), "a 2400-edge graph must yield deletes");
+        let c = ChurnGenerator::new(RmatParams::default(), 8).next_batch(&g, spec);
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn generated_deletes_mostly_hit() {
+        let mut g = dyn_graph(5);
+        let spec = ChurnSpec { inserts: 24, deletes: 24, new_vertices: 0 };
+        let mut gen = ChurnGenerator::new(RmatParams::default(), 11);
+        let mut deleted = 0;
+        let mut attempted = 0;
+        for _ in 0..4 {
+            let batch = gen.next_batch(&g, spec);
+            attempted += batch.deletes.len() as u32;
+            let r = g.apply(&batch);
+            deleted += r.deleted;
+            assert_eq!(r.deleted + r.missed_deletes, batch.deletes.len() as u32);
+        }
+        // Deletes are drawn from live rows: only same-batch duplicate
+        // draws can miss.
+        assert!(
+            deleted * 10 >= attempted * 8,
+            "only {deleted}/{attempted} deletes hit"
+        );
+    }
+
+    #[test]
+    fn batch_helpers() {
+        assert!(UpdateBatch::default().is_empty());
+        let b = UpdateBatch {
+            inserts: vec![(0, 1, 1.0)],
+            deletes: vec![(2, 3)],
+            new_vertices: 2,
+        };
+        assert!(!b.is_empty());
+        assert_eq!(b.changes(), 4);
+    }
+}

@@ -1,0 +1,234 @@
+//! Streaming-update integration suite:
+//!
+//! * **golden equivalence** — after a ~1% edge-churn batch, the
+//!   incrementally maintained (dirty-subshard-only) partition produces
+//!   *bit-identical* functional outputs to a from-scratch rebuild at
+//!   the same epoch, for every zoo model (the acceptance criterion);
+//! * **epoch snapshots** — sealed epochs read back bit-exactly across
+//!   later updates; sampling merges the base CSR with the delta
+//!   overlay deterministically;
+//! * **incrementality** — small churn dirties a small tile fraction
+//!   and rebuilds only those tiles' edges;
+//! * **serve-level** — update-interleaved fleets replay bit-identically
+//!   and the epoch-versioned cache keys never collide (property test).
+
+use graphagile::compiler::BucketShape;
+use graphagile::config::HwConfig;
+use graphagile::engine::StreamingSession;
+use graphagile::graph::{
+    full_fanout, rmat_edges, CooGraph, EgoNet, GraphMeta, PartitionConfig, PartitionedGraph,
+    TileCounts,
+};
+use graphagile::ir::{ZooModel, ALL_MODELS};
+use graphagile::serve::Key;
+use graphagile::sparsity::adjacency_density;
+use graphagile::stream::{ChurnGenerator, ChurnSpec, DynamicGraph, UpdateBatch};
+use graphagile::util::forall;
+
+const WEIGHT_SEED: u64 = 33;
+
+fn test_graph(n: u64, e: u64, f: u64, seed: u64) -> CooGraph {
+    rmat_edges(GraphMeta::new("t", n, e, f, 4), Default::default(), seed).gcn_normalized()
+}
+
+/// ~1% churn of `g`'s edge count.
+fn one_percent_churn(g: &DynamicGraph, seed: u64) -> UpdateBatch {
+    let edges = g.n_edges();
+    let spec = ChurnSpec {
+        inserts: (edges / 100).max(8) as u32,
+        deletes: (edges / 400).max(2) as u32,
+        new_vertices: 0,
+    };
+    ChurnGenerator::new(Default::default(), seed).next_batch(g, spec)
+}
+
+#[test]
+fn incremental_rebuild_is_bit_identical_across_the_zoo() {
+    // The acceptance criterion: apply a 1% churn batch, then compare
+    // the incremental dirty-subshard rebuild against a from-scratch
+    // partition of the materialized epoch — the partitions must be
+    // equal as data structures, and the functional outputs of every
+    // zoo model must match to the bit.
+    let g = test_graph(300, 1800, 16, 9);
+    let hw = HwConfig::functional_tiles();
+    let mut s = StreamingSession::new(g, hw.clone(), WEIGHT_SEED);
+    let batch = one_percent_churn(&s.dyng, 5);
+    let r = s.apply(&batch);
+    assert!(r.inserted > 0 && r.deleted > 0, "churn must do both kinds of work");
+    assert!(r.dirty_subshards >= 1 && r.rebuilt_edges > 0);
+    // Structural equality of the partitions.
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let materialized = s.dyng.materialize(s.epoch());
+    let scratch = PartitionedGraph::build(&materialized, cfg);
+    assert_eq!(s.dyng.export_partitioned(), scratch);
+    assert_eq!(s.dyng.tile_counts(), TileCounts::from_coo(&materialized, cfg.n1));
+    // Bit-identical numerics for every zoo model: the incremental
+    // session vs a cold session built from the materialized epoch.
+    let x = materialized.random_features(5);
+    let mut cold = StreamingSession::new(materialized.clone(), hw.clone(), WEIGHT_SEED);
+    for model in ALL_MODELS {
+        let inc = s.infer(model, &x).unwrap();
+        let fresh = cold.infer(model, &x).unwrap();
+        assert_eq!(
+            inc.output, fresh.output,
+            "{}: incremental output diverged from from-scratch",
+            model.key()
+        );
+    }
+}
+
+#[test]
+fn repeated_churn_epochs_stay_equivalent() {
+    // Five churn epochs in a row (including deletes of earlier
+    // inserts and a vertex growth): the incremental partition tracks
+    // the from-scratch build at every epoch.
+    let g = test_graph(400, 3000, 8, 21);
+    let cfg = PartitionConfig { n1: 64, n2: 8 };
+    let mut d = DynamicGraph::new(g, cfg);
+    let mut gen = ChurnGenerator::new(Default::default(), 13);
+    for e in 1..=5u32 {
+        let spec = ChurnSpec {
+            inserts: 30,
+            deletes: 12,
+            new_vertices: if e == 3 { 40 } else { 0 },
+        };
+        let batch = gen.next_batch(&d, spec);
+        let r = d.apply(&batch);
+        assert_eq!(r.epoch, e);
+        let materialized = d.materialize(e);
+        assert_eq!(
+            d.export_partitioned(),
+            PartitionedGraph::build(&materialized, cfg),
+            "epoch {e} diverged"
+        );
+        // Incremental density re-profiling agrees with a full scan.
+        assert_eq!(
+            d.adj_density(),
+            adjacency_density(&d.tile_counts(), d.n_vertices()),
+            "epoch {e} density drifted"
+        );
+    }
+    assert_eq!(d.n_vertices(), 440);
+}
+
+#[test]
+fn small_churn_dirties_a_small_fraction() {
+    // On a fine partition (many tiles), 1% churn touches a small
+    // fraction of the subshards and rebuilds a small fraction of the
+    // edges — the quantity behind the bench's apply-vs-rebuild floor.
+    let g = test_graph(4096, 32768, 8, 3);
+    let mut d = DynamicGraph::new(g, PartitionConfig { n1: 128, n2: 8 });
+    let batch = one_percent_churn(&d, 7);
+    let r = d.apply(&batch);
+    let dirty_frac = r.dirty_subshards as f64 / r.total_subshards as f64;
+    let rebuilt_frac = r.rebuilt_edges as f64 / r.live_edges as f64;
+    assert!(dirty_frac < 0.5, "dirty fraction {dirty_frac:.3} too high");
+    assert!(rebuilt_frac < 0.5, "rebuilt fraction {rebuilt_frac:.3} too high");
+    assert!(r.rebuilt_edges > 0);
+}
+
+#[test]
+fn overlay_sampling_sees_inserts_and_deletes() {
+    let g = test_graph(300, 2000, 8, 11);
+    let mut d = DynamicGraph::new(g, PartitionConfig { n1: 64, n2: 8 });
+    // Insert a fresh two-hop chain into vertex 7's neighborhood.
+    d.apply(&UpdateBatch {
+        inserts: vec![(250, 7, 1.0), (123, 250, 1.0)],
+        deletes: vec![],
+        new_vertices: 0,
+    });
+    let ego = d.sample(&[7], &full_fanout(2), 3);
+    assert!(ego.origin.contains(&250), "overlay insert missing from the ego-net");
+    assert!(ego.origin.contains(&123), "second-hop overlay insert missing");
+    // Epoch pinning: the epoch-0 sample of the same request never
+    // contains the inserted vertices' edge.
+    let ego0 = d.sample_at(0, &[7], &full_fanout(2), 3);
+    let pair = |e: &EgoNet| {
+        e.graph
+            .src
+            .iter()
+            .zip(&e.graph.dst)
+            .map(|(&s, &dd)| (e.origin[s as usize], e.origin[dd as usize]))
+            .collect::<Vec<_>>()
+    };
+    // Count-based (the base graph may happen to contain (250, 7) too):
+    // the insert adds exactly one copy, the delete removes one.
+    let count = |e: &EgoNet| pair(e).iter().filter(|&&p| p == (250, 7)).count();
+    let n0 = count(&ego0);
+    assert_eq!(count(&ego), n0 + 1);
+    d.apply(&UpdateBatch {
+        inserts: vec![],
+        deletes: vec![(250, 7)],
+        new_vertices: 0,
+    });
+    let ego2 = d.sample(&[7], &full_fanout(2), 3);
+    assert_eq!(count(&ego2), n0);
+}
+
+#[test]
+fn bucket_shapes_are_epoch_free() {
+    // The serve-cache invariant behind "bucket executables survive
+    // epochs": a bucket key depends only on the sampled shape, so the
+    // same-shaped ego-net before and after churn maps to the same key.
+    let g = test_graph(300, 2000, 8, 17);
+    let mut d = DynamicGraph::new(g, PartitionConfig { n1: 64, n2: 8 });
+    let before = d.sample(&[5, 9], &[4, 2], 1);
+    d.apply(&one_percent_churn(&d, 23));
+    let after = d.sample(&[5, 9], &[4, 2], 1);
+    let kb = Key::Bucket(ZooModel::B1, BucketShape::for_graph(&before.graph.meta));
+    let ka = Key::Bucket(ZooModel::B1, BucketShape::for_graph(&after.graph.meta));
+    assert_eq!(kb, ka, "small churn must not move the pow2 bucket");
+}
+
+#[test]
+fn prop_epoch_versioned_keys_never_collide() {
+    // The satellite property test: distinct (model, graph, epoch)
+    // triples produce distinct Whole keys, and Whole keys never equal
+    // Bucket keys. Collision here would silently serve a stale epoch.
+    let graphs = ["CI", "CO", "PU", "FL", "RE", "YE", "AP"];
+    forall("epoch-key-uniqueness", 50, |rng| {
+        let mut keys = std::collections::HashSet::new();
+        let mut triples = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let model = ALL_MODELS[rng.below(ALL_MODELS.len() as u64) as usize];
+            let gkey = graphs[rng.below(graphs.len() as u64) as usize];
+            let epoch = rng.below(1 << 20) as u32;
+            triples.insert((model.key(), gkey, epoch));
+            keys.insert(Key::Whole(model, gkey, epoch));
+        }
+        graphagile::prop_assert!(
+            keys.len() == triples.len(),
+            "distinct triples {} != distinct keys {}",
+            triples.len(),
+            keys.len()
+        );
+        // Cross-class: a Whole key never equals a Bucket key.
+        let shape = BucketShape::of(
+            1 + rng.below(4096),
+            1 + rng.below(65536),
+            8,
+            4,
+        );
+        let bucket = Key::Bucket(ALL_MODELS[0], shape);
+        graphagile::prop_assert!(
+            !keys.contains(&bucket),
+            "bucket key collided with a whole-graph key"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn streaming_session_drift_changes_outputs_only_after_epochs() {
+    let g = test_graph(256, 1500, 16, 29);
+    let hw = HwConfig::functional_tiles();
+    let mut s = StreamingSession::new(g, hw, WEIGHT_SEED);
+    let x = s.graph().random_features(4);
+    let a = s.infer(ZooModel::B7, &x).unwrap();
+    let b = s.infer(ZooModel::B7, &x).unwrap();
+    assert_eq!(a.output, b.output);
+    let batch = one_percent_churn(&s.dyng, 31);
+    s.apply(&batch);
+    let c = s.infer(ZooModel::B7, &x).unwrap();
+    assert_ne!(a.output, c.output, "churn must move B7's aggregations");
+}
