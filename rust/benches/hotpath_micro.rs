@@ -1,11 +1,21 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf targets in
 //! EXPERIMENTS.md): R-MAT edge generation, Fiber-Shard histogramming,
-//! kernel mapping, binary encode, and whole-program simulation rates.
+//! kernel mapping, binary encode, whole-program simulation rates, and
+//! the tile executor itself — through both [`TileBackend`]
+//! implementations (naive [`ReferenceBackend`] vs optimized
+//! [`RustBackend`]) at both precisions (f32 and calibrated int8), with
+//! a self-check asserting the reference and optimized outputs agree.
 
 use graphagile::compiler::{compile, CompileOptions};
 use graphagile::config::HwConfig;
-use graphagile::graph::{dataset, RmatParams, TileCounts};
+use graphagile::exec::{
+    FunctionalExecutor, ReferenceBackend, RustBackend, TileBackend, WeightStore,
+};
+use graphagile::graph::{
+    dataset, rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph, RmatParams, TileCounts,
+};
 use graphagile::ir::ZooModel;
+use graphagile::quant::{calibrate, CalibrationProfile};
 use graphagile::sim::simulate;
 use graphagile::util::Rng;
 use std::time::Instant;
@@ -82,4 +92,64 @@ fn main() {
         "simulate b5/FL (avg of 10)",
         n_instr as f64 / secs / 1e6
     );
+
+    // 6. Tile executor: both backends, both precisions. The naive
+    // ReferenceBackend is the per-call-allocating baseline; the
+    // optimized RustBackend is timed steady-state (warm arena, packed
+    // weights). Quantized tiles run the same int8 kernels under either
+    // backend, so the int8 rows measure the surrounding executor too.
+    println!();
+    let meta = GraphMeta::new("hot", 2048, 16_384, 64, 8);
+    let g = rmat_edges(meta, Default::default(), 31).gcn_normalized();
+    let hw = HwConfig::functional_tiles();
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let pg = PartitionedGraph::build(&g, cfg);
+    let x = g.random_features(5);
+    let visits = g.m() as f64;
+    for quantized in [false, true] {
+        let ir = ZooModel::B5.build(g.meta.clone());
+        let mut exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        if quantized {
+            let cal = calibrate(&exe.ir, &store, &CalibrationProfile::exact(&g, &x));
+            exe.program.scales = Some(cal.table);
+        }
+        let label = if quantized { "int8" } else { "f32" };
+        let mut naive_out = Vec::new();
+        rate(&format!("tile_exec b5 naive/{label}"), visits, "edge-visit", || {
+            naive_out = run_backend(ReferenceBackend, &exe, &pg, &store, &x);
+        });
+        let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let warm = fx.run(&x); // pack + warm the arena
+        let mut opt_out = Vec::new();
+        rate(&format!("tile_exec b5 opt/{label} (warm)"), visits, "edge-visit", || {
+            opt_out = fx.run(&x);
+        });
+        assert_eq!(warm, opt_out, "{label}: warm run changed numerics");
+        if quantized {
+            assert!(fx.quant_visits > 0, "scaled program never took the int8 path");
+        }
+        // Self-check: the two backends compute the same function (the
+        // optimized side reorders f32 reductions, hence the epsilon).
+        let scale = naive_out.iter().fold(1f32, |m, v| m.max(v.abs()));
+        for (i, (a, b)) in opt_out.iter().zip(&naive_out).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * scale,
+                "{label}: backends disagree at [{i}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// One cold executor pass through `backend` (the generic bound is the
+/// point: this bench covers the [`TileBackend`] trait object the same
+/// way the serving fleet drives it).
+fn run_backend<B: TileBackend>(
+    backend: B,
+    exe: &graphagile::compiler::Executable,
+    pg: &PartitionedGraph,
+    store: &WeightStore,
+    x: &[f32],
+) -> Vec<f32> {
+    FunctionalExecutor::new(exe, pg, store, backend).run(x)
 }

@@ -1,0 +1,264 @@
+//! Accuracy-vs-speed profile of the int8 ACK datapath, written to
+//! `BENCH_quant.json` so the quantization trajectory is recorded across
+//! commits. Three sections, three floors (enforced under
+//! `GA_BENCH_STRICT=1`; the default run only asserts sanity so loaded
+//! machines don't flake):
+//!
+//! * **kernels** — the int8 blocked GEMM and CSR SpDMM against their
+//!   f32 twins on pre-quantized steady-state operands (the executor
+//!   quantizes a tile row once and fuses requantize into the activation
+//!   epilogue, so the core kernel is the per-visit cost that repeats;
+//!   the epilogue pair is timed separately and reported as
+//!   `requant_ms`). Floor: geomean speedup >= 2x.
+//! * **ddr** — modeled operand traffic of the cycle simulator for the
+//!   same program with and without a GA03 scale section, across the
+//!   zoo. Floor: geomean bytes ratio <= 0.55x f32 (int8 shrinks
+//!   operands 4x but edge-index traffic stays u32, so the ratio sits
+//!   between 0.25 and 1).
+//! * **top1** — agreement of int8 argmax classes vs the f32 golden on
+//!   synthetic logits, per zoo model, with scales from the exact
+//!   calibration profile. Floor: minimum agreement >= 99%.
+//!
+//! Determinism: `GA_BENCH_THREADS=<n>` pins the kernel worker count
+//! (CI sets it).
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::exec::kernels::{
+    csr_from_coo, dequant_bias_into, gemm_i8_packed_into, gemm_packed_into, kernel_threads,
+    quantize_into, spdmm_csr_i8_into, spdmm_csr_into,
+};
+use graphagile::exec::{
+    golden_forward, FunctionalExecutor, PackedWeights, PackedWeightsI8, RustBackend, WeightStore,
+};
+use graphagile::graph::{rmat::rmat_edges, GraphMeta, PartitionConfig, PartitionedGraph};
+use graphagile::ir::ALL_MODELS;
+use graphagile::isa::AggOp;
+use graphagile::quant::{calibrate, CalibrationProfile};
+use graphagile::sim::simulate_dynamic;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Best-of-`reps` wall-clock in milliseconds.
+fn ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len().max(1) as f64).exp()
+}
+
+/// Deterministic pseudo-random values in [-1, 1) (xorshift; benches
+/// must reproduce run-to-run).
+fn fill(seed: u64, len: usize) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    (0..len)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 40) as f32 / (1u64 << 23) as f32 - 1.0
+        })
+        .collect()
+}
+
+fn absmax(v: &[f32]) -> f32 {
+    v.iter().fold(0f32, |a, &x| a.max(x.abs()))
+}
+
+fn argmax_rows(logits: &[f32], c: usize) -> Vec<usize> {
+    logits
+        .chunks(c)
+        .map(|row| {
+            let mut best = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn main() {
+    let threads = kernel_threads();
+    let strict = std::env::var("GA_BENCH_STRICT").as_deref() == Ok("1");
+
+    // Section 1: kernel micro-bench, int8 vs f32. Equal-MAC GEMM
+    // shapes spanning tall/mid/wide panels, then R-MAT gather at
+    // serving feature widths.
+    let gemm_grid = [
+        ("gemm-tall", 4096usize, 128usize, 128usize),
+        ("gemm-mid", 1024, 256, 256),
+        ("gemm-wide", 512, 512, 256),
+    ];
+    let spdmm_grid =
+        [("spdmm-mid", 4096u64, 65_536u64, 128usize), ("spdmm-wide", 2048, 65_536, 256)];
+    let mut kernel_rows = Vec::new();
+    let mut speedups = Vec::new();
+    println!(
+        "{:>12} {:>22} {:>10} {:>10} {:>8}",
+        "kernel", "shape", "f32 (ms)", "int8 (ms)", "speedup"
+    );
+    for &(name, m, k, n) in &gemm_grid {
+        let h = fill(1, m * k);
+        let w = fill(2, k * n);
+        let b = fill(3, n);
+        let pw = PackedWeights::pack(&w, k, n);
+        let mut out = vec![0f32; m * n];
+        gemm_packed_into(&h, m, &pw, &b, &mut out); // warm
+        let f32_ms = ms(3, || gemm_packed_into(&h, m, &pw, &b, black_box(&mut out)));
+
+        let (sx, sw) = (absmax(&h) / 127.0, absmax(&w) / 127.0);
+        let pwq = PackedWeightsI8::pack(&w, k, n, sw);
+        let mut hq = vec![0i8; m * k];
+        quantize_into(&h, sx, &mut hq);
+        let mut acc = vec![0i32; m * n];
+        gemm_i8_packed_into(&hq, m, &pwq, &mut acc); // warm
+        let i8_ms = ms(3, || gemm_i8_packed_into(&hq, m, &pwq, black_box(&mut acc)));
+        // The fused epilogue pair, timed apart: it runs once per tile
+        // visit, amortized over the activation pass it fuses into.
+        let requant_ms = ms(3, || {
+            quantize_into(&h, sx, black_box(&mut hq));
+            dequant_bias_into(&acc, n, sx * sw, &b, black_box(&mut out));
+        });
+        let s = f32_ms / i8_ms.max(1e-9);
+        speedups.push(s);
+        let shape = format!("{m}x{k}x{n}");
+        println!("{:>12} {:>22} {:>10.3} {:>10.3} {:>7.2}x", name, shape, f32_ms, i8_ms, s);
+        kernel_rows.push(format!(
+            "    {{\"kernel\": \"{name}\", \"m\": {m}, \"k\": {k}, \"n\": {n}, \
+             \"f32_ms\": {f32_ms:.4}, \"int8_ms\": {i8_ms:.4}, \
+             \"requant_ms\": {requant_ms:.4}, \"speedup\": {s:.3}}}"
+        ));
+    }
+    for &(name, nv, ne, f) in &spdmm_grid {
+        let meta = GraphMeta::new(name, nv, ne, f as u64, 8);
+        let g = rmat_edges(meta, Default::default(), 23).gcn_normalized();
+        let csr = csr_from_coo(&g.src, &g.dst, nv as usize);
+        let h = fill(4, nv as usize * f);
+        let mut acc_f = vec![0f32; nv as usize * f];
+        let mut touched = vec![0u32; nv as usize];
+        spdmm_csr_into(&csr, &g.w, &h, f, AggOp::Sum, &mut acc_f, &mut touched); // warm
+        let f32_ms = ms(3, || {
+            spdmm_csr_into(&csr, &g.w, &h, f, AggOp::Sum, black_box(&mut acc_f), &mut touched);
+        });
+
+        let (sx, se) = (absmax(&h) / 127.0, absmax(&g.w) / 127.0);
+        let mut hq = vec![0i8; h.len()];
+        quantize_into(&h, sx, &mut hq);
+        let mut ewq = vec![0i8; g.w.len()];
+        quantize_into(&g.w, se, &mut ewq);
+        let mut acc = vec![0i32; nv as usize * f];
+        spdmm_csr_i8_into(&csr, &ewq, &hq, f, &mut acc, &mut touched); // warm
+        let i8_ms = ms(3, || {
+            spdmm_csr_i8_into(&csr, &ewq, &hq, f, black_box(&mut acc), &mut touched);
+        });
+        let s = f32_ms / i8_ms.max(1e-9);
+        speedups.push(s);
+        let shape = format!("|V|={nv} |E|={ne} f={f}");
+        println!("{:>12} {:>22} {:>10.3} {:>10.3} {:>7.2}x", name, shape, f32_ms, i8_ms, s);
+        kernel_rows.push(format!(
+            "    {{\"kernel\": \"{name}\", \"vertices\": {nv}, \"edges\": {ne}, \"feat\": {f}, \
+             \"f32_ms\": {f32_ms:.4}, \"int8_ms\": {i8_ms:.4}, \"speedup\": {s:.3}}}"
+        ));
+    }
+    let kernel_geomean = geomean(&speedups);
+
+    // Sections 2 + 3: modeled DDR traffic and top-1 agreement. One
+    // shared graph across the zoo; n_classes matches the zoo head.
+    let meta = GraphMeta::new("quant-zoo", 1024, 8192, 64, 8);
+    let g = rmat_edges(meta, Default::default(), 29).gcn_normalized();
+    let hw = HwConfig::functional_tiles();
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let pg = PartitionedGraph::build(&g, cfg);
+    let x = g.random_features(5);
+    let mut zoo_rows = Vec::new();
+    let mut ratios = Vec::new();
+    let mut agreements = Vec::new();
+    println!("\n{:>6} {:>12} {:>12} {:>8} {:>8}", "model", "f32 MB", "int8 MB", "ratio", "top1");
+    for model in ALL_MODELS {
+        let ir = model.build(g.meta.clone());
+        let mut exe = compile(&ir, &pg.tile_counts(), &hw, CompileOptions::default());
+        let store = WeightStore::deterministic(&exe.ir, 33);
+        let f32_sim = simulate_dynamic(&exe.program, &hw);
+        assert_eq!(f32_sim.quant_blocks, 0, "unscaled program charged int8 blocks");
+
+        let cal = calibrate(&exe.ir, &store, &CalibrationProfile::exact(&g, &x));
+        exe.program.scales = Some(cal.table);
+        let q_sim = simulate_dynamic(&exe.program, &hw);
+        assert!(q_sim.quant_blocks > 0, "{}: scaled program never quantized", model.key());
+        let ratio = q_sim.total_mem_bytes as f64 / f32_sim.total_mem_bytes.max(1) as f64;
+        ratios.push(ratio);
+
+        let golden = golden_forward(&exe.ir, &g, &store, &x);
+        let got = FunctionalExecutor::new(&exe, &pg, &store, RustBackend).run(&x);
+        let c = g.meta.n_classes as usize;
+        let (gold_top, got_top) = (argmax_rows(&golden, c), argmax_rows(&got, c));
+        let same = gold_top.iter().zip(&got_top).filter(|(a, b)| a == b).count();
+        let agree = same as f64 / gold_top.len().max(1) as f64;
+        agreements.push(agree);
+        println!(
+            "{:>6} {:>12.3} {:>12.3} {:>8.3} {:>7.1}%",
+            model.key(),
+            f32_sim.total_mem_bytes as f64 / 1e6,
+            q_sim.total_mem_bytes as f64 / 1e6,
+            ratio,
+            agree * 100.0
+        );
+        zoo_rows.push(format!(
+            "    {{\"model\": \"{}\", \"f32_bytes\": {}, \"int8_bytes\": {}, \
+             \"bytes_ratio\": {ratio:.4}, \"top1_agreement\": {agree:.4}, \
+             \"calibrated_bound\": {:.6}}}",
+            model.key(),
+            f32_sim.total_mem_bytes,
+            q_sim.total_mem_bytes,
+            cal.bound
+        ));
+    }
+    let ddr_ratio = geomean(&ratios);
+    let top1_min = agreements.iter().cloned().fold(1.0f64, f64::min);
+
+    println!(
+        "\nint8 kernel geomean {kernel_geomean:.2}x ({threads} threads), \
+         modeled DDR {ddr_ratio:.3}x f32, worst top-1 agreement {:.1}%",
+        top1_min * 100.0
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"quant\",\n  \"threads\": {threads},\n  \
+         \"geomean_kernel_speedup\": {kernel_geomean:.4},\n  \
+         \"ddr_bytes_ratio\": {ddr_ratio:.4},\n  \"top1_agreement_min\": {top1_min:.4},\n  \
+         \"floors\": {{\"kernel_speedup\": 2.0, \"ddr_bytes_ratio\": 0.55, \
+         \"top1_agreement\": 0.99}},\n  \"kernels\": [\n{}\n  ],\n  \"zoo\": [\n{}\n  ]\n}}\n",
+        kernel_rows.join(",\n"),
+        zoo_rows.join(",\n")
+    );
+    std::fs::write("BENCH_quant.json", &json).expect("write BENCH_quant.json");
+    eprintln!(
+        "wrote BENCH_quant.json (kernels {kernel_geomean:.2}x, ddr {ddr_ratio:.3}x, \
+         top1 {:.1}%)",
+        top1_min * 100.0
+    );
+
+    // Sanity on every run: int8 must never lose to f32, traffic must
+    // shrink, and classes must mostly agree.
+    assert!(kernel_geomean > 1.0, "int8 kernels slower than f32 ({kernel_geomean:.2}x)");
+    assert!(ddr_ratio < 1.0, "quantized program moved more bytes ({ddr_ratio:.3}x)");
+    assert!(top1_min > 0.9, "top-1 agreement collapsed ({:.1}%)", top1_min * 100.0);
+    // Acceptance floors, enforced on demand.
+    if strict {
+        assert!(
+            kernel_geomean >= 2.0,
+            "int8 kernel geomean {kernel_geomean:.2}x below the 2x floor"
+        );
+        assert!(ddr_ratio <= 0.55, "modeled DDR ratio {ddr_ratio:.3}x above the 0.55x ceiling");
+        assert!(top1_min >= 0.99, "top-1 agreement {:.2}% below the 99% floor", top1_min * 100.0);
+    }
+}

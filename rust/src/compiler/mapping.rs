@@ -236,6 +236,9 @@ pub fn map_program(
         model_name: ir.name.clone(),
         graph_name: ir.graph.name.clone(),
         thresholds,
+        // Calibration is a post-compile attach (`quant::calibrate` needs
+        // the weight store, which compilation does not see).
+        scales: None,
         layers,
     };
     (program, all_tasks)

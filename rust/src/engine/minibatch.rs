@@ -16,7 +16,9 @@
 use crate::compiler::bucket::{compile_bucket, BucketShape};
 use crate::compiler::Executable;
 use crate::config::HwConfig;
-use crate::exec::{BufferArena, FunctionalExecutor, PackedWeightSet, RustBackend, WeightStore};
+use crate::exec::{
+    BufferArena, FunctionalExecutor, PackedWeightSet, PackedWeightSetI8, RustBackend, WeightStore,
+};
 use crate::graph::sample::EgoNet;
 use crate::graph::PartitionedGraph;
 use crate::ir::ZooModel;
@@ -44,6 +46,7 @@ struct BucketEntry {
     store: WeightStore,
     arena: BufferArena,
     packed: Option<PackedWeightSet>,
+    packed_i8: Option<PackedWeightSetI8>,
 }
 
 /// Bucket-cached functional executor for ego-networks.
@@ -109,7 +112,7 @@ impl MiniBatchRunner {
         let entry = self.entries.entry(key).or_insert_with(|| {
             let exe = compile_bucket(model, shape, &hw);
             let store = WeightStore::deterministic(&exe.ir, seed);
-            BucketEntry { exe, store, arena: BufferArena::new(), packed: None }
+            BucketEntry { exe, store, arena: BufferArena::new(), packed: None, packed_i8: None }
         });
         let f = ego.graph.meta.feat_len as usize;
         let padded = ego.padded_graph(shape.v as u64);
@@ -117,6 +120,7 @@ impl MiniBatchRunner {
         let x = ego.padded_features(x_full, f, shape.v as usize);
         let arena = std::mem::take(&mut entry.arena);
         let packed = entry.packed.take();
+        let packed_i8 = entry.packed_i8.take();
         let mut fx = FunctionalExecutor::with_state(
             &entry.exe,
             &pg,
@@ -124,11 +128,13 @@ impl MiniBatchRunner {
             RustBackend,
             arena,
             packed,
+            packed_i8,
         );
         let out = fx.run(&x);
-        let (arena, packed) = fx.into_state();
+        let (arena, packed, packed_i8) = fx.into_state();
         entry.arena = arena;
         entry.packed = Some(packed);
+        entry.packed_i8 = packed_i8;
         let c = ego.graph.meta.n_classes as usize;
         MiniBatchProfile {
             shape,

@@ -37,7 +37,7 @@ use crate::compiler::Executable;
 use crate::config::HwConfig;
 use crate::exec::{
     golden_forward, BufferArena, CountingBackend, FunctionalExecutor, PackedWeightSet,
-    RustBackend, WeightStore,
+    PackedWeightSetI8, RustBackend, WeightStore,
 };
 use crate::graph::{CooGraph, PartitionedGraph};
 use crate::sim::{simulate, simulate_dynamic};
@@ -76,6 +76,15 @@ pub struct ExecProfile {
     /// instructions charged at a cheaper mode (sim). 0 when dynamic
     /// re-mapping is off or the engine has no dynamic path.
     pub remaps: u64,
+    /// Tile tasks (functional) or Tiling Blocks (sim) executed on the
+    /// int8 datapath. 0 unless the program carries a GA03 scale table.
+    pub quant_visits: u64,
+    /// Quantize/dequantize epilogue passes (functional) or re-quantized
+    /// compute instructions (sim).
+    pub requant_ops: u64,
+    /// int8 operand bytes streamed through quantized kernels
+    /// (functional) or modeled 1-byte DDR operand traffic (sim).
+    pub int8_bytes: u64,
     /// Final feature matrix, when the engine computes real numerics.
     pub output: Option<Vec<f32>>,
 }
@@ -166,6 +175,9 @@ impl InferenceEngine for GoldenEngine {
             kernel_launches: exe.ir.layers.len() as u64,
             bytes_moved: bytes,
             remaps: 0,
+            quant_visits: 0,
+            requant_ops: 0,
+            int8_bytes: 0,
             output: Some(out),
         })
     }
@@ -190,6 +202,8 @@ pub struct FunctionalEngine {
     pub dynamic: bool,
     arena: BufferArena,
     packed: Option<PackedWeightSet>,
+    /// int8 weight panels, kept warm when serving scaled programs.
+    packed_i8: Option<PackedWeightSetI8>,
 }
 
 impl FunctionalEngine {
@@ -236,6 +250,7 @@ impl InferenceEngine for FunctionalEngine {
             CountingBackend::new(RustBackend),
             arena,
             self.packed.take(),
+            self.packed_i8.take(),
         );
         fx.dynamic = self.dynamic;
         let (out, secs) = timed(|| fx.run(d.x));
@@ -243,14 +258,21 @@ impl InferenceEngine for FunctionalEngine {
             engine: "functional",
             latency_s: secs,
             cycles: 0,
-            kernel_launches: fx.backend.launches,
-            bytes_moved: fx.backend.bytes,
+            // Quantized tiles bypass the TileBackend (the int8 kernels
+            // are invoked directly), so their dispatches and operand
+            // bytes are added back from the executor's counters.
+            kernel_launches: fx.backend.launches + fx.quant_visits,
+            bytes_moved: fx.backend.bytes + fx.int8_bytes,
             remaps: fx.remaps,
+            quant_visits: fx.quant_visits,
+            requant_ops: fx.requant_ops,
+            int8_bytes: fx.int8_bytes,
             output: Some(out),
         };
-        let (arena, packed) = fx.into_state();
+        let (arena, packed, packed_i8) = fx.into_state();
         self.arena = arena;
         self.packed = Some(packed);
+        self.packed_i8 = packed_i8;
         Ok(profile)
     }
 }
@@ -299,6 +321,9 @@ impl InferenceEngine for SimEngine {
             kernel_launches: sim.layers.iter().map(|l| l.n_blocks as u64).sum(),
             bytes_moved: sim.total_mem_bytes,
             remaps: sim.remaps,
+            quant_visits: sim.quant_blocks,
+            requant_ops: sim.requant_ops,
+            int8_bytes: sim.int8_bytes,
             output: None,
         })
     }
@@ -336,9 +361,12 @@ impl<'rt> InferenceEngine for PjrtEngine<'rt> {
             engine: "pjrt",
             latency_s: secs,
             cycles: 0,
-            kernel_launches: fx.backend.launches,
-            bytes_moved: fx.backend.bytes,
+            kernel_launches: fx.backend.launches + fx.quant_visits,
+            bytes_moved: fx.backend.bytes + fx.int8_bytes,
             remaps: 0,
+            quant_visits: fx.quant_visits,
+            requant_ops: fx.requant_ops,
+            int8_bytes: fx.int8_bytes,
             output: Some(out),
         })
     }

@@ -1,15 +1,22 @@
-//! [`BufferArena`] — a size-class-keyed pool of reusable `f32`/`u32`
-//! buffers for the execution hot loop.
+//! [`BufferArena`] — a size-class-keyed pool of reusable `f32`/`u32`/
+//! `i8`/`i32` buffers for the execution hot loop.
 //!
 //! The functional executor allocates the same tile shapes over and over
-//! (feature tiles, aggregation accumulators, per-edge value vectors).
-//! The arena recycles those buffers instead of returning them to the
-//! heap: a buffer is pooled under the largest power-of-two size class
-//! its capacity covers, and `take` hands back any pooled buffer whose
-//! class covers the requested length. After one warm run every steady-
-//! state request is served from the pool — [`ArenaStats::fresh`] stops
-//! growing (the escaping final output matrix is the one exception; see
-//! `exec::functional`).
+//! (feature tiles, aggregation accumulators, per-edge value vectors —
+//! and, in quantized mode, int8 operand tiles plus their i32
+//! accumulators). The arena recycles those buffers instead of returning
+//! them to the heap: a buffer is pooled under the largest power-of-two
+//! size class its capacity covers, and `take` hands back any pooled
+//! buffer whose class covers the requested length. After one warm run
+//! every steady-state request is served from the pool —
+//! [`ArenaStats::fresh`] stops growing (the escaping final output matrix
+//! is the one exception; see `exec::functional`).
+//!
+//! Counters are kept twice: the flat aggregates (`fresh`/`reused`/
+//! `recycled`) that the steady-state assertions use, and a per-dtype
+//! breakdown ([`ArenaStats::by_f32`] .. [`ArenaStats::by_i32`]) so the
+//! quantized path's pool behaviour is auditable separately from the f32
+//! path it shares the arena with.
 //!
 //! The arena is deliberately not thread-safe: each executor (and each
 //! serving device) owns its own arena, mirroring the per-overlay
@@ -18,7 +25,7 @@
 
 use std::collections::HashMap;
 
-/// Smallest pooled size class (floats/words). Tiny buffers are cheap to
+/// Smallest pooled size class (elements). Tiny buffers are cheap to
 /// allocate and pooling them would fragment the class map.
 const MIN_CLASS: usize = 64;
 
@@ -26,15 +33,35 @@ const MIN_CLASS: usize = 64;
 /// workload cannot grow the pool without bound.
 const MAX_PER_CLASS: usize = 64;
 
-/// Allocation counters for the zero-alloc steady-state guarantee.
+/// Per-dtype allocation counters (one row of the breakdown).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct ArenaStats {
+pub struct DtypeStats {
     /// Buffers newly allocated from the heap (pool misses).
     pub fresh: u64,
     /// Buffers served from the pool (pool hits).
     pub reused: u64,
     /// Buffers returned to the pool.
     pub recycled: u64,
+}
+
+/// Allocation counters for the zero-alloc steady-state guarantee:
+/// flat aggregates plus the per-dtype breakdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers newly allocated from the heap (pool misses), all dtypes.
+    pub fresh: u64,
+    /// Buffers served from the pool (pool hits), all dtypes.
+    pub reused: u64,
+    /// Buffers returned to the pool, all dtypes.
+    pub recycled: u64,
+    /// f32 tile/accumulator buffers.
+    pub by_f32: DtypeStats,
+    /// u32 flag / index scratch.
+    pub by_u32: DtypeStats,
+    /// int8 quantized operand tiles.
+    pub by_i8: DtypeStats,
+    /// i32 quantized accumulators.
+    pub by_i32: DtypeStats,
 }
 
 impl ArenaStats {
@@ -53,6 +80,8 @@ impl ArenaStats {
 pub struct BufferArena {
     f32_pool: HashMap<usize, Vec<Vec<f32>>>,
     u32_pool: HashMap<usize, Vec<Vec<u32>>>,
+    i8_pool: HashMap<usize, Vec<Vec<i8>>>,
+    i32_pool: HashMap<usize, Vec<Vec<i32>>>,
     stats: ArenaStats,
 }
 
@@ -75,6 +104,42 @@ fn class_of_capacity(capacity: usize) -> usize {
     }
 }
 
+/// Pool-or-allocate a `fill`-filled buffer of `len`; true when reused.
+fn pool_take<T: Clone>(
+    pool: &mut HashMap<usize, Vec<Vec<T>>>,
+    len: usize,
+    fill: T,
+) -> (Vec<T>, bool) {
+    let class = class_for(len);
+    match pool.get_mut(&class).and_then(Vec::pop) {
+        Some(mut buf) => {
+            buf.clear();
+            buf.resize(len, fill);
+            (buf, true)
+        }
+        None => {
+            let mut buf = Vec::with_capacity(class);
+            buf.resize(len, fill);
+            (buf, false)
+        }
+    }
+}
+
+/// Return a buffer to its size class; true when actually pooled.
+fn pool_recycle<T>(pool: &mut HashMap<usize, Vec<Vec<T>>>, buf: Vec<T>) -> bool {
+    let class = class_of_capacity(buf.capacity());
+    if class == 0 {
+        return false; // below the pooling floor: let it drop
+    }
+    let slot = pool.entry(class).or_default();
+    if slot.len() < MAX_PER_CLASS {
+        slot.push(buf);
+        true
+    } else {
+        false
+    }
+}
+
 impl BufferArena {
     pub fn new() -> BufferArena {
         BufferArena::default()
@@ -84,6 +149,20 @@ impl BufferArena {
         self.stats
     }
 
+    fn note_take(agg: &mut ArenaStats, per: impl FnOnce(&mut ArenaStats) -> &mut DtypeStats, reused: bool) {
+        if reused {
+            agg.reused += 1;
+        } else {
+            agg.fresh += 1;
+        }
+        let d = per(agg);
+        if reused {
+            d.reused += 1;
+        } else {
+            d.fresh += 1;
+        }
+    }
+
     /// A zero-filled f32 buffer of exactly `len` elements.
     pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
         self.take_f32_filled(len, 0.0)
@@ -91,21 +170,9 @@ impl BufferArena {
 
     /// A `fill`-filled f32 buffer of exactly `len` elements.
     pub fn take_f32_filled(&mut self, len: usize, fill: f32) -> Vec<f32> {
-        let class = class_for(len);
-        match self.f32_pool.get_mut(&class).and_then(Vec::pop) {
-            Some(mut buf) => {
-                self.stats.reused += 1;
-                buf.clear();
-                buf.resize(len, fill);
-                buf
-            }
-            None => {
-                self.stats.fresh += 1;
-                let mut buf = Vec::with_capacity(class);
-                buf.resize(len, fill);
-                buf
-            }
-        }
+        let (buf, reused) = pool_take(&mut self.f32_pool, len, fill);
+        Self::note_take(&mut self.stats, |s| &mut s.by_f32, reused);
+        buf
     }
 
     /// A buffer holding a copy of `src`.
@@ -117,47 +184,57 @@ impl BufferArena {
 
     /// Return an f32 buffer to the pool.
     pub fn recycle_f32(&mut self, buf: Vec<f32>) {
-        let class = class_of_capacity(buf.capacity());
-        if class == 0 {
-            return; // below the pooling floor: let it drop
-        }
-        let pool = self.f32_pool.entry(class).or_default();
-        if pool.len() < MAX_PER_CLASS {
+        if pool_recycle(&mut self.f32_pool, buf) {
             self.stats.recycled += 1;
-            pool.push(buf);
+            self.stats.by_f32.recycled += 1;
         }
     }
 
     /// A zero-filled u32 buffer of exactly `len` elements (flag /
     /// index scratch — e.g. touched-row bitmaps).
     pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
-        let class = class_for(len);
-        match self.u32_pool.get_mut(&class).and_then(Vec::pop) {
-            Some(mut buf) => {
-                self.stats.reused += 1;
-                buf.clear();
-                buf.resize(len, 0);
-                buf
-            }
-            None => {
-                self.stats.fresh += 1;
-                let mut buf = Vec::with_capacity(class);
-                buf.resize(len, 0);
-                buf
-            }
-        }
+        let (buf, reused) = pool_take(&mut self.u32_pool, len, 0);
+        Self::note_take(&mut self.stats, |s| &mut s.by_u32, reused);
+        buf
     }
 
     /// Return a u32 buffer to the pool.
     pub fn recycle_u32(&mut self, buf: Vec<u32>) {
-        let class = class_of_capacity(buf.capacity());
-        if class == 0 {
-            return;
-        }
-        let pool = self.u32_pool.entry(class).or_default();
-        if pool.len() < MAX_PER_CLASS {
+        if pool_recycle(&mut self.u32_pool, buf) {
             self.stats.recycled += 1;
-            pool.push(buf);
+            self.stats.by_u32.recycled += 1;
+        }
+    }
+
+    /// A zero-filled i8 buffer of exactly `len` elements (quantized
+    /// operand tiles).
+    pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        let (buf, reused) = pool_take(&mut self.i8_pool, len, 0);
+        Self::note_take(&mut self.stats, |s| &mut s.by_i8, reused);
+        buf
+    }
+
+    /// Return an i8 buffer to the pool.
+    pub fn recycle_i8(&mut self, buf: Vec<i8>) {
+        if pool_recycle(&mut self.i8_pool, buf) {
+            self.stats.recycled += 1;
+            self.stats.by_i8.recycled += 1;
+        }
+    }
+
+    /// A zero-filled i32 buffer of exactly `len` elements (quantized
+    /// accumulators).
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        let (buf, reused) = pool_take(&mut self.i32_pool, len, 0);
+        Self::note_take(&mut self.stats, |s| &mut s.by_i32, reused);
+        buf
+    }
+
+    /// Return an i32 buffer to the pool.
+    pub fn recycle_i32(&mut self, buf: Vec<i32>) {
+        if pool_recycle(&mut self.i32_pool, buf) {
+            self.stats.recycled += 1;
+            self.stats.by_i32.recycled += 1;
         }
     }
 }
@@ -213,6 +290,50 @@ mod tests {
         assert_eq!(t2.len(), 90);
         let s = a.stats();
         assert_eq!((s.fresh, s.reused), (1, 1));
+    }
+
+    #[test]
+    fn quantized_pools_are_independent_and_recycle() {
+        let mut a = BufferArena::new();
+        let q = a.take_i8(200);
+        assert!(q.iter().all(|&v| v == 0));
+        let acc = a.take_i32(128);
+        assert!(acc.iter().all(|&v| v == 0));
+        a.recycle_i8(q);
+        a.recycle_i32(acc);
+        // Same classes reuse; the f32/u32 pools never serve them.
+        let q2 = a.take_i8(130);
+        let acc2 = a.take_i32(65);
+        assert_eq!((q2.len(), acc2.len()), (130, 65));
+        let s = a.stats();
+        assert_eq!((s.fresh, s.reused, s.recycled), (2, 2, 2));
+        assert_eq!((s.by_i8.fresh, s.by_i8.reused, s.by_i8.recycled), (1, 1, 1));
+        assert_eq!((s.by_i32.fresh, s.by_i32.reused, s.by_i32.recycled), (1, 1, 1));
+        assert_eq!(s.by_f32, DtypeStats::default());
+        assert_eq!(s.by_u32, DtypeStats::default());
+    }
+
+    #[test]
+    fn per_dtype_breakdown_sums_to_aggregates() {
+        let mut a = BufferArena::new();
+        for _ in 0..3 {
+            let f = a.take_f32(100);
+            let u = a.take_u32(100);
+            let q = a.take_i8(100);
+            let w = a.take_i32(100);
+            a.recycle_f32(f);
+            a.recycle_u32(u);
+            a.recycle_i8(q);
+            a.recycle_i32(w);
+        }
+        let s = a.stats();
+        let rows = [s.by_f32, s.by_u32, s.by_i8, s.by_i32];
+        assert_eq!(rows.iter().map(|r| r.fresh).sum::<u64>(), s.fresh);
+        assert_eq!(rows.iter().map(|r| r.reused).sum::<u64>(), s.reused);
+        assert_eq!(rows.iter().map(|r| r.recycled).sum::<u64>(), s.recycled);
+        // After warm-up every dtype runs pool-hit-only.
+        assert_eq!(s.fresh, 4);
+        assert_eq!(s.reused, 8);
     }
 
     #[test]

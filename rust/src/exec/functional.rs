@@ -26,10 +26,21 @@
 //! and the PJRT path and matching the golden whole-graph result proves
 //! the compiler's partitioning, kernel mapping, and the kernels compose
 //! functionally (DESIGN.md Sec. 5).
+//!
+//! **Quantized execution** (DESIGN.md Sec. 3f): when the executable's
+//! program carries a GA03 [`crate::quant::ScaleTable`], layers with a
+//! scale entry run on the int8 datapath — features quantized per tile,
+//! weights pre-quantized into [`PackedWeightSetI8`] panels, i32
+//! accumulation, and a dequantize epilogue fused with the layer
+//! activation. Integer accumulation is exact, so quantized outputs are
+//! bit-identical across thread counts and runs (pinned in
+//! `rust/tests/quant.rs`). The int8 kernels are the optimized set
+//! regardless of [`TileBackend`] — the backend still executes every
+//! non-quantized layer.
 
 use super::arena::BufferArena;
 use super::golden::WeightStore;
-use super::kernels::{self, PackedWeightSet, PackedWeights};
+use super::kernels::{self, PackedWeightSet, PackedWeightSetI8, PackedWeights};
 use super::ops;
 use crate::compiler::{Executable, TileTask};
 use crate::graph::{CsrSubshard, PartitionedGraph};
@@ -392,10 +403,18 @@ pub struct FunctionalExecutor<'a, B: TileBackend> {
     pub dynamic: bool,
     /// Subshard tasks executed on a re-mapped kernel this run.
     pub remaps: u64,
+    /// Tile/subshard tasks executed on the int8 datapath this run.
+    pub quant_visits: u64,
+    /// Quantize + dequantize epilogue passes this run.
+    pub requant_ops: u64,
+    /// int8 operand bytes streamed through quantized kernels this run.
+    pub int8_bytes: u64,
     /// Reusable tile buffers; pass a warm arena via
     /// [`FunctionalExecutor::with_state`] for zero-alloc steady state.
     pub arena: BufferArena,
     packed: PackedWeightSet,
+    /// int8 weight panels, built iff the program carries a scale table.
+    packed_i8: Option<PackedWeightSetI8>,
 }
 
 impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
@@ -405,14 +424,16 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
         store: &'a WeightStore,
         backend: B,
     ) -> Self {
-        Self::with_state(exe, graph, store, backend, BufferArena::new(), None)
+        Self::with_state(exe, graph, store, backend, BufferArena::new(), None, None)
     }
 
-    /// Construct with a warm [`BufferArena`] and (optionally) an
-    /// already-packed weight set from an earlier run. The packed set is
-    /// validated against the store's fingerprint and rebuilt on
+    /// Construct with a warm [`BufferArena`] and (optionally) the
+    /// already-packed weight sets from an earlier run. Both packed sets
+    /// are validated against the store's fingerprint and rebuilt on
     /// mismatch, so a stale cache can never be applied to different
-    /// weights.
+    /// weights. The int8 set exists exactly when the program carries a
+    /// GA03 scale table (the weights are quantized with the table's
+    /// per-layer scales).
     pub fn with_state(
         exe: &'a Executable,
         graph: &'a PartitionedGraph,
@@ -420,6 +441,7 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
         backend: B,
         arena: BufferArena,
         packed: Option<PackedWeightSet>,
+        packed_i8: Option<PackedWeightSetI8>,
     ) -> Self {
         assert_eq!(
             exe.cfg.n1, graph.cfg.n1,
@@ -429,6 +451,15 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
             Some(p) if p.fingerprint == store.fingerprint() => p,
             _ => PackedWeightSet::build(&exe.ir, store),
         };
+        let packed_i8 = match (&exe.program.scales, packed_i8) {
+            (Some(_), Some(p)) if p.fingerprint == store.fingerprint() => Some(p),
+            (Some(st), _) => {
+                let ws: Vec<(u16, f32)> =
+                    st.entries.iter().map(|e| (e.layer_id, e.w_scale)).collect();
+                Some(PackedWeightSetI8::build(&exe.ir, store, &ws))
+            }
+            (None, _) => None,
+        };
         FunctionalExecutor {
             exe,
             graph,
@@ -436,16 +467,20 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
             backend,
             dynamic: false,
             remaps: 0,
+            quant_visits: 0,
+            requant_ops: 0,
+            int8_bytes: 0,
             arena,
             packed,
+            packed_i8,
         }
     }
 
-    /// Hand back the reusable state (arena + packed weights) so the
-    /// next executor over the same executable skips packing and starts
-    /// with a warm pool.
-    pub fn into_state(self) -> (BufferArena, PackedWeightSet) {
-        (self.arena, self.packed)
+    /// Hand back the reusable state (arena + f32/int8 packed weights)
+    /// so the next executor over the same executable skips packing and
+    /// starts with a warm pool.
+    pub fn into_state(self) -> (BufferArena, PackedWeightSet, Option<PackedWeightSetI8>) {
+        (self.arena, self.packed, self.packed_i8)
     }
 
     /// Execute every Tiling Block in program order. Returns the last
@@ -462,8 +497,10 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
         let mut outputs: HashMap<u16, Vec<f32>> = HashMap::new();
         let mut edge_w: Vec<f32> = self.arena.copy_f32(&graph.w);
         let mut last = 0u16;
+        let scales = exe.program.scales.as_ref();
         for (layer, tasks) in ir.layers.iter().zip(&exe.tasks) {
             debug_assert_eq!(layer.id, tasks.layer_id);
+            let qent = scales.and_then(|st| st.entry(layer.id)).copied();
             let f_in = layer.f_in as usize;
             let f_out = layer.f_out as usize;
             let h_in: &[f32] = match layer.parents.first() {
@@ -492,6 +529,70 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
                         let (rows, cols) = (*rows as usize, *cols as usize);
                         let (row0, col0) =
                             (*shard as usize * n1, *fiber as usize * exe.cfg.n2 as usize);
+                        // Quantized Sum/Mean tile: the whole tile runs
+                        // int8 with one i32 accumulator — integer
+                        // addition is associative, so cross-subshard
+                        // accumulation (and row-block threading) is
+                        // exact and the single dequantize at the end
+                        // fuses with the activation. Max/Min compare
+                        // magnitudes and stay f32; the dynamic re-map
+                        // is bypassed here because its densified GEMM
+                        // re-orders the f32 summation, which would
+                        // break the bit-identical guarantee the
+                        // integer path provides.
+                        if let Some(e) =
+                            qent.filter(|_| matches!(aggop, AggOp::Sum | AggOp::Mean))
+                        {
+                            let mut acc_q = self.arena.take_i32(rows * cols);
+                            let mut touched = self.arena.take_u32(rows);
+                            for sref in subshards {
+                                let k = sref.k as usize;
+                                let csr = graph.csr(*shard as usize, k);
+                                if csr.nnz() == 0 {
+                                    continue;
+                                }
+                                debug_assert_eq!(csr.rows as usize, rows);
+                                let range = graph.subshard(*shard as usize, k);
+                                let ew = &edge_w[range];
+                                let rows_k = (n - k * n1).min(n1);
+                                let mut h_tile = self.arena.take_f32(rows_k * cols);
+                                slice_tile_into(
+                                    h_in, f_in, k * n1, rows_k, col0, cols, &mut h_tile,
+                                );
+                                let mut hq = self.arena.take_i8(rows_k * cols);
+                                kernels::quantize_into(&h_tile, e.x_scale, &mut hq);
+                                let mut ewq = self.arena.take_i8(ew.len());
+                                kernels::quantize_into(ew, e.w_scale, &mut ewq);
+                                kernels::spdmm_csr_i8_into(
+                                    csr, &ewq, &hq, cols, &mut acc_q, &mut touched,
+                                );
+                                self.quant_visits += 1;
+                                self.requant_ops += 2;
+                                self.int8_bytes += (hq.len() + ewq.len()) as u64;
+                                self.arena.recycle_f32(h_tile);
+                                self.arena.recycle_i8(hq);
+                                self.arena.recycle_i8(ewq);
+                            }
+                            // Untouched rows hold 0 in the integer
+                            // accumulator — already the Sum neutral.
+                            let mut acc = self.arena.take_f32(rows * cols);
+                            let zb = self.arena.take_f32(cols);
+                            kernels::dequant_bias_into(
+                                &acc_q,
+                                cols,
+                                e.w_scale * e.x_scale,
+                                &zb,
+                                &mut acc,
+                            );
+                            self.requant_ops += 1;
+                            ops::apply_act(&mut acc, *act);
+                            write_tile(&mut out, f_out, row0, rows, col0, cols, &acc);
+                            self.arena.recycle_i32(acc_q);
+                            self.arena.recycle_u32(touched);
+                            self.arena.recycle_f32(zb);
+                            self.arena.recycle_f32(acc);
+                            continue;
+                        }
                         let neutral = match aggop {
                             AggOp::Sum | AggOp::Mean => 0.0f32,
                             AggOp::Max => f32::NEG_INFINITY,
@@ -567,7 +668,6 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
                 }
                 LayerType::Linear => {
                     let (_, b) = store.get(layer.id);
-                    let pw = self.packed.get(layer.id);
                     let mut out = self.arena.take_f32(n * f_out);
                     for t in &tasks.tasks {
                         let TileTask::Linear { row0, rows, act, .. } = t else {
@@ -579,7 +679,35 @@ impl<'a, B: TileBackend> FunctionalExecutor<'a, B> {
                         // h_in and out: no tile copies on this path.
                         let h_tile = &h_in[row0 * f_in..(row0 + rows) * f_in];
                         let o = &mut out[row0 * f_out..(row0 + rows) * f_out];
-                        self.backend.gemm_packed(h_tile, rows, pw, b, o);
+                        match (qent, self.packed_i8.as_ref()) {
+                            (Some(e), Some(pi8)) => {
+                                // int8 row block: quantize features at
+                                // the calibrated scale, multiply into
+                                // i32, dequantize + bias fused ahead of
+                                // the activation.
+                                let pw8 = pi8.get(layer.id);
+                                let mut hq = self.arena.take_i8(rows * f_in);
+                                kernels::quantize_into(h_tile, e.x_scale, &mut hq);
+                                let mut acc = self.arena.take_i32(rows * f_out);
+                                kernels::gemm_i8_packed_into(&hq, rows, pw8, &mut acc);
+                                kernels::dequant_bias_into(
+                                    &acc,
+                                    f_out,
+                                    e.w_scale * e.x_scale,
+                                    b,
+                                    o,
+                                );
+                                self.quant_visits += 1;
+                                self.requant_ops += 2;
+                                self.int8_bytes += (hq.len() + pw8.k * pw8.n) as u64;
+                                self.arena.recycle_i8(hq);
+                                self.arena.recycle_i32(acc);
+                            }
+                            _ => {
+                                let pw = self.packed.get(layer.id);
+                                self.backend.gemm_packed(h_tile, rows, pw, b, o);
+                            }
+                        }
                         ops::apply_act(o, *act);
                     }
                     out
@@ -838,13 +966,82 @@ mod tests {
         let x = g.random_features(5);
         let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
         let first = fx.run(&x);
-        let (arena, packed) = fx.into_state();
+        let (arena, packed, _) = fx.into_state();
         let cold_fresh = arena.stats().fresh;
-        let mut fx2 =
-            FunctionalExecutor::with_state(&exe, &pg, &store, RustBackend, arena, Some(packed));
+        let mut fx2 = FunctionalExecutor::with_state(
+            &exe,
+            &pg,
+            &store,
+            RustBackend,
+            arena,
+            Some(packed),
+            None,
+        );
         let second = fx2.run(&x);
         assert_eq!(first, second, "warm run changed numerics");
         let warm_fresh = fx2.arena.stats().fresh - cold_fresh;
         assert!(warm_fresh <= 1, "warm run allocated {warm_fresh} fresh buffers");
+    }
+
+    #[test]
+    fn quantized_run_matches_golden_within_calibrated_bound() {
+        use crate::quant::{calibrate, CalibrationProfile};
+        for model in [ZooModel::B1, ZooModel::B7] {
+            let (mut exe, pg, g, store) = setup(model, 300, 1500, 32);
+            let x = g.random_features(5);
+            let golden = golden_forward(&exe.ir, &g, &store, &x);
+            let cal = calibrate(&exe.ir, &store, &CalibrationProfile::exact(&g, &x));
+            assert!(cal.bound.is_finite() && cal.bound > 0.0);
+            exe.program.scales = Some(cal.table);
+            let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+            let got = fx.run(&x);
+            assert!(
+                fx.quant_visits > 0 && fx.requant_ops > 0 && fx.int8_bytes > 0,
+                "{}: int8 datapath never engaged",
+                exe.ir.name
+            );
+            let err = max_err(&golden, &got);
+            assert!(
+                err <= cal.bound,
+                "{}: int8 err {err} exceeds calibrated bound {}",
+                exe.ir.name,
+                cal.bound
+            );
+            // Integer accumulation is order-independent: a repeat run
+            // is bit-identical, not merely close.
+            let again = FunctionalExecutor::new(&exe, &pg, &store, RustBackend).run(&x);
+            assert_eq!(got, again, "{}: quantized run not reproducible", exe.ir.name);
+        }
+    }
+
+    #[test]
+    fn warm_quantized_runs_stay_zero_alloc() {
+        use crate::quant::{calibrate, CalibrationProfile};
+        let (mut exe, pg, g, store) = setup(ZooModel::B1, 300, 1500, 32);
+        let x = g.random_features(5);
+        let cal = calibrate(&exe.ir, &store, &CalibrationProfile::exact(&g, &x));
+        exe.program.scales = Some(cal.table);
+        let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let first = fx.run(&x);
+        let (arena, packed, packed_i8) = fx.into_state();
+        assert!(packed_i8.is_some(), "scaled program must build int8 panels");
+        let cold_fresh = arena.stats().fresh;
+        let mut fx2 = FunctionalExecutor::with_state(
+            &exe,
+            &pg,
+            &store,
+            RustBackend,
+            arena,
+            Some(packed),
+            packed_i8,
+        );
+        let second = fx2.run(&x);
+        assert_eq!(first, second, "warm quantized run changed numerics");
+        // The f32 zero-alloc invariant extends to the int8 pools: a
+        // warm quantized run draws every i8/i32 buffer from the arena.
+        let warm_fresh = fx2.arena.stats().fresh - cold_fresh;
+        assert!(warm_fresh <= 1, "warm quantized run allocated {warm_fresh} fresh buffers");
+        let s = fx2.arena.stats();
+        assert!(s.by_i8.reused > 0 && s.by_i32.reused > 0, "int8 pools never reused");
     }
 }

@@ -447,6 +447,297 @@ pub fn csr_from_coo(src: &[u32], dst: &[u32], n_out: usize) -> CsrSubshard {
     CsrSubshard::from_local_coo(dst.iter().copied(), src.iter().copied(), n_out)
 }
 
+// ---------------------------------------------------------------------
+// int8 datapath: symmetric quantization, packed i8 panels, and i32-
+// accumulating GEMM/SpDMM twins of the f32 kernels above. Integer
+// accumulation is exactly associative, so the row-parallel splits are
+// bit-identical at any thread count without the f32 epsilon caveats.
+// ---------------------------------------------------------------------
+
+/// Symmetric int8 quantization: `q = clamp(round(v / scale), -127, 127)`
+/// with round-half-away-from-zero. The sign-carrying 0.5 offset plus a
+/// truncating cast keeps the loop branch-free and autovectorizable (no
+/// libm round call), and `round(0) == 0` preserves post-ReLU zeros
+/// exactly — the GEMM's zero-quad skip keeps working on quantized rows.
+pub fn quantize_into(src: &[f32], scale: f32, out: &mut [i8]) {
+    assert_eq!(src.len(), out.len(), "quantize shape");
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    for (o, &v) in out.iter_mut().zip(src) {
+        let t = v * inv;
+        let r = (t + 0.5f32.copysign(t)) as i32;
+        *o = r.clamp(-127, 127) as i8;
+    }
+}
+
+/// Dequantize an i32 accumulator tile back to f32: `out[r][j] =
+/// acc[r][j] * s + b[j]`. `s` is the product of the two operand scales
+/// (GEMM: `s_x * s_w`); the caller fuses the layer activation into the
+/// same pass over `out` (`exec::functional`).
+pub fn dequant_bias_into(acc: &[i32], n: usize, s: f32, b: &[f32], out: &mut [f32]) {
+    assert_eq!(acc.len(), out.len(), "dequant shape");
+    assert_eq!(b.len(), n, "bias shape");
+    for (orow, arow) in out.chunks_mut(n).zip(acc.chunks(n)) {
+        for ((o, &a), &bv) in orow.iter_mut().zip(arow).zip(b) {
+            *o = a as f32 * s + bv;
+        }
+    }
+}
+
+/// A Linear layer's weights, symmetrically quantized to int8 at `scale`
+/// and reordered into the same panel layout as [`PackedWeights`] (the
+/// blocked GEMM walks both identically). Packed once per executable.
+#[derive(Clone, Debug)]
+pub struct PackedWeightsI8 {
+    pub k: usize,
+    pub n: usize,
+    /// The symmetric scale the panels were quantized with (w = q * scale).
+    pub scale: f32,
+    panels: Vec<i8>,
+}
+
+impl PackedWeightsI8 {
+    pub fn pack(w: &[f32], k: usize, n: usize, scale: f32) -> PackedWeightsI8 {
+        assert_eq!(w.len(), k * n, "weight shape");
+        let mut q = vec![0i8; k * n];
+        quantize_into(w, scale, &mut q);
+        let mut panels = Vec::with_capacity(k * n);
+        let mut j0 = 0;
+        while j0 < n {
+            let wp = (n - j0).min(NC);
+            for kk in 0..k {
+                panels.extend_from_slice(&q[kk * n + j0..kk * n + j0 + wp]);
+            }
+            j0 += wp;
+        }
+        PackedWeightsI8 { k, n, scale, panels }
+    }
+}
+
+/// Every quantized Linear layer's [`PackedWeightsI8`], keyed like
+/// [`PackedWeightSet`] and built lazily on the first quantized run (the
+/// weight scale is a pure function of the weights, so one i8 set serves
+/// every program compiled against the same store).
+#[derive(Clone, Debug, Default)]
+pub struct PackedWeightSetI8 {
+    pub fingerprint: u64,
+    by_layer: HashMap<u16, PackedWeightsI8>,
+}
+
+impl PackedWeightSetI8 {
+    /// Quantize-and-pack every Linear layer listed in `scales`
+    /// (`(layer_id, w_scale)` pairs — `exec` stays independent of the
+    /// calibration pass that derives them).
+    pub fn build(ir: &ModelIr, store: &WeightStore, scales: &[(u16, f32)]) -> PackedWeightSetI8 {
+        let want: HashMap<u16, f32> = scales.iter().copied().collect();
+        let mut by_layer = HashMap::new();
+        for l in &ir.layers {
+            if l.ltype == LayerType::Linear {
+                if let Some(&s) = want.get(&l.id) {
+                    let (w, _) = store.get(l.id);
+                    by_layer.insert(
+                        l.id,
+                        PackedWeightsI8::pack(w, l.f_in as usize, l.f_out as usize, s),
+                    );
+                }
+            }
+        }
+        PackedWeightSetI8 { fingerprint: store.fingerprint(), by_layer }
+    }
+
+    pub fn get(&self, layer_id: u16) -> &PackedWeightsI8 {
+        self.by_layer.get(&layer_id).expect("no packed i8 weights for layer")
+    }
+}
+
+/// Serial blocked int8 GEMM over one block of rows: `acc += hq @ wq`
+/// with i32 accumulation. The caller zero-fills `acc`; bias and
+/// dequantization run in the f32 epilogue. Same NC/KC/MR blocking as
+/// the f32 kernel, with a k-pair inner loop: two i8 products summed in
+/// i16 (`|p| <= 2 * 127^2 = 32258 < i16::MAX`) before one widening add,
+/// which halves the widening work and maps onto packed multiply-add.
+fn gemm_i8_block(hq: &[i8], rows: usize, k: usize, n: usize, panels: &[i8], acc: &mut [i32]) {
+    let mut panel_base = 0usize;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let wp = (n - j0).min(NC);
+        let mut k0 = 0usize;
+        while k0 < k {
+            let kb = (k - k0).min(KC);
+            let mut r = 0usize;
+            while r + MR <= rows {
+                let mut accq = [[0i32; NC]; MR];
+                let [acc0, acc1, acc2, acc3] = &mut accq;
+                let (acc0, acc1) = (&mut acc0[..wp], &mut acc1[..wp]);
+                let (acc2, acc3) = (&mut acc2[..wp], &mut acc3[..wp]);
+                let mut kk = k0;
+                while kk + 2 <= k0 + kb {
+                    let a00 = hq[r * k + kk] as i16;
+                    let a01 = hq[r * k + kk + 1] as i16;
+                    let a10 = hq[(r + 1) * k + kk] as i16;
+                    let a11 = hq[(r + 1) * k + kk + 1] as i16;
+                    let a20 = hq[(r + 2) * k + kk] as i16;
+                    let a21 = hq[(r + 2) * k + kk + 1] as i16;
+                    let a30 = hq[(r + 3) * k + kk] as i16;
+                    let a31 = hq[(r + 3) * k + kk + 1] as i16;
+                    kk += 2;
+                    if (a00 | a01 | a10 | a11 | a20 | a21 | a30 | a31) == 0 {
+                        continue; // post-ReLU sparsity survives quantization
+                    }
+                    let w0 = &panels[panel_base + (kk - 2) * wp..][..wp];
+                    let w1 = &panels[panel_base + (kk - 1) * wp..][..wp];
+                    for i in 0..wp {
+                        let (wv0, wv1) = (w0[i] as i16, w1[i] as i16);
+                        acc0[i] += (a00 * wv0 + a01 * wv1) as i32;
+                        acc1[i] += (a10 * wv0 + a11 * wv1) as i32;
+                        acc2[i] += (a20 * wv0 + a21 * wv1) as i32;
+                        acc3[i] += (a30 * wv0 + a31 * wv1) as i32;
+                    }
+                }
+                if kk < k0 + kb {
+                    let a0 = hq[r * k + kk] as i32;
+                    let a1 = hq[(r + 1) * k + kk] as i32;
+                    let a2 = hq[(r + 2) * k + kk] as i32;
+                    let a3 = hq[(r + 3) * k + kk] as i32;
+                    if (a0 | a1 | a2 | a3) != 0 {
+                        let w0 = &panels[panel_base + kk * wp..][..wp];
+                        for i in 0..wp {
+                            let wv = w0[i] as i32;
+                            acc0[i] += a0 * wv;
+                            acc1[i] += a1 * wv;
+                            acc2[i] += a2 * wv;
+                            acc3[i] += a3 * wv;
+                        }
+                    }
+                }
+                for (q, accq) in accq.iter().enumerate() {
+                    let at = (r + q) * n + j0;
+                    for (o, &a) in acc[at..at + wp].iter_mut().zip(&accq[..wp]) {
+                        *o += a;
+                    }
+                }
+                r += MR;
+            }
+            while r < rows {
+                for kk in k0..k0 + kb {
+                    let a = hq[r * k + kk] as i32;
+                    if a == 0 {
+                        continue;
+                    }
+                    let wrow = &panels[panel_base + kk * wp..][..wp];
+                    let orow = &mut acc[r * n + j0..r * n + j0 + wp];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += a * wv as i32;
+                    }
+                }
+                r += 1;
+            }
+            k0 += kb;
+        }
+        panel_base += k * wp;
+        j0 += wp;
+    }
+}
+
+/// `acc(m x n) += hq @ Wq` against int8 panels packed once per
+/// executable. Row-parallel like the f32 kernel; i32 accumulation is
+/// exact, so any thread count produces identical bits.
+pub fn gemm_i8_packed_into(hq: &[i8], m: usize, pw: &PackedWeightsI8, acc: &mut [i32]) {
+    assert_eq!(hq.len(), m * pw.k, "h shape");
+    assert_eq!(acc.len(), m * pw.n, "acc shape");
+    let (k, n) = (pw.k, pw.n);
+    let threads = kernel_threads();
+    if threads <= 1 || 2 * m * k * n < PAR_MIN_FLOPS || m < 2 * MR {
+        gemm_i8_block(hq, m, k, n, &pw.panels, acc);
+        return;
+    }
+    let per = (m.div_ceil(threads)).div_ceil(MR) * MR;
+    std::thread::scope(|s| {
+        for (hc, oc) in hq.chunks(per * k).zip(acc.chunks_mut(per * n)) {
+            let rows = oc.len() / n;
+            let panels = &pw.panels;
+            s.spawn(move || gemm_i8_block(hc, rows, k, n, panels, oc));
+        }
+    });
+}
+
+/// Serial int8 CSR aggregation over local rows [r0, r0 + acc_rows/f):
+/// Sum semantics with i32 accumulation (Mean divides at dequant time).
+/// Edge pairs share one i16 widening add, mirroring the GEMM inner loop.
+fn spdmm_i8_rows(
+    csr: &CsrSubshard,
+    ewq: &[i8],
+    hq: &[i8],
+    f: usize,
+    acc_rows: &mut [i32],
+    touched: &mut [u32],
+    r0: usize,
+) {
+    for (ri, orow) in acc_rows.chunks_mut(f).enumerate() {
+        let r = r0 + ri;
+        let lo = csr.row_offsets[r] as usize;
+        let hi = csr.row_offsets[r + 1] as usize;
+        if lo == hi {
+            continue;
+        }
+        touched[ri] = 1;
+        let mut slot = lo;
+        while slot + 2 <= hi {
+            let c0 = csr.cols[slot] as usize;
+            let c1 = csr.cols[slot + 1] as usize;
+            let w0 = ewq[csr.perm[slot] as usize] as i16;
+            let w1 = ewq[csr.perm[slot + 1] as usize] as i16;
+            let h0 = &hq[c0 * f..(c0 + 1) * f];
+            let h1 = &hq[c1 * f..(c1 + 1) * f];
+            for ((o, &v0), &v1) in orow.iter_mut().zip(h0).zip(h1) {
+                *o += (w0 * v0 as i16 + w1 * v1 as i16) as i32;
+            }
+            slot += 2;
+        }
+        if slot < hi {
+            let c = csr.cols[slot] as usize;
+            let wv = ewq[csr.perm[slot] as usize] as i32;
+            let hrow = &hq[c * f..(c + 1) * f];
+            for (o, &hv) in orow.iter_mut().zip(hrow) {
+                *o += wv * hv as i32;
+            }
+        }
+    }
+}
+
+/// int8 twin of [`spdmm_csr_into`] for Sum/Mean aggregation: i32 row
+/// reductions over quantized features and edge weights (Mean's division
+/// happens in the f32 dequant epilogue, where it is exact). `acc` may
+/// carry earlier subshards' partials — integer accumulation makes the
+/// cross-subshard combine order-independent.
+pub fn spdmm_csr_i8_into(
+    csr: &CsrSubshard,
+    ewq: &[i8],
+    hq: &[i8],
+    f: usize,
+    acc: &mut [i32],
+    touched: &mut [u32],
+) {
+    let rows = csr.rows as usize;
+    assert_eq!(acc.len(), rows * f, "acc shape");
+    assert_eq!(touched.len(), rows, "touched shape");
+    assert_eq!(ewq.len(), csr.nnz(), "edge weights");
+    if f == 0 || rows == 0 {
+        return;
+    }
+    let threads = kernel_threads();
+    if threads <= 1 || csr.nnz() * f < PAR_MIN_EDGE_WORK || rows < 2 {
+        spdmm_i8_rows(csr, ewq, hq, f, acc, touched, 0);
+        return;
+    }
+    let per = rows.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        for (ci, (ac, tc)) in acc.chunks_mut(per * f).zip(touched.chunks_mut(per)).enumerate() {
+            let r0 = ci * per;
+            s.spawn(move || spdmm_i8_rows(csr, ewq, hq, f, ac, tc, r0));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -548,6 +839,124 @@ mod tests {
             let got = dot(&a, &b);
             assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "len {len}");
         }
+    }
+
+    #[test]
+    fn quantize_rounds_clamps_and_keeps_zeros() {
+        let src = [0.0f32, 0.05, -0.05, 1.0, -1.0, 2.5, -2.5];
+        let mut q = vec![0i8; src.len()];
+        quantize_into(&src, 1.0 / 127.0, &mut q);
+        // 0 stays exactly 0; +-0.05 rounds to +-6 (0.05*127 = 6.35);
+        // +-1.0 hits the full range; out-of-range saturates.
+        assert_eq!(q, vec![0, 6, -6, 127, -127, 127, -127]);
+        // Half-away rounding: 0.5 quanta rounds up in magnitude.
+        let mut q2 = vec![0i8; 2];
+        quantize_into(&[1.5, -1.5], 1.0, &mut q2);
+        assert_eq!(q2, vec![2, -2]);
+    }
+
+    fn naive_gemm_i32(hq: &[i8], m: usize, k: usize, wq: &[i8], n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0i32;
+                for kk in 0..k {
+                    s += hq[i * k + kk] as i32 * wq[kk * n + j] as i32;
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_i8_gemm_is_exact_over_shapes() {
+        let mut rng = Rng::new(77);
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 5, 7), (4, 128, 128), (17, 201, 33), (65, 96, 130)]
+        {
+            // Full-range i8 activations with a zero-row sprinkle (the
+            // quad-skip path must stay exact).
+            let hq: Vec<i8> = (0..m * k)
+                .map(|_| if rng.below(4) == 0 { 0 } else { (rng.below(255) as i32 - 127) as i8 })
+                .collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let pw = PackedWeightsI8::pack(&w, k, n, 3.0 / 127.0);
+            let mut wq = vec![0i8; k * n];
+            quantize_into(&w, 3.0 / 127.0, &mut wq);
+            let want = naive_gemm_i32(&hq, m, k, &wq, n);
+            let mut got = vec![0i32; m * n];
+            gemm_i8_packed_into(&hq, m, &pw, &mut got);
+            assert_eq!(got, want, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn i8_gemm_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (64usize, 128usize, 128usize);
+        let hq: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let pw = PackedWeightsI8::pack(&w, k, n, 2.0 / 127.0);
+        let prev = std::env::var("GA_KERNEL_THREADS").ok();
+        let run = |t: &str| {
+            std::env::set_var("GA_KERNEL_THREADS", t);
+            let mut out = vec![0i32; m * n];
+            gemm_i8_packed_into(&hq, m, &pw, &mut out);
+            out
+        };
+        let (one, four) = (run("1"), run("4"));
+        match prev {
+            Some(v) => std::env::set_var("GA_KERNEL_THREADS", v),
+            None => std::env::remove_var("GA_KERNEL_THREADS"),
+        }
+        assert_eq!(one, four);
+    }
+
+    #[test]
+    fn spdmm_i8_sums_exactly_with_odd_and_even_degrees() {
+        // Vertex 0 has degree 3 (odd: exercises the pair remainder),
+        // vertex 1 degree 2, vertex 2 untouched.
+        let src = [1u32, 2, 3, 0, 3];
+        let dst = [0u32, 0, 0, 1, 1];
+        let csr = csr_from_coo(&src, &dst, 4);
+        let ewq: Vec<i8> = vec![2, 3, -4, 5, 7];
+        let hq: Vec<i8> = vec![10, -20, 30, 40]; // f = 1
+        let mut acc = vec![0i32; 4];
+        let mut touched = vec![0u32; 4];
+        spdmm_csr_i8_into(&csr, &ewq, &hq, 1, &mut acc, &mut touched);
+        // Row 0: 2*h[1] + 3*h[2] + (-4)*h[3] = -40 + 90 - 160 = -110.
+        // Row 1: 5*h[0] + 7*h[3] = 50 + 280 = 330.
+        assert_eq!(acc, vec![-110, 330, 0, 0]);
+        assert_eq!(touched, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn dequant_applies_scale_and_bias() {
+        let acc = [100i32, -200, 0, 50];
+        let b = [1.0f32, -1.0];
+        let mut out = vec![0f32; 4];
+        dequant_bias_into(&acc, 2, 0.01, &b, &mut out);
+        assert_eq!(out, vec![2.0, -3.0, 1.0, -0.5]);
+    }
+
+    #[test]
+    fn i8_packing_matches_quantized_rowmajor() {
+        let mut rng = Rng::new(13);
+        let (k, n) = (5usize, NC + 7);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let scale = 4.0 / 127.0;
+        let pw = PackedWeightsI8::pack(&w, k, n, scale);
+        let mut q = vec![0i8; k * n];
+        quantize_into(&w, scale, &mut q);
+        // The panel layout is the same permutation as the f32 pack:
+        // multiset equality plus a spot check of the first panel row.
+        let mut a = pw.panels.clone();
+        let mut b = q.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(&pw.panels[..NC], &q[..NC]);
     }
 
     #[test]

@@ -23,9 +23,9 @@ pub mod golden;
 pub mod kernels;
 pub mod ops;
 
-pub use arena::{ArenaStats, BufferArena};
+pub use arena::{ArenaStats, BufferArena, DtypeStats};
 pub use functional::{
     CountingBackend, FunctionalExecutor, ReferenceBackend, RustBackend, TileBackend,
 };
 pub use golden::{golden_forward, golden_forward_in, golden_forward_reference, WeightStore};
-pub use kernels::{PackedWeightSet, PackedWeights};
+pub use kernels::{PackedWeightSet, PackedWeightSetI8, PackedWeights, PackedWeightsI8};

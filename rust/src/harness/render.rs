@@ -80,6 +80,16 @@ pub fn serve_summary(stats: &ServeStats) -> String {
         ));
     }
     out.push_str(&format!("  kernel re-maps    {}\n", stats.remaps));
+    if stats.quantized > 0 {
+        out.push_str(&format!(
+            "  quantized         {} requests ({} int8 visits)\n",
+            stats.quantized, stats.quant_visits
+        ));
+        out.push_str(&format!(
+            "  requant ops       {} ({} int8 bytes moved)\n",
+            stats.requant_ops, stats.int8_bytes
+        ));
+    }
     out.push_str(&format!(
         "  latency p50/p99   {} ms / {} ms\n",
         ms(stats.p50),
@@ -130,6 +140,10 @@ mod tests {
             sampled_vertices: 123,
             sampled_edges: 456,
             remaps: 42,
+            quantized: 3,
+            quant_visits: 77,
+            requant_ops: 88,
+            int8_bytes: 999,
             updates: 6,
             max_epoch: 9,
             dirty_subshards: 11,
@@ -147,6 +161,8 @@ mod tests {
         let s = serve_summary(&stats);
         assert!(s.contains("3 coalesced"), "{s}");
         assert!(s.contains("re-maps    42"), "{s}");
+        assert!(s.contains("3 requests (77 int8 visits)"), "{s}");
+        assert!(s.contains("requant ops       88 (999 int8 bytes moved)"), "{s}");
         // 6 of the 8 completed requests were updates: the hit-rate
         // denominator is the 2 inference requests.
         assert!(s.contains("7 / 2"), "{s}");
@@ -178,5 +194,6 @@ mod tests {
         assert!(!s.contains("p50 mini"), "{s}");
         assert!(!s.contains("updates"), "{s}");
         assert!(!s.contains("dirty subshards"), "{s}");
+        assert!(!s.contains("quantized"), "{s}");
     }
 }

@@ -1,11 +1,12 @@
 //! The `.ga` executable format (compiler output; Table 8 measures sizes).
 //!
-//! Layout (version 2):
+//! Layout (version 3):
 //! ```text
-//! magic "GA02"           4 bytes         ("GA01" = no threshold section)
+//! magic "GA03"           4 bytes         ("GA01"/"GA02" = older layouts)
 //! n1, n2                 u32 each        (partition configuration)
 //! model/graph names      u16 len + utf8 each
-//! threshold section      u8 flag + ThresholdTable body (GA02 only)
+//! threshold section      u8 flag + ThresholdTable body (GA02+)
+//! scale section          u8 flag + ScaleTable body (GA03 only)
 //! n_layer_blocks         u32
 //! per Layer Block:
 //!   CSI instruction      16 bytes
@@ -18,10 +19,14 @@
 //!
 //! Version history: `GA01` is the original format; `GA02` inserts the
 //! optional density-threshold section (`crate::sparsity::ThresholdTable`)
-//! between the names and the Layer Blocks. The writer emits `GA01`
-//! byte-identically when no table is attached, and the reader accepts
-//! both magics — old binaries keep loading, new readers see
-//! `thresholds: None` for them.
+//! between the names and the Layer Blocks; `GA03` appends the optional
+//! int8 calibration section (`crate::quant::ScaleTable`) after it. The
+//! writer always emits the **oldest sufficient** magic: no scales and no
+//! thresholds serializes byte-identically to a legacy `GA01` binary, and
+//! thresholds-only to a `GA02` one (under `GA03` the threshold flag byte
+//! is always present, 0 or 1, so the scale flag has a fixed anchor). The
+//! reader accepts all three magics — old binaries keep loading, new
+//! readers see `thresholds: None` / `scales: None` for them.
 //!
 //! The Scheduler streams this from DDR: only the CSI of the current layer
 //! is resident on-chip; Tiling Blocks are forwarded whole to PE
@@ -29,6 +34,7 @@
 
 use super::encode::{decode, encode, INSTR_BYTES};
 use super::instr::Instr;
+use crate::quant::ScaleTable;
 use crate::sparsity::ThresholdTable;
 use anyhow::{bail, Context, Result};
 
@@ -85,18 +91,30 @@ pub struct Program {
     /// Optional density-threshold table for runtime kernel re-mapping
     /// (the GA02 section; `None` round-trips as a legacy GA01 binary).
     pub thresholds: Option<ThresholdTable>,
+    /// Optional int8 calibration table (the GA03 section). A program
+    /// carrying scales executes its eligible subshards on the quantized
+    /// datapath; `None` round-trips as a GA01/GA02 binary.
+    pub scales: Option<ScaleTable>,
     pub layers: Vec<LayerBlock>,
 }
 
 const MAGIC_V1: &[u8; 4] = b"GA01";
 const MAGIC_V2: &[u8; 4] = b"GA02";
+const MAGIC_V3: &[u8; 4] = b"GA03";
 
 impl Program {
-    /// Serialize to the wire format. Emits legacy `GA01` bytes when no
-    /// threshold table is attached, `GA02` otherwise.
+    /// Serialize to the wire format. Emits the oldest sufficient magic:
+    /// `GA01` with neither optional section, `GA02` with thresholds
+    /// only, `GA03` whenever a scale table is attached.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.size_bytes() as usize);
-        out.extend_from_slice(if self.thresholds.is_some() { MAGIC_V2 } else { MAGIC_V1 });
+        out.extend_from_slice(if self.scales.is_some() {
+            MAGIC_V3
+        } else if self.thresholds.is_some() {
+            MAGIC_V2
+        } else {
+            MAGIC_V1
+        });
         out.extend_from_slice(&self.n1.to_le_bytes());
         out.extend_from_slice(&self.n2.to_le_bytes());
         for name in [&self.model_name, &self.graph_name] {
@@ -107,6 +125,14 @@ impl Program {
         if let Some(tt) = &self.thresholds {
             out.push(1);
             out.extend_from_slice(&tt.to_bytes());
+        } else if self.scales.is_some() {
+            // GA03 always carries the threshold flag byte so the scale
+            // flag sits at a fixed position after it.
+            out.push(0);
+        }
+        if let Some(st) = &self.scales {
+            out.push(1);
+            out.extend_from_slice(&st.to_bytes());
         }
         out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
         for layer in &self.layers {
@@ -137,6 +163,7 @@ impl Program {
         let version = match take(&mut at, 4)? {
             m if m == MAGIC_V1 => 1,
             m if m == MAGIC_V2 => 2,
+            m if m == MAGIC_V3 => 3,
             _ => bail!("bad magic"),
         };
         let rd_u32 = |at: &mut usize| -> Result<u32> {
@@ -170,6 +197,19 @@ impl Program {
         } else {
             None
         };
+        let scales = if version >= 3 {
+            match take(&mut at, 1)?[0] {
+                0 => None,
+                1 => {
+                    let (st, used) = ScaleTable::from_bytes(&data[at..])?;
+                    at += used;
+                    Some(st)
+                }
+                v => bail!("bad scale-section flag {v}"),
+            }
+        } else {
+            None
+        };
         let n_layers = rd_u32(&mut at)? as usize;
         let mut layers = Vec::with_capacity(n_layers);
         for _ in 0..n_layers {
@@ -193,7 +233,7 @@ impl Program {
             Instr::Halt => {}
             other => bail!("expected HALT, got {other:?}"),
         }
-        Ok(Program { n1, n2, model_name, graph_name, thresholds, layers })
+        Ok(Program { n1, n2, model_name, graph_name, thresholds, scales, layers })
     }
 
     /// Serialized size (what Table 8 reports) without materializing.
@@ -203,6 +243,11 @@ impl Program {
         sz += 2 + self.graph_name.len() as u64;
         if let Some(tt) = &self.thresholds {
             sz += 1 + tt.size_bytes(); // GA02 section flag + body
+        } else if self.scales.is_some() {
+            sz += 1; // GA03 writes the empty threshold flag explicitly
+        }
+        if let Some(st) = &self.scales {
+            sz += 1 + st.size_bytes(); // GA03 section flag + body
         }
         sz += 4; // n_layers
         for layer in &self.layers {
@@ -241,6 +286,7 @@ mod tests {
             model_name: "b1".into(),
             graph_name: "CO".into(),
             thresholds: None,
+            scales: None,
             layers: vec![LayerBlock {
                 csi: Instr::Csi { layer_id: 1, layer_type: 0, n_tiling_blocks: 2 },
                 blocks: vec![
@@ -309,6 +355,69 @@ mod tests {
         assert!(Program::from_bytes(&bad).is_err());
         // Truncating inside the section is rejected too.
         assert!(Program::from_bytes(&bytes[..flag_at + 5]).is_err());
+    }
+
+    fn sample_scales() -> ScaleTable {
+        use crate::quant::ScaleEntry;
+        ScaleTable {
+            input_absmax: 1.0,
+            bound: 0.25,
+            entries: vec![ScaleEntry {
+                layer_id: 1,
+                w_scale: 0.01,
+                x_scale: 0.02,
+                y_absmax: 3.5,
+            }],
+        }
+    }
+
+    #[test]
+    fn scale_section_roundtrip_and_versioned_magic() {
+        // Scales without thresholds: GA03 with an explicit empty
+        // threshold flag ahead of the scale section.
+        let mut p = sample_program();
+        p.scales = Some(sample_scales());
+        let bytes = p.to_bytes();
+        assert_eq!(&bytes[..4], b"GA03");
+        assert_eq!(bytes.len() as u64, p.size_bytes());
+        let q = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(p, q);
+        let flag_at = 4 + 4 + 4 + 2 + 2 + 2 + 2; // header + "b1" + "CO"
+        assert_eq!(bytes[flag_at], 0, "empty threshold flag");
+        assert_eq!(bytes[flag_at + 1], 1, "scale flag");
+        // Corrupting the scale flag is rejected, not silently skipped.
+        let mut bad = bytes.clone();
+        bad[flag_at + 1] = 9;
+        assert!(Program::from_bytes(&bad).is_err());
+        // Truncating inside the scale section is rejected too.
+        assert!(Program::from_bytes(&bytes[..flag_at + 6]).is_err());
+    }
+
+    #[test]
+    fn both_sections_coexist_under_ga03() {
+        use crate::sparsity::{KernelMode, ThresholdEntry, ThresholdTable};
+        let mut p = sample_program();
+        p.thresholds = Some(ThresholdTable {
+            dense_hi: 0.125,
+            sparse_lo: 0.0625,
+            entries: vec![ThresholdEntry {
+                layer_id: 1,
+                provisional: KernelMode::Spdmm,
+                feat_density: 1.0,
+                adj_density: 0.2,
+            }],
+        });
+        p.scales = Some(sample_scales());
+        let bytes = p.to_bytes();
+        assert_eq!(&bytes[..4], b"GA03");
+        assert_eq!(bytes.len() as u64, p.size_bytes());
+        let q = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(p, q);
+        // Dropping the scale table falls back to GA02 byte-identically.
+        let mut ga02 = p.clone();
+        ga02.scales = None;
+        assert_eq!(&ga02.to_bytes()[..4], b"GA02");
+        assert_eq!(Program::from_bytes(&ga02.to_bytes()).unwrap(), ga02);
     }
 
     #[test]

@@ -63,6 +63,7 @@ pub mod graph;
 pub mod harness;
 pub mod ir;
 pub mod isa;
+pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

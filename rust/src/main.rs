@@ -242,7 +242,10 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// Flags: `--requests N` (default 64), `--devices N` (default 1),
 /// `--no-affinity`, `--no-coalesce`, `--no-dynamic` (static kernel
 /// mapping), `--datasets CO,PU`, `--visit-overhead SECONDS` (sweep the
-/// mini-batch visit overhead, default 4e-5).
+/// mini-batch visit overhead, default 4e-5), `--precision int8|f32`
+/// (serve every request on the quantized or full-precision datapath;
+/// default f32 — int8 compiles calibrated GA03 programs and the
+/// summary grows the quantized counters).
 ///
 /// Mini-batch mode: `--minibatch` serves per-request ego-network
 /// inference instead of whole graphs — each request samples 1–4 target
@@ -257,9 +260,13 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// serving — the summary then shows the epoch/dirty-subshard/
 /// invalidation counters.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use graphagile::serve::{Coordinator, CostModel, FleetConfig, Request};
+    use graphagile::serve::{Coordinator, CostModel, FleetConfig, Precision, Request};
     use graphagile::util::Rng;
     let n: usize = args.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let precision: Precision = match args.get("precision") {
+        None => Precision::F32,
+        Some(v) => v.parse().map_err(|e| anyhow!("bad --precision: {e}"))?,
+    };
     let mut costs = CostModel::default();
     if let Some(v) = args.get("visit-overhead") {
         costs.visit_overhead_s = v.parse().map_err(|_| anyhow!("bad --visit-overhead {v}"))?;
@@ -308,8 +315,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let k = 1 + rng.below(4) as usize;
                 let targets = (0..k).map(|_| rng.below(ds.n_vertices) as u32).collect();
                 Request::minibatch(tenant, model, ds, targets, fanout.clone(), i as u64, arrival)
+                    .with_precision(precision)
             } else {
-                Request::full(tenant, model, ds, arrival)
+                Request::full(tenant, model, ds, arrival).with_precision(precision)
             }
         })
         .collect();

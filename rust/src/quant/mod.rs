@@ -1,0 +1,468 @@
+//! Post-training int8 calibration for the quantized ACK datapath.
+//!
+//! Production FPGA overlays ship fixed-point datapaths (DLA, arXiv
+//! 1807.06434); this module adds the software side: a per-layer
+//! **symmetric** calibration pass producing a [`ScaleTable`] that the
+//! compiler embeds as the versioned GA03 section of the `.ga` binary
+//! (`isa::binary`), and the error-bound derivation the scale-aware
+//! golden-equivalence tests gate on.
+//!
+//! * **Scales** — every quantized reduction has a *stationary* operand
+//!   (Linear weights, or the aggregation's edge weights) and a
+//!   *streamed* operand (the feature tile). Both quantize symmetrically:
+//!   `q = clamp(round(v / s), -127, 127)` with `s = range / 127`. Weight
+//!   ranges are exact max-abs over the [`WeightStore`]; feature ranges
+//!   are propagated layer-to-layer analytically (the same closed-form
+//!   DAG walk as `sparsity::feature_density_estimates`, over magnitudes
+//!   instead of densities), inflated by the accumulated quantization
+//!   error so the derived range always covers the quantized path's
+//!   values — no clamping, which keeps the bound below sound.
+//! * **Error bound** — for a length-`L` quantized reduction with
+//!   streamed range `r_x` (scale `s_x`) and stationary range `r_w`
+//!   (scale `s_w`), the per-element dequantized error is at most
+//!   `G·E_x + L·E_w·r_x + L·(r_w·s_x/2 + s_w·r_x/2 + s_x·s_w/4)`, where
+//!   `G` is the stationary operand's L∞ gain (max column abs-sum for
+//!   weights, max row abs-sum for edge weights) and `E_x`/`E_w` are the
+//!   operands' incoming errors. Non-quantized layers propagate errors by
+//!   their Lipschitz constants. [`calibrate`] returns the final-layer
+//!   bound alongside the table — derived from the calibration ranges,
+//!   never hand-tuned.
+//!
+//! Eligible layers are Linear (GEMM) and Sum/Mean Aggregate (SpDMM —
+//! Mean is sum-semantics here; GCN normalization lives in the edge
+//! weights). Max/Min aggregation, SDDMM and element-wise layers stay
+//! f32: their outputs feed the quantizers of downstream eligible layers.
+
+use crate::exec::golden::WeightStore;
+use crate::graph::CooGraph;
+use crate::ir::{LayerIr, LayerType, ModelIr};
+use crate::isa::{Activation, AggOp};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Requested numeric precision of one inference (`serve` carries it per
+/// request; the compiled program carries scales when it can serve Int8).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// Full f32 datapath (the default).
+    #[default]
+    F32,
+    /// Quantized int8 operands with i32 accumulation.
+    Int8,
+}
+
+impl Precision {
+    pub fn key(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Precision, String> {
+        match s {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "int8" | "i8" => Ok(Precision::Int8),
+            other => Err(format!("unknown precision '{other}' (expected int8|f32)")),
+        }
+    }
+}
+
+/// Per-layer row of the scale table: the two symmetric scales a
+/// quantized layer executes with, plus the propagated output range the
+/// error bound was derived from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleEntry {
+    pub layer_id: u16,
+    /// Stationary-operand scale: Linear weights, or the aggregation's
+    /// edge weights (`w = q * w_scale`).
+    pub w_scale: f32,
+    /// Streamed-operand (feature tile) scale (`x = q * x_scale`).
+    pub x_scale: f32,
+    /// Propagated |output|∞ range including accumulated error — what
+    /// the next quantized layer's input range was derived from.
+    pub y_absmax: f32,
+}
+
+/// Bytes per serialized [`ScaleEntry`]: u16 id + three f32.
+pub const SCALE_ENTRY_BYTES: usize = 14;
+
+/// The calibration result embedded as the GA03 section of the `.ga`
+/// binary: one entry per quantized layer, plus the input range and the
+/// derived output error bound (so an engine loading the binary can
+/// reproduce the acceptance check without re-running calibration).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ScaleTable {
+    /// |input features|∞ the calibration assumed.
+    pub input_absmax: f32,
+    /// Final-layer output error bound derived from the ranges below.
+    pub bound: f32,
+    pub entries: Vec<ScaleEntry>,
+}
+
+impl ScaleTable {
+    /// Table row for `layer_id`, if the layer is quantized.
+    pub fn entry(&self, layer_id: u16) -> Option<&ScaleEntry> {
+        self.entries.iter().find(|e| e.layer_id == layer_id)
+    }
+
+    /// Serialized size of the GA03 section body.
+    pub fn size_bytes(&self) -> u64 {
+        4 + 4 + 4 + (self.entries.len() * SCALE_ENTRY_BYTES) as u64
+    }
+
+    /// Serialize the section body (input range, bound, entry count,
+    /// then the fixed-width entries).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes() as usize);
+        out.extend_from_slice(&self.input_absmax.to_le_bytes());
+        out.extend_from_slice(&self.bound.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&e.layer_id.to_le_bytes());
+            out.extend_from_slice(&e.w_scale.to_le_bytes());
+            out.extend_from_slice(&e.x_scale.to_le_bytes());
+            out.extend_from_slice(&e.y_absmax.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a section body from the front of `data`. Returns the table
+    /// and the number of bytes consumed; errors (never panics) on
+    /// truncated or corrupt input.
+    pub fn from_bytes(data: &[u8]) -> Result<(ScaleTable, usize)> {
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+            if *at + n > data.len() {
+                bail!("truncated scale table at offset {at}");
+            }
+            let s = &data[*at..*at + n];
+            *at += n;
+            Ok(s)
+        };
+        let rd_f32 = |at: &mut usize| -> Result<f32> {
+            Ok(f32::from_le_bytes(take(at, 4)?.try_into().unwrap()))
+        };
+        let input_absmax = rd_f32(&mut at)?;
+        let bound = rd_f32(&mut at)?;
+        let n = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+        let mut entries = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let layer_id = u16::from_le_bytes(take(&mut at, 2)?.try_into().unwrap());
+            let w_scale = rd_f32(&mut at)?;
+            let x_scale = rd_f32(&mut at)?;
+            let y_absmax = rd_f32(&mut at)?;
+            if !(w_scale > 0.0 && x_scale > 0.0) {
+                bail!("corrupt scale entry for layer {layer_id}: non-positive scale");
+            }
+            entries.push(ScaleEntry { layer_id, w_scale, x_scale, y_absmax });
+        }
+        Ok((ScaleTable { input_absmax, bound, entries }, at))
+    }
+}
+
+/// Graph-side magnitudes the feature-range propagation consumes. The
+/// weight side is always exact (read from the store); the graph side is
+/// exact when the graph is at hand ([`CalibrationProfile::exact`]) and
+/// conservatively estimated otherwise ([`CalibrationProfile::analytic`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationProfile {
+    /// |input features|∞.
+    pub input_absmax: f32,
+    /// |edge weights|∞ (GCN-normalized weights are <= 1 by construction).
+    pub edge_absmax: f32,
+    /// L∞ gain of aggregation: max over destination rows of Σ|w_e|.
+    pub agg_gain: f32,
+    /// Maximum in-degree (the aggregation reduction length).
+    pub max_degree: f32,
+}
+
+impl CalibrationProfile {
+    /// Exact magnitudes from the materialized graph and input features —
+    /// what the golden-equivalence gate uses.
+    pub fn exact(graph: &CooGraph, x: &[f32]) -> CalibrationProfile {
+        let absmax = |v: &[f32]| v.iter().fold(0f32, |m, &a| m.max(a.abs()));
+        let mut row_sum = vec![0f32; graph.n()];
+        let mut row_deg = vec![0u32; graph.n()];
+        for (&d, &w) in graph.dst.iter().zip(&graph.w) {
+            row_sum[d as usize] += w.abs();
+            row_deg[d as usize] += 1;
+        }
+        CalibrationProfile {
+            input_absmax: absmax(x).max(1e-12),
+            edge_absmax: absmax(&graph.w).max(1e-12),
+            agg_gain: row_sum.iter().fold(0f32, |m, &a| m.max(a)).max(1e-12),
+            max_degree: row_deg.iter().copied().max().unwrap_or(0).max(1) as f32,
+        }
+    }
+
+    /// Conservative closed-form estimates from graph metadata alone
+    /// (the serve path calibrates at compile time, before any features
+    /// or materialized edges exist). Unit-range inputs, GCN-normalized
+    /// edge weights (<= 1), and an R-MAT-skew allowance of 8x the mean
+    /// degree. Estimates only widen scales — the bound stays derived
+    /// from whatever ranges were used.
+    pub fn analytic(nv: u64, ne: u64) -> CalibrationProfile {
+        let mean_deg = (ne as f32 / nv.max(1) as f32).max(1.0);
+        CalibrationProfile {
+            input_absmax: 1.0,
+            edge_absmax: 1.0,
+            // GCN row sums are sqrt(d_i)-bounded; allow the skew factor.
+            agg_gain: (8.0 * mean_deg).sqrt().max(1.5),
+            max_degree: 8.0 * mean_deg,
+        }
+    }
+}
+
+/// A calibrated model: the table to embed, and the final-output error
+/// bound derived from it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    pub table: ScaleTable,
+    /// Per-element |int8 output - f32 output| bound at the final layer.
+    pub bound: f32,
+}
+
+/// Whether a layer executes on the int8 datapath when scales are
+/// present: Linear GEMMs always, Aggregate only with the linear Sum /
+/// Mean reductions (Max/Min compare dequantized magnitudes and stay
+/// f32, as do SDDMM and the element-wise path).
+pub fn quantizable(l: &LayerIr) -> bool {
+    match l.ltype {
+        LayerType::Linear => true,
+        LayerType::Aggregate => {
+            matches!(l.aggop.unwrap_or(AggOp::Sum), AggOp::Sum | AggOp::Mean)
+        }
+        _ => false,
+    }
+}
+
+/// Activation range/error propagation: returns the output |·|∞ range
+/// and error for a layer output with range `a` and error `e`.
+/// Monotone 1-Lipschitz activations pass both through; Swish's max
+/// slope is < 1.1; Sigmoid saturates; Exp's gain on [-a, a] is e^a.
+fn act_propagate(act: Activation, a: f32, e: f32) -> (f32, f32) {
+    match act {
+        Activation::None | Activation::Relu | Activation::PRelu | Activation::LRelu => (a, e),
+        Activation::Elu => (a.max(1.0), e),
+        Activation::Swish => (a, 1.1 * e),
+        Activation::Sigmoid => (1.0, 0.25 * e),
+        Activation::Exp => {
+            let g = a.min(60.0).exp();
+            (g, g * e)
+        }
+    }
+}
+
+/// Quantization error of one length-`len` reduction: streamed operand
+/// (range `rx`, scale `sx`, incoming error `ex`), stationary operand
+/// (range `rw`, scale `sw`, incoming error `ew`), stationary gain `g`.
+fn reduction_err(len: f32, g: f32, rx: f32, sx: f32, ex: f32, rw: f32, sw: f32, ew: f32) -> f32 {
+    g * ex + len * ew * rx + len * (rw * sx * 0.5 + sw * rx * 0.5 + sx * sw * 0.25)
+}
+
+/// Run the symmetric calibration pass: exact max-abs over the store's
+/// weights, feature ranges propagated layer-to-layer, scales at
+/// `range / 127`, and the error bound accumulated through the same walk.
+pub fn calibrate(
+    ir: &ModelIr,
+    store: &WeightStore,
+    profile: &CalibrationProfile,
+) -> Calibration {
+    // (range, error) of each layer's output features, keyed by id.
+    let mut out: HashMap<u16, (f32, f32)> = HashMap::new();
+    // Edge weights mutate sequentially through the layer list (SDDMM
+    // overwrites them), exactly like the executors' edge_w state.
+    let (mut aw, mut ew) = (profile.edge_absmax.max(1e-12), 0f32);
+    let mut entries = Vec::new();
+    let mut last = (profile.input_absmax, 0f32);
+    for l in &ir.layers {
+        let (ax, ex) = l
+            .parents
+            .first()
+            .and_then(|p| out.get(p).copied())
+            .unwrap_or((profile.input_absmax, 0.0));
+        let act = if l.act_enabled { l.act } else { Activation::None };
+        let (mut ay, mut ey) = match l.ltype {
+            LayerType::Linear => {
+                let (w, b) = store.get(l.id);
+                let (f_in, f_out) = (l.f_in as usize, l.f_out as usize);
+                // Exact per-weight magnitudes: max |W| for the scale,
+                // max column abs-sum for the layer gain.
+                let mut col_sum = vec![0f32; f_out];
+                let mut wmax = 0f32;
+                for (i, &v) in w.iter().enumerate() {
+                    let a = v.abs();
+                    wmax = wmax.max(a);
+                    col_sum[i % f_out] += a;
+                }
+                let gain = col_sum.iter().fold(0f32, |m, &a| m.max(a)).max(1e-12);
+                let bmax = b.iter().fold(0f32, |m, &a| m.max(a.abs()));
+                let (rx, rw) = ((ax + ex).max(1e-12), wmax.max(1e-12));
+                let (sx, sw) = (rx / 127.0, rw / 127.0);
+                let qe = reduction_err(l.f_in as f32, gain, rx, sx, ex, rw, sw, 0.0);
+                let ay = ax * gain + bmax;
+                entries.push(ScaleEntry {
+                    layer_id: l.id,
+                    w_scale: sw,
+                    x_scale: sx,
+                    y_absmax: ay + qe,
+                });
+                // f32 summation rounding allowance on top of the exact-
+                // arithmetic bound (length-f_in dot products).
+                (ay, qe + f_in as f32 * f32::EPSILON * ay)
+            }
+            LayerType::Aggregate => {
+                let aggop = l.aggop.unwrap_or(AggOp::Sum);
+                let deg = profile.max_degree.max(1.0);
+                if quantizable(l) {
+                    let (rx, rw) = ((ax + ex).max(1e-12), (aw + ew).max(1e-12));
+                    let (sx, sw) = (rx / 127.0, rw / 127.0);
+                    let qe = reduction_err(deg, profile.agg_gain, rx, sx, ex, rw, sw, ew);
+                    let ay = ax * profile.agg_gain;
+                    entries.push(ScaleEntry {
+                        layer_id: l.id,
+                        w_scale: sw,
+                        x_scale: sx,
+                        y_absmax: ay + qe,
+                    });
+                    (ay, qe + deg * f32::EPSILON * ay)
+                } else {
+                    // Max/Min stay f32: per-term Lipschitz propagation.
+                    debug_assert!(matches!(aggop, AggOp::Max | AggOp::Min));
+                    (aw * ax, aw * ex + ew * (ax + ex))
+                }
+            }
+            LayerType::VectorInner => {
+                // New edge weights <x_i, x_j>; features pass through.
+                let f = l.f_in as f32;
+                aw = f * ax * ax;
+                ew = f * (2.0 * ax * ex + ex * ex) + f * f32::EPSILON * aw;
+                (ax, ex)
+            }
+            LayerType::VectorAdd => {
+                let (a2, e2) = l
+                    .parents
+                    .get(1)
+                    .and_then(|p| out.get(p).copied())
+                    .unwrap_or((ax, ex));
+                (ax + a2, ex + e2)
+            }
+            LayerType::Activation => {
+                // An activation behind a Vector-Inner layer rescales the
+                // edge weights, not the features (exec::golden).
+                let edge_parent = l.parents.first().map(|&p| {
+                    ir.layers.iter().any(|q| q.id == p && q.ltype == LayerType::VectorInner)
+                });
+                if edge_parent.unwrap_or(false) {
+                    let (a2, e2) = act_propagate(l.act, aw, ew);
+                    aw = a2;
+                    ew = e2;
+                    (ax, ex)
+                } else {
+                    act_propagate(l.act, ax, ex)
+                }
+            }
+            LayerType::BatchNorm => (ax, ex), // inference BN: identity
+        };
+        if l.ltype != LayerType::Activation {
+            (ay, ey) = act_propagate(act, ay, ey);
+        }
+        out.insert(l.id, (ay, ey));
+        last = (ay, ey);
+    }
+    let bound = last.1;
+    Calibration {
+        table: ScaleTable { input_absmax: profile.input_absmax, bound, entries },
+        bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat::rmat_edges, GraphMeta};
+    use crate::ir::ZooModel;
+
+    fn small() -> (ModelIr, WeightStore, CooGraph) {
+        let meta = GraphMeta::new("q", 64, 256, 16, 4);
+        let g = rmat_edges(meta.clone(), Default::default(), 3).gcn_normalized();
+        let ir = ZooModel::B1.build(meta);
+        let store = WeightStore::deterministic(&ir, 33);
+        (ir, store, g)
+    }
+
+    #[test]
+    fn scale_table_roundtrips() {
+        let (ir, store, g) = small();
+        let x = g.random_features(5);
+        let cal = calibrate(&ir, &store, &CalibrationProfile::exact(&g, &x));
+        assert!(!cal.table.entries.is_empty());
+        let bytes = cal.table.to_bytes();
+        assert_eq!(bytes.len() as u64, cal.table.size_bytes());
+        let (back, used) = ScaleTable::from_bytes(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, cal.table);
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_cut() {
+        let (ir, store, g) = small();
+        let x = g.random_features(5);
+        let cal = calibrate(&ir, &store, &CalibrationProfile::exact(&g, &x));
+        let bytes = cal.table.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(ScaleTable::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_scale_rejected() {
+        let (ir, store, g) = small();
+        let x = g.random_features(5);
+        let mut table = calibrate(&ir, &store, &CalibrationProfile::exact(&g, &x)).table;
+        table.entries[0].w_scale = 0.0;
+        assert!(ScaleTable::from_bytes(&table.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn scales_positive_and_bound_finite_for_all_models() {
+        let meta = GraphMeta::new("q", 128, 512, 32, 8);
+        let g = rmat_edges(meta.clone(), Default::default(), 7).gcn_normalized();
+        let x = g.random_features(11);
+        let profile = CalibrationProfile::exact(&g, &x);
+        for model in crate::ir::ALL_MODELS {
+            let ir = model.build(meta.clone());
+            let store = WeightStore::deterministic(&ir, 33);
+            let cal = calibrate(&ir, &store, &profile);
+            assert!(cal.bound.is_finite() && cal.bound > 0.0, "{}", model.key());
+            for e in &cal.table.entries {
+                assert!(e.w_scale > 0.0 && e.x_scale > 0.0, "{} layer {}", model.key(), e.layer_id);
+                assert!(e.y_absmax.is_finite());
+            }
+            // Every Linear and Sum/Mean Aggregate is covered.
+            let want = ir.layers.iter().filter(|l| quantizable(l)).count();
+            assert_eq!(cal.table.entries.len(), want, "{}", model.key());
+        }
+    }
+
+    #[test]
+    fn analytic_profile_is_no_tighter_than_defaults() {
+        let p = CalibrationProfile::analytic(1000, 10_000);
+        assert!(p.agg_gain >= 1.5);
+        assert!(p.max_degree >= 10.0 * 8.0 - 1.0);
+        assert_eq!(p.edge_absmax, 1.0);
+    }
+
+    #[test]
+    fn precision_parses_and_prints() {
+        assert_eq!("int8".parse::<Precision>().unwrap(), Precision::Int8);
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert!("fp7".parse::<Precision>().is_err());
+        assert_eq!(Precision::Int8.key(), "int8");
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+}

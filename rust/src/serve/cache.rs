@@ -18,20 +18,32 @@
 use crate::compiler::bucket::compile_bucket;
 use crate::compiler::{compile, BucketShape, CompileOptions, Executable};
 use crate::config::HwConfig;
+use crate::exec::WeightStore;
 use crate::graph::{Dataset, GraphMeta, TileCounts};
 use crate::ir::ZooModel;
+use crate::quant::{calibrate, CalibrationProfile, Precision};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Cache key: which compiled program a request needs.
+/// Weight seed of the fleet's deterministic serving weights — the same
+/// convention the functional-replay and golden-equivalence paths use,
+/// so an int8 program calibrated here quantizes the exact weights a
+/// replay executes.
+pub const SERVE_WEIGHT_SEED: u64 = 33;
+
+/// Cache key: which compiled program a request needs. Precision is part
+/// of the key: an int8 program embeds a GA03 scale table (and simulates
+/// on the widened datapath), so it is a distinct compiled artifact from
+/// its f32 twin.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Key {
-    /// Whole-graph inference: (model, dataset key, graph epoch).
-    /// Epoch 0 is the frozen dataset; streaming updates bump it.
-    Whole(ZooModel, &'static str, u32),
-    /// Mini-batch inference: (model, shape bucket) — epoch-free by
-    /// construction.
-    Bucket(ZooModel, BucketShape),
+    /// Whole-graph inference: (model, dataset key, graph epoch,
+    /// precision). Epoch 0 is the frozen dataset; streaming updates
+    /// bump it.
+    Whole(ZooModel, &'static str, u32, Precision),
+    /// Mini-batch inference: (model, shape bucket, precision) —
+    /// epoch-free by construction.
+    Bucket(ZooModel, BucketShape, Precision),
 }
 
 pub struct ProgramCache {
@@ -54,10 +66,10 @@ impl ProgramCache {
     }
 
     /// Get-or-compile the whole-graph program of (model, dataset) at
-    /// epoch 0 (the frozen dataset). Returns the executable and whether
-    /// it was a hit.
+    /// epoch 0 (the frozen dataset), full f32. Returns the executable
+    /// and whether it was a hit.
     pub fn get(&mut self, model: ZooModel, ds: &Dataset) -> (Arc<Executable>, bool) {
-        self.get_at(model, ds, 0, None)
+        self.get_at(model, ds, 0, None, Precision::F32)
     }
 
     /// Get-or-compile the whole-graph program of (model, dataset,
@@ -66,14 +78,18 @@ impl ProgramCache {
     /// dynamic graph's current metadata (vertex/edge counts drift) and
     /// *live* per-subshard edge counts, so the compile (and its GA02
     /// density profile) tracks the churn.
+    /// An `Int8` request compiles the same program and then calibrates
+    /// and embeds a GA03 scale table ([`Self::attach_scales`]) — the
+    /// int8 artifact is cached under its own key.
     pub fn get_at(
         &mut self,
         model: ZooModel,
         ds: &Dataset,
         epoch: u32,
         snapshot: Option<(&GraphMeta, &Arc<TileCounts>)>,
+        precision: Precision,
     ) -> (Arc<Executable>, bool) {
-        let key = Key::Whole(model, ds.key, epoch);
+        let key = Key::Whole(model, ds.key, epoch, precision);
         if let Some(exe) = self.programs.get(&key) {
             self.hits += 1;
             return (exe.clone(), true);
@@ -94,23 +110,49 @@ impl ProgramCache {
                 (model.build(ds.meta()), tiles)
             }
         };
-        let exe = Arc::new(compile(&ir, &tiles, &self.hw, CompileOptions::default()));
+        let mut exe = compile(&ir, &tiles, &self.hw, CompileOptions::default());
+        if precision == Precision::Int8 {
+            Self::attach_scales(&mut exe);
+        }
+        let exe = Arc::new(exe);
         self.programs.insert(key, exe.clone());
         (exe, false)
     }
 
     /// Get-or-compile the canonical bucket program of (model, shape).
     /// Every member ego-net of the bucket executes this one program.
-    pub fn get_bucket(&mut self, model: ZooModel, shape: BucketShape) -> (Arc<Executable>, bool) {
-        let key = Key::Bucket(model, shape);
+    pub fn get_bucket(
+        &mut self,
+        model: ZooModel,
+        shape: BucketShape,
+        precision: Precision,
+    ) -> (Arc<Executable>, bool) {
+        let key = Key::Bucket(model, shape, precision);
         if let Some(exe) = self.programs.get(&key) {
             self.hits += 1;
             return (exe.clone(), true);
         }
         self.misses += 1;
-        let exe = Arc::new(compile_bucket(model, shape, &self.hw));
+        let mut exe = compile_bucket(model, shape, &self.hw);
+        if precision == Precision::Int8 {
+            Self::attach_scales(&mut exe);
+        }
+        let exe = Arc::new(exe);
         self.programs.insert(key, exe.clone());
         (exe, false)
+    }
+
+    /// Calibrate the program against the fleet's deterministic serving
+    /// weights and embed the resulting scale table (persisted as the
+    /// GA03 section when the binary is serialized). The analytic
+    /// feature-range profile needs only the program's own graph
+    /// metadata, so cache misses stay compile-time-cheap — no graph
+    /// materialization.
+    fn attach_scales(exe: &mut Executable) {
+        let store = WeightStore::deterministic(&exe.ir, SERVE_WEIGHT_SEED);
+        let meta = &exe.ir.graph;
+        let profile = CalibrationProfile::analytic(meta.n_vertices, meta.n_edges);
+        exe.program.scales = Some(calibrate(&exe.ir, &store, &profile).table);
     }
 
     /// Whether `key` is already compiled here (affinity-routing probe —
@@ -127,7 +169,7 @@ impl ProgramCache {
     pub fn invalidate_whole_before(&mut self, ds_key: &str, epoch: u32) -> usize {
         let before = self.programs.len();
         self.programs
-            .retain(|k, _| !matches!(k, Key::Whole(_, d, e) if *d == ds_key && *e < epoch));
+            .retain(|k, _| !matches!(k, Key::Whole(_, d, e, _) if *d == ds_key && *e < epoch));
         self.tiles.retain(|(d, e), _| !(*d == ds_key && *e < epoch));
         before - self.programs.len()
     }
@@ -182,13 +224,33 @@ mod tests {
         let b = BucketShape::of(120, 1000, 64, 8); // same bucket
         let c = BucketShape::of(300, 900, 64, 8); // larger vertex bucket
         assert_eq!(a, b);
-        let (_, h1) = cache.get_bucket(ZooModel::B1, a);
-        let (_, h2) = cache.get_bucket(ZooModel::B1, b);
-        let (_, h3) = cache.get_bucket(ZooModel::B1, c);
+        let (_, h1) = cache.get_bucket(ZooModel::B1, a, Precision::F32);
+        let (_, h2) = cache.get_bucket(ZooModel::B1, b, Precision::F32);
+        let (_, h3) = cache.get_bucket(ZooModel::B1, c, Precision::F32);
         assert!(!h1 && h2 && !h3);
         assert_eq!(cache.len(), 2);
-        assert!(cache.contains(&Key::Bucket(ZooModel::B1, a)));
-        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO", 0)));
+        assert!(cache.contains(&Key::Bucket(ZooModel::B1, a, Precision::F32)));
+        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO", 0, Precision::F32)));
+    }
+
+    #[test]
+    fn int8_programs_cache_separately_and_carry_scales() {
+        let mut cache = ProgramCache::new(HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let (f32_exe, _) = cache.get(ZooModel::B1, &co);
+        let (q_exe, hit) = cache.get_at(ZooModel::B1, &co, 0, None, Precision::Int8);
+        assert!(!hit, "int8 must not alias the f32 program");
+        assert_eq!(cache.len(), 2);
+        assert!(f32_exe.program.scales.is_none());
+        let table = q_exe.program.scales.as_ref().expect("int8 program carries a scale table");
+        assert!(!table.entries.is_empty());
+        // Second int8 request hits the calibrated artifact.
+        let (_, hit) = cache.get_at(ZooModel::B1, &co, 0, None, Precision::Int8);
+        assert!(hit);
+        // Bucket programs calibrate too.
+        let shape = BucketShape::of(100, 900, co.feat_len, co.n_classes);
+        let (qb, _) = cache.get_bucket(ZooModel::B1, shape, Precision::Int8);
+        assert!(qb.program.scales.is_some());
     }
 
     #[test]
@@ -210,23 +272,23 @@ mod tests {
         let tiles = std::sync::Arc::new(
             crate::graph::TileCounts::from_coo(&co.materialize().gcn_normalized(), n1),
         );
-        let (_, hit) = cache.get_at(ZooModel::B1, &co, 1, Some((&meta, &tiles)));
+        let (_, hit) = cache.get_at(ZooModel::B1, &co, 1, Some((&meta, &tiles)), Precision::F32);
         assert!(!hit);
         assert_eq!(cache.len(), 3);
-        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 0)));
-        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 1)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 0, Precision::F32)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 1, Precision::F32)));
         // Invalidating CO below epoch 1 drops only the stale CO entry.
         let dropped = cache.invalidate_whole_before("CO", 1);
         assert_eq!(dropped, 1);
-        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO", 0)));
-        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 1)));
-        assert!(cache.contains(&Key::Whole(ZooModel::B1, "PU", 0)));
+        assert!(!cache.contains(&Key::Whole(ZooModel::B1, "CO", 0, Precision::F32)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "CO", 1, Precision::F32)));
+        assert!(cache.contains(&Key::Whole(ZooModel::B1, "PU", 0, Precision::F32)));
         // The epoch-1 entry now hits; bucket entries never invalidate.
-        let (_, hit) = cache.get_at(ZooModel::B1, &co, 1, Some((&meta, &tiles)));
+        let (_, hit) = cache.get_at(ZooModel::B1, &co, 1, Some((&meta, &tiles)), Precision::F32);
         assert!(hit);
         let shape = BucketShape::of(100, 900, 64, 8);
-        cache.get_bucket(ZooModel::B1, shape);
+        cache.get_bucket(ZooModel::B1, shape, Precision::F32);
         cache.invalidate_whole_before("CO", 99);
-        assert!(cache.contains(&Key::Bucket(ZooModel::B1, shape)));
+        assert!(cache.contains(&Key::Bucket(ZooModel::B1, shape, Precision::F32)));
     }
 }

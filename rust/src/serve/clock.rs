@@ -148,7 +148,8 @@ mod tests {
     #[test]
     fn compile_cost_tracks_work() {
         let small = CompileReport { layers: 4, instrs: 100, blocks: 10, ..Default::default() };
-        let large = CompileReport { layers: 4, instrs: 100_000, blocks: 9_000, ..Default::default() };
+        let large =
+            CompileReport { layers: 4, instrs: 100_000, blocks: 9_000, ..Default::default() };
         assert!(compile_cost(&small) > 0.0);
         assert!(compile_cost(&large) > compile_cost(&small));
         // Measured wall-clock fields do not leak into the virtual cost.

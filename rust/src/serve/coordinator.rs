@@ -31,6 +31,7 @@ use crate::engine::{EngineInput, ExecProfile};
 use crate::exec::{CountingBackend, FunctionalExecutor, RustBackend};
 use crate::graph::{Dataset, GraphMeta, PartitionConfig, Sampler, TileCounts};
 use crate::ir::ZooModel;
+use crate::quant::Precision;
 use crate::sim::{simulate, simulate_dynamic};
 use crate::stream::{ChurnGenerator, ChurnSpec, DynamicGraph};
 use crate::util::timed;
@@ -86,12 +87,29 @@ pub struct Request {
     pub target: Target,
     /// Arrival time on the serving clock (seconds).
     pub arrival: f64,
+    /// Execution precision ([`Precision::F32`] unless the tenant opts
+    /// into the quantized datapath). Precision is part of the program
+    /// key, so f32 and int8 tenants never share a compiled artifact.
+    pub precision: Precision,
 }
 
 impl Request {
     /// A whole-graph request (the pre-mini-batch request shape).
     pub fn full(tenant: u32, model: ZooModel, dataset: Dataset, arrival: f64) -> Request {
-        Request { tenant, model, dataset, target: Target::FullGraph, arrival }
+        Request {
+            tenant,
+            model,
+            dataset,
+            target: Target::FullGraph,
+            arrival,
+            precision: Precision::F32,
+        }
+    }
+
+    /// The same request served on an explicit precision.
+    pub fn with_precision(mut self, precision: Precision) -> Request {
+        self.precision = precision;
+        self
     }
 
     /// A mini-batch request over `targets` with per-hop `fanout`.
@@ -110,6 +128,7 @@ impl Request {
             dataset,
             target: Target::MiniBatch { targets, fanout, seed },
             arrival,
+            precision: Precision::F32,
         }
     }
 
@@ -130,6 +149,7 @@ impl Request {
             dataset,
             target: Target::Update { inserts, deletes, grow, seed },
             arrival,
+            precision: Precision::F32,
         }
     }
 }
@@ -167,6 +187,15 @@ pub struct Response {
     /// Density-driven kernel re-maps in the execution serving this
     /// request (riders report the re-maps of the job they rode).
     pub remaps: u64,
+    /// Precision the request was served at.
+    pub precision: Precision,
+    /// Modeled quantized tile launches in the execution serving this
+    /// request (0 for f32; riders echo their job's count).
+    pub quant_visits: u64,
+    /// Modeled quantize/requantize epilogues in the execution.
+    pub requant_ops: u64,
+    /// Modeled 1-byte operand bytes moved by the execution.
+    pub int8_bytes: u64,
     /// Whether this was a streaming update request (host-side: no
     /// device work; `device` is a sentinel).
     pub update: bool,
@@ -207,6 +236,15 @@ pub struct ServeStats {
     /// Kernel re-maps summed over *executed* jobs (coalesced riders are
     /// excluded so one execution is not counted once per rider).
     pub remaps: u64,
+    /// Completed inference requests served on the int8 datapath.
+    pub quantized: u64,
+    /// Quantized tile launches summed over executed jobs (riders
+    /// excluded, like `remaps`).
+    pub quant_visits: u64,
+    /// Quantize/requantize epilogues summed over executed jobs.
+    pub requant_ops: u64,
+    /// Modeled 1-byte operand traffic summed over executed jobs.
+    pub int8_bytes: u64,
     /// Streaming update requests applied.
     pub updates: u64,
     /// Highest graph epoch reached by any streamed dataset.
@@ -286,13 +324,27 @@ fn class_p50(mut lats: Vec<f64>) -> f64 {
     percentile(&lats, 0.50)
 }
 
-/// Fleet-wide modeled execution memo: (exec seconds, kernel re-maps)
-/// per program key, simulated on first use. One helper for both
-/// request classes so the memoization policy cannot drift between
-/// them. Borrows only the memo and hardware config, so callers can
-/// hold a device mutably at the same time.
+/// Modeled execution cost of one program key: seconds plus the
+/// simulator's per-run counters (re-maps, quantized datapath work). A
+/// quantized program simulates on the widened int8 ack automatically —
+/// the compiled program carries its scale table — so the memo needs no
+/// precision-specific logic beyond the key.
+#[derive(Clone, Copy, Debug, Default)]
+struct ExecCost {
+    secs: f64,
+    remaps: u64,
+    quant_blocks: u64,
+    requant_ops: u64,
+    int8_bytes: u64,
+}
+
+/// Fleet-wide modeled execution memo: [`ExecCost`] per program key,
+/// simulated on first use. One helper for both request classes so the
+/// memoization policy cannot drift between them. Borrows only the memo
+/// and hardware config, so callers can hold a device mutably at the
+/// same time.
 fn memo_exec<'a>(
-    memo: &'a mut HashMap<Key, (f64, u64)>,
+    memo: &'a mut HashMap<Key, ExecCost>,
     hw: &'a HwConfig,
     dynamic: bool,
     key: Key,
@@ -305,9 +357,15 @@ fn memo_exec<'a>(
                 } else {
                     simulate(&exe.program, hw)
                 };
-                (sim.loh_seconds(), sim.remaps)
+                ExecCost {
+                    secs: sim.loh_seconds(),
+                    remaps: sim.remaps,
+                    quant_blocks: sim.quant_blocks,
+                    requant_ops: sim.requant_ops,
+                    int8_bytes: sim.int8_bytes,
+                }
             })
-            .0
+            .secs
     }
 }
 
@@ -352,10 +410,9 @@ pub struct Coordinator {
     devices: Vec<Device>,
     dispatcher: Dispatcher,
     clock: VirtualClock,
-    /// Modeled (exec seconds, kernel re-maps) per program key: every
-    /// device is the same overlay design, so execution is a fleet-wide
-    /// property.
-    exec_memo: HashMap<Key, (f64, u64)>,
+    /// Modeled [`ExecCost`] per program key: every device is the same
+    /// overlay design, so execution is a fleet-wide property.
+    exec_memo: HashMap<Key, ExecCost>,
     /// Per-dataset ego-net extractors, built on first mini-batch use
     /// (materialize + whole-graph CSR, amortized across requests).
     samplers: HashMap<&'static str, Sampler>,
@@ -445,6 +502,7 @@ impl Coordinator {
                 .then(a.model.key().cmp(b.model.key()))
                 .then(a.dataset.key.cmp(b.dataset.key))
                 .then(a.target.cmp(&b.target))
+                .then(a.precision.cmp(&b.precision))
         });
         for rq in requests {
             self.clock.advance_to(rq.arrival);
@@ -485,6 +543,10 @@ impl Coordinator {
             sampled_vertices: 0,
             sampled_edges: 0,
             remaps: 0,
+            precision: rq.precision,
+            quant_visits: 0,
+            requant_ops: 0,
+            int8_bytes: 0,
             update: false,
             epoch,
             t_update: 0.0,
@@ -505,11 +567,11 @@ impl Coordinator {
         // (DESIGN.md Sec. 3e).
         let snapshot = self.streams.get_mut(rq.dataset.key).map(|st| st.snapshot());
         let epoch = snapshot.as_ref().map_or(0, |s| s.0);
-        let key = Key::Whole(rq.model, rq.dataset.key, epoch);
+        let key = Key::Whole(rq.model, rq.dataset.key, epoch, rq.precision);
         let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
         match route {
             Route::Coalesce(dev, j) => {
-                let remaps = self.exec_memo.get(&key).map_or(0, |e| e.1);
+                let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
                 let job = &mut self.devices[dev].jobs[j];
                 job.riders += 1;
                 Response {
@@ -519,7 +581,10 @@ impl Coordinator {
                     latency: job.done - rq.arrival,
                     cache_hit: true,
                     coalesced: true,
-                    remaps,
+                    remaps: cost.remaps,
+                    quant_visits: cost.quant_blocks,
+                    requant_ops: cost.requant_ops,
+                    int8_bytes: cost.int8_bytes,
                     ..Self::base_response(rq, epoch)
                 }
             }
@@ -537,10 +602,12 @@ impl Coordinator {
                         &rq.dataset,
                         epoch,
                         snap_ref,
+                        rq.precision,
                         &mut exec_seconds,
                     );
                     device.jobs[j]
                 };
+                let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
                 Response {
                     device: dev as u32,
                     t_compile: job.ready - rq.arrival,
@@ -548,7 +615,10 @@ impl Coordinator {
                     t_queue: job.start - job.ready,
                     latency: job.done - rq.arrival,
                     cache_hit: job.cache_hit,
-                    remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
+                    remaps: cost.remaps,
+                    quant_visits: cost.quant_blocks,
+                    requant_ops: cost.requant_ops,
+                    int8_bytes: cost.int8_bytes,
                     ..Self::base_response(rq, epoch)
                 }
             }
@@ -582,7 +652,7 @@ impl Coordinator {
         let shape = BucketShape::for_graph(&ego.graph.meta);
         let (sampled_v, sampled_e) = (ego.n() as u64, ego.m() as u64);
         let t_sample = self.costs.sample_cost(sampled_v, sampled_e);
-        let key = Key::Bucket(rq.model, shape);
+        let key = Key::Bucket(rq.model, shape, rq.precision);
         // A visit can only be ridden once the rider's ego-net exists:
         // route against the post-sampling ready time, not the arrival.
         let ready = rq.arrival + t_sample;
@@ -592,17 +662,17 @@ impl Coordinator {
                 // The tail visit's bucket program is compiled (or
                 // compiling) on this device, so its exec time is
                 // already memoized.
-                let (t_item, remaps) = *self
+                let cost = *self
                     .exec_memo
                     .get(&key)
                     .expect("batched onto a visit whose exec time is memoized");
                 let device = &mut self.devices[dev];
-                device.extend_batch(j, t_item);
+                device.extend_batch(j, cost.secs);
                 let job = device.jobs[j];
                 Response {
                     device: dev as u32,
                     t_sample,
-                    t_exec: t_item,
+                    t_exec: cost.secs,
                     t_queue: (job.start - ready).max(0.0),
                     latency: job.done - rq.arrival,
                     cache_hit: true,
@@ -610,7 +680,10 @@ impl Coordinator {
                     minibatch: true,
                     sampled_vertices: sampled_v,
                     sampled_edges: sampled_e,
-                    remaps,
+                    remaps: cost.remaps,
+                    quant_visits: cost.quant_blocks,
+                    requant_ops: cost.requant_ops,
+                    int8_bytes: cost.int8_bytes,
                     ..Self::base_response(rq, epoch)
                 }
             }
@@ -626,10 +699,12 @@ impl Coordinator {
                         rq.model,
                         shape,
                         t_sample,
+                        rq.precision,
                         &mut exec_seconds,
                     );
                     device.jobs[j]
                 };
+                let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
                 Response {
                     device: dev as u32,
                     t_compile: (job.ready - rq.arrival - t_sample).max(0.0),
@@ -641,7 +716,10 @@ impl Coordinator {
                     minibatch: true,
                     sampled_vertices: sampled_v,
                     sampled_edges: sampled_e,
-                    remaps: self.exec_memo.get(&key).map_or(0, |e| e.1),
+                    remaps: cost.remaps,
+                    quant_visits: cost.quant_blocks,
+                    requant_ops: cost.requant_ops,
+                    int8_bytes: cost.int8_bytes,
                     ..Self::base_response(rq, epoch)
                 }
             }
@@ -691,9 +769,9 @@ impl Coordinator {
         // The modeled-exec memo holds the same now-unreachable keys the
         // device caches just dropped — prune it too, or a long stream
         // grows one dead entry per (model, stale epoch).
-        self.exec_memo.retain(
-            |k, _| !matches!(k, Key::Whole(_, d, e) if *d == rq.dataset.key && *e < report.epoch),
-        );
+        self.exec_memo.retain(|k, _| {
+            !matches!(k, Key::Whole(_, d, e, _) if *d == rq.dataset.key && *e < report.epoch)
+        });
         Response {
             // Updates are host-side: no device executes them.
             device: u32::MAX,
@@ -736,6 +814,7 @@ impl Coordinator {
         }
         let arena = std::mem::take(&mut self.devices[device].arena);
         let packed = self.devices[device].packed.take();
+        let packed_i8 = self.devices[device].packed_i8.take();
         let mut fx = FunctionalExecutor::with_state(
             exe,
             input.partitioned,
@@ -743,6 +822,7 @@ impl Coordinator {
             CountingBackend::new(RustBackend),
             arena,
             packed,
+            packed_i8,
         );
         fx.dynamic = self.dynamic;
         let (out, secs) = timed(|| fx.run(input.x));
@@ -750,14 +830,20 @@ impl Coordinator {
             engine: "functional",
             latency_s: secs,
             cycles: 0,
-            kernel_launches: fx.backend.launches,
-            bytes_moved: fx.backend.bytes,
+            // Quantized tiles bypass the counting backend, so their
+            // launches and operand traffic are added back here.
+            kernel_launches: fx.backend.launches + fx.quant_visits,
+            bytes_moved: fx.backend.bytes + fx.int8_bytes,
             remaps: fx.remaps,
+            quant_visits: fx.quant_visits,
+            requant_ops: fx.requant_ops,
+            int8_bytes: fx.int8_bytes,
             output: Some(out),
         };
-        let (arena, packed) = fx.into_state();
+        let (arena, packed, packed_i8) = fx.into_state();
         self.devices[device].arena = arena;
         self.devices[device].packed = Some(packed);
+        self.devices[device].packed_i8 = packed_i8;
         Ok(profile)
     }
 
@@ -804,6 +890,29 @@ impl Coordinator {
                 .iter()
                 .filter(|r| !r.coalesced)
                 .map(|r| r.remaps)
+                .sum(),
+            quantized: self
+                .responses
+                .iter()
+                .filter(|r| !r.update && r.precision == Precision::Int8)
+                .count() as u64,
+            quant_visits: self
+                .responses
+                .iter()
+                .filter(|r| !r.coalesced)
+                .map(|r| r.quant_visits)
+                .sum(),
+            requant_ops: self
+                .responses
+                .iter()
+                .filter(|r| !r.coalesced)
+                .map(|r| r.requant_ops)
+                .sum(),
+            int8_bytes: self
+                .responses
+                .iter()
+                .filter(|r| !r.coalesced)
+                .map(|r| r.int8_bytes)
                 .sum(),
             updates: self.responses.iter().filter(|r| r.update).count() as u64,
             max_epoch: self.responses.iter().map(|r| r.epoch).max().unwrap_or(0),
@@ -1037,6 +1146,52 @@ mod tests {
         assert!(r0.iter().all(|r| r.remaps == 0));
         // Dynamic execution times are never slower (memoized per key).
         assert!(s1.makespan <= s0.makespan + 1e-12);
+    }
+
+    #[test]
+    fn int8_requests_serve_faster_on_their_own_programs() {
+        let co = dataset("CO").unwrap();
+        let mk = |precision: Precision| -> Vec<Request> {
+            (0..6)
+                .map(|i| {
+                    Request::full(i, ZooModel::B2, co, i as f64 * 1e-3)
+                        .with_precision(precision)
+                })
+                .collect()
+        };
+        let run = |reqs: Vec<Request>| {
+            let mut c = Coordinator::new(HwConfig::alveo_u250());
+            let stats = c.run(reqs);
+            let compiles: usize = c.devices().iter().map(|d| d.cache_len()).sum();
+            (stats, c.responses, compiles)
+        };
+        let (sf, rf, _) = run(mk(Precision::F32));
+        let (sq, rq, _) = run(mk(Precision::Int8));
+        assert_eq!(sf.quantized, 0);
+        assert_eq!(sq.quantized, 6);
+        assert!(sf.quant_visits == 0 && sf.int8_bytes == 0);
+        assert!(
+            sq.quant_visits > 0 && sq.requant_ops > 0 && sq.int8_bytes > 0,
+            "int8 serving must report quantized datapath work"
+        );
+        // The widened int8 ack plus 1-byte operand traffic makes the
+        // modeled execution strictly faster for the same workload.
+        let t_f32 = rf.iter().map(|r| r.t_exec).fold(0.0, f64::max);
+        let t_int8 = rq.iter().map(|r| r.t_exec).fold(0.0, f64::max);
+        assert!(t_int8 < t_f32, "int8 exec {t_int8} !< f32 {t_f32}");
+        // Mixed precisions compile one program each and replay
+        // bit-identically.
+        let mixed = || {
+            let mut v = mk(Precision::F32);
+            v.extend(mk(Precision::Int8));
+            v
+        };
+        let (s1, r1, compiles) = run(mixed());
+        let (s2, r2, _) = run(mixed());
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+        assert_eq!(compiles, 2, "one program per precision");
+        assert_eq!(s1.quantized, 6);
     }
 
     #[test]

@@ -7,9 +7,10 @@ use super::cache::{Key, ProgramCache};
 use super::clock::{self, CostModel};
 use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
-use crate::exec::{BufferArena, PackedWeightSet};
+use crate::exec::{BufferArena, PackedWeightSet, PackedWeightSetI8};
 use crate::graph::{Dataset, GraphMeta, TileCounts};
 use crate::ir::ZooModel;
+use crate::quant::Precision;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -59,6 +60,10 @@ pub struct Device {
     /// back-to-back replays of the same (model, graph) pair skip
     /// repacking entirely.
     pub packed: Option<PackedWeightSet>,
+    /// Int8 twin of `packed`: quantized weight panels of the last
+    /// replayed quantized program, kept warm under the same
+    /// fingerprint discipline.
+    pub packed_i8: Option<PackedWeightSetI8>,
     /// Host-side cost coefficients (set from the fleet config so
     /// benches can sweep what used to be hard-coded constants).
     pub costs: CostModel,
@@ -81,6 +86,7 @@ impl Device {
             busy: 0.0,
             arena: BufferArena::new(),
             packed: None,
+            packed_i8: None,
             costs: CostModel::default(),
             jobs: Vec::new(),
             first_pending: 0,
@@ -169,7 +175,7 @@ impl Device {
         ds: &Dataset,
         exec_seconds: &mut dyn FnMut(&Executable) -> f64,
     ) -> (Arc<Executable>, usize) {
-        self.admit_at(arrival, model, ds, 0, None, exec_seconds)
+        self.admit_at(arrival, model, ds, 0, None, Precision::F32, exec_seconds)
     }
 
     /// [`Device::admit`] against a specific graph epoch: a streamed
@@ -183,10 +189,11 @@ impl Device {
         ds: &Dataset,
         epoch: u32,
         snapshot: Option<(&GraphMeta, &Arc<TileCounts>)>,
+        precision: Precision,
         exec_seconds: &mut dyn FnMut(&Executable) -> f64,
     ) -> (Arc<Executable>, usize) {
-        let key = Key::Whole(model, ds.key, epoch);
-        let (exe, hit) = self.cache.get_at(model, ds, epoch, snapshot);
+        let key = Key::Whole(model, ds.key, epoch, precision);
+        let (exe, hit) = self.cache.get_at(model, ds, epoch, snapshot, precision);
         let ready = self.ready_at(key, arrival, &exe);
         let t_exec = exec_seconds(&exe);
         let j = self.push_job(key, ready, t_exec, hit);
@@ -199,7 +206,7 @@ impl Device {
     /// survive untouched. Returns the number of programs dropped.
     pub fn invalidate_dataset(&mut self, ds_key: &str, epoch: u32) -> usize {
         self.warm_at
-            .retain(|k, _| !matches!(k, Key::Whole(_, d, e) if *d == ds_key && *e < epoch));
+            .retain(|k, _| !matches!(k, Key::Whole(_, d, e, _) if *d == ds_key && *e < epoch));
         self.cache.invalidate_whole_before(ds_key, epoch)
     }
 
@@ -213,10 +220,11 @@ impl Device {
         model: ZooModel,
         shape: BucketShape,
         t_sample: f64,
+        precision: Precision,
         exec_seconds: &mut dyn FnMut(&Executable) -> f64,
     ) -> (Arc<Executable>, usize) {
-        let key = Key::Bucket(model, shape);
-        let (exe, hit) = self.cache.get_bucket(model, shape);
+        let key = Key::Bucket(model, shape, precision);
+        let (exe, hit) = self.cache.get_bucket(model, shape, precision);
         let ready = self.ready_at(key, arrival + t_sample, &exe);
         let t_visit = self.costs.visit_overhead_s + exec_seconds(&exe);
         let j = self.push_job(key, ready, t_visit, hit);
@@ -262,7 +270,7 @@ mod tests {
         assert!(second.cache_hit);
         assert_eq!(second.ready, 1.0);
         assert_eq!(dev.cache_len(), 1);
-        assert!(dev.is_warm(&Key::Whole(ZooModel::B1, "CO", 0)));
+        assert!(dev.is_warm(&Key::Whole(ZooModel::B1, "CO", 0, Precision::F32)));
     }
 
     #[test]
@@ -299,7 +307,7 @@ mod tests {
         let shape = BucketShape::of(200, 900, 64, 8);
         let t_item = 1e-4;
         let mut exec = |_: &Executable| t_item;
-        let (_, j) = dev.admit_minibatch(0.0, ZooModel::B1, shape, 1e-6, &mut exec);
+        let (_, j) = dev.admit_minibatch(0.0, ZooModel::B1, shape, 1e-6, Precision::F32, &mut exec);
         let job = dev.jobs[j];
         assert!(!job.cache_hit);
         assert!(job.ready >= 1e-6, "readiness waits out the sampling stall");
@@ -312,9 +320,10 @@ mod tests {
         assert!((job.done - (done0 + t_item)).abs() < 1e-12);
         assert_eq!(dev.free_at, job.done);
         // Same bucket later: cache hit, no second compile.
-        let (_, j2) = dev.admit_minibatch(1.0, ZooModel::B1, shape, 1e-6, &mut exec);
+        let (_, j2) =
+            dev.admit_minibatch(1.0, ZooModel::B1, shape, 1e-6, Precision::F32, &mut exec);
         assert!(dev.jobs[j2].cache_hit);
         assert_eq!(dev.cache_len(), 1);
-        assert!(dev.is_warm(&Key::Bucket(ZooModel::B1, shape)));
+        assert!(dev.is_warm(&Key::Bucket(ZooModel::B1, shape, Precision::F32)));
     }
 }

@@ -123,6 +123,7 @@ mod tests {
     use crate::config::HwConfig;
     use crate::graph::dataset;
     use crate::ir::ZooModel;
+    use crate::quant::Precision;
 
     const ALL_ON: Dispatcher = Dispatcher { affinity: true, coalesce: true, microbatch: true };
 
@@ -136,7 +137,7 @@ mod tests {
         devs[0].free_at = 5.0;
         devs[1].free_at = 1.0;
         devs[2].free_at = 3.0;
-        let key = Key::Whole(ZooModel::B1, "CO", 0);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
         assert_eq!(ALL_ON.route(&devs, &key, 0.0), Route::Device(1));
     }
 
@@ -147,7 +148,7 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
         devs[1].admit(0.0, ZooModel::B1, &co, &mut exec);
         // Device 1 is warm but busier; affinity still picks it.
-        let key = Key::Whole(ZooModel::B1, "CO", 0);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
         let arrival = devs[1].free_at + 1.0; // after its job started
         let on = Dispatcher { coalesce: false, ..ALL_ON };
         let off = Dispatcher { affinity: false, coalesce: false, ..ALL_ON };
@@ -163,13 +164,13 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
         let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec);
         let start = devs[0].jobs[j].start;
-        let key = Key::Whole(ZooModel::B1, "CO", 0);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
         // Before the job starts: ride it.
         assert_eq!(ALL_ON.route(&devs, &key, start * 0.5), Route::Coalesce(0, j));
         // After it started: a fresh dispatch (warm, device 0).
         assert_eq!(ALL_ON.route(&devs, &key, start + 1.0), Route::Device(0));
         // Different key never coalesces.
-        let other = Key::Whole(ZooModel::B2, "CO", 0);
+        let other = Key::Whole(ZooModel::B2, "CO", 0, Precision::F32);
         assert!(matches!(ALL_ON.route(&devs, &other, start * 0.5), Route::Device(_)));
     }
 
@@ -183,7 +184,7 @@ mod tests {
         let mut exec = |_: &crate::compiler::Executable| 1.0;
         devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // running by 0.5
         let (_, j) = devs[0].admit(0.0, ZooModel::B1, &co, &mut exec); // queued
-        let key = Key::Whole(ZooModel::B1, "CO", 0);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
         let off = Dispatcher { affinity: false, ..ALL_ON };
         assert_eq!(off.route(&devs, &key, 0.5), Route::Device(1));
         // With affinity the dispatch target is the warm (queued) device
@@ -197,9 +198,10 @@ mod tests {
         let mut devs = fleet(2);
         let shape = BucketShape::of(100, 800, 64, 8);
         let mut exec = |_: &crate::compiler::Executable| 1e-4;
-        let (_, j) = devs[0].admit_minibatch(0.0, ZooModel::B1, shape, 1e-6, &mut exec);
+        let (_, j) =
+            devs[0].admit_minibatch(0.0, ZooModel::B1, shape, 1e-6, Precision::F32, &mut exec);
         let start = devs[0].jobs[j].start;
-        let key = Key::Bucket(ZooModel::B1, shape);
+        let key = Key::Bucket(ZooModel::B1, shape, Precision::F32);
         // Unstarted compatible tail: batch onto it.
         assert_eq!(
             ALL_ON.route_minibatch(&devs, &key, start * 0.5),
@@ -209,7 +211,7 @@ mod tests {
         let off = Dispatcher { microbatch: false, ..ALL_ON };
         assert_eq!(off.route_minibatch(&devs, &key, start * 0.5), Route::Device(0));
         // A different bucket never batches.
-        let other = Key::Bucket(ZooModel::B1, BucketShape::of(5000, 800, 64, 8));
+        let other = Key::Bucket(ZooModel::B1, BucketShape::of(5000, 800, 64, 8), Precision::F32);
         assert!(matches!(
             ALL_ON.route_minibatch(&devs, &other, start * 0.5),
             Route::Device(_)

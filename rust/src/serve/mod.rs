@@ -39,6 +39,12 @@
 //! execution times and per-request re-map counters come from
 //! [`crate::sim::simulate_dynamic`], which is never slower than the
 //! static mapping.
+//!
+//! Requests carry a [`Precision`]: an int8 request compiles (and
+//! caches) a calibrated program with an embedded GA03 scale table,
+//! simulates on the widened int8 datapath, and reports quantized-work
+//! counters in its [`Response`](coordinator::Response) — f32 and int8
+//! tenants never share a compiled artifact.
 
 pub mod cache;
 pub mod clock;
@@ -46,7 +52,8 @@ pub mod coordinator;
 pub mod device;
 pub mod dispatcher;
 
-pub use cache::{Key, ProgramCache};
+pub use cache::{Key, ProgramCache, SERVE_WEIGHT_SEED};
+pub use crate::quant::Precision;
 pub use clock::{CostModel, VirtualClock};
 pub use coordinator::{
     percentile, Coordinator, FleetConfig, Request, Response, ServeStats, Target,

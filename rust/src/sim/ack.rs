@@ -58,6 +58,18 @@ impl AckModel {
         }
     }
 
+    /// The same ACK timed for the int8 datapath: 8-bit operands pack
+    /// two MACs per DSP slice (the standard INT8 double-pumping), so
+    /// compute instructions are charged at SIMD width `2 * p_sys`. The
+    /// butterfly throughput is re-measured at the wider lane count.
+    pub fn int8_widened(&self) -> AckModel {
+        AckModel {
+            p_sys: self.p_sys * 2,
+            eta_shuffle: shuffle_eta(self.p_sys * 2, 4),
+            ..*self
+        }
+    }
+
     /// Effective ACK-busy cycles for `instr`. `out_rows` is the output
     /// tile height (RAW conflict domain for SpDMM).
     pub fn cycles(&self, instr: &Instr, out_rows: u64) -> u64 {
@@ -264,6 +276,28 @@ mod tests {
         // Non-remappable instructions pass through untouched.
         let v = Instr::Vadd { rows: 128, cols: 16, act: Activation::None };
         assert_eq!(m.cycles_dynamic(&v, 128, &tt, None), (m.cycles(&v, 128), false));
+    }
+
+    #[test]
+    fn int8_widening_speeds_up_every_compute_mode() {
+        let m = model();
+        let w = m.int8_widened();
+        assert_eq!(w.p_sys, 2 * m.p_sys);
+        let g = Instr::Gemm {
+            rows: 4096,
+            len: 256,
+            cols: 256,
+            act: Activation::Relu,
+            accumulate: false,
+        };
+        let s = Instr::Spdmm {
+            n_edges: 65536,
+            feat: 64,
+            aggop: AggOp::Sum,
+            act: Activation::None,
+        };
+        assert!(w.cycles(&g, 4096) < m.cycles(&g, 4096));
+        assert!(w.cycles(&s, 4096) < m.cycles(&s, 4096));
     }
 
     #[test]

@@ -35,6 +35,14 @@ impl DdrModel {
         let share = self.bytes_per_cycle / sharers.max(1) as f64;
         self.fixed_cycles + (bytes as f64 / share).ceil() as u64
     }
+
+    /// Cycles to move an operand tile whose f32 image is `f32_bytes`
+    /// when each element is streamed at `elem_bytes` instead — the int8
+    /// datapath moves 1-byte operands, a quarter of the f32 traffic.
+    /// The fixed per-burst overhead does not shrink with element width.
+    pub fn transfer_cycles_elem(&self, f32_bytes: u64, elem_bytes: u64, sharers: usize) -> u64 {
+        self.transfer_cycles(f32_bytes * elem_bytes.min(4) / 4, sharers)
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +81,17 @@ mod tests {
         let m = model();
         let tiny = m.transfer_cycles(64, 1);
         assert!(tiny >= m.fixed_cycles && tiny <= m.fixed_cycles + 2);
+    }
+
+    #[test]
+    fn one_byte_operands_quarter_the_traffic() {
+        let m = model();
+        let f32_cycles = m.transfer_cycles(1 << 20, 1);
+        let i8_cycles = m.transfer_cycles_elem(1 << 20, 1, 1);
+        assert_eq!(i8_cycles, m.transfer_cycles(1 << 18, 1));
+        // ~4x fewer streamed cycles, minus the constant burst overhead.
+        assert!(i8_cycles < f32_cycles / 3, "{i8_cycles} vs {f32_cycles}");
+        // 4-byte elements are exactly the f32 path.
+        assert_eq!(m.transfer_cycles_elem(1 << 20, 4, 1), f32_cycles);
     }
 }

@@ -5,10 +5,12 @@
 
 use graphagile::compiler::{compile, CompileOptions, Executable};
 use graphagile::config::HwConfig;
+use graphagile::exec::WeightStore;
 use graphagile::graph::{Dataset, ALL_DATASETS};
 use graphagile::ir::{ZooModel, ALL_MODELS};
 use graphagile::isa::Program;
 use graphagile::prop_assert;
+use graphagile::quant::{calibrate, CalibrationProfile, ScaleTable};
 use graphagile::util::forall;
 
 /// Compile one (model, dataset) instance at CI scale.
@@ -19,6 +21,16 @@ fn build(model: ZooModel, d: &Dataset, hw: &HwConfig, opts: CompileOptions) -> E
     let tiles = d.tile_counts(hw.n1() as u64);
     let ir = model.build(d.meta());
     compile(&ir, &tiles, hw, opts)
+}
+
+/// A real calibrated scale table for `exe` (deterministic weights +
+/// the analytic feature-range profile) — the same path the serving
+/// cache uses to mint GA03 programs.
+fn calibrated_table(exe: &Executable) -> ScaleTable {
+    let store = WeightStore::deterministic(&exe.ir, 33);
+    let meta = &exe.ir.graph;
+    let profile = CalibrationProfile::analytic(meta.n_vertices, meta.n_edges);
+    calibrate(&exe.ir, &store, &profile).table
 }
 
 #[test]
@@ -60,12 +72,31 @@ fn roundtrip_holds_under_random_options() {
             skip_empty_tiles: rng.below(2) == 0,
             dynamic_thresholds: rng.below(2) == 0,
         };
-        let exe = build(model, &d, &hw, opts);
+        let mut exe = build(model, &d, &hw, opts);
         prop_assert!(
             exe.program.thresholds.is_some() == opts.dynamic_thresholds,
             "threshold section must track the compile option"
         );
-        let back = Program::from_bytes(&exe.program.to_bytes())
+        // Half the cases additionally carry a GA03 scale section, in
+        // all four (thresholds x scales) combinations.
+        let quantized = rng.below(2) == 0;
+        if quantized {
+            exe.program.scales = Some(calibrated_table(&exe));
+        }
+        let bytes = exe.program.to_bytes();
+        let want_magic: &[u8] = if quantized {
+            b"GA03"
+        } else if opts.dynamic_thresholds {
+            b"GA02"
+        } else {
+            b"GA01"
+        };
+        prop_assert!(
+            &bytes[..4] == want_magic,
+            "writer must emit the oldest sufficient magic, got {:?}",
+            &bytes[..4]
+        );
+        let back = Program::from_bytes(&bytes)
             .map_err(|e| format!("{}/{} {opts:?}: decode failed: {e:#}", model.key(), d.key))?;
         prop_assert!(
             back == exe.program,
@@ -137,6 +168,83 @@ fn truncated_or_corrupt_binaries_are_rejected() {
             Program::from_bytes(&bytes[..cut]).is_err(),
             "truncation at {cut}/{} must be rejected",
             bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn scale_section_roundtrips_in_presence_and_absence() {
+    let hw = HwConfig::alveo_u250();
+    // Absence first: without scales the wire bytes are plain GA02 —
+    // attaching the section must not disturb older programs.
+    let mut exe = build(ZooModel::B2, &ALL_DATASETS[1], &hw, CompileOptions::default());
+    let ga02_bytes = exe.program.to_bytes();
+    assert_eq!(&ga02_bytes[..4], b"GA02");
+    // Presence: the calibrated table promotes the binary to GA03 and
+    // survives the wire exactly.
+    let table = calibrated_table(&exe);
+    assert!(!table.entries.is_empty());
+    exe.program.scales = Some(table.clone());
+    let bytes = exe.program.to_bytes();
+    assert_eq!(&bytes[..4], b"GA03");
+    assert_eq!(bytes.len() as u64, exe.program.size_bytes());
+    let back = Program::from_bytes(&bytes).unwrap();
+    assert_eq!(back.scales.as_ref(), Some(&table));
+    assert_eq!(back, exe.program);
+    // Detaching the section falls back to byte-identical GA02 output:
+    // GA01/GA02 consumers are unaffected by the GA03 feature.
+    exe.program.scales = None;
+    assert_eq!(exe.program.to_bytes(), ga02_bytes);
+}
+
+#[test]
+fn legacy_ga01_and_ga02_binaries_load_byte_identically() {
+    // A GA03-aware reader must parse pre-scale binaries to programs
+    // with `scales: None` whose re-serialization reproduces the input
+    // bytes exactly — the on-disk corpus never rewrites.
+    let hw = HwConfig::alveo_u250();
+    let exe = build(ZooModel::B5, &ALL_DATASETS[0], &hw, CompileOptions::default());
+    let ga02 = exe.program.to_bytes();
+    assert_eq!(&ga02[..4], b"GA02");
+    let back = Program::from_bytes(&ga02).unwrap();
+    assert!(back.scales.is_none());
+    assert_eq!(back.to_bytes(), ga02);
+    let mut legacy = exe.program.clone();
+    legacy.thresholds = None;
+    let ga01 = legacy.to_bytes();
+    assert_eq!(&ga01[..4], b"GA01");
+    let back = Program::from_bytes(&ga01).unwrap();
+    assert!(back.thresholds.is_none() && back.scales.is_none());
+    assert_eq!(back.to_bytes(), ga01);
+}
+
+#[test]
+fn corrupted_scale_flag_and_truncated_scale_section_are_rejected() {
+    let hw = HwConfig::alveo_u250();
+    let mut exe = build(ZooModel::B1, &ALL_DATASETS[2], &hw, CompileOptions::default());
+    exe.program.scales = Some(calibrated_table(&exe));
+    let bytes = exe.program.to_bytes();
+    assert_eq!(&bytes[..4], b"GA03");
+    // Offset of the scale-section flag: header + names + GA02 section.
+    let p = &exe.program;
+    let mut at = 4 + 4 + 4;
+    at += 2 + p.model_name.len();
+    at += 2 + p.graph_name.len();
+    at += 1 + p.thresholds.as_ref().unwrap().size_bytes() as usize;
+    assert_eq!(bytes[at], 1, "scale-section flag expected at {at}");
+    // A flag byte that is neither 0 nor 1 is rejected, not guessed at.
+    let mut corrupt = bytes.clone();
+    corrupt[at] = 7;
+    let err = Program::from_bytes(&corrupt).unwrap_err();
+    assert!(format!("{err:#}").contains("scale-section flag"), "{err:#}");
+    // Every truncation inside the scale table body is rejected.
+    let scale_end = at + 1 + p.scales.as_ref().unwrap().size_bytes() as usize;
+    forall("ga3-scale-truncation", 16, |rng| {
+        let cut = at + 1 + rng.below((scale_end - at) as u64) as usize;
+        prop_assert!(
+            Program::from_bytes(&bytes[..cut]).is_err(),
+            "truncation inside the scale section at {cut} must be rejected"
         );
         Ok(())
     });

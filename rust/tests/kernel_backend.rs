@@ -174,10 +174,17 @@ fn tile_backends_agree_and_warm_arena_is_allocation_free() {
         // Steady state: rebuild the executor around the warm state; the
         // only fresh allocation allowed is the replacement for the
         // output matrix that escaped to the caller.
-        let (arena, packed) = fx.into_state();
+        let (arena, packed, _) = fx.into_state();
         let cold_fresh = arena.stats().fresh;
-        let mut warm =
-            FunctionalExecutor::with_state(&exe, &pg, &store, RustBackend, arena, Some(packed));
+        let mut warm = FunctionalExecutor::with_state(
+            &exe,
+            &pg,
+            &store,
+            RustBackend,
+            arena,
+            Some(packed),
+            None,
+        );
         let again = warm.run(&x);
         assert_eq!(opt, again, "{}: warm run changed numerics", exe.ir.name);
         let fresh = warm.arena.stats().fresh - cold_fresh;

@@ -1,0 +1,104 @@
+//! Scale-aware golden equivalence for the quantized datapath: for every
+//! zoo model, the int8 execution must land within the bound the
+//! calibration pass derived from its measured ranges (never a
+//! hand-tuned epsilon), and — because the quantized kernels accumulate
+//! in exact i32 arithmetic — must be bit-identical across repeated runs
+//! and kernel thread counts.
+
+use graphagile::compiler::{compile, CompileOptions, Executable};
+use graphagile::config::HwConfig;
+use graphagile::exec::{golden_forward, FunctionalExecutor, RustBackend, WeightStore};
+use graphagile::graph::{rmat::rmat_edges, CooGraph, GraphMeta, PartitionConfig, PartitionedGraph};
+use graphagile::ir::{ZooModel, ALL_MODELS};
+use graphagile::quant::{calibrate, CalibrationProfile};
+
+const WEIGHT_SEED: u64 = 33;
+
+fn test_graph() -> CooGraph {
+    let meta = GraphMeta::new("q", 260, 1400, 16, 4);
+    rmat_edges(meta, Default::default(), 11).gcn_normalized()
+}
+
+/// Compile `model` over `g` and attach a scale table calibrated from
+/// the *exact* profile of `(g, x)` — the tightest bound the math emits.
+fn quantized_exe(
+    model: ZooModel,
+    g: &CooGraph,
+    pg: &PartitionedGraph,
+    hw: &HwConfig,
+    x: &[f32],
+) -> (Executable, WeightStore, f32) {
+    let ir = model.build(g.meta.clone());
+    let mut exe = compile(&ir, &pg.tile_counts(), hw, CompileOptions::default());
+    let store = WeightStore::deterministic(&exe.ir, WEIGHT_SEED);
+    let cal = calibrate(&exe.ir, &store, &CalibrationProfile::exact(g, x));
+    assert!(
+        cal.bound.is_finite() && cal.bound > 0.0,
+        "{}: calibration bound {} must be a positive finite number",
+        model.key(),
+        cal.bound
+    );
+    exe.program.scales = Some(cal.table);
+    (exe, store, cal.bound)
+}
+
+fn max_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+#[test]
+fn every_zoo_model_matches_golden_within_its_calibrated_bound() {
+    let g = test_graph();
+    let hw = HwConfig::functional_tiles();
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let pg = PartitionedGraph::build(&g, cfg);
+    let x = g.random_features(5);
+    for model in ALL_MODELS {
+        let (exe, store, bound) = quantized_exe(model, &g, &pg, &hw, &x);
+        let golden = golden_forward(&exe.ir, &g, &store, &x);
+        let mut fx = FunctionalExecutor::new(&exe, &pg, &store, RustBackend);
+        let got = fx.run(&x);
+        assert!(
+            fx.quant_visits > 0 && fx.requant_ops > 0 && fx.int8_bytes > 0,
+            "{}: quantized datapath never engaged",
+            exe.ir.name
+        );
+        let err = max_err(&golden, &got);
+        assert!(
+            err <= bound,
+            "{}: int8 error {err} exceeds the calibration-derived bound {bound}",
+            exe.ir.name
+        );
+        // Exact i32 accumulation: a repeat run reproduces every bit.
+        let again = fx.run(&x);
+        assert_eq!(got, again, "{}: quantized run is not deterministic", exe.ir.name);
+    }
+}
+
+#[test]
+fn quantized_outputs_are_bit_identical_across_thread_counts() {
+    let g = test_graph();
+    let hw = HwConfig::functional_tiles();
+    let cfg = PartitionConfig { n1: hw.n1() as u64, n2: hw.n2() as u64 };
+    let pg = PartitionedGraph::build(&g, cfg);
+    let x = g.random_features(7);
+    let prev = std::env::var("GA_KERNEL_THREADS").ok();
+    for model in [ZooModel::B1, ZooModel::B4, ZooModel::B7] {
+        let (exe, store, _) = quantized_exe(model, &g, &pg, &hw, &x);
+        let run = |t: &str| {
+            std::env::set_var("GA_KERNEL_THREADS", t);
+            FunctionalExecutor::new(&exe, &pg, &store, RustBackend).run(&x)
+        };
+        let (one, four) = (run("1"), run("4"));
+        assert_eq!(
+            one, four,
+            "{}: quantized output depends on the thread count",
+            exe.ir.name
+        );
+    }
+    match prev {
+        Some(v) => std::env::set_var("GA_KERNEL_THREADS", v),
+        None => std::env::remove_var("GA_KERNEL_THREADS"),
+    }
+}

@@ -20,7 +20,7 @@ use graphagile::graph::{
     TileCounts,
 };
 use graphagile::ir::{ZooModel, ALL_MODELS};
-use graphagile::serve::Key;
+use graphagile::serve::{Key, Precision};
 use graphagile::sparsity::adjacency_density;
 use graphagile::stream::{ChurnGenerator, ChurnSpec, DynamicGraph, UpdateBatch};
 use graphagile::util::forall;
@@ -175,8 +175,8 @@ fn bucket_shapes_are_epoch_free() {
     let before = d.sample(&[5, 9], &[4, 2], 1);
     d.apply(&one_percent_churn(&d, 23));
     let after = d.sample(&[5, 9], &[4, 2], 1);
-    let kb = Key::Bucket(ZooModel::B1, BucketShape::for_graph(&before.graph.meta));
-    let ka = Key::Bucket(ZooModel::B1, BucketShape::for_graph(&after.graph.meta));
+    let kb = Key::Bucket(ZooModel::B1, BucketShape::for_graph(&before.graph.meta), Precision::F32);
+    let ka = Key::Bucket(ZooModel::B1, BucketShape::for_graph(&after.graph.meta), Precision::F32);
     assert_eq!(kb, ka, "small churn must not move the pow2 bucket");
 }
 
@@ -194,7 +194,7 @@ fn prop_epoch_versioned_keys_never_collide() {
             let gkey = graphs[rng.below(graphs.len() as u64) as usize];
             let epoch = rng.below(1 << 20) as u32;
             triples.insert((model.key(), gkey, epoch));
-            keys.insert(Key::Whole(model, gkey, epoch));
+            keys.insert(Key::Whole(model, gkey, epoch, Precision::F32));
         }
         graphagile::prop_assert!(
             keys.len() == triples.len(),
@@ -209,7 +209,7 @@ fn prop_epoch_versioned_keys_never_collide() {
             8,
             4,
         );
-        let bucket = Key::Bucket(ALL_MODELS[0], shape);
+        let bucket = Key::Bucket(ALL_MODELS[0], shape, Precision::F32);
         graphagile::prop_assert!(
             !keys.contains(&bucket),
             "bucket key collided with a whole-graph key"
