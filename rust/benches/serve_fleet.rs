@@ -4,13 +4,21 @@
 //! commits. Everything runs on the virtual clock — the numbers are
 //! bit-identical between runs, so a diff of the JSON is a real regression.
 //!
-//! Knobs: `GA_REQUESTS` (default 400).
+//! Workloads are first-class traces: the synthesized request stream is
+//! round-tripped through the `daemon::Trace` codec before serving (any
+//! encode/decode drift would corrupt the bench input and fail loudly),
+//! and `GA_TRACE=path.json` replaces the synthesized stream with the
+//! admitted requests of a daemon-recorded trace.
+//!
+//! Knobs: `GA_REQUESTS` (default 400), `GA_TRACE` (recorded trace path).
 
 use graphagile::config::HwConfig;
+use graphagile::daemon::Trace;
 use graphagile::graph::dataset;
 use graphagile::ir::ZooModel;
 use graphagile::serve::{Coordinator, FleetConfig, Request};
 use graphagile::util::Rng;
+use std::path::Path;
 
 fn workload(n: usize, seed: u64) -> Vec<Request> {
     let models = [ZooModel::B1, ZooModel::B2, ZooModel::B6, ZooModel::B7];
@@ -32,11 +40,29 @@ fn workload(n: usize, seed: u64) -> Vec<Request> {
         .collect()
 }
 
+/// The bench input: a recorded trace when `GA_TRACE` is set, else the
+/// synthesized workload round-tripped through the trace codec.
+fn bench_requests(n: usize) -> Vec<Request> {
+    if let Ok(path) = std::env::var("GA_TRACE") {
+        let t = Trace::load(Path::new(&path)).expect("loading GA_TRACE");
+        let reqs = t.requests();
+        eprintln!("using recorded trace {path} ({} admitted requests)", reqs.len());
+        return reqs;
+    }
+    let trace =
+        Trace::from_requests(HwConfig::alveo_u250(), FleetConfig::default(), workload(n, 11));
+    let decoded = Trace::parse(&trace.encode()).expect("trace round-trip");
+    assert_eq!(decoded, trace, "trace codec must round-trip the bench workload");
+    decoded.requests()
+}
+
 fn main() {
     let n: usize = std::env::var("GA_REQUESTS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(400);
+    let reqs = bench_requests(n);
+    let n = reqs.len();
     let mut rows = Vec::new();
     println!(
         "{:>8} {:>14} {:>10} {:>10} {:>7} {:>10} {:>8}",
@@ -45,7 +71,7 @@ fn main() {
     for devices in [1usize, 2, 4] {
         let cfg = FleetConfig { n_devices: devices, ..FleetConfig::default() };
         let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
-        let stats = c.run(workload(n, 11));
+        let stats = c.run(reqs.clone());
         let thr = stats.completed as f64 / stats.makespan;
         println!(
             "{:>8} {:>14.0} {:>10.3} {:>10.3} {:>7} {:>10} {:>8}",

@@ -13,12 +13,19 @@
 //!    floor demands the bucket-cache hit rate survive the epoch bumps
 //!    (within 2% of the update-free trace).
 //!
+//! The serve-trace half is a first-class `daemon::Trace`: the
+//! synthesized stream is round-tripped through the trace codec before
+//! serving (the off-registry `RM` dataset exercises the codec's
+//! interning path), and `GA_TRACE=path.json` substitutes a
+//! daemon-recorded trace for the synthesized one.
+//!
 //! Knobs: `GA_REQUESTS` (default 1000), `GA_EPOCHS` (default 5 apply
-//! measurements). Floors are enforced only under `GA_BENCH_STRICT=1`
-//! (the wall-clock half stays report-only on loaded PR runners; CI
-//! enforces on pushes to main).
+//! measurements), `GA_TRACE` (recorded trace path). Floors are enforced
+//! only under `GA_BENCH_STRICT=1` (the wall-clock half stays
+//! report-only on loaded PR runners; CI enforces on pushes to main).
 
 use graphagile::config::HwConfig;
+use graphagile::daemon::Trace;
 use graphagile::graph::{
     rmat_edges, Dataset, GraphMeta, PartitionConfig, PartitionedGraph, TileCounts,
 };
@@ -26,6 +33,7 @@ use graphagile::ir::ZooModel;
 use graphagile::serve::{Coordinator, FleetConfig, Request, ServeStats};
 use graphagile::stream::{ChurnGenerator, ChurnSpec, DynamicGraph};
 use graphagile::util::{timed, Rng};
+use std::path::Path;
 
 /// The serve-trace graph (same scale as the mini-batch bench).
 const RMAT_TRACE: Dataset = Dataset {
@@ -105,6 +113,26 @@ fn minibatch_trace(n: usize, seed: u64) -> Vec<Request> {
         .collect()
 }
 
+/// The bench input: a recorded trace when `GA_TRACE` is set, else the
+/// synthesized update-interleaved stream round-tripped through the
+/// trace codec (codec drift fails loudly instead of skewing numbers).
+fn bench_requests(n: usize) -> Vec<Request> {
+    if let Ok(path) = std::env::var("GA_TRACE") {
+        let t = Trace::load(Path::new(&path)).expect("loading GA_TRACE");
+        let reqs = t.requests();
+        eprintln!("using recorded trace {path} ({} admitted requests)", reqs.len());
+        return reqs;
+    }
+    let trace = Trace::from_requests(
+        HwConfig::alveo_u250(),
+        FleetConfig { n_devices: 2, ..FleetConfig::default() },
+        minibatch_trace(n, 11),
+    );
+    let decoded = Trace::parse(&trace.encode()).expect("trace round-trip");
+    assert_eq!(decoded, trace, "trace codec must round-trip the bench workload");
+    decoded.requests()
+}
+
 fn serve(reqs: Vec<Request>) -> ServeStats {
     let cfg = FleetConfig { n_devices: 2, ..FleetConfig::default() };
     let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
@@ -135,7 +163,7 @@ fn main() {
         dirty_frac * 100.0
     );
 
-    let full_trace = minibatch_trace(n, 11);
+    let full_trace = bench_requests(n);
     let stripped: Vec<Request> = full_trace
         .iter()
         .filter(|r| !r.target.is_update())
@@ -199,9 +227,14 @@ fn main() {
     );
 
     // Sanity that holds on any machine (virtual clock: deterministic).
-    assert!(stream.updates > 0);
-    assert_eq!(stream.max_epoch as u64, stream.updates);
-    assert!(stream.minibatched > 0 && stat.minibatched > 0);
+    // A GA_TRACE-supplied recording may legitimately contain no churn
+    // or no mini-batches, so the shape invariants only bind on the
+    // synthesized workload.
+    if std::env::var("GA_TRACE").is_err() {
+        assert!(stream.updates > 0);
+        assert_eq!(stream.max_epoch as u64, stream.updates);
+        assert!(stream.minibatched > 0 && stat.minibatched > 0);
+    }
     // Acceptance floors, enforced on demand (main-branch CI sets
     // GA_BENCH_STRICT=1): the incremental apply must beat a full
     // rebuild >= 5x on a 1% churn batch, and graph churn must not

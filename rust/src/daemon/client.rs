@@ -1,0 +1,177 @@
+//! A blocking client for the daemon's wire protocol, plus the scripted
+//! mixed workload the CI record/replay job drives through it.
+
+use super::protocol::{read_frame, write_frame, ClientMsg};
+use super::trace::{response_from, stats_from};
+use crate::graph::dataset;
+use crate::ir::ZooModel;
+use crate::quant::Precision;
+use crate::serve::{Request, Response, ServeStats};
+use crate::util::{Json, Rng};
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))
+            .map_err(|e| anyhow!("connecting to daemon on port {port}: {e}"))?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| anyhow!("{e}"))?);
+        Ok(Client { reader, writer: BufWriter::new(stream) })
+    }
+
+    /// One request/reply round trip; errors on transport failure or an
+    /// `{"ok": false}` reply.
+    pub fn call(&mut self, msg: &ClientMsg) -> Result<Json> {
+        write_frame(&mut self.writer, &msg.to_json())?;
+        let reply = read_frame(&mut self.reader)?
+            .ok_or_else(|| anyhow!("daemon closed the connection"))?;
+        if !reply.bool_of("ok")? {
+            bail!("{}", reply.str_of("error").unwrap_or("daemon error with no message"));
+        }
+        Ok(reply)
+    }
+
+    /// Submit an inference request; returns the daemon's completion
+    /// record (with its stamped arrival accounted).
+    pub fn submit(&mut self, rq: Request) -> Result<Response> {
+        let reply = self.call(&ClientMsg::Submit(rq))?;
+        response_from(reply.get("response").ok_or_else(|| anyhow!("reply missing 'response'"))?)
+    }
+
+    /// Submit a churn batch (an update-target request on the wire's
+    /// flat churn encoding).
+    pub fn churn(&mut self, rq: Request) -> Result<Response> {
+        let reply = self.call(&ClientMsg::Churn(rq))?;
+        response_from(reply.get("response").ok_or_else(|| anyhow!("reply missing 'response'"))?)
+    }
+
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        let reply = self.call(&ClientMsg::Stats)?;
+        stats_from(reply.get("stats").ok_or_else(|| anyhow!("reply missing 'stats'"))?)
+    }
+
+    pub fn drain(&mut self) -> Result<ServeStats> {
+        let reply = self.call(&ClientMsg::Drain)?;
+        stats_from(reply.get("stats").ok_or_else(|| anyhow!("reply missing 'stats'"))?)
+    }
+
+    /// Ask the daemon to persist its trace and exit; returns the number
+    /// of recorded events.
+    pub fn shutdown(mut self) -> Result<u64> {
+        let reply = self.call(&ClientMsg::Shutdown)?;
+        reply.u64_of("events")
+    }
+}
+
+/// The deterministic mixed workload the CI job scripts against a live
+/// daemon: whole-graph f32 and int8 requests, mini-batch ego-nets, and
+/// streaming churn batches over two registry graphs and three models —
+/// every serving path the trace format must capture. Arrival times are
+/// left at 0 (the daemon stamps real ones at admission).
+pub fn scripted_workload(n: usize, seed: u64) -> Vec<ClientMsg> {
+    let mut rng = Rng::new(seed);
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B7];
+    let graphs = [dataset("CO").unwrap(), dataset("PU").unwrap()];
+    (0..n)
+        .map(|i| {
+            let tenant = rng.below(4) as u32;
+            let ds = graphs[rng.below(2) as usize];
+            let model = models[rng.below(3) as usize];
+            match rng.below(8) {
+                // ~1/8 churn batches.
+                0 => ClientMsg::Churn(Request::update(
+                    tenant,
+                    ds,
+                    16 + rng.below(48) as u32,
+                    rng.below(8) as u32,
+                    rng.below(3) as u32,
+                    seed ^ i as u64,
+                    0.0,
+                )),
+                // ~1/4 mini-batches.
+                1 | 2 => {
+                    let k = 1 + rng.below(3) as usize;
+                    let targets =
+                        (0..k).map(|_| rng.below(ds.n_vertices) as u32).collect();
+                    ClientMsg::Submit(Request::minibatch(
+                        tenant,
+                        model,
+                        ds,
+                        targets,
+                        vec![8, 4],
+                        seed.wrapping_add(i as u64),
+                        0.0,
+                    ))
+                }
+                // ~1/8 int8 whole-graph.
+                3 => ClientMsg::Submit(
+                    Request::full(tenant, model, ds, 0.0).with_precision(Precision::Int8),
+                ),
+                // The rest: f32 whole-graph.
+                _ => ClientMsg::Submit(Request::full(tenant, model, ds, 0.0)),
+            }
+        })
+        .collect()
+}
+
+/// Drive `n` scripted requests through a live daemon, then drain.
+/// Returns (accepted count, drained stats). Does not shut the daemon
+/// down — callers decide whether the session continues.
+pub fn drive(client: &mut Client, n: usize, seed: u64) -> Result<(usize, ServeStats)> {
+    let mut accepted = 0;
+    for msg in scripted_workload(n, seed) {
+        match &msg {
+            ClientMsg::Submit(rq) => {
+                client.submit(rq.clone())?;
+                accepted += 1;
+            }
+            ClientMsg::Churn(rq) => {
+                client.churn(rq.clone())?;
+                accepted += 1;
+            }
+            _ => {}
+        }
+    }
+    let stats = client.drain()?;
+    Ok((accepted, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_workload_is_deterministic_and_mixed() {
+        let a = scripted_workload(64, 7);
+        let b = scripted_workload(64, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, scripted_workload(64, 8));
+        let churn = a.iter().filter(|m| matches!(m, ClientMsg::Churn(_))).count();
+        let mini = a
+            .iter()
+            .filter(|m| matches!(m, ClientMsg::Submit(rq) if rq.target.is_minibatch()))
+            .count();
+        let int8 = a
+            .iter()
+            .filter(|m| matches!(m, ClientMsg::Submit(rq) if rq.precision == Precision::Int8))
+            .count();
+        assert!(churn > 0, "no churn in the mix");
+        assert!(mini > 0, "no mini-batches in the mix");
+        assert!(int8 > 0, "no int8 in the mix");
+        // Every scripted mini-batch is admissible (targets in range).
+        for m in &a {
+            if let ClientMsg::Submit(rq) = m {
+                if let crate::serve::Target::MiniBatch { targets, .. } = &rq.target {
+                    assert!(!targets.is_empty());
+                    assert!(targets.iter().all(|&v| (v as u64) < rq.dataset.n_vertices));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! The daemon's TCP front end: accept connections on localhost, decode
+//! request frames, feed them through the [`DaemonSession`], and reply
+//! frame-for-frame. Connections are served sequentially — admission
+//! order is the determinism contract, and a single accept loop makes
+//! that order the order requests arrived on the wire.
+
+use super::protocol::{err_reply, ok_reply, read_frame, write_frame, ClientMsg};
+use super::session::DaemonSession;
+use super::trace::{response_json, stats_json, Trace};
+use crate::config::HwConfig;
+use crate::serve::FleetConfig;
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+
+pub struct Daemon {
+    listener: TcpListener,
+    session: DaemonSession,
+    port: u16,
+}
+
+impl Daemon {
+    /// Bind on `127.0.0.1:port` (`port = 0` picks an ephemeral port —
+    /// read it back with [`Daemon::port`]). Localhost-only: the daemon
+    /// has no authentication and is a lab tool, not an internet service.
+    pub fn bind(port: u16, hw: HwConfig, fleet: FleetConfig) -> Result<Daemon> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).context("binding daemon listener")?;
+        let port = listener.local_addr().context("reading bound address")?.port();
+        Ok(Daemon { listener, session: DaemonSession::new(hw, fleet), port })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Accept and serve connections until a client sends `shutdown`,
+    /// then seal and return the recorded trace.
+    pub fn serve(mut self) -> Result<Trace> {
+        loop {
+            let (stream, _peer) = self.listener.accept().context("accepting connection")?;
+            if self.handle_conn(stream)? {
+                return Ok(self.session.finalize());
+            }
+        }
+    }
+
+    /// Serve one connection's frames; `Ok(true)` means shutdown was
+    /// requested.
+    fn handle_conn(&mut self, stream: TcpStream) -> Result<bool> {
+        let mut reader =
+            BufReader::new(stream.try_clone().context("cloning connection handle")?);
+        let mut writer = BufWriter::new(stream);
+        loop {
+            let frame = match read_frame(&mut reader) {
+                Ok(Some(f)) => f,
+                // Clean EOF: the client is done; wait for the next one.
+                Ok(None) => return Ok(false),
+                // Torn framing: the byte stream is unsynchronized, so
+                // reply best-effort and drop the connection. The session
+                // (and its trace) survives.
+                Err(e) => {
+                    let _ = write_frame(&mut writer, &err_reply(&format!("{e:#}")));
+                    return Ok(false);
+                }
+            };
+            match ClientMsg::parse(&frame) {
+                // A well-framed but invalid message poisons only itself.
+                Err(e) => write_frame(&mut writer, &err_reply(&format!("{e:#}")))?,
+                Ok(ClientMsg::Submit(rq)) | Ok(ClientMsg::Churn(rq)) => {
+                    match self.session.submit(rq) {
+                        Ok(resp) => write_frame(
+                            &mut writer,
+                            &ok_reply(vec![("response", response_json(&resp))]),
+                        )?,
+                        Err(e) => write_frame(&mut writer, &err_reply(&format!("{e:#}")))?,
+                    }
+                }
+                Ok(ClientMsg::Stats) => {
+                    let st = self.session.stats();
+                    write_frame(&mut writer, &ok_reply(vec![("stats", stats_json(&st))]))?;
+                }
+                Ok(ClientMsg::Drain) => {
+                    let st = self.session.drain();
+                    write_frame(
+                        &mut writer,
+                        &ok_reply(vec![
+                            ("stats", stats_json(&st)),
+                            ("completed", Json::Num(st.completed as f64)),
+                        ]),
+                    )?;
+                }
+                Ok(ClientMsg::Shutdown) => {
+                    write_frame(
+                        &mut writer,
+                        &ok_reply(vec![(
+                            "events",
+                            Json::Num(self.session.events_len() as f64),
+                        )]),
+                    )?;
+                    return Ok(true);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemon::client::Client;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+    use crate::serve::Request;
+
+    #[test]
+    fn daemon_serves_and_records_over_tcp() {
+        let d = Daemon::bind(0, HwConfig::alveo_u250(), FleetConfig::default()).unwrap();
+        let port = d.port();
+        let server = std::thread::spawn(move || d.serve().unwrap());
+
+        let mut c = Client::connect(port).unwrap();
+        let co = dataset("CO").unwrap();
+        let resp = c.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        assert_eq!(resp.tenant, 0);
+        // Invalid request: error reply, connection stays usable.
+        let err = c
+            .submit(Request::minibatch(0, ZooModel::B1, co, vec![], vec![4], 1, 0.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no target vertices"), "{err}");
+        let st = c.drain().unwrap();
+        assert_eq!(st.completed, 1);
+        let events = c.shutdown().unwrap();
+        assert_eq!(events, 2); // admit + drain; the reject was never recorded
+
+        let trace = server.join().unwrap();
+        assert_eq!(trace.requests().len(), 1);
+        assert_eq!(trace.responses.len(), 1);
+        assert_eq!(trace.stats.as_ref().unwrap().completed, 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Daemon mode and the recordable, replayable trace format (DESIGN.md
+//! Sec. 3g; ROADMAP "Daemon mode + recordable trace format").
+//!
+//! The serving stack is bit-deterministic on a virtual clock; what it
+//! lacked was a production shape. This module adds one without
+//! touching the determinism: a long-running TCP server
+//! ([`listener::Daemon`]) speaks a length-prefixed JSON protocol
+//! ([`protocol`]), stamps each accepted request's *real* arrival time
+//! onto the virtual clock exactly once at admission
+//! ([`session::DaemonSession`]), and appends every accepted event to a
+//! versioned trace ([`trace::Trace`]). `graphagile replay trace.json`
+//! then re-executes the recorded events through
+//! [`Coordinator::admit`](crate::serve::Coordinator::admit) offline and
+//! — because arrivals, seeds, and config are all in the trace —
+//! reproduces the recorded [`Response`] stream and [`ServeStats`]
+//! bit-for-bit. `--verify` turns that into a regression gate.
+
+pub mod client;
+pub mod listener;
+pub mod protocol;
+pub mod session;
+pub mod trace;
+
+pub use client::{drive, scripted_workload, Client};
+pub use listener::Daemon;
+pub use protocol::{read_frame, write_frame, ClientMsg, MAX_FRAME};
+pub use session::DaemonSession;
+pub use trace::{Trace, TraceConfig, TraceEvent, TRACE_VERSION};
+
+use crate::serve::{Coordinator, Response, ServeStats};
+use anyhow::{bail, Result};
+
+/// Re-execute a trace's admitted events in recorded order through a
+/// coordinator built from the trace's own config. Admission order is
+/// the determinism contract — events are *not* re-sorted.
+pub fn replay(trace: &Trace) -> (Vec<Response>, ServeStats) {
+    let mut coord = Coordinator::fleet(trace.config.hw.clone(), trace.config.fleet);
+    for e in &trace.events {
+        match e {
+            TraceEvent::Admit(rq) => {
+                coord.admit(rq.clone());
+            }
+            // Stats/drain queries are coordinator no-ops; they are in
+            // the trace for the operational timeline only.
+            TraceEvent::Stats { .. } | TraceEvent::Drain { .. } => {}
+        }
+    }
+    let stats = coord.stats();
+    (coord.responses, stats)
+}
+
+/// Replay and diff against the trace's recorded outcomes. Returns the
+/// list of divergences (empty = bit-identical). Errors on a trace that
+/// has no recorded outcomes — verifying against nothing would be a
+/// vacuous pass.
+pub fn verify(trace: &Trace) -> Result<Vec<String>> {
+    if trace.responses.is_empty() && trace.stats.is_none() {
+        bail!(
+            "trace has no recorded responses or stats to verify against \
+             (events-only traces can be replayed, not verified)"
+        );
+    }
+    let (responses, stats) = replay(trace);
+    let mut divergences = Vec::new();
+    if responses.len() != trace.responses.len() {
+        divergences.push(format!(
+            "response count: recorded {} != replayed {}",
+            trace.responses.len(),
+            responses.len()
+        ));
+    }
+    for (i, (rec, rep)) in trace.responses.iter().zip(&responses).enumerate() {
+        for d in rec.diff(rep) {
+            divergences.push(format!("responses[{i}].{d}"));
+        }
+    }
+    if let Some(rec) = &trace.stats {
+        for d in rec.diff(&stats) {
+            divergences.push(format!("stats.{d}"));
+        }
+    }
+    Ok(divergences)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+    use crate::serve::{FleetConfig, Request};
+
+    fn recorded_session() -> Trace {
+        let mut s = DaemonSession::new(HwConfig::alveo_u250(), FleetConfig::default());
+        let co = dataset("CO").unwrap();
+        let pu = dataset("PU").unwrap();
+        s.submit(Request::full(0, ZooModel::B2, co, 0.0)).unwrap();
+        s.submit(Request::minibatch(1, ZooModel::B1, co, vec![5, 9], vec![8, 4], 3, 0.0))
+            .unwrap();
+        s.submit(Request::update(0, pu, 32, 8, 1, 11, 0.0)).unwrap();
+        s.submit(Request::full(2, ZooModel::B7, pu, 0.0)).unwrap();
+        s.drain();
+        s.finalize()
+    }
+
+    #[test]
+    fn replay_reproduces_a_recorded_session_bit_identically() {
+        let trace = recorded_session();
+        assert_eq!(verify(&trace).unwrap(), Vec::<String>::new());
+        // Through a full encode/decode cycle too.
+        let decoded = Trace::parse(&trace.encode()).unwrap();
+        assert_eq!(verify(&decoded).unwrap(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn verify_names_an_injected_divergence() {
+        let mut trace = recorded_session();
+        trace.responses[1].latency += 1e-9;
+        if let Some(s) = trace.stats.as_mut() {
+            s.cache_hits += 1;
+        }
+        let div = verify(&trace).unwrap();
+        assert!(div.iter().any(|d| d.starts_with("responses[1].latency:")), "{div:?}");
+        assert!(div.iter().any(|d| d.starts_with("stats.cache_hits:")), "{div:?}");
+    }
+
+    #[test]
+    fn verify_refuses_events_only_traces() {
+        let mut trace = recorded_session();
+        trace.responses.clear();
+        trace.stats = None;
+        let err = verify(&trace).unwrap_err().to_string();
+        assert!(err.contains("no recorded responses"), "{err}");
+    }
+}

@@ -1,0 +1,243 @@
+//! The daemon's wire protocol: length-prefixed JSON frames over a
+//! byte stream.
+//!
+//! A frame is a 4-byte big-endian `u32` payload length followed by
+//! exactly that many bytes of UTF-8 JSON. Frames are capped at
+//! [`MAX_FRAME`] bytes so a hostile or corrupt length prefix cannot
+//! make the daemon allocate gigabytes. Client frames carry an `"op"`
+//! field (`submit` / `churn` / `stats` / `drain` / `shutdown`); the
+//! daemon replies with `{"ok": true, ...}` or
+//! `{"ok": false, "error": "..."}` — one reply frame per request
+//! frame, in order.
+
+use super::trace::{dataset_from, request_from, request_json};
+use crate::serve::Request;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame payload ceiling (1 MiB): larger than any real request — a
+/// 60k-target mini-batch fits — while bounding a bad prefix.
+pub const MAX_FRAME: u32 = 1 << 20;
+
+/// Write one frame: 4-byte big-endian length, then the JSON payload.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<()> {
+    let payload = v.to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME as usize {
+        bail!("frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})", bytes.len());
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes()).context("writing frame length")?;
+    w.write_all(bytes).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF at a frame boundary (the
+/// peer closed between frames); every torn state is an error naming
+/// what was malformed — truncated length prefix, oversized frame,
+/// truncated payload, invalid UTF-8, or invalid JSON.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf[..1]) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    r.read_exact(&mut len_buf[1..])
+        .map_err(|_| anyhow!("truncated length prefix (connection died mid-header)"))?;
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME ({MAX_FRAME})");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|_| anyhow!("truncated frame payload (got fewer than {len} bytes)"))?;
+    let text = String::from_utf8(payload).map_err(|_| anyhow!("frame payload is not UTF-8"))?;
+    let v = Json::parse(&text).context("frame payload is not valid JSON")?;
+    Ok(Some(v))
+}
+
+/// A decoded client request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientMsg {
+    /// Submit an inference request (`arrival` in the payload is
+    /// ignored: the daemon stamps real arrival time at admission).
+    Submit(Request),
+    /// Submit a streaming churn batch (arrival stamped likewise).
+    Churn(Request),
+    /// Query current serving stats.
+    Stats,
+    /// Wait until all admitted work is accounted (the virtual-clock
+    /// fleet is always drained; this fences the event into the trace).
+    Drain,
+    /// Drain, persist the trace, and exit.
+    Shutdown,
+}
+
+impl ClientMsg {
+    pub fn parse(j: &Json) -> Result<ClientMsg> {
+        match j.str_of("op")? {
+            "submit" => Ok(ClientMsg::Submit(request_from(
+                j.get("request").ok_or_else(|| anyhow!("submit frame is missing 'request'"))?,
+            )?)),
+            "churn" => {
+                let ds = dataset_from(
+                    j.get("dataset").ok_or_else(|| anyhow!("churn frame is missing 'dataset'"))?,
+                )?;
+                let seed = j
+                    .str_of("seed")?
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("churn field 'seed' is not a u64 string"))?;
+                Ok(ClientMsg::Churn(Request::update(
+                    j.u32_of("tenant")?,
+                    ds,
+                    j.u32_of("inserts")?,
+                    j.u32_of("deletes")?,
+                    j.u32_of("grow")?,
+                    seed,
+                    0.0,
+                )))
+            }
+            "stats" => Ok(ClientMsg::Stats),
+            "drain" => Ok(ClientMsg::Drain),
+            "shutdown" => Ok(ClientMsg::Shutdown),
+            op => bail!("unknown op '{op}'"),
+        }
+    }
+
+    /// The client-side encoding of this message.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClientMsg::Submit(rq) => Json::obj(vec![
+                ("op", Json::Str("submit".into())),
+                ("request", request_json(rq)),
+            ]),
+            ClientMsg::Churn(rq) => {
+                // Churn frames are flat (no nested request): the op IS
+                // the update description.
+                let (inserts, deletes, grow, seed) = match rq.target {
+                    crate::serve::Target::Update { inserts, deletes, grow, seed } => {
+                        (inserts, deletes, grow, seed)
+                    }
+                    _ => unreachable!("Churn always wraps an update request"),
+                };
+                Json::obj(vec![
+                    ("op", Json::Str("churn".into())),
+                    ("tenant", Json::Num(rq.tenant as f64)),
+                    ("dataset", super::trace::dataset_json(&rq.dataset)),
+                    ("inserts", Json::Num(inserts as f64)),
+                    ("deletes", Json::Num(deletes as f64)),
+                    ("grow", Json::Num(grow as f64)),
+                    ("seed", Json::Str(seed.to_string())),
+                ])
+            }
+            ClientMsg::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            ClientMsg::Drain => Json::obj(vec![("op", Json::Str("drain".into()))]),
+            ClientMsg::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
+        }
+    }
+}
+
+/// `{"ok": true, ...fields}` — the daemon's success reply.
+pub fn ok_reply(fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
+/// `{"ok": false, "error": msg}` — the daemon's error reply. The
+/// connection stays up; one bad frame poisons only itself.
+pub fn err_reply(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip() {
+        let msgs = [
+            ClientMsg::Submit(Request::full(3, ZooModel::B2, dataset("CO").unwrap(), 0.0)),
+            ClientMsg::Churn(Request::update(1, dataset("PU").unwrap(), 8, 2, 1, u64::MAX, 0.0)),
+            ClientMsg::Stats,
+            ClientMsg::Drain,
+            ClientMsg::Shutdown,
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, &m.to_json()).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        for m in &msgs {
+            let j = read_frame(&mut r).unwrap().expect("frame present");
+            assert_eq!(&ClientMsg::parse(&j).unwrap(), m);
+        }
+        // Clean EOF at a frame boundary.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_length_prefix_is_rejected() {
+        let mut r = Cursor::new(vec![0u8, 0]);
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("truncated length prefix"), "{err}");
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected() {
+        let mut bytes = (MAX_FRAME + 1).to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"{}");
+        let mut r = Cursor::new(bytes);
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("exceeds MAX_FRAME"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected() {
+        let mut bytes = 10u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"{}"); // 2 of the promised 10 bytes
+        let mut r = Cursor::new(bytes);
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("truncated frame payload"), "{err}");
+    }
+
+    #[test]
+    fn non_utf8_payload_is_rejected() {
+        let mut bytes = 2u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        let mut r = Cursor::new(bytes);
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("not UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn bad_json_payload_is_rejected() {
+        let mut bytes = 3u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"{\"a");
+        let mut r = Cursor::new(bytes);
+        let err = format!("{:#}", read_frame(&mut r).unwrap_err());
+        assert!(err.contains("not valid JSON"), "{err}");
+    }
+
+    #[test]
+    fn unknown_op_is_rejected() {
+        let j = Json::parse(r#"{"op": "warp"}"#).unwrap();
+        let err = ClientMsg::parse(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown op 'warp'"), "{err}");
+    }
+
+    #[test]
+    fn replies_have_the_ok_discriminant() {
+        let ok = ok_reply(vec![("n", Json::Num(1.0))]);
+        assert!(ok.bool_of("ok").unwrap());
+        assert_eq!(ok.f64_of("n").unwrap(), 1.0);
+        let err = err_reply("nope");
+        assert!(!err.bool_of("ok").unwrap());
+        assert_eq!(err.str_of("error").unwrap(), "nope");
+    }
+}

@@ -1,0 +1,199 @@
+//! One daemon serving session: the bridge between real wall-clock
+//! ingestion and the deterministic virtual-clock coordinator.
+//!
+//! Wall time enters the system in exactly one place —
+//! [`DaemonSession::stamp`] — where a request's real arrival offset
+//! since session start is written into `Request::arrival`. From that
+//! point on everything is virtual and deterministic: the stamped value
+//! is recorded in the trace, so an offline replay feeds the identical
+//! arrivals through [`Coordinator::admit`] and reproduces every
+//! response bit-for-bit.
+//!
+//! Validation happens *before* recording: a rejected submission never
+//! enters the trace, so a recorded trace contains only events that
+//! replay cleanly.
+
+use super::trace::{Trace, TraceConfig, TraceEvent, TRACE_VERSION};
+use crate::config::HwConfig;
+use crate::serve::{Coordinator, FleetConfig, Request, Response, ServeStats, Target};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// The largest dataset the mini-batch sampler / streaming overlay will
+/// materialize (mirrors [`crate::graph::Dataset::materialize`]'s guard;
+/// the daemon rejects instead of panicking).
+const MAX_MATERIALIZE_EDGES: u64 = 10_000_000;
+
+pub struct DaemonSession {
+    coord: Coordinator,
+    config: TraceConfig,
+    events: Vec<TraceEvent>,
+    /// Session start; arrivals are stamped as elapsed seconds since it.
+    t0: Instant,
+    /// Last stamped arrival — stamps are forced monotone because
+    /// [`Coordinator::admit`] requires nondecreasing arrivals.
+    last_arrival: f64,
+}
+
+impl DaemonSession {
+    pub fn new(hw: HwConfig, fleet: FleetConfig) -> DaemonSession {
+        DaemonSession {
+            coord: Coordinator::fleet(hw.clone(), fleet),
+            config: TraceConfig { hw, fleet },
+            events: Vec::new(),
+            t0: Instant::now(),
+            last_arrival: 0.0,
+        }
+    }
+
+    /// The one place wall-clock time becomes virtual time.
+    fn stamp(&mut self) -> f64 {
+        let t = self.t0.elapsed().as_secs_f64().max(self.last_arrival);
+        self.last_arrival = t;
+        t
+    }
+
+    /// Reject requests the coordinator would panic on, *before* they
+    /// are recorded or admitted.
+    fn validate(rq: &Request) -> Result<()> {
+        match &rq.target {
+            Target::FullGraph => Ok(()),
+            Target::MiniBatch { targets, .. } => {
+                if targets.is_empty() {
+                    bail!("mini-batch request has no target vertices");
+                }
+                if rq.dataset.n_edges > MAX_MATERIALIZE_EDGES {
+                    bail!(
+                        "dataset {} ({} edges) is too large to sample (max {MAX_MATERIALIZE_EDGES})",
+                        rq.dataset.key,
+                        rq.dataset.n_edges
+                    );
+                }
+                if let Some(&v) = targets.iter().find(|&&v| v as u64 >= rq.dataset.n_vertices) {
+                    bail!(
+                        "target vertex {v} is out of range for dataset {} (|V| = {})",
+                        rq.dataset.key,
+                        rq.dataset.n_vertices
+                    );
+                }
+                Ok(())
+            }
+            Target::Update { .. } => {
+                if rq.dataset.n_edges > MAX_MATERIALIZE_EDGES {
+                    bail!(
+                        "dataset {} ({} edges) is too large to stream (max {MAX_MATERIALIZE_EDGES})",
+                        rq.dataset.key,
+                        rq.dataset.n_edges
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Admit one request: validate, stamp its real arrival onto the
+    /// virtual clock, record the stamped event, and run it through the
+    /// deterministic coordinator.
+    pub fn submit(&mut self, mut rq: Request) -> Result<Response> {
+        DaemonSession::validate(&rq)?;
+        rq.arrival = self.stamp();
+        self.events.push(TraceEvent::Admit(rq.clone()));
+        Ok(self.coord.admit(rq))
+    }
+
+    /// Current aggregate stats; the query is recorded so the trace
+    /// keeps the operational timeline.
+    pub fn stats(&mut self) -> ServeStats {
+        let at = self.stamp();
+        self.events.push(TraceEvent::Stats { at });
+        self.coord.stats()
+    }
+
+    /// Drain: the virtual-clock fleet accounts every admitted job at
+    /// admission, so draining is already done — the event is recorded
+    /// as a fence and the final stats are returned.
+    pub fn drain(&mut self) -> ServeStats {
+        let at = self.stamp();
+        self.events.push(TraceEvent::Drain { at });
+        self.coord.stats()
+    }
+
+    pub fn events_len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.coord.responses.len()
+    }
+
+    /// Seal the session into a self-contained trace: config, events in
+    /// admission order, and the recorded outcomes replay will be
+    /// verified against.
+    pub fn finalize(self) -> Trace {
+        let stats = self.coord.stats();
+        Trace {
+            version: TRACE_VERSION,
+            config: self.config,
+            events: self.events,
+            responses: self.coord.responses,
+            stats: Some(stats),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+    use crate::quant::Precision;
+
+    #[test]
+    fn session_stamps_monotone_arrivals_and_records() {
+        let mut s = DaemonSession::new(HwConfig::alveo_u250(), FleetConfig::default());
+        let co = dataset("CO").unwrap();
+        let r1 = s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        let r2 = s
+            .submit(
+                Request::full(1, ZooModel::B1, co, 0.0).with_precision(Precision::Int8),
+            )
+            .unwrap();
+        assert_eq!(r1.tenant, 0);
+        assert_eq!(r2.precision, Precision::Int8);
+        let _ = s.stats();
+        let st = s.drain();
+        assert_eq!(st.completed, 2);
+        let trace = s.finalize();
+        assert_eq!(trace.events.len(), 4); // 2 admits + stats + drain
+        assert_eq!(trace.responses.len(), 2);
+        let reqs = trace.requests();
+        assert_eq!(reqs.len(), 2);
+        // Stamped arrivals are nondecreasing (the admit contract).
+        assert!(reqs[1].arrival >= reqs[0].arrival);
+    }
+
+    #[test]
+    fn rejected_submissions_never_enter_the_trace() {
+        let mut s = DaemonSession::new(HwConfig::alveo_u250(), FleetConfig::default());
+        let co = dataset("CO").unwrap();
+        let re = dataset("RE").unwrap();
+        // Empty target list.
+        assert!(s
+            .submit(Request::minibatch(0, ZooModel::B1, co, vec![], vec![4], 1, 0.0))
+            .is_err());
+        // Out-of-range vertex.
+        assert!(s
+            .submit(Request::minibatch(0, ZooModel::B1, co, vec![999_999], vec![4], 1, 0.0))
+            .is_err());
+        // Unmaterializable dataset for sampling / streaming.
+        assert!(s
+            .submit(Request::minibatch(0, ZooModel::B1, re, vec![1], vec![4], 1, 0.0))
+            .is_err());
+        assert!(s.submit(Request::update(0, re, 8, 2, 0, 1, 0.0)).is_err());
+        assert_eq!(s.events_len(), 0);
+        assert_eq!(s.completed(), 0);
+        // A valid one still goes through afterwards.
+        assert!(s.submit(Request::full(0, ZooModel::B1, co, 0.0)).is_ok());
+        assert_eq!(s.events_len(), 1);
+    }
+}

@@ -1,0 +1,709 @@
+//! The recordable trace format (`trace.json`, version 1).
+//!
+//! A trace is a complete, self-contained description of one serving
+//! run: the hardware + fleet configuration, every admitted event in
+//! admission order with its stamped virtual arrival time, and — when
+//! the run finished — the recorded [`Response`] stream and final
+//! [`ServeStats`]. `graphagile replay` re-executes the events through
+//! [`Coordinator::admit`](crate::serve::Coordinator::admit) and, because
+//! the coordinator never reads wall-clock time, reproduces the recorded
+//! outputs bit-identically.
+//!
+//! Versioning rules (DESIGN.md Sec. 3g):
+//!
+//! * `version` is a required integer. Readers hard-error on a version
+//!   they do not know — silently misreading a future trace would forge
+//!   a "bit-identical" verdict.
+//! * Unknown *fields* inside any object are ignored (lookup by key), so
+//!   a same-version writer may append fields without breaking older
+//!   readers. Unknown event `kind`s are a hard error, not skippable:
+//!   dropping an event would change every subsequent virtual timestamp.
+//! * All `f64` values round-trip bit-exactly
+//!   ([`crate::util::json`]); `u64` seeds are encoded as decimal
+//!   *strings* because JSON numbers are f64 and lose integer precision
+//!   past 2^53.
+
+use crate::config::HwConfig;
+use crate::graph::{dataset, Dataset};
+use crate::ir::{zoo_model, ZooModel};
+use crate::quant::Precision;
+use crate::serve::{CostModel, FleetConfig, Request, Response, ServeStats, Target};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// The trace schema version this build reads and writes.
+pub const TRACE_VERSION: u32 = 1;
+
+/// The configuration a trace was recorded under — everything the
+/// replayer needs to rebuild an identical [`Coordinator`]
+/// (crate::serve::Coordinator).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    pub hw: HwConfig,
+    pub fleet: FleetConfig,
+}
+
+/// One recorded daemon event, in admission order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A request admitted to the coordinator at its stamped arrival.
+    Admit(Request),
+    /// A stats query served at virtual time `at` (a coordinator no-op;
+    /// recorded so the operational timeline survives in the trace).
+    Stats { at: f64 },
+    /// A drain request at virtual time `at` (also a coordinator no-op:
+    /// the virtual-clock fleet completes every admitted job "instantly"
+    /// in wall time).
+    Drain { at: f64 },
+}
+
+/// A recorded serving run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub version: u32,
+    pub config: TraceConfig,
+    pub events: Vec<TraceEvent>,
+    /// Response stream the recording run produced, in admission order.
+    /// Empty for hand-authored event-only traces (replay then has
+    /// nothing to `--verify` against).
+    pub responses: Vec<Response>,
+    /// Final stats of the recording run, if it drained cleanly.
+    pub stats: Option<ServeStats>,
+}
+
+impl Trace {
+    /// An events-only trace over `requests` (benches use this to make
+    /// synthesized workloads first-class trace inputs).
+    pub fn from_requests(hw: HwConfig, fleet: FleetConfig, requests: Vec<Request>) -> Trace {
+        Trace {
+            version: TRACE_VERSION,
+            config: TraceConfig { hw, fleet },
+            events: requests.into_iter().map(TraceEvent::Admit).collect(),
+            responses: Vec::new(),
+            stats: None,
+        }
+    }
+
+    /// The admitted requests, in recorded admission order.
+    pub fn requests(&self) -> Vec<Request> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Admit(rq) => Some(rq.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("config", config_json(&self.config)),
+            ("events", Json::Arr(self.events.iter().map(event_json).collect())),
+            ("responses", Json::Arr(self.responses.iter().map(response_json).collect())),
+            (
+                "stats",
+                match &self.stats {
+                    Some(s) => stats_json(s),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Encode with one event/response per line: the file stays
+    /// greppable and line-diffable while each record remains compact.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("\"version\": {},\n", self.version));
+        out.push_str(&format!("\"config\": {},\n", config_json(&self.config)));
+        out.push_str("\"events\": [");
+        for (i, e) in self.events.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&event_json(e).to_string());
+        }
+        out.push_str("\n],\n\"responses\": [");
+        for (i, r) in self.responses.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&response_json(r).to_string());
+        }
+        out.push_str("\n],\n\"stats\": ");
+        match &self.stats {
+            Some(s) => out.push_str(&stats_json(s).to_string()),
+            None => out.push_str("null"),
+        }
+        out.push_str("\n}\n");
+        out
+    }
+
+    /// Decode a trace document, enforcing the version gate.
+    pub fn parse(s: &str) -> Result<Trace> {
+        let j = Json::parse(s).context("trace is not valid JSON")?;
+        let version = j.u32_of("version")?;
+        if version != TRACE_VERSION {
+            bail!("trace version {version} is not supported (this build reads {TRACE_VERSION})");
+        }
+        let config = config_from(
+            j.get("config").ok_or_else(|| anyhow!("trace is missing 'config'"))?,
+        )?;
+        let mut events = Vec::new();
+        for (i, e) in j.arr_of("events")?.iter().enumerate() {
+            events.push(event_from(e).with_context(|| format!("events[{i}]"))?);
+        }
+        let mut responses = Vec::new();
+        for (i, r) in j.arr_of("responses")?.iter().enumerate() {
+            responses.push(response_from(r).with_context(|| format!("responses[{i}]"))?);
+        }
+        let stats = match j.get("stats") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(stats_from(s).context("stats")?),
+        };
+        Ok(Trace { version, config, events, responses, stats })
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Trace::parse(&s).with_context(|| format!("parsing trace {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+// ---- u64-as-string (seeds can use all 64 bits; JSON numbers cannot) ----
+
+fn seed_json(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn seed_from(j: &Json, key: &str) -> Result<u64> {
+    let s = j.str_of(key)?;
+    s.parse::<u64>().map_err(|_| anyhow!("field '{key}' is not a u64 string ({s:?})"))
+}
+
+// ---- leaked-string pool for datasets not in the registry ----
+
+/// Intern a string to `&'static str`. The pool deduplicates, so
+/// decoding the same off-registry dataset a million times leaks its
+/// key/name exactly once.
+fn intern(s: &str) -> &'static str {
+    use std::sync::{Mutex, OnceLock};
+    static POOL: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    let mut pool = POOL.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
+    if let Some(&hit) = pool.iter().find(|&&p| p == s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    pool.push(leaked);
+    leaked
+}
+
+// ---- per-type codecs ----
+
+fn u32_arr(j: &Json, key: &str) -> Result<Vec<u32>> {
+    j.arr_of(key)?
+        .iter()
+        .map(|v| {
+            let f = v.as_f64().ok_or_else(|| anyhow!("non-numeric element in '{key}'"))?;
+            if f < 0.0 || f.fract() != 0.0 || f > u32::MAX as f64 {
+                bail!("element of '{key}' is not a u32 ({f})");
+            }
+            Ok(f as u32)
+        })
+        .collect()
+}
+
+pub fn dataset_json(d: &Dataset) -> Json {
+    Json::obj(vec![
+        ("key", Json::Str(d.key.to_string())),
+        ("name", Json::Str(d.name.to_string())),
+        ("n_vertices", Json::Num(d.n_vertices as f64)),
+        ("n_edges", Json::Num(d.n_edges as f64)),
+        ("feat_len", Json::Num(d.feat_len as f64)),
+        ("n_classes", Json::Num(d.n_classes as f64)),
+        ("locality", Json::Num(d.locality)),
+    ])
+}
+
+pub fn dataset_from(j: &Json) -> Result<Dataset> {
+    let key = j.str_of("key")?;
+    let name = j.str_of("name")?;
+    let n_vertices = j.u64_of("n_vertices")?;
+    let n_edges = j.u64_of("n_edges")?;
+    let feat_len = j.u64_of("feat_len")?;
+    let n_classes = j.u64_of("n_classes")?;
+    let locality = j.f64_of("locality")?;
+    // Prefer the registry row when it matches exactly: decoded requests
+    // then compare equal (and share `&'static str`s) with the workload
+    // that recorded them. Scaled or custom datasets fall through to the
+    // intern pool.
+    if let Some(d) = dataset(key) {
+        if d.key == key
+            && d.name == name
+            && d.n_vertices == n_vertices
+            && d.n_edges == n_edges
+            && d.feat_len == feat_len
+            && d.n_classes == n_classes
+            && d.locality.to_bits() == locality.to_bits()
+        {
+            return Ok(d);
+        }
+    }
+    Ok(Dataset {
+        key: intern(key),
+        name: intern(name),
+        n_vertices,
+        n_edges,
+        feat_len,
+        n_classes,
+        locality,
+    })
+}
+
+fn target_json(t: &Target) -> Json {
+    match t {
+        Target::FullGraph => Json::obj(vec![("kind", Json::Str("full".into()))]),
+        Target::MiniBatch { targets, fanout, seed } => Json::obj(vec![
+            ("kind", Json::Str("minibatch".into())),
+            ("targets", Json::Arr(targets.iter().map(|&v| Json::Num(v as f64)).collect())),
+            ("fanout", Json::Arr(fanout.iter().map(|&v| Json::Num(v as f64)).collect())),
+            ("seed", seed_json(*seed)),
+        ]),
+        Target::Update { inserts, deletes, grow, seed } => Json::obj(vec![
+            ("kind", Json::Str("update".into())),
+            ("inserts", Json::Num(*inserts as f64)),
+            ("deletes", Json::Num(*deletes as f64)),
+            ("grow", Json::Num(*grow as f64)),
+            ("seed", seed_json(*seed)),
+        ]),
+    }
+}
+
+fn target_from(j: &Json) -> Result<Target> {
+    match j.str_of("kind")? {
+        "full" => Ok(Target::FullGraph),
+        "minibatch" => Ok(Target::MiniBatch {
+            targets: u32_arr(j, "targets")?,
+            fanout: u32_arr(j, "fanout")?,
+            seed: seed_from(j, "seed")?,
+        }),
+        "update" => Ok(Target::Update {
+            inserts: j.u32_of("inserts")?,
+            deletes: j.u32_of("deletes")?,
+            grow: j.u32_of("grow")?,
+            seed: seed_from(j, "seed")?,
+        }),
+        k => bail!("unknown target kind '{k}'"),
+    }
+}
+
+fn model_json(m: ZooModel) -> Json {
+    Json::Str(m.key().to_string())
+}
+
+fn model_from(j: &Json, key: &str) -> Result<ZooModel> {
+    let s = j.str_of(key)?;
+    zoo_model(s).ok_or_else(|| anyhow!("unknown model '{s}'"))
+}
+
+fn precision_json(p: Precision) -> Json {
+    Json::Str(p.key().to_string())
+}
+
+fn precision_from(j: &Json, key: &str) -> Result<Precision> {
+    j.str_of(key)?.parse::<Precision>().map_err(|e| anyhow!("field '{key}': {e}"))
+}
+
+pub fn request_json(rq: &Request) -> Json {
+    Json::obj(vec![
+        ("tenant", Json::Num(rq.tenant as f64)),
+        ("model", model_json(rq.model)),
+        ("dataset", dataset_json(&rq.dataset)),
+        ("target", target_json(&rq.target)),
+        ("arrival", Json::Num(rq.arrival)),
+        ("precision", precision_json(rq.precision)),
+    ])
+}
+
+pub fn request_from(j: &Json) -> Result<Request> {
+    Ok(Request {
+        tenant: j.u32_of("tenant")?,
+        model: model_from(j, "model")?,
+        dataset: dataset_from(
+            j.get("dataset").ok_or_else(|| anyhow!("request is missing 'dataset'"))?,
+        )?,
+        target: target_from(
+            j.get("target").ok_or_else(|| anyhow!("request is missing 'target'"))?,
+        )?,
+        arrival: j.f64_of("arrival")?,
+        precision: precision_from(j, "precision")?,
+    })
+}
+
+pub fn response_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("tenant", Json::Num(r.tenant as f64)),
+        ("model", model_json(r.model)),
+        ("device", Json::Num(r.device as f64)),
+        ("t_compile", Json::Num(r.t_compile)),
+        ("t_sample", Json::Num(r.t_sample)),
+        ("t_exec", Json::Num(r.t_exec)),
+        ("t_queue", Json::Num(r.t_queue)),
+        ("latency", Json::Num(r.latency)),
+        ("cache_hit", Json::Bool(r.cache_hit)),
+        ("coalesced", Json::Bool(r.coalesced)),
+        ("batched", Json::Bool(r.batched)),
+        ("minibatch", Json::Bool(r.minibatch)),
+        ("sampled_vertices", Json::Num(r.sampled_vertices as f64)),
+        ("sampled_edges", Json::Num(r.sampled_edges as f64)),
+        ("remaps", Json::Num(r.remaps as f64)),
+        ("precision", precision_json(r.precision)),
+        ("quant_visits", Json::Num(r.quant_visits as f64)),
+        ("requant_ops", Json::Num(r.requant_ops as f64)),
+        ("int8_bytes", Json::Num(r.int8_bytes as f64)),
+        ("update", Json::Bool(r.update)),
+        ("epoch", Json::Num(r.epoch as f64)),
+        ("t_update", Json::Num(r.t_update)),
+        ("dirty_subshards", Json::Num(r.dirty_subshards as f64)),
+        ("rebuilt_edges", Json::Num(r.rebuilt_edges as f64)),
+        ("invalidated", Json::Num(r.invalidated as f64)),
+        ("compacted", Json::Bool(r.compacted)),
+    ])
+}
+
+pub fn response_from(j: &Json) -> Result<Response> {
+    Ok(Response {
+        tenant: j.u32_of("tenant")?,
+        model: model_from(j, "model")?,
+        device: j.u32_of("device")?,
+        t_compile: j.f64_of("t_compile")?,
+        t_sample: j.f64_of("t_sample")?,
+        t_exec: j.f64_of("t_exec")?,
+        t_queue: j.f64_of("t_queue")?,
+        latency: j.f64_of("latency")?,
+        cache_hit: j.bool_of("cache_hit")?,
+        coalesced: j.bool_of("coalesced")?,
+        batched: j.bool_of("batched")?,
+        minibatch: j.bool_of("minibatch")?,
+        sampled_vertices: j.u64_of("sampled_vertices")?,
+        sampled_edges: j.u64_of("sampled_edges")?,
+        remaps: j.u64_of("remaps")?,
+        precision: precision_from(j, "precision")?,
+        quant_visits: j.u64_of("quant_visits")?,
+        requant_ops: j.u64_of("requant_ops")?,
+        int8_bytes: j.u64_of("int8_bytes")?,
+        update: j.bool_of("update")?,
+        epoch: j.u32_of("epoch")?,
+        t_update: j.f64_of("t_update")?,
+        dirty_subshards: j.u32_of("dirty_subshards")?,
+        rebuilt_edges: j.u64_of("rebuilt_edges")?,
+        invalidated: j.u32_of("invalidated")?,
+        compacted: j.bool_of("compacted")?,
+    })
+}
+
+pub fn stats_json(s: &ServeStats) -> Json {
+    Json::obj(vec![
+        ("completed", Json::Num(s.completed as f64)),
+        ("cache_hits", Json::Num(s.cache_hits as f64)),
+        ("coalesced", Json::Num(s.coalesced as f64)),
+        ("minibatched", Json::Num(s.minibatched as f64)),
+        ("batched", Json::Num(s.batched as f64)),
+        ("bucket_hits", Json::Num(s.bucket_hits as f64)),
+        ("sampled_vertices", Json::Num(s.sampled_vertices as f64)),
+        ("sampled_edges", Json::Num(s.sampled_edges as f64)),
+        ("remaps", Json::Num(s.remaps as f64)),
+        ("quantized", Json::Num(s.quantized as f64)),
+        ("quant_visits", Json::Num(s.quant_visits as f64)),
+        ("requant_ops", Json::Num(s.requant_ops as f64)),
+        ("int8_bytes", Json::Num(s.int8_bytes as f64)),
+        ("updates", Json::Num(s.updates as f64)),
+        ("max_epoch", Json::Num(s.max_epoch as f64)),
+        ("dirty_subshards", Json::Num(s.dirty_subshards as f64)),
+        ("rebuilt_edges", Json::Num(s.rebuilt_edges as f64)),
+        ("invalidated", Json::Num(s.invalidated as f64)),
+        ("compactions", Json::Num(s.compactions as f64)),
+        ("p50", Json::Num(s.p50)),
+        ("p99", Json::Num(s.p99)),
+        ("mean", Json::Num(s.mean)),
+        ("p50_mini", Json::Num(s.p50_mini)),
+        ("p50_full", Json::Num(s.p50_full)),
+        ("device_busy", Json::Num(s.device_busy)),
+        ("makespan", Json::Num(s.makespan)),
+    ])
+}
+
+pub fn stats_from(j: &Json) -> Result<ServeStats> {
+    Ok(ServeStats {
+        completed: j.u64_of("completed")?,
+        cache_hits: j.u64_of("cache_hits")?,
+        coalesced: j.u64_of("coalesced")?,
+        minibatched: j.u64_of("minibatched")?,
+        batched: j.u64_of("batched")?,
+        bucket_hits: j.u64_of("bucket_hits")?,
+        sampled_vertices: j.u64_of("sampled_vertices")?,
+        sampled_edges: j.u64_of("sampled_edges")?,
+        remaps: j.u64_of("remaps")?,
+        quantized: j.u64_of("quantized")?,
+        quant_visits: j.u64_of("quant_visits")?,
+        requant_ops: j.u64_of("requant_ops")?,
+        int8_bytes: j.u64_of("int8_bytes")?,
+        updates: j.u64_of("updates")?,
+        max_epoch: j.u32_of("max_epoch")?,
+        dirty_subshards: j.u64_of("dirty_subshards")?,
+        rebuilt_edges: j.u64_of("rebuilt_edges")?,
+        invalidated: j.u64_of("invalidated")?,
+        compactions: j.u64_of("compactions")?,
+        p50: j.f64_of("p50")?,
+        p99: j.f64_of("p99")?,
+        mean: j.f64_of("mean")?,
+        p50_mini: j.f64_of("p50_mini")?,
+        p50_full: j.f64_of("p50_full")?,
+        device_busy: j.f64_of("device_busy")?,
+        makespan: j.f64_of("makespan")?,
+    })
+}
+
+fn costs_json(c: &CostModel) -> Json {
+    Json::obj(vec![
+        ("sample_setup_s", Json::Num(c.sample_setup_s)),
+        ("sample_per_vertex_s", Json::Num(c.sample_per_vertex_s)),
+        ("sample_per_edge_s", Json::Num(c.sample_per_edge_s)),
+        ("visit_overhead_s", Json::Num(c.visit_overhead_s)),
+        ("update_setup_s", Json::Num(c.update_setup_s)),
+        ("update_per_edge_s", Json::Num(c.update_per_edge_s)),
+        ("update_per_subshard_s", Json::Num(c.update_per_subshard_s)),
+        ("update_per_rebuilt_edge_s", Json::Num(c.update_per_rebuilt_edge_s)),
+    ])
+}
+
+fn costs_from(j: &Json) -> Result<CostModel> {
+    Ok(CostModel {
+        sample_setup_s: j.f64_of("sample_setup_s")?,
+        sample_per_vertex_s: j.f64_of("sample_per_vertex_s")?,
+        sample_per_edge_s: j.f64_of("sample_per_edge_s")?,
+        visit_overhead_s: j.f64_of("visit_overhead_s")?,
+        update_setup_s: j.f64_of("update_setup_s")?,
+        update_per_edge_s: j.f64_of("update_per_edge_s")?,
+        update_per_subshard_s: j.f64_of("update_per_subshard_s")?,
+        update_per_rebuilt_edge_s: j.f64_of("update_per_rebuilt_edge_s")?,
+    })
+}
+
+fn fleet_json(f: &FleetConfig) -> Json {
+    Json::obj(vec![
+        ("n_devices", Json::Num(f.n_devices as f64)),
+        ("affinity", Json::Bool(f.affinity)),
+        ("coalesce", Json::Bool(f.coalesce)),
+        ("microbatch", Json::Bool(f.microbatch)),
+        ("dynamic", Json::Bool(f.dynamic)),
+        ("costs", costs_json(&f.costs)),
+    ])
+}
+
+fn fleet_from(j: &Json) -> Result<FleetConfig> {
+    Ok(FleetConfig {
+        n_devices: j.u64_of("n_devices")? as usize,
+        affinity: j.bool_of("affinity")?,
+        coalesce: j.bool_of("coalesce")?,
+        microbatch: j.bool_of("microbatch")?,
+        dynamic: j.bool_of("dynamic")?,
+        costs: costs_from(j.get("costs").ok_or_else(|| anyhow!("fleet is missing 'costs'"))?)?,
+    })
+}
+
+fn hw_json(h: &HwConfig) -> Json {
+    Json::obj(vec![
+        ("n_pe", Json::Num(h.n_pe as f64)),
+        ("p_sys", Json::Num(h.p_sys as f64)),
+        ("freq_hz", Json::Num(h.freq_hz)),
+        ("weight_rows", Json::Num(h.weight_rows as f64)),
+        ("edge_capacity", Json::Num(h.edge_capacity as f64)),
+        ("feature_rows", Json::Num(h.feature_rows as f64)),
+        ("feature_cols", Json::Num(h.feature_cols as f64)),
+        ("ddr_bw", Json::Num(h.ddr_bw)),
+        ("ddr_channels", Json::Num(h.ddr_channels as f64)),
+        ("pcie_bw", Json::Num(h.pcie_bw)),
+        ("overlap", Json::Bool(h.overlap)),
+        ("raw_reorder_depth", Json::Num(h.raw_reorder_depth as f64)),
+        ("ur_pipeline_depth", Json::Num(h.ur_pipeline_depth as f64)),
+    ])
+}
+
+fn hw_from(j: &Json) -> Result<HwConfig> {
+    Ok(HwConfig {
+        n_pe: j.u64_of("n_pe")? as usize,
+        p_sys: j.u64_of("p_sys")? as usize,
+        freq_hz: j.f64_of("freq_hz")?,
+        weight_rows: j.u64_of("weight_rows")? as usize,
+        edge_capacity: j.u64_of("edge_capacity")? as usize,
+        feature_rows: j.u64_of("feature_rows")? as usize,
+        feature_cols: j.u64_of("feature_cols")? as usize,
+        ddr_bw: j.f64_of("ddr_bw")?,
+        ddr_channels: j.u64_of("ddr_channels")? as usize,
+        pcie_bw: j.f64_of("pcie_bw")?,
+        overlap: j.bool_of("overlap")?,
+        raw_reorder_depth: j.u64_of("raw_reorder_depth")? as usize,
+        ur_pipeline_depth: j.u64_of("ur_pipeline_depth")? as usize,
+    })
+}
+
+fn config_json(c: &TraceConfig) -> Json {
+    Json::obj(vec![("hw", hw_json(&c.hw)), ("fleet", fleet_json(&c.fleet))])
+}
+
+fn config_from(j: &Json) -> Result<TraceConfig> {
+    Ok(TraceConfig {
+        hw: hw_from(j.get("hw").ok_or_else(|| anyhow!("config is missing 'hw'"))?)
+            .context("config.hw")?,
+        fleet: fleet_from(j.get("fleet").ok_or_else(|| anyhow!("config is missing 'fleet'"))?)
+            .context("config.fleet")?,
+    })
+}
+
+pub fn event_json(e: &TraceEvent) -> Json {
+    match e {
+        TraceEvent::Admit(rq) => Json::obj(vec![
+            ("kind", Json::Str("admit".into())),
+            ("request", request_json(rq)),
+        ]),
+        TraceEvent::Stats { at } => {
+            Json::obj(vec![("kind", Json::Str("stats".into())), ("at", Json::Num(*at))])
+        }
+        TraceEvent::Drain { at } => {
+            Json::obj(vec![("kind", Json::Str("drain".into())), ("at", Json::Num(*at))])
+        }
+    }
+}
+
+pub fn event_from(j: &Json) -> Result<TraceEvent> {
+    match j.str_of("kind")? {
+        "admit" => Ok(TraceEvent::Admit(request_from(
+            j.get("request").ok_or_else(|| anyhow!("admit event is missing 'request'"))?,
+        )?)),
+        "stats" => Ok(TraceEvent::Stats { at: j.f64_of("at")? }),
+        "drain" => Ok(TraceEvent::Drain { at: j.f64_of("at")? }),
+        // Skipping an unknown event would silently shift every later
+        // virtual timestamp — hard-error instead.
+        k => bail!("unknown trace event kind '{k}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let co = dataset("CO").unwrap();
+        let pu = dataset("PU").unwrap();
+        let events = vec![
+            TraceEvent::Admit(Request::full(0, ZooModel::B2, co, 0.0)),
+            TraceEvent::Admit(
+                Request::full(1, ZooModel::B7, pu, 1e-4).with_precision(Precision::Int8),
+            ),
+            TraceEvent::Stats { at: 2e-4 },
+            TraceEvent::Admit(Request::minibatch(
+                2,
+                ZooModel::B1,
+                co,
+                vec![5, 17, 400],
+                vec![8, 4],
+                u64::MAX - 3,
+                3e-4,
+            )),
+            TraceEvent::Admit(Request::update(0, co, 64, 16, 2, 0x0123_4567_89AB_CDEF, 4e-4)),
+            TraceEvent::Drain { at: 5e-4 },
+        ];
+        Trace {
+            version: TRACE_VERSION,
+            config: TraceConfig {
+                hw: HwConfig::alveo_u250(),
+                fleet: FleetConfig { n_devices: 2, ..FleetConfig::default() },
+            },
+            events,
+            responses: Vec::new(),
+            stats: None,
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_every_event_kind() {
+        let t = sample_trace();
+        let back = Trace::parse(&t.encode()).unwrap();
+        assert_eq!(back, t);
+        // Seeds survive at full 64-bit precision.
+        match &back.events[3] {
+            TraceEvent::Admit(rq) => match rq.target {
+                Target::MiniBatch { seed, .. } => assert_eq!(seed, u64::MAX - 3),
+                _ => panic!("wrong target"),
+            },
+            _ => panic!("wrong event"),
+        }
+    }
+
+    #[test]
+    fn registry_datasets_decode_to_registry_rows() {
+        let co = dataset("CO").unwrap();
+        let d = dataset_from(&dataset_json(&co)).unwrap();
+        assert_eq!(d, co);
+        // The decoded row carries the registry's 'static strings, not a
+        // leaked copy.
+        assert!(std::ptr::eq(d.key, co.key));
+    }
+
+    #[test]
+    fn off_registry_datasets_intern() {
+        let scaled = dataset("RE").unwrap().scaled(1000);
+        let d = dataset_from(&dataset_json(&scaled)).unwrap();
+        assert_eq!(d, scaled);
+        // Re-decoding reuses the interned strings.
+        let d2 = dataset_from(&dataset_json(&scaled)).unwrap();
+        assert!(std::ptr::eq(d.key, d2.key));
+    }
+
+    #[test]
+    fn version_gate_rejects_future_traces() {
+        let mut s = sample_trace().encode();
+        s = s.replace("\"version\": 1", "\"version\": 2");
+        let err = Trace::parse(&s).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "{err}");
+    }
+
+    #[test]
+    fn unknown_event_kind_is_a_hard_error() {
+        let mut t = sample_trace();
+        t.events.clear();
+        let mut s = t.encode();
+        s = s.replace("\"events\": [", "\"events\": [{\"kind\":\"teleport\",\"at\":0}");
+        let err = Trace::parse(&s).unwrap_err();
+        assert!(format!("{err:#}").contains("teleport"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_fields_are_forward_compatible() {
+        let t = sample_trace();
+        let s = t.encode().replace("\"version\": 1,", "\"version\": 1, \"recorded_by\": \"v9\",");
+        assert_eq!(Trace::parse(&s).unwrap(), t);
+    }
+
+    #[test]
+    fn responses_and_stats_round_trip() {
+        use crate::serve::Coordinator;
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let t0 = sample_trace();
+        let stats = c.run(t0.requests());
+        let t = Trace {
+            responses: c.responses.clone(),
+            stats: Some(stats.clone()),
+            ..t0
+        };
+        let back = Trace::parse(&t.encode()).unwrap();
+        assert_eq!(back.responses, t.responses);
+        assert_eq!(back.stats.as_ref().unwrap().diff(&stats), Vec::<String>::new());
+    }
+}

@@ -8,8 +8,9 @@ use super::coo::{CooGraph, GraphMeta};
 use super::partition::TileCounts;
 use super::rmat::{rmat_edges, rmat_tile_counts, RmatParams};
 
-/// One Table-4 dataset row.
-#[derive(Clone, Copy, Debug)]
+/// One Table-4 dataset row. `PartialEq` so a dataset decoded from a
+/// recorded trace is testable against the registry row it came from.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Dataset {
     pub key: &'static str,
     pub name: &'static str,

@@ -21,5 +21,5 @@ pub mod bench_support;
 pub mod render;
 pub mod tables;
 
-pub use render::{markdown, serve_summary};
+pub use render::{divergence_report, markdown, replay_summary, serve_summary};
 pub use tables::*;

@@ -1,8 +1,11 @@
-//! Minimal renderers for harness output: markdown tables plus the
+//! Minimal renderers for harness output: markdown tables, the
 //! serving-fleet summary block (the one place `ServeStats` is turned
 //! into text, so every counter the coordinator tracks — including
-//! coalesce and kernel re-map telemetry — is actually printed).
+//! coalesce and kernel re-map telemetry — is actually printed), and
+//! the replay summary / divergence report behind
+//! `graphagile replay --verify`.
 
+use crate::daemon::{Trace, TraceEvent};
 use crate::serve::ServeStats;
 
 /// Render a markdown table.
@@ -110,6 +113,48 @@ pub fn serve_summary(stats: &ServeStats) -> String {
     out
 }
 
+/// One-paragraph header for a replayed trace: what was recorded, under
+/// what fleet shape, and what the replay produced.
+pub fn replay_summary(trace: &Trace, replayed: &ServeStats) -> String {
+    let (mut admits, mut stats_q, mut drains) = (0usize, 0usize, 0usize);
+    for e in &trace.events {
+        match e {
+            TraceEvent::Admit(_) => admits += 1,
+            TraceEvent::Stats { .. } => stats_q += 1,
+            TraceEvent::Drain { .. } => drains += 1,
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace v{}: {} events ({} admits, {} stats queries, {} drains), \
+         {} recorded responses, fleet of {} device(s)\n",
+        trace.version,
+        trace.events.len(),
+        admits,
+        stats_q,
+        drains,
+        trace.responses.len(),
+        trace.config.fleet.n_devices,
+    ));
+    out.push_str("replayed:\n");
+    out.push_str(&serve_summary(replayed));
+    out
+}
+
+/// Render a verify divergence list: the pass/fail verdict line first,
+/// then one named divergence per line — `replay --verify` failures name
+/// the exact diverging counter instead of dumping structs.
+pub fn divergence_report(divergences: &[String]) -> String {
+    if divergences.is_empty() {
+        return "verify: PASS — replay is bit-identical to the recorded run\n".to_string();
+    }
+    let mut out = format!("verify: FAIL — {} divergence(s)\n", divergences.len());
+    for d in divergences {
+        out.push_str(&format!("  {d}\n"));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +221,32 @@ mod tests {
         assert!(s.contains("1.000 ms / 2.000 ms"), "{s}");
         assert!(s.contains("0.500 ms / 3.000 ms"), "{s}");
         assert!(s.contains("0.500 s over 1.000 s"), "{s}");
+    }
+
+    #[test]
+    fn replay_summary_counts_event_kinds() {
+        use crate::config::HwConfig;
+        use crate::graph::dataset;
+        use crate::ir::ZooModel;
+        use crate::serve::{FleetConfig, Request};
+        let mut trace = Trace::from_requests(
+            HwConfig::alveo_u250(),
+            FleetConfig { n_devices: 2, ..FleetConfig::default() },
+            vec![Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 0.0)],
+        );
+        trace.events.push(TraceEvent::Stats { at: 1.0 });
+        trace.events.push(TraceEvent::Drain { at: 2.0 });
+        let s = replay_summary(&trace, &ServeStats::default());
+        assert!(s.contains("3 events (1 admits, 1 stats queries, 1 drains)"), "{s}");
+        assert!(s.contains("fleet of 2 device(s)"), "{s}");
+    }
+
+    #[test]
+    fn divergence_report_names_each_divergence() {
+        assert!(divergence_report(&[]).contains("PASS"));
+        let r = divergence_report(&["stats.cache_hits: 5 != 4".to_string()]);
+        assert!(r.contains("FAIL — 1 divergence(s)"), "{r}");
+        assert!(r.contains("  stats.cache_hits: 5 != 4"), "{r}");
     }
 
     #[test]

@@ -47,6 +47,12 @@
 //!   recompilation (dirty Fiber-Shard subshards only) so the serving
 //!   fleet ingests edge churn between inference requests instead of
 //!   assuming a frozen graph,
+//! * [`daemon`] — the production shape of the fleet: a long-running
+//!   TCP server with a length-prefixed JSON wire protocol that stamps
+//!   real arrival times onto the virtual clock at admission, records
+//!   every accepted event into a versioned `trace.json`, and a replay
+//!   path that re-executes any recorded run bit-identically offline
+//!   (`graphagile replay trace.json --verify`),
 //! * [`baselines`] — analytic models of the comparison systems in the
 //!   paper's evaluation (PyG/DGL on CPU/GPU, HyGCN, AWB-GCN, BoostGCN),
 //! * [`harness`] — regenerates every table and figure of Sec. 8.
@@ -57,6 +63,7 @@
 pub mod baselines;
 pub mod compiler;
 pub mod config;
+pub mod daemon;
 pub mod engine;
 pub mod exec;
 pub mod graph;

@@ -9,6 +9,15 @@
 //! graphagile serve --requests 256 --devices 4   (multi-tenant fleet demo)
 //! graphagile serve --minibatch --fanout 25,10   (ego-network serving path)
 //! graphagile serve --streaming --update-every 8 (edge-churn + epoch serving)
+//! graphagile daemon [--port 0] [--devices N] [--trace trace.json]
+//!                                               (long-running TCP server;
+//!                                                records every accepted event)
+//! graphagile drive --port P [--requests 200] [--seed 7]
+//!                                               (scripted client workload,
+//!                                                then drain + shutdown)
+//! graphagile replay trace.json [--verify]      (bit-identical offline replay;
+//!                                               --verify diffs against the
+//!                                               recorded responses/stats)
 //! graphagile info                               (hardware + zoo summary)
 //! ```
 
@@ -29,9 +38,11 @@ fn main() {
     }
 }
 
-/// Minimal flag parser: positional subcommand + `--key value` / `--flag`.
+/// Minimal flag parser: subcommand + positional operands (e.g. the
+/// trace path of `replay`) + `--key value` / `--flag`.
 struct Args {
     cmd: String,
+    positional: Vec<String>,
     flags: HashMap<String, String>,
 }
 
@@ -39,23 +50,25 @@ fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
     let mut flags = HashMap::new();
+    let mut positional = Vec::new();
     while let Some(a) = it.next() {
-        let key = a
-            .strip_prefix("--")
-            .ok_or_else(|| anyhow!("unexpected argument {a}"))?
-            .to_string();
-        // Boolean flags take no value: the --no-* switches, --minibatch
-        // and --streaming. Every other flag requires a value — a
-        // missing one stays a hard error rather than silently parsing
+        let Some(key) = a.strip_prefix("--") else {
+            positional.push(a);
+            continue;
+        };
+        let key = key.to_string();
+        // Boolean flags take no value: the --no-* switches, --minibatch,
+        // --streaming and --verify. Every other flag requires a value —
+        // a missing one stays a hard error rather than silently parsing
         // as true.
-        if key.starts_with("no-") || key == "minibatch" || key == "streaming" {
+        if key.starts_with("no-") || key == "minibatch" || key == "streaming" || key == "verify" {
             flags.insert(key, "true".into());
         } else {
             let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
             flags.insert(key, val);
         }
     }
-    Ok(Args { cmd, flags })
+    Ok(Args { cmd, positional, flags })
 }
 
 impl Args {
@@ -95,10 +108,13 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "disasm" => cmd_disasm(&args),
         "serve" => cmd_serve(&args),
+        "daemon" => cmd_daemon(&args),
+        "drive" => cmd_drive(&args),
+        "replay" => cmd_replay(&args),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: graphagile <tables|compile|simulate|sweep|disasm|serve|info> [flags]\n\
+                "usage: graphagile <tables|compile|simulate|sweep|disasm|serve|daemon|drive|replay|info> [flags]\n\
                  see `rust/src/main.rs` docs for flag details"
             );
             Ok(())
@@ -343,6 +359,101 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fmt_bytes(d.cache_bytes()),
             d.busy
         );
+    }
+    Ok(())
+}
+
+/// The fleet shape shared by `daemon` (same switches as `serve`).
+fn fleet_config(args: &Args) -> Result<graphagile::serve::FleetConfig> {
+    use graphagile::serve::{CostModel, FleetConfig};
+    let mut costs = CostModel::default();
+    if let Some(v) = args.get("visit-overhead") {
+        costs.visit_overhead_s = v.parse().map_err(|_| anyhow!("bad --visit-overhead {v}"))?;
+    }
+    let cfg = FleetConfig {
+        n_devices: args.get("devices").and_then(|s| s.parse().ok()).unwrap_or(1),
+        affinity: args.get("no-affinity").is_none(),
+        coalesce: args.get("no-coalesce").is_none(),
+        microbatch: args.get("no-batch").is_none(),
+        dynamic: args.get("no-dynamic").is_none(),
+        costs,
+    };
+    anyhow::ensure!(cfg.n_devices >= 1, "--devices must be >= 1");
+    Ok(cfg)
+}
+
+/// Long-running serving daemon: accepts length-prefixed JSON frames on
+/// localhost, stamps real arrival times onto the virtual clock, and
+/// records every accepted event. On `shutdown` the recorded trace is
+/// written to `--trace` (default `trace.json`) for `graphagile replay`.
+///
+/// Flags: `--port N` (default 0 = ephemeral; the bound port is printed
+/// on the `listening` line for scripts to scrape), `--trace PATH`, plus
+/// the `serve` fleet switches (`--devices`, `--no-affinity`,
+/// `--no-coalesce`, `--no-batch`, `--no-dynamic`, `--visit-overhead`).
+fn cmd_daemon(args: &Args) -> Result<()> {
+    use graphagile::daemon::Daemon;
+    let port: u16 = match args.get("port") {
+        None => 0,
+        Some(v) => v.parse().map_err(|_| anyhow!("bad --port {v}"))?,
+    };
+    let trace_path = args.get("trace").unwrap_or("trace.json").to_string();
+    let d = Daemon::bind(port, HwConfig::alveo_u250(), fleet_config(args)?)?;
+    println!("graphagile daemon listening on 127.0.0.1:{}", d.port());
+    let trace = d.serve()?;
+    trace.save(std::path::Path::new(&trace_path))?;
+    println!(
+        "daemon shut down: {} events, {} responses recorded -> {trace_path}",
+        trace.events.len(),
+        trace.responses.len(),
+    );
+    Ok(())
+}
+
+/// Scripted client for a live daemon: drives `--requests` mixed
+/// requests (whole-graph f32/int8, mini-batch, churn) from `--seed`,
+/// drains, prints the daemon's stats, and shuts it down (which makes
+/// the daemon persist its trace).
+fn cmd_drive(args: &Args) -> Result<()> {
+    use graphagile::daemon::{drive, Client};
+    let port: u16 = args
+        .get("port")
+        .context("--port required (scrape the daemon's 'listening' line)")?
+        .parse()
+        .map_err(|_| anyhow!("bad --port"))?;
+    let n: usize = args.get("requests").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let seed: u64 = args.get("seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+    let mut client = Client::connect(port)?;
+    let (accepted, stats) = drive(&mut client, n, seed)?;
+    println!("drove {accepted} accepted requests (seed {seed}):");
+    print!("{}", graphagile::harness::serve_summary(&stats));
+    let events = client.shutdown()?;
+    println!("daemon shutdown acknowledged ({events} recorded events)");
+    Ok(())
+}
+
+/// Re-execute a recorded trace offline, bit-identically:
+/// `graphagile replay trace.json [--verify]`. With `--verify` the
+/// replayed responses and stats are diffed field-by-field against the
+/// recorded ones; any divergence is named and the exit code is nonzero.
+fn cmd_replay(args: &Args) -> Result<()> {
+    use graphagile::daemon::{replay, verify, Trace};
+    let path = args
+        .positional
+        .first()
+        .context("usage: graphagile replay <trace.json> [--verify]")?;
+    let trace = Trace::load(std::path::Path::new(path))?;
+    let (_responses, stats) = replay(&trace);
+    print!("{}", graphagile::harness::replay_summary(&trace, &stats));
+    if args.get("verify").is_some() {
+        let divergences = verify(&trace)?;
+        print!("{}", graphagile::harness::divergence_report(&divergences));
+        if !divergences.is_empty() {
+            anyhow::bail!(
+                "replay diverged from the recorded run ({} divergence(s))",
+                divergences.len()
+            );
+        }
     }
     Ok(())
 }

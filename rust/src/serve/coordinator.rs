@@ -78,8 +78,9 @@ impl Target {
     }
 }
 
-/// One inference request.
-#[derive(Clone, Debug)]
+/// One inference request. `PartialEq` so a trace decoded from disk is
+/// testable against the workload that produced it.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub tenant: u32,
     pub model: ZooModel,
@@ -215,6 +216,44 @@ pub struct Response {
     pub compacted: bool,
 }
 
+impl Response {
+    /// Field-by-field comparison naming every diverging field, so a
+    /// `replay --verify` failure reports `t_exec: 1e-4 != 2e-4` instead
+    /// of dumping two structs. Float fields compare by raw bits — the
+    /// replay guarantee is *bit*-identity, not approximate equality.
+    pub fn diff(&self, other: &Response) -> Vec<String> {
+        let mut out = Vec::new();
+        macro_rules! cmp {
+            ($($f:ident),+ $(,)?) => {$(
+                if self.$f != other.$f {
+                    out.push(format!(
+                        concat!(stringify!($f), ": {:?} != {:?}"),
+                        self.$f, other.$f
+                    ));
+                }
+            )+};
+        }
+        macro_rules! cmp_f64 {
+            ($($f:ident),+ $(,)?) => {$(
+                if self.$f.to_bits() != other.$f.to_bits() {
+                    out.push(format!(
+                        concat!(stringify!($f), ": {:?} != {:?}"),
+                        self.$f, other.$f
+                    ));
+                }
+            )+};
+        }
+        cmp!(
+            tenant, model, device, cache_hit, coalesced, batched, minibatch,
+            sampled_vertices, sampled_edges, remaps, precision, quant_visits,
+            requant_ops, int8_bytes, update, epoch, dirty_subshards,
+            rebuilt_edges, invalidated, compacted,
+        );
+        cmp_f64!(t_compile, t_sample, t_exec, t_queue, latency, t_update);
+        out
+    }
+}
+
 /// Aggregate statistics. `PartialEq` so replay determinism is testable
 /// as plain equality.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -269,8 +308,52 @@ pub struct ServeStats {
     pub makespan: f64,
 }
 
-/// Fleet shape and routing policy.
-#[derive(Clone, Copy, Debug)]
+impl ServeStats {
+    /// Field-by-field comparison naming every diverging counter — the
+    /// `replay --verify` failure story: instead of two dumped structs,
+    /// each divergence reads `cache_hits: 54 != 53`. Counters compare
+    /// exactly; latency/percentile fields compare by raw f64 bits (the
+    /// replay guarantee is bit-identity). Returns an empty vec when the
+    /// stats agree.
+    pub fn diff(&self, other: &ServeStats) -> Vec<String> {
+        let mut out = Vec::new();
+        macro_rules! cmp {
+            ($($f:ident),+ $(,)?) => {$(
+                if self.$f != other.$f {
+                    out.push(format!(
+                        concat!(stringify!($f), ": {} != {}"),
+                        self.$f, other.$f
+                    ));
+                }
+            )+};
+        }
+        macro_rules! cmp_f64 {
+            ($($f:ident),+ $(,)?) => {$(
+                if self.$f.to_bits() != other.$f.to_bits() {
+                    out.push(format!(
+                        concat!(stringify!($f), ": {} != {}"),
+                        self.$f, other.$f
+                    ));
+                }
+            )+};
+        }
+        // Throughput / cache family.
+        cmp!(completed, cache_hits, coalesced);
+        // Mini-batch family.
+        cmp!(minibatched, batched, bucket_hits, sampled_vertices, sampled_edges);
+        // Kernel re-map + quantized datapath family.
+        cmp!(remaps, quantized, quant_visits, requant_ops, int8_bytes);
+        // Streaming-update family.
+        cmp!(updates, max_epoch, dirty_subshards, rebuilt_edges, invalidated, compactions);
+        // Latency family (bit-exact).
+        cmp_f64!(p50, p99, mean, p50_mini, p50_full, device_busy, makespan);
+        out
+    }
+}
+
+/// Fleet shape and routing policy. `PartialEq` so a recorded trace's
+/// config round-trip is testable as plain equality.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FleetConfig {
     pub n_devices: usize,
     pub affinity: bool,
@@ -505,23 +588,40 @@ impl Coordinator {
                 .then(a.precision.cmp(&b.precision))
         });
         for rq in requests {
-            self.clock.advance_to(rq.arrival);
-            for d in &mut self.devices {
-                d.retire_started(rq.arrival);
-            }
-            let resp = match &rq.target {
-                Target::FullGraph => self.serve_full(&rq),
-                Target::MiniBatch { targets, fanout, seed } => {
-                    self.serve_minibatch(&rq, targets, fanout, *seed)
-                }
-                Target::Update { inserts, deletes, grow, seed } => {
-                    self.serve_update(&rq, *inserts, *deletes, *grow, *seed)
-                }
-            };
-            self.clock.advance_to(rq.arrival + resp.latency);
-            self.responses.push(resp);
+            self.admit(rq);
         }
         self.stats()
+    }
+
+    /// Admit one request at its (already-stamped) arrival time: route it
+    /// by the dispatcher, schedule it on a device timeline, account it
+    /// on the virtual clock, and return its completion record. This is
+    /// the daemon's ingestion point — a live server stamps real arrival
+    /// times onto the virtual clock and feeds requests here one at a
+    /// time, so the coordinator core stays bit-deterministic and a
+    /// recorded trace replays through the identical code path.
+    ///
+    /// Requests must be admitted in nondecreasing arrival order
+    /// ([`Coordinator::run`] sorts a whole workload first; the daemon
+    /// stamps monotone arrivals at admission) — the per-device pending
+    /// cursor ([`Device::retire_started`]) only moves forward.
+    pub fn admit(&mut self, rq: Request) -> Response {
+        self.clock.advance_to(rq.arrival);
+        for d in &mut self.devices {
+            d.retire_started(rq.arrival);
+        }
+        let resp = match &rq.target {
+            Target::FullGraph => self.serve_full(&rq),
+            Target::MiniBatch { targets, fanout, seed } => {
+                self.serve_minibatch(&rq, targets, fanout, *seed)
+            }
+            Target::Update { inserts, deletes, grow, seed } => {
+                self.serve_update(&rq, *inserts, *deletes, *grow, *seed)
+            }
+        };
+        self.clock.advance_to(rq.arrival + resp.latency);
+        self.responses.push(resp);
+        resp
     }
 
     /// The inference-free baseline all non-update Response literals
@@ -1122,6 +1222,139 @@ mod tests {
         // workloads have empty latency classes).
         assert_eq!(percentile(&[], 0.50), 0.0);
         assert_eq!(percentile(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn incremental_admission_matches_batch_run() {
+        // The daemon's ingestion path: admitting a pre-sorted workload
+        // one request at a time is the identical computation to run().
+        let mut reqs = minibatch_workload(16, 21, 5e-5);
+        reqs.extend(mixed_workload(16, 21));
+        reqs.push(Request::update(0, dataset("CO").unwrap(), 32, 8, 0, 4, 2e-3));
+        reqs.sort_by(|a, b| {
+            a.arrival
+                .total_cmp(&b.arrival)
+                .then(a.tenant.cmp(&b.tenant))
+                .then(a.model.key().cmp(b.model.key()))
+                .then(a.dataset.key.cmp(b.dataset.key))
+                .then(a.target.cmp(&b.target))
+                .then(a.precision.cmp(&b.precision))
+        });
+        let mut batch = Coordinator::new(HwConfig::alveo_u250());
+        let s_batch = batch.run(reqs.clone());
+        let mut incr = Coordinator::new(HwConfig::alveo_u250());
+        let per_request: Vec<Response> = reqs.into_iter().map(|rq| incr.admit(rq)).collect();
+        let s_incr = incr.stats();
+        assert_eq!(s_batch, s_incr);
+        assert_eq!(batch.responses, incr.responses);
+        // admit() returns the same record it appends.
+        assert_eq!(per_request, incr.responses);
+        assert!(s_batch.diff(&s_incr).is_empty());
+    }
+
+    #[test]
+    fn stats_diff_names_throughput_and_cache_counters() {
+        let a = ServeStats { completed: 5, cache_hits: 4, coalesced: 1, ..Default::default() };
+        let mut b = a.clone();
+        assert!(a.diff(&b).is_empty());
+        b.completed = 6;
+        b.cache_hits = 3;
+        b.coalesced = 2;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d[0].contains("completed: 5 != 6"), "{d:?}");
+        assert!(d[1].contains("cache_hits: 4 != 3"), "{d:?}");
+        assert!(d[2].contains("coalesced: 1 != 2"), "{d:?}");
+    }
+
+    #[test]
+    fn stats_diff_names_minibatch_counters() {
+        let a = ServeStats {
+            minibatched: 8,
+            batched: 2,
+            bucket_hits: 6,
+            sampled_vertices: 100,
+            sampled_edges: 900,
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.batched = 3;
+        b.sampled_edges = 901;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|s| s.contains("batched: 2 != 3")), "{d:?}");
+        assert!(d.iter().any(|s| s.contains("sampled_edges: 900 != 901")), "{d:?}");
+    }
+
+    #[test]
+    fn stats_diff_names_quant_and_remap_counters() {
+        let a = ServeStats {
+            remaps: 4,
+            quantized: 3,
+            quant_visits: 70,
+            requant_ops: 80,
+            int8_bytes: 9000,
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.remaps = 5;
+        b.int8_bytes = 9001;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|s| s.contains("remaps: 4 != 5")), "{d:?}");
+        assert!(d.iter().any(|s| s.contains("int8_bytes: 9000 != 9001")), "{d:?}");
+    }
+
+    #[test]
+    fn stats_diff_names_streaming_counters() {
+        let a = ServeStats {
+            updates: 2,
+            max_epoch: 2,
+            dirty_subshards: 7,
+            rebuilt_edges: 500,
+            invalidated: 1,
+            compactions: 0,
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.max_epoch = 3;
+        b.compactions = 1;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|s| s.contains("max_epoch: 2 != 3")), "{d:?}");
+        assert!(d.iter().any(|s| s.contains("compactions: 0 != 1")), "{d:?}");
+    }
+
+    #[test]
+    fn stats_diff_latency_family_is_bit_exact() {
+        let a = ServeStats { p50: 0.001, p99: 0.002, mean: 0.0015, ..Default::default() };
+        let mut b = a.clone();
+        assert!(a.diff(&b).is_empty());
+        // One ulp of divergence is a real divergence — the replay
+        // guarantee is bit-identity, not tolerance.
+        b.p99 = f64::from_bits(a.p99.to_bits() + 1);
+        b.makespan = 1e-12;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d[0].starts_with("p99:"), "{d:?}");
+        assert!(d[1].starts_with("makespan:"), "{d:?}");
+    }
+
+    #[test]
+    fn response_diff_names_the_field() {
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.run(mixed_workload(4, 2));
+        let a = c.responses[0];
+        assert!(a.diff(&a).is_empty());
+        let mut b = a;
+        b.device = a.device + 1;
+        b.t_exec += 1e-9;
+        b.cache_hit = !a.cache_hit;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("device:")), "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("t_exec:")), "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("cache_hit:")), "{d:?}");
     }
 
     #[test]

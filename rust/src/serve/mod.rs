@@ -45,6 +45,16 @@
 //! simulates on the widened int8 datapath, and reports quantized-work
 //! counters in its [`Response`](coordinator::Response) — f32 and int8
 //! tenants never share a compiled artifact.
+//!
+//! The coordinator ingests either as a batch
+//! ([`Coordinator::run`](coordinator::Coordinator::run), which sorts by
+//! arrival) or incrementally
+//! ([`Coordinator::admit`](coordinator::Coordinator::admit), one
+//! request at a time in nondecreasing-arrival order — the daemon path).
+//! The two are equivalent on a sorted stream (pinned by a coordinator
+//! test), which is what makes [`crate::daemon`] recordings replayable:
+//! a trace's admitted events re-run through `admit` and reproduce the
+//! recorded responses bit-for-bit.
 
 pub mod cache;
 pub mod clock;

@@ -1,0 +1,480 @@
+//! Minimal JSON value, writer, and parser — the offline vendor set has
+//! no serde, and the daemon's trace format + wire protocol need a real
+//! (escaping, round-tripping) codec rather than ad-hoc `format!` calls.
+//!
+//! Design points that matter to the recordable-trace guarantee:
+//!
+//! * **f64 round-trips bit-exactly.** Values are written with Rust's
+//!   shortest-representation `Display` and re-parsed with
+//!   `str::parse::<f64>`, which the standard library guarantees to be
+//!   an exact inverse for finite values — so virtual-clock latencies
+//!   survive a record → replay → verify cycle without drift.
+//! * **Objects preserve insertion order** (a `Vec` of pairs, not a
+//!   map), so encoding is deterministic and trace files diff cleanly.
+//! * **Unknown fields are ignored by lookup**, which is the trace
+//!   format's forward-compatibility rule: a newer writer may append
+//!   fields, an older reader only consults the keys it knows.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// One JSON value. Numbers are `f64` (integer counters in traces stay
+/// far below 2^53, where f64 is exact).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Build an object from key/value pairs (insertion order kept).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Member lookup on an object; `None` for missing keys or
+    /// non-objects. Unknown sibling keys are simply never consulted —
+    /// the forward-compat rule.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Required-member accessors: one line per field at decode sites,
+    /// with the missing/mistyped key named in the error.
+    pub fn f64_of(&self, key: &str) -> Result<f64> {
+        match self.get(key).and_then(Json::as_f64) {
+            Some(v) => Ok(v),
+            None => bail!("missing or non-numeric field '{key}'"),
+        }
+    }
+
+    pub fn u64_of(&self, key: &str) -> Result<u64> {
+        let v = self.f64_of(key)?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("field '{key}' is not a non-negative integer ({v})");
+        }
+        Ok(v as u64)
+    }
+
+    pub fn u32_of(&self, key: &str) -> Result<u32> {
+        let v = self.u64_of(key)?;
+        if v > u32::MAX as u64 {
+            bail!("field '{key}' exceeds u32 ({v})");
+        }
+        Ok(v as u32)
+    }
+
+    pub fn bool_of(&self, key: &str) -> Result<bool> {
+        match self.get(key).and_then(Json::as_bool) {
+            Some(v) => Ok(v),
+            None => bail!("missing or non-boolean field '{key}'"),
+        }
+    }
+
+    pub fn str_of(&self, key: &str) -> Result<&str> {
+        match self.get(key).and_then(Json::as_str) {
+            Some(v) => Ok(v),
+            None => bail!("missing or non-string field '{key}'"),
+        }
+    }
+
+    pub fn arr_of(&self, key: &str) -> Result<&[Json]> {
+        match self.get(key).and_then(Json::as_arr) {
+            Some(v) => Ok(v),
+            None => bail!("missing or non-array field '{key}'"),
+        }
+    }
+
+    /// Parse a JSON document (the whole string must be one value).
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {} of JSON document", p.pos);
+        }
+        Ok(v)
+    }
+}
+
+impl fmt::Display for Json {
+    /// Compact canonical encoding (no whitespace, insertion-ordered
+    /// keys, shortest-round-trip numbers).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            // Rust's Display for finite f64 is the shortest string that
+            // parses back to the same bits; non-finite values never
+            // occur in traces (virtual-clock arithmetic is finite).
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                write!(f, "[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(pairs) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+/// Nesting ceiling: traces are a few levels deep; a hostile frame
+/// cannot stack-overflow the daemon.
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nesting exceeds {MAX_DEPTH}");
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(b) => bail!("unexpected byte '{}' at {}", b as char, self.pos),
+            None => bail!("unexpected end of JSON document"),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // Fast path: run of plain bytes (valid UTF-8 by
+            // construction — the document is a &str).
+            while let Some(b) = self.peek() {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek();
+                    self.pos += 1;
+                    match esc {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // Surrogate pairs: a high surrogate must be
+                            // followed by \uDC00..DFFF.
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                if self.peek() != Some(b'\\') {
+                                    bail!("unpaired surrogate at byte {}", self.pos);
+                                }
+                                self.pos += 1;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate at byte {}", self.pos);
+                                }
+                                let v = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(v)
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            match c {
+                                Some(c) => out.push(c),
+                                None => bail!("invalid \\u escape at byte {}", self.pos),
+                            }
+                        }
+                        _ => bail!("invalid escape at byte {}", self.pos),
+                    }
+                }
+                Some(b) if b < 0x20 => bail!("raw control byte in string at {}", self.pos),
+                _ => bail!("unterminated string at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("truncated \\u escape at byte {}", self.pos);
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {}", self.pos))?;
+        let v = u32::from_str_radix(s, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {}", self.pos))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        match s.parse::<f64>() {
+            Ok(v) if v.is_finite() => Ok(Json::Num(v)),
+            _ => bail!("invalid number '{s}' at byte {start}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_basic_values() {
+        let v = Json::obj(vec![
+            ("a", Json::Num(1.0)),
+            ("b", Json::Str("x\"y\\z\n".into())),
+            ("c", Json::Arr(vec![Json::Bool(true), Json::Null, Json::Num(-2.5)])),
+        ]);
+        let s = v.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_round_trip_is_bit_exact() {
+        // The property the trace format leans on: shortest-Display +
+        // parse is the identity on finite f64 bits.
+        for &x in &[0.0, 1e-9, 1.0 / 3.0, 123456.789e-4, 5.4321e17, f64::MIN_POSITIVE] {
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} -> {s} -> {back}");
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_ignored_by_lookup() {
+        let v = Json::parse(r#"{"known": 1, "from_the_future": {"deep": [1,2]}}"#).unwrap();
+        assert_eq!(v.f64_of("known").unwrap(), 1.0);
+        assert!(v.get("absent").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"unterminated", "{\"a\":1}x",
+            "nul", "[1 2]", "\"bad \\q escape\"", "\"\\ud800 unpaired\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn depth_limit_stops_hostile_nesting() {
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err());
+        let ok = "[".repeat(30) + &"]".repeat(30);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = Json::parse(r#""aé😀b""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "aé😀b");
+        // Control characters escape on output and round-trip.
+        let s = Json::Str("\u{1}\u{2}".into()).to_string();
+        assert_eq!(s, "\"\\u0001\\u0002\"");
+        assert_eq!(Json::parse(&s).unwrap().as_str().unwrap(), "\u{1}\u{2}");
+    }
+
+    #[test]
+    fn typed_accessors_name_the_field() {
+        let v = Json::parse(r#"{"n": 1.5, "i": 3, "s": "x", "b": true, "a": []}"#).unwrap();
+        assert_eq!(v.u64_of("i").unwrap(), 3);
+        assert_eq!(v.str_of("s").unwrap(), "x");
+        assert!(v.bool_of("b").unwrap());
+        assert!(v.arr_of("a").unwrap().is_empty());
+        let err = v.u64_of("n").unwrap_err().to_string();
+        assert!(err.contains("'n'"), "{err}");
+        let err = v.f64_of("missing").unwrap_err().to_string();
+        assert!(err.contains("'missing'"), "{err}");
+    }
+}

@@ -3,9 +3,11 @@
 //! proptest; `forall` gives us seeded randomized invariants with failure
 //! reporting).
 
+pub mod json;
 pub mod prop;
 pub mod rng;
 
+pub use json::Json;
 pub use prop::forall;
 pub use rng::Rng;
 

@@ -1,0 +1,289 @@
+//! Property tests for the daemon's trace format and wire framing:
+//!
+//! * encode/decode round-trip for every event variant over randomized
+//!   requests (all targets, precisions, registry + off-registry
+//!   datasets, full-width u64 seeds, random configs),
+//! * version-field forward compatibility (unknown fields ignored at
+//!   every nesting level; unknown *versions* and unknown event kinds
+//!   rejected),
+//! * malformed-frame rejection (truncated length prefix, oversized
+//!   frame, truncated payload, invalid UTF-8).
+
+use graphagile::config::HwConfig;
+use graphagile::daemon::{
+    read_frame, write_frame, ClientMsg, Trace, TraceConfig, TraceEvent, MAX_FRAME, TRACE_VERSION,
+};
+use graphagile::graph::{dataset, Dataset};
+use graphagile::ir::ALL_MODELS;
+use graphagile::serve::{CostModel, FleetConfig, Precision, Request, Target};
+use graphagile::util::{forall, Json, Rng};
+use std::io::Cursor;
+
+fn arb_dataset(rng: &mut Rng) -> Dataset {
+    let keys = ["CI", "CO", "PU", "FL"];
+    let d = dataset(keys[rng.below(4) as usize]).unwrap();
+    if rng.below(4) == 0 {
+        // Off-registry shape: exercises the codec's intern path.
+        d.scaled(2 + rng.below(50))
+    } else {
+        d
+    }
+}
+
+fn arb_target(rng: &mut Rng) -> Target {
+    match rng.below(3) {
+        0 => Target::FullGraph,
+        1 => Target::MiniBatch {
+            targets: (0..1 + rng.below(5)).map(|_| rng.below(1 << 20) as u32).collect(),
+            fanout: (0..1 + rng.below(3)).map(|_| rng.below(64) as u32).collect(),
+            seed: rng.next_u64(),
+        },
+        _ => Target::Update {
+            inserts: rng.below(4096) as u32,
+            deletes: rng.below(1024) as u32,
+            grow: rng.below(16) as u32,
+            seed: rng.next_u64(),
+        },
+    }
+}
+
+fn arb_request(rng: &mut Rng) -> Request {
+    Request {
+        tenant: rng.below(1024) as u32,
+        model: ALL_MODELS[rng.below(8) as usize],
+        dataset: arb_dataset(rng),
+        target: arb_target(rng),
+        arrival: rng.f64() * 1e3,
+        precision: if rng.below(2) == 0 { Precision::F32 } else { Precision::Int8 },
+    }
+}
+
+fn arb_trace(rng: &mut Rng) -> Trace {
+    let hw = if rng.below(2) == 0 {
+        HwConfig::alveo_u250()
+    } else {
+        HwConfig { n_pe: 1 + rng.below(16) as usize, ..HwConfig::functional_tiles() }
+    };
+    let fleet = FleetConfig {
+        n_devices: 1 + rng.below(8) as usize,
+        affinity: rng.below(2) == 0,
+        coalesce: rng.below(2) == 0,
+        microbatch: rng.below(2) == 0,
+        dynamic: rng.below(2) == 0,
+        costs: CostModel {
+            visit_overhead_s: rng.f64() * 1e-3,
+            ..CostModel::default()
+        },
+    };
+    let mut events = Vec::new();
+    let mut at = 0.0;
+    for _ in 0..rng.below(12) {
+        at += rng.f64() * 1e-3;
+        events.push(match rng.below(5) {
+            0 => TraceEvent::Stats { at },
+            1 => TraceEvent::Drain { at },
+            _ => {
+                let mut rq = arb_request(rng);
+                rq.arrival = at;
+                TraceEvent::Admit(rq)
+            }
+        });
+    }
+    Trace {
+        version: TRACE_VERSION,
+        config: TraceConfig { hw, fleet },
+        events,
+        responses: Vec::new(),
+        stats: None,
+    }
+}
+
+#[test]
+fn every_event_variant_round_trips() {
+    forall("trace-round-trip", 40, |rng| {
+        let t = arb_trace(rng);
+        let back = Trace::parse(&t.encode()).map_err(|e| format!("{e:#}"))?;
+        if back != t {
+            return Err("decoded trace differs from the encoded one".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn seeds_and_arrivals_survive_bit_exactly() {
+    forall("seed-arrival-exactness", 60, |rng| {
+        let mut rq = arb_request(rng);
+        let seed = rng.next_u64();
+        rq.target = Target::MiniBatch { targets: vec![1], fanout: vec![4], seed };
+        let t = Trace::from_requests(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            vec![rq.clone()],
+        );
+        let back = Trace::parse(&t.encode()).map_err(|e| format!("{e:#}"))?;
+        let got = &back.requests()[0];
+        if got.arrival.to_bits() != rq.arrival.to_bits() {
+            return Err(format!("arrival drifted: {} vs {}", got.arrival, rq.arrival));
+        }
+        match got.target {
+            Target::MiniBatch { seed: s, .. } if s == seed => Ok(()),
+            _ => Err(format!("seed drifted from {seed}")),
+        }
+    });
+}
+
+#[test]
+fn unknown_fields_are_ignored_at_every_nesting_level() {
+    let mut rng = Rng::new(99);
+    let mut t = arb_trace(&mut rng);
+    t.events.push(TraceEvent::Admit(Request::full(
+        1,
+        ALL_MODELS[0],
+        dataset("CO").unwrap(),
+        5.0,
+    )));
+    let s = t.encode();
+    // Top level, config, event, and request objects each gain a field
+    // from the future; a version-1 reader must ignore all of them.
+    let s = s.replacen("\"version\": 1,", "\"version\": 1,\n\"recorded_by\": \"v99\",", 1);
+    let s = s.replacen("{\"hw\":", "{\"cluster\":\"lab-3\",\"hw\":", 1);
+    let s = s.replacen("{\"kind\":\"admit\",", "{\"kind\":\"admit\",\"span_id\":17,", 1);
+    let s = s.replacen("{\"tenant\":", "{\"priority\":\"high\",\"tenant\":", 1);
+    let back = Trace::parse(&s).unwrap();
+    assert_eq!(back, t);
+}
+
+#[test]
+fn unknown_version_is_rejected() {
+    let mut rng = Rng::new(3);
+    let s = arb_trace(&mut rng).encode().replacen("\"version\": 1,", "\"version\": 99,", 1);
+    let err = Trace::parse(&s).unwrap_err().to_string();
+    assert!(err.contains("version 99"), "{err}");
+}
+
+#[test]
+fn missing_version_is_rejected() {
+    let err = Trace::parse("{\"config\": {}, \"events\": []}").unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn unknown_event_kind_is_rejected_not_skipped() {
+    let mut rng = Rng::new(4);
+    let mut t = arb_trace(&mut rng);
+    t.events = vec![TraceEvent::Drain { at: 1.0 }];
+    let s = t
+        .encode()
+        .replacen("{\"kind\":\"drain\"", "{\"kind\":\"rollback\"", 1);
+    let err = format!("{:#}", Trace::parse(&s).unwrap_err());
+    assert!(err.contains("rollback"), "{err}");
+}
+
+#[test]
+fn frames_round_trip_random_payloads() {
+    forall("frame-round-trip", 30, |rng| {
+        let msg = match rng.below(3) {
+            0 => ClientMsg::Submit(arb_request(rng)),
+            1 => ClientMsg::Stats,
+            _ => ClientMsg::Drain,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg.to_json()).map_err(|e| format!("{e:#}"))?;
+        let got = read_frame(&mut Cursor::new(buf))
+            .map_err(|e| format!("{e:#}"))?
+            .ok_or("missing frame")?;
+        let back = ClientMsg::parse(&got).map_err(|e| format!("{e:#}"))?;
+        if back != msg {
+            return Err("decoded frame differs".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_length_prefix_is_rejected() {
+    // 1..3 header bytes: torn mid-prefix.
+    for n in 1..4usize {
+        let err = read_frame(&mut Cursor::new(vec![0u8; n])).unwrap_err().to_string();
+        assert!(err.contains("truncated length prefix"), "{n} bytes: {err}");
+    }
+    // 0 bytes is a clean EOF, not an error.
+    assert!(read_frame(&mut Cursor::new(Vec::<u8>::new())).unwrap().is_none());
+}
+
+#[test]
+fn oversized_frame_is_rejected_before_allocation() {
+    let mut bytes = u32::MAX.to_be_bytes().to_vec();
+    bytes.extend_from_slice(b"{}");
+    let err = read_frame(&mut Cursor::new(bytes)).unwrap_err().to_string();
+    assert!(err.contains("exceeds MAX_FRAME"), "{err}");
+    // Exactly at the cap is allowed in principle (length check only).
+    assert!(MAX_FRAME >= 1 << 20);
+}
+
+#[test]
+fn truncated_payload_is_rejected() {
+    let mut bytes = 100u32.to_be_bytes().to_vec();
+    bytes.extend_from_slice(b"{\"op\":\"stats\"}");
+    let err = read_frame(&mut Cursor::new(bytes)).unwrap_err().to_string();
+    assert!(err.contains("truncated frame payload"), "{err}");
+}
+
+#[test]
+fn invalid_utf8_payload_is_rejected() {
+    let payload = [b'{', 0xC3, 0x28, b'}']; // 0xC3 0x28: invalid sequence
+    let mut bytes = (payload.len() as u32).to_be_bytes().to_vec();
+    bytes.extend_from_slice(&payload);
+    let err = read_frame(&mut Cursor::new(bytes)).unwrap_err().to_string();
+    assert!(err.contains("not UTF-8"), "{err}");
+}
+
+#[test]
+fn stats_and_drain_events_carry_their_timestamps() {
+    for (e, kind) in [
+        (TraceEvent::Stats { at: 0.125 }, "stats"),
+        (TraceEvent::Drain { at: 0.25 }, "drain"),
+    ] {
+        let t = Trace {
+            version: TRACE_VERSION,
+            config: TraceConfig { hw: HwConfig::alveo_u250(), fleet: FleetConfig::default() },
+            events: vec![e.clone()],
+            responses: Vec::new(),
+            stats: None,
+        };
+        let s = t.encode();
+        assert!(s.contains(kind), "{s}");
+        let back = Trace::parse(&s).unwrap();
+        assert_eq!(back.events.len(), 1);
+        assert_eq!(back.events[0], e);
+    }
+}
+
+#[test]
+fn example_trace_in_repo_parses_and_replays() {
+    // The checked-in quickstart trace must stay loadable — it is the
+    // README's recorded-trace example.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples")
+        .join("traces")
+        .join("mixed.trace.json");
+    let t = Trace::load(&path).unwrap();
+    assert_eq!(t.version, TRACE_VERSION);
+    assert!(!t.requests().is_empty());
+    let (responses, stats) = graphagile::daemon::replay(&t);
+    assert_eq!(responses.len(), t.requests().len());
+    assert_eq!(stats.completed as usize, responses.len());
+    // Replay of a fixed file is deterministic across runs/machines.
+    let (responses2, stats2) = graphagile::daemon::replay(&t);
+    assert_eq!(responses, responses2);
+    assert!(stats.diff(&stats2).is_empty());
+}
+
+#[test]
+fn json_codec_is_reexported_for_tools() {
+    // Downstream scripts build frames by hand; keep the Json value
+    // type publicly reachable.
+    let v = Json::parse("{\"op\":\"stats\"}").unwrap();
+    assert_eq!(v.str_of("op").unwrap(), "stats");
+}
