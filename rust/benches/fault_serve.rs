@@ -1,0 +1,154 @@
+//! Fault-tolerant serving benchmark: latency percentiles and loss
+//! accounting for the same deterministic workload served fault-free,
+//! under a single mid-run device crash, and under a seeded
+//! crash-and-recover chaos plan. Written to `BENCH_fault.json` so the
+//! resilience trajectory is recorded across commits; everything runs on
+//! the virtual clock, so the numbers are bit-identical between runs.
+//!
+//! Strict gates (`GA_BENCH_STRICT=1`):
+//!   * p99 under a 1-device crash stays within 3x the fault-free p99,
+//!   * shed rate is exactly 0 at nominal load (a crash on an
+//!     N >= 2 fleet degrades latency, never loses requests).
+//!
+//! Knobs: `GA_REQUESTS` (default 400).
+
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::serve::{
+    Coordinator, FaultEvent, FaultPlan, FleetConfig, Request, ServeStats,
+};
+use graphagile::util::Rng;
+
+const DEVICES: usize = 2;
+const SPACING_S: f64 = 2e-4;
+
+fn workload(n: usize, seed: u64) -> Vec<Request> {
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B6, ZooModel::B7];
+    let graphs = [
+        dataset("CI").unwrap(),
+        dataset("CO").unwrap(),
+        dataset("PU").unwrap(),
+    ];
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            Request::full(
+                rng.below(8) as u32,
+                models[rng.below(4) as usize],
+                graphs[rng.below(3) as usize],
+                i as f64 * SPACING_S,
+            )
+        })
+        .collect()
+}
+
+fn serve(reqs: &[Request], plan: Option<FaultPlan>) -> ServeStats {
+    let cfg = FleetConfig { n_devices: DEVICES, ..FleetConfig::default() };
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+    if let Some(p) = plan {
+        c.set_fault_plan(p);
+    }
+    c.run(reqs.to_vec())
+}
+
+fn row(name: &str, s: &ServeStats) -> String {
+    format!(
+        "    {{\"scenario\": \"{name}\", \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+         \"mean_ms\": {:.4}, \"completed\": {}, \"shed\": {}, \"degraded\": {}, \
+         \"retries\": {}, \"rerouted\": {}, \"crashes\": {}, \"stalls\": {}, \
+         \"corruptions\": {}, \"downtime_s\": {:.6}, \"makespan_s\": {:.6}}}",
+        s.p50 * 1e3,
+        s.p99 * 1e3,
+        s.mean * 1e3,
+        s.completed,
+        s.shed,
+        s.degraded,
+        s.retries,
+        s.rerouted,
+        s.crashes,
+        s.stalls,
+        s.corruptions,
+        s.downtime,
+        s.makespan,
+    )
+}
+
+fn main() {
+    let n: usize = std::env::var("GA_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let strict = std::env::var("GA_BENCH_STRICT").ok().as_deref() == Some("1");
+    let reqs = workload(n, 11);
+    let span = n as f64 * SPACING_S;
+
+    let free = serve(&reqs, None);
+    let one_crash = serve(
+        &reqs,
+        Some(FaultPlan {
+            seed: 1,
+            events: vec![FaultEvent::DeviceCrash {
+                device: 1,
+                at: span * 0.4,
+                recover_after: 2e-3,
+            }],
+        }),
+    );
+    let chaos = serve(&reqs, Some(FaultPlan::crash_and_recover(23, DEVICES, span)));
+
+    println!(
+        "{:>12} {:>10} {:>10} {:>6} {:>9} {:>8} {:>9} {:>9}",
+        "scenario", "p50 (ms)", "p99 (ms)", "shed", "degraded", "retries", "crashes", "downtime"
+    );
+    for (name, s) in [("fault_free", &free), ("one_crash", &one_crash), ("chaos", &chaos)] {
+        println!(
+            "{:>12} {:>10.3} {:>10.3} {:>6} {:>9} {:>8} {:>9} {:>9.4}",
+            name,
+            s.p50 * 1e3,
+            s.p99 * 1e3,
+            s.shed,
+            s.degraded,
+            s.retries,
+            s.crashes,
+            s.downtime
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"fault_serve\",\n  \"requests\": {n},\n  \"devices\": {DEVICES},\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+        [row("fault_free", &free), row("one_crash", &one_crash), row("chaos", &chaos)]
+            .join(",\n")
+    );
+    std::fs::write("BENCH_fault.json", &json).expect("write BENCH_fault.json");
+    eprintln!("wrote BENCH_fault.json ({n} requests, {DEVICES} devices)");
+
+    // Accounting invariants hold strict or not: a crash on a multi-device
+    // fleet must never lose an accepted request.
+    assert_eq!(free.shed, 0, "fault-free serving must not shed");
+    assert_eq!(
+        one_crash.completed + one_crash.shed,
+        n as u64,
+        "every request must end completed, degraded, or shed"
+    );
+
+    if strict {
+        assert_eq!(
+            one_crash.shed, 0,
+            "STRICT: a 1-device crash at nominal load shed {} request(s)",
+            one_crash.shed
+        );
+        assert!(
+            one_crash.p99 <= 3.0 * free.p99,
+            "STRICT: p99 under a 1-device crash regressed past 3x fault-free \
+             ({:.3} ms > 3 x {:.3} ms)",
+            one_crash.p99 * 1e3,
+            free.p99 * 1e3,
+        );
+        eprintln!(
+            "STRICT gates passed: crash p99 {:.3} ms <= 3 x fault-free p99 {:.3} ms, 0 shed",
+            one_crash.p99 * 1e3,
+            free.p99 * 1e3
+        );
+    }
+}

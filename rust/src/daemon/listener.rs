@@ -8,16 +8,25 @@ use super::protocol::{err_reply, ok_reply, read_frame, write_frame, ClientMsg};
 use super::session::DaemonSession;
 use super::trace::{response_json, stats_json, Trace};
 use crate::config::HwConfig;
-use crate::serve::FleetConfig;
+use crate::serve::{FaultPlan, FleetConfig};
 use crate::util::Json;
 use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Default per-connection socket timeout: a client that goes silent
+/// mid-frame (or holds an idle connection open without closing it)
+/// unblocks the sequential accept loop after this long instead of
+/// wedging every client behind it.
+pub const DEFAULT_CONN_TIMEOUT: Duration = Duration::from_secs(5);
 
 pub struct Daemon {
     listener: TcpListener,
     session: DaemonSession,
     port: u16,
+    /// Per-connection read/write timeout (see [`DEFAULT_CONN_TIMEOUT`]).
+    conn_timeout: Duration,
 }
 
 impl Daemon {
@@ -25,14 +34,37 @@ impl Daemon {
     /// read it back with [`Daemon::port`]). Localhost-only: the daemon
     /// has no authentication and is a lab tool, not an internet service.
     pub fn bind(port: u16, hw: HwConfig, fleet: FleetConfig) -> Result<Daemon> {
+        Daemon::bind_with_plan(port, hw, fleet, None)
+    }
+
+    /// Bind a daemon whose session serves under a fault plan
+    /// (`daemon --fault-plan plan.json`). `None` — or an empty plan —
+    /// is exactly [`Daemon::bind`].
+    pub fn bind_with_plan(
+        port: u16,
+        hw: HwConfig,
+        fleet: FleetConfig,
+        plan: Option<FaultPlan>,
+    ) -> Result<Daemon> {
         let listener =
             TcpListener::bind(("127.0.0.1", port)).context("binding daemon listener")?;
         let port = listener.local_addr().context("reading bound address")?.port();
-        Ok(Daemon { listener, session: DaemonSession::new(hw, fleet), port })
+        Ok(Daemon {
+            listener,
+            session: DaemonSession::with_plan(hw, fleet, plan),
+            port,
+            conn_timeout: DEFAULT_CONN_TIMEOUT,
+        })
     }
 
     pub fn port(&self) -> u16 {
         self.port
+    }
+
+    /// Override the per-connection socket timeout (tests shrink it so a
+    /// scripted silent client unwedges in milliseconds).
+    pub fn set_conn_timeout(&mut self, timeout: Duration) {
+        self.conn_timeout = timeout;
     }
 
     /// Accept and serve connections until a client sends `shutdown`,
@@ -49,6 +81,16 @@ impl Daemon {
     /// Serve one connection's frames; `Ok(true)` means shutdown was
     /// requested.
     fn handle_conn(&mut self, stream: TcpStream) -> Result<bool> {
+        // Arm both socket timeouts before the first read: a peer that
+        // stops talking mid-frame (or never talks) errors out of the
+        // blocking read instead of wedging the accept loop, and a peer
+        // that stops *reading* can't park us in a blocked reply write.
+        stream
+            .set_read_timeout(Some(self.conn_timeout))
+            .context("arming connection read timeout")?;
+        stream
+            .set_write_timeout(Some(self.conn_timeout))
+            .context("arming connection write timeout")?;
         let mut reader =
             BufReader::new(stream.try_clone().context("cloning connection handle")?);
         let mut writer = BufWriter::new(stream);
@@ -57,11 +99,13 @@ impl Daemon {
                 Ok(Some(f)) => f,
                 // Clean EOF: the client is done; wait for the next one.
                 Ok(None) => return Ok(false),
-                // Torn framing: the byte stream is unsynchronized, so
-                // reply best-effort and drop the connection. The session
-                // (and its trace) survives.
+                // Torn framing or a timed-out read: the byte stream is
+                // unsynchronized, so reply best-effort, tear the
+                // connection down, and move on. The session (and its
+                // trace) survives.
                 Err(e) => {
                     let _ = write_frame(&mut writer, &err_reply(&format!("{e:#}")));
+                    let _ = writer.get_ref().shutdown(Shutdown::Both);
                     return Ok(false);
                 }
             };
@@ -139,5 +183,41 @@ mod tests {
         assert_eq!(trace.requests().len(), 1);
         assert_eq!(trace.responses.len(), 1);
         assert_eq!(trace.stats.as_ref().unwrap().completed, 1);
+    }
+
+    #[test]
+    fn torn_and_silent_clients_do_not_wedge_the_accept_loop() {
+        use std::io::Write;
+
+        let mut d = Daemon::bind(0, HwConfig::alveo_u250(), FleetConfig::default()).unwrap();
+        d.set_conn_timeout(Duration::from_millis(100));
+        let port = d.port();
+        let server = std::thread::spawn(move || d.serve().unwrap());
+
+        // Client 1: a torn half-frame — the header promises 100 bytes,
+        // 3 arrive, then the connection closes. The daemon must report
+        // the tear and move on.
+        {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            s.write_all(&100u32.to_be_bytes()).unwrap();
+            s.write_all(b"abc").unwrap();
+        }
+
+        // Client 2: goes silent after the header and holds the
+        // connection open — only the read timeout can unwedge this one.
+        let mut silent = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        silent.write_all(&100u32.to_be_bytes()).unwrap();
+
+        // Client 3: a healthy client behind both is served normally.
+        let mut c = Client::connect(port).unwrap();
+        let co = dataset("CO").unwrap();
+        let resp = c.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        assert_eq!(resp.tenant, 0);
+        let events = c.shutdown().unwrap();
+        assert_eq!(events, 1); // only the healthy admit was recorded
+
+        drop(silent);
+        let trace = server.join().unwrap();
+        assert_eq!(trace.responses.len(), 1);
     }
 }

@@ -30,21 +30,35 @@ pub use trace::{Trace, TraceConfig, TraceEvent, TRACE_VERSION};
 use crate::serve::{Coordinator, Response, ServeStats};
 use anyhow::{bail, Result};
 
-/// Re-execute a trace's admitted events in recorded order through a
-/// coordinator built from the trace's own config. Admission order is
-/// the determinism contract — events are *not* re-sorted.
-pub fn replay(trace: &Trace) -> (Vec<Response>, ServeStats) {
+/// Build the coordinator a trace describes and feed it the recorded
+/// admissions. Admission order is the determinism contract — events
+/// are *not* re-sorted.
+fn replay_coordinator(trace: &Trace) -> Coordinator {
     let mut coord = Coordinator::fleet(trace.config.hw.clone(), trace.config.fleet);
+    if let Some(p) = &trace.config.fault_plan {
+        coord.set_fault_plan(p.clone());
+    }
     for e in &trace.events {
         match e {
             TraceEvent::Admit(rq) => {
                 coord.admit(rq.clone());
             }
-            // Stats/drain queries are coordinator no-ops; they are in
-            // the trace for the operational timeline only.
-            TraceEvent::Stats { .. } | TraceEvent::Drain { .. } => {}
+            // Stats/drain queries are coordinator no-ops; fault and
+            // decision events are re-derived from the embedded plan,
+            // so the recorded copies are timeline documentation here.
+            TraceEvent::Stats { .. }
+            | TraceEvent::Drain { .. }
+            | TraceEvent::Fault(_)
+            | TraceEvent::Decision(_) => {}
         }
     }
+    coord
+}
+
+/// Re-execute a trace's admitted events in recorded order through a
+/// coordinator built from the trace's own config (fault plan included).
+pub fn replay(trace: &Trace) -> (Vec<Response>, ServeStats) {
+    let coord = replay_coordinator(trace);
     let stats = coord.stats();
     (coord.responses, stats)
 }
@@ -60,7 +74,9 @@ pub fn verify(trace: &Trace) -> Result<Vec<String>> {
              (events-only traces can be replayed, not verified)"
         );
     }
-    let (responses, stats) = replay(trace);
+    let coord = replay_coordinator(trace);
+    let stats = coord.stats();
+    let responses = &coord.responses;
     let mut divergences = Vec::new();
     if responses.len() != trace.responses.len() {
         divergences.push(format!(
@@ -69,7 +85,7 @@ pub fn verify(trace: &Trace) -> Result<Vec<String>> {
             responses.len()
         ));
     }
-    for (i, (rec, rep)) in trace.responses.iter().zip(&responses).enumerate() {
+    for (i, (rec, rep)) in trace.responses.iter().zip(responses).enumerate() {
         for d in rec.diff(rep) {
             divergences.push(format!("responses[{i}].{d}"));
         }
@@ -78,6 +94,39 @@ pub fn verify(trace: &Trace) -> Result<Vec<String>> {
         for d in rec.diff(&stats) {
             divergences.push(format!("stats.{d}"));
         }
+    }
+    // The recorded fault/decision streams must match what the replayed
+    // plan re-derives — a lost or reordered event is a divergence even
+    // when every response happens to agree.
+    let rec_faults: Vec<_> = trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Fault(f) => Some(f.clone()),
+            _ => None,
+        })
+        .collect();
+    if rec_faults.as_slice() != coord.fault_log() {
+        divergences.push(format!(
+            "fault events: recorded {} diverge from the {} the plan replays to",
+            rec_faults.len(),
+            coord.fault_log().len()
+        ));
+    }
+    let rec_decisions: Vec<_> = trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Decision(d) => Some(*d),
+            _ => None,
+        })
+        .collect();
+    if rec_decisions.as_slice() != coord.decision_log() {
+        divergences.push(format!(
+            "decision events: recorded {} diverge from the {} the plan replays to",
+            rec_decisions.len(),
+            coord.decision_log().len()
+        ));
     }
     Ok(divergences)
 }
@@ -122,6 +171,32 @@ mod tests {
         let div = verify(&trace).unwrap();
         assert!(div.iter().any(|d| d.starts_with("responses[1].latency:")), "{div:?}");
         assert!(div.iter().any(|d| d.starts_with("stats.cache_hits:")), "{div:?}");
+    }
+
+    #[test]
+    fn faulty_recordings_verify_clean_and_catch_tampering() {
+        use crate::serve::{CostModel, FaultEvent, FaultPlan};
+        let costs = CostModel { deadline_s: f64::INFINITY, ..CostModel::default() };
+        let fleet = FleetConfig { n_devices: 2, costs, ..FleetConfig::default() };
+        let plan = FaultPlan {
+            seed: 7,
+            events: vec![FaultEvent::TransientStall { device: 0, at: 0.0, duration: 1e-6 }],
+        };
+        let mut s = DaemonSession::with_plan(HwConfig::alveo_u250(), fleet, Some(plan));
+        let co = dataset("CO").unwrap();
+        s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        s.drain();
+        let trace = s.finalize();
+        assert_eq!(trace.version, 2);
+        assert_eq!(verify(&trace).unwrap(), Vec::<String>::new());
+        // Through a full encode/decode cycle too.
+        let decoded = Trace::parse(&trace.encode()).unwrap();
+        assert_eq!(verify(&decoded).unwrap(), Vec::<String>::new());
+        // Dropping a recorded fault event is a named divergence.
+        let mut tampered = trace;
+        tampered.events.retain(|e| !matches!(e, TraceEvent::Fault(_)));
+        let div = verify(&tampered).unwrap();
+        assert!(div.iter().any(|d| d.starts_with("fault events:")), "{div:?}");
     }
 
     #[test]

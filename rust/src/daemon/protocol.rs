@@ -20,6 +20,12 @@ use std::io::{Read, Write};
 /// 60k-target mini-batch fits — while bounding a bad prefix.
 pub const MAX_FRAME: u32 = 1 << 20;
 
+/// True when an I/O error is a socket read/write timeout firing (the
+/// platform reports it as `WouldBlock` on Unix, `TimedOut` on Windows).
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
 /// Write one frame: 4-byte big-endian length, then the JSON payload.
 pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<()> {
     let payload = v.to_string();
@@ -42,17 +48,30 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
     match r.read_exact(&mut len_buf[..1]) {
         Ok(()) => {}
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) if is_timeout(&e) => {
+            bail!("read timed out waiting for a frame (silent client)")
+        }
         Err(e) => return Err(e).context("reading frame length"),
     }
-    r.read_exact(&mut len_buf[1..])
-        .map_err(|_| anyhow!("truncated length prefix (connection died mid-header)"))?;
+    r.read_exact(&mut len_buf[1..]).map_err(|e| {
+        if is_timeout(&e) {
+            anyhow!("read timed out mid-header (client went silent)")
+        } else {
+            anyhow!("truncated length prefix (connection died mid-header)")
+        }
+    })?;
     let len = u32::from_be_bytes(len_buf);
     if len > MAX_FRAME {
         bail!("frame length {len} exceeds MAX_FRAME ({MAX_FRAME})");
     }
     let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)
-        .map_err(|_| anyhow!("truncated frame payload (got fewer than {len} bytes)"))?;
+    r.read_exact(&mut payload).map_err(|e| {
+        if is_timeout(&e) {
+            anyhow!("read timed out mid-frame (client went silent after the header)")
+        } else {
+            anyhow!("truncated frame payload (got fewer than {len} bytes)")
+        }
+    })?;
     let text = String::from_utf8(payload).map_err(|_| anyhow!("frame payload is not UTF-8"))?;
     let v = Json::parse(&text).context("frame payload is not valid JSON")?;
     Ok(Some(v))

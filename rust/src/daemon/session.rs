@@ -15,7 +15,7 @@
 
 use super::trace::{Trace, TraceConfig, TraceEvent, TRACE_VERSION};
 use crate::config::HwConfig;
-use crate::serve::{Coordinator, FleetConfig, Request, Response, ServeStats, Target};
+use crate::serve::{Coordinator, FaultPlan, FleetConfig, Request, Response, ServeStats, Target};
 use anyhow::{bail, Result};
 use std::time::Instant;
 
@@ -33,16 +33,34 @@ pub struct DaemonSession {
     /// Last stamped arrival — stamps are forced monotone because
     /// [`Coordinator::admit`] requires nondecreasing arrivals.
     last_arrival: f64,
+    /// Splice cursors into the coordinator's fault/decision logs:
+    /// entries before these were already copied into `events`.
+    faults_seen: usize,
+    decisions_seen: usize,
 }
 
 impl DaemonSession {
     pub fn new(hw: HwConfig, fleet: FleetConfig) -> DaemonSession {
+        DaemonSession::with_plan(hw, fleet, None)
+    }
+
+    /// A session serving under a fault plan (`daemon --fault-plan`).
+    /// An empty (or absent) plan installs nothing: the session records
+    /// a v1 trace byte-identical to the pre-fault format.
+    pub fn with_plan(hw: HwConfig, fleet: FleetConfig, plan: Option<FaultPlan>) -> DaemonSession {
+        let mut coord = Coordinator::fleet(hw.clone(), fleet);
+        if let Some(p) = plan {
+            coord.set_fault_plan(p);
+        }
+        let fault_plan = coord.fault_plan().cloned();
         DaemonSession {
-            coord: Coordinator::fleet(hw.clone(), fleet),
-            config: TraceConfig { hw, fleet },
+            coord,
+            config: TraceConfig { hw, fleet, fault_plan },
             events: Vec::new(),
             t0: Instant::now(),
             last_arrival: 0.0,
+            faults_seen: 0,
+            decisions_seen: 0,
         }
     }
 
@@ -98,7 +116,25 @@ impl DaemonSession {
         DaemonSession::validate(&rq)?;
         rq.arrival = self.stamp();
         self.events.push(TraceEvent::Admit(rq.clone()));
-        Ok(self.coord.admit(rq))
+        let resp = self.coord.admit(rq);
+        self.record_fault_activity();
+        Ok(resp)
+    }
+
+    /// Splice the fault events fired and decisions taken by the last
+    /// admission into the recorded stream, right after their admit
+    /// event — replay re-derives the same interleaving from the plan.
+    fn record_fault_activity(&mut self) {
+        let log = self.coord.fault_log();
+        for f in &log[self.faults_seen..] {
+            self.events.push(TraceEvent::Fault(f.clone()));
+        }
+        self.faults_seen = log.len();
+        let dec = self.coord.decision_log();
+        for d in &dec[self.decisions_seen..] {
+            self.events.push(TraceEvent::Decision(*d));
+        }
+        self.decisions_seen = dec.len();
     }
 
     /// Current aggregate stats; the query is recorded so the trace
@@ -131,13 +167,17 @@ impl DaemonSession {
     /// verified against.
     pub fn finalize(self) -> Trace {
         let stats = self.coord.stats();
-        Trace {
+        let mut t = Trace {
             version: TRACE_VERSION,
             config: self.config,
             events: self.events,
             responses: self.coord.responses,
             stats: Some(stats),
-        }
+        };
+        // Stamp the oldest sufficient version: a fault-free session
+        // stays a v1 document, byte-identical to pre-fault recordings.
+        t.version = t.min_version();
+        t
     }
 }
 
@@ -195,5 +235,39 @@ mod tests {
         // A valid one still goes through afterwards.
         assert!(s.submit(Request::full(0, ZooModel::B1, co, 0.0)).is_ok());
         assert_eq!(s.events_len(), 1);
+    }
+
+    #[test]
+    fn fault_free_sessions_finalize_as_version_1() {
+        let mut s = DaemonSession::with_plan(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            Some(FaultPlan::empty()),
+        );
+        let co = dataset("CO").unwrap();
+        s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        let t = s.finalize();
+        assert_eq!(t.version, 1);
+        assert!(t.config.fault_plan.is_none());
+    }
+
+    #[test]
+    fn faulty_sessions_record_fault_and_decision_events() {
+        use crate::serve::{CostModel, FaultEvent};
+        let costs = CostModel { deadline_s: 0.0, ..CostModel::default() };
+        let fleet = FleetConfig { costs, ..FleetConfig::default() };
+        let plan = FaultPlan {
+            seed: 1,
+            events: vec![FaultEvent::TransientStall { device: 0, at: 0.0, duration: 1e-6 }],
+        };
+        let mut s = DaemonSession::with_plan(HwConfig::alveo_u250(), fleet, Some(plan));
+        let co = dataset("CO").unwrap();
+        let r = s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        assert!(r.outcome.is_degraded());
+        let t = s.finalize();
+        assert_eq!(t.version, 2);
+        assert!(t.config.fault_plan.is_some());
+        assert!(t.events.iter().any(|e| matches!(e, TraceEvent::Fault(_))));
+        assert!(t.events.iter().any(|e| matches!(e, TraceEvent::Decision(_))));
     }
 }

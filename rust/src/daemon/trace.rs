@@ -1,4 +1,4 @@
-//! The recordable trace format (`trace.json`, version 1).
+//! The recordable trace format (`trace.json`, versions 1–2).
 //!
 //! A trace is a complete, self-contained description of one serving
 //! run: the hardware + fleet configuration, every admitted event in
@@ -22,18 +22,30 @@
 //!   ([`crate::util::json`]); `u64` seeds are encoded as decimal
 //!   *strings* because JSON numbers are f64 and lose integer precision
 //!   past 2^53.
+//! * Writers stamp the *oldest sufficient* version
+//!   ([`Trace::min_version`]): a trace is v2 only when it actually
+//!   carries fault-era content (a fault plan, `fault`/`decision`
+//!   events, non-default fault knobs, or fault counters in a response
+//!   or the stats). A fault-free recording therefore stays
+//!   byte-identical to what a v1 writer produced, and v1 readers keep
+//!   reading it.
 
 use crate::config::HwConfig;
 use crate::graph::{dataset, Dataset};
 use crate::ir::{zoo_model, ZooModel};
 use crate::quant::Precision;
-use crate::serve::{CostModel, FleetConfig, Request, Response, ServeStats, Target};
+use crate::serve::fault::{fault_event_from, fault_event_json};
+use crate::serve::{
+    CostModel, DecisionRecord, FaultPlan, FaultRecord, FleetConfig, Outcome, Request, Response,
+    ServeStats, Target,
+};
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
-/// The trace schema version this build reads and writes.
-pub const TRACE_VERSION: u32 = 1;
+/// The newest trace schema version this build reads and writes (it
+/// reads every version from 1 up).
+pub const TRACE_VERSION: u32 = 2;
 
 /// The configuration a trace was recorded under — everything the
 /// replayer needs to rebuild an identical [`Coordinator`]
@@ -42,6 +54,10 @@ pub const TRACE_VERSION: u32 = 1;
 pub struct TraceConfig {
     pub hw: HwConfig,
     pub fleet: FleetConfig,
+    /// Fault plan the run was recorded under (v2; absent in v1 traces
+    /// and in fault-free v2 recordings). Replay re-installs it so
+    /// fault/decision events re-derive identically.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 /// One recorded daemon event, in admission order.
@@ -56,6 +72,12 @@ pub enum TraceEvent {
     /// the virtual-clock fleet completes every admitted job "instantly"
     /// in wall time).
     Drain { at: f64 },
+    /// A fault-plan event that fired at virtual time `record.at` (v2).
+    /// Replay derives these from the re-installed plan and verifies
+    /// them against the recorded stream.
+    Fault(FaultRecord),
+    /// A degradation/shed decision the coordinator took (v2).
+    Decision(DecisionRecord),
 }
 
 /// A recorded serving run.
@@ -76,12 +98,35 @@ impl Trace {
     /// An events-only trace over `requests` (benches use this to make
     /// synthesized workloads first-class trace inputs).
     pub fn from_requests(hw: HwConfig, fleet: FleetConfig, requests: Vec<Request>) -> Trace {
-        Trace {
+        let mut t = Trace {
             version: TRACE_VERSION,
-            config: TraceConfig { hw, fleet },
+            config: TraceConfig { hw, fleet, fault_plan: None },
             events: requests.into_iter().map(TraceEvent::Admit).collect(),
             responses: Vec::new(),
             stats: None,
+        };
+        t.version = t.min_version();
+        t
+    }
+
+    /// The oldest schema version able to represent this trace: v1
+    /// unless fault-era content is actually present (a fault plan,
+    /// fault/decision events, non-default fault knobs, or fault
+    /// counters in a response or the stats). Writers stamp this, so a
+    /// fault-free recording stays byte-identical to a v1 document.
+    pub fn min_version(&self) -> u32 {
+        let faulty = self.config.fault_plan.is_some()
+            || !self.config.fleet.costs.fault_knobs_default()
+            || self
+                .events
+                .iter()
+                .any(|e| matches!(e, TraceEvent::Fault(_) | TraceEvent::Decision(_)))
+            || self.responses.iter().any(response_has_fault_content)
+            || self.stats.as_ref().is_some_and(stats_has_fault_content);
+        if faulty {
+            2
+        } else {
+            1
         }
     }
 
@@ -142,8 +187,10 @@ impl Trace {
     pub fn parse(s: &str) -> Result<Trace> {
         let j = Json::parse(s).context("trace is not valid JSON")?;
         let version = j.u32_of("version")?;
-        if version != TRACE_VERSION {
-            bail!("trace version {version} is not supported (this build reads {TRACE_VERSION})");
+        if version == 0 || version > TRACE_VERSION {
+            bail!(
+                "trace version {version} is not supported (this build reads 1..={TRACE_VERSION})"
+            );
         }
         let config = config_from(
             j.get("config").ok_or_else(|| anyhow!("trace is missing 'config'"))?,
@@ -184,6 +231,66 @@ fn seed_json(v: u64) -> Json {
 fn seed_from(j: &Json, key: &str) -> Result<u64> {
     let s = j.str_of(key)?;
     s.parse::<u64>().map_err(|_| anyhow!("field '{key}' is not a u64 string ({s:?})"))
+}
+
+// ---- optional-field reads (v2 fields default when absent, so v1
+// documents and fault-free v2 documents decode identically) ----
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(_) => j.f64_of(key),
+    }
+}
+
+fn opt_u32(j: &Json, key: &str, default: u32) -> Result<u32> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(_) => j.u32_of(key),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(_) => j.u64_of(key),
+    }
+}
+
+fn opt_bool(j: &Json, key: &str, default: bool) -> Result<bool> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(_) => j.bool_of(key),
+    }
+}
+
+fn opt_outcome(j: &Json) -> Result<Outcome> {
+    match j.get("outcome") {
+        None => Ok(Outcome::Completed),
+        Some(_) => Outcome::parse(j.str_of("outcome")?),
+    }
+}
+
+/// Whether a response carries any fault-era field a v1 reader would
+/// miss (drives both emission and [`Trace::min_version`]).
+fn response_has_fault_content(r: &Response) -> bool {
+    r.retries != 0
+        || r.rerouted
+        || r.t_backoff != 0.0
+        || r.outcome != Outcome::Completed
+}
+
+/// Same, for the aggregate stats.
+fn stats_has_fault_content(s: &ServeStats) -> bool {
+    s.retries != 0
+        || s.rerouted != 0
+        || s.degraded != 0
+        || s.shed != 0
+        || s.crashes != 0
+        || s.stalls != 0
+        || s.corruptions != 0
+        || s.downtime != 0.0
+        || s.t_backoff != 0.0
 }
 
 // ---- leaked-string pool for datasets not in the registry ----
@@ -346,7 +453,7 @@ pub fn request_from(j: &Json) -> Result<Request> {
 }
 
 pub fn response_json(r: &Response) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("tenant", Json::Num(r.tenant as f64)),
         ("model", model_json(r.model)),
         ("device", Json::Num(r.device as f64)),
@@ -373,7 +480,22 @@ pub fn response_json(r: &Response) -> Json {
         ("rebuilt_edges", Json::Num(r.rebuilt_edges as f64)),
         ("invalidated", Json::Num(r.invalidated as f64)),
         ("compacted", Json::Bool(r.compacted)),
-    ])
+    ];
+    // Fault-era fields (v2) are emitted only when non-default, so a
+    // fault-free response line stays byte-identical to a v1 writer's.
+    if r.retries != 0 {
+        fields.push(("retries", Json::Num(r.retries as f64)));
+    }
+    if r.rerouted {
+        fields.push(("rerouted", Json::Bool(true)));
+    }
+    if r.t_backoff != 0.0 {
+        fields.push(("t_backoff", Json::Num(r.t_backoff)));
+    }
+    if r.outcome != Outcome::Completed {
+        fields.push(("outcome", Json::Str(r.outcome.key().to_string())));
+    }
+    Json::obj(fields)
 }
 
 pub fn response_from(j: &Json) -> Result<Response> {
@@ -404,11 +526,15 @@ pub fn response_from(j: &Json) -> Result<Response> {
         rebuilt_edges: j.u64_of("rebuilt_edges")?,
         invalidated: j.u32_of("invalidated")?,
         compacted: j.bool_of("compacted")?,
+        retries: opt_u32(j, "retries", 0)?,
+        rerouted: opt_bool(j, "rerouted", false)?,
+        t_backoff: opt_f64(j, "t_backoff", 0.0)?,
+        outcome: opt_outcome(j)?,
     })
 }
 
 pub fn stats_json(s: &ServeStats) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("completed", Json::Num(s.completed as f64)),
         ("cache_hits", Json::Num(s.cache_hits as f64)),
         ("coalesced", Json::Num(s.coalesced as f64)),
@@ -435,7 +561,22 @@ pub fn stats_json(s: &ServeStats) -> Json {
         ("p50_full", Json::Num(s.p50_full)),
         ("device_busy", Json::Num(s.device_busy)),
         ("makespan", Json::Num(s.makespan)),
-    ])
+    ];
+    // The fault/degradation counter family (v2) is emitted as a block
+    // only when any member is non-zero — a fault-free run's stats stay
+    // byte-identical to a v1 writer's.
+    if stats_has_fault_content(s) {
+        fields.push(("retries", Json::Num(s.retries as f64)));
+        fields.push(("rerouted", Json::Num(s.rerouted as f64)));
+        fields.push(("degraded", Json::Num(s.degraded as f64)));
+        fields.push(("shed", Json::Num(s.shed as f64)));
+        fields.push(("crashes", Json::Num(s.crashes as f64)));
+        fields.push(("stalls", Json::Num(s.stalls as f64)));
+        fields.push(("corruptions", Json::Num(s.corruptions as f64)));
+        fields.push(("downtime", Json::Num(s.downtime)));
+        fields.push(("t_backoff", Json::Num(s.t_backoff)));
+    }
+    Json::obj(fields)
 }
 
 pub fn stats_from(j: &Json) -> Result<ServeStats> {
@@ -466,11 +607,20 @@ pub fn stats_from(j: &Json) -> Result<ServeStats> {
         p50_full: j.f64_of("p50_full")?,
         device_busy: j.f64_of("device_busy")?,
         makespan: j.f64_of("makespan")?,
+        retries: opt_u64(j, "retries", 0)?,
+        rerouted: opt_u64(j, "rerouted", 0)?,
+        degraded: opt_u64(j, "degraded", 0)?,
+        shed: opt_u64(j, "shed", 0)?,
+        crashes: opt_u64(j, "crashes", 0)?,
+        stalls: opt_u64(j, "stalls", 0)?,
+        corruptions: opt_u64(j, "corruptions", 0)?,
+        downtime: opt_f64(j, "downtime", 0.0)?,
+        t_backoff: opt_f64(j, "t_backoff", 0.0)?,
     })
 }
 
 fn costs_json(c: &CostModel) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("sample_setup_s", Json::Num(c.sample_setup_s)),
         ("sample_per_vertex_s", Json::Num(c.sample_per_vertex_s)),
         ("sample_per_edge_s", Json::Num(c.sample_per_edge_s)),
@@ -479,10 +629,19 @@ fn costs_json(c: &CostModel) -> Json {
         ("update_per_edge_s", Json::Num(c.update_per_edge_s)),
         ("update_per_subshard_s", Json::Num(c.update_per_subshard_s)),
         ("update_per_rebuilt_edge_s", Json::Num(c.update_per_rebuilt_edge_s)),
-    ])
+    ];
+    // The fault knobs (v2) are emitted only when swept off their
+    // defaults, keeping fault-free configs byte-identical to v1.
+    if !c.fault_knobs_default() {
+        fields.push(("retry_backoff_base_s", Json::Num(c.retry_backoff_base_s)));
+        fields.push(("max_retries", Json::Num(c.max_retries as f64)));
+        fields.push(("deadline_s", Json::Num(c.deadline_s)));
+    }
+    Json::obj(fields)
 }
 
 fn costs_from(j: &Json) -> Result<CostModel> {
+    let d = CostModel::default();
     Ok(CostModel {
         sample_setup_s: j.f64_of("sample_setup_s")?,
         sample_per_vertex_s: j.f64_of("sample_per_vertex_s")?,
@@ -492,6 +651,9 @@ fn costs_from(j: &Json) -> Result<CostModel> {
         update_per_edge_s: j.f64_of("update_per_edge_s")?,
         update_per_subshard_s: j.f64_of("update_per_subshard_s")?,
         update_per_rebuilt_edge_s: j.f64_of("update_per_rebuilt_edge_s")?,
+        retry_backoff_base_s: opt_f64(j, "retry_backoff_base_s", d.retry_backoff_base_s)?,
+        max_retries: opt_u32(j, "max_retries", d.max_retries)?,
+        deadline_s: opt_f64(j, "deadline_s", d.deadline_s)?,
     })
 }
 
@@ -554,7 +716,11 @@ fn hw_from(j: &Json) -> Result<HwConfig> {
 }
 
 fn config_json(c: &TraceConfig) -> Json {
-    Json::obj(vec![("hw", hw_json(&c.hw)), ("fleet", fleet_json(&c.fleet))])
+    let mut fields = vec![("hw", hw_json(&c.hw)), ("fleet", fleet_json(&c.fleet))];
+    if let Some(p) = &c.fault_plan {
+        fields.push(("fault_plan", p.to_json()));
+    }
+    Json::obj(fields)
 }
 
 fn config_from(j: &Json) -> Result<TraceConfig> {
@@ -563,6 +729,10 @@ fn config_from(j: &Json) -> Result<TraceConfig> {
             .context("config.hw")?,
         fleet: fleet_from(j.get("fleet").ok_or_else(|| anyhow!("config is missing 'fleet'"))?)
             .context("config.fleet")?,
+        fault_plan: match j.get("fault_plan") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(FaultPlan::from_json(p).context("config.fault_plan")?),
+        },
     })
 }
 
@@ -578,6 +748,17 @@ pub fn event_json(e: &TraceEvent) -> Json {
         TraceEvent::Drain { at } => {
             Json::obj(vec![("kind", Json::Str("drain".into())), ("at", Json::Num(*at))])
         }
+        TraceEvent::Fault(f) => Json::obj(vec![
+            ("kind", Json::Str("fault".into())),
+            ("at", Json::Num(f.at)),
+            ("fault", fault_event_json(&f.fault)),
+        ]),
+        TraceEvent::Decision(d) => Json::obj(vec![
+            ("kind", Json::Str("decision".into())),
+            ("at", Json::Num(d.at)),
+            ("tenant", Json::Num(d.tenant as f64)),
+            ("outcome", Json::Str(d.outcome.key().to_string())),
+        ]),
     }
 }
 
@@ -588,6 +769,17 @@ pub fn event_from(j: &Json) -> Result<TraceEvent> {
         )?)),
         "stats" => Ok(TraceEvent::Stats { at: j.f64_of("at")? }),
         "drain" => Ok(TraceEvent::Drain { at: j.f64_of("at")? }),
+        "fault" => Ok(TraceEvent::Fault(FaultRecord {
+            at: j.f64_of("at")?,
+            fault: fault_event_from(
+                j.get("fault").ok_or_else(|| anyhow!("fault event is missing 'fault'"))?,
+            )?,
+        })),
+        "decision" => Ok(TraceEvent::Decision(DecisionRecord {
+            at: j.f64_of("at")?,
+            tenant: j.u32_of("tenant")?,
+            outcome: Outcome::parse(j.str_of("outcome")?)?,
+        })),
         // Skipping an unknown event would silently shift every later
         // virtual timestamp — hard-error instead.
         k => bail!("unknown trace event kind '{k}'"),
@@ -619,16 +811,19 @@ mod tests {
             TraceEvent::Admit(Request::update(0, co, 64, 16, 2, 0x0123_4567_89AB_CDEF, 4e-4)),
             TraceEvent::Drain { at: 5e-4 },
         ];
-        Trace {
+        let mut t = Trace {
             version: TRACE_VERSION,
             config: TraceConfig {
                 hw: HwConfig::alveo_u250(),
                 fleet: FleetConfig { n_devices: 2, ..FleetConfig::default() },
+                fault_plan: None,
             },
             events,
             responses: Vec::new(),
             stats: None,
-        }
+        };
+        t.version = t.min_version();
+        t
     }
 
     #[test]
@@ -669,9 +864,12 @@ mod tests {
     #[test]
     fn version_gate_rejects_future_traces() {
         let mut s = sample_trace().encode();
-        s = s.replace("\"version\": 1", "\"version\": 2");
+        s = s.replace("\"version\": 1", "\"version\": 3");
         let err = Trace::parse(&s).unwrap_err().to_string();
-        assert!(err.contains("version 2"), "{err}");
+        assert!(err.contains("version 3"), "{err}");
+        // Every version from 1 up to the current one still reads.
+        let v2 = sample_trace().encode().replace("\"version\": 1", "\"version\": 2");
+        assert!(Trace::parse(&v2).is_ok());
     }
 
     #[test]
@@ -705,5 +903,88 @@ mod tests {
         let back = Trace::parse(&t.encode()).unwrap();
         assert_eq!(back.responses, t.responses);
         assert_eq!(back.stats.as_ref().unwrap().diff(&stats), Vec::<String>::new());
+    }
+
+    #[test]
+    fn fault_free_traces_stay_version_1_with_no_v2_keys() {
+        let t = sample_trace();
+        assert_eq!(t.version, 1, "oldest sufficient version");
+        let s = t.encode();
+        assert!(s.contains("\"version\": 1"));
+        for key in ["fault_plan", "retries", "t_backoff", "outcome", "downtime"] {
+            assert!(!s.contains(key), "fault-free trace leaked v2 key '{key}'");
+        }
+    }
+
+    #[test]
+    fn v2_trace_round_trips_faults_decisions_and_plan() {
+        use crate::serve::{Degradation, FaultEvent, ShedReason};
+        let mut t = sample_trace();
+        t.config.fault_plan = Some(FaultPlan {
+            seed: 7,
+            events: vec![
+                FaultEvent::DeviceCrash { device: 1, at: 2e-4, recover_after: 1e-3 },
+                FaultEvent::TransientStall { device: 0, at: 1e-4, duration: 5e-5 },
+                FaultEvent::ArtifactCorruption {
+                    device: 0,
+                    at: 3e-4,
+                    model: ZooModel::B2,
+                    dataset: "CO".to_string(),
+                },
+            ],
+        });
+        t.events.push(TraceEvent::Fault(FaultRecord {
+            at: 2e-4,
+            fault: FaultEvent::DeviceCrash { device: 1, at: 2e-4, recover_after: 1e-3 },
+        }));
+        t.events.push(TraceEvent::Decision(DecisionRecord {
+            at: 3e-4,
+            tenant: 2,
+            outcome: Outcome::Degraded(Degradation::Int8),
+        }));
+        t.events.push(TraceEvent::Decision(DecisionRecord {
+            at: 4e-4,
+            tenant: 0,
+            outcome: Outcome::Shed(ShedReason::RetriesExhausted),
+        }));
+        t.version = t.min_version();
+        assert_eq!(t.version, 2, "fault content promotes the version");
+        let back = Trace::parse(&t.encode()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn fault_counters_in_responses_and_stats_round_trip() {
+        use crate::serve::{Coordinator, Degradation};
+        let mut t = sample_trace();
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(t.requests());
+        let mut r = c.responses[0];
+        r.retries = 2;
+        r.rerouted = true;
+        r.t_backoff = 1.5e-2;
+        r.outcome = Outcome::Degraded(Degradation::CappedFanout);
+        let mut s = stats;
+        s.retries = 2;
+        s.shed = 1;
+        s.downtime = 0.25;
+        t.responses = vec![r];
+        t.stats = Some(s);
+        t.version = t.min_version();
+        assert_eq!(t.version, 2);
+        let back = Trace::parse(&t.encode()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn non_default_fault_knobs_promote_and_round_trip() {
+        let mut t = sample_trace();
+        t.config.fleet.costs.max_retries = 7;
+        t.config.fleet.costs.deadline_s = 0.5;
+        t.version = t.min_version();
+        assert_eq!(t.version, 2, "swept fault knobs promote the version");
+        let back = Trace::parse(&t.encode()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.config.fleet.costs.max_retries, 7);
     }
 }

@@ -93,6 +93,35 @@ pub fn serve_summary(stats: &ServeStats) -> String {
             stats.requant_ops, stats.int8_bytes
         ));
     }
+    // The fault/degradation block renders only when something actually
+    // went wrong: a zero-fault run's summary stays byte-identical to
+    // the pre-fault format.
+    let faulted = stats.crashes
+        + stats.stalls
+        + stats.corruptions
+        + stats.retries
+        + stats.rerouted
+        + stats.degraded
+        + stats.shed
+        > 0
+        || stats.downtime > 0.0
+        || stats.t_backoff > 0.0;
+    if faulted {
+        out.push_str(&format!(
+            "  faults            {} crashes, {} stalls, {} corruptions ({:.3} s downtime)\n",
+            stats.crashes, stats.stalls, stats.corruptions, stats.downtime
+        ));
+        out.push_str(&format!(
+            "  retries           {} ({} re-routed, {} ms backoff)\n",
+            stats.retries,
+            stats.rerouted,
+            ms(stats.t_backoff)
+        ));
+        out.push_str(&format!(
+            "  degraded / shed   {} / {}\n",
+            stats.degraded, stats.shed
+        ));
+    }
     out.push_str(&format!(
         "  latency p50/p99   {} ms / {} ms\n",
         ms(stats.p50),
@@ -117,11 +146,14 @@ pub fn serve_summary(stats: &ServeStats) -> String {
 /// what fleet shape, and what the replay produced.
 pub fn replay_summary(trace: &Trace, replayed: &ServeStats) -> String {
     let (mut admits, mut stats_q, mut drains) = (0usize, 0usize, 0usize);
+    let (mut faults, mut decisions) = (0usize, 0usize);
     for e in &trace.events {
         match e {
             TraceEvent::Admit(_) => admits += 1,
             TraceEvent::Stats { .. } => stats_q += 1,
             TraceEvent::Drain { .. } => drains += 1,
+            TraceEvent::Fault(_) => faults += 1,
+            TraceEvent::Decision(_) => decisions += 1,
         }
     }
     let mut out = String::new();
@@ -136,6 +168,16 @@ pub fn replay_summary(trace: &Trace, replayed: &ServeStats) -> String {
         trace.responses.len(),
         trace.config.fleet.n_devices,
     ));
+    // v2-only line: a fault-free trace keeps the v1 header verbatim.
+    if faults + decisions > 0 || trace.config.fault_plan.is_some() {
+        out.push_str(&format!(
+            "  fault plan: {} scheduled event(s); {} fault(s) fired, \
+             {} degrade/shed decision(s) recorded\n",
+            trace.config.fault_plan.as_ref().map_or(0, |p| p.events.len()),
+            faults,
+            decisions,
+        ));
+    }
     out.push_str("replayed:\n");
     out.push_str(&serve_summary(replayed));
     out
@@ -202,6 +244,15 @@ mod tests {
             p50_full: 0.003,
             device_busy: 0.5,
             makespan: 1.0,
+            retries: 21,
+            rerouted: 14,
+            degraded: 15,
+            shed: 16,
+            crashes: 17,
+            stalls: 18,
+            corruptions: 19,
+            downtime: 0.25,
+            t_backoff: 0.004,
         };
         let s = serve_summary(&stats);
         assert!(s.contains("3 coalesced"), "{s}");
@@ -221,6 +272,9 @@ mod tests {
         assert!(s.contains("1.000 ms / 2.000 ms"), "{s}");
         assert!(s.contains("0.500 ms / 3.000 ms"), "{s}");
         assert!(s.contains("0.500 s over 1.000 s"), "{s}");
+        assert!(s.contains("17 crashes, 18 stalls, 19 corruptions (0.250 s downtime)"), "{s}");
+        assert!(s.contains("retries           21 (14 re-routed, 4.000 ms backoff)"), "{s}");
+        assert!(s.contains("degraded / shed   15 / 16"), "{s}");
     }
 
     #[test]
@@ -266,5 +320,54 @@ mod tests {
         assert!(!s.contains("updates"), "{s}");
         assert!(!s.contains("dirty subshards"), "{s}");
         assert!(!s.contains("quantized"), "{s}");
+        // A fault-free run also keeps the pre-fault summary shape.
+        assert!(!s.contains("faults"), "{s}");
+        assert!(!s.contains("retries"), "{s}");
+        assert!(!s.contains("shed"), "{s}");
+    }
+
+    #[test]
+    fn replay_summary_names_fault_plan_and_fired_events() {
+        use crate::config::HwConfig;
+        use crate::graph::dataset;
+        use crate::ir::ZooModel;
+        use crate::serve::{
+            DecisionRecord, FaultEvent, FaultPlan, FaultRecord, FleetConfig, Outcome, Request,
+            ShedReason,
+        };
+        let mut trace = Trace::from_requests(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            vec![Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 0.0)],
+        );
+        trace.config.fault_plan = Some(FaultPlan {
+            seed: 3,
+            events: vec![
+                FaultEvent::DeviceCrash { device: 0, at: 0.1, recover_after: 0.2 },
+                FaultEvent::TransientStall { device: 0, at: 0.3, duration: 0.1 },
+            ],
+        });
+        trace.events.push(TraceEvent::Fault(FaultRecord {
+            at: 0.1,
+            fault: FaultEvent::DeviceCrash { device: 0, at: 0.1, recover_after: 0.2 },
+        }));
+        trace.events.push(TraceEvent::Decision(DecisionRecord {
+            at: 0.15,
+            tenant: 0,
+            outcome: Outcome::Shed(ShedReason::NoHealthyDevice),
+        }));
+        let s = replay_summary(&trace, &ServeStats::default());
+        assert!(s.contains("3 events (1 admits, 0 stats queries, 0 drains)"), "{s}");
+        assert!(
+            s.contains("2 scheduled event(s); 1 fault(s) fired, 1 degrade/shed decision(s)"),
+            "{s}"
+        );
+        // A plain trace renders no fault-plan line at all.
+        let plain = Trace::from_requests(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            vec![Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 0.0)],
+        );
+        assert!(!replay_summary(&plain, &ServeStats::default()).contains("fault plan"));
     }
 }

@@ -236,6 +236,28 @@ impl Program {
         Ok(Program { n1, n2, model_name, graph_name, thresholds, scales, layers })
     }
 
+    /// Byte offset into [`Program::to_bytes`] output whose single-byte
+    /// flip is guaranteed to trip the loader's validation: the
+    /// scale-section flag of a GA03 binary, the threshold-section flag
+    /// of a GA02 one, and the magic itself for GA01. The fault
+    /// injector damages cached artifacts here so it can rely on
+    /// [`Program::from_bytes`] rejecting the result — exercising the
+    /// corrupted-artifact recovery path in situ rather than
+    /// simulating it.
+    pub fn corruption_offset(&self) -> usize {
+        let flag_at = 4 + 4 + 4 + 2 + self.model_name.len() + 2 + self.graph_name.len();
+        match (&self.thresholds, &self.scales) {
+            // GA01 has no section flags: flip the magic itself.
+            (None, None) => 0,
+            // GA02: the threshold-section flag.
+            (Some(_), None) => flag_at,
+            // GA03 writes an explicit empty threshold flag first.
+            (None, Some(_)) => flag_at + 1,
+            // GA03 with both: the scale flag follows the threshold body.
+            (Some(tt), Some(_)) => flag_at + 1 + tt.size_bytes() as usize,
+        }
+    }
+
     /// Serialized size (what Table 8 reports) without materializing.
     pub fn size_bytes(&self) -> u64 {
         let mut sz = 4 + 4 + 4; // magic + n1 + n2
@@ -418,6 +440,41 @@ mod tests {
         ga02.scales = None;
         assert_eq!(&ga02.to_bytes()[..4], b"GA02");
         assert_eq!(Program::from_bytes(&ga02.to_bytes()).unwrap(), ga02);
+    }
+
+    #[test]
+    fn corruption_offset_always_trips_the_loader() {
+        use crate::sparsity::{KernelMode, ThresholdEntry, ThresholdTable};
+        let tt = ThresholdTable {
+            dense_hi: 0.125,
+            sparse_lo: 0.0625,
+            entries: vec![ThresholdEntry {
+                layer_id: 1,
+                provisional: KernelMode::Spdmm,
+                feat_density: 1.0,
+                adj_density: 0.2,
+            }],
+        };
+        // One variant per wire format: GA01, GA02, GA03 without and
+        // with a threshold section.
+        let mut ga02 = sample_program();
+        ga02.thresholds = Some(tt.clone());
+        let mut ga03 = sample_program();
+        ga03.scales = Some(sample_scales());
+        let mut ga03_full = sample_program();
+        ga03_full.thresholds = Some(tt);
+        ga03_full.scales = Some(sample_scales());
+        for p in [sample_program(), ga02, ga03, ga03_full] {
+            let mut bytes = p.to_bytes();
+            assert!(Program::from_bytes(&bytes).is_ok());
+            let off = p.corruption_offset();
+            bytes[off] ^= 0xFF;
+            assert!(
+                Program::from_bytes(&bytes).is_err(),
+                "flip at {off} must be rejected ({:?})",
+                &bytes[..4]
+            );
+        }
     }
 
     #[test]

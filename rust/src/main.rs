@@ -9,8 +9,10 @@
 //! graphagile serve --requests 256 --devices 4   (multi-tenant fleet demo)
 //! graphagile serve --minibatch --fanout 25,10   (ego-network serving path)
 //! graphagile serve --streaming --update-every 8 (edge-churn + epoch serving)
+//! graphagile serve --fault-plan plan.json       (chaos run: seeded crashes,
+//!                                                stalls, artifact corruption)
 //! graphagile daemon [--port 0] [--devices N] [--trace trace.json]
-//!                                               (long-running TCP server;
+//!                   [--fault-plan plan.json]    (long-running TCP server;
 //!                                                records every accepted event)
 //! graphagile drive --port P [--requests 200] [--seed 7]
 //!                                               (scripted client workload,
@@ -275,6 +277,13 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// selectively invalidates stale whole-graph programs and keeps
 /// serving — the summary then shows the epoch/dirty-subshard/
 /// invalidation counters.
+///
+/// Chaos mode: `--fault-plan plan.json` loads a seeded fault plan
+/// (device crashes, transient stalls, cached-artifact corruption on
+/// the virtual clock); the fleet retries/re-routes with backoff,
+/// degrades over-deadline requests through the fidelity cascade, and
+/// the summary grows the fault counter block. Deterministic: the same
+/// plan and flags print the same stats.
 fn cmd_serve(args: &Args) -> Result<()> {
     use graphagile::serve::{Coordinator, CostModel, FleetConfig, Precision, Request};
     use graphagile::util::Rng;
@@ -338,6 +347,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+    if let Some(path) = args.get("fault-plan") {
+        let plan = graphagile::serve::FaultPlan::load(std::path::Path::new(path))?;
+        c.set_fault_plan(plan);
+    }
     let stats = c.run(reqs);
     println!(
         "served {} requests across 4 tenants on {} device(s):",
@@ -388,9 +401,12 @@ fn fleet_config(args: &Args) -> Result<graphagile::serve::FleetConfig> {
 /// written to `--trace` (default `trace.json`) for `graphagile replay`.
 ///
 /// Flags: `--port N` (default 0 = ephemeral; the bound port is printed
-/// on the `listening` line for scripts to scrape), `--trace PATH`, plus
-/// the `serve` fleet switches (`--devices`, `--no-affinity`,
-/// `--no-coalesce`, `--no-batch`, `--no-dynamic`, `--visit-overhead`).
+/// on the `listening` line for scripts to scrape), `--trace PATH`,
+/// `--fault-plan plan.json` (serve under a seeded fault plan; the
+/// recorded trace becomes a v2 document that replays the faults
+/// bit-identically), plus the `serve` fleet switches (`--devices`,
+/// `--no-affinity`, `--no-coalesce`, `--no-batch`, `--no-dynamic`,
+/// `--visit-overhead`).
 fn cmd_daemon(args: &Args) -> Result<()> {
     use graphagile::daemon::Daemon;
     let port: u16 = match args.get("port") {
@@ -398,7 +414,11 @@ fn cmd_daemon(args: &Args) -> Result<()> {
         Some(v) => v.parse().map_err(|_| anyhow!("bad --port {v}"))?,
     };
     let trace_path = args.get("trace").unwrap_or("trace.json").to_string();
-    let d = Daemon::bind(port, HwConfig::alveo_u250(), fleet_config(args)?)?;
+    let plan = match args.get("fault-plan") {
+        None => None,
+        Some(p) => Some(graphagile::serve::FaultPlan::load(std::path::Path::new(p))?),
+    };
+    let d = Daemon::bind_with_plan(port, HwConfig::alveo_u250(), fleet_config(args)?, plan)?;
     println!("graphagile daemon listening on 127.0.0.1:{}", d.port());
     let trace = d.serve()?;
     trace.save(std::path::Path::new(&trace_path))?;

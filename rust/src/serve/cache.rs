@@ -161,6 +161,27 @@ impl ProgramCache {
         self.programs.contains_key(key)
     }
 
+    /// The resident executable, if any — no compile, no counter changes
+    /// (the corruption fault serializes the artifact it is about to
+    /// damage).
+    pub fn peek(&self, key: &Key) -> Option<Arc<Executable>> {
+        self.programs.get(key).cloned()
+    }
+
+    /// Evict one compiled artifact (the corrupted-artifact recovery
+    /// path: a cached `.ga` that fails its load check is dropped and
+    /// recompiled on the next access). Returns whether it was present.
+    pub fn remove(&mut self, key: &Key) -> bool {
+        self.programs.remove(key).is_some()
+    }
+
+    /// Drop every compiled artifact — a crashed device rejoins with a
+    /// cold cache. Host-side tile counts survive (they live in host
+    /// memory, not on the device).
+    pub fn clear(&mut self) {
+        self.programs.clear();
+    }
+
     /// Selective invalidation after a streaming update: drop every
     /// whole-graph program (and cached tile counts) of `ds_key` with an
     /// epoch below `epoch` — they can never be hit again. Bucket
@@ -290,5 +311,25 @@ mod tests {
         cache.get_bucket(ZooModel::B1, shape, Precision::F32);
         cache.invalidate_whole_before("CO", 99);
         assert!(cache.contains(&Key::Bucket(ZooModel::B1, shape, Precision::F32)));
+    }
+
+    #[test]
+    fn remove_evicts_one_entry_and_clear_empties() {
+        let mut cache = ProgramCache::new(HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        cache.get(ZooModel::B1, &co);
+        cache.get(ZooModel::B2, &co);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
+        assert!(cache.remove(&key));
+        assert!(!cache.remove(&key), "second eviction is a no-op");
+        assert!(!cache.contains(&key));
+        assert_eq!(cache.len(), 1);
+        // Eviction forces a recompile (miss), not an error.
+        let (_, hit) = cache.get(ZooModel::B1, &co);
+        assert!(!hit);
+        cache.clear();
+        assert!(cache.is_empty());
+        // Host-side tile counts survive a device cold start.
+        assert!(!cache.tiles.is_empty());
     }
 }

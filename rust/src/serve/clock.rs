@@ -68,6 +68,19 @@ pub const UPDATE_PER_SUBSHARD_S: f64 = 1e-6;
 /// it for every edge of the graph).
 pub const UPDATE_PER_REBUILT_EDGE_S: f64 = 4e-9;
 
+/// Base of the exponential retry backoff charged on the virtual clock
+/// after a device crash kills an attempt: retry `k` waits
+/// `RETRY_BACKOFF_BASE_S * 2^(k-1)` before re-routing. Only consulted
+/// when a [`FaultPlan`](super::fault::FaultPlan) is active.
+pub const RETRY_BACKOFF_BASE_S: f64 = 5e-3;
+/// Retries after the first failed attempt before a request is shed
+/// with `ShedReason::RetriesExhausted`.
+pub const MAX_RETRIES: u32 = 3;
+/// Per-request completion deadline under a fault plan: a request whose
+/// best quote lands past `arrival + DEADLINE_S` enters the fidelity
+/// cascade (f32 -> int8, full fanout -> capped) before being served.
+pub const DEADLINE_S: f64 = 0.1;
+
 /// The host-side cost coefficients of the serving fleet, promoted from
 /// hard-coded constants so
 /// [`FleetConfig`](super::coordinator::FleetConfig) carries them and
@@ -84,6 +97,14 @@ pub struct CostModel {
     pub update_per_edge_s: f64,
     pub update_per_subshard_s: f64,
     pub update_per_rebuilt_edge_s: f64,
+    /// Exponential-backoff base after a crashed attempt (fault serving
+    /// only; the zero-fault path never reads it).
+    pub retry_backoff_base_s: f64,
+    /// Retries before a request is shed (fault serving only).
+    pub max_retries: u32,
+    /// Completion deadline that triggers the fidelity cascade (fault
+    /// serving only).
+    pub deadline_s: f64,
 }
 
 impl Default for CostModel {
@@ -97,6 +118,9 @@ impl Default for CostModel {
             update_per_edge_s: UPDATE_PER_EDGE_S,
             update_per_subshard_s: UPDATE_PER_SUBSHARD_S,
             update_per_rebuilt_edge_s: UPDATE_PER_REBUILT_EDGE_S,
+            retry_backoff_base_s: RETRY_BACKOFF_BASE_S,
+            max_retries: MAX_RETRIES,
+            deadline_s: DEADLINE_S,
         }
     }
 }
@@ -121,6 +145,21 @@ impl CostModel {
             + changed_edges as f64 * self.update_per_edge_s
             + dirty_subshards as f64 * self.update_per_subshard_s
             + rebuilt_edges as f64 * self.update_per_rebuilt_edge_s
+    }
+
+    /// Backoff charged before retry `k` (1-based): exponential from
+    /// [`Self::retry_backoff_base_s`].
+    pub fn backoff(&self, retry: u32) -> f64 {
+        self.retry_backoff_base_s * 2f64.powi(retry.saturating_sub(1) as i32)
+    }
+
+    /// Whether the fault knobs still sit at their defaults — the trace
+    /// writer emits them (and bumps the trace version) only when they
+    /// do not, so zero-fault traces stay byte-identical to v1.
+    pub fn fault_knobs_default(&self) -> bool {
+        self.retry_backoff_base_s == RETRY_BACKOFF_BASE_S
+            && self.max_retries == MAX_RETRIES
+            && self.deadline_s == DEADLINE_S
     }
 }
 
@@ -183,5 +222,19 @@ mod tests {
         let swept = CostModel { visit_overhead_s: 1e-3, ..CostModel::default() };
         assert!(swept.visit_overhead_s > m.visit_overhead_s);
         assert_eq!(swept.sample_cost(8, 16), m.sample_cost(8, 16));
+    }
+
+    #[test]
+    fn backoff_doubles_per_retry_and_knobs_track_defaults() {
+        let m = CostModel::default();
+        assert_eq!(m.backoff(1), RETRY_BACKOFF_BASE_S);
+        assert_eq!(m.backoff(2), 2.0 * RETRY_BACKOFF_BASE_S);
+        assert_eq!(m.backoff(3), 4.0 * RETRY_BACKOFF_BASE_S);
+        assert!(m.fault_knobs_default());
+        let swept = CostModel { max_retries: 7, ..CostModel::default() };
+        assert!(!swept.fault_knobs_default());
+        let swept = CostModel { retry_backoff_base_s: 1e-2, ..CostModel::default() };
+        assert!(!swept.fault_knobs_default());
+        assert_eq!(swept.backoff(2), 2e-2);
     }
 }

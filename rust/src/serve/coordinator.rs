@@ -23,14 +23,19 @@
 
 use super::cache::Key;
 use super::clock::{CostModel, VirtualClock};
-use super::device::Device;
+use super::device::{Device, FaultWindow, Quote};
 use super::dispatcher::{Dispatcher, Route};
+use super::fault::{
+    DecisionRecord, Degradation, FaultEvent, FaultPlan, FaultRecord, Outcome, ShedReason,
+    DEGRADED_FANOUT_CAP,
+};
 use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
 use crate::engine::{EngineInput, ExecProfile};
 use crate::exec::{CountingBackend, FunctionalExecutor, RustBackend};
 use crate::graph::{Dataset, GraphMeta, PartitionConfig, Sampler, TileCounts};
 use crate::ir::ZooModel;
+use crate::isa::Program;
 use crate::quant::Precision;
 use crate::sim::{simulate, simulate_dynamic};
 use crate::stream::{ChurnGenerator, ChurnSpec, DynamicGraph};
@@ -214,6 +219,18 @@ pub struct Response {
     pub invalidated: u32,
     /// Whether this update triggered an overlay compaction.
     pub compacted: bool,
+    /// Crashed attempts retried (0 on the fault-free path).
+    pub retries: u32,
+    /// Whether the serving device differs from the first device routed
+    /// to — a retry landed the work somewhere else.
+    pub rerouted: bool,
+    /// Total exponential-backoff pause charged to this request across
+    /// its retries (seconds on the virtual clock).
+    pub t_backoff: f64,
+    /// Terminal state: completed at full fidelity, degraded down the
+    /// fidelity cascade, or shed with a named reason. Always
+    /// `Completed` on the fault-free path.
+    pub outcome: Outcome,
 }
 
 impl Response {
@@ -247,9 +264,9 @@ impl Response {
             tenant, model, device, cache_hit, coalesced, batched, minibatch,
             sampled_vertices, sampled_edges, remaps, precision, quant_visits,
             requant_ops, int8_bytes, update, epoch, dirty_subshards,
-            rebuilt_edges, invalidated, compacted,
+            rebuilt_edges, invalidated, compacted, retries, rerouted, outcome,
         );
-        cmp_f64!(t_compile, t_sample, t_exec, t_queue, latency, t_update);
+        cmp_f64!(t_compile, t_sample, t_exec, t_queue, latency, t_update, t_backoff);
         out
     }
 }
@@ -306,6 +323,25 @@ pub struct ServeStats {
     /// Sum of execution seconds across devices.
     pub device_busy: f64,
     pub makespan: f64,
+    /// Crashed attempts retried, summed over all requests.
+    pub retries: u64,
+    /// Requests whose serving device differs from their first route.
+    pub rerouted: u64,
+    /// Requests that completed down the fidelity cascade.
+    pub degraded: u64,
+    /// Requests shed with a named [`ShedReason`].
+    pub shed: u64,
+    /// Device-crash events fired from the fault plan.
+    pub crashes: u64,
+    /// Transient-stall events fired from the fault plan.
+    pub stalls: u64,
+    /// Armed artifact corruptions that bit (evicted a cached program).
+    pub corruptions: u64,
+    /// Scheduled device downtime summed over fired finite crashes
+    /// (seconds; permanent crashes contribute nothing finite).
+    pub downtime: f64,
+    /// Backoff pause charged across all retried requests (seconds).
+    pub t_backoff: f64,
 }
 
 impl ServeStats {
@@ -345,8 +381,11 @@ impl ServeStats {
         cmp!(remaps, quantized, quant_visits, requant_ops, int8_bytes);
         // Streaming-update family.
         cmp!(updates, max_epoch, dirty_subshards, rebuilt_edges, invalidated, compactions);
+        // Fault / degradation family.
+        cmp!(retries, rerouted, degraded, shed, crashes, stalls, corruptions);
         // Latency family (bit-exact).
         cmp_f64!(p50, p99, mean, p50_mini, p50_full, device_busy, makespan);
+        cmp_f64!(downtime, t_backoff);
         out
     }
 }
@@ -488,6 +527,97 @@ impl StreamState {
     }
 }
 
+/// Runtime state of an installed [`FaultPlan`]: the event calendar
+/// sorted by fire time, per-event fired flags (a crashed quote fires
+/// its event ahead of the arrival cursor, and the cursor must not fire
+/// it again), armed-but-unbitten corruptions, and the fault/decision
+/// logs a recorded trace serializes.
+struct FaultState {
+    plan: FaultPlan,
+    /// Fired flag per `plan.events` index.
+    fired: Vec<bool>,
+    /// Event indices sorted by (fire time, index) — the cursor order.
+    order: Vec<usize>,
+    /// Cursor into `order`: events before it fired via `advance_to`.
+    next: usize,
+    crashes: u64,
+    stalls: u64,
+    corruptions: u64,
+    /// Scheduled downtime of fired finite crashes (seconds).
+    downtime: f64,
+    /// Corruptions waiting for their target artifact to be resident:
+    /// `(event index, device, model, dataset key)`.
+    armed: Vec<(usize, usize, ZooModel, String)>,
+    fault_log: Vec<FaultRecord>,
+    decisions: Vec<DecisionRecord>,
+}
+
+impl FaultState {
+    fn new(plan: FaultPlan) -> FaultState {
+        let mut order: Vec<usize> = (0..plan.events.len()).collect();
+        order.sort_by(|&a, &b| {
+            plan.events[a]
+                .at()
+                .total_cmp(&plan.events[b].at())
+                .then(a.cmp(&b))
+        });
+        FaultState {
+            fired: vec![false; plan.events.len()],
+            order,
+            next: 0,
+            crashes: 0,
+            stalls: 0,
+            corruptions: 0,
+            downtime: 0.0,
+            armed: Vec::new(),
+            fault_log: Vec::new(),
+            decisions: Vec::new(),
+            plan,
+        }
+    }
+
+    /// Fire one event (idempotent: a crash already fired by the quote
+    /// path is skipped when the arrival cursor reaches it). Crashes
+    /// wipe the device cold; corruptions arm and bite later, on the
+    /// next access to their target artifact.
+    fn fire(&mut self, i: usize, devices: &mut [Device]) {
+        if self.fired[i] {
+            return;
+        }
+        self.fired[i] = true;
+        let e = self.plan.events[i].clone();
+        match &e {
+            FaultEvent::DeviceCrash { device, at, recover_after } => {
+                self.crashes += 1;
+                if *recover_after > 0.0 {
+                    self.downtime += recover_after;
+                }
+                if let Some(d) = devices.get_mut(*device as usize) {
+                    d.crash_wipe(*at);
+                }
+            }
+            FaultEvent::TransientStall { .. } => self.stalls += 1,
+            FaultEvent::ArtifactCorruption { device, model, dataset, .. } => {
+                self.armed
+                    .push((i, *device as usize, *model, dataset.clone()));
+            }
+        }
+        self.fault_log.push(FaultRecord { at: e.at(), fault: e });
+    }
+
+    /// Fire every not-yet-fired event scheduled at or before `now`.
+    fn advance_to(&mut self, now: f64, devices: &mut [Device]) {
+        while self.next < self.order.len() {
+            let i = self.order[self.next];
+            if self.plan.events[i].at() > now {
+                break;
+            }
+            self.next += 1;
+            self.fire(i, devices);
+        }
+    }
+}
+
 /// Multi-device coordinator.
 pub struct Coordinator {
     devices: Vec<Device>,
@@ -507,6 +637,12 @@ pub struct Coordinator {
     hw: HwConfig,
     dynamic: bool,
     costs: CostModel,
+    /// Active fault plan, if any ([`Coordinator::set_fault_plan`]).
+    /// `None` — including after installing an *empty* plan — leaves
+    /// every historical code path untouched: routing, coalescing,
+    /// micro-batching and all response fields behave (and serialize)
+    /// exactly as before faults existed.
+    fault: Option<FaultState>,
     pub responses: Vec<Response>,
 }
 
@@ -538,8 +674,70 @@ impl Coordinator {
             hw,
             dynamic: cfg.dynamic,
             costs: cfg.costs,
+            fault: None,
             responses: Vec::new(),
         }
+    }
+
+    /// Install a seeded fault plan before serving: each device gets its
+    /// outage calendar (crash/stall windows) for quoting, and admission
+    /// switches to the retry/re-route/degrade path. An empty plan
+    /// installs nothing — the fault-free path stays byte-identical.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        if plan.events.is_empty() {
+            self.fault = None;
+            return;
+        }
+        for d in &mut self.devices {
+            let windows: Vec<FaultWindow> = plan
+                .events
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| match e {
+                    FaultEvent::DeviceCrash { device, at, recover_after }
+                        if *device as usize == d.id =>
+                    {
+                        let until = if *recover_after > 0.0 {
+                            at + recover_after
+                        } else {
+                            f64::INFINITY
+                        };
+                        Some(FaultWindow { from: *at, until, crash: true, event: i })
+                    }
+                    FaultEvent::TransientStall { device, at, duration }
+                        if *device as usize == d.id =>
+                    {
+                        Some(FaultWindow {
+                            from: *at,
+                            until: at + duration,
+                            crash: false,
+                            event: i,
+                        })
+                    }
+                    _ => None,
+                })
+                .collect();
+            d.set_fault_windows(windows);
+        }
+        self.fault = Some(FaultState::new(plan));
+    }
+
+    /// The installed fault plan (None without one — or with an empty
+    /// one, which installs nothing).
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref().map(|f| &f.plan)
+    }
+
+    /// Fault events fired so far, in fire order — what a recorded
+    /// trace serializes as v2 `fault` events.
+    pub fn fault_log(&self) -> &[FaultRecord] {
+        self.fault.as_ref().map_or(&[], |f| f.fault_log.as_slice())
+    }
+
+    /// Degradation/shed decisions taken so far, in admission order —
+    /// what a recorded trace serializes as v2 `decision` events.
+    pub fn decision_log(&self) -> &[DecisionRecord] {
+        self.fault.as_ref().map_or(&[], |f| f.decisions.as_slice())
     }
 
     pub fn n_devices(&self) -> usize {
@@ -560,11 +758,18 @@ impl Coordinator {
     /// touched a compiler; update requests are not inference and are
     /// excluded).
     pub fn hit_rate(&self) -> f64 {
-        let served = self.responses.iter().filter(|r| !r.update).count();
+        let served = self
+            .responses
+            .iter()
+            .filter(|r| !r.update && !r.outcome.is_shed())
+            .count();
         if served == 0 {
             return 0.0;
         }
-        self.responses.iter().filter(|r| !r.update && r.cache_hit).count() as f64
+        self.responses
+            .iter()
+            .filter(|r| !r.update && !r.outcome.is_shed() && r.cache_hit)
+            .count() as f64
             / served as f64
     }
 
@@ -610,13 +815,17 @@ impl Coordinator {
         for d in &mut self.devices {
             d.retire_started(rq.arrival);
         }
-        let resp = match &rq.target {
-            Target::FullGraph => self.serve_full(&rq),
-            Target::MiniBatch { targets, fanout, seed } => {
-                self.serve_minibatch(&rq, targets, fanout, *seed)
-            }
-            Target::Update { inserts, deletes, grow, seed } => {
-                self.serve_update(&rq, *inserts, *deletes, *grow, *seed)
+        let resp = if self.fault.is_some() {
+            self.admit_faulty(&rq)
+        } else {
+            match &rq.target {
+                Target::FullGraph => self.serve_full(&rq),
+                Target::MiniBatch { targets, fanout, seed } => {
+                    self.serve_minibatch(&rq, targets, fanout, *seed)
+                }
+                Target::Update { inserts, deletes, grow, seed } => {
+                    self.serve_update(&rq, *inserts, *deletes, *grow, *seed)
+                }
             }
         };
         self.clock.advance_to(rq.arrival + resp.latency);
@@ -654,6 +863,10 @@ impl Coordinator {
             rebuilt_edges: 0,
             invalidated: 0,
             compacted: false,
+            retries: 0,
+            rerouted: false,
+            t_backoff: 0.0,
+            outcome: Outcome::Completed,
         }
     }
 
@@ -829,6 +1042,370 @@ impl Coordinator {
         }
     }
 
+    /// [`Coordinator::admit`] under an active fault plan: fire every
+    /// event scheduled at or before this arrival, then serve through
+    /// the retry/re-route/degrade path. Updates are host-side work and
+    /// take their normal path — device faults cannot touch them.
+    fn admit_faulty(&mut self, rq: &Request) -> Response {
+        {
+            let f = self.fault.as_mut().expect("admit_faulty requires fault state");
+            f.advance_to(rq.arrival, &mut self.devices);
+        }
+        match &rq.target {
+            Target::FullGraph => self.serve_full_faulty(rq),
+            Target::MiniBatch { targets, fanout, seed } => {
+                self.serve_minibatch_faulty(rq, targets, fanout, *seed)
+            }
+            Target::Update { inserts, deletes, grow, seed } => {
+                self.serve_update(rq, *inserts, *deletes, *grow, *seed)
+            }
+        }
+    }
+
+    /// Log a non-`Completed` outcome (completions are the common case
+    /// and are not logged, so the v2 trace stays compact).
+    fn record_decision(&mut self, rq: &Request, outcome: Outcome) {
+        if outcome == Outcome::Completed {
+            return;
+        }
+        let f = self
+            .fault
+            .as_mut()
+            .expect("decisions only exist under a fault plan");
+        f.decisions.push(DecisionRecord { at: rq.arrival, tenant: rq.tenant, outcome });
+    }
+
+    /// A shed request: no device work; the outcome is named and logged.
+    /// Its pseudo-latency is the host time burned discovering the shed
+    /// (sampling plus backoff). Shed responses stay out of the latency
+    /// percentiles and the completed count.
+    #[allow(clippy::too_many_arguments)]
+    fn shed(
+        &mut self,
+        rq: &Request,
+        epoch: u32,
+        reason: ShedReason,
+        minibatch: bool,
+        t_sample: f64,
+        sampled_vertices: u64,
+        sampled_edges: u64,
+        retries: u32,
+        t_backoff: f64,
+    ) -> Response {
+        let outcome = Outcome::Shed(reason);
+        self.record_decision(rq, outcome);
+        Response {
+            device: u32::MAX,
+            t_sample,
+            latency: t_sample + t_backoff,
+            minibatch,
+            sampled_vertices,
+            sampled_edges,
+            retries,
+            t_backoff,
+            outcome,
+            ..Self::base_response(rq, epoch)
+        }
+    }
+
+    /// The corruption fault's bite: if an armed corruption targets this
+    /// device's resident whole-graph artifact, serialize it, flip the
+    /// byte [`Program::corruption_offset`] points at, let the loader's
+    /// own validation reject the damage, and evict — the caller's
+    /// `prepare` then recompiles and the request completes anyway.
+    fn maybe_corrupt(&mut self, dev: usize, key: &Key) {
+        let Key::Whole(model, ds_key, _, _) = *key else {
+            return; // bucket programs are not corruption targets
+        };
+        let Some(slot) = self.fault.as_ref().and_then(|f| {
+            f.armed
+                .iter()
+                .position(|(_, d, m, g)| *d == dev && *m == model && g == ds_key)
+        }) else {
+            return;
+        };
+        let Some(exe) = self.devices[dev].cached(key) else {
+            return; // nothing resident yet — the corruption keeps waiting
+        };
+        let mut bytes = exe.program.to_bytes();
+        bytes[exe.program.corruption_offset()] ^= 0xFF;
+        if Program::from_bytes(&bytes).is_ok() {
+            // Unreachable by construction — the offset lands in the
+            // magic or a section flag — but refuse to evict on a flip
+            // the loader would have accepted.
+            return;
+        }
+        self.devices[dev].evict(key);
+        let f = self
+            .fault
+            .as_mut()
+            .expect("an armed corruption implies fault state");
+        f.corruptions += 1;
+        f.armed.remove(slot);
+    }
+
+    /// Whole-graph serving under a fault plan: quote every attempt
+    /// against the device's outage calendar, retry crashed attempts
+    /// with exponential backoff (re-routing to whichever device comes
+    /// up first), degrade to int8 when the best quote lands past the
+    /// deadline, and shed — with a named reason — only when no healthy
+    /// device exists or the retry budget is spent.
+    ///
+    /// No coalescing here: a rider on a job that a later-quoted crash
+    /// kills would be silently lost, which is exactly the invariant
+    /// this path defends (every accepted request reaches a terminal
+    /// outcome).
+    fn serve_full_faulty(&mut self, rq: &Request) -> Response {
+        let snapshot = self.streams.get_mut(rq.dataset.key).map(|st| st.snapshot());
+        let epoch = snapshot.as_ref().map_or(0, |s| s.0);
+        let deadline = rq.arrival + self.costs.deadline_s;
+        let mut precision = rq.precision;
+        let mut retries = 0u32;
+        let mut t_backoff = 0.0;
+        // Earliest time the next attempt may start (arrival, pushed
+        // forward by each backoff pause).
+        let mut floor = rq.arrival;
+        let mut first_dev: Option<usize> = None;
+        loop {
+            let key = Key::Whole(rq.model, rq.dataset.key, epoch, precision);
+            let Some(dev) = self.dispatcher.route_healthy(&self.devices, &key, floor) else {
+                return self.shed(
+                    rq, epoch, ShedReason::NoHealthyDevice, false, 0.0, 0, 0, retries,
+                    t_backoff,
+                );
+            };
+            if first_dev.is_none() {
+                first_dev = Some(dev);
+            }
+            self.maybe_corrupt(dev, &key);
+            let snap_ref = snapshot.as_ref().map(|(_, m, t)| (m, t));
+            let (exe, ready, hit) =
+                self.devices[dev].prepare(floor, rq.model, &rq.dataset, epoch, snap_ref, precision);
+            let t_exec = {
+                let mut exec_seconds =
+                    memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
+                exec_seconds(&exe)
+            };
+            match self.devices[dev].quote(ready, t_exec) {
+                Quote::Crashed { start, at, event } => {
+                    // The crash fires now — possibly ahead of the
+                    // arrival cursor — and whatever this attempt ran
+                    // since `start` is wasted device time the retry
+                    // pays for. The direct wipe also drops anything
+                    // compiled *for* the doomed attempt, even when the
+                    // event itself already fired: a recovered device
+                    // rejoins cold.
+                    {
+                        let f = self
+                            .fault
+                            .as_mut()
+                            .expect("a crashed quote implies fault state");
+                        f.fire(event, &mut self.devices);
+                    }
+                    self.devices[dev].crash_wipe(at);
+                    self.devices[dev].charge_wasted(start, at);
+                    if retries >= self.costs.max_retries {
+                        return self.shed(
+                            rq, epoch, ShedReason::RetriesExhausted, false, 0.0, 0, 0,
+                            retries, t_backoff,
+                        );
+                    }
+                    retries += 1;
+                    let pause = self.costs.backoff(retries);
+                    t_backoff += pause;
+                    floor = at.max(floor) + pause;
+                }
+                Quote::Done { start, done } => {
+                    if done > deadline && precision == Precision::F32 {
+                        // Fidelity cascade, rung one: the int8 twin
+                        // compiles smaller and executes faster (GA03).
+                        precision = Precision::Int8;
+                        continue;
+                    }
+                    let j = self.devices[dev].commit(key, ready, start, done, t_exec, hit);
+                    let job = self.devices[dev].jobs[j];
+                    let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                    let outcome = if precision != rq.precision {
+                        Outcome::Degraded(Degradation::Int8)
+                    } else {
+                        Outcome::Completed
+                    };
+                    self.record_decision(rq, outcome);
+                    return Response {
+                        device: dev as u32,
+                        t_compile: job.ready - floor,
+                        t_exec: job.t_exec,
+                        t_queue: job.start - job.ready,
+                        latency: job.done - rq.arrival,
+                        cache_hit: job.cache_hit,
+                        remaps: cost.remaps,
+                        precision,
+                        quant_visits: cost.quant_blocks,
+                        requant_ops: cost.requant_ops,
+                        int8_bytes: cost.int8_bytes,
+                        retries,
+                        rerouted: first_dev != Some(dev),
+                        t_backoff,
+                        outcome,
+                        ..Self::base_response(rq, epoch)
+                    };
+                }
+            }
+        }
+    }
+
+    /// Sample one ego-net for the fault path (streamed epoch or static
+    /// sampler, exactly as [`Coordinator::serve_minibatch`] does) and
+    /// return its modeled footprint: (vertices, edges, bucket, epoch).
+    fn sample_shape(
+        &mut self,
+        rq: &Request,
+        targets: &[u32],
+        fanout: &[u32],
+        seed: u64,
+    ) -> (u64, u64, BucketShape, u32) {
+        let (ego, epoch) = if let Some(st) = self.streams.get(rq.dataset.key) {
+            (st.dyng.sample(targets, fanout, seed), st.dyng.epoch())
+        } else {
+            let sampler = self
+                .samplers
+                .entry(rq.dataset.key)
+                .or_insert_with(|| Sampler::new(rq.dataset.materialize().gcn_normalized()));
+            (sampler.sample(targets, fanout, seed), 0)
+        };
+        let shape = BucketShape::for_graph(&ego.graph.meta);
+        (ego.n() as u64, ego.m() as u64, shape, epoch)
+    }
+
+    /// Mini-batch serving under a fault plan. Sampling is host-side
+    /// and fault-free; the device visit is quoted and retried like
+    /// whole-graph work. The fidelity cascade has two rungs here: int8
+    /// first, then a re-sample with every hop's fanout clamped to
+    /// [`DEGRADED_FANOUT_CAP`] (the smaller ego-net quotes a sooner
+    /// completion). No micro-batching, for the same
+    /// lost-rider reason [`Coordinator::serve_full_faulty`] gives for
+    /// coalescing.
+    fn serve_minibatch_faulty(
+        &mut self,
+        rq: &Request,
+        targets: &[u32],
+        fanout: &[u32],
+        seed: u64,
+    ) -> Response {
+        let deadline = rq.arrival + self.costs.deadline_s;
+        let (mut sampled_v, mut sampled_e, mut shape, epoch) =
+            self.sample_shape(rq, targets, fanout, seed);
+        let mut t_sample = self.costs.sample_cost(sampled_v, sampled_e);
+        let mut precision = rq.precision;
+        let mut capped = false;
+        let mut retries = 0u32;
+        let mut t_backoff = 0.0;
+        let mut floor = rq.arrival + t_sample;
+        let mut first_dev: Option<usize> = None;
+        loop {
+            let key = Key::Bucket(rq.model, shape, precision);
+            let Some(dev) = self.dispatcher.route_healthy(&self.devices, &key, floor) else {
+                return self.shed(
+                    rq, epoch, ShedReason::NoHealthyDevice, true, t_sample, sampled_v,
+                    sampled_e, retries, t_backoff,
+                );
+            };
+            if first_dev.is_none() {
+                first_dev = Some(dev);
+            }
+            let (exe, ready, hit) =
+                self.devices[dev].prepare_bucket(floor, rq.model, shape, precision);
+            let t_item = {
+                let mut exec_seconds =
+                    memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
+                exec_seconds(&exe)
+            };
+            let t_visit = self.costs.visit_overhead_s + t_item;
+            match self.devices[dev].quote(ready, t_visit) {
+                Quote::Crashed { start, at, event } => {
+                    {
+                        let f = self
+                            .fault
+                            .as_mut()
+                            .expect("a crashed quote implies fault state");
+                        f.fire(event, &mut self.devices);
+                    }
+                    self.devices[dev].crash_wipe(at);
+                    self.devices[dev].charge_wasted(start, at);
+                    if retries >= self.costs.max_retries {
+                        return self.shed(
+                            rq, epoch, ShedReason::RetriesExhausted, true, t_sample,
+                            sampled_v, sampled_e, retries, t_backoff,
+                        );
+                    }
+                    retries += 1;
+                    let pause = self.costs.backoff(retries);
+                    t_backoff += pause;
+                    floor = at.max(floor) + pause;
+                }
+                Quote::Done { start, done } => {
+                    if done > deadline {
+                        if precision == Precision::F32 {
+                            precision = Precision::Int8;
+                            continue;
+                        }
+                        if !capped && fanout.iter().any(|&h| h > DEGRADED_FANOUT_CAP) {
+                            // Rung two: re-sample a capped ego-net. The
+                            // original sample was real host work — its
+                            // cost stays on the bill.
+                            capped = true;
+                            let capped_fanout: Vec<u32> = fanout
+                                .iter()
+                                .map(|&h| h.min(DEGRADED_FANOUT_CAP))
+                                .collect();
+                            let (v, e, s, _) =
+                                self.sample_shape(rq, targets, &capped_fanout, seed);
+                            sampled_v = v;
+                            sampled_e = e;
+                            shape = s;
+                            let extra = self.costs.sample_cost(v, e);
+                            t_sample += extra;
+                            floor += extra;
+                            continue;
+                        }
+                    }
+                    let j = self.devices[dev].commit(key, ready, start, done, t_visit, hit);
+                    let job = self.devices[dev].jobs[j];
+                    let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                    let outcome = match (precision != rq.precision, capped) {
+                        (false, false) => Outcome::Completed,
+                        (true, false) => Outcome::Degraded(Degradation::Int8),
+                        (false, true) => Outcome::Degraded(Degradation::CappedFanout),
+                        (true, true) => Outcome::Degraded(Degradation::Int8CappedFanout),
+                    };
+                    self.record_decision(rq, outcome);
+                    return Response {
+                        device: dev as u32,
+                        t_compile: (job.ready - floor).max(0.0),
+                        t_sample,
+                        t_exec: job.t_exec,
+                        t_queue: job.start - job.ready,
+                        latency: job.done - rq.arrival,
+                        cache_hit: job.cache_hit,
+                        minibatch: true,
+                        sampled_vertices: sampled_v,
+                        sampled_edges: sampled_e,
+                        remaps: cost.remaps,
+                        precision,
+                        quant_visits: cost.quant_blocks,
+                        requant_ops: cost.requant_ops,
+                        int8_bytes: cost.int8_bytes,
+                        retries,
+                        rerouted: first_dev != Some(dev),
+                        t_backoff,
+                        outcome,
+                        ..Self::base_response(rq, epoch)
+                    };
+                }
+            }
+        }
+    }
+
     /// Apply one streaming update batch: synthesize the churn
     /// deterministically from the request descriptor, apply it to the
     /// dataset's dynamic graph (creating the stream on first use),
@@ -952,18 +1529,19 @@ impl Coordinator {
             return ServeStats::default();
         }
         // Latency statistics cover inference responses only: an
-        // update's modeled apply cost is not a serving latency.
+        // update's modeled apply cost is not a serving latency, and a
+        // shed request's pseudo-latency is not a completion.
         let mut lats: Vec<f64> = self
             .responses
             .iter()
-            .filter(|r| !r.update)
+            .filter(|r| !r.update && !r.outcome.is_shed())
             .map(|r| r.latency)
             .collect();
         lats.sort_by(f64::total_cmp);
         let class = |mini: bool| -> Vec<f64> {
             self.responses
                 .iter()
-                .filter(|r| !r.update && r.minibatch == mini)
+                .filter(|r| !r.update && !r.outcome.is_shed() && r.minibatch == mini)
                 .map(|r| r.latency)
                 .collect()
         };
@@ -973,7 +1551,11 @@ impl Coordinator {
             lats.iter().sum::<f64>() / lats.len() as f64
         };
         ServeStats {
-            completed: self.responses.len() as u64,
+            completed: self
+                .responses
+                .iter()
+                .filter(|r| !r.outcome.is_shed())
+                .count() as u64,
             cache_hits: self.responses.iter().filter(|r| r.cache_hit).count() as u64,
             coalesced: self.responses.iter().filter(|r| r.coalesced).count() as u64,
             minibatched: self.responses.iter().filter(|r| r.minibatch).count() as u64,
@@ -994,7 +1576,7 @@ impl Coordinator {
             quantized: self
                 .responses
                 .iter()
-                .filter(|r| !r.update && r.precision == Precision::Int8)
+                .filter(|r| !r.update && !r.outcome.is_shed() && r.precision == Precision::Int8)
                 .count() as u64,
             quant_visits: self
                 .responses
@@ -1027,6 +1609,19 @@ impl Coordinator {
             p50_full: class_p50(class(false)),
             device_busy: self.devices.iter().map(|d| d.busy).sum(),
             makespan: self.clock.now(),
+            retries: self.responses.iter().map(|r| r.retries as u64).sum(),
+            rerouted: self.responses.iter().filter(|r| r.rerouted).count() as u64,
+            degraded: self
+                .responses
+                .iter()
+                .filter(|r| r.outcome.is_degraded())
+                .count() as u64,
+            shed: self.responses.iter().filter(|r| r.outcome.is_shed()).count() as u64,
+            crashes: self.fault.as_ref().map_or(0, |f| f.crashes),
+            stalls: self.fault.as_ref().map_or(0, |f| f.stalls),
+            corruptions: self.fault.as_ref().map_or(0, |f| f.corruptions),
+            downtime: self.fault.as_ref().map_or(0.0, |f| f.downtime),
+            t_backoff: self.responses.iter().map(|r| r.t_backoff).sum(),
         }
     }
 }
@@ -1679,5 +2274,343 @@ mod tests {
         assert_eq!(c.hit_rate(), 0.0);
         // The virtual clock still advanced through the apply costs.
         assert!(stats.makespan > 0.0);
+    }
+
+    #[test]
+    fn stats_diff_names_fault_counters() {
+        let a = ServeStats {
+            retries: 3,
+            rerouted: 2,
+            degraded: 1,
+            shed: 1,
+            crashes: 2,
+            stalls: 1,
+            corruptions: 1,
+            downtime: 0.5,
+            t_backoff: 0.015,
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        assert!(a.diff(&b).is_empty());
+        b.retries = 4;
+        b.shed = 0;
+        b.downtime = 0.25;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().any(|s| s.contains("retries: 3 != 4")), "{d:?}");
+        assert!(d.iter().any(|s| s.contains("shed: 1 != 0")), "{d:?}");
+        assert!(d.iter().any(|s| s.contains("downtime: 0.5 != 0.25")), "{d:?}");
+    }
+
+    #[test]
+    fn response_diff_names_fault_fields() {
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.run(mixed_workload(2, 2));
+        let a = c.responses[0];
+        let mut b = a;
+        b.retries = 2;
+        b.rerouted = true;
+        b.t_backoff = 1e-3;
+        b.outcome = Outcome::Shed(ShedReason::RetriesExhausted);
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 4, "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("retries:")), "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("rerouted:")), "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("t_backoff:")), "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("outcome:")), "{d:?}");
+    }
+
+    #[test]
+    fn empty_fault_plan_serves_byte_identically() {
+        let run = |plan: Option<FaultPlan>| {
+            let cfg = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            if let Some(p) = plan {
+                c.set_fault_plan(p);
+            }
+            let mut reqs = mixed_workload(24, 13);
+            reqs.extend(minibatch_workload(12, 13, 1e-4));
+            let stats = c.run(reqs);
+            let none = c.fault_plan().is_none();
+            (stats, c.responses, none)
+        };
+        let (s0, r0, _) = run(None);
+        let (s1, r1, none) = run(Some(FaultPlan::empty()));
+        assert_eq!(s0, s1);
+        assert_eq!(r0, r1);
+        assert!(none, "an empty plan must not activate the fault path");
+        assert!(r1
+            .iter()
+            .all(|r| r.outcome == Outcome::Completed && r.retries == 0 && !r.rerouted));
+    }
+
+    #[test]
+    fn crash_mid_execution_retries_on_another_device() {
+        let co = dataset("CO").unwrap();
+        let cfg = FleetConfig {
+            n_devices: 2,
+            costs: CostModel { deadline_s: f64::INFINITY, ..CostModel::default() },
+            ..FleetConfig::default()
+        };
+        // Probe run: when does the second (cache-warm) request execute?
+        let mut probe = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        let r0 = probe.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        let t1 = r0.latency + 1.0;
+        let r1 = probe.admit(Request::full(1, ZooModel::B1, co, t1));
+        assert!(r1.cache_hit && r1.t_exec > 0.0);
+        // Same workload, but device 0 dies halfway through that exec.
+        let crash_at = t1 + r1.t_exec * 0.5;
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c.set_fault_plan(FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent::DeviceCrash {
+                device: 0,
+                at: crash_at,
+                recover_after: 1.0,
+            }],
+        });
+        let a = c.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        assert_eq!(a.outcome, Outcome::Completed);
+        assert_eq!(a.device, 0, "the calendar is clear at time zero");
+        let b = c.admit(Request::full(1, ZooModel::B1, co, t1));
+        assert_eq!(b.outcome, Outcome::Completed);
+        assert_eq!(b.retries, 1);
+        assert!(b.rerouted);
+        assert_eq!(b.device, 1, "the retry re-routes to the healthy device");
+        assert!(!b.cache_hit, "the rescue device is cold and recompiles");
+        assert_eq!(b.t_backoff, CostModel::default().backoff(1));
+        let s = c.stats();
+        assert_eq!(s.crashes, 1);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.rerouted, 1);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.downtime, 1.0);
+        assert_eq!(c.fault_log().len(), 1);
+        // The crashed device's window ends; the fleet keeps serving.
+        let d = c.admit(Request::full(0, ZooModel::B1, co, crash_at + 1.5));
+        assert_eq!(d.outcome, Outcome::Completed);
+    }
+
+    #[test]
+    fn fleet_loss_sheds_with_named_reasons() {
+        let co = dataset("CO").unwrap();
+        // Permanent loss of the only device: nowhere to route.
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.set_fault_plan(FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent::DeviceCrash {
+                device: 0,
+                at: 0.0,
+                recover_after: -1.0,
+            }],
+        });
+        let r = c.admit(Request::full(3, ZooModel::B1, co, 0.1));
+        assert_eq!(r.outcome, Outcome::Shed(ShedReason::NoHealthyDevice));
+        assert_eq!(r.device, u32::MAX);
+        let s = c.stats();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.completed, 0, "a shed request never counts as completed");
+        assert_eq!(s.crashes, 1);
+        assert_eq!(s.p50, 0.0, "shed pseudo-latencies stay out of the percentiles");
+        assert_eq!(c.decision_log().len(), 1);
+        assert_eq!(c.decision_log()[0].tenant, 3);
+
+        // A zero-retry budget sheds on the first crashed attempt.
+        let costs = CostModel {
+            max_retries: 0,
+            deadline_s: f64::INFINITY,
+            ..CostModel::default()
+        };
+        let cfg = FleetConfig { costs, ..FleetConfig::default() };
+        let mut probe = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        let p = probe.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        // Crash inside the probe's execution window, so the quoted
+        // attempt crosses it instead of starting after recovery.
+        let crash_at = p.t_compile + p.t_exec * 0.5;
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c.set_fault_plan(FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent::DeviceCrash {
+                device: 0,
+                at: crash_at,
+                recover_after: 5.0,
+            }],
+        });
+        let r = c.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        assert_eq!(r.outcome, Outcome::Shed(ShedReason::RetriesExhausted));
+        assert_eq!(r.retries, 0, "a zero budget performs zero retries");
+        assert_eq!(c.stats().shed, 1);
+    }
+
+    #[test]
+    fn deadline_pressure_walks_the_fidelity_cascade() {
+        let co = dataset("CO").unwrap();
+        // A zero deadline forces the cascade on every request; a
+        // far-future stall keeps the fault path active without any
+        // actual outage.
+        let costs = CostModel { deadline_s: 0.0, ..CostModel::default() };
+        let cfg = FleetConfig { costs, ..FleetConfig::default() };
+        let idle_plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent::TransientStall {
+                device: 0,
+                at: 1e9,
+                duration: 1.0,
+            }],
+        };
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c.set_fault_plan(idle_plan.clone());
+        let full = c.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        assert_eq!(full.outcome, Outcome::Degraded(Degradation::Int8));
+        assert_eq!(full.precision, Precision::Int8, "served on the GA03 datapath");
+        let mini = c.admit(Request::minibatch(
+            0,
+            ZooModel::B1,
+            co,
+            vec![7, 11, 13],
+            vec![64, 64],
+            5,
+            1.0,
+        ));
+        assert_eq!(mini.outcome, Outcome::Degraded(Degradation::Int8CappedFanout));
+        assert_eq!(mini.precision, Precision::Int8);
+        let s = c.stats();
+        assert_eq!(s.degraded, 2);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.completed, 2, "degraded requests still complete");
+        assert_eq!(c.decision_log().len(), 2);
+
+        // An int8 tenant under the same pressure caps fanout only, and
+        // the capped re-sample shrinks the ego-net while paying for
+        // both samples.
+        let mut c2 = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c2.set_fault_plan(idle_plan);
+        let q = c2.admit(
+            Request::minibatch(0, ZooModel::B1, co, vec![7], vec![64, 64], 5, 0.0)
+                .with_precision(Precision::Int8),
+        );
+        assert_eq!(q.outcome, Outcome::Degraded(Degradation::CappedFanout));
+        let mut probe = Coordinator::new(HwConfig::alveo_u250());
+        let p = probe.admit(Request::minibatch(
+            0,
+            ZooModel::B1,
+            co,
+            vec![7],
+            vec![64, 64],
+            5,
+            0.0,
+        ));
+        assert!(q.sampled_edges <= p.sampled_edges);
+        assert!(q.t_sample > p.t_sample);
+    }
+
+    #[test]
+    fn transient_stall_stretches_latency_without_losing_work() {
+        let co = dataset("CO").unwrap();
+        let cfg = FleetConfig {
+            costs: CostModel { deadline_s: f64::INFINITY, ..CostModel::default() },
+            ..FleetConfig::default()
+        };
+        // Probe where a warm request executes, then stall across it.
+        let mut probe = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        let r0 = probe.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        let t1 = r0.latency + 1.0;
+        let r1 = probe.admit(Request::full(0, ZooModel::B1, co, t1));
+        let stall = 0.3;
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c.set_fault_plan(FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent::TransientStall {
+                device: 0,
+                at: t1 + r1.t_exec * 0.5,
+                duration: stall,
+            }],
+        });
+        c.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        let b = c.admit(Request::full(0, ZooModel::B1, co, t1));
+        assert_eq!(b.outcome, Outcome::Completed);
+        assert_eq!(b.retries, 0, "a stall pauses work, it does not kill it");
+        assert!(
+            (b.latency - (r1.latency + stall)).abs() < 1e-9,
+            "the stall stretches completion: {} vs {} + {stall}",
+            b.latency,
+            r1.latency
+        );
+        assert_eq!(b.t_exec, r1.t_exec, "no work is lost or redone");
+        // The stall event itself fires once the cursor passes it.
+        let d = c.admit(Request::full(0, ZooModel::B1, co, t1 + 10.0));
+        assert_eq!(d.outcome, Outcome::Completed);
+        assert_eq!(c.stats().stalls, 1);
+        assert_eq!(c.fault_log().len(), 1);
+    }
+
+    #[test]
+    fn armed_corruption_evicts_and_recompiles_in_situ() {
+        let co = dataset("CO").unwrap();
+        let cfg = FleetConfig {
+            costs: CostModel { deadline_s: f64::INFINITY, ..CostModel::default() },
+            ..FleetConfig::default()
+        };
+        let mut probe = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        let r0 = probe.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        let t1 = r0.latency + 1.0;
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c.set_fault_plan(FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent::ArtifactCorruption {
+                device: 0,
+                at: t1 * 0.5,
+                model: ZooModel::B1,
+                dataset: "CO".to_string(),
+            }],
+        });
+        let a = c.admit(Request::full(0, ZooModel::B1, co, 0.0));
+        assert!(!a.cache_hit);
+        // The corruption bites on the next access: the poisoned bytes
+        // fail the loader's validation, the artifact is evicted, and
+        // the request recompiles and still completes.
+        let b = c.admit(Request::full(0, ZooModel::B1, co, t1));
+        assert!(!b.cache_hit, "the poisoned artifact was evicted, not served");
+        assert!(b.t_compile > 0.0, "the recompile is paid for");
+        assert_eq!(b.outcome, Outcome::Completed);
+        assert_eq!(c.stats().corruptions, 1);
+        // One bite only: later requests hit the fresh artifact.
+        let d = c.admit(Request::full(0, ZooModel::B1, co, t1 + 1.0));
+        assert!(d.cache_hit);
+        assert_eq!(c.stats().corruptions, 1);
+    }
+
+    #[test]
+    fn faulty_serving_replays_bit_identically() {
+        let run = || {
+            let cfg = FleetConfig { n_devices: 3, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            let mut reqs = mixed_workload(30, 17);
+            reqs.extend(minibatch_workload(20, 17, 1e-4));
+            // A late probe past the plan horizon flushes the event
+            // cursor, so every scheduled fault deterministically fires.
+            reqs.push(Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 1.0));
+            c.set_fault_plan(FaultPlan::crash_and_recover(41, 3, 6e-3));
+            let stats = c.run(reqs);
+            let faults = c.fault_log().to_vec();
+            let decisions = c.decision_log().to_vec();
+            (stats, c.responses, faults, decisions)
+        };
+        let (s1, r1, f1, d1) = run();
+        let (s2, r2, f2, d2) = run();
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+        assert_eq!(f1, f2);
+        assert_eq!(d1, d2);
+        assert_eq!(s1.crashes, 2, "both scheduled crashes fired");
+        assert_eq!(s1.stalls, 1);
+        // Every accepted request is accounted for: completed, degraded
+        // or shed — never lost.
+        assert_eq!(r1.len(), 51);
+        assert_eq!(
+            s1.completed + s1.shed,
+            51,
+            "every request ends in exactly one terminal state"
+        );
     }
 }

@@ -39,6 +39,33 @@ pub struct Job {
     pub batched: u32,
 }
 
+/// One outage-calendar window on a device's timeline, derived from the
+/// fleet's [`FaultPlan`](super::fault::FaultPlan) at setup. `crash`
+/// windows kill work that would cross them; stall windows pause it.
+/// `until` is `f64::INFINITY` for a permanent crash. `event` indexes
+/// the plan event that produced the window (so firing it is recorded
+/// once).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultWindow {
+    pub from: f64,
+    pub until: f64,
+    pub crash: bool,
+    pub event: usize,
+}
+
+/// The outcome of quoting one unit of work against a device's fault
+/// windows ([`Device::quote`]).
+#[derive(Clone, Copy, Debug)]
+pub enum Quote {
+    /// Work completes: started at `start`, done at `done` (stall
+    /// windows inside the attempt pause execution, stretching `done`
+    /// past `start + t_exec`).
+    Done { start: f64, done: f64 },
+    /// The attempt crosses a crash window: everything computed between
+    /// `start` and `at` is lost, and plan event `event` fired.
+    Crashed { start: f64, at: f64, event: usize },
+}
+
 pub struct Device {
     pub id: usize,
     cache: ProgramCache,
@@ -67,6 +94,9 @@ pub struct Device {
     /// Host-side cost coefficients (set from the fleet config so
     /// benches can sweep what used to be hard-coded constants).
     pub costs: CostModel,
+    /// Outage calendar (sorted by `from`; empty without a fault plan —
+    /// the zero-fault path never consults it).
+    faults: Vec<FaultWindow>,
     pub jobs: Vec<Job>,
     /// Index of the first job that may not have started yet. Start times
     /// are nondecreasing per device (each job begins no earlier than its
@@ -88,9 +118,105 @@ impl Device {
             packed: None,
             packed_i8: None,
             costs: CostModel::default(),
+            faults: Vec::new(),
             jobs: Vec::new(),
             first_pending: 0,
         }
+    }
+
+    /// Install this device's slice of the fleet's outage calendar
+    /// (sorted by window start; the quote walk relies on the order).
+    pub fn set_fault_windows(&mut self, mut windows: Vec<FaultWindow>) {
+        windows.sort_by(|a, b| a.from.total_cmp(&b.from));
+        self.faults = windows;
+    }
+
+    pub fn fault_windows(&self) -> &[FaultWindow] {
+        &self.faults
+    }
+
+    /// Earliest instant at or after `t` when this device is not inside
+    /// a crash window — `f64::INFINITY` if it never comes back.
+    pub fn up_at(&self, t: f64) -> f64 {
+        let mut t = t;
+        for w in &self.faults {
+            if w.crash && w.from <= t && t < w.until {
+                t = w.until;
+            }
+        }
+        t
+    }
+
+    /// Quote `t_exec` seconds of work becoming ready at `ready` against
+    /// the outage calendar: the attempt starts once the device is both
+    /// free and up, pauses through stall windows, and dies at the first
+    /// crash window it would cross.
+    pub fn quote(&self, ready: f64, t_exec: f64) -> Quote {
+        let start = self.up_at(ready.max(self.free_at));
+        if start.is_infinite() {
+            // Permanently down: model as an immediate crash at the
+            // window that swallowed the start.
+            let w = self
+                .faults
+                .iter()
+                .find(|w| w.crash && w.until.is_infinite())
+                .expect("infinite up_at implies an unbounded crash window");
+            return Quote::Crashed { start: w.from, at: w.from, event: w.event };
+        }
+        let mut cur = start;
+        let mut remaining = t_exec;
+        for w in &self.faults {
+            if w.until <= cur {
+                continue;
+            }
+            if w.from >= cur + remaining {
+                break;
+            }
+            if w.crash {
+                // The window intersects the attempt (`until > cur`,
+                // `from < cur + remaining`): the work dies when the
+                // crash opens — even if that instant fell inside a
+                // stall the attempt was paused in (`from <= cur`).
+                return Quote::Crashed { start, at: w.from.max(start), event: w.event };
+            }
+            // Transient stall: progress pauses, no work is lost.
+            if w.from > cur {
+                remaining -= w.from - cur;
+                cur = w.from;
+            }
+            cur = w.until;
+        }
+        Quote::Done { start, done: cur + remaining }
+    }
+
+    /// The crash itself: every compiled artifact and every compile-warmth
+    /// entry is gone — the device rejoins (if it recovers) with a cold
+    /// cache and repays every compile. Host-side state (tile counts,
+    /// arena) survives.
+    pub fn crash_wipe(&mut self, at: f64) {
+        self.cache.clear();
+        self.warm_at.clear();
+        self.free_at = self.free_at.max(at);
+    }
+
+    /// Whether the compiled artifact itself is resident (unlike
+    /// [`Device::is_warm`] this is exactly cache presence — the
+    /// corruption fault needs an artifact to corrupt).
+    pub fn has_cached(&self, key: &Key) -> bool {
+        self.cache.contains(key)
+    }
+
+    /// The resident executable, if any (no compile, no warmth changes —
+    /// the corruption fault serializes the artifact it damages).
+    pub fn cached(&self, key: &Key) -> Option<Arc<Executable>> {
+        self.cache.peek(key)
+    }
+
+    /// Evict one artifact and forget its warmth (corrupted-artifact
+    /// recovery: the next access recompiles).
+    pub fn evict(&mut self, key: &Key) -> bool {
+        self.warm_at.remove(key);
+        self.cache.remove(key)
     }
 
     /// Advance the pending cursor past jobs that have started by `now`.
@@ -198,6 +324,69 @@ impl Device {
         let t_exec = exec_seconds(&exe);
         let j = self.push_job(key, ready, t_exec, hit);
         (exe, j)
+    }
+
+    /// The fault path's two-phase admission, phase one: fetch-or-compile
+    /// the whole-graph program and settle compile readiness, but do
+    /// *not* schedule device time yet — the coordinator first quotes the
+    /// attempt against the outage calendar (and may re-route, retry, or
+    /// degrade it) before committing with [`Device::commit`].
+    pub fn prepare(
+        &mut self,
+        at: f64,
+        model: ZooModel,
+        ds: &Dataset,
+        epoch: u32,
+        snapshot: Option<(&GraphMeta, &Arc<TileCounts>)>,
+        precision: Precision,
+    ) -> (Arc<Executable>, f64, bool) {
+        let key = Key::Whole(model, ds.key, epoch, precision);
+        let (exe, hit) = self.cache.get_at(model, ds, epoch, snapshot, precision);
+        let ready = self.ready_at(key, at, &exe);
+        (exe, ready, hit)
+    }
+
+    /// [`Device::prepare`] for a bucketed mini-batch program; `at`
+    /// already includes the host-side sampling stall.
+    pub fn prepare_bucket(
+        &mut self,
+        at: f64,
+        model: ZooModel,
+        shape: BucketShape,
+        precision: Precision,
+    ) -> (Arc<Executable>, f64, bool) {
+        let key = Key::Bucket(model, shape, precision);
+        let (exe, hit) = self.cache.get_bucket(model, shape, precision);
+        let ready = self.ready_at(key, at, &exe);
+        (exe, ready, hit)
+    }
+
+    /// The fault path's phase two: record a quoted attempt that
+    /// completed. `done - start` may exceed `t_exec` (stall windows);
+    /// only `t_exec` counts toward busy time.
+    pub fn commit(&mut self, key: Key, ready: f64, start: f64, done: f64, t_exec: f64, hit: bool) -> usize {
+        debug_assert!(start >= self.free_at, "quoted start predates device availability");
+        self.free_at = done;
+        self.busy += t_exec;
+        self.jobs.push(Job {
+            key,
+            ready,
+            start,
+            done,
+            t_exec,
+            cache_hit: hit,
+            riders: 0,
+            batched: 0,
+        });
+        self.jobs.len() - 1
+    }
+
+    /// A crashed attempt: the device computed from `start` until the
+    /// crash at `at` and lost all of it — the waste still occupies the
+    /// busy timeline (that is the cost the retry pays for).
+    pub fn charge_wasted(&mut self, start: f64, at: f64) {
+        self.busy += (at - start).max(0.0);
+        self.free_at = self.free_at.max(at);
     }
 
     /// Selective invalidation after a streaming update: drop stale
@@ -325,5 +514,122 @@ mod tests {
         assert!(dev.jobs[j2].cache_hit);
         assert_eq!(dev.cache_len(), 1);
         assert!(dev.is_warm(&Key::Bucket(ZooModel::B1, shape, Precision::F32)));
+    }
+
+    #[test]
+    fn quote_walks_the_outage_calendar() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        dev.set_fault_windows(vec![
+            FaultWindow { from: 10.0, until: 12.0, crash: true, event: 0 },
+            FaultWindow { from: 2.0, until: 3.0, crash: false, event: 1 },
+        ]);
+        // Unaffected work: finishes before any window.
+        match dev.quote(0.0, 1.0) {
+            Quote::Done { start, done } => {
+                assert_eq!(start, 0.0);
+                assert_eq!(done, 1.0);
+            }
+            q => panic!("expected Done, got {q:?}"),
+        }
+        // Work crossing the stall pauses through it: 2s of work starting
+        // at 1.0 loses [2, 3) and lands at 4.0.
+        match dev.quote(1.0, 2.0) {
+            Quote::Done { done, .. } => assert!((done - 4.0).abs() < 1e-12),
+            q => panic!("expected Done, got {q:?}"),
+        }
+        // Work crossing the crash dies at the crash instant.
+        match dev.quote(9.5, 1.0) {
+            Quote::Crashed { start, at, event } => {
+                assert_eq!(start, 9.5);
+                assert_eq!(at, 10.0);
+                assert_eq!(event, 0);
+            }
+            q => panic!("expected Crashed, got {q:?}"),
+        }
+        // Ready inside the crash window: the start is pushed past it.
+        match dev.quote(10.5, 1.0) {
+            Quote::Done { start, done } => {
+                assert_eq!(start, 12.0);
+                assert_eq!(done, 13.0);
+            }
+            q => panic!("expected Done, got {q:?}"),
+        }
+        assert_eq!(dev.up_at(11.0), 12.0);
+        assert_eq!(dev.up_at(13.0), 13.0);
+    }
+
+    #[test]
+    fn permanent_crash_never_comes_back() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        dev.set_fault_windows(vec![FaultWindow {
+            from: 1.0,
+            until: f64::INFINITY,
+            crash: true,
+            event: 3,
+        }]);
+        assert!(dev.up_at(2.0).is_infinite());
+        match dev.quote(2.0, 1.0) {
+            Quote::Crashed { at, event, .. } => {
+                assert_eq!(at, 1.0);
+                assert_eq!(event, 3);
+            }
+            q => panic!("expected Crashed, got {q:?}"),
+        }
+    }
+
+    #[test]
+    fn crash_wipe_leaves_a_cold_cache() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &Executable| 1e-4;
+        dev.admit(0.0, ZooModel::B1, &co, &mut exec);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
+        assert!(dev.is_warm(&key));
+        dev.crash_wipe(5.0);
+        assert!(!dev.is_warm(&key));
+        assert_eq!(dev.cache_len(), 0);
+        assert!(dev.free_at >= 5.0);
+        // The rejoin repays the compile.
+        let (_, j) = dev.admit(10.0, ZooModel::B1, &co, &mut exec);
+        assert!(!dev.jobs[j].cache_hit);
+        assert!(dev.jobs[j].ready > 10.0);
+    }
+
+    #[test]
+    fn prepare_then_commit_matches_admit_scheduling() {
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &Executable| 1e-3;
+        let mut a = Device::new(0, HwConfig::alveo_u250());
+        let (_, j) = a.admit(0.0, ZooModel::B1, &co, &mut exec);
+        let via_admit = a.jobs[j];
+        let mut b = Device::new(1, HwConfig::alveo_u250());
+        let (_, ready, hit) = b.prepare(0.0, ZooModel::B1, &co, 0, None, Precision::F32);
+        assert_eq!(ready, via_admit.ready);
+        assert_eq!(hit, via_admit.cache_hit);
+        let (start, done) = match b.quote(ready, 1e-3) {
+            Quote::Done { start, done } => (start, done),
+            q => panic!("expected Done, got {q:?}"),
+        };
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
+        let j = b.commit(key, ready, start, done, 1e-3, hit);
+        let via_commit = b.jobs[j];
+        assert_eq!(via_commit.start, via_admit.start);
+        assert_eq!(via_commit.done, via_admit.done);
+        assert_eq!(b.free_at, a.free_at);
+        assert_eq!(b.busy, a.busy);
+        // Eviction (the corruption ritual's tail) forces a recompile.
+        assert!(b.has_cached(&key));
+        assert!(b.evict(&key));
+        let (_, ready2, hit2) = b.prepare(1.0, ZooModel::B1, &co, 0, None, Precision::F32);
+        assert!(!hit2);
+        assert!(ready2 > 1.0);
+    }
+
+    #[test]
+    fn charge_wasted_occupies_the_timeline() {
+        let mut dev = Device::new(0, HwConfig::alveo_u250());
+        dev.charge_wasted(1.0, 1.5);
+        assert!((dev.busy - 0.5).abs() < 1e-12);
+        assert_eq!(dev.free_at, 1.5);
     }
 }

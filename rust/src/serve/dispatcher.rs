@@ -92,6 +92,34 @@ impl Dispatcher {
         Route::Device(target)
     }
 
+    /// Health-aware fresh dispatch for the fault path: like
+    /// [`Dispatcher::route`]'s device pick, but the load metric is the
+    /// earliest instant the device could actually *start* work that is
+    /// ready at `ready` — crash windows (from the outage calendar)
+    /// push a device's availability to its recovery, and a permanently
+    /// down device drops out entirely. `None` when every device is
+    /// permanently down (the coordinator sheds with
+    /// `ShedReason::NoHealthyDevice`). Coalescing and micro-batching
+    /// are deliberately absent here: a ridden job may crash, and the
+    /// retry bookkeeping per rider is not worth the overhead saved.
+    pub fn route_healthy(&self, devices: &[Device], key: &Key, ready: f64) -> Option<usize> {
+        let pick = |warm_only: bool| -> Option<usize> {
+            devices
+                .iter()
+                .filter(|d| !warm_only || d.is_warm(key))
+                .map(|d| (d.up_at(ready.max(d.free_at)), d.id))
+                .filter(|(t, _)| t.is_finite())
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .map(|(_, id)| id)
+        };
+        if self.affinity {
+            if let Some(id) = pick(true) {
+                return Some(id);
+            }
+        }
+        pick(false)
+    }
+
     /// The device a fresh dispatch would go to: cache-warm first (when
     /// affinity is on), else least-loaded; ties to the lowest id.
     fn dispatch_device(&self, devices: &[Device], key: &Key, arrival: f64) -> usize {
@@ -221,5 +249,40 @@ mod tests {
             ALL_ON.route_minibatch(&devs, &key, start + 1.0),
             Route::Device(0)
         );
+    }
+
+    #[test]
+    fn healthy_routing_skips_downed_devices() {
+        use crate::serve::device::FaultWindow;
+        let mut devs = fleet(3);
+        let key = Key::Whole(ZooModel::B1, "CO", 0, Precision::F32);
+        // Device 0 crashed at 1.0 and recovers at 4.0; device 2 is gone
+        // for good. At t=2.0 only device 1 is immediately available.
+        devs[0].set_fault_windows(vec![FaultWindow { from: 1.0, until: 4.0, crash: true, event: 0 }]);
+        devs[2].set_fault_windows(vec![FaultWindow {
+            from: 0.5,
+            until: f64::INFINITY,
+            crash: true,
+            event: 1,
+        }]);
+        assert_eq!(ALL_ON.route_healthy(&devs, &key, 2.0), Some(1));
+        // Once device 0 recovers it wins the id tie-break again.
+        assert_eq!(ALL_ON.route_healthy(&devs, &key, 5.0), Some(0));
+        // A warm device still attracts (affinity), even while another
+        // is idle.
+        let co = dataset("CO").unwrap();
+        let mut exec = |_: &crate::compiler::Executable| 1e-4;
+        devs[1].admit(0.0, ZooModel::B1, &co, &mut exec);
+        assert_eq!(ALL_ON.route_healthy(&devs, &key, 5.0), Some(1));
+        // Every device permanently down: nobody to route to.
+        for d in &mut devs {
+            d.set_fault_windows(vec![FaultWindow {
+                from: 0.0,
+                until: f64::INFINITY,
+                crash: true,
+                event: 9,
+            }]);
+        }
+        assert_eq!(ALL_ON.route_healthy(&devs, &key, 2.0), None);
     }
 }

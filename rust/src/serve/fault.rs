@@ -1,0 +1,433 @@
+//! Deterministic fault injection for the serving fleet.
+//!
+//! A [`FaultPlan`] is a seeded list of virtual-clock-scheduled events:
+//! device crashes (with an optional recovery), transient stalls, and
+//! cached-artifact corruptions. The plan is fully known when serving
+//! starts — an *outage calendar* — so the coordinator can keep its
+//! respond-at-admission discipline: every attempt is quoted against the
+//! per-device fault windows, an attempt that would cross a crash window
+//! fails at the crash instant and is retried with exponential backoff
+//! charged on the virtual clock, and the whole faulty run replays
+//! bit-identically from its trace (the plan rides in the trace config).
+//!
+//! Health is derived, not stored: [`FaultPlan::health_at`] reads the
+//! calendar — `Healthy → Stalled → Down → Recovering` — where
+//! `Recovering` is the cold-cache window right after a crash ends
+//! (the device serves again but repays every compile).
+//!
+//! With no plan (or an empty one) the coordinator takes its historical
+//! code path untouched: zero-fault serving stays byte-identical to a
+//! build without this module.
+
+use crate::ir::{zoo_model, ZooModel};
+use crate::util::{Json, Rng};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One scheduled fault. Times are virtual-clock seconds since fleet
+/// start (the daemon stamps real arrivals onto the same clock, so a
+/// live chaos run and its offline replay agree).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Device `device` dies at `at`. `recover_after > 0` brings it back
+    /// (with a cold cache) after that many seconds; `recover_after <= 0`
+    /// is a permanent loss.
+    DeviceCrash { device: u32, at: f64, recover_after: f64 },
+    /// Device `device` stops making progress during
+    /// `[at, at + duration)`: in-flight work pauses and resumes — no
+    /// work is lost, latency stretches.
+    TransientStall { device: u32, at: f64, duration: f64 },
+    /// From `at` on, the next access to the cached whole-graph artifact
+    /// of (`model`, `dataset`) on `device` finds its `.ga` bytes
+    /// corrupted: the loader rejects it, the entry is evicted and the
+    /// program recompiles (the request still completes).
+    ArtifactCorruption { device: u32, at: f64, model: ZooModel, dataset: String },
+}
+
+impl FaultEvent {
+    /// The scheduled instant of this event.
+    pub fn at(&self) -> f64 {
+        match self {
+            FaultEvent::DeviceCrash { at, .. }
+            | FaultEvent::TransientStall { at, .. }
+            | FaultEvent::ArtifactCorruption { at, .. } => *at,
+        }
+    }
+
+    /// The device this event targets.
+    pub fn device(&self) -> u32 {
+        match self {
+            FaultEvent::DeviceCrash { device, .. }
+            | FaultEvent::TransientStall { device, .. }
+            | FaultEvent::ArtifactCorruption { device, .. } => *device,
+        }
+    }
+}
+
+/// Derived per-device health at an instant (see [`FaultPlan::health_at`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    /// Inside a transient-stall window: alive, not progressing.
+    Stalled,
+    /// Inside a crash window (or permanently lost).
+    Down,
+    /// Crash window over, cache still cold: serving, repaying compiles.
+    Recovering,
+}
+
+/// How long a rejoined device counts as `Recovering` after its crash
+/// window ends (purely an observability classification — routing treats
+/// recovering and healthy devices alike; the cold cache is the real
+/// penalty either way).
+pub const RECOVERY_WINDOW_S: f64 = 0.05;
+
+/// A seeded, fully-scheduled fault calendar.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The seed the plan was generated from (0 for hand-authored
+    /// plans) — recorded for provenance, not consulted at serve time.
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan: serving behaves exactly as if no plan were set.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Deterministic crash-and-recover chaos schedule: every device
+    /// except device 0 crashes once inside `[0, horizon_s)` and
+    /// recovers after roughly a quarter horizon; a transient stall and
+    /// one artifact corruption ride along. Device 0 never crashes, so a
+    /// healthy route always exists and no request is shed for want of a
+    /// device.
+    pub fn crash_and_recover(seed: u64, n_devices: usize, horizon_s: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA01);
+        let mut events = Vec::new();
+        for d in 1..n_devices {
+            let at = horizon_s * (0.1 + 0.6 * (rng.below(1000) as f64 / 1000.0));
+            events.push(FaultEvent::DeviceCrash {
+                device: d as u32,
+                at,
+                recover_after: horizon_s * 0.25,
+            });
+        }
+        events.push(FaultEvent::TransientStall {
+            device: 0,
+            at: horizon_s * 0.05,
+            duration: horizon_s * 0.02,
+        });
+        events.push(FaultEvent::ArtifactCorruption {
+            device: 0,
+            at: horizon_s * 0.5,
+            model: ZooModel::B1,
+            dataset: "CO".to_string(),
+        });
+        FaultPlan { seed, events }
+    }
+
+    /// Derived health of `device` at `t` (ties broken toward the more
+    /// degraded state: a stall scheduled inside a crash window reads as
+    /// `Down`).
+    pub fn health_at(&self, device: u32, t: f64) -> Health {
+        let mut health = Health::Healthy;
+        for e in &self.events {
+            if e.device() != device {
+                continue;
+            }
+            match *e {
+                FaultEvent::DeviceCrash { at, recover_after, .. } => {
+                    let until = if recover_after > 0.0 { at + recover_after } else { f64::INFINITY };
+                    if at <= t && t < until {
+                        return Health::Down;
+                    }
+                    if recover_after > 0.0 && until <= t && t < until + RECOVERY_WINDOW_S {
+                        health = Health::Recovering;
+                    }
+                }
+                FaultEvent::TransientStall { at, duration, .. } => {
+                    if at <= t && t < at + duration && health == Health::Healthy {
+                        health = Health::Stalled;
+                    }
+                }
+                FaultEvent::ArtifactCorruption { .. } => {}
+            }
+        }
+        health
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Str(self.seed.to_string())),
+            ("events", Json::Arr(self.events.iter().map(fault_event_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let seed = j
+            .str_of("seed")?
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("fault-plan field 'seed' is not a u64 string"))?;
+        let events = j
+            .arr_of("events")?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| fault_event_from(e).with_context(|| format!("events[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FaultPlan { seed, events })
+    }
+
+    /// Parse a plan from its JSON text (the `--fault-plan` file format).
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        FaultPlan::from_json(&Json::parse(text).context("fault plan is not valid JSON")?)
+    }
+
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {}", path.display()))?;
+        FaultPlan::parse(&text).with_context(|| format!("parsing fault plan {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing fault plan {}", path.display()))
+    }
+}
+
+/// JSON codec of one fault event (`kind` discriminant; unknown kinds
+/// are a hard error, matching the trace format's versioning rules).
+pub fn fault_event_json(e: &FaultEvent) -> Json {
+    match e {
+        FaultEvent::DeviceCrash { device, at, recover_after } => Json::obj(vec![
+            ("kind", Json::Str("crash".into())),
+            ("device", Json::Num(*device as f64)),
+            ("at", Json::Num(*at)),
+            ("recover_after", Json::Num(*recover_after)),
+        ]),
+        FaultEvent::TransientStall { device, at, duration } => Json::obj(vec![
+            ("kind", Json::Str("stall".into())),
+            ("device", Json::Num(*device as f64)),
+            ("at", Json::Num(*at)),
+            ("duration", Json::Num(*duration)),
+        ]),
+        FaultEvent::ArtifactCorruption { device, at, model, dataset } => Json::obj(vec![
+            ("kind", Json::Str("corruption".into())),
+            ("device", Json::Num(*device as f64)),
+            ("at", Json::Num(*at)),
+            ("model", Json::Str(model.key().to_string())),
+            ("dataset", Json::Str(dataset.clone())),
+        ]),
+    }
+}
+
+pub fn fault_event_from(j: &Json) -> Result<FaultEvent> {
+    match j.str_of("kind")? {
+        "crash" => Ok(FaultEvent::DeviceCrash {
+            device: j.u32_of("device")?,
+            at: j.f64_of("at")?,
+            recover_after: j.f64_of("recover_after")?,
+        }),
+        "stall" => Ok(FaultEvent::TransientStall {
+            device: j.u32_of("device")?,
+            at: j.f64_of("at")?,
+            duration: j.f64_of("duration")?,
+        }),
+        "corruption" => {
+            let m = j.str_of("model")?;
+            Ok(FaultEvent::ArtifactCorruption {
+                device: j.u32_of("device")?,
+                at: j.f64_of("at")?,
+                model: zoo_model(m).ok_or_else(|| anyhow::anyhow!("unknown model '{m}'"))?,
+                dataset: j.str_of("dataset")?.to_string(),
+            })
+        }
+        k => bail!("unknown fault event kind '{k}'"),
+    }
+}
+
+/// Per-hop fanout cap of the `CappedFanout` degradation rung: a
+/// mini-batch degraded under deadline pressure re-samples with every
+/// hop's fanout clamped to this, so the smaller ego-net quotes a
+/// sooner completion.
+pub const DEGRADED_FANOUT_CAP: u32 = 4;
+
+/// Which rung of the fidelity cascade a degraded request landed on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Degradation {
+    /// Served int8 instead of the requested f32 (GA03 path).
+    Int8,
+    /// Mini-batch re-sampled with the fanout capped.
+    CappedFanout,
+    /// Both rungs.
+    Int8CappedFanout,
+}
+
+/// Why a request was shed instead of served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// Every device sat in an unrecoverable crash window.
+    NoHealthyDevice,
+    /// `CostModel::max_retries` attempts all died under crashes.
+    RetriesExhausted,
+}
+
+/// How a request ended. Every accepted request gets exactly one — the
+/// no-lost-work invariant the fault tests pin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Outcome {
+    Completed,
+    Degraded(Degradation),
+    Shed(ShedReason),
+}
+
+impl Default for Outcome {
+    fn default() -> Outcome {
+        Outcome::Completed
+    }
+}
+
+impl Outcome {
+    /// Stable wire key (trace v2 encoding).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Degraded(Degradation::Int8) => "degraded:int8",
+            Outcome::Degraded(Degradation::CappedFanout) => "degraded:capped_fanout",
+            Outcome::Degraded(Degradation::Int8CappedFanout) => "degraded:int8_capped_fanout",
+            Outcome::Shed(ShedReason::NoHealthyDevice) => "shed:no_healthy_device",
+            Outcome::Shed(ShedReason::RetriesExhausted) => "shed:retries_exhausted",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Outcome> {
+        Ok(match s {
+            "completed" => Outcome::Completed,
+            "degraded:int8" => Outcome::Degraded(Degradation::Int8),
+            "degraded:capped_fanout" => Outcome::Degraded(Degradation::CappedFanout),
+            "degraded:int8_capped_fanout" => Outcome::Degraded(Degradation::Int8CappedFanout),
+            "shed:no_healthy_device" => Outcome::Shed(ShedReason::NoHealthyDevice),
+            "shed:retries_exhausted" => Outcome::Shed(ShedReason::RetriesExhausted),
+            _ => bail!("unknown outcome '{s}'"),
+        })
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Shed(_))
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, Outcome::Degraded(_))
+    }
+}
+
+/// One fired fault, as the coordinator logged it (spliced into the v2
+/// trace as a `fault` event; `at` is the *scheduled* instant).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRecord {
+    pub at: f64,
+    pub fault: FaultEvent,
+}
+
+/// One degrade/shed decision (spliced into the v2 trace as a `decision`
+/// event; completions are not logged — they are the common case).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionRecord {
+    pub at: f64,
+    pub tenant: u32,
+    pub outcome: Outcome,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> FaultPlan {
+        FaultPlan {
+            seed: 9,
+            events: vec![
+                FaultEvent::DeviceCrash { device: 1, at: 0.01, recover_after: 0.05 },
+                FaultEvent::DeviceCrash { device: 2, at: 0.02, recover_after: -1.0 },
+                FaultEvent::TransientStall { device: 0, at: 0.005, duration: 0.002 },
+                FaultEvent::ArtifactCorruption {
+                    device: 0,
+                    at: 0.03,
+                    model: ZooModel::B1,
+                    dataset: "CO".to_string(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn plan_round_trips_through_json() {
+        let plan = sample_plan();
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+        // u64 seeds survive exactly (decimal-string convention).
+        let big = FaultPlan { seed: u64::MAX, events: vec![] };
+        assert_eq!(FaultPlan::parse(&big.to_json().to_string()).unwrap(), big);
+    }
+
+    #[test]
+    fn unknown_fault_kind_is_a_hard_error() {
+        let j = Json::parse(r#"{"kind": "meteor", "device": 0, "at": 0.1}"#).unwrap();
+        let err = fault_event_from(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown fault event kind 'meteor'"), "{err}");
+    }
+
+    #[test]
+    fn health_walks_the_state_machine() {
+        let plan = sample_plan();
+        // Device 0: stalled inside its stall window, healthy otherwise.
+        assert_eq!(plan.health_at(0, 0.0), Health::Healthy);
+        assert_eq!(plan.health_at(0, 0.006), Health::Stalled);
+        assert_eq!(plan.health_at(0, 0.008), Health::Healthy);
+        // Device 1: down inside the crash window, recovering (cold)
+        // just after, healthy later.
+        assert_eq!(plan.health_at(1, 0.02), Health::Down);
+        assert_eq!(plan.health_at(1, 0.061), Health::Recovering);
+        assert_eq!(plan.health_at(1, 0.2), Health::Healthy);
+        // Device 2: permanent loss.
+        assert_eq!(plan.health_at(2, 0.02), Health::Down);
+        assert_eq!(plan.health_at(2, 1e9), Health::Down);
+    }
+
+    #[test]
+    fn outcome_keys_round_trip() {
+        let all = [
+            Outcome::Completed,
+            Outcome::Degraded(Degradation::Int8),
+            Outcome::Degraded(Degradation::CappedFanout),
+            Outcome::Degraded(Degradation::Int8CappedFanout),
+            Outcome::Shed(ShedReason::NoHealthyDevice),
+            Outcome::Shed(ShedReason::RetriesExhausted),
+        ];
+        for o in all {
+            assert_eq!(Outcome::parse(o.key()).unwrap(), o);
+        }
+        assert!(Outcome::parse("vaporized").is_err());
+        assert!(Outcome::Shed(ShedReason::NoHealthyDevice).is_shed());
+        assert!(Outcome::Degraded(Degradation::Int8).is_degraded());
+        assert!(!Outcome::Completed.is_shed());
+    }
+
+    #[test]
+    fn seeded_generator_is_deterministic_and_spares_device_zero() {
+        let a = FaultPlan::crash_and_recover(7, 4, 1.0);
+        let b = FaultPlan::crash_and_recover(7, 4, 1.0);
+        assert_eq!(a, b);
+        let crashes: Vec<u32> = a
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::DeviceCrash { device, .. } => Some(*device),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(crashes, vec![1, 2, 3]);
+        assert_ne!(FaultPlan::crash_and_recover(8, 4, 1.0), a);
+    }
+}

@@ -55,12 +55,22 @@
 //! test), which is what makes [`crate::daemon`] recordings replayable:
 //! a trace's admitted events re-run through `admit` and reproduce the
 //! recorded responses bit-for-bit.
+//!
+//! Serving is fault-tolerant under a seeded [`fault::FaultPlan`] — an
+//! outage calendar of device crashes, transient stalls, and cached
+//! `.ga` corruptions scheduled on the virtual clock. Crashed attempts
+//! retry with exponential backoff and re-route to healthy devices,
+//! over-deadline requests degrade through a fidelity cascade
+//! (f32 → int8, full fanout → capped) before being shed with a named
+//! reason, and the whole faulty run replays bit-identically. With no
+//! plan (or an empty one) every code path above is untouched.
 
 pub mod cache;
 pub mod clock;
 pub mod coordinator;
 pub mod device;
 pub mod dispatcher;
+pub mod fault;
 
 pub use cache::{Key, ProgramCache, SERVE_WEIGHT_SEED};
 pub use crate::quant::Precision;
@@ -70,3 +80,7 @@ pub use coordinator::{
 };
 pub use device::Device;
 pub use dispatcher::{Dispatcher, Route};
+pub use fault::{
+    DecisionRecord, Degradation, FaultEvent, FaultPlan, FaultRecord, Health, Outcome,
+    ShedReason,
+};

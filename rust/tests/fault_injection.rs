@@ -1,0 +1,244 @@
+//! Fault-injection suite — the chaos harness behind "no accepted
+//! request is ever lost":
+//!
+//! 1. corrupted-artifact recovery: flip one byte in each `.ga` wire
+//!    format (GA01/GA02/GA03) of a *really compiled* program and prove
+//!    the loader rejects every one; then let the coordinator's armed
+//!    corruption events bite cached f32 and int8 artifacts in situ and
+//!    assert it evicts, recompiles, and completes,
+//! 2. accounting under a seeded crash-and-recover plan: every admitted
+//!    request ends `Completed`, `Degraded`, or `Shed` — and the whole
+//!    faulty run is a pure function of (plan, workload),
+//! 3. fleet wipe: permanent crashes on every device shed with a named
+//!    reason instead of hanging or panicking,
+//! 4. record a faulty run through the live daemon TCP path and replay
+//!    it bit-identically — including across `GA_KERNEL_THREADS`.
+
+use graphagile::compiler::{compile, CompileOptions};
+use graphagile::config::HwConfig;
+use graphagile::daemon::{drive, replay, verify, Client, Daemon, Trace};
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::isa::Program;
+use graphagile::serve::{
+    Coordinator, CostModel, FaultEvent, FaultPlan, FleetConfig, Key, Outcome, Precision,
+    Request, ShedReason,
+};
+
+/// A fleet whose deadline never fires: these tests isolate the crash /
+/// corruption machinery from the fidelity cascade.
+fn patient_fleet(n_devices: usize) -> FleetConfig {
+    FleetConfig {
+        n_devices,
+        costs: CostModel { deadline_s: f64::INFINITY, ..CostModel::default() },
+        ..FleetConfig::default()
+    }
+}
+
+/// Run `f` with `GA_KERNEL_THREADS` pinned to `t`, restoring the
+/// previous value afterwards (same idiom as rust/tests/daemon_replay.rs).
+fn with_threads<T>(t: &str, f: impl FnOnce() -> T) -> T {
+    let prev = std::env::var("GA_KERNEL_THREADS").ok();
+    std::env::set_var("GA_KERNEL_THREADS", t);
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("GA_KERNEL_THREADS", v),
+        None => std::env::remove_var("GA_KERNEL_THREADS"),
+    }
+    out
+}
+
+#[test]
+fn one_byte_flip_in_each_ga_format_trips_the_loader() {
+    let hw = HwConfig::alveo_u250();
+    let d = dataset("CO").unwrap();
+    let tiles = d.tile_counts(hw.n1() as u64);
+    let ir = ZooModel::B1.build(d.meta());
+
+    // GA02: the default whole-graph compile embeds a threshold table.
+    let ga02 = compile(&ir, &tiles, &hw, CompileOptions::default()).program;
+    assert!(ga02.thresholds.is_some());
+    assert_eq!(&ga02.to_bytes()[..4], b"GA02");
+
+    // GA01: no optional sections at all.
+    let ga01 = compile(
+        &ir,
+        &tiles,
+        &hw,
+        CompileOptions { dynamic_thresholds: false, ..Default::default() },
+    )
+    .program;
+    assert!(ga01.thresholds.is_none() && ga01.scales.is_none());
+    assert_eq!(&ga01.to_bytes()[..4], b"GA01");
+
+    // GA03: serve one int8 request and pull the calibrated artifact out
+    // of the device cache — the same bytes the corruption event bites.
+    let co = dataset("CO").unwrap();
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(1));
+    c.admit(Request::full(0, ZooModel::B1, co, 0.0).with_precision(Precision::Int8));
+    let key = Key::Whole(ZooModel::B1, co.key, 0, Precision::Int8);
+    let ga03 = c.devices()[0].cached(&key).expect("int8 program cached").program.clone();
+    assert!(ga03.scales.is_some());
+    assert_eq!(&ga03.to_bytes()[..4], b"GA03");
+
+    for p in [ga01, ga02, ga03] {
+        let mut bytes = p.to_bytes();
+        assert!(Program::from_bytes(&bytes).is_ok());
+        // The section-flag flip the fault injector uses...
+        bytes[p.corruption_offset()] ^= 0xFF;
+        assert!(Program::from_bytes(&bytes).is_err(), "{:?} survived a section flip", &bytes[..4]);
+        // ...and the magic itself, load-bearing for every format.
+        let mut bytes = p.to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(Program::from_bytes(&bytes).is_err());
+    }
+}
+
+#[test]
+fn corruption_evicts_recompiles_and_completes_for_both_precisions() {
+    let co = dataset("CO").unwrap();
+    let corrupt = |at: f64| FaultEvent::ArtifactCorruption {
+        device: 0,
+        at,
+        model: ZooModel::B1,
+        dataset: "CO".into(),
+    };
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(1));
+    c.set_fault_plan(FaultPlan { seed: 11, events: vec![corrupt(0.5), corrupt(2.5)] });
+
+    // f32: warm compile, then the armed corruption forces a recompile.
+    let r1 = c.admit(Request::full(0, ZooModel::B1, co, 0.0));
+    let r2 = c.admit(Request::full(0, ZooModel::B1, co, 1.0));
+    assert!(!r1.cache_hit && !r2.cache_hit);
+    assert!(r2.t_compile > 0.0, "corrupted artifact must be recompiled");
+    assert_eq!(r2.outcome, Outcome::Completed);
+
+    // int8: same dance through the GA03 artifact.
+    let r3 = c.admit(Request::full(1, ZooModel::B1, co, 2.0).with_precision(Precision::Int8));
+    let r4 = c.admit(Request::full(1, ZooModel::B1, co, 3.0).with_precision(Precision::Int8));
+    assert!(!r3.cache_hit && !r4.cache_hit);
+    assert!(r4.t_compile > 0.0);
+    assert_eq!(r4.outcome, Outcome::Completed);
+
+    // Once recompiled, the caches are warm again.
+    let r5 = c.admit(Request::full(0, ZooModel::B1, co, 4.0));
+    assert!(r5.cache_hit);
+
+    let stats = c.stats();
+    assert_eq!(stats.corruptions, 2);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.completed, 5);
+}
+
+#[test]
+fn seeded_crash_plan_accounts_for_every_admitted_request() {
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B7];
+    let graphs = [dataset("CO").unwrap(), dataset("PU").unwrap()];
+    let workload: Vec<Request> = (0..40)
+        .map(|i| {
+            Request::full(
+                (i % 3) as u32,
+                models[i % models.len()],
+                graphs[i % graphs.len()],
+                i as f64 * 1e-4,
+            )
+        })
+        // A flush past the plan horizon: every scheduled event fires.
+        .chain([Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 1.0)])
+        .collect();
+    let plan = FaultPlan::crash_and_recover(13, 3, 6e-3);
+
+    let run = || {
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(3));
+        c.set_fault_plan(plan.clone());
+        let stats = c.run(workload.clone());
+        (c.responses.clone(), stats)
+    };
+    let (responses, stats) = run();
+
+    // No lost work: one response per admitted request, each with a
+    // definite outcome, and the stats families add up.
+    assert_eq!(responses.len(), workload.len());
+    let shed = responses.iter().filter(|r| r.outcome.is_shed()).count() as u64;
+    let degraded = responses.iter().filter(|r| r.outcome.is_degraded()).count() as u64;
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.degraded, degraded);
+    assert_eq!(stats.completed + stats.shed, workload.len() as u64);
+    assert_eq!(stats.crashes, 2, "devices 1 and 2 each crash once");
+    assert_eq!(stats.stalls, 1);
+    assert!(stats.downtime > 0.0);
+
+    // The faulty run is a pure function of (plan, workload).
+    let (responses2, stats2) = run();
+    assert_eq!(responses, responses2);
+    assert_eq!(stats.diff(&stats2), Vec::<String>::new());
+}
+
+#[test]
+fn fleet_wipe_sheds_every_request_with_a_named_reason() {
+    let co = dataset("CO").unwrap();
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+    c.set_fault_plan(FaultPlan {
+        seed: 2,
+        events: (0..2)
+            .map(|d| FaultEvent::DeviceCrash { device: d, at: 0.0, recover_after: 0.0 })
+            .collect(),
+    });
+    for i in 0..4 {
+        let r = c.admit(Request::full(i, ZooModel::B1, co, 0.1 + i as f64 * 1e-4));
+        assert_eq!(r.outcome, Outcome::Shed(ShedReason::NoHealthyDevice));
+        assert_eq!(r.device, u32::MAX);
+    }
+    let stats = c.stats();
+    assert_eq!(stats.shed, 4);
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.crashes, 2);
+}
+
+#[test]
+fn faulty_daemon_recording_replays_bit_identically() {
+    // Record through the live TCP path under a seeded plan whose events
+    // land inside the wall-clock span of the drive.
+    let plan = FaultPlan::crash_and_recover(5, 2, 2e-2);
+    let d = Daemon::bind_with_plan(
+        0,
+        HwConfig::alveo_u250(),
+        FleetConfig { n_devices: 2, ..FleetConfig::default() },
+        Some(plan),
+    )
+    .unwrap();
+    let port = d.port();
+    let server = std::thread::spawn(move || d.serve().unwrap());
+
+    let mut c = Client::connect(port).unwrap();
+    let (accepted, _stats) = drive(&mut c, 60, 17).unwrap();
+    assert!(accepted > 0);
+    c.shutdown().unwrap();
+    let trace = server.join().unwrap();
+
+    // The plan makes the trace a v2 document, and every accepted
+    // request has a recorded response — none were lost to the faults.
+    assert_eq!(trace.version, 2);
+    assert!(trace.config.fault_plan.is_some());
+    assert_eq!(trace.responses.len(), accepted);
+
+    // Replay is deterministic, matches the recording, and survives the
+    // codec and the kernel-thread knob.
+    let (r1, s1) = replay(&trace);
+    let (r2, s2) = replay(&trace);
+    assert_eq!(r1, r2);
+    assert_eq!(s1.diff(&s2), Vec::<String>::new());
+    assert_eq!(r1, trace.responses);
+    assert_eq!(s1.diff(trace.stats.as_ref().unwrap()), Vec::<String>::new());
+    assert_eq!(verify(&trace).unwrap(), Vec::<String>::new());
+
+    let decoded = Trace::parse(&trace.encode()).unwrap();
+    assert_eq!(decoded, trace);
+    assert_eq!(verify(&decoded).unwrap(), Vec::<String>::new());
+
+    let (rt1, st1) = with_threads("1", || replay(&trace));
+    let (rt4, st4) = with_threads("4", || replay(&trace));
+    assert_eq!(rt1, rt4);
+    assert_eq!(st1.diff(&st4), Vec::<String>::new());
+    assert_eq!(rt1, trace.responses);
+}
