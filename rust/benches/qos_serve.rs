@@ -1,0 +1,286 @@
+//! Multi-tenant QoS serving benchmark: the same deterministic workloads
+//! served tenant-blind (FIFO) and under a weighted-fair tenant config.
+//! Written to `BENCH_qos.json` so the isolation trajectory is recorded
+//! across commits; everything runs on the virtual clock, so the numbers
+//! are bit-identical between runs.
+//!
+//! Two scenarios:
+//!   * `mixed` — a best-effort flood with premium requests interleaved:
+//!     FIFO makes the premium tenant queue behind the flood; QoS gives
+//!     it strict priority and gap backfill.
+//!   * `saturate` — three standard tenants (weights 4/2/1) with equal
+//!     backlogged demand: SFQ pacing must hand out device time in
+//!     proportion to weight while every tenant stays backlogged.
+//!
+//! Strict gates (`GA_BENCH_STRICT=1`):
+//!   * premium p99 under QoS stays within 0.5x the FIFO baseline,
+//!   * every tenant's throughput share in the backlogged window stays
+//!     within 0.8x of its weight share (no starvation).
+//!
+//! Knobs: `GA_REQUESTS` (default 400).
+
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::serve::{
+    percentile, Coordinator, FleetConfig, PriorityClass, Request, ServeStats, Tenant,
+    TenantConfig,
+};
+use graphagile::util::Rng;
+
+const DEVICES: usize = 2;
+const SPACING_S: f64 = 1e-4;
+
+const PREMIUM: u32 = 0;
+const FLOOD: u32 = 1;
+
+/// A best-effort flood with one premium request in every 8 slots.
+fn mixed_workload(n: usize, seed: u64) -> Vec<Request> {
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B6, ZooModel::B7];
+    let graphs = [dataset("CI").unwrap(), dataset("CO").unwrap(), dataset("PU").unwrap()];
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let tenant = if i % 8 == 3 { PREMIUM } else { FLOOD };
+            Request::full(
+                tenant,
+                models[rng.below(4) as usize],
+                graphs[rng.below(3) as usize],
+                i as f64 * SPACING_S,
+            )
+        })
+        .collect()
+}
+
+fn mixed_tenants() -> TenantConfig {
+    TenantConfig {
+        tenants: vec![
+            Tenant { id: PREMIUM, weight: 8.0, deadline_s: None, class: PriorityClass::Premium },
+            Tenant { id: FLOOD, weight: 1.0, deadline_s: None, class: PriorityClass::BestEffort },
+        ],
+    }
+}
+
+/// Three standard tenants with identical per-slot demand — only their
+/// weights differ, so realized throughput shares isolate the scheduler.
+const SAT_TENANTS: [(u32, f64); 3] = [(10, 4.0), (11, 2.0), (12, 1.0)];
+
+fn saturate_workload(n: usize, seed: u64) -> Vec<Request> {
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B6, ZooModel::B7];
+    let graphs = [dataset("CI").unwrap(), dataset("CO").unwrap(), dataset("PU").unwrap()];
+    let mut rng = Rng::new(seed);
+    let slots = n / SAT_TENANTS.len();
+    let mut reqs = Vec::new();
+    for i in 0..slots {
+        // Every tenant submits the same (model, graph) in the same slot:
+        // identical demand profiles, distinct arrival instants.
+        let model = models[rng.below(4) as usize];
+        let graph = graphs[rng.below(3) as usize];
+        for (k, &(tenant, _)) in SAT_TENANTS.iter().enumerate() {
+            let arrival = (i * SAT_TENANTS.len() + k) as f64 * (SPACING_S / 3.0);
+            reqs.push(Request::full(tenant, model, graph, arrival));
+        }
+    }
+    reqs
+}
+
+fn saturate_tenants() -> TenantConfig {
+    TenantConfig {
+        tenants: SAT_TENANTS
+            .iter()
+            .map(|&(id, weight)| Tenant {
+                id,
+                weight,
+                deadline_s: None,
+                class: PriorityClass::Standard,
+            })
+            .collect(),
+    }
+}
+
+fn serve(reqs: &[Request], tenants: Option<TenantConfig>) -> (Coordinator, ServeStats) {
+    // Coalescing and micro-batching are off in both runs so the FIFO
+    // baseline and the QoS run schedule the same per-request work.
+    let cfg = FleetConfig {
+        n_devices: DEVICES,
+        coalesce: false,
+        microbatch: false,
+        ..FleetConfig::default()
+    };
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+    if let Some(t) = tenants {
+        c.set_tenants(t);
+    }
+    let stats = c.run(reqs.to_vec());
+    (c, stats)
+}
+
+/// Nearest-rank latency percentile of one tenant's served requests.
+fn tenant_lat(c: &Coordinator, tenant: u32, p: f64) -> f64 {
+    let mut lats: Vec<f64> = c
+        .responses
+        .iter()
+        .filter(|r| r.tenant == tenant && !r.outcome.is_shed())
+        .map(|r| r.latency)
+        .collect();
+    lats.sort_by(f64::total_cmp);
+    percentile(&lats, p)
+}
+
+fn shed_of(c: &Coordinator, tenant: u32) -> u64 {
+    c.responses.iter().filter(|r| r.tenant == tenant && r.outcome.is_shed()).count() as u64
+}
+
+/// Per-tenant executed device-seconds within the earliest `frac` of
+/// completions — the backlogged window where throughput shares are
+/// meaningful (over a fully drained run every tenant completes all of
+/// its demand, so shares trivially converge to demand shares).
+fn window_shares(reqs: &[Request], c: &Coordinator, frac: f64) -> Vec<(u32, f64)> {
+    // `reqs` is strictly arrival-sorted, which is exactly the admission
+    // (and response) order, so zip pairs each response with its request.
+    let mut rows: Vec<(f64, u32, f64)> = reqs
+        .iter()
+        .zip(&c.responses)
+        .filter(|(_, r)| !r.outcome.is_shed())
+        .map(|(q, r)| (q.arrival + r.latency, r.tenant, r.t_exec))
+        .collect();
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let k = ((rows.len() as f64 * frac) as usize).clamp(1, rows.len());
+    let mut busy: Vec<(u32, f64)> = Vec::new();
+    for &(_, tenant, exec) in &rows[..k] {
+        match busy.iter_mut().find(|(id, _)| *id == tenant) {
+            Some((_, b)) => *b += exec,
+            None => busy.push((tenant, exec)),
+        }
+    }
+    busy.sort_by_key(|&(id, _)| id);
+    let total: f64 = busy.iter().map(|&(_, b)| b).sum();
+    busy.into_iter().map(|(id, b)| (id, if total > 0.0 { b / total } else { 0.0 })).collect()
+}
+
+fn mixed_row(name: &str, c: &Coordinator, s: &ServeStats) -> String {
+    format!(
+        "    {{\"scenario\": \"{name}\", \"premium_p50_ms\": {:.4}, \
+         \"premium_p99_ms\": {:.4}, \"flood_p99_ms\": {:.4}, \"completed\": {}, \
+         \"shed\": {}, \"degraded\": {}, \"preemptions\": {}, \"makespan_s\": {:.6}}}",
+        tenant_lat(c, PREMIUM, 0.50) * 1e3,
+        tenant_lat(c, PREMIUM, 0.99) * 1e3,
+        tenant_lat(c, FLOOD, 0.99) * 1e3,
+        s.completed,
+        s.shed,
+        s.degraded,
+        c.qos_preemptions(),
+        s.makespan,
+    )
+}
+
+fn main() {
+    let n: usize = std::env::var("GA_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let strict = std::env::var("GA_BENCH_STRICT").ok().as_deref() == Some("1");
+
+    let mixed = mixed_workload(n, 17);
+    let (fifo_c, fifo_s) = serve(&mixed, None);
+    let (qos_c, qos_s) = serve(&mixed, Some(mixed_tenants()));
+
+    let sat = saturate_workload(n, 29);
+    let (sat_c, sat_s) = serve(&sat, Some(saturate_tenants()));
+    let shares = window_shares(&sat, &sat_c, 0.4);
+    let total_w: f64 = SAT_TENANTS.iter().map(|&(_, w)| w).sum();
+
+    let fifo_p99 = tenant_lat(&fifo_c, PREMIUM, 0.99);
+    let qos_p99 = tenant_lat(&qos_c, PREMIUM, 0.99);
+    let p99_ratio = if fifo_p99 > 0.0 { qos_p99 / fifo_p99 } else { f64::INFINITY };
+
+    println!(
+        "{:>12} {:>14} {:>14} {:>12} {:>6} {:>11}",
+        "scenario", "prem p50 (ms)", "prem p99 (ms)", "flood p99", "shed", "preemptions"
+    );
+    for (name, c, s) in [("fifo", &fifo_c, &fifo_s), ("qos", &qos_c, &qos_s)] {
+        println!(
+            "{:>12} {:>14.3} {:>14.3} {:>12.3} {:>6} {:>11}",
+            name,
+            tenant_lat(c, PREMIUM, 0.50) * 1e3,
+            tenant_lat(c, PREMIUM, 0.99) * 1e3,
+            tenant_lat(c, FLOOD, 0.99) * 1e3,
+            s.shed,
+            c.qos_preemptions(),
+        );
+    }
+    println!("saturate shares (first 40% of completions):");
+    let mut worst_ratio = f64::INFINITY;
+    for &(id, share) in &shares {
+        let weight = SAT_TENANTS.iter().find(|&&(t, _)| t == id).map_or(1.0, |&(_, w)| w);
+        let weight_share = weight / total_w;
+        worst_ratio = worst_ratio.min(share / weight_share);
+        println!(
+            "  tenant {id}: share {:.3} vs weight share {:.3} ({:.2}x)",
+            share,
+            weight_share,
+            share / weight_share
+        );
+    }
+
+    let share_rows: Vec<String> = shares
+        .iter()
+        .map(|&(id, share)| {
+            let weight =
+                SAT_TENANTS.iter().find(|&&(t, _)| t == id).map_or(1.0, |&(_, w)| w);
+            format!(
+                "      {{\"tenant\": {id}, \"weight\": {weight}, \"share\": {share:.6}, \
+                 \"weight_share\": {:.6}}}",
+                weight / total_w
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"qos_serve\",\n  \"requests\": {n},\n  \"devices\": {DEVICES},\n  \
+         \"scenarios\": [\n{},\n    {{\"scenario\": \"saturate\", \"completed\": {}, \
+         \"shed\": {}, \"makespan_s\": {:.6}, \"shares\": [\n{}\n    ]}}\n  ],\n  \
+         \"gates\": {{\"premium_p99_ratio\": {p99_ratio:.6}, \
+         \"worst_share_ratio\": {worst_ratio:.6}}}\n}}\n",
+        [mixed_row("fifo_mixed", &fifo_c, &fifo_s), mixed_row("qos_mixed", &qos_c, &qos_s)]
+            .join(",\n"),
+        sat_s.completed,
+        sat_s.shed,
+        sat_s.makespan,
+        share_rows.join(",\n"),
+    );
+    std::fs::write("BENCH_qos.json", &json).expect("write BENCH_qos.json");
+    eprintln!("wrote BENCH_qos.json ({n} requests, {DEVICES} devices)");
+
+    // Accounting invariants hold strict or not.
+    assert_eq!(fifo_s.shed, 0, "tenant-blind serving must not shed");
+    assert_eq!(shed_of(&qos_c, PREMIUM), 0, "premium traffic must never be shed");
+    assert_eq!(
+        qos_s.completed + qos_s.shed,
+        n as u64,
+        "every request must end completed, degraded, or shed"
+    );
+    assert_eq!(sat_s.shed, 0, "deadline-free standard tenants must not shed");
+    assert!(fifo_s.tenants.is_empty(), "FIFO baseline must stay tenant-blind");
+    assert!(!qos_s.tenants.is_empty(), "QoS run must report per-tenant families");
+
+    if strict {
+        assert!(
+            qos_p99 <= 0.5 * fifo_p99,
+            "STRICT: premium p99 under QoS ({:.3} ms) exceeds 0.5 x the FIFO \
+             baseline ({:.3} ms)",
+            qos_p99 * 1e3,
+            fifo_p99 * 1e3,
+        );
+        assert!(
+            worst_ratio >= 0.8,
+            "STRICT: worst tenant throughput share is {worst_ratio:.3}x its weight \
+             share (floor 0.8x — starvation)",
+        );
+        eprintln!(
+            "STRICT gates passed: premium p99 {:.3} ms <= 0.5 x FIFO {:.3} ms, \
+             worst share ratio {worst_ratio:.2}x >= 0.8x",
+            qos_p99 * 1e3,
+            fifo_p99 * 1e3,
+        );
+    }
+}

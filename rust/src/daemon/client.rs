@@ -6,18 +6,21 @@ use super::trace::{response_from, stats_from};
 use crate::graph::dataset;
 use crate::ir::ZooModel;
 use crate::quant::Precision;
-use crate::serve::{Request, Response, ServeStats};
+use crate::serve::{Request, Response, ServeStats, TenantConfig};
 use crate::util::{Json, Rng};
 use anyhow::{anyhow, bail, Result};
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 
+/// One blocking connection to a live daemon, speaking the framed
+/// protocol request-for-reply.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
 
 impl Client {
+    /// Connect to a daemon listening on `127.0.0.1:port`.
     pub fn connect(port: u16) -> Result<Client> {
         let stream = TcpStream::connect(("127.0.0.1", port))
             .map_err(|e| anyhow!("connecting to daemon on port {port}: {e}"))?;
@@ -51,11 +54,24 @@ impl Client {
         response_from(reply.get("response").ok_or_else(|| anyhow!("reply missing 'response'"))?)
     }
 
+    /// Query the daemon's aggregate serving stats (per-tenant families
+    /// included when the daemon runs a tenant config).
     pub fn stats(&mut self) -> Result<ServeStats> {
         let reply = self.call(&ClientMsg::Stats)?;
         stats_from(reply.get("stats").ok_or_else(|| anyhow!("reply missing 'stats'"))?)
     }
 
+    /// Query the daemon's installed tenant QoS policy table; `None`
+    /// when it serves tenant-blind.
+    pub fn tenants(&mut self) -> Result<Option<TenantConfig>> {
+        let reply = self.call(&ClientMsg::Tenants)?;
+        match reply.get("tenants").ok_or_else(|| anyhow!("reply missing 'tenants'"))? {
+            Json::Null => Ok(None),
+            j => Ok(Some(TenantConfig::from_json(j)?)),
+        }
+    }
+
+    /// Fence all admitted work into the trace and return final stats.
     pub fn drain(&mut self) -> Result<ServeStats> {
         let reply = self.call(&ClientMsg::Drain)?;
         stats_from(reply.get("stats").ok_or_else(|| anyhow!("reply missing 'stats'"))?)

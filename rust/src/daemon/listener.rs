@@ -8,7 +8,7 @@ use super::protocol::{err_reply, ok_reply, read_frame, write_frame, ClientMsg};
 use super::session::DaemonSession;
 use super::trace::{response_json, stats_json, Trace};
 use crate::config::HwConfig;
-use crate::serve::{FaultPlan, FleetConfig};
+use crate::serve::{FaultPlan, FleetConfig, TenantConfig};
 use crate::util::Json;
 use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter};
@@ -21,6 +21,8 @@ use std::time::Duration;
 /// wedging every client behind it.
 pub const DEFAULT_CONN_TIMEOUT: Duration = Duration::from_secs(5);
 
+/// The TCP front end: one listening socket, one recording
+/// [`DaemonSession`], one sequential accept loop.
 pub struct Daemon {
     listener: TcpListener,
     session: DaemonSession,
@@ -34,7 +36,7 @@ impl Daemon {
     /// read it back with [`Daemon::port`]). Localhost-only: the daemon
     /// has no authentication and is a lab tool, not an internet service.
     pub fn bind(port: u16, hw: HwConfig, fleet: FleetConfig) -> Result<Daemon> {
-        Daemon::bind_with_plan(port, hw, fleet, None)
+        Daemon::bind_with_config(port, hw, fleet, None, None)
     }
 
     /// Bind a daemon whose session serves under a fault plan
@@ -46,17 +48,43 @@ impl Daemon {
         fleet: FleetConfig,
         plan: Option<FaultPlan>,
     ) -> Result<Daemon> {
+        Daemon::bind_with_config(port, hw, fleet, plan, None)
+    }
+
+    /// Bind a daemon whose session serves under per-tenant QoS
+    /// (`daemon --tenants tenants.json`). `None` — or an empty config —
+    /// is exactly [`Daemon::bind`].
+    pub fn bind_with_tenants(
+        port: u16,
+        hw: HwConfig,
+        fleet: FleetConfig,
+        tenants: Option<TenantConfig>,
+    ) -> Result<Daemon> {
+        Daemon::bind_with_config(port, hw, fleet, None, tenants)
+    }
+
+    /// The general bind behind the named variants. A fault plan and a
+    /// tenant config are mutually exclusive (the session's coordinator
+    /// panics on the combination; the CLI rejects it earlier).
+    pub fn bind_with_config(
+        port: u16,
+        hw: HwConfig,
+        fleet: FleetConfig,
+        plan: Option<FaultPlan>,
+        tenants: Option<TenantConfig>,
+    ) -> Result<Daemon> {
         let listener =
             TcpListener::bind(("127.0.0.1", port)).context("binding daemon listener")?;
         let port = listener.local_addr().context("reading bound address")?.port();
         Ok(Daemon {
             listener,
-            session: DaemonSession::with_plan(hw, fleet, plan),
+            session: DaemonSession::with_config(hw, fleet, plan, tenants),
             port,
             conn_timeout: DEFAULT_CONN_TIMEOUT,
         })
     }
 
+    /// The bound port (useful after binding port 0).
     pub fn port(&self) -> u16 {
         self.port
     }
@@ -125,6 +153,10 @@ impl Daemon {
                     let st = self.session.stats();
                     write_frame(&mut writer, &ok_reply(vec![("stats", stats_json(&st))]))?;
                 }
+                Ok(ClientMsg::Tenants) => {
+                    let t = self.session.tenants().map_or(Json::Null, |t| t.to_json());
+                    write_frame(&mut writer, &ok_reply(vec![("tenants", t)]))?;
+                }
                 Ok(ClientMsg::Drain) => {
                     let st = self.session.drain();
                     write_frame(
@@ -183,6 +215,48 @@ mod tests {
         assert_eq!(trace.requests().len(), 1);
         assert_eq!(trace.responses.len(), 1);
         assert_eq!(trace.stats.as_ref().unwrap().completed, 1);
+    }
+
+    #[test]
+    fn tenant_daemon_reports_its_config_and_stamps_v3_traces() {
+        use crate::serve::{PriorityClass, Tenant};
+        let tenants = TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 2.0, deadline_s: None, class: PriorityClass::Premium },
+                Tenant { id: 1, weight: 1.0, deadline_s: None, class: PriorityClass::Standard },
+            ],
+        };
+        let d = Daemon::bind_with_tenants(
+            0,
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            Some(tenants.clone()),
+        )
+        .unwrap();
+        let port = d.port();
+        let server = std::thread::spawn(move || d.serve().unwrap());
+
+        let mut c = Client::connect(port).unwrap();
+        assert_eq!(c.tenants().unwrap(), Some(tenants.clone()));
+        let co = dataset("CO").unwrap();
+        c.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        c.submit(Request::full(1, ZooModel::B1, co, 0.0)).unwrap();
+        let st = c.drain().unwrap();
+        assert_eq!(st.tenants.iter().map(|t| t.tenant).collect::<Vec<_>>(), vec![0, 1]);
+        c.shutdown().unwrap();
+
+        let trace = server.join().unwrap();
+        assert_eq!(trace.version, 3);
+        assert_eq!(trace.config.tenants.as_ref(), Some(&tenants));
+
+        // A tenant-blind daemon reports no config over the same op.
+        let d = Daemon::bind(0, HwConfig::alveo_u250(), FleetConfig::default()).unwrap();
+        let port = d.port();
+        let server = std::thread::spawn(move || d.serve().unwrap());
+        let mut c = Client::connect(port).unwrap();
+        assert_eq!(c.tenants().unwrap(), None);
+        c.shutdown().unwrap();
+        assert_eq!(server.join().unwrap().version, 1);
     }
 
     #[test]

@@ -14,6 +14,14 @@
 //! — because arrivals, seeds, and config are all in the trace —
 //! reproduces the recorded [`Response`] stream and [`ServeStats`]
 //! bit-for-bit. `--verify` turns that into a regression gate.
+//!
+//! A `daemon --tenants tenants.json` session serves under per-tenant
+//! QoS (see [`crate::serve::qos`]): the installed
+//! [`TenantConfig`](crate::serve::TenantConfig) is recorded in the
+//! trace header, the trace stamps version 3, and replay re-installs
+//! the config so QoS scheduling decisions reproduce bit-for-bit.
+
+#![warn(missing_docs)]
 
 pub mod client;
 pub mod listener;
@@ -37,6 +45,9 @@ fn replay_coordinator(trace: &Trace) -> Coordinator {
     let mut coord = Coordinator::fleet(trace.config.hw.clone(), trace.config.fleet);
     if let Some(p) = &trace.config.fault_plan {
         coord.set_fault_plan(p.clone());
+    }
+    if let Some(t) = &trace.config.tenants {
+        coord.set_tenants(t.clone());
     }
     for e in &trace.events {
         match e {
@@ -197,6 +208,47 @@ mod tests {
         tampered.events.retain(|e| !matches!(e, TraceEvent::Fault(_)));
         let div = verify(&tampered).unwrap();
         assert!(div.iter().any(|d| d.starts_with("fault events:")), "{div:?}");
+    }
+
+    #[test]
+    fn tenant_recordings_verify_clean_and_catch_tampering() {
+        use crate::serve::{PriorityClass, Tenant, TenantConfig};
+        let tenants = TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 4.0, deadline_s: None, class: PriorityClass::Premium },
+                Tenant {
+                    id: 1,
+                    weight: 1.0,
+                    deadline_s: Some(1e-9),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        };
+        let fleet = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+        let mut s = DaemonSession::with_tenants(HwConfig::alveo_u250(), fleet, Some(tenants));
+        let co = dataset("CO").unwrap();
+        let pu = dataset("PU").unwrap();
+        s.submit(Request::full(0, ZooModel::B2, co, 0.0)).unwrap();
+        // The impossible deadline walks the cascade and sheds — a
+        // recorded QoS decision the replay must re-derive.
+        s.submit(Request::full(1, ZooModel::B1, co, 0.0)).unwrap();
+        s.submit(Request::minibatch(0, ZooModel::B1, co, vec![5, 9], vec![8, 4], 3, 0.0))
+            .unwrap();
+        s.submit(Request::full(0, ZooModel::B7, pu, 0.0)).unwrap();
+        s.drain();
+        let trace = s.finalize();
+        assert_eq!(trace.version, 3);
+        assert!(trace.events.iter().any(|e| matches!(e, TraceEvent::Decision(_))));
+        assert_eq!(verify(&trace).unwrap(), Vec::<String>::new());
+        // Through a full encode/decode cycle too.
+        let decoded = Trace::parse(&trace.encode()).unwrap();
+        assert_eq!(verify(&decoded).unwrap(), Vec::<String>::new());
+        // Dropping the recorded QoS decision stream is a named
+        // divergence.
+        let mut tampered = trace;
+        tampered.events.retain(|e| !matches!(e, TraceEvent::Decision(_)));
+        let div = verify(&tampered).unwrap();
+        assert!(div.iter().any(|d| d.starts_with("decision events:")), "{div:?}");
     }
 
     #[test]

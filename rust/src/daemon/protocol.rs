@@ -5,7 +5,8 @@
 //! exactly that many bytes of UTF-8 JSON. Frames are capped at
 //! [`MAX_FRAME`] bytes so a hostile or corrupt length prefix cannot
 //! make the daemon allocate gigabytes. Client frames carry an `"op"`
-//! field (`submit` / `churn` / `stats` / `drain` / `shutdown`); the
+//! field (`submit` / `churn` / `stats` / `tenants` / `drain` /
+//! `shutdown`); the
 //! daemon replies with `{"ok": true, ...}` or
 //! `{"ok": false, "error": "..."}` — one reply frame per request
 //! frame, in order.
@@ -87,6 +88,9 @@ pub enum ClientMsg {
     Churn(Request),
     /// Query current serving stats.
     Stats,
+    /// Query the installed tenant QoS policy table (`null` when the
+    /// daemon runs tenant-blind).
+    Tenants,
     /// Wait until all admitted work is accounted (the virtual-clock
     /// fleet is always drained; this fences the event into the trace).
     Drain,
@@ -95,6 +99,8 @@ pub enum ClientMsg {
 }
 
 impl ClientMsg {
+    /// Decode one client frame by its `"op"` discriminant; unknown ops
+    /// are a named error (the connection survives, the frame does not).
     pub fn parse(j: &Json) -> Result<ClientMsg> {
         match j.str_of("op")? {
             "submit" => Ok(ClientMsg::Submit(request_from(
@@ -119,6 +125,7 @@ impl ClientMsg {
                 )))
             }
             "stats" => Ok(ClientMsg::Stats),
+            "tenants" => Ok(ClientMsg::Tenants),
             "drain" => Ok(ClientMsg::Drain),
             "shutdown" => Ok(ClientMsg::Shutdown),
             op => bail!("unknown op '{op}'"),
@@ -152,6 +159,7 @@ impl ClientMsg {
                 ])
             }
             ClientMsg::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            ClientMsg::Tenants => Json::obj(vec![("op", Json::Str("tenants".into()))]),
             ClientMsg::Drain => Json::obj(vec![("op", Json::Str("drain".into()))]),
             ClientMsg::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
@@ -184,6 +192,7 @@ mod tests {
             ClientMsg::Submit(Request::full(3, ZooModel::B2, dataset("CO").unwrap(), 0.0)),
             ClientMsg::Churn(Request::update(1, dataset("PU").unwrap(), 8, 2, 1, u64::MAX, 0.0)),
             ClientMsg::Stats,
+            ClientMsg::Tenants,
             ClientMsg::Drain,
             ClientMsg::Shutdown,
         ];

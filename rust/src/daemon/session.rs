@@ -15,7 +15,9 @@
 
 use super::trace::{Trace, TraceConfig, TraceEvent, TRACE_VERSION};
 use crate::config::HwConfig;
-use crate::serve::{Coordinator, FaultPlan, FleetConfig, Request, Response, ServeStats, Target};
+use crate::serve::{
+    Coordinator, FaultPlan, FleetConfig, Request, Response, ServeStats, Target, TenantConfig,
+};
 use anyhow::{bail, Result};
 use std::time::Instant;
 
@@ -24,6 +26,9 @@ use std::time::Instant;
 /// the daemon rejects instead of panicking).
 const MAX_MATERIALIZE_EDGES: u64 = 10_000_000;
 
+/// One recording serving session: a deterministic [`Coordinator`] plus
+/// the growing event log that [`DaemonSession::finalize`] seals into a
+/// [`Trace`].
 pub struct DaemonSession {
     coord: Coordinator,
     config: TraceConfig,
@@ -40,22 +45,53 @@ pub struct DaemonSession {
 }
 
 impl DaemonSession {
+    /// A plain session: no fault plan, no tenant QoS — records a v1
+    /// trace byte-identical to the original format.
     pub fn new(hw: HwConfig, fleet: FleetConfig) -> DaemonSession {
-        DaemonSession::with_plan(hw, fleet, None)
+        DaemonSession::with_config(hw, fleet, None, None)
     }
 
     /// A session serving under a fault plan (`daemon --fault-plan`).
     /// An empty (or absent) plan installs nothing: the session records
     /// a v1 trace byte-identical to the pre-fault format.
     pub fn with_plan(hw: HwConfig, fleet: FleetConfig, plan: Option<FaultPlan>) -> DaemonSession {
+        DaemonSession::with_config(hw, fleet, plan, None)
+    }
+
+    /// A session serving under per-tenant QoS (`daemon --tenants`).
+    /// An empty (or absent) config installs nothing: the session
+    /// records a tenant-free trace, byte-identical to the pre-QoS
+    /// format.
+    pub fn with_tenants(
+        hw: HwConfig,
+        fleet: FleetConfig,
+        tenants: Option<TenantConfig>,
+    ) -> DaemonSession {
+        DaemonSession::with_config(hw, fleet, None, tenants)
+    }
+
+    /// The general constructor behind the named variants. A fault plan
+    /// and a tenant config are mutually exclusive — installing both
+    /// panics (the coordinator enforces it), matching the CLI's
+    /// rejection of `--fault-plan` + `--tenants`.
+    pub fn with_config(
+        hw: HwConfig,
+        fleet: FleetConfig,
+        plan: Option<FaultPlan>,
+        tenants: Option<TenantConfig>,
+    ) -> DaemonSession {
         let mut coord = Coordinator::fleet(hw.clone(), fleet);
         if let Some(p) = plan {
             coord.set_fault_plan(p);
         }
+        if let Some(t) = tenants {
+            coord.set_tenants(t);
+        }
         let fault_plan = coord.fault_plan().cloned();
+        let tenants = coord.tenants().cloned();
         DaemonSession {
             coord,
-            config: TraceConfig { hw, fleet, fault_plan },
+            config: TraceConfig { hw, fleet, fault_plan, tenants },
             events: Vec::new(),
             t0: Instant::now(),
             last_arrival: 0.0,
@@ -154,12 +190,21 @@ impl DaemonSession {
         self.coord.stats()
     }
 
+    /// Number of events recorded so far (admits + stats/drain fences).
     pub fn events_len(&self) -> usize {
         self.events.len()
     }
 
+    /// Number of responses the coordinator has produced so far.
     pub fn completed(&self) -> usize {
         self.coord.responses.len()
+    }
+
+    /// The installed tenant QoS config, if any — what the `tenants`
+    /// protocol op reports back. Not recorded as an event: the config
+    /// is static and already lives in the trace header.
+    pub fn tenants(&self) -> Option<&TenantConfig> {
+        self.coord.tenants()
     }
 
     /// Seal the session into a self-contained trace: config, events in
@@ -249,6 +294,53 @@ mod tests {
         let t = s.finalize();
         assert_eq!(t.version, 1);
         assert!(t.config.fault_plan.is_none());
+    }
+
+    #[test]
+    fn tenant_sessions_finalize_as_version_3_with_config_and_stats() {
+        use crate::serve::{PriorityClass, Tenant};
+        let tenants = TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 3.0, deadline_s: None, class: PriorityClass::Premium },
+                Tenant {
+                    id: 1,
+                    weight: 1.0,
+                    deadline_s: Some(0.05),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        };
+        let mut s = DaemonSession::with_tenants(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            Some(tenants.clone()),
+        );
+        assert_eq!(s.tenants(), Some(&tenants));
+        let co = dataset("CO").unwrap();
+        let r = s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        assert_eq!(r.tenant, 0);
+        s.submit(Request::full(1, ZooModel::B1, co, 0.0)).unwrap();
+        s.drain();
+        let t = s.finalize();
+        assert_eq!(t.version, 3);
+        assert_eq!(t.config.tenants.as_ref(), Some(&tenants));
+        let st = t.stats.as_ref().unwrap();
+        assert_eq!(st.tenants.iter().map(|ts| ts.tenant).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn empty_tenant_config_sessions_stay_version_1() {
+        let mut s = DaemonSession::with_tenants(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            Some(TenantConfig::empty()),
+        );
+        assert!(s.tenants().is_none());
+        let co = dataset("CO").unwrap();
+        s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+        let t = s.finalize();
+        assert_eq!(t.version, 1);
+        assert!(t.config.tenants.is_none());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The recordable trace format (`trace.json`, versions 1–2).
+//! The recordable trace format (`trace.json`, versions 1–3).
 //!
 //! A trace is a complete, self-contained description of one serving
 //! run: the hardware + fleet configuration, every admitted event in
@@ -29,6 +29,11 @@
 //!   or the stats). A fault-free recording therefore stays
 //!   byte-identical to what a v1 writer produced, and v1 readers keep
 //!   reading it.
+//! * v3 extends the same rule to tenant QoS content: a trace is v3
+//!   only when it carries a tenant config, per-request `t_qos` /
+//!   `deadline_missed` fields, a `shed:deadline_missed` outcome, or
+//!   per-tenant stats families. Tenant-free recordings still stamp v2
+//!   (or v1), bytes unchanged.
 
 use crate::config::HwConfig;
 use crate::graph::{dataset, Dataset};
@@ -37,7 +42,7 @@ use crate::quant::Precision;
 use crate::serve::fault::{fault_event_from, fault_event_json};
 use crate::serve::{
     CostModel, DecisionRecord, FaultPlan, FaultRecord, FleetConfig, Outcome, Request, Response,
-    ServeStats, Target,
+    ServeStats, ShedReason, Target, TenantConfig, TenantStats,
 };
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -45,19 +50,26 @@ use std::path::Path;
 
 /// The newest trace schema version this build reads and writes (it
 /// reads every version from 1 up).
-pub const TRACE_VERSION: u32 = 2;
+pub const TRACE_VERSION: u32 = 3;
 
 /// The configuration a trace was recorded under — everything the
 /// replayer needs to rebuild an identical [`Coordinator`]
 /// (crate::serve::Coordinator).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceConfig {
+    /// Hardware model the run was recorded on.
     pub hw: HwConfig,
+    /// Fleet shape and routing policy of the recording run.
     pub fleet: FleetConfig,
     /// Fault plan the run was recorded under (v2; absent in v1 traces
     /// and in fault-free v2 recordings). Replay re-installs it so
     /// fault/decision events re-derive identically.
     pub fault_plan: Option<FaultPlan>,
+    /// Tenant QoS config the run was recorded under (v3; absent in
+    /// older traces and tenant-free recordings). Replay re-installs it
+    /// so pacing, gap placement, and deadline decisions re-derive
+    /// identically.
+    pub tenants: Option<TenantConfig>,
 }
 
 /// One recorded daemon event, in admission order.
@@ -83,8 +95,11 @@ pub enum TraceEvent {
 /// A recorded serving run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Trace {
+    /// Schema version the document is stamped with (oldest sufficient).
     pub version: u32,
+    /// Configuration the run was recorded under.
     pub config: TraceConfig,
+    /// Every recorded event, in admission order.
     pub events: Vec<TraceEvent>,
     /// Response stream the recording run produced, in admission order.
     /// Empty for hand-authored event-only traces (replay then has
@@ -100,7 +115,7 @@ impl Trace {
     pub fn from_requests(hw: HwConfig, fleet: FleetConfig, requests: Vec<Request>) -> Trace {
         let mut t = Trace {
             version: TRACE_VERSION,
-            config: TraceConfig { hw, fleet, fault_plan: None },
+            config: TraceConfig { hw, fleet, fault_plan: None, tenants: None },
             events: requests.into_iter().map(TraceEvent::Admit).collect(),
             responses: Vec::new(),
             stats: None,
@@ -109,12 +124,25 @@ impl Trace {
         t
     }
 
-    /// The oldest schema version able to represent this trace: v1
-    /// unless fault-era content is actually present (a fault plan,
-    /// fault/decision events, non-default fault knobs, or fault
-    /// counters in a response or the stats). Writers stamp this, so a
-    /// fault-free recording stays byte-identical to a v1 document.
+    /// The oldest schema version able to represent this trace: v3 when
+    /// tenant QoS content is actually present (a tenant config, QoS
+    /// fields or a `shed:deadline_missed` outcome in a response or
+    /// decision, per-tenant stats families), else v2 when fault-era
+    /// content is (a fault plan, fault/decision events, non-default
+    /// fault knobs, or fault counters in a response or the stats), else
+    /// v1. Writers stamp this, so a tenant-free recording stays
+    /// byte-identical to what an older writer produced.
     pub fn min_version(&self) -> u32 {
+        let qos = self.config.tenants.is_some()
+            || self.events.iter().any(|e| {
+                matches!(e, TraceEvent::Decision(d)
+                    if d.outcome == Outcome::Shed(ShedReason::DeadlineMissed))
+            })
+            || self.responses.iter().any(response_has_qos_content)
+            || self.stats.as_ref().is_some_and(|s| !s.tenants.is_empty());
+        if qos {
+            return 3;
+        }
         let faulty = self.config.fault_plan.is_some()
             || !self.config.fleet.costs.fault_knobs_default()
             || self
@@ -141,6 +169,8 @@ impl Trace {
             .collect()
     }
 
+    /// The whole trace as one JSON value (tests and tooling; the
+    /// on-disk format is [`Trace::encode`]).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::Num(self.version as f64)),
@@ -210,12 +240,14 @@ impl Trace {
         Ok(Trace { version, config, events, responses, stats })
     }
 
+    /// Read and parse a trace file.
     pub fn load(path: &Path) -> Result<Trace> {
         let s = std::fs::read_to_string(path)
             .with_context(|| format!("reading trace {}", path.display()))?;
         Trace::parse(&s).with_context(|| format!("parsing trace {}", path.display()))
     }
 
+    /// Write the trace in the line-oriented on-disk encoding.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.encode())
             .with_context(|| format!("writing trace {}", path.display()))
@@ -280,6 +312,15 @@ fn response_has_fault_content(r: &Response) -> bool {
         || r.outcome != Outcome::Completed
 }
 
+/// Whether a response carries any QoS-era field a v2 reader would
+/// miss: a pacing delay, a missed deadline, or the
+/// `shed:deadline_missed` outcome key v2 cannot parse.
+fn response_has_qos_content(r: &Response) -> bool {
+    r.t_qos != 0.0
+        || r.deadline_missed
+        || r.outcome == Outcome::Shed(ShedReason::DeadlineMissed)
+}
+
 /// Same, for the aggregate stats.
 fn stats_has_fault_content(s: &ServeStats) -> bool {
     s.retries != 0
@@ -325,6 +366,7 @@ fn u32_arr(j: &Json, key: &str) -> Result<Vec<u32>> {
         .collect()
 }
 
+/// Encode a dataset row (self-contained: replay needs no registry).
 pub fn dataset_json(d: &Dataset) -> Json {
     Json::obj(vec![
         ("key", Json::Str(d.key.to_string())),
@@ -337,6 +379,7 @@ pub fn dataset_json(d: &Dataset) -> Json {
     ])
 }
 
+/// Decode a dataset row, preferring the matching registry entry.
 pub fn dataset_from(j: &Json) -> Result<Dataset> {
     let key = j.str_of("key")?;
     let name = j.str_of("name")?;
@@ -426,6 +469,7 @@ fn precision_from(j: &Json, key: &str) -> Result<Precision> {
     j.str_of(key)?.parse::<Precision>().map_err(|e| anyhow!("field '{key}': {e}"))
 }
 
+/// Encode one admitted request.
 pub fn request_json(rq: &Request) -> Json {
     Json::obj(vec![
         ("tenant", Json::Num(rq.tenant as f64)),
@@ -437,6 +481,7 @@ pub fn request_json(rq: &Request) -> Json {
     ])
 }
 
+/// Decode one admitted request.
 pub fn request_from(j: &Json) -> Result<Request> {
     Ok(Request {
         tenant: j.u32_of("tenant")?,
@@ -452,6 +497,8 @@ pub fn request_from(j: &Json) -> Result<Request> {
     })
 }
 
+/// Encode one response; era-specific fields (v2 fault, v3 QoS) are
+/// emitted only when non-default.
 pub fn response_json(r: &Response) -> Json {
     let mut fields = vec![
         ("tenant", Json::Num(r.tenant as f64)),
@@ -492,12 +539,21 @@ pub fn response_json(r: &Response) -> Json {
     if r.t_backoff != 0.0 {
         fields.push(("t_backoff", Json::Num(r.t_backoff)));
     }
+    // QoS fields (v3), same non-default rule: a tenant-free response
+    // line stays byte-identical to a v2 (or v1) writer's.
+    if r.t_qos != 0.0 {
+        fields.push(("t_qos", Json::Num(r.t_qos)));
+    }
+    if r.deadline_missed {
+        fields.push(("deadline_missed", Json::Bool(true)));
+    }
     if r.outcome != Outcome::Completed {
         fields.push(("outcome", Json::Str(r.outcome.key().to_string())));
     }
     Json::obj(fields)
 }
 
+/// Decode one response (absent era-specific fields take defaults).
 pub fn response_from(j: &Json) -> Result<Response> {
     Ok(Response {
         tenant: j.u32_of("tenant")?,
@@ -529,10 +585,44 @@ pub fn response_from(j: &Json) -> Result<Response> {
         retries: opt_u32(j, "retries", 0)?,
         rerouted: opt_bool(j, "rerouted", false)?,
         t_backoff: opt_f64(j, "t_backoff", 0.0)?,
+        t_qos: opt_f64(j, "t_qos", 0.0)?,
+        deadline_missed: opt_bool(j, "deadline_missed", false)?,
         outcome: opt_outcome(j)?,
     })
 }
 
+fn tenant_stats_json(t: &TenantStats) -> Json {
+    Json::obj(vec![
+        ("tenant", Json::Num(t.tenant as f64)),
+        ("weight", Json::Num(t.weight)),
+        ("completed", Json::Num(t.completed as f64)),
+        ("degraded", Json::Num(t.degraded as f64)),
+        ("shed", Json::Num(t.shed as f64)),
+        ("missed", Json::Num(t.missed as f64)),
+        ("p50", Json::Num(t.p50)),
+        ("p99", Json::Num(t.p99)),
+        ("t_qos", Json::Num(t.t_qos)),
+        ("busy", Json::Num(t.busy)),
+    ])
+}
+
+fn tenant_stats_from(j: &Json) -> Result<TenantStats> {
+    Ok(TenantStats {
+        tenant: j.u32_of("tenant")?,
+        weight: j.f64_of("weight")?,
+        completed: j.u64_of("completed")?,
+        degraded: j.u64_of("degraded")?,
+        shed: j.u64_of("shed")?,
+        missed: j.u64_of("missed")?,
+        p50: j.f64_of("p50")?,
+        p99: j.f64_of("p99")?,
+        t_qos: j.f64_of("t_qos")?,
+        busy: j.f64_of("busy")?,
+    })
+}
+
+/// Encode aggregate stats; the fault-counter block (v2) and per-tenant
+/// families (v3) are emitted only when present.
 pub fn stats_json(s: &ServeStats) -> Json {
     let mut fields = vec![
         ("completed", Json::Num(s.completed as f64)),
@@ -576,9 +666,15 @@ pub fn stats_json(s: &ServeStats) -> Json {
         fields.push(("downtime", Json::Num(s.downtime)));
         fields.push(("t_backoff", Json::Num(s.t_backoff)));
     }
+    // Per-tenant families (v3) only exist under an installed tenant
+    // config — tenant-free stats stay byte-identical to v2.
+    if !s.tenants.is_empty() {
+        fields.push(("tenants", Json::Arr(s.tenants.iter().map(tenant_stats_json).collect())));
+    }
     Json::obj(fields)
 }
 
+/// Decode aggregate stats (absent era-specific blocks take defaults).
 pub fn stats_from(j: &Json) -> Result<ServeStats> {
     Ok(ServeStats {
         completed: j.u64_of("completed")?,
@@ -616,6 +712,15 @@ pub fn stats_from(j: &Json) -> Result<ServeStats> {
         corruptions: opt_u64(j, "corruptions", 0)?,
         downtime: opt_f64(j, "downtime", 0.0)?,
         t_backoff: opt_f64(j, "t_backoff", 0.0)?,
+        tenants: match j.get("tenants") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(_) => j
+                .arr_of("tenants")?
+                .iter()
+                .enumerate()
+                .map(|(i, t)| tenant_stats_from(t).with_context(|| format!("tenants[{i}]")))
+                .collect::<Result<Vec<_>>>()?,
+        },
     })
 }
 
@@ -720,6 +825,9 @@ fn config_json(c: &TraceConfig) -> Json {
     if let Some(p) = &c.fault_plan {
         fields.push(("fault_plan", p.to_json()));
     }
+    if let Some(t) = &c.tenants {
+        fields.push(("tenants", t.to_json()));
+    }
     Json::obj(fields)
 }
 
@@ -733,9 +841,14 @@ fn config_from(j: &Json) -> Result<TraceConfig> {
             None | Some(Json::Null) => None,
             Some(p) => Some(FaultPlan::from_json(p).context("config.fault_plan")?),
         },
+        tenants: match j.get("tenants") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TenantConfig::from_json(t).context("config.tenants")?),
+        },
     })
 }
 
+/// Encode one trace event with its `kind` tag.
 pub fn event_json(e: &TraceEvent) -> Json {
     match e {
         TraceEvent::Admit(rq) => Json::obj(vec![
@@ -762,6 +875,7 @@ pub fn event_json(e: &TraceEvent) -> Json {
     }
 }
 
+/// Decode one trace event; unknown kinds are a hard error.
 pub fn event_from(j: &Json) -> Result<TraceEvent> {
     match j.str_of("kind")? {
         "admit" => Ok(TraceEvent::Admit(request_from(
@@ -817,6 +931,7 @@ mod tests {
                 hw: HwConfig::alveo_u250(),
                 fleet: FleetConfig { n_devices: 2, ..FleetConfig::default() },
                 fault_plan: None,
+                tenants: None,
             },
             events,
             responses: Vec::new(),
@@ -864,12 +979,16 @@ mod tests {
     #[test]
     fn version_gate_rejects_future_traces() {
         let mut s = sample_trace().encode();
-        s = s.replace("\"version\": 1", "\"version\": 3");
+        s = s.replace("\"version\": 1", "\"version\": 4");
         let err = Trace::parse(&s).unwrap_err().to_string();
-        assert!(err.contains("version 3"), "{err}");
+        assert!(err.contains("version 4"), "{err}");
         // Every version from 1 up to the current one still reads.
-        let v2 = sample_trace().encode().replace("\"version\": 1", "\"version\": 2");
-        assert!(Trace::parse(&v2).is_ok());
+        for v in 2..=TRACE_VERSION {
+            let doc = sample_trace()
+                .encode()
+                .replace("\"version\": 1", &format!("\"version\": {v}"));
+            assert!(Trace::parse(&doc).is_ok(), "version {v} must read");
+        }
     }
 
     #[test]
@@ -914,6 +1033,79 @@ mod tests {
         for key in ["fault_plan", "retries", "t_backoff", "outcome", "downtime"] {
             assert!(!s.contains(key), "fault-free trace leaked v2 key '{key}'");
         }
+        for key in ["\"tenants\"", "t_qos", "deadline_missed"] {
+            assert!(!s.contains(key), "tenant-free trace leaked v3 key '{key}'");
+        }
+    }
+
+    #[test]
+    fn v3_trace_round_trips_tenants_and_qos_fields() {
+        use crate::serve::{Coordinator, PriorityClass, Tenant};
+        let mut t = sample_trace();
+        let config = TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 4.0, deadline_s: Some(0.02), class: PriorityClass::Premium },
+                Tenant { id: 1, weight: 2.0, deadline_s: None, class: PriorityClass::Standard },
+                Tenant {
+                    id: 2,
+                    weight: 1.0,
+                    deadline_s: Some(0.05),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        };
+        t.config.tenants = Some(config.clone());
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        let stats = c.run(t.requests());
+        let mut r = c.responses[0];
+        r.t_qos = 2.5e-3;
+        r.deadline_missed = true;
+        r.outcome = Outcome::Shed(ShedReason::DeadlineMissed);
+        let mut s = stats;
+        s.tenants = vec![TenantStats {
+            tenant: 2,
+            weight: 1.0,
+            completed: 3,
+            shed: 1,
+            missed: 1,
+            p99: 4e-3,
+            t_qos: 9e-3,
+            busy: 1.5e-3,
+            ..TenantStats::default()
+        }];
+        t.events.push(TraceEvent::Decision(DecisionRecord {
+            at: 4e-4,
+            tenant: 2,
+            outcome: Outcome::Shed(ShedReason::DeadlineMissed),
+        }));
+        t.responses = vec![r];
+        t.stats = Some(s);
+        t.version = t.min_version();
+        assert_eq!(t.version, 3, "tenant content promotes the version");
+        let back = Trace::parse(&t.encode()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.config.tenants, Some(config));
+    }
+
+    #[test]
+    fn qos_fields_alone_promote_to_v3() {
+        // A response carrying a pacing delay, with no tenant config in
+        // the document, still needs a v3 reader.
+        use crate::serve::Coordinator;
+        let mut t = sample_trace();
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.run(t.requests());
+        let mut r = c.responses[0];
+        r.t_qos = 1e-3;
+        t.responses = vec![r];
+        t.version = t.min_version();
+        assert_eq!(t.version, 3);
+        assert_eq!(Trace::parse(&t.encode()).unwrap(), t);
+        // A fault-era trace is untouched by the v3 rule.
+        let mut f = sample_trace();
+        f.config.fleet.costs.max_retries = 9;
+        f.version = f.min_version();
+        assert_eq!(f.version, 2, "fault content alone stays v2");
     }
 
     #[test]

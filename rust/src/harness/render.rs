@@ -139,6 +139,30 @@ pub fn serve_summary(stats: &ServeStats) -> String {
         "  device busy       {:.3} s over {:.3} s makespan\n",
         stats.device_busy, stats.makespan
     ));
+    // The per-tenant block renders only under a tenant config: a
+    // tenant-blind run's summary stays byte-identical to the pre-QoS
+    // format.
+    if !stats.tenants.is_empty() {
+        out.push_str(&format!("  tenants           {}\n", stats.tenants.len()));
+        for t in &stats.tenants {
+            let total = t.completed + t.shed;
+            let miss = if total > 0 { t.missed as f64 * 100.0 / total as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "    tenant {:<5} w {:<4} {} served / {} degraded / {} shed, \
+                 p50/p99 {} / {} ms, miss {:.1}%, paced {} ms, busy {:.3} s\n",
+                t.tenant,
+                t.weight,
+                t.completed,
+                t.degraded,
+                t.shed,
+                ms(t.p50),
+                ms(t.p99),
+                miss,
+                ms(t.t_qos),
+                t.busy,
+            ));
+        }
+    }
     out
 }
 
@@ -169,12 +193,26 @@ pub fn replay_summary(trace: &Trace, replayed: &ServeStats) -> String {
         trace.config.fleet.n_devices,
     ));
     // v2-only line: a fault-free trace keeps the v1 header verbatim.
-    if faults + decisions > 0 || trace.config.fault_plan.is_some() {
+    // (Decision events under a tenant config belong to the QoS line
+    // below, not here.)
+    if trace.config.tenants.is_none()
+        && (faults + decisions > 0 || trace.config.fault_plan.is_some())
+    {
         out.push_str(&format!(
             "  fault plan: {} scheduled event(s); {} fault(s) fired, \
              {} degrade/shed decision(s) recorded\n",
             trace.config.fault_plan.as_ref().map_or(0, |p| p.events.len()),
             faults,
+            decisions,
+        ));
+    }
+    // v3-only line: a tenant-free trace keeps the older header verbatim.
+    if let Some(t) = &trace.config.tenants {
+        out.push_str(&format!(
+            "  tenant QoS: {} configured tenant(s), total weight {}, \
+             {} degrade/shed decision(s) recorded\n",
+            t.tenants.len(),
+            t.total_weight(),
             decisions,
         ));
     }
@@ -253,6 +291,18 @@ mod tests {
             corruptions: 19,
             downtime: 0.25,
             t_backoff: 0.004,
+            tenants: vec![crate::serve::TenantStats {
+                tenant: 9,
+                weight: 4.0,
+                completed: 20,
+                degraded: 5,
+                shed: 5,
+                missed: 10,
+                p50: 0.006,
+                p99: 0.007,
+                t_qos: 0.008,
+                busy: 0.125,
+            }],
         };
         let s = serve_summary(&stats);
         assert!(s.contains("3 coalesced"), "{s}");
@@ -275,6 +325,17 @@ mod tests {
         assert!(s.contains("17 crashes, 18 stalls, 19 corruptions (0.250 s downtime)"), "{s}");
         assert!(s.contains("retries           21 (14 re-routed, 4.000 ms backoff)"), "{s}");
         assert!(s.contains("degraded / shed   15 / 16"), "{s}");
+        // Every TenantStats field reaches the per-tenant line: 10
+        // missed of 25 requests (20 served + 5 shed) is a 40% miss
+        // rate.
+        assert!(s.contains("tenants           1"), "{s}");
+        assert!(
+            s.contains(
+                "tenant 9     w 4    20 served / 5 degraded / 5 shed, \
+                 p50/p99 6.000 / 7.000 ms, miss 40.0%, paced 8.000 ms, busy 0.125 s"
+            ),
+            "{s}"
+        );
     }
 
     #[test]
@@ -324,6 +385,8 @@ mod tests {
         assert!(!s.contains("faults"), "{s}");
         assert!(!s.contains("retries"), "{s}");
         assert!(!s.contains("shed"), "{s}");
+        // And a tenant-blind run keeps the pre-QoS shape.
+        assert!(!s.contains("tenant"), "{s}");
     }
 
     #[test]
@@ -369,5 +432,47 @@ mod tests {
             vec![Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 0.0)],
         );
         assert!(!replay_summary(&plain, &ServeStats::default()).contains("fault plan"));
+    }
+
+    #[test]
+    fn replay_summary_names_tenant_qos_not_fault_plan() {
+        use crate::config::HwConfig;
+        use crate::graph::dataset;
+        use crate::ir::ZooModel;
+        use crate::serve::{
+            DecisionRecord, FleetConfig, Outcome, PriorityClass, Request, ShedReason, Tenant,
+            TenantConfig,
+        };
+        let mut trace = Trace::from_requests(
+            HwConfig::alveo_u250(),
+            FleetConfig::default(),
+            vec![Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 0.0)],
+        );
+        trace.config.tenants = Some(TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 3.0, deadline_s: None, class: PriorityClass::Premium },
+                Tenant {
+                    id: 1,
+                    weight: 1.0,
+                    deadline_s: Some(0.05),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        });
+        trace.events.push(TraceEvent::Decision(DecisionRecord {
+            at: 0.1,
+            tenant: 1,
+            outcome: Outcome::Shed(ShedReason::DeadlineMissed),
+        }));
+        let s = replay_summary(&trace, &ServeStats::default());
+        assert!(
+            s.contains(
+                "tenant QoS: 2 configured tenant(s), total weight 4, \
+                 1 degrade/shed decision(s) recorded"
+            ),
+            "{s}"
+        );
+        // QoS decisions must not masquerade as a fault-plan line.
+        assert!(!s.contains("fault plan"), "{s}");
     }
 }

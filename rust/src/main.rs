@@ -11,8 +11,11 @@
 //! graphagile serve --streaming --update-every 8 (edge-churn + epoch serving)
 //! graphagile serve --fault-plan plan.json       (chaos run: seeded crashes,
 //!                                                stalls, artifact corruption)
+//! graphagile serve --tenants tenants.json       (per-tenant QoS: weighted-fair
+//!                                                pacing, deadlines, classes)
 //! graphagile daemon [--port 0] [--devices N] [--trace trace.json]
-//!                   [--fault-plan plan.json]    (long-running TCP server;
+//!                   [--fault-plan plan.json]
+//!                   [--tenants tenants.json]    (long-running TCP server;
 //!                                                records every accepted event)
 //! graphagile drive --port P [--requests 200] [--seed 7]
 //!                                               (scripted client workload,
@@ -284,6 +287,12 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// degrades over-deadline requests through the fidelity cascade, and
 /// the summary grows the fault counter block. Deterministic: the same
 /// plan and flags print the same stats.
+///
+/// QoS mode: `--tenants tenants.json` installs a per-tenant policy
+/// table (weight, priority class, optional deadline); admission
+/// switches to weighted-fair virtual-clock pacing with deadline-aware
+/// degradation, and the summary grows a per-tenant block (p50/p99,
+/// miss rate, sheds). Mutually exclusive with `--fault-plan`.
 fn cmd_serve(args: &Args) -> Result<()> {
     use graphagile::serve::{Coordinator, CostModel, FleetConfig, Precision, Request};
     use graphagile::util::Rng;
@@ -346,10 +355,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         })
         .collect();
+    anyhow::ensure!(
+        !(args.get("fault-plan").is_some() && args.get("tenants").is_some()),
+        "--fault-plan and --tenants are mutually exclusive (the outage calendar \
+         and the QoS gap scheduler disagree about device timelines)"
+    );
     let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
     if let Some(path) = args.get("fault-plan") {
         let plan = graphagile::serve::FaultPlan::load(std::path::Path::new(path))?;
         c.set_fault_plan(plan);
+    }
+    if let Some(path) = args.get("tenants") {
+        let tenants = graphagile::serve::TenantConfig::load(std::path::Path::new(path))?;
+        c.set_tenants(tenants);
     }
     let stats = c.run(reqs);
     println!(
@@ -404,7 +422,10 @@ fn fleet_config(args: &Args) -> Result<graphagile::serve::FleetConfig> {
 /// on the `listening` line for scripts to scrape), `--trace PATH`,
 /// `--fault-plan plan.json` (serve under a seeded fault plan; the
 /// recorded trace becomes a v2 document that replays the faults
-/// bit-identically), plus the `serve` fleet switches (`--devices`,
+/// bit-identically), `--tenants tenants.json` (serve under per-tenant
+/// QoS; the recorded trace becomes a v3 document that replays the
+/// scheduling decisions bit-identically — mutually exclusive with
+/// `--fault-plan`), plus the `serve` fleet switches (`--devices`,
 /// `--no-affinity`, `--no-coalesce`, `--no-batch`, `--no-dynamic`,
 /// `--visit-overhead`).
 fn cmd_daemon(args: &Args) -> Result<()> {
@@ -418,7 +439,17 @@ fn cmd_daemon(args: &Args) -> Result<()> {
         None => None,
         Some(p) => Some(graphagile::serve::FaultPlan::load(std::path::Path::new(p))?),
     };
-    let d = Daemon::bind_with_plan(port, HwConfig::alveo_u250(), fleet_config(args)?, plan)?;
+    let tenants = match args.get("tenants") {
+        None => None,
+        Some(p) => Some(graphagile::serve::TenantConfig::load(std::path::Path::new(p))?),
+    };
+    anyhow::ensure!(
+        !(plan.is_some() && tenants.is_some()),
+        "--fault-plan and --tenants are mutually exclusive (the outage calendar \
+         and the QoS gap scheduler disagree about device timelines)"
+    );
+    let d =
+        Daemon::bind_with_config(port, HwConfig::alveo_u250(), fleet_config(args)?, plan, tenants)?;
     println!("graphagile daemon listening on 127.0.0.1:{}", d.port());
     let trace = d.serve()?;
     trace.save(std::path::Path::new(&trace_path))?;

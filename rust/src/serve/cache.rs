@@ -46,15 +46,21 @@ pub enum Key {
     Bucket(ZooModel, BucketShape, Precision),
 }
 
+/// The compiled-program cache of one overlay device: get-or-compile
+/// keyed by [`Key`], with host-side tile counts shared across models on
+/// the same graph.
 pub struct ProgramCache {
     hw: HwConfig,
     programs: HashMap<Key, Arc<Executable>>,
     tiles: HashMap<(&'static str, u32), Arc<TileCounts>>,
+    /// Requests served from an already-compiled program.
     pub hits: u64,
+    /// Requests that paid the software compile.
     pub misses: u64,
 }
 
 impl ProgramCache {
+    /// Empty cache compiling against `hw`.
     pub fn new(hw: HwConfig) -> ProgramCache {
         ProgramCache {
             hw,
@@ -195,10 +201,12 @@ impl ProgramCache {
         before - self.programs.len()
     }
 
+    /// Number of resident compiled programs.
     pub fn len(&self) -> usize {
         self.programs.len()
     }
 
+    /// Whether no compiled program is resident.
     pub fn is_empty(&self) -> bool {
         self.programs.is_empty()
     }

@@ -18,10 +18,12 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A clock at t = 0.
     pub fn new() -> VirtualClock {
         VirtualClock { now: 0.0 }
     }
 
+    /// Current virtual time in seconds.
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -88,14 +90,21 @@ pub const DEADLINE_S: f64 = 0.1;
 /// constants.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
+    /// Fixed host-side sampling setup per mini-batch request.
     pub sample_setup_s: f64,
+    /// Sampling cost per sampled vertex.
     pub sample_per_vertex_s: f64,
+    /// Sampling cost per sampled edge.
     pub sample_per_edge_s: f64,
     /// Fixed per-device-visit dispatch overhead of a mini-batch job.
     pub visit_overhead_s: f64,
+    /// Fixed setup of one streaming update batch.
     pub update_setup_s: f64,
+    /// Update cost per changed edge.
     pub update_per_edge_s: f64,
+    /// Update cost per dirty subshard.
     pub update_per_subshard_s: f64,
+    /// Update cost per edge re-sorted rebuilding dirty subshards.
     pub update_per_rebuilt_edge_s: f64,
     /// Exponential-backoff base after a crashed attempt (fault serving
     /// only; the zero-fault path never reads it).

@@ -29,6 +29,7 @@ use super::fault::{
     DecisionRecord, Degradation, FaultEvent, FaultPlan, FaultRecord, Outcome, ShedReason,
     DEGRADED_FANOUT_CAP,
 };
+use super::qos::{PriorityClass, QosState, TenantConfig, TenantStats};
 use crate::compiler::{BucketShape, Executable};
 use crate::config::HwConfig;
 use crate::engine::{EngineInput, ExecProfile};
@@ -74,10 +75,12 @@ pub enum Target {
 }
 
 impl Target {
+    /// True for [`Target::MiniBatch`].
     pub fn is_minibatch(&self) -> bool {
         matches!(self, Target::MiniBatch { .. })
     }
 
+    /// True for [`Target::Update`].
     pub fn is_update(&self) -> bool {
         matches!(self, Target::Update { .. })
     }
@@ -87,9 +90,14 @@ impl Target {
 /// testable against the workload that produced it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
+    /// Submitting tenant (a QoS policy row under an installed
+    /// [`TenantConfig`]; an opaque label otherwise).
     pub tenant: u32,
+    /// Model to run.
     pub model: ZooModel,
+    /// Input graph.
     pub dataset: Dataset,
+    /// What to run it over (see [`Target`]).
     pub target: Target,
     /// Arrival time on the serving clock (seconds).
     pub arrival: f64,
@@ -163,7 +171,9 @@ impl Request {
 /// Completion record.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Response {
+    /// Tenant the request came from.
     pub tenant: u32,
+    /// Model served.
     pub model: ZooModel,
     /// Device that executed (or will execute) the work.
     pub device: u32,
@@ -179,6 +189,7 @@ pub struct Response {
     pub t_queue: f64,
     /// arrival -> completion.
     pub latency: f64,
+    /// Whether the program came from the serving device's cache.
     pub cache_hit: bool,
     /// Rode an identical in-flight job (no extra device work).
     pub coalesced: bool,
@@ -227,6 +238,15 @@ pub struct Response {
     /// Total exponential-backoff pause charged to this request across
     /// its retries (seconds on the virtual clock).
     pub t_backoff: f64,
+    /// QoS pacing delay charged by the fair queue (deadline-capped;
+    /// 0 without an installed tenant config, for premium traffic, and
+    /// for tenants inside their reserved rate).
+    pub t_qos: f64,
+    /// Whether this request finished past its tenant deadline (served
+    /// late, or shed with
+    /// [`ShedReason::DeadlineMissed`]). Always false without a tenant
+    /// config or for tenants without a deadline.
+    pub deadline_missed: bool,
     /// Terminal state: completed at full fidelity, degraded down the
     /// fidelity cascade, or shed with a named reason. Always
     /// `Completed` on the fault-free path.
@@ -264,9 +284,10 @@ impl Response {
             tenant, model, device, cache_hit, coalesced, batched, minibatch,
             sampled_vertices, sampled_edges, remaps, precision, quant_visits,
             requant_ops, int8_bytes, update, epoch, dirty_subshards,
-            rebuilt_edges, invalidated, compacted, retries, rerouted, outcome,
+            rebuilt_edges, invalidated, compacted, retries, rerouted,
+            deadline_missed, outcome,
         );
-        cmp_f64!(t_compile, t_sample, t_exec, t_queue, latency, t_update, t_backoff);
+        cmp_f64!(t_compile, t_sample, t_exec, t_queue, latency, t_update, t_backoff, t_qos);
         out
     }
 }
@@ -275,8 +296,11 @@ impl Response {
 /// as plain equality.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeStats {
+    /// Requests that reached a served outcome (completed or degraded).
     pub completed: u64,
+    /// Responses whose program came from a device cache.
     pub cache_hits: u64,
+    /// Requests that rode an identical in-flight job.
     pub coalesced: u64,
     /// Completed mini-batch requests.
     pub minibatched: u64,
@@ -313,8 +337,11 @@ pub struct ServeStats {
     pub invalidated: u64,
     /// Overlay compactions triggered across all updates.
     pub compactions: u64,
+    /// Median served-inference latency, seconds.
     pub p50: f64,
+    /// 99th-percentile served-inference latency, seconds.
     pub p99: f64,
+    /// Mean served-inference latency, seconds.
     pub mean: f64,
     /// p50 over mini-batch responses only (0 when there are none).
     pub p50_mini: f64,
@@ -322,6 +349,7 @@ pub struct ServeStats {
     pub p50_full: f64,
     /// Sum of execution seconds across devices.
     pub device_busy: f64,
+    /// Virtual time of the last processed event.
     pub makespan: f64,
     /// Crashed attempts retried, summed over all requests.
     pub retries: u64,
@@ -342,6 +370,10 @@ pub struct ServeStats {
     pub downtime: f64,
     /// Backoff pause charged across all retried requests (seconds).
     pub t_backoff: f64,
+    /// Per-tenant counter rows, sorted by tenant id — populated only
+    /// under an installed [`TenantConfig`] (empty otherwise, so
+    /// tenant-free stats stay byte-identical on the wire).
+    pub tenants: Vec<TenantStats>,
 }
 
 impl ServeStats {
@@ -386,6 +418,40 @@ impl ServeStats {
         // Latency family (bit-exact).
         cmp_f64!(p50, p99, mean, p50_mini, p50_full, device_busy, makespan);
         cmp_f64!(downtime, t_backoff);
+        // Per-tenant QoS family: a length mismatch is one divergence;
+        // matched rows name the exact field, `tenants[i].p99: ...`.
+        if self.tenants.len() != other.tenants.len() {
+            out.push(format!(
+                "tenants.len: {} != {}",
+                self.tenants.len(),
+                other.tenants.len()
+            ));
+        } else {
+            for (i, (a, b)) in self.tenants.iter().zip(&other.tenants).enumerate() {
+                macro_rules! tcmp {
+                    ($($f:ident),+ $(,)?) => {$(
+                        if a.$f != b.$f {
+                            out.push(format!(
+                                concat!("tenants[{}].", stringify!($f), ": {} != {}"),
+                                i, a.$f, b.$f
+                            ));
+                        }
+                    )+};
+                }
+                macro_rules! tcmp_f64 {
+                    ($($f:ident),+ $(,)?) => {$(
+                        if a.$f.to_bits() != b.$f.to_bits() {
+                            out.push(format!(
+                                concat!("tenants[{}].", stringify!($f), ": {} != {}"),
+                                i, a.$f, b.$f
+                            ));
+                        }
+                    )+};
+                }
+                tcmp!(tenant, completed, degraded, shed, missed);
+                tcmp_f64!(weight, p50, p99, t_qos, busy);
+            }
+        }
         out
     }
 }
@@ -394,8 +460,11 @@ impl ServeStats {
 /// config round-trip is testable as plain equality.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FleetConfig {
+    /// Number of identical overlay devices.
     pub n_devices: usize,
+    /// Prefer a cache-warm device when routing.
     pub affinity: bool,
+    /// Coalesce identical in-flight whole-graph requests.
     pub coalesce: bool,
     /// Micro-batch compatible mini-batch requests into one device
     /// visit.
@@ -643,6 +712,11 @@ pub struct Coordinator {
     /// micro-batching and all response fields behave (and serialize)
     /// exactly as before faults existed.
     fault: Option<FaultState>,
+    /// Active tenant QoS state, if any ([`Coordinator::set_tenants`]).
+    /// `None` — including after installing an *empty* config — leaves
+    /// every historical code path untouched, exactly like `fault`.
+    qos: Option<QosState>,
+    /// Every completion record, in admission order.
     pub responses: Vec<Response>,
 }
 
@@ -652,6 +726,8 @@ impl Coordinator {
         Coordinator::fleet(hw, FleetConfig::default())
     }
 
+    /// Multi-device coordinator over `cfg.n_devices` identical
+    /// overlays sharing one routing policy.
     pub fn fleet(hw: HwConfig, cfg: FleetConfig) -> Coordinator {
         assert!(cfg.n_devices >= 1, "fleet needs at least one device");
         Coordinator {
@@ -675,6 +751,7 @@ impl Coordinator {
             dynamic: cfg.dynamic,
             costs: cfg.costs,
             fault: None,
+            qos: None,
             responses: Vec::new(),
         }
     }
@@ -688,6 +765,10 @@ impl Coordinator {
             self.fault = None;
             return;
         }
+        assert!(
+            self.qos.is_none(),
+            "fault plans and tenant QoS are mutually exclusive"
+        );
         for d in &mut self.devices {
             let windows: Vec<FaultWindow> = plan
                 .events
@@ -728,6 +809,37 @@ impl Coordinator {
         self.fault.as_ref().map(|f| &f.plan)
     }
 
+    /// Install a tenant QoS config before serving: admission switches
+    /// to SFQ-paced, deadline-aware, gap-placed scheduling (coalescing
+    /// and micro-batching are bypassed on that path — a gap-placed
+    /// timeline has no single tail to ride). An empty config installs
+    /// nothing — the tenant-blind path stays byte-identical. Mutually
+    /// exclusive with a fault plan: the outage calendar quotes against
+    /// `free_at` order, which gap placement deliberately breaks.
+    pub fn set_tenants(&mut self, config: TenantConfig) {
+        if config.is_empty() {
+            self.qos = None;
+            return;
+        }
+        assert!(
+            self.fault.is_none(),
+            "fault plans and tenant QoS are mutually exclusive"
+        );
+        self.qos = Some(QosState::new(config, self.devices.len()));
+    }
+
+    /// The installed tenant config (None without one — or with an
+    /// empty one, which installs nothing).
+    pub fn tenants(&self) -> Option<&TenantConfig> {
+        self.qos.as_ref().map(|q| q.config())
+    }
+
+    /// QoS gap backfills that started ahead of an earlier-admitted,
+    /// not-yet-started visit (0 without a tenant config).
+    pub fn qos_preemptions(&self) -> u64 {
+        self.qos.as_ref().map_or(0, |q| q.preemptions())
+    }
+
     /// Fault events fired so far, in fire order — what a recorded
     /// trace serializes as v2 `fault` events.
     pub fn fault_log(&self) -> &[FaultRecord] {
@@ -735,15 +847,22 @@ impl Coordinator {
     }
 
     /// Degradation/shed decisions taken so far, in admission order —
-    /// what a recorded trace serializes as v2 `decision` events.
+    /// what a recorded trace serializes as `decision` events. Fault
+    /// plans and QoS are mutually exclusive, so at most one of the two
+    /// logs exists.
     pub fn decision_log(&self) -> &[DecisionRecord] {
-        self.fault.as_ref().map_or(&[], |f| f.decisions.as_slice())
+        if let Some(f) = self.fault.as_ref() {
+            return f.decisions.as_slice();
+        }
+        self.qos.as_ref().map_or(&[], |q| q.decisions())
     }
 
+    /// Number of devices in the fleet.
     pub fn n_devices(&self) -> usize {
         self.devices.len()
     }
 
+    /// The fleet's devices, in id order.
     pub fn devices(&self) -> &[Device] {
         &self.devices
     }
@@ -817,6 +936,8 @@ impl Coordinator {
         }
         let resp = if self.fault.is_some() {
             self.admit_faulty(&rq)
+        } else if self.qos.is_some() {
+            self.admit_qos(&rq)
         } else {
             match &rq.target {
                 Target::FullGraph => self.serve_full(&rq),
@@ -866,6 +987,8 @@ impl Coordinator {
             retries: 0,
             rerouted: false,
             t_backoff: 0.0,
+            t_qos: 0.0,
+            deadline_missed: false,
             outcome: Outcome::Completed,
         }
     }
@@ -1062,17 +1185,302 @@ impl Coordinator {
         }
     }
 
+    /// [`Coordinator::admit`] under an installed tenant config: pace
+    /// non-premium traffic with the SFQ fair queue, place eligible work
+    /// into per-device idle gaps, and walk over-deadline requests down
+    /// the fidelity cascade. Updates are host-side and tenant-blind —
+    /// they take their normal path.
+    fn admit_qos(&mut self, rq: &Request) -> Response {
+        match &rq.target {
+            Target::FullGraph => self.serve_full_qos(rq),
+            Target::MiniBatch { targets, fanout, seed } => {
+                self.serve_minibatch_qos(rq, targets, fanout, *seed)
+            }
+            Target::Update { inserts, deletes, grow, seed } => {
+                self.serve_update(rq, *inserts, *deletes, *grow, *seed)
+            }
+        }
+    }
+
+    /// Device pick for the QoS path: a cache-warm device first
+    /// (affinity), else the device whose busy timeline offers the
+    /// earliest gap for the estimated cost, ties to the lowest id. No
+    /// coalescing or micro-batching — a gap-placed timeline has no
+    /// single tail job to ride, and a rider on a preempted-past visit
+    /// would inherit a start its own class never earned.
+    fn qos_route(&self, key: &Key, ready: f64, est: f64) -> usize {
+        let q = self.qos.as_ref().expect("QoS routing requires qos state");
+        let pick = |warm_only: bool| -> Option<usize> {
+            self.devices
+                .iter()
+                .filter(|d| !warm_only || d.is_warm(key))
+                .map(|d| (q.earliest_start(d.id, ready, est), d.id))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .map(|(_, id)| id)
+        };
+        if self.dispatcher.affinity {
+            if let Some(dev) = pick(true) {
+                return dev;
+            }
+        }
+        pick(false).expect("fleet has at least one device")
+    }
+
+    /// Whole-graph serving under QoS: charge the SFQ pacing delay once
+    /// (at the requested fidelity's cost), cap it so pacing alone never
+    /// forfeits the deadline, gap-place the visit, and if the placement
+    /// still lands past the deadline walk the cascade — int8 first,
+    /// then (best-effort only) shed with
+    /// [`ShedReason::DeadlineMissed`]. Standard and premium traffic is
+    /// never shed: a hopeless deadline serves late with
+    /// `deadline_missed` set.
+    fn serve_full_qos(&mut self, rq: &Request) -> Response {
+        let snapshot = self.streams.get_mut(rq.dataset.key).map(|st| st.snapshot());
+        let epoch = snapshot.as_ref().map_or(0, |s| s.0);
+        let tenant = self
+            .qos
+            .as_ref()
+            .expect("QoS serving requires qos state")
+            .tenant(rq.tenant);
+        let deadline = tenant.deadline_s.map(|d| rq.arrival + d);
+        let mut precision = rq.precision;
+        // Raw pacing delay, charged exactly once: the cascade re-places
+        // the visit but never re-bills the fair queue.
+        let mut paced: Option<f64> = None;
+        loop {
+            let key = Key::Whole(rq.model, rq.dataset.key, epoch, precision);
+            let est = self.exec_memo.get(&key).map_or(0.0, |c| c.secs);
+            let dev = self.qos_route(&key, rq.arrival, est);
+            let snap_ref = snapshot.as_ref().map(|(_, m, t)| (m, t));
+            let (exe, ready, hit) = self.devices[dev].prepare(
+                rq.arrival,
+                rq.model,
+                &rq.dataset,
+                epoch,
+                snap_ref,
+                precision,
+            );
+            let t_exec = {
+                let mut exec_seconds =
+                    memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
+                exec_seconds(&exe)
+            };
+            let delay = *paced.get_or_insert_with(|| {
+                self.qos
+                    .as_mut()
+                    .expect("QoS serving requires qos state")
+                    .pacing_delay(&tenant, rq.arrival, t_exec)
+            });
+            // Deadline-capped eligibility: pacing alone never pushes a
+            // request past the last instant it could still finish in
+            // time (the device may — that is what the cascade is for).
+            let mut eligible = rq.arrival + delay;
+            if let Some(d) = deadline {
+                eligible = eligible.min((d - t_exec).max(rq.arrival));
+            }
+            let t_qos = eligible - rq.arrival;
+            let job_ready = ready.max(eligible);
+            let start = self
+                .qos
+                .as_ref()
+                .expect("QoS serving requires qos state")
+                .earliest_start(dev, job_ready, t_exec);
+            let done = start + t_exec;
+            let missed = deadline.is_some_and(|d| done > d);
+            if missed && precision == Precision::F32 {
+                // Fidelity cascade, rung one: the int8 twin compiles
+                // smaller and executes faster (GA03).
+                precision = Precision::Int8;
+                continue;
+            }
+            if missed && tenant.class == PriorityClass::BestEffort {
+                let mut r =
+                    self.shed(rq, epoch, ShedReason::DeadlineMissed, false, 0.0, 0, 0, 0, 0.0);
+                r.t_qos = t_qos;
+                r.deadline_missed = true;
+                return r;
+            }
+            self.qos
+                .as_mut()
+                .expect("QoS serving requires qos state")
+                .reserve(dev, start, t_exec);
+            let j = self.devices[dev].commit_gap(key, job_ready, start, done, t_exec, hit);
+            let job = self.devices[dev].jobs[j];
+            let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+            let outcome = if precision != rq.precision {
+                Outcome::Degraded(Degradation::Int8)
+            } else {
+                Outcome::Completed
+            };
+            self.record_decision(rq, outcome);
+            return Response {
+                device: dev as u32,
+                t_compile: ready - rq.arrival,
+                t_exec: job.t_exec,
+                t_queue: job.start - job.ready,
+                latency: job.done - rq.arrival,
+                cache_hit: job.cache_hit,
+                remaps: cost.remaps,
+                precision,
+                quant_visits: cost.quant_blocks,
+                requant_ops: cost.requant_ops,
+                int8_bytes: cost.int8_bytes,
+                t_qos,
+                deadline_missed: missed,
+                outcome,
+                ..Self::base_response(rq, epoch)
+            };
+        }
+    }
+
+    /// Mini-batch serving under QoS. Sampling is host-side and
+    /// unpaced; the device visit is paced, gap-placed, and cascaded
+    /// like whole-graph work, with the extra capped-fanout rung
+    /// (re-sample with every hop clamped to [`DEGRADED_FANOUT_CAP`];
+    /// the original sample's cost stays on the bill).
+    fn serve_minibatch_qos(
+        &mut self,
+        rq: &Request,
+        targets: &[u32],
+        fanout: &[u32],
+        seed: u64,
+    ) -> Response {
+        let tenant = self
+            .qos
+            .as_ref()
+            .expect("QoS serving requires qos state")
+            .tenant(rq.tenant);
+        let deadline = tenant.deadline_s.map(|d| rq.arrival + d);
+        let (mut sampled_v, mut sampled_e, mut shape, epoch) =
+            self.sample_shape(rq, targets, fanout, seed);
+        let mut t_sample = self.costs.sample_cost(sampled_v, sampled_e);
+        let mut precision = rq.precision;
+        let mut capped = false;
+        let mut paced: Option<f64> = None;
+        loop {
+            let key = Key::Bucket(rq.model, shape, precision);
+            let est = self
+                .exec_memo
+                .get(&key)
+                .map_or(0.0, |c| self.costs.visit_overhead_s + c.secs);
+            let dev = self.qos_route(&key, rq.arrival + t_sample, est);
+            let (exe, ready, hit) =
+                self.devices[dev].prepare_bucket(rq.arrival + t_sample, rq.model, shape, precision);
+            let t_item = {
+                let mut exec_seconds =
+                    memo_exec(&mut self.exec_memo, &self.hw, self.dynamic, key);
+                exec_seconds(&exe)
+            };
+            let t_visit = self.costs.visit_overhead_s + t_item;
+            let delay = *paced.get_or_insert_with(|| {
+                self.qos
+                    .as_mut()
+                    .expect("QoS serving requires qos state")
+                    .pacing_delay(&tenant, rq.arrival, t_visit)
+            });
+            let mut eligible = rq.arrival + delay;
+            if let Some(d) = deadline {
+                eligible = eligible.min((d - t_visit).max(rq.arrival));
+            }
+            let t_qos = eligible - rq.arrival;
+            let job_ready = ready.max(eligible);
+            let start = self
+                .qos
+                .as_ref()
+                .expect("QoS serving requires qos state")
+                .earliest_start(dev, job_ready, t_visit);
+            let done = start + t_visit;
+            let missed = deadline.is_some_and(|d| done > d);
+            if missed {
+                if precision == Precision::F32 {
+                    precision = Precision::Int8;
+                    continue;
+                }
+                if !capped && fanout.iter().any(|&h| h > DEGRADED_FANOUT_CAP) {
+                    // Rung two: re-sample a capped ego-net. The
+                    // original sample was real host work — its cost
+                    // stays on the bill.
+                    capped = true;
+                    let capped_fanout: Vec<u32> =
+                        fanout.iter().map(|&h| h.min(DEGRADED_FANOUT_CAP)).collect();
+                    let (v, e, s, _) = self.sample_shape(rq, targets, &capped_fanout, seed);
+                    sampled_v = v;
+                    sampled_e = e;
+                    shape = s;
+                    t_sample += self.costs.sample_cost(v, e);
+                    continue;
+                }
+                if tenant.class == PriorityClass::BestEffort {
+                    let mut r = self.shed(
+                        rq,
+                        epoch,
+                        ShedReason::DeadlineMissed,
+                        true,
+                        t_sample,
+                        sampled_v,
+                        sampled_e,
+                        0,
+                        0.0,
+                    );
+                    r.t_qos = t_qos;
+                    r.deadline_missed = true;
+                    return r;
+                }
+            }
+            self.qos
+                .as_mut()
+                .expect("QoS serving requires qos state")
+                .reserve(dev, start, t_visit);
+            let j = self.devices[dev].commit_gap(key, job_ready, start, done, t_visit, hit);
+            let job = self.devices[dev].jobs[j];
+            let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+            let outcome = match (precision != rq.precision, capped) {
+                (false, false) => Outcome::Completed,
+                (true, false) => Outcome::Degraded(Degradation::Int8),
+                (false, true) => Outcome::Degraded(Degradation::CappedFanout),
+                (true, true) => Outcome::Degraded(Degradation::Int8CappedFanout),
+            };
+            self.record_decision(rq, outcome);
+            return Response {
+                device: dev as u32,
+                t_compile: (ready - rq.arrival - t_sample).max(0.0),
+                t_sample,
+                t_exec: job.t_exec,
+                t_queue: job.start - job.ready,
+                latency: job.done - rq.arrival,
+                cache_hit: job.cache_hit,
+                minibatch: true,
+                sampled_vertices: sampled_v,
+                sampled_edges: sampled_e,
+                remaps: cost.remaps,
+                precision,
+                quant_visits: cost.quant_blocks,
+                requant_ops: cost.requant_ops,
+                int8_bytes: cost.int8_bytes,
+                t_qos,
+                deadline_missed: missed,
+                outcome,
+                ..Self::base_response(rq, epoch)
+            };
+        }
+    }
+
     /// Log a non-`Completed` outcome (completions are the common case
-    /// and are not logged, so the v2 trace stays compact).
+    /// and are not logged, so the trace stays compact). The record
+    /// lands in whichever decision log is live — fault state and QoS
+    /// state are mutually exclusive.
     fn record_decision(&mut self, rq: &Request, outcome: Outcome) {
         if outcome == Outcome::Completed {
             return;
         }
-        let f = self
-            .fault
-            .as_mut()
-            .expect("decisions only exist under a fault plan");
-        f.decisions.push(DecisionRecord { at: rq.arrival, tenant: rq.tenant, outcome });
+        let rec = DecisionRecord { at: rq.arrival, tenant: rq.tenant, outcome };
+        if let Some(f) = self.fault.as_mut() {
+            f.decisions.push(rec);
+        } else if let Some(q) = self.qos.as_mut() {
+            q.decisions.push(rec);
+        } else {
+            panic!("decisions only exist under a fault plan or tenant config");
+        }
     }
 
     /// A shed request: no device work; the outcome is named and logged.
@@ -1524,6 +1932,9 @@ impl Coordinator {
         Ok(profile)
     }
 
+    /// Aggregate the responses served so far into the counter families
+    /// of [`ServeStats`] (latencies are nearest-rank percentiles over
+    /// non-shed inference responses).
     pub fn stats(&self) -> ServeStats {
         if self.responses.is_empty() {
             return ServeStats::default();
@@ -1622,7 +2033,57 @@ impl Coordinator {
             corruptions: self.fault.as_ref().map_or(0, |f| f.corruptions),
             downtime: self.fault.as_ref().map_or(0.0, |f| f.downtime),
             t_backoff: self.responses.iter().map(|r| r.t_backoff).sum(),
+            tenants: self.tenant_stats(),
         }
+    }
+
+    /// Per-tenant latency and outcome families, one row per tenant id
+    /// seen in the inference responses (ascending id; updates are
+    /// tenant-blind host work and excluded). Empty unless a tenant
+    /// config is installed.
+    fn tenant_stats(&self) -> Vec<TenantStats> {
+        let Some(q) = self.qos.as_ref() else {
+            return Vec::new();
+        };
+        let mut ids: Vec<u32> = self
+            .responses
+            .iter()
+            .filter(|r| !r.update)
+            .map(|r| r.tenant)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.iter()
+            .map(|&id| {
+                let rows: Vec<&Response> = self
+                    .responses
+                    .iter()
+                    .filter(|r| !r.update && r.tenant == id)
+                    .collect();
+                let mut lats: Vec<f64> = rows
+                    .iter()
+                    .filter(|r| !r.outcome.is_shed())
+                    .map(|r| r.latency)
+                    .collect();
+                lats.sort_by(f64::total_cmp);
+                TenantStats {
+                    tenant: id,
+                    weight: q.tenant(id).weight,
+                    completed: rows.iter().filter(|r| !r.outcome.is_shed()).count() as u64,
+                    degraded: rows.iter().filter(|r| r.outcome.is_degraded()).count() as u64,
+                    shed: rows.iter().filter(|r| r.outcome.is_shed()).count() as u64,
+                    missed: rows.iter().filter(|r| r.deadline_missed).count() as u64,
+                    p50: percentile(&lats, 0.50),
+                    p99: percentile(&lats, 0.99),
+                    t_qos: rows.iter().map(|r| r.t_qos).sum(),
+                    busy: rows
+                        .iter()
+                        .filter(|r| !r.outcome.is_shed())
+                        .map(|r| r.t_exec)
+                        .sum(),
+                }
+            })
+            .collect()
     }
 }
 
@@ -1630,6 +2091,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::graph::{dataset, FULL_NEIGHBORHOOD};
+    use crate::serve::qos::Tenant;
     use crate::util::Rng;
 
     fn mixed_workload(n: usize, seed: u64) -> Vec<Request> {
@@ -2612,5 +3074,219 @@ mod tests {
             51,
             "every request ends in exactly one terminal state"
         );
+    }
+
+    fn tenant_trio() -> TenantConfig {
+        TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 4.0, deadline_s: None, class: PriorityClass::Premium },
+                Tenant { id: 1, weight: 2.0, deadline_s: None, class: PriorityClass::Standard },
+                Tenant {
+                    id: 2,
+                    weight: 1.0,
+                    deadline_s: Some(0.05),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn empty_tenant_config_serves_byte_identically() {
+        let run = |tenants: Option<TenantConfig>| {
+            let cfg = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            if let Some(t) = tenants {
+                c.set_tenants(t);
+            }
+            let mut reqs = mixed_workload(24, 13);
+            reqs.extend(minibatch_workload(12, 13, 1e-4));
+            let stats = c.run(reqs);
+            let none = c.tenants().is_none();
+            (stats, c.responses, none)
+        };
+        let (s0, r0, _) = run(None);
+        let (s1, r1, none) = run(Some(TenantConfig::empty()));
+        assert_eq!(s0, s1);
+        assert_eq!(r0, r1);
+        assert!(none, "an empty config must not activate the QoS path");
+        assert!(s1.tenants.is_empty(), "no per-tenant families without a config");
+        assert!(r1.iter().all(|r| r.t_qos == 0.0 && !r.deadline_missed));
+    }
+
+    #[test]
+    #[should_panic(expected = "mutually exclusive")]
+    fn tenant_config_and_fault_plan_are_mutually_exclusive() {
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.set_fault_plan(FaultPlan::crash_and_recover(41, 3, 6e-3));
+        c.set_tenants(tenant_trio());
+    }
+
+    #[test]
+    fn premium_backfills_ahead_of_paced_best_effort() {
+        let co = dataset("CO").unwrap();
+        let cfg = FleetConfig { n_devices: 1, ..FleetConfig::default() };
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+        c.set_tenants(TenantConfig {
+            tenants: vec![
+                Tenant { id: 0, weight: 4.0, deadline_s: None, class: PriorityClass::Premium },
+                Tenant { id: 9, weight: 1.0, deadline_s: None, class: PriorityClass::BestEffort },
+            ],
+        });
+        // A best-effort flood, then one premium arrival mid-burst.
+        let mut reqs: Vec<Request> = (0..6)
+            .map(|i| Request::full(9, ZooModel::B1, co, i as f64 * 1e-5))
+            .collect();
+        reqs.push(Request::full(0, ZooModel::B1, co, 2.5e-5));
+        c.run(reqs);
+        let premium: Vec<&Response> = c.responses.iter().filter(|r| r.tenant == 0).collect();
+        let flood: Vec<&Response> = c.responses.iter().filter(|r| r.tenant == 9).collect();
+        assert_eq!(premium.len(), 1);
+        assert_eq!(premium[0].t_qos, 0.0, "premium is never paced");
+        assert!(
+            flood.iter().skip(1).all(|r| r.t_qos > 0.0),
+            "the flood is paced to its reserved rate"
+        );
+        let worst_flood = flood.iter().map(|r| r.latency).fold(0.0, f64::max);
+        assert!(
+            premium[0].latency < worst_flood,
+            "premium ({}) must undercut the paced flood ({worst_flood})",
+            premium[0].latency
+        );
+        assert!(
+            c.qos_preemptions() > 0,
+            "the premium visit backfills a gap ahead of reserved work"
+        );
+        assert!(c.responses.iter().all(|r| r.outcome == Outcome::Completed));
+        let s = c.stats();
+        assert_eq!(s.tenants.len(), 2);
+        let p = s.tenants.iter().find(|t| t.tenant == 0).unwrap();
+        assert_eq!((p.weight, p.missed, p.shed), (4.0, 0, 0));
+        let b = s.tenants.iter().find(|t| t.tenant == 9).unwrap();
+        assert!(b.t_qos > 0.0, "the flood's pacing delay is accounted per tenant");
+    }
+
+    #[test]
+    fn qos_deadline_walks_cascade_and_sheds_best_effort() {
+        let co = dataset("CO").unwrap();
+        // A hopeless deadline forces the full cascade on every request.
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.set_tenants(TenantConfig {
+            tenants: vec![
+                Tenant {
+                    id: 1,
+                    weight: 1.0,
+                    deadline_s: Some(1e-9),
+                    class: PriorityClass::Standard,
+                },
+                Tenant {
+                    id: 2,
+                    weight: 1.0,
+                    deadline_s: Some(1e-9),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        });
+        // Standard is never shed: it serves late at degraded fidelity.
+        let a = c.admit(Request::full(1, ZooModel::B1, co, 0.0));
+        assert_eq!(a.outcome, Outcome::Degraded(Degradation::Int8));
+        assert_eq!(a.precision, Precision::Int8, "served on the GA03 datapath");
+        assert!(a.deadline_missed);
+        // Best effort under the same pressure sheds with a named reason.
+        let b = c.admit(Request::full(2, ZooModel::B1, co, 1e-4));
+        assert_eq!(b.outcome, Outcome::Shed(ShedReason::DeadlineMissed));
+        assert!(b.deadline_missed);
+        assert_eq!(b.device, u32::MAX);
+        // Mini-batch walks both rungs before the verdict.
+        let m = c.admit(Request::minibatch(
+            1,
+            ZooModel::B1,
+            co,
+            vec![7, 11],
+            vec![64, 64],
+            5,
+            2e-4,
+        ));
+        assert_eq!(m.outcome, Outcome::Degraded(Degradation::Int8CappedFanout));
+        assert!(m.deadline_missed);
+        let bm = c.admit(Request::minibatch(2, ZooModel::B1, co, vec![7], vec![64, 64], 5, 3e-4));
+        assert_eq!(bm.outcome, Outcome::Shed(ShedReason::DeadlineMissed));
+        assert!(bm.t_sample > 0.0, "the shed bills the sampling already done");
+        let s = c.stats();
+        assert_eq!((s.shed, s.degraded, s.completed), (2, 2, 2));
+        assert_eq!(c.decision_log().len(), 4);
+        let t1 = s.tenants.iter().find(|t| t.tenant == 1).unwrap();
+        let t2 = s.tenants.iter().find(|t| t.tenant == 2).unwrap();
+        assert_eq!((t1.degraded, t1.missed, t1.shed), (2, 2, 0));
+        assert_eq!((t2.shed, t2.completed), (2, 0));
+    }
+
+    #[test]
+    fn stats_diff_names_tenant_families() {
+        let a = ServeStats {
+            tenants: vec![
+                TenantStats { tenant: 0, weight: 4.0, completed: 5, p99: 1e-3, ..Default::default() },
+                TenantStats { tenant: 2, weight: 1.0, shed: 1, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        assert!(a.diff(&b).is_empty());
+        b.tenants[0].p99 = 2e-3;
+        b.tenants[1].shed = 2;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(
+            d.iter().any(|s| s.contains("tenants[0].p99: 0.001 != 0.002")),
+            "{d:?}"
+        );
+        assert!(d.iter().any(|s| s.contains("tenants[1].shed: 1 != 2")), "{d:?}");
+        b.tenants.pop();
+        assert!(
+            a.diff(&b).iter().any(|s| s.contains("tenants.len: 2 != 1")),
+            "{:?}",
+            a.diff(&b)
+        );
+    }
+
+    #[test]
+    fn response_diff_names_qos_fields() {
+        let mut c = Coordinator::new(HwConfig::alveo_u250());
+        c.run(mixed_workload(2, 2));
+        let a = c.responses[0];
+        let mut b = a;
+        b.t_qos = 1e-3;
+        b.deadline_missed = true;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("t_qos:")), "{d:?}");
+        assert!(d.iter().any(|s| s.starts_with("deadline_missed:")), "{d:?}");
+    }
+
+    #[test]
+    fn qos_serving_replays_bit_identically() {
+        let run = || {
+            let cfg = FleetConfig { n_devices: 3, ..FleetConfig::default() };
+            let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+            c.set_tenants(tenant_trio());
+            let mut reqs = mixed_workload(30, 17);
+            reqs.extend(minibatch_workload(20, 17, 1e-4));
+            let stats = c.run(reqs);
+            let decisions = c.decision_log().to_vec();
+            (stats, c.responses, decisions, c.qos_preemptions())
+        };
+        let (s1, r1, d1, p1) = run();
+        let (s2, r2, d2, p2) = run();
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+        assert_eq!(d1, d2);
+        assert_eq!(p1, p2);
+        assert!(!s1.tenants.is_empty(), "per-tenant families exist under a config");
+        assert_eq!(
+            s1.completed + s1.shed,
+            50,
+            "every request ends in exactly one terminal state"
+        );
+        assert!(r1.iter().any(|r| r.t_qos > 0.0), "somebody pays a pacing delay");
     }
 }

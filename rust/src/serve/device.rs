@@ -22,13 +22,18 @@ use std::sync::Arc;
 /// [`clock::VISIT_OVERHEAD_S`]. `t_exec` is the visit total.
 #[derive(Clone, Copy, Debug)]
 pub struct Job {
+    /// Program-cache key of the executable this job ran.
     pub key: Key,
     /// When the program is ready to start (arrival + any sampling and
     /// compile stalls).
     pub ready: f64,
+    /// When the device began executing.
     pub start: f64,
+    /// When the device finished.
     pub done: f64,
+    /// Execution seconds charged to the busy timeline.
     pub t_exec: f64,
+    /// Whether the executable came from the program cache.
     pub cache_hit: bool,
     /// Requests coalesced onto this job beyond the one that created it
     /// (identical whole-graph work: no extra device time).
@@ -47,9 +52,13 @@ pub struct Job {
 /// once).
 #[derive(Clone, Copy, Debug)]
 pub struct FaultWindow {
+    /// Window start (virtual seconds).
     pub from: f64,
+    /// Window end (`f64::INFINITY` for a permanent crash).
     pub until: f64,
+    /// Crash window (kills crossing work) vs. stall window (pauses it).
     pub crash: bool,
+    /// Index of the plan event that produced this window.
     pub event: usize,
 }
 
@@ -66,7 +75,10 @@ pub enum Quote {
     Crashed { start: f64, at: f64, event: usize },
 }
 
+/// One overlay accelerator in the fleet: program cache, compile-warmth
+/// ledger, outage calendar, and a busy timeline on the virtual clock.
 pub struct Device {
+    /// Fleet-assigned device index.
     pub id: usize,
     cache: ProgramCache,
     /// Virtual time each key's compile finishes on this device. A hit on
@@ -97,6 +109,7 @@ pub struct Device {
     /// Outage calendar (sorted by `from`; empty without a fault plan —
     /// the zero-fault path never consults it).
     faults: Vec<FaultWindow>,
+    /// Every unit of work scheduled on this device, in admission order.
     pub jobs: Vec<Job>,
     /// Index of the first job that may not have started yet. Start times
     /// are nondecreasing per device (each job begins no earlier than its
@@ -107,6 +120,7 @@ pub struct Device {
 }
 
 impl Device {
+    /// A fresh device with an empty cache and an idle timeline.
     pub fn new(id: usize, hw: HwConfig) -> Device {
         Device {
             id,
@@ -131,6 +145,7 @@ impl Device {
         self.faults = windows;
     }
 
+    /// This device's slice of the fleet's outage calendar.
     pub fn fault_windows(&self) -> &[FaultWindow] {
         &self.faults
     }
@@ -367,6 +382,37 @@ impl Device {
     pub fn commit(&mut self, key: Key, ready: f64, start: f64, done: f64, t_exec: f64, hit: bool) -> usize {
         debug_assert!(start >= self.free_at, "quoted start predates device availability");
         self.free_at = done;
+        self.busy += t_exec;
+        self.jobs.push(Job {
+            key,
+            ready,
+            start,
+            done,
+            t_exec,
+            cache_hit: hit,
+            riders: 0,
+            batched: 0,
+        });
+        self.jobs.len() - 1
+    }
+
+    /// The QoS path's gap-placement twin of [`Device::commit`]: `start`
+    /// may precede `free_at` (the scheduler verified the idle gap
+    /// `[start, done)` against its own interval timeline, backfilling
+    /// ahead of admitted-but-unstarted work), so `free_at` only ever
+    /// moves forward. Gap placement forgoes coalescing and
+    /// micro-batching — QoS serving never scans `pending_jobs`, so the
+    /// out-of-order starts this records are harmless to the cursor.
+    pub fn commit_gap(
+        &mut self,
+        key: Key,
+        ready: f64,
+        start: f64,
+        done: f64,
+        t_exec: f64,
+        hit: bool,
+    ) -> usize {
+        self.free_at = self.free_at.max(done);
         self.busy += t_exec;
         self.jobs.push(Job {
             key,

@@ -21,6 +21,8 @@ pub enum Route {
     Batch(usize, usize),
 }
 
+/// The fleet's routing policy knobs (all default-on under
+/// [`FleetConfig`](super::coordinator::FleetConfig)).
 #[derive(Clone, Copy, Debug)]
 pub struct Dispatcher {
     /// Prefer devices whose cache already holds the requested program
@@ -34,6 +36,10 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// Route a whole-graph request: ride an identical unstarted job
+    /// when coalescing is on and the ride finishes no later than a
+    /// fresh dispatch, else dispatch fresh (warm-first under affinity,
+    /// else least-loaded).
     pub fn route(&self, devices: &[Device], key: &Key, arrival: f64) -> Route {
         let target = self.dispatch_device(devices, key, arrival);
         if self.coalesce {

@@ -67,6 +67,7 @@ impl FaultEvent {
 /// Derived per-device health at an instant (see [`FaultPlan::health_at`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Health {
+    /// No fault window covers this instant.
     Healthy,
     /// Inside a transient-stall window: alive, not progressing.
     Stalled,
@@ -88,6 +89,8 @@ pub struct FaultPlan {
     /// The seed the plan was generated from (0 for hand-authored
     /// plans) — recorded for provenance, not consulted at serve time.
     pub seed: u64,
+    /// The scheduled events, in authoring order (serve-time lookups
+    /// scan, so order only matters for tie-breaking identical instants).
     pub events: Vec<FaultEvent>,
 }
 
@@ -158,6 +161,8 @@ impl FaultPlan {
         health
     }
 
+    /// JSON encoding (`seed` as a decimal string so u64 round-trips
+    /// exactly).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("seed", Json::Str(self.seed.to_string())),
@@ -165,6 +170,7 @@ impl FaultPlan {
         ])
     }
 
+    /// Inverse of [`FaultPlan::to_json`].
     pub fn from_json(j: &Json) -> Result<FaultPlan> {
         let seed = j
             .str_of("seed")?
@@ -184,12 +190,14 @@ impl FaultPlan {
         FaultPlan::from_json(&Json::parse(text).context("fault plan is not valid JSON")?)
     }
 
+    /// Load a plan from a `--fault-plan` JSON file.
     pub fn load(path: &Path) -> Result<FaultPlan> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading fault plan {}", path.display()))?;
         FaultPlan::parse(&text).with_context(|| format!("parsing fault plan {}", path.display()))
     }
 
+    /// Write the plan as JSON (one trailing newline).
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, format!("{}\n", self.to_json()))
             .with_context(|| format!("writing fault plan {}", path.display()))
@@ -222,6 +230,7 @@ pub fn fault_event_json(e: &FaultEvent) -> Json {
     }
 }
 
+/// Inverse of [`fault_event_json`].
 pub fn fault_event_from(j: &Json) -> Result<FaultEvent> {
     match j.str_of("kind")? {
         "crash" => Ok(FaultEvent::DeviceCrash {
@@ -271,14 +280,21 @@ pub enum ShedReason {
     NoHealthyDevice,
     /// `CostModel::max_retries` attempts all died under crashes.
     RetriesExhausted,
+    /// A best-effort request still past its QoS deadline after the full
+    /// fidelity cascade (see [`super::qos`]); shed by policy, not by a
+    /// fault.
+    DeadlineMissed,
 }
 
 /// How a request ended. Every accepted request gets exactly one — the
 /// no-lost-work invariant the fault tests pin.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Outcome {
+    /// Served at requested fidelity.
     Completed,
+    /// Served on a lower fidelity rung.
     Degraded(Degradation),
+    /// Not served.
     Shed(ShedReason),
 }
 
@@ -298,9 +314,11 @@ impl Outcome {
             Outcome::Degraded(Degradation::Int8CappedFanout) => "degraded:int8_capped_fanout",
             Outcome::Shed(ShedReason::NoHealthyDevice) => "shed:no_healthy_device",
             Outcome::Shed(ShedReason::RetriesExhausted) => "shed:retries_exhausted",
+            Outcome::Shed(ShedReason::DeadlineMissed) => "shed:deadline_missed",
         }
     }
 
+    /// Inverse of [`Outcome::key`]; unknown outcomes are a hard error.
     pub fn parse(s: &str) -> Result<Outcome> {
         Ok(match s {
             "completed" => Outcome::Completed,
@@ -309,14 +327,17 @@ impl Outcome {
             "degraded:int8_capped_fanout" => Outcome::Degraded(Degradation::Int8CappedFanout),
             "shed:no_healthy_device" => Outcome::Shed(ShedReason::NoHealthyDevice),
             "shed:retries_exhausted" => Outcome::Shed(ShedReason::RetriesExhausted),
+            "shed:deadline_missed" => Outcome::Shed(ShedReason::DeadlineMissed),
             _ => bail!("unknown outcome '{s}'"),
         })
     }
 
+    /// True for any [`Outcome::Shed`].
     pub fn is_shed(&self) -> bool {
         matches!(self, Outcome::Shed(_))
     }
 
+    /// True for any [`Outcome::Degraded`].
     pub fn is_degraded(&self) -> bool {
         matches!(self, Outcome::Degraded(_))
     }
@@ -326,7 +347,9 @@ impl Outcome {
 /// trace as a `fault` event; `at` is the *scheduled* instant).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FaultRecord {
+    /// Scheduled instant of the event (virtual-clock seconds).
     pub at: f64,
+    /// The fired event.
     pub fault: FaultEvent,
 }
 
@@ -334,8 +357,11 @@ pub struct FaultRecord {
 /// event; completions are not logged — they are the common case).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DecisionRecord {
+    /// Arrival of the affected request (virtual-clock seconds).
     pub at: f64,
+    /// Tenant of the affected request.
     pub tenant: u32,
+    /// The non-`Completed` outcome decided.
     pub outcome: Outcome,
 }
 
@@ -404,6 +430,7 @@ mod tests {
             Outcome::Degraded(Degradation::Int8CappedFanout),
             Outcome::Shed(ShedReason::NoHealthyDevice),
             Outcome::Shed(ShedReason::RetriesExhausted),
+            Outcome::Shed(ShedReason::DeadlineMissed),
         ];
         for o in all {
             assert_eq!(Outcome::parse(o.key()).unwrap(), o);

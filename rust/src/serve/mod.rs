@@ -64,6 +64,19 @@
 //! (f32 → int8, full fanout → capped) before being shed with a named
 //! reason, and the whole faulty run replays bit-identically. With no
 //! plan (or an empty one) every code path above is untouched.
+//!
+//! Multi-tenant QoS rides on the same dormant-state pattern
+//! ([`qos`]): a [`qos::TenantConfig`] gives each tenant a fair-queue
+//! weight, an optional deadline, and a priority class; the coordinator
+//! then paces non-premium traffic with start-time fair queuing over
+//! modeled visit cost, places eligible work into per-device idle gaps
+//! (preempting *unstarted* visits for higher-priority arrivals), walks
+//! over-deadline requests down the same fidelity cascade, and sheds
+//! only best-effort traffic — with
+//! [`ShedReason::DeadlineMissed`](fault::ShedReason::DeadlineMissed).
+//! With no config installed, serving stays byte-identical to the
+//! tenant-blind fleet.
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod clock;
@@ -71,6 +84,7 @@ pub mod coordinator;
 pub mod device;
 pub mod dispatcher;
 pub mod fault;
+pub mod qos;
 
 pub use cache::{Key, ProgramCache, SERVE_WEIGHT_SEED};
 pub use crate::quant::Precision;
@@ -84,3 +98,4 @@ pub use fault::{
     DecisionRecord, Degradation, FaultEvent, FaultPlan, FaultRecord, Health, Outcome,
     ShedReason,
 };
+pub use qos::{FairQueue, PriorityClass, QosState, Tenant, TenantConfig, TenantStats};

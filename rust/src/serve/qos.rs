@@ -1,0 +1,553 @@
+//! Multi-tenant QoS: weighted-fair pacing, deadline-aware placement,
+//! and the per-tenant policy table that drives both.
+//!
+//! A [`TenantConfig`] names the tenants sharing a fleet: each carries a
+//! weight (its share of modeled device capacity), an optional per-request
+//! deadline, and a [`PriorityClass`]. The scheduler is start-time fair
+//! queuing over modeled visit cost ([`FairQueue`]): virtual time advances
+//! at `n_devices / W_total` per wall second, every non-premium visit is
+//! stamped with a start tag `S = max(V(arrival), F_tenant)` and charges
+//! its tenant's finish tag `F_tenant = S + cost / weight`, and the visit
+//! becomes *eligible* at the wall time `S * W_total / n_devices`. The
+//! pacing delay `eligible - arrival` is exactly the wait a tenant sees
+//! when it exceeds its reserved rate `(weight / W_total) * n_devices`
+//! devices — capacity reservation in the cgroup-quota sense, not
+//! work-conserving scavenging, so a flooding tenant cannot move another
+//! tenant's tags. Premium traffic skips the queue entirely: zero delay,
+//! no tag charged.
+//!
+//! Placement is gap-aware: [`QosState`] keeps each device's busy
+//! timeline as a sorted interval list and places a newly eligible visit
+//! into the earliest idle gap that fits — which is how admission
+//! preempts *unstarted* visits (a premium or under-share arrival starts
+//! before paced work that was admitted earlier but not yet begun;
+//! nothing already started, and no already-emitted response, is ever
+//! retracted). Backfills ahead of scheduled work are counted in
+//! [`QosState::preemptions`].
+//!
+//! With no config (or an empty one) the coordinator takes its historical
+//! code path untouched: tenant-free serving stays byte-identical to a
+//! build without this module.
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::fault::DecisionRecord;
+
+/// Scheduling class of a tenant, coarsest knob first: premium bypasses
+/// the fair queue, best-effort is the only class the scheduler may shed
+/// on a missed deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PriorityClass {
+    /// Strict priority: never paced (no virtual-clock delay, no tag
+    /// charged) and never shed; served late if its deadline is missed.
+    Premium,
+    /// Paced by weighted-fair queuing; degraded under deadline pressure
+    /// but never shed — a missed deadline is served late and flagged.
+    Standard,
+    /// Paced like standard, but a request still over its deadline after
+    /// the full fidelity cascade is shed with
+    /// [`ShedReason::DeadlineMissed`](super::fault::ShedReason::DeadlineMissed).
+    BestEffort,
+}
+
+impl PriorityClass {
+    /// Stable wire key (tenants.json and trace v3 encoding).
+    pub fn key(&self) -> &'static str {
+        match self {
+            PriorityClass::Premium => "premium",
+            PriorityClass::Standard => "standard",
+            PriorityClass::BestEffort => "best_effort",
+        }
+    }
+
+    /// Inverse of [`PriorityClass::key`]; unknown classes are a hard
+    /// error (mirrors the fault-event codec's versioning rules).
+    pub fn parse(s: &str) -> Result<PriorityClass> {
+        Ok(match s {
+            "premium" => PriorityClass::Premium,
+            "standard" => PriorityClass::Standard,
+            "best_effort" => PriorityClass::BestEffort,
+            _ => bail!("unknown priority class '{s}'"),
+        })
+    }
+}
+
+/// One tenant's QoS policy row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tenant {
+    /// Tenant id, matched against [`Request::tenant`](super::Request).
+    pub id: u32,
+    /// Fair-queue weight: this tenant's reserved fraction of fleet
+    /// capacity is `weight / total_weight`. Must be finite and > 0.
+    pub weight: f64,
+    /// Per-request latency deadline in seconds from arrival. `None`
+    /// disables the deadline machinery (no cascade, no miss flag) for
+    /// this tenant.
+    pub deadline_s: Option<f64>,
+    /// Scheduling class (see [`PriorityClass`]).
+    pub class: PriorityClass,
+}
+
+impl Tenant {
+    /// Policy applied to a request whose tenant id is not in the
+    /// config: weight-1 standard traffic with no deadline, contending
+    /// against the configured tenants' total weight.
+    pub fn fallback(id: u32) -> Tenant {
+        Tenant { id, weight: 1.0, deadline_s: None, class: PriorityClass::Standard }
+    }
+}
+
+/// The tenant policy table (the `--tenants` file format). Empty means
+/// QoS off: the coordinator installs no scheduler state at all.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantConfig {
+    /// Policy rows, one per tenant id.
+    pub tenants: Vec<Tenant>,
+}
+
+impl TenantConfig {
+    /// An empty config: serving behaves exactly as if none were set.
+    pub fn empty() -> TenantConfig {
+        TenantConfig::default()
+    }
+
+    /// True when no tenants are configured (QoS stays dormant).
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Sum of configured weights — the `W_total` of the SFQ virtual
+    /// clock. Requests from unknown tenants contend at weight 1 against
+    /// this total without enlarging it.
+    pub fn total_weight(&self) -> f64 {
+        self.tenants.iter().map(|t| t.weight).sum()
+    }
+
+    /// The policy row for `id`, falling back to
+    /// [`Tenant::fallback`] for unknown tenants.
+    pub fn get(&self, id: u32) -> Tenant {
+        self.tenants.iter().find(|t| t.id == id).copied().unwrap_or(Tenant::fallback(id))
+    }
+
+    /// JSON encoding (`deadline_s` is omitted when absent, so
+    /// deadline-free rows round-trip byte-identically).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut fields = vec![
+                    ("id", Json::Num(t.id as f64)),
+                    ("weight", Json::Num(t.weight)),
+                    ("class", Json::Str(t.class.key().to_string())),
+                ];
+                if let Some(d) = t.deadline_s {
+                    fields.push(("deadline_s", Json::Num(d)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![("tenants", Json::Arr(rows))])
+    }
+
+    /// Inverse of [`TenantConfig::to_json`], validating every row:
+    /// weights must be finite and positive, deadlines positive, and
+    /// tenant ids unique.
+    pub fn from_json(j: &Json) -> Result<TenantConfig> {
+        let tenants = j
+            .arr_of("tenants")?
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let parse_row = || -> Result<Tenant> {
+                    let id = row.u32_of("id")?;
+                    let weight = row.f64_of("weight")?;
+                    if !weight.is_finite() || weight <= 0.0 {
+                        bail!("weight {weight} is not finite and positive");
+                    }
+                    let deadline_s = match row.get("deadline_s") {
+                        None => None,
+                        Some(_) => {
+                            let d = row.f64_of("deadline_s")?;
+                            if !d.is_finite() || d <= 0.0 {
+                                bail!("deadline_s {d} is not finite and positive");
+                            }
+                            Some(d)
+                        }
+                    };
+                    let class = PriorityClass::parse(row.str_of("class")?)?;
+                    Ok(Tenant { id, weight, deadline_s, class })
+                };
+                parse_row().with_context(|| format!("tenants[{i}]"))
+            })
+            .collect::<Result<Vec<Tenant>>>()?;
+        for (i, t) in tenants.iter().enumerate() {
+            if tenants[..i].iter().any(|u| u.id == t.id) {
+                bail!("tenants[{i}]: duplicate tenant id {}", t.id);
+            }
+        }
+        Ok(TenantConfig { tenants })
+    }
+
+    /// Parse a config from its JSON text (the `--tenants` file format).
+    pub fn parse(text: &str) -> Result<TenantConfig> {
+        TenantConfig::from_json(&Json::parse(text).context("tenant config is not valid JSON")?)
+    }
+
+    /// Load a config from a `tenants.json` file.
+    pub fn load(path: &Path) -> Result<TenantConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tenant config {}", path.display()))?;
+        TenantConfig::parse(&text)
+            .with_context(|| format!("parsing tenant config {}", path.display()))
+    }
+
+    /// Write the config as pretty-stable JSON (one trailing newline).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing tenant config {}", path.display()))
+    }
+}
+
+/// Start-time fair queuing over modeled cost, reduced to its virtual
+/// clock: wall time `a` maps to virtual time `V(a) = a * C / W` (for
+/// `C` devices of capacity and total weight `W`), a visit of cost `c`
+/// from a tenant of weight `w` gets start tag `S = max(V(a), F)` and
+/// advances that tenant's finish tag `F <- S + c / w`, and the visit
+/// may start at wall time `S * W / C`. [`FairQueue::delay`] returns the
+/// resulting pacing wait; a tenant inside its reserved rate
+/// `(w / W) * C` always sees zero.
+#[derive(Clone, Debug)]
+pub struct FairQueue {
+    /// Total configured weight (`W` in the virtual-time map).
+    total_weight: f64,
+    /// Fleet capacity in devices (`C` in the virtual-time map).
+    capacity: f64,
+    /// Per-tenant virtual finish tag of the last stamped visit.
+    finish: HashMap<u32, f64>,
+}
+
+impl FairQueue {
+    /// A queue for `n_devices` devices shared by tenants of summed
+    /// weight `total_weight` (clamped to at least one device / unit
+    /// weight so a degenerate config cannot divide by zero).
+    pub fn new(total_weight: f64, n_devices: usize) -> FairQueue {
+        FairQueue {
+            total_weight: total_weight.max(f64::MIN_POSITIVE),
+            capacity: (n_devices.max(1)) as f64,
+            finish: HashMap::new(),
+        }
+    }
+
+    /// Stamp one visit of modeled cost `cost` seconds for `tenant`
+    /// (weight `weight`) arriving at wall time `arrival`, and return
+    /// the pacing delay in wall seconds (0 when the tenant is inside
+    /// its reserved rate). Charges the tenant's finish tag: call
+    /// exactly once per admitted visit.
+    pub fn delay(&mut self, tenant: u32, weight: f64, arrival: f64, cost: f64) -> f64 {
+        let v = arrival * self.capacity / self.total_weight;
+        let f = self.finish.entry(tenant).or_insert(0.0);
+        let start_tag = v.max(*f);
+        *f = start_tag + cost / weight.max(f64::MIN_POSITIVE);
+        (start_tag * self.total_weight / self.capacity - arrival).max(0.0)
+    }
+}
+
+/// Live scheduler state the coordinator carries while a tenant config
+/// is installed (`Option<QosState>` — `None` keeps the historical FIFO
+/// path byte-identical, mirroring the fault module's dormant pattern).
+#[derive(Clone, Debug)]
+pub struct QosState {
+    config: TenantConfig,
+    queue: FairQueue,
+    /// Per-device busy timelines: sorted, disjoint `(start, end)`
+    /// intervals of committed (possibly not yet started) visits.
+    busy: Vec<Vec<(f64, f64)>>,
+    /// Degrade/shed decisions, spliced into traces exactly like the
+    /// fault module's decision log.
+    pub(super) decisions: Vec<DecisionRecord>,
+    preemptions: u64,
+}
+
+impl QosState {
+    /// Scheduler state for `config` over an `n_devices` fleet.
+    pub fn new(config: TenantConfig, n_devices: usize) -> QosState {
+        let queue = FairQueue::new(config.total_weight(), n_devices);
+        QosState {
+            config,
+            queue,
+            busy: vec![Vec::new(); n_devices.max(1)],
+            decisions: Vec::new(),
+            preemptions: 0,
+        }
+    }
+
+    /// The installed tenant policy table.
+    pub fn config(&self) -> &TenantConfig {
+        &self.config
+    }
+
+    /// Policy row for `id` (unknown ids get [`Tenant::fallback`]).
+    pub fn tenant(&self, id: u32) -> Tenant {
+        self.config.get(id)
+    }
+
+    /// SFQ pacing delay for one visit of modeled cost `cost`. Premium
+    /// tenants bypass the queue: zero delay, no tag charged. Charges
+    /// the tenant's finish tag otherwise — call exactly once per
+    /// admitted visit (the fidelity cascade re-places but never
+    /// re-charges).
+    pub fn pacing_delay(&mut self, t: &Tenant, arrival: f64, cost: f64) -> f64 {
+        if t.class == PriorityClass::Premium {
+            return 0.0;
+        }
+        self.queue.delay(t.id, t.weight, arrival, cost)
+    }
+
+    /// Earliest instant `>= ready` at which `device` has an idle gap of
+    /// at least `dur` seconds — the gap-aware twin of `Device::free_at`
+    /// scheduling, and the mechanism that lets eligible work start
+    /// ahead of paced, unstarted visits.
+    pub fn earliest_start(&self, device: usize, ready: f64, dur: f64) -> f64 {
+        let mut t = ready;
+        for &(s, e) in &self.busy[device] {
+            if t + dur <= s {
+                break;
+            }
+            if e > t {
+                t = e;
+            }
+        }
+        t
+    }
+
+    /// Commit `[start, start + dur)` on `device`'s busy timeline.
+    /// Placing ahead of an already-committed interval (a backfill that
+    /// preempts an unstarted visit) bumps the preemption counter.
+    pub fn reserve(&mut self, device: usize, start: f64, dur: f64) {
+        if dur <= 0.0 {
+            return;
+        }
+        let end = start + dur;
+        let iv = &mut self.busy[device];
+        if iv.last().is_some_and(|&(s, _)| s >= end) {
+            self.preemptions += 1;
+        }
+        let pos = iv.partition_point(|&(s, _)| s < start);
+        iv.insert(pos, (start, end));
+        let mut i = pos;
+        if i > 0 && iv[i - 1].1 >= iv[i].0 {
+            iv[i - 1].1 = iv[i - 1].1.max(iv[i].1);
+            iv.remove(i);
+            i -= 1;
+        }
+        if i + 1 < iv.len() && iv[i].1 >= iv[i + 1].0 {
+            iv[i].1 = iv[i].1.max(iv[i + 1].1);
+            iv.remove(i + 1);
+        }
+    }
+
+    /// Visits that started ahead of an earlier-admitted, not-yet-started
+    /// visit (gap backfills — the observable form of preemption under
+    /// the respond-at-admission discipline).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Degrade/shed decisions logged so far (trace `decision` events).
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.decisions
+    }
+}
+
+/// Per-tenant serving counters, one row per tenant id seen in a run
+/// (rendered by `serve_summary`, carried in `ServeStats::tenants` and
+/// trace v3). Latency percentiles cover served inference (sheds and
+/// churn excluded), matching the fleet-wide `p50`/`p99` convention.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantStats {
+    /// Tenant id.
+    pub tenant: u32,
+    /// Configured fair-queue weight (1.0 for unknown tenants).
+    pub weight: f64,
+    /// Requests served (completed or degraded; churn excluded).
+    pub completed: u64,
+    /// Requests served on a lower fidelity rung.
+    pub degraded: u64,
+    /// Requests shed.
+    pub shed: u64,
+    /// Requests past their deadline (served-late flags plus
+    /// deadline sheds).
+    pub missed: u64,
+    /// Median served latency, seconds.
+    pub p50: f64,
+    /// 99th-percentile served latency, seconds.
+    pub p99: f64,
+    /// Total QoS pacing delay charged to this tenant, seconds.
+    pub t_qos: f64,
+    /// Device-seconds executed for this tenant (throughput-share
+    /// numerator: `busy / sum(busy)` is the tenant's realized share).
+    pub busy: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    fn sample_config() -> TenantConfig {
+        TenantConfig {
+            tenants: vec![
+                Tenant {
+                    id: 0,
+                    weight: 4.0,
+                    deadline_s: Some(0.02),
+                    class: PriorityClass::Premium,
+                },
+                Tenant { id: 1, weight: 2.0, deadline_s: None, class: PriorityClass::Standard },
+                Tenant {
+                    id: 7,
+                    weight: 1.0,
+                    deadline_s: Some(0.05),
+                    class: PriorityClass::BestEffort,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn tenant_config_round_trips_through_json() {
+        let cfg = sample_config();
+        let back = TenantConfig::parse(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.total_weight(), 7.0);
+        let empty = TenantConfig::empty();
+        assert!(empty.is_empty());
+        assert_eq!(TenantConfig::parse(&empty.to_json().to_string()).unwrap(), empty);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_rows() {
+        let bad_weight = r#"{"tenants": [{"id": 0, "weight": -1.0, "class": "standard"}]}"#;
+        let err = TenantConfig::parse(bad_weight).unwrap_err().to_string();
+        assert!(err.contains("tenants[0]"), "{err}");
+        let bad_class = r#"{"tenants": [{"id": 0, "weight": 1.0, "class": "platinum"}]}"#;
+        let err = format!("{:#}", TenantConfig::parse(bad_class).unwrap_err());
+        assert!(err.contains("unknown priority class 'platinum'"), "{err}");
+        let dup = r#"{"tenants": [
+            {"id": 3, "weight": 1.0, "class": "standard"},
+            {"id": 3, "weight": 2.0, "class": "premium"}]}"#;
+        let err = TenantConfig::parse(dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate tenant id 3"), "{err}");
+        let bad_deadline =
+            r#"{"tenants": [{"id": 0, "weight": 1.0, "class": "standard", "deadline_s": 0.0}]}"#;
+        assert!(TenantConfig::parse(bad_deadline).is_err());
+    }
+
+    #[test]
+    fn unknown_tenants_fall_back_without_widening_the_clock() {
+        let cfg = sample_config();
+        let t = cfg.get(99);
+        assert_eq!(t, Tenant::fallback(99));
+        assert_eq!(t.class, PriorityClass::Standard);
+        // The fallback row does not join the configured total.
+        assert_eq!(cfg.total_weight(), 7.0);
+    }
+
+    #[test]
+    fn premium_is_never_paced_and_charges_no_tag() {
+        let mut q = QosState::new(sample_config(), 1);
+        let premium = q.tenant(0);
+        let standard = q.tenant(1);
+        for _ in 0..100 {
+            assert_eq!(q.pacing_delay(&premium, 0.0, 1.0), 0.0);
+        }
+        // The fair queue never saw premium: standard's first visit at
+        // t=0 starts the virtual clock from zero delay.
+        assert_eq!(q.pacing_delay(&standard, 0.0, 1e-3), 0.0);
+    }
+
+    #[test]
+    fn a_flooding_tenant_is_paced_to_its_reserved_rate() {
+        // Two equal-weight tenants, one device: a burst of cost-c jobs
+        // from tenant A at t=0 must be spaced c * W / w = 2c apart.
+        let mut q = FairQueue::new(2.0, 1);
+        let c = 1e-3;
+        assert_eq!(q.delay(0, 1.0, 0.0, c), 0.0);
+        let d1 = q.delay(0, 1.0, 0.0, c);
+        assert!((d1 - 2.0 * c).abs() < 1e-12, "second job delayed {d1}");
+        let d2 = q.delay(0, 1.0, 0.0, c);
+        assert!((d2 - 4.0 * c).abs() < 1e-12, "third job delayed {d2}");
+        // Tenant B arriving mid-burst is inside its reserved rate:
+        // no delay at all.
+        assert_eq!(q.delay(1, 1.0, 3.0 * c, c), 0.0);
+    }
+
+    #[test]
+    fn sfq_shares_track_weights() {
+        // Property: tenants flooding from t=0 each get eligible work
+        // proportional to weight, within one job of exact.
+        forall("sfq_shares_track_weights", 60, |rng| {
+            let n = 2 + rng.below(3) as usize;
+            let weights: Vec<f64> = (0..n).map(|_| 0.5 + 3.5 * rng.f64()).collect();
+            let total: f64 = weights.iter().sum();
+            let mut q = FairQueue::new(total, 1);
+            let horizon = 1.0;
+            let max_cost = 5e-3;
+            let mut eligible_work = vec![0.0; n];
+            for (k, &w) in weights.iter().enumerate() {
+                loop {
+                    let cost = 1e-3 + (max_cost - 1e-3) * rng.f64();
+                    if q.delay(k as u32, w, 0.0, cost) > horizon {
+                        break;
+                    }
+                    eligible_work[k] += cost;
+                }
+            }
+            for (k, &w) in weights.iter().enumerate() {
+                let share = eligible_work[k] / horizon;
+                let want = w / total;
+                if (share - want).abs() > max_cost / horizon + 1e-9 {
+                    return Err(format!(
+                        "tenant {k}: share {share:.5} vs weight share {want:.5} \
+                         (weights {weights:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gap_placement_backfills_and_counts_preemptions() {
+        let mut q = QosState::new(sample_config(), 2);
+        // Paced visit far out on device 0.
+        assert_eq!(q.earliest_start(0, 10.0, 1.0), 10.0);
+        q.reserve(0, 10.0, 1.0);
+        assert_eq!(q.preemptions(), 0);
+        // An eligible visit backfills the idle gap ahead of it...
+        assert_eq!(q.earliest_start(0, 0.0, 1.0), 0.0);
+        q.reserve(0, 0.0, 1.0);
+        assert_eq!(q.preemptions(), 1);
+        // ...but a visit too big for the gap queues behind.
+        assert_eq!(q.earliest_start(0, 2.0, 9.0), 11.0);
+        // Back-to-back placements merge into one interval.
+        q.reserve(0, 1.0, 2.0);
+        assert_eq!(q.earliest_start(0, 0.0, 1.0), 3.0);
+        // Other devices are untouched.
+        assert_eq!(q.earliest_start(1, 0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn reserve_merges_overlapping_neighbors() {
+        let mut q = QosState::new(TenantConfig::empty(), 1);
+        q.reserve(0, 0.0, 1.0);
+        q.reserve(0, 2.0, 1.0);
+        q.reserve(0, 1.0, 1.0); // exactly bridges the gap
+        assert_eq!(q.earliest_start(0, 0.0, 0.5), 3.0);
+        assert_eq!(q.preemptions(), 1); // the bridge landed before (2,3)
+    }
+}

@@ -15,7 +15,10 @@ use graphagile::daemon::{
 };
 use graphagile::graph::{dataset, Dataset};
 use graphagile::ir::ALL_MODELS;
-use graphagile::serve::{CostModel, FleetConfig, Precision, Request, Target};
+use graphagile::serve::{
+    CostModel, FaultEvent, FaultPlan, FleetConfig, Precision, PriorityClass, Request, Target,
+    Tenant, TenantConfig,
+};
 use graphagile::util::{forall, Json, Rng};
 use std::io::Cursor;
 
@@ -89,13 +92,17 @@ fn arb_trace(rng: &mut Rng) -> Trace {
             }
         });
     }
-    Trace {
+    let mut t = Trace {
         version: TRACE_VERSION,
-        config: TraceConfig { hw, fleet },
+        config: TraceConfig { hw, fleet, fault_plan: None, tenants: None },
         events,
         responses: Vec::new(),
         stats: None,
-    }
+    };
+    // Stamp the oldest sufficient version, exactly as writers do — these
+    // fault-free, tenant-free traces are v1 documents.
+    t.version = t.min_version();
+    t
 }
 
 #[test]
@@ -247,7 +254,12 @@ fn stats_and_drain_events_carry_their_timestamps() {
     ] {
         let t = Trace {
             version: TRACE_VERSION,
-            config: TraceConfig { hw: HwConfig::alveo_u250(), fleet: FleetConfig::default() },
+            config: TraceConfig {
+                hw: HwConfig::alveo_u250(),
+                fleet: FleetConfig::default(),
+                fault_plan: None,
+                tenants: None,
+            },
             events: vec![e.clone()],
             responses: Vec::new(),
             stats: None,
@@ -269,7 +281,9 @@ fn example_trace_in_repo_parses_and_replays() {
         .join("traces")
         .join("mixed.trace.json");
     let t = Trace::load(&path).unwrap();
-    assert_eq!(t.version, TRACE_VERSION);
+    // The recording predates faults and tenant QoS, so it stays a v1
+    // document under the oldest-sufficient-version rule.
+    assert_eq!(t.version, 1);
     assert!(!t.requests().is_empty());
     let (responses, stats) = graphagile::daemon::replay(&t);
     assert_eq!(responses.len(), t.requests().len());
@@ -278,6 +292,43 @@ fn example_trace_in_repo_parses_and_replays() {
     let (responses2, stats2) = graphagile::daemon::replay(&t);
     assert_eq!(responses, responses2);
     assert!(stats.diff(&stats2).is_empty());
+}
+
+#[test]
+fn v2_fault_traces_round_trip_under_the_v3_reader() {
+    // Forward compat: a fault-era recording (v2 content, no tenant
+    // content) still stamps v2, carries no v3 keys, and round-trips
+    // bit-identically through the current reader.
+    let mut rng = Rng::new(11);
+    let mut t = arb_trace(&mut rng);
+    t.config.fault_plan = Some(FaultPlan {
+        seed: 9,
+        events: vec![FaultEvent::TransientStall { device: 0, at: 0.0, duration: 1e-6 }],
+    });
+    t.version = t.min_version();
+    assert_eq!(t.version, 2);
+    let s = t.encode();
+    assert!(!s.contains("\"tenants\""), "{s}");
+    assert!(!s.contains("t_qos"), "{s}");
+    let back = Trace::parse(&s).unwrap();
+    assert_eq!(back, t);
+}
+
+#[test]
+fn v3_tenant_traces_round_trip() {
+    let mut rng = Rng::new(12);
+    let mut t = arb_trace(&mut rng);
+    t.config.tenants = Some(TenantConfig {
+        tenants: vec![
+            Tenant { id: 0, weight: 2.5, deadline_s: Some(0.01), class: PriorityClass::Premium },
+            Tenant { id: 7, weight: 1.0, deadline_s: None, class: PriorityClass::BestEffort },
+        ],
+    });
+    t.version = t.min_version();
+    assert_eq!(t.version, 3);
+    let back = Trace::parse(&t.encode()).unwrap();
+    assert_eq!(back, t);
+    assert_eq!(back.config.tenants, t.config.tenants);
 }
 
 #[test]
