@@ -1,0 +1,165 @@
+//! Span-tracer overhead benchmark: the same deterministic mixed
+//! workload served with tracing off and tracing on. Written to
+//! `BENCH_obs.json` so the observability tax is recorded across
+//! commits.
+//!
+//! Invariants (enforced strict or not): the traced run's responses and
+//! stats are bit-identical to the untraced run's (tracing only
+//! observes), the dormant tracer records zero spans, and the live one
+//! records a span tree for every admitted request.
+//!
+//! Strict gate (`GA_BENCH_STRICT=1`): tracing-on p50 wall-clock stays
+//! within 1.05x the tracing-off p50.
+//!
+//! Knobs: `GA_REQUESTS` (default 400), `GA_RUNS` (default 9).
+
+use graphagile::config::HwConfig;
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::serve::{Coordinator, CostModel, FleetConfig, Precision, Request};
+use graphagile::util::{timed, Rng};
+
+const DEVICES: usize = 2;
+const SPACING_S: f64 = 1e-4;
+
+/// Mixed workload: whole-graph f32 and int8, mini-batch ego-nets, and
+/// churn batches — every serving path the tracer must cover.
+fn mixed_workload(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B7];
+    let graphs = [dataset("CO").unwrap(), dataset("PU").unwrap()];
+    (0..n)
+        .map(|i| {
+            let tenant = rng.below(4) as u32;
+            let ds = graphs[rng.below(2) as usize];
+            let model = models[rng.below(3) as usize];
+            let arrival = i as f64 * SPACING_S;
+            match rng.below(8) {
+                0 => Request::update(
+                    tenant,
+                    ds,
+                    16 + rng.below(48) as u32,
+                    rng.below(8) as u32,
+                    rng.below(3) as u32,
+                    seed ^ i as u64,
+                    arrival,
+                ),
+                1 | 2 => {
+                    let k = 1 + rng.below(3) as usize;
+                    let targets =
+                        (0..k).map(|_| rng.below(ds.n_vertices) as u32).collect();
+                    Request::minibatch(
+                        tenant,
+                        model,
+                        ds,
+                        targets,
+                        vec![8, 4],
+                        seed.wrapping_add(i as u64),
+                        arrival,
+                    )
+                }
+                3 => Request::full(tenant, model, ds, arrival)
+                    .with_precision(Precision::Int8),
+                _ => Request::full(tenant, model, ds, arrival),
+            }
+        })
+        .collect()
+}
+
+/// One full serve of the workload; returns the coordinator and the
+/// wall-clock seconds `run` took.
+fn serve(reqs: &[Request], traced: bool) -> (Coordinator, f64) {
+    let cfg = FleetConfig {
+        n_devices: DEVICES,
+        costs: CostModel { deadline_s: f64::INFINITY, ..CostModel::default() },
+        ..FleetConfig::default()
+    };
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+    c.set_tracing(traced);
+    let work = reqs.to_vec();
+    let (_, secs) = timed(|| c.run(work));
+    (c, secs)
+}
+
+/// Median of a sample set (nearest-rank on the sorted copy).
+fn p50(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    s[s.len() / 2]
+}
+
+fn main() {
+    let n: usize = std::env::var("GA_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let runs: usize = std::env::var("GA_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(9);
+    let strict = std::env::var("GA_BENCH_STRICT").ok().as_deref() == Some("1");
+
+    let reqs = mixed_workload(n, 41);
+
+    // One warmup serve per variant (cache-cold compile paths, page-in),
+    // then `runs` timed serves each.
+    serve(&reqs, false);
+    serve(&reqs, true);
+    let mut off_times = Vec::with_capacity(runs);
+    let mut on_times = Vec::with_capacity(runs);
+    let (off_c, t) = serve(&reqs, false);
+    off_times.push(t);
+    let (on_c, t) = serve(&reqs, true);
+    on_times.push(t);
+    for _ in 1..runs {
+        off_times.push(serve(&reqs, false).1);
+        on_times.push(serve(&reqs, true).1);
+    }
+
+    // Tracing only observes: byte-identical serving either way.
+    assert_eq!(off_c.responses, on_c.responses, "tracing changed a response");
+    assert_eq!(off_c.stats(), on_c.stats(), "tracing changed the stats");
+    assert_eq!(off_c.spans().len(), 0, "dormant tracer recorded spans");
+    assert!(on_c.spans().len() >= n, "live tracer must span every request");
+
+    let chrome = on_c.chrome_trace_json();
+    let off_p50 = p50(&off_times);
+    let on_p50 = p50(&on_times);
+    let ratio = if off_p50 > 0.0 { on_p50 / off_p50 } else { f64::INFINITY };
+
+    println!(
+        "{:>12} {:>12} {:>12} {:>9}",
+        "variant", "p50 (ms)", "spans", "ratio"
+    );
+    println!("{:>12} {:>12.3} {:>12} {:>9}", "tracing-off", off_p50 * 1e3, 0, "-");
+    println!(
+        "{:>12} {:>12.3} {:>12} {:>8.3}x",
+        "tracing-on",
+        on_p50 * 1e3,
+        on_c.spans().len(),
+        ratio
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs_overhead\",\n  \"requests\": {n},\n  \"runs\": {runs},\n  \
+         \"devices\": {DEVICES},\n  \"off_p50_s\": {off_p50:.6},\n  \
+         \"on_p50_s\": {on_p50:.6},\n  \"spans\": {},\n  \
+         \"chrome_trace_bytes\": {},\n  \
+         \"gates\": {{\"overhead_ratio\": {ratio:.6}}}\n}}\n",
+        on_c.spans().len(),
+        chrome.len(),
+    );
+    std::fs::write("BENCH_obs.json", &json).expect("write BENCH_obs.json");
+    eprintln!("wrote BENCH_obs.json ({n} requests, {runs} runs)");
+
+    if strict {
+        assert!(
+            ratio <= 1.05,
+            "STRICT: tracing-on p50 ({:.3} ms) exceeds 1.05 x tracing-off \
+             ({:.3} ms) — ratio {ratio:.3}x",
+            on_p50 * 1e3,
+            off_p50 * 1e3,
+        );
+        eprintln!("STRICT gate passed: overhead ratio {ratio:.3}x <= 1.05x");
+    }
+}

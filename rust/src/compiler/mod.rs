@@ -103,9 +103,26 @@ impl CompileReport {
     /// Deterministic modeled compile seconds (the virtual-clock cost the
     /// serving coordinator charges per cache miss).
     pub fn total(&self) -> f64 {
+        self.modeled_passes() + self.modeled_emit() + self.modeled_schedule()
+    }
+
+    /// Modeled pass-setup share of [`CompileReport::total`] (four
+    /// optimization passes over the IR layers). These three modeled
+    /// addends are what the span tracer subdivides a compile stall by
+    /// — unlike the measured `t_*` fields, they are deterministic.
+    pub fn modeled_passes(&self) -> f64 {
         self.layers as f64 * 4.0 * Self::PASS_SETUP_S
-            + self.instrs as f64 * Self::PER_INSTR_S
-            + self.blocks as f64 * Self::PER_BLOCK_S
+    }
+
+    /// Modeled instruction-emit share of [`CompileReport::total`].
+    pub fn modeled_emit(&self) -> f64 {
+        self.instrs as f64 * Self::PER_INSTR_S
+    }
+
+    /// Modeled block-schedule share of [`CompileReport::total`]
+    /// (scheduling + mutex annotation per Tiling Block).
+    pub fn modeled_schedule(&self) -> f64 {
+        self.blocks as f64 * Self::PER_BLOCK_S
     }
 
     /// Measured wall-clock sum of the four passes.

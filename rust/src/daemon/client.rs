@@ -71,6 +71,14 @@ impl Client {
         }
     }
 
+    /// Scrape a Prometheus text-exposition snapshot of the daemon's
+    /// live counters and latency histogram. Read-only: the scrape is
+    /// not recorded into the trace and cannot perturb replay.
+    pub fn metrics(&mut self) -> Result<String> {
+        let reply = self.call(&ClientMsg::Metrics)?;
+        Ok(reply.str_of("metrics")?.to_string())
+    }
+
     /// Fence all admitted work into the trace and return final stats.
     pub fn drain(&mut self) -> Result<ServeStats> {
         let reply = self.call(&ClientMsg::Drain)?;

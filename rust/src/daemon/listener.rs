@@ -13,6 +13,7 @@ use crate::util::Json;
 use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::time::Duration;
 
 /// Default per-connection socket timeout: a client that goes silent
@@ -29,6 +30,9 @@ pub struct Daemon {
     port: u16,
     /// Per-connection read/write timeout (see [`DEFAULT_CONN_TIMEOUT`]).
     conn_timeout: Duration,
+    /// Where to export the session's Chrome trace at shutdown, if
+    /// anywhere ([`Daemon::set_chrome_trace`]).
+    chrome_trace: Option<PathBuf>,
 }
 
 impl Daemon {
@@ -81,6 +85,7 @@ impl Daemon {
             session: DaemonSession::with_config(hw, fleet, plan, tenants),
             port,
             conn_timeout: DEFAULT_CONN_TIMEOUT,
+            chrome_trace: None,
         })
     }
 
@@ -95,12 +100,25 @@ impl Daemon {
         self.conn_timeout = timeout;
     }
 
+    /// Enable span tracing and export the session's Chrome trace to
+    /// `path` at shutdown (`daemon --chrome-trace out.json`). Without
+    /// this call the session stays dormant and records traces
+    /// byte-identical to a tracing-free build.
+    pub fn set_chrome_trace(&mut self, path: PathBuf) {
+        self.session.enable_tracing();
+        self.chrome_trace = Some(path);
+    }
+
     /// Accept and serve connections until a client sends `shutdown`,
     /// then seal and return the recorded trace.
     pub fn serve(mut self) -> Result<Trace> {
         loop {
             let (stream, _peer) = self.listener.accept().context("accepting connection")?;
             if self.handle_conn(stream)? {
+                if let Some(path) = &self.chrome_trace {
+                    std::fs::write(path, self.session.chrome_trace_json())
+                        .with_context(|| format!("writing chrome trace {}", path.display()))?;
+                }
                 return Ok(self.session.finalize());
             }
         }
@@ -156,6 +174,12 @@ impl Daemon {
                 Ok(ClientMsg::Tenants) => {
                     let t = self.session.tenants().map_or(Json::Null, |t| t.to_json());
                     write_frame(&mut writer, &ok_reply(vec![("tenants", t)]))?;
+                }
+                Ok(ClientMsg::Metrics) => {
+                    // Read-only and unrecorded (see DaemonSession::
+                    // metrics): a scrape never perturbs the trace.
+                    let text = self.session.metrics();
+                    write_frame(&mut writer, &ok_reply(vec![("metrics", Json::Str(text))]))?;
                 }
                 Ok(ClientMsg::Drain) => {
                     let st = self.session.drain();

@@ -20,6 +20,13 @@
 //! [`TenantConfig`](crate::serve::TenantConfig) is recorded in the
 //! trace header, the trace stamps version 3, and replay re-installs
 //! the config so QoS scheduling decisions reproduce bit-for-bit.
+//!
+//! Observability rides along without changing the trace format: the
+//! `metrics` protocol op serves a Prometheus snapshot of the live
+//! counters (read-only, never recorded — scraping cannot perturb
+//! replay), `daemon --chrome-trace out.json` exports the session's
+//! span stream ([`crate::obs`]) at shutdown, and [`replay_traced`]
+//! regenerates that exact span stream offline from the trace alone.
 
 #![warn(missing_docs)]
 
@@ -40,8 +47,9 @@ use anyhow::{bail, Result};
 
 /// Build the coordinator a trace describes and feed it the recorded
 /// admissions. Admission order is the determinism contract — events
-/// are *not* re-sorted.
-fn replay_coordinator(trace: &Trace) -> Coordinator {
+/// are *not* re-sorted. `traced` turns the span tracer on before any
+/// admission so the replayed span stream covers the whole session.
+fn replay_coordinator(trace: &Trace, traced: bool) -> Coordinator {
     let mut coord = Coordinator::fleet(trace.config.hw.clone(), trace.config.fleet);
     if let Some(p) = &trace.config.fault_plan {
         coord.set_fault_plan(p.clone());
@@ -49,6 +57,7 @@ fn replay_coordinator(trace: &Trace) -> Coordinator {
     if let Some(t) = &trace.config.tenants {
         coord.set_tenants(t.clone());
     }
+    coord.set_tracing(traced);
     for e in &trace.events {
         match e {
             TraceEvent::Admit(rq) => {
@@ -69,9 +78,19 @@ fn replay_coordinator(trace: &Trace) -> Coordinator {
 /// Re-execute a trace's admitted events in recorded order through a
 /// coordinator built from the trace's own config (fault plan included).
 pub fn replay(trace: &Trace) -> (Vec<Response>, ServeStats) {
-    let coord = replay_coordinator(trace);
+    let coord = replay_coordinator(trace, false);
     let stats = coord.stats();
     (coord.responses, stats)
+}
+
+/// [`replay`] with the span tracer on: additionally returns the
+/// session's Chrome trace-event JSON. The responses and stats are
+/// byte-identical to an untraced replay — tracing only observes.
+pub fn replay_traced(trace: &Trace) -> (Vec<Response>, ServeStats, String) {
+    let coord = replay_coordinator(trace, true);
+    let stats = coord.stats();
+    let spans = coord.chrome_trace_json();
+    (coord.responses, stats, spans)
 }
 
 /// Replay and diff against the trace's recorded outcomes. Returns the
@@ -85,7 +104,7 @@ pub fn verify(trace: &Trace) -> Result<Vec<String>> {
              (events-only traces can be replayed, not verified)"
         );
     }
-    let coord = replay_coordinator(trace);
+    let coord = replay_coordinator(trace, false);
     let stats = coord.stats();
     let responses = &coord.responses;
     let mut divergences = Vec::new();

@@ -5,8 +5,8 @@
 //! exactly that many bytes of UTF-8 JSON. Frames are capped at
 //! [`MAX_FRAME`] bytes so a hostile or corrupt length prefix cannot
 //! make the daemon allocate gigabytes. Client frames carry an `"op"`
-//! field (`submit` / `churn` / `stats` / `tenants` / `drain` /
-//! `shutdown`); the
+//! field (`submit` / `churn` / `stats` / `tenants` / `metrics` /
+//! `drain` / `shutdown`); the
 //! daemon replies with `{"ok": true, ...}` or
 //! `{"ok": false, "error": "..."}` — one reply frame per request
 //! frame, in order.
@@ -91,6 +91,10 @@ pub enum ClientMsg {
     /// Query the installed tenant QoS policy table (`null` when the
     /// daemon runs tenant-blind).
     Tenants,
+    /// Scrape a Prometheus text-exposition snapshot of the live
+    /// counters and latency histogram. Read-only and never recorded
+    /// into the trace, so scraping cannot perturb replay.
+    Metrics,
     /// Wait until all admitted work is accounted (the virtual-clock
     /// fleet is always drained; this fences the event into the trace).
     Drain,
@@ -126,6 +130,7 @@ impl ClientMsg {
             }
             "stats" => Ok(ClientMsg::Stats),
             "tenants" => Ok(ClientMsg::Tenants),
+            "metrics" => Ok(ClientMsg::Metrics),
             "drain" => Ok(ClientMsg::Drain),
             "shutdown" => Ok(ClientMsg::Shutdown),
             op => bail!("unknown op '{op}'"),
@@ -160,6 +165,7 @@ impl ClientMsg {
             }
             ClientMsg::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
             ClientMsg::Tenants => Json::obj(vec![("op", Json::Str("tenants".into()))]),
+            ClientMsg::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
             ClientMsg::Drain => Json::obj(vec![("op", Json::Str("drain".into()))]),
             ClientMsg::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
@@ -193,6 +199,7 @@ mod tests {
             ClientMsg::Churn(Request::update(1, dataset("PU").unwrap(), 8, 2, 1, u64::MAX, 0.0)),
             ClientMsg::Stats,
             ClientMsg::Tenants,
+            ClientMsg::Metrics,
             ClientMsg::Drain,
             ClientMsg::Shutdown,
         ];

@@ -207,6 +207,27 @@ impl DaemonSession {
         self.coord.tenants()
     }
 
+    /// Enable deterministic span tracing on the session's coordinator
+    /// (`daemon --chrome-trace`). Off by default — a dormant session
+    /// records traces byte-identical to a tracing-free build.
+    pub fn enable_tracing(&mut self) {
+        self.coord.set_tracing(true);
+    }
+
+    /// Chrome trace-event JSON of the spans recorded so far (empty
+    /// event array apart from metadata when tracing is off).
+    pub fn chrome_trace_json(&self) -> String {
+        self.coord.chrome_trace_json()
+    }
+
+    /// Prometheus text exposition of the live session — the `metrics`
+    /// protocol op. Read-only and deliberately *not* recorded as a
+    /// trace event: scraping a daemon mid-run must never change the
+    /// recorded byte stream a replay is verified against.
+    pub fn metrics(&self) -> String {
+        crate::obs::prometheus(&self.coord.stats(), &self.coord.latency_histogram())
+    }
+
     /// Seal the session into a self-contained trace: config, events in
     /// admission order, and the recorded outcomes replay will be
     /// verified against.

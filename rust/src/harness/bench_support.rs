@@ -10,6 +10,7 @@ use super::tables::Ctx;
 use crate::graph::{dataset, Dataset, ALL_DATASETS};
 use std::time::Instant;
 
+/// The `GA_SCALE` dataset divisor (default 1 = paper scale).
 pub fn scale_from_env() -> u64 {
     std::env::var("GA_SCALE")
         .ok()
@@ -17,6 +18,7 @@ pub fn scale_from_env() -> u64 {
         .unwrap_or(1)
 }
 
+/// The `GA_DATASETS` selection (default: all seven of Table 4).
 pub fn datasets_from_env() -> Vec<Dataset> {
     match std::env::var("GA_DATASETS") {
         Ok(list) if !list.is_empty() && list != "all" => list

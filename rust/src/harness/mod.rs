@@ -17,6 +17,8 @@
 //! | f17 | Fig. 17 — E2E vs DGL (CPU/GPU)                   |
 //! | f18 | Fig. 18 — E2E vs PyG (CPU/GPU), with OOM cells   |
 
+#![warn(missing_docs)]
+
 pub mod bench_support;
 pub mod render;
 pub mod tables;

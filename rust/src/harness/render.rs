@@ -320,6 +320,7 @@ mod tests {
         assert!(s.contains("11 (789 edges rebuilt)"), "{s}");
         assert!(s.contains("invalidated       13 whole-graph"), "{s}");
         assert!(s.contains("1.000 ms / 2.000 ms"), "{s}");
+        assert!(s.contains("mean latency      1.500 ms"), "{s}");
         assert!(s.contains("0.500 ms / 3.000 ms"), "{s}");
         assert!(s.contains("0.500 s over 1.000 s"), "{s}");
         assert!(s.contains("17 crashes, 18 stalls, 19 corruptions (0.250 s downtime)"), "{s}");

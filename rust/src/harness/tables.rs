@@ -16,6 +16,7 @@ use std::collections::HashMap;
 /// Shared context: hardware config + per-dataset tile-count cache with
 /// the measured partitioning time (the dominant T_LoC term, O(|V|+|E|)).
 pub struct Ctx {
+    /// Hardware configuration every cell compiles and simulates for.
     pub hw: HwConfig,
     /// Scale divisor for the synthetic datasets (1 = paper-scale; CI
     /// uses a larger divisor to keep test runs fast).
@@ -24,10 +25,12 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// A context on the paper's Alveo U250 config at the given scale.
     pub fn new(scale: u64) -> Ctx {
         Ctx { hw: HwConfig::alveo_u250(), scale, cache: HashMap::new() }
     }
 
+    /// The dataset as served at this context's scale divisor.
     pub fn dataset(&self, d: Dataset) -> Dataset {
         if self.scale > 1 {
             d.scaled(self.scale)
@@ -81,6 +84,7 @@ impl Ctx {
 // Table 4 / Table 5 (static descriptions)
 // ---------------------------------------------------------------------------
 
+/// Table 4 — dataset statistics (static).
 pub fn table4() -> String {
     let rows: Vec<Vec<String>> = ALL_DATASETS
         .iter()
@@ -97,6 +101,7 @@ pub fn table4() -> String {
     markdown(&["Dataset", "Vertices", "Edges", "Features", "Classes"], &rows)
 }
 
+/// Table 5 — the b1-b8 model zoo (static).
 pub fn table5() -> String {
     let rows = vec![
         vec!["b1", "GCN", "2", "16"],
@@ -118,16 +123,24 @@ pub fn table5() -> String {
 // Table 7 — end-to-end latency
 // ---------------------------------------------------------------------------
 
+/// One Table 7 cell: the end-to-end latency split of (model, dataset).
 #[derive(Clone, Debug)]
 pub struct T7Row {
+    /// Model key (b1-b8).
     pub model: &'static str,
+    /// Dataset key (Table 4 abbreviation).
     pub dataset: &'static str,
+    /// End-to-end seconds: `t_loc + t_comm + t_loh`.
     pub t_e2e: f64,
+    /// Latency of compilation (partitioning + compiler passes).
     pub t_loc: f64,
+    /// Host→device communication seconds.
     pub t_comm: f64,
+    /// Latency on hardware (simulated cycles / freq).
     pub t_loh: f64,
 }
 
+/// Table 7 rows for the given (model, dataset) grid.
 pub fn table7_rows(ctx: &mut Ctx, models: &[ZooModel], datasets: &[Dataset]) -> Vec<T7Row> {
     let mut rows = Vec::new();
     for m in models {
@@ -152,6 +165,7 @@ pub fn table7_rows(ctx: &mut Ctx, models: &[ZooModel], datasets: &[Dataset]) -> 
     rows
 }
 
+/// Table 7 — end-to-end latency, rendered over the full zoo x datasets.
 pub fn table7(ctx: &mut Ctx) -> String {
     let rows = table7_rows(ctx, &ALL_MODELS, &ALL_DATASETS);
     let cells: Vec<Vec<String>> = rows
@@ -177,6 +191,7 @@ pub fn table7(ctx: &mut Ctx) -> String {
 // Table 8 — binary sizes
 // ---------------------------------------------------------------------------
 
+/// Table 8 rows: per-model binary MB per dataset, plus the input row.
 pub fn table8_rows(ctx: &mut Ctx) -> Vec<(String, Vec<f64>)> {
     let mut rows = Vec::new();
     for m in ALL_MODELS {
@@ -195,6 +210,7 @@ pub fn table8_rows(ctx: &mut Ctx) -> Vec<(String, Vec<f64>)> {
     rows
 }
 
+/// Table 8 — binary sizes, rendered.
 pub fn table8(ctx: &mut Ctx) -> String {
     let rows = table8_rows(ctx);
     let cells: Vec<Vec<String>> = rows
@@ -234,14 +250,17 @@ fn ablation(ctx: &mut Ctx, datasets: &[Dataset], variant: &str) -> Vec<(String, 
     out
 }
 
+/// Fig. 14 rows: per-model average LoH speedup % from order opt.
 pub fn fig14_rows(ctx: &mut Ctx, datasets: &[Dataset]) -> Vec<(String, f64)> {
     ablation(ctx, datasets, "order")
 }
 
+/// Fig. 15 rows: per-model average LoH speedup % from layer fusion.
 pub fn fig15_rows(ctx: &mut Ctx, datasets: &[Dataset]) -> Vec<(String, f64)> {
     ablation(ctx, datasets, "fusion")
 }
 
+/// Fig. 16 rows: per-model average LoH speedup % from comp/comm overlap.
 pub fn fig16_rows(ctx: &mut Ctx, datasets: &[Dataset]) -> Vec<(String, f64)> {
     ablation(ctx, datasets, "overlap")
 }
@@ -254,14 +273,17 @@ fn fig_markdown(rows: &[(String, f64)], what: &str) -> String {
     markdown(&["Model", what], &cells)
 }
 
+/// Fig. 14 — order-optimization ablation, rendered.
 pub fn fig14(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
     fig_markdown(&fig14_rows(ctx, datasets), "avg LoH speedup from order opt")
 }
 
+/// Fig. 15 — layer-fusion ablation, rendered.
 pub fn fig15(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
     fig_markdown(&fig15_rows(ctx, datasets), "avg LoH speedup from fusion")
 }
 
+/// Fig. 16 — comp/comm-overlap ablation, rendered.
 pub fn fig16(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
     fig_markdown(&fig16_rows(ctx, datasets), "avg LoH speedup from overlap")
 }
@@ -270,15 +292,22 @@ pub fn fig16(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
 // Figs. 17-18 — cross-platform comparison
 // ---------------------------------------------------------------------------
 
+/// One Figs. 17-18 cell: framework E2E seconds vs GraphAGILE's.
 #[derive(Clone, Debug)]
 pub struct CrossRow {
+    /// Model key (b1-b8).
     pub model: &'static str,
+    /// Dataset key (Table 4 abbreviation).
     pub dataset: &'static str,
+    /// Framework-on-CPU E2E seconds; `None` renders as the paper's OOM.
     pub cpu: Option<f64>,
+    /// Framework-on-GPU E2E seconds; `None` renders as the paper's OOM.
     pub gpu: Option<f64>,
+    /// GraphAGILE E2E seconds (T_LoC + T_comm + T_LoH).
     pub graphagile: f64,
 }
 
+/// Figs. 17-18 rows: framework CPU/GPU baselines vs GraphAGILE E2E.
 pub fn cross_platform_rows(
     ctx: &mut Ctx,
     fw: Framework,
@@ -362,6 +391,7 @@ pub fn fig18(ctx: &mut Ctx, datasets: &[Dataset]) -> String {
 // Table 9 — qualitative comparison (static)
 // ---------------------------------------------------------------------------
 
+/// Table 9 — qualitative comparison against prior accelerators (static).
 pub fn table9() -> String {
     let rows: Vec<Vec<String>> = vec![
         vec!["HyGCN", "No", "No", "graph partitioning, sparsity elim.", "No", "Yes", "No"],
@@ -383,15 +413,22 @@ pub fn table9() -> String {
 // Table 10 — accelerator LoH comparison (b2 on FL/RE/YE/AP)
 // ---------------------------------------------------------------------------
 
+/// One Table 10 cell: accelerator LoH seconds for b2 on one dataset.
 #[derive(Clone, Debug)]
 pub struct T10Row {
+    /// Dataset key (FL / RE / YE / AP).
     pub dataset: &'static str,
+    /// BoostGCN LoH seconds (reported on every Table 10 dataset).
     pub boostgcn: f64,
+    /// HyGCN LoH seconds; the paper reports it on Reddit only.
     pub hygcn: Option<f64>,
+    /// AWB-GCN LoH seconds; the paper reports it on Reddit only.
     pub awb_gcn: Option<f64>,
+    /// GraphAGILE simulated LoH seconds.
     pub graphagile: f64,
 }
 
+/// Table 10 rows: b2 LoH vs the published accelerator numbers.
 pub fn table10_rows(ctx: &mut Ctx) -> Vec<T10Row> {
     let mut rows = Vec::new();
     for d in ALL_DATASETS.iter().filter(|d| matches!(d.key, "FL" | "RE" | "YE" | "AP")) {
@@ -409,6 +446,7 @@ pub fn table10_rows(ctx: &mut Ctx) -> Vec<T10Row> {
     rows
 }
 
+/// Table 10 — accelerator LoH comparison, rendered.
 pub fn table10(ctx: &mut Ctx) -> String {
     let rows = table10_rows(ctx);
     let cells: Vec<Vec<String>> = rows

@@ -53,6 +53,12 @@
 //!   every accepted event into a versioned `trace.json`, and a replay
 //!   path that re-executes any recorded run bit-identically offline
 //!   (`graphagile replay trace.json --verify`),
+//! * [`obs`] — deterministic observability: a span tracer on the
+//!   virtual clock (per-request phase timelines with compiler-pass and
+//!   per-layer kernel children, exported as Chrome trace-event JSON)
+//!   plus log-bucketed latency histograms and Prometheus text
+//!   exposition behind the daemon's `metrics` op — all bit-identical
+//!   across thread counts and record/replay,
 //! * [`baselines`] — analytic models of the comparison systems in the
 //!   paper's evaluation (PyG/DGL on CPU/GPU, HyGCN, AWB-GCN, BoostGCN),
 //! * [`harness`] — regenerates every table and figure of Sec. 8.
@@ -70,6 +76,7 @@ pub mod graph;
 pub mod harness;
 pub mod ir;
 pub mod isa;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -13,14 +13,20 @@
 //!                                                stalls, artifact corruption)
 //! graphagile serve --tenants tenants.json       (per-tenant QoS: weighted-fair
 //!                                                pacing, deadlines, classes)
+//! graphagile serve --chrome-trace out.json      (span tracing: per-request
+//!                                                phase timelines for Perfetto)
 //! graphagile daemon [--port 0] [--devices N] [--trace trace.json]
 //!                   [--fault-plan plan.json]
-//!                   [--tenants tenants.json]    (long-running TCP server;
+//!                   [--tenants tenants.json]
+//!                   [--chrome-trace out.json]   (long-running TCP server;
 //!                                                records every accepted event)
-//! graphagile drive --port P [--requests 200] [--seed 7]
+//! graphagile drive --port P [--requests 200] [--seed 7] [--metrics]
 //!                                               (scripted client workload,
-//!                                                then drain + shutdown)
-//! graphagile replay trace.json [--verify]      (bit-identical offline replay;
+//!                                                then drain + shutdown;
+//!                                                --metrics scrapes a live
+//!                                                Prometheus snapshot first)
+//! graphagile replay trace.json [--verify] [--chrome-trace out.json]
+//!                                              (bit-identical offline replay;
 //!                                               --verify diffs against the
 //!                                               recorded responses/stats)
 //! graphagile info                               (hardware + zoo summary)
@@ -63,10 +69,15 @@ fn parse_args() -> Result<Args> {
         };
         let key = key.to_string();
         // Boolean flags take no value: the --no-* switches, --minibatch,
-        // --streaming and --verify. Every other flag requires a value —
-        // a missing one stays a hard error rather than silently parsing
-        // as true.
-        if key.starts_with("no-") || key == "minibatch" || key == "streaming" || key == "verify" {
+        // --streaming, --verify and --metrics. Every other flag requires
+        // a value — a missing one stays a hard error rather than
+        // silently parsing as true.
+        if key.starts_with("no-")
+            || key == "minibatch"
+            || key == "streaming"
+            || key == "verify"
+            || key == "metrics"
+        {
             flags.insert(key, "true".into());
         } else {
             let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
@@ -293,6 +304,12 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 /// switches to weighted-fair virtual-clock pacing with deadline-aware
 /// degradation, and the summary grows a per-tenant block (p50/p99,
 /// miss rate, sheds). Mutually exclusive with `--fault-plan`.
+///
+/// Tracing: `--chrome-trace out.json` turns the span tracer on and
+/// exports every request's phase timeline (admission → sample →
+/// compile → queue → per-layer kernel execution, fault windows as
+/// instant events) as Chrome trace-event JSON for `chrome://tracing`
+/// or Perfetto. Stats are unchanged — tracing only observes.
 fn cmd_serve(args: &Args) -> Result<()> {
     use graphagile::serve::{Coordinator, CostModel, FleetConfig, Precision, Request};
     use graphagile::util::Rng;
@@ -369,7 +386,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let tenants = graphagile::serve::TenantConfig::load(std::path::Path::new(path))?;
         c.set_tenants(tenants);
     }
+    let trace_out = args.get("chrome-trace");
+    c.set_tracing(trace_out.is_some());
     let stats = c.run(reqs);
+    if let Some(path) = trace_out {
+        std::fs::write(path, c.chrome_trace_json())
+            .with_context(|| format!("writing chrome trace {path}"))?;
+        println!("wrote {} spans -> {path}", c.spans().len());
+    }
     println!(
         "served {} requests across 4 tenants on {} device(s):",
         stats.completed,
@@ -425,7 +449,9 @@ fn fleet_config(args: &Args) -> Result<graphagile::serve::FleetConfig> {
 /// bit-identically), `--tenants tenants.json` (serve under per-tenant
 /// QoS; the recorded trace becomes a v3 document that replays the
 /// scheduling decisions bit-identically — mutually exclusive with
-/// `--fault-plan`), plus the `serve` fleet switches (`--devices`,
+/// `--fault-plan`), `--chrome-trace out.json` (span-trace the session;
+/// the Chrome trace-event JSON is written at shutdown alongside the
+/// trace), plus the `serve` fleet switches (`--devices`,
 /// `--no-affinity`, `--no-coalesce`, `--no-batch`, `--no-dynamic`,
 /// `--visit-overhead`).
 fn cmd_daemon(args: &Args) -> Result<()> {
@@ -448,8 +474,11 @@ fn cmd_daemon(args: &Args) -> Result<()> {
         "--fault-plan and --tenants are mutually exclusive (the outage calendar \
          and the QoS gap scheduler disagree about device timelines)"
     );
-    let d =
+    let mut d =
         Daemon::bind_with_config(port, HwConfig::alveo_u250(), fleet_config(args)?, plan, tenants)?;
+    if let Some(p) = args.get("chrome-trace") {
+        d.set_chrome_trace(std::path::PathBuf::from(p));
+    }
     println!("graphagile daemon listening on 127.0.0.1:{}", d.port());
     let trace = d.serve()?;
     trace.save(std::path::Path::new(&trace_path))?;
@@ -464,7 +493,9 @@ fn cmd_daemon(args: &Args) -> Result<()> {
 /// Scripted client for a live daemon: drives `--requests` mixed
 /// requests (whole-graph f32/int8, mini-batch, churn) from `--seed`,
 /// drains, prints the daemon's stats, and shuts it down (which makes
-/// the daemon persist its trace).
+/// the daemon persist its trace). `--metrics` scrapes and prints a
+/// Prometheus text-exposition snapshot of the live counters after the
+/// drain, before shutdown (the scrape is read-only and unrecorded).
 fn cmd_drive(args: &Args) -> Result<()> {
     use graphagile::daemon::{drive, Client};
     let port: u16 = args
@@ -478,23 +509,38 @@ fn cmd_drive(args: &Args) -> Result<()> {
     let (accepted, stats) = drive(&mut client, n, seed)?;
     println!("drove {accepted} accepted requests (seed {seed}):");
     print!("{}", graphagile::harness::serve_summary(&stats));
+    if args.get("metrics").is_some() {
+        println!("live metrics snapshot:");
+        print!("{}", client.metrics()?);
+    }
     let events = client.shutdown()?;
     println!("daemon shutdown acknowledged ({events} recorded events)");
     Ok(())
 }
 
 /// Re-execute a recorded trace offline, bit-identically:
-/// `graphagile replay trace.json [--verify]`. With `--verify` the
-/// replayed responses and stats are diffed field-by-field against the
-/// recorded ones; any divergence is named and the exit code is nonzero.
+/// `graphagile replay trace.json [--verify] [--chrome-trace out.json]`.
+/// With `--verify` the replayed responses and stats are diffed
+/// field-by-field against the recorded ones; any divergence is named
+/// and the exit code is nonzero. With `--chrome-trace` the replay runs
+/// with the span tracer on and exports the regenerated span stream —
+/// byte-identical to what the recording daemon would have exported.
 fn cmd_replay(args: &Args) -> Result<()> {
-    use graphagile::daemon::{replay, verify, Trace};
+    use graphagile::daemon::{replay, replay_traced, verify, Trace};
     let path = args
         .positional
         .first()
-        .context("usage: graphagile replay <trace.json> [--verify]")?;
+        .context("usage: graphagile replay <trace.json> [--verify] [--chrome-trace out.json]")?;
     let trace = Trace::load(std::path::Path::new(path))?;
-    let (_responses, stats) = replay(&trace);
+    let stats = if let Some(out) = args.get("chrome-trace") {
+        let (_responses, stats, spans) = replay_traced(&trace);
+        std::fs::write(out, spans).with_context(|| format!("writing chrome trace {out}"))?;
+        println!("wrote replayed span stream -> {out}");
+        stats
+    } else {
+        let (_responses, stats) = replay(&trace);
+        stats
+    };
     print!("{}", graphagile::harness::replay_summary(&trace, &stats));
     if args.get("verify").is_some() {
         let divergences = verify(&trace)?;

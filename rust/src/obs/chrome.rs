@@ -1,0 +1,152 @@
+//! Chrome trace-event JSON export: spans become `"X"` (complete)
+//! events, fired fault-plan events become `"i"` (instant) events, and
+//! a pair of `"M"` metadata events name the two process lanes. The
+//! output is the top-level-array flavor of the trace-event format, so
+//! it loads directly in `chrome://tracing` and Perfetto.
+//!
+//! Layout: requests render under pid 1 with one thread per admission
+//! index (nested phase/compiler/kernel spans draw as a flame within
+//! the request's lane); fault instants render under pid 0 with one
+//! thread per device. Timestamps are virtual-clock microseconds. The
+//! writer is [`crate::util::Json`] (insertion-ordered objects,
+//! shortest-roundtrip floats), so a span stream serializes to
+//! byte-identical JSON on every run that produced identical spans.
+
+use super::span::{ArgVal, Span};
+use crate::serve::{FaultEvent, FaultRecord};
+use crate::util::Json;
+
+/// Virtual-clock seconds → trace-event microseconds.
+fn us(t: f64) -> Json {
+    Json::Num(t * 1e6)
+}
+
+fn arg_json(v: &ArgVal) -> Json {
+    match v {
+        ArgVal::U64(n) => Json::Num(*n as f64),
+        ArgVal::F64(x) => Json::Num(*x),
+        ArgVal::Str(s) => Json::Str(s.clone()),
+        ArgVal::Bool(b) => Json::Bool(*b),
+    }
+}
+
+fn meta_event(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str("process_name".into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        (
+            "args",
+            Json::obj(vec![("name", Json::Str(name.to_string()))]),
+        ),
+    ])
+}
+
+fn span_event(s: &Span) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(s.name.clone())),
+        ("cat", Json::Str(s.cat.to_string())),
+        ("ph", Json::Str("X".into())),
+        ("ts", us(s.from)),
+        ("dur", us(s.dur)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(s.request as f64)),
+    ];
+    if !s.args.is_empty() {
+        let args: Vec<(&str, Json)> = s.args.iter().map(|(k, v)| (*k, arg_json(v))).collect();
+        pairs.push(("args", Json::obj(args)));
+    }
+    Json::obj(pairs)
+}
+
+fn fault_event(rec: &FaultRecord) -> Json {
+    let (name, device, args) = match &rec.fault {
+        FaultEvent::DeviceCrash { device, recover_after, .. } => (
+            "crash",
+            *device,
+            vec![("recover_after_s", Json::Num(*recover_after))],
+        ),
+        FaultEvent::TransientStall { device, duration, .. } => {
+            ("stall", *device, vec![("duration_s", Json::Num(*duration))])
+        }
+        FaultEvent::ArtifactCorruption { device, model, dataset, .. } => (
+            "corruption",
+            *device,
+            vec![
+                ("model", Json::Str(model.key().to_string())),
+                ("dataset", Json::Str(dataset.clone())),
+            ],
+        ),
+    };
+    Json::obj(vec![
+        ("name", Json::Str(name.into())),
+        ("cat", Json::Str("fault".into())),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("g".into())),
+        ("ts", us(rec.at)),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(device as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Serialize a span stream plus the fired fault log as a Chrome
+/// trace-event JSON document (a top-level array, newline-terminated).
+pub fn chrome_trace(spans: &[Span], faults: &[FaultRecord]) -> String {
+    let mut events = vec![meta_event(1, "requests"), meta_event(0, "devices")];
+    events.extend(spans.iter().map(span_event));
+    events.extend(faults.iter().map(fault_event));
+    format!("{}\n", Json::Arr(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::FaultEvent;
+
+    #[test]
+    fn export_is_a_parseable_event_array() {
+        let spans = vec![Span {
+            request: 0,
+            name: "full b1@CO".into(),
+            cat: "request",
+            from: 1.5,
+            dur: 2e-3,
+            args: vec![("tenant", ArgVal::U64(3))],
+        }];
+        let faults = vec![FaultRecord {
+            at: 0.75,
+            fault: FaultEvent::TransientStall { device: 1, at: 0.75, duration: 0.05 },
+        }];
+        let text = chrome_trace(&spans, &faults);
+        let j = Json::parse(text.trim()).expect("valid JSON");
+        let Json::Arr(events) = j else { panic!("top level must be an array") };
+        // 2 metadata + 1 span + 1 instant.
+        assert_eq!(events.len(), 4);
+        let span = &events[2];
+        assert_eq!(span.str_of("ph").unwrap(), "X");
+        assert_eq!(span.f64_of("ts").unwrap(), 1.5e6);
+        assert_eq!(span.f64_of("dur").unwrap(), 2e3);
+        let inst = &events[3];
+        assert_eq!(inst.str_of("ph").unwrap(), "i");
+        assert_eq!(inst.str_of("s").unwrap(), "g");
+        assert_eq!(inst.str_of("name").unwrap(), "stall");
+    }
+
+    #[test]
+    fn identical_spans_serialize_identically() {
+        let s = Span {
+            request: 7,
+            name: "exec".into(),
+            cat: "phase",
+            from: 0.123456789,
+            dur: 4.2e-5,
+            args: Vec::new(),
+        };
+        assert_eq!(
+            chrome_trace(&[s.clone()], &[]),
+            chrome_trace(&[s], &[])
+        );
+    }
+}

@@ -1,0 +1,309 @@
+//! Live metrics: a log-bucketed latency histogram and the Prometheus
+//! text-exposition renderer behind the daemon's `metrics` op.
+//!
+//! Bucket math: finite upper bounds are `1e-6 * 2^k` seconds for
+//! `k = 0..N_BUCKETS` (1 µs doubling up to ~134 s), plus a `+Inf`
+//! overflow bucket — the classic log₂ layout, cheap to index and
+//! coarse enough that cumulative `_bucket` lines stay readable. The
+//! histogram quantile is nearest-rank over cumulative bucket counts
+//! and returns the containing bucket's upper bound, so it brackets the
+//! exact sorted-sample percentile
+//! ([`crate::serve::percentile`]) from above within one bucket factor
+//! (2x) — the cheap path when responses are too many to sort.
+//!
+//! Naming conventions: every family is prefixed `ga_`, counters end
+//! in `_total`, seconds-valued families end in `_seconds`, and
+//! per-tenant families carry a `tenant="<id>"` label. Rendering is
+//! fully deterministic (fixed family order, tenant rows sorted by id,
+//! Rust's shortest-roundtrip float formatting).
+
+use crate::serve::ServeStats;
+use std::fmt::Write;
+
+/// Smallest finite bucket upper bound, seconds (1 µs).
+pub const BUCKET_FLOOR_S: f64 = 1e-6;
+
+/// Number of finite buckets; bound `k` is `BUCKET_FLOOR_S * 2^k`, so
+/// the largest finite bound is ~134 s — far beyond any modeled
+/// serving latency.
+pub const N_BUCKETS: usize = 28;
+
+/// A log₂-bucketed latency histogram (Prometheus `histogram` type:
+/// cumulative `le` buckets plus `_sum` and `_count`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    /// Per-bucket observation counts; index [`N_BUCKETS`] is `+Inf`.
+    counts: [u64; N_BUCKETS + 1],
+    sum: f64,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { counts: [0; N_BUCKETS + 1], sum: 0.0, count: 0 }
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Finite upper bound of bucket `k`.
+    fn bound(k: usize) -> f64 {
+        BUCKET_FLOOR_S * (1u64 << k) as f64
+    }
+
+    /// Record one latency observation (seconds).
+    pub fn observe(&mut self, v: f64) {
+        let k = (0..N_BUCKETS).find(|&k| v <= Self::bound(k)).unwrap_or(N_BUCKETS);
+        self.counts[k] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Build a histogram from a latency iterator.
+    pub fn from_latencies(lats: impl IntoIterator<Item = f64>) -> Histogram {
+        let mut h = Histogram::new();
+        for v in lats {
+            h.observe(v);
+        }
+        h
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observed values, seconds.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Nearest-rank quantile, resolved to the containing bucket's
+    /// upper bound (an upper bracket of the exact sample quantile;
+    /// within a 2x bucket factor of it). `0.0` on an empty histogram,
+    /// `f64::INFINITY` when the rank lands in the overflow bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for k in 0..N_BUCKETS {
+            seen += self.counts[k];
+            if seen >= rank {
+                return Self::bound(k);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Render the cumulative `_bucket` / `_sum` / `_count` lines of
+    /// one Prometheus histogram family.
+    fn render(&self, out: &mut String, name: &str) {
+        let mut cum = 0u64;
+        for k in 0..N_BUCKETS {
+            cum += self.counts[k];
+            let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", Self::bound(k));
+        }
+        cum += self.counts[N_BUCKETS];
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum);
+        let _ = writeln!(out, "{name}_count {}", self.count);
+    }
+}
+
+/// Histogram-backed percentile: the log-bucket path alongside the
+/// exact sorted-sample [`crate::serve::percentile`]. Returns the
+/// bucket upper bound containing the nearest-rank sample — an upper
+/// bracket of the exact percentile within one bucket factor (2x) —
+/// without sorting.
+pub fn histogram_percentile(latencies: &[f64], p: f64) -> f64 {
+    Histogram::from_latencies(latencies.iter().copied()).quantile(p)
+}
+
+/// One `# HELP` + `# TYPE` header plus a sample line.
+fn family(out: &mut String, name: &str, kind: &str, help: &str, value: impl std::fmt::Display) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Header only (for labeled families whose samples follow).
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render a [`ServeStats`] snapshot plus a latency histogram as
+/// Prometheus text exposition (version 0.0.4). Deterministic: the
+/// same stats and histogram render byte-identically.
+pub fn prometheus(stats: &ServeStats, hist: &Histogram) -> String {
+    let mut o = String::new();
+    // Throughput / cache family.
+    family(&mut o, "ga_requests_completed_total", "counter",
+        "Requests that reached a served outcome (completed or degraded).", stats.completed);
+    family(&mut o, "ga_cache_hits_total", "counter",
+        "Responses whose program came from a device cache.", stats.cache_hits);
+    family(&mut o, "ga_coalesced_total", "counter",
+        "Requests that rode an identical in-flight job.", stats.coalesced);
+    // Mini-batch family.
+    family(&mut o, "ga_minibatched_total", "counter",
+        "Completed mini-batch requests.", stats.minibatched);
+    family(&mut o, "ga_batched_total", "counter",
+        "Mini-batch requests micro-batched onto an existing visit.", stats.batched);
+    family(&mut o, "ga_bucket_hits_total", "counter",
+        "Mini-batch requests whose bucket program was already compiled.", stats.bucket_hits);
+    family(&mut o, "ga_sampled_vertices_total", "counter",
+        "Ego-net vertices sampled across all mini-batch requests.", stats.sampled_vertices);
+    family(&mut o, "ga_sampled_edges_total", "counter",
+        "Ego-net edges sampled across all mini-batch requests.", stats.sampled_edges);
+    // Kernel re-map + quantized datapath family.
+    family(&mut o, "ga_remaps_total", "counter",
+        "Density-driven kernel re-maps summed over executed jobs.", stats.remaps);
+    family(&mut o, "ga_quantized_total", "counter",
+        "Completed inference requests served on the int8 datapath.", stats.quantized);
+    family(&mut o, "ga_quant_visits_total", "counter",
+        "Quantized tile launches summed over executed jobs.", stats.quant_visits);
+    family(&mut o, "ga_requant_ops_total", "counter",
+        "Quantize/requantize epilogues summed over executed jobs.", stats.requant_ops);
+    family(&mut o, "ga_int8_bytes_total", "counter",
+        "Modeled 1-byte operand traffic summed over executed jobs.", stats.int8_bytes);
+    // Streaming-update family.
+    family(&mut o, "ga_updates_total", "counter",
+        "Streaming update requests applied.", stats.updates);
+    family(&mut o, "ga_graph_epoch", "gauge",
+        "Highest graph epoch reached by any streamed dataset.", stats.max_epoch);
+    family(&mut o, "ga_dirty_subshards_total", "counter",
+        "Dirty subshards rebuilt across all updates.", stats.dirty_subshards);
+    family(&mut o, "ga_rebuilt_edges_total", "counter",
+        "Edges re-sorted rebuilding dirty subshards.", stats.rebuilt_edges);
+    family(&mut o, "ga_invalidated_total", "counter",
+        "Stale whole-graph programs invalidated across all updates.", stats.invalidated);
+    family(&mut o, "ga_compactions_total", "counter",
+        "Overlay compactions triggered across all updates.", stats.compactions);
+    // Fault / degradation family.
+    family(&mut o, "ga_retries_total", "counter",
+        "Crashed attempts retried, summed over all requests.", stats.retries);
+    family(&mut o, "ga_rerouted_total", "counter",
+        "Requests whose serving device differs from their first route.", stats.rerouted);
+    family(&mut o, "ga_degraded_total", "counter",
+        "Requests that completed down the fidelity cascade.", stats.degraded);
+    family(&mut o, "ga_shed_total", "counter",
+        "Requests shed with a named reason.", stats.shed);
+    family(&mut o, "ga_crashes_total", "counter",
+        "Device-crash events fired from the fault plan.", stats.crashes);
+    family(&mut o, "ga_stalls_total", "counter",
+        "Transient-stall events fired from the fault plan.", stats.stalls);
+    family(&mut o, "ga_corruptions_total", "counter",
+        "Armed artifact corruptions that bit.", stats.corruptions);
+    family(&mut o, "ga_downtime_seconds_total", "counter",
+        "Scheduled device downtime summed over fired finite crashes.", stats.downtime);
+    family(&mut o, "ga_backoff_seconds_total", "counter",
+        "Backoff pause charged across all retried requests.", stats.t_backoff);
+    // Latency family (exact sorted-sample percentiles as gauges, plus
+    // the log-bucketed histogram).
+    family(&mut o, "ga_latency_p50_seconds", "gauge",
+        "Median served-inference latency (exact nearest-rank).", stats.p50);
+    family(&mut o, "ga_latency_p99_seconds", "gauge",
+        "99th-percentile served-inference latency (exact nearest-rank).", stats.p99);
+    family(&mut o, "ga_latency_mean_seconds", "gauge",
+        "Mean served-inference latency.", stats.mean);
+    family(&mut o, "ga_device_busy_seconds", "gauge",
+        "Sum of execution seconds across devices.", stats.device_busy);
+    family(&mut o, "ga_makespan_seconds", "gauge",
+        "Virtual time of the last processed event.", stats.makespan);
+    header(&mut o, "ga_request_latency_seconds", "histogram",
+        "Served-inference latency, log2 buckets from 1us.");
+    hist.render(&mut o, "ga_request_latency_seconds");
+    // Per-tenant family (rows sorted by tenant id; present only under
+    // an installed tenant config, like `ServeStats::tenants` itself).
+    if !stats.tenants.is_empty() {
+        header(&mut o, "ga_tenant_completed_total", "counter",
+            "Requests served per tenant.");
+        for t in &stats.tenants {
+            let _ = writeln!(o, "ga_tenant_completed_total{{tenant=\"{}\"}} {}", t.tenant, t.completed);
+        }
+        header(&mut o, "ga_tenant_degraded_total", "counter",
+            "Requests served on a lower fidelity rung, per tenant.");
+        for t in &stats.tenants {
+            let _ = writeln!(o, "ga_tenant_degraded_total{{tenant=\"{}\"}} {}", t.tenant, t.degraded);
+        }
+        header(&mut o, "ga_tenant_shed_total", "counter", "Requests shed per tenant.");
+        for t in &stats.tenants {
+            let _ = writeln!(o, "ga_tenant_shed_total{{tenant=\"{}\"}} {}", t.tenant, t.shed);
+        }
+        header(&mut o, "ga_tenant_deadline_missed_total", "counter",
+            "Requests past their deadline, per tenant.");
+        for t in &stats.tenants {
+            let _ = writeln!(o, "ga_tenant_deadline_missed_total{{tenant=\"{}\"}} {}", t.tenant, t.missed);
+        }
+        header(&mut o, "ga_tenant_latency_p99_seconds", "gauge",
+            "Exact 99th-percentile served latency, per tenant.");
+        for t in &stats.tenants {
+            let _ = writeln!(o, "ga_tenant_latency_p99_seconds{{tenant=\"{}\"}} {}", t.tenant, t.p99);
+        }
+        header(&mut o, "ga_tenant_qos_delay_seconds_total", "counter",
+            "Total QoS pacing delay charged, per tenant.");
+        for t in &stats.tenants {
+            let _ = writeln!(o, "ga_tenant_qos_delay_seconds_total{{tenant=\"{}\"}} {}", t.tenant, t.t_qos);
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::percentile;
+
+    #[test]
+    fn quantile_brackets_the_exact_percentile() {
+        let lats: Vec<f64> = (1..=500).map(|i| i as f64 * 3.7e-5).collect();
+        let mut sorted = lats.clone();
+        sorted.sort_by(f64::total_cmp);
+        for p in [0.5, 0.9, 0.99] {
+            let exact = percentile(&sorted, p);
+            let bucketed = histogram_percentile(&lats, p);
+            assert!(bucketed >= exact, "bucket bound must bracket from above");
+            assert!(bucketed <= exact * 2.0, "within one log2 bucket factor");
+        }
+    }
+
+    #[test]
+    fn empty_and_overflow_quantiles() {
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+        let mut h = Histogram::new();
+        h.observe(1e9); // beyond the largest finite bound
+        assert_eq!(h.quantile(0.5), f64::INFINITY);
+    }
+
+    #[test]
+    fn exposition_has_well_formed_families() {
+        let stats = ServeStats { completed: 42, p50: 1.25e-3, ..ServeStats::default() };
+        let hist = Histogram::from_latencies([1e-4, 2e-4, 3e-3]);
+        let text = prometheus(&stats, &hist);
+        assert!(text.contains("# TYPE ga_requests_completed_total counter"));
+        assert!(text.contains("ga_requests_completed_total 42"));
+        assert!(text.contains("ga_request_latency_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("ga_request_latency_seconds_count 3"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(!name.is_empty() && name.starts_with("ga_"), "{line}");
+            assert!(value.parse::<f64>().is_ok() || value == "+Inf", "{line}");
+        }
+        // Deterministic rendering.
+        assert_eq!(text, prometheus(&stats, &hist));
+    }
+
+    #[test]
+    fn tenant_families_render_only_under_a_config() {
+        let stats = ServeStats::default();
+        let text = prometheus(&stats, &Histogram::new());
+        assert!(!text.contains("ga_tenant_"));
+    }
+}

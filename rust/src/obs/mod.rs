@@ -1,0 +1,39 @@
+//! Deterministic observability for the serving fleet: span tracing on
+//! the virtual clock, Chrome trace-event export, and Prometheus-style
+//! metrics exposition.
+//!
+//! Three pieces, all driven by data the fleet already computes:
+//!
+//! * [`span`] — the per-request phase model. [`segments`] reconstructs
+//!   the exact phase timeline (sample → qos-pace → compile → backoff →
+//!   queue → exec) of any [`Response`](crate::serve::Response) from its
+//!   public accounting fields; [`ObsState`] turns admitted requests
+//!   into [`Span`] trees with compiler-pass and per-layer kernel
+//!   children,
+//! * [`chrome`] — serializes a span stream (plus fired fault events as
+//!   instants) into Chrome trace-event JSON that loads directly in
+//!   `chrome://tracing` / Perfetto,
+//! * [`metrics`] — a log-bucketed latency [`Histogram`] and the
+//!   [`prometheus`] text-exposition renderer behind the daemon's
+//!   `metrics` op.
+//!
+//! Everything here is a function of virtual-clock quantities (modeled
+//! costs, deterministic response fields), never wall time — so a span
+//! stream is bit-identical across `GA_KERNEL_THREADS` values and
+//! across record/replay. Tracing follows the dormant-`Option` pattern
+//! of [`crate::serve::fault`] and [`crate::serve::qos`]: the
+//! coordinator holds `Option<ObsState>`, and with tracing off (the
+//! default) every response, stat, trace, and CLI byte is identical to
+//! a build without this module.
+#![warn(missing_docs)]
+
+pub mod chrome;
+pub mod metrics;
+pub mod span;
+
+pub use chrome::chrome_trace;
+pub use metrics::{histogram_percentile, prometheus, Histogram};
+pub use span::{
+    accounting_gap, coverage, segments, ArgVal, LayerSlice, ObsJob, ObsState, Phase, Segment,
+    Span, ACCOUNTING_TOL_S,
+};

@@ -1,0 +1,608 @@
+//! The per-request phase model: reconstructing a response's exact
+//! phase timeline, and recording span trees for admitted requests.
+//!
+//! The central fact this module leans on is that every serving path
+//! bills its latency through the same public accounting fields
+//! (`t_sample`, `t_compile`, `t_queue`, `t_exec`, `t_backoff`,
+//! `t_qos`, `t_update`), each anchored at a position the path
+//! documents. [`segments`] inverts that accounting: given only
+//! `(arrival, &Response)` it rebuilds the phase windows on the virtual
+//! clock, and their union covers the full `latency` — which is both
+//! the span tree the tracer exports and the invariant the
+//! coordinator's debug assertion (and the property test in
+//! `rust/tests/obs_spans.rs`) checks on every admission.
+
+use crate::compiler::CompileReport;
+use crate::serve::{Request, Response};
+use std::sync::Arc;
+
+/// Absolute tolerance (seconds of virtual time) for the per-request
+/// accounting invariant: the union of a response's phase segments must
+/// match its `latency` to within one nanosecond. Float error across
+/// the handful of additions each path performs is orders of magnitude
+/// below this; real accounting drift is orders of magnitude above.
+pub const ACCOUNTING_TOL_S: f64 = 1e-9;
+
+/// A named serving phase of one request's lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Host-side ego-net sampling (mini-batch requests only).
+    Sample,
+    /// Compile stall: the program was not resident and the request
+    /// waited for the four-pass compile (modeled
+    /// [`CompileReport::total`]).
+    Compile,
+    /// Waiting for the device between program-ready and visit start.
+    Queue,
+    /// SFQ fair-queue pacing delay charged under a tenant config.
+    QosPace,
+    /// Exponential-backoff pauses across crashed-attempt retries.
+    Backoff,
+    /// Crash-discovery wait on the fault path: time between attempts
+    /// that is neither a backoff pause nor a compile stall (a doomed
+    /// attempt ran until its device's crash instant).
+    RetryWait,
+    /// Device execution of the visit serving this request.
+    Exec,
+    /// Riding another request's execution (coalesced or micro-batched:
+    /// the span covers the host job's remaining timeline).
+    Ride,
+    /// Host-side apply of a streaming graph-update batch.
+    Update,
+}
+
+impl Phase {
+    /// Stable display name (the span name in the Chrome export).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Sample => "sample",
+            Phase::Compile => "compile",
+            Phase::Queue => "queue",
+            Phase::QosPace => "qos-pace",
+            Phase::Backoff => "backoff",
+            Phase::RetryWait => "retry-wait",
+            Phase::Exec => "exec",
+            Phase::Ride => "ride",
+            Phase::Update => "update",
+        }
+    }
+}
+
+/// One phase window on the virtual clock, `[from, until)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Segment {
+    /// Which phase this window spent its time in.
+    pub phase: Phase,
+    /// Window start (absolute virtual-clock seconds).
+    pub from: f64,
+    /// Window end (absolute virtual-clock seconds).
+    pub until: f64,
+}
+
+impl Segment {
+    fn new(phase: Phase, from: f64, until: f64) -> Segment {
+        Segment { phase, from, until }
+    }
+}
+
+/// Reconstruct the phase timeline of one response from its public
+/// accounting fields. Zero-length phases are omitted. The union of
+/// the returned windows covers `[arrival, arrival + latency]` to
+/// within [`ACCOUNTING_TOL_S`] for every serving path; the only
+/// intentional overlap is QoS pacing (anchored at arrival) against
+/// sample + compile (pacing hides host work, by design).
+pub fn segments(arrival: f64, r: &Response) -> Vec<Segment> {
+    let done = arrival + r.latency;
+    let mut out = Vec::new();
+    let mut push = |phase: Phase, from: f64, until: f64| {
+        if until > from {
+            out.push(Segment::new(phase, from, until));
+        }
+    };
+    if r.update {
+        // Updates are host-side: the whole latency is the apply cost.
+        push(Phase::Update, arrival, done);
+        return out;
+    }
+    // Sampling always runs first, directly at arrival.
+    let a = arrival + r.t_sample;
+    push(Phase::Sample, arrival, a);
+    if r.outcome.is_shed() {
+        // A shed burns sampling plus backoff and nothing else
+        // (`latency == t_sample + t_backoff`). A QoS deadline shed
+        // additionally reports the pacing delay it *would* have paid
+        // in `t_qos`, but that time is not part of its latency.
+        push(Phase::Backoff, a, a + r.t_backoff);
+        return out;
+    }
+    if r.coalesced || r.batched {
+        // Riders do no device work of their own: after sampling they
+        // queue until the host job starts, then ride it to completion.
+        // (`t_exec` on a rider is the item-only time and is *not* a
+        // wall phase — the Ride window is.)
+        let boarded = a + r.t_queue;
+        push(Phase::Queue, a, boarded);
+        push(Phase::Ride, boarded, done);
+        return out;
+    }
+    // Non-riders: walk backwards from completion. The visit executed
+    // over [start, done], queued over [job_ready, start].
+    let start = done - r.t_exec;
+    let job_ready = start - r.t_queue;
+    if r.t_qos > 0.0 {
+        // QoS-paced placement: the compile stall is anchored right
+        // after sampling, pacing at arrival, and the visit becomes
+        // ready when the later of the two ends —
+        // `job_ready == max(a + t_compile, arrival + t_qos)`.
+        push(Phase::Compile, a, a + r.t_compile);
+        push(Phase::QosPace, arrival, arrival + r.t_qos);
+    } else {
+        // Plain or faulty placement: the compile stall ends exactly at
+        // job_ready and starts at the last attempt's floor. On the
+        // fault-free path `floor == a` and the backoff/retry windows
+        // are empty; under a fault plan the floor advanced past `a` by
+        // backoff pauses (Backoff) plus the time doomed attempts ran
+        // before their crash instants (RetryWait).
+        let floor = job_ready - r.t_compile;
+        push(Phase::Compile, floor, job_ready);
+        let backoff_from = floor - r.t_backoff;
+        push(Phase::Backoff, backoff_from, floor);
+        push(Phase::RetryWait, a, backoff_from);
+    }
+    push(Phase::Queue, job_ready, start);
+    push(Phase::Exec, start, done);
+    out
+}
+
+/// Length of the union of the given windows (overlaps counted once).
+pub fn coverage(segs: &[Segment]) -> f64 {
+    let mut sorted: Vec<(f64, f64)> = segs.iter().map(|s| (s.from, s.until)).collect();
+    sorted.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+    let mut total = 0.0;
+    let mut hi = f64::NEG_INFINITY;
+    for (from, until) in sorted {
+        let from = from.max(hi);
+        if until > from {
+            total += until - from;
+            hi = until;
+        }
+    }
+    total
+}
+
+/// The per-request accounting gap: `|latency - coverage|` of the
+/// response's reconstructed phase timeline. Zero (up to float noise)
+/// on every serving path — the coordinator debug-asserts this against
+/// [`ACCOUNTING_TOL_S`] on each admission.
+pub fn accounting_gap(arrival: f64, r: &Response) -> f64 {
+    (coverage(&segments(arrival, r)) - r.latency).abs()
+}
+
+/// Modeled per-layer execution slice of a compiled program: the cycle
+/// simulator's per-layer breakdown, captured once per program key so
+/// the tracer can subdivide an `exec` span into kernel spans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerSlice {
+    /// IR layer id.
+    pub layer_id: u16,
+    /// Raw [`crate::ir::LayerType`] discriminant.
+    pub kind: u8,
+    /// Modeled cycles the layer spent on the device.
+    pub cycles: u64,
+}
+
+/// Kernel-span display name for a raw layer-type discriminant.
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        0 => "aggregate",
+        1 => "linear",
+        2 => "vector_inner",
+        3 => "vector_add",
+        4 => "activation",
+        5 => "batch_norm",
+        _ => "op",
+    }
+}
+
+/// Per-request scratch the coordinator stashes for the tracer on the
+/// six non-rider serving paths: the executed program's per-layer cycle
+/// split and its compile report. Both are modeled, deterministic
+/// quantities (the report's *measured* wall-clock pass times never
+/// enter spans — only the modeled [`CompileReport::total`] split).
+#[derive(Clone, Debug)]
+pub struct ObsJob {
+    /// Per-layer cycle split of the executed program.
+    pub layers: Arc<[LayerSlice]>,
+    /// Compile report of the executed program (modeled fields only).
+    pub report: CompileReport,
+}
+
+/// A typed span argument (rendered into the Chrome event's `args`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgVal {
+    /// An unsigned counter.
+    U64(u64),
+    /// A seconds / ratio value.
+    F64(f64),
+    /// A stable label.
+    Str(String),
+    /// A flag.
+    Bool(bool),
+}
+
+/// One recorded span: a named window of one request's lifetime on the
+/// virtual clock. `request` is the admission index (the Chrome export
+/// maps it to a thread so each request renders as its own lane).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Admission index of the request this span belongs to.
+    pub request: u64,
+    /// Display name.
+    pub name: String,
+    /// Chrome event category (`request`, `phase`, `compiler`,
+    /// `transfer`, or `kernel`).
+    pub cat: &'static str,
+    /// Span start (absolute virtual-clock seconds).
+    pub from: f64,
+    /// Span duration (seconds).
+    pub dur: f64,
+    /// Typed key/value annotations.
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+/// The live tracer: a flat, admission-ordered span stream. Dormant
+/// pattern — the coordinator holds `Option<ObsState>` and never
+/// touches it (or pays for it) when tracing is off.
+#[derive(Debug, Default)]
+pub struct ObsState {
+    spans: Vec<Span>,
+    seq: u64,
+}
+
+impl ObsState {
+    /// An empty tracer.
+    pub fn new() -> ObsState {
+        ObsState::default()
+    }
+
+    /// Spans recorded so far, in admission order (root span first
+    /// within each request).
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Record one admitted request: a root span over its full latency,
+    /// one child per phase window, and — when the coordinator stashed
+    /// the executed program's [`ObsJob`] — compiler-pass children
+    /// under `compile` and transfer + per-layer kernel children under
+    /// `exec`.
+    pub fn record(
+        &mut self,
+        rq: &Request,
+        r: &Response,
+        job: Option<&ObsJob>,
+        visit_overhead_s: f64,
+    ) {
+        let seq = self.seq;
+        self.seq += 1;
+        let kind = if r.update {
+            "update"
+        } else if r.minibatch {
+            "minibatch"
+        } else {
+            "full"
+        };
+        let name = if r.update {
+            format!("update {}", rq.dataset.key)
+        } else {
+            format!("{kind} {}@{}", rq.model.key(), rq.dataset.key)
+        };
+        self.spans.push(Span {
+            request: seq,
+            name,
+            cat: "request",
+            from: rq.arrival,
+            dur: r.latency,
+            args: vec![
+                ("tenant", ArgVal::U64(r.tenant as u64)),
+                ("device", ArgVal::U64(r.device as u64)),
+                ("outcome", ArgVal::Str(r.outcome.key().to_string())),
+                ("precision", ArgVal::Str(r.precision.key().to_string())),
+                ("cache_hit", ArgVal::Bool(r.cache_hit)),
+                ("epoch", ArgVal::U64(r.epoch as u64)),
+            ],
+        });
+        for seg in segments(rq.arrival, r) {
+            self.spans.push(Span {
+                request: seq,
+                name: seg.phase.name().to_string(),
+                cat: "phase",
+                from: seg.from,
+                dur: seg.until - seg.from,
+                args: Vec::new(),
+            });
+            match seg.phase {
+                Phase::Compile => {
+                    if let Some(j) = job {
+                        self.record_compile(seq, &seg, &j.report);
+                    }
+                }
+                Phase::Exec => {
+                    if let Some(j) = job {
+                        let overhead = if r.minibatch { visit_overhead_s } else { 0.0 };
+                        self.record_exec(seq, &seg, &j.layers, overhead);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Subdivide a cold compile stall proportionally to the *modeled*
+    /// report terms (pass setup / instruction emit / block schedule —
+    /// the three addends of [`CompileReport::total`]). The measured
+    /// wall-clock pass times are deliberately never used: they differ
+    /// run to run and would break span bit-identity.
+    fn record_compile(&mut self, seq: u64, seg: &Segment, report: &CompileReport) {
+        let parts = [
+            ("compile:passes", report.modeled_passes()),
+            ("compile:emit", report.modeled_emit()),
+            ("compile:schedule", report.modeled_schedule()),
+        ];
+        let total: f64 = parts.iter().map(|&(_, w)| w).sum();
+        if total <= 0.0 {
+            return;
+        }
+        let width = seg.until - seg.from;
+        let mut acc = 0.0;
+        for (name, w) in parts {
+            let from = seg.from + width * (acc / total);
+            acc += w;
+            let until = seg.from + width * (acc / total);
+            if until > from {
+                self.spans.push(Span {
+                    request: seq,
+                    name: name.to_string(),
+                    cat: "compiler",
+                    from,
+                    dur: until - from,
+                    args: Vec::new(),
+                });
+            }
+        }
+    }
+
+    /// Subdivide an `exec` span: the fixed visit overhead first (the
+    /// host→device transfer / dispatch window of a mini-batch visit),
+    /// then per-layer kernel spans tiling the remaining width in
+    /// proportion to each layer's modeled cycles.
+    fn record_exec(
+        &mut self,
+        seq: u64,
+        seg: &Segment,
+        layers: &[LayerSlice],
+        overhead_s: f64,
+    ) {
+        let width = seg.until - seg.from;
+        let overhead = overhead_s.min(width);
+        if overhead > 0.0 {
+            self.spans.push(Span {
+                request: seq,
+                name: "transfer".to_string(),
+                cat: "transfer",
+                from: seg.from,
+                dur: overhead,
+                args: Vec::new(),
+            });
+        }
+        let base = seg.from + overhead;
+        let kernel_width = width - overhead;
+        let total_cycles: u64 = layers.iter().map(|l| l.cycles).sum();
+        if total_cycles == 0 || kernel_width <= 0.0 {
+            return;
+        }
+        let mut acc = 0u64;
+        for l in layers {
+            let from = base + kernel_width * (acc as f64 / total_cycles as f64);
+            acc += l.cycles;
+            let until = base + kernel_width * (acc as f64 / total_cycles as f64);
+            if until > from {
+                self.spans.push(Span {
+                    request: seq,
+                    name: format!("L{} {}", l.layer_id, kind_name(l.kind)),
+                    cat: "kernel",
+                    from,
+                    dur: until - from,
+                    args: vec![("cycles", ArgVal::U64(l.cycles))],
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset;
+    use crate::ir::ZooModel;
+    use crate::serve::{Outcome, Request, Response, ShedReason};
+
+    fn base_resp() -> Response {
+        let rq = Request::full(0, ZooModel::B1, dataset("CO").unwrap(), 0.0);
+        Response {
+            tenant: 0,
+            model: rq.model,
+            device: 0,
+            t_compile: 0.0,
+            t_sample: 0.0,
+            t_exec: 0.0,
+            t_queue: 0.0,
+            latency: 0.0,
+            cache_hit: false,
+            coalesced: false,
+            batched: false,
+            minibatch: false,
+            sampled_vertices: 0,
+            sampled_edges: 0,
+            remaps: 0,
+            precision: crate::serve::Precision::F32,
+            quant_visits: 0,
+            requant_ops: 0,
+            int8_bytes: 0,
+            update: false,
+            epoch: 0,
+            t_update: 0.0,
+            dirty_subshards: 0,
+            rebuilt_edges: 0,
+            invalidated: 0,
+            compacted: false,
+            retries: 0,
+            rerouted: false,
+            t_backoff: 0.0,
+            t_qos: 0.0,
+            deadline_missed: false,
+            outcome: Outcome::Completed,
+        }
+    }
+
+    #[test]
+    fn plain_full_request_covers_latency() {
+        let r = Response {
+            t_compile: 2e-3,
+            t_exec: 5e-3,
+            t_queue: 1e-3,
+            latency: 8e-3,
+            ..base_resp()
+        };
+        let segs = segments(1.0, &r);
+        assert!((coverage(&segs) - r.latency).abs() < ACCOUNTING_TOL_S);
+        assert_eq!(
+            segs.iter().map(|s| s.phase).collect::<Vec<_>>(),
+            vec![Phase::Compile, Phase::Queue, Phase::Exec]
+        );
+        // Compile is anchored at arrival on the plain path.
+        assert!((segs[0].from - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faulty_request_names_backoff_and_retry_wait() {
+        // floor advanced 7 ms past arrival: 5 ms of backoff plus 2 ms
+        // a doomed attempt ran before its crash.
+        let r = Response {
+            t_compile: 2e-3,
+            t_exec: 4e-3,
+            t_queue: 0.0,
+            t_backoff: 5e-3,
+            retries: 1,
+            latency: 13e-3,
+            ..base_resp()
+        };
+        let segs = segments(0.0, &r);
+        assert!((coverage(&segs) - r.latency).abs() < ACCOUNTING_TOL_S);
+        let phases: Vec<Phase> = segs.iter().map(|s| s.phase).collect();
+        assert_eq!(
+            phases,
+            vec![
+                Phase::Compile,
+                Phase::Backoff,
+                Phase::RetryWait,
+                Phase::Exec
+            ]
+        );
+    }
+
+    #[test]
+    fn qos_paced_request_overlaps_pacing_with_host_work() {
+        // Pacing (3 ms from arrival) outlasts sample+compile (2 ms):
+        // job_ready is the pacing end.
+        let r = Response {
+            t_sample: 1e-3,
+            t_compile: 1e-3,
+            t_qos: 3e-3,
+            t_exec: 4e-3,
+            t_queue: 0.0,
+            latency: 7e-3,
+            minibatch: true,
+            ..base_resp()
+        };
+        let segs = segments(2.0, &r);
+        assert!((coverage(&segs) - r.latency).abs() < ACCOUNTING_TOL_S);
+        assert!(segs.iter().any(|s| s.phase == Phase::QosPace));
+    }
+
+    #[test]
+    fn shed_covers_sample_plus_backoff() {
+        let r = Response {
+            t_sample: 2e-3,
+            t_backoff: 15e-3,
+            retries: 3,
+            latency: 17e-3,
+            device: u32::MAX,
+            minibatch: true,
+            outcome: Outcome::Shed(ShedReason::RetriesExhausted),
+            ..base_resp()
+        };
+        let segs = segments(0.5, &r);
+        assert!((coverage(&segs) - r.latency).abs() < ACCOUNTING_TOL_S);
+        assert_eq!(segs.len(), 2);
+    }
+
+    #[test]
+    fn rider_covers_queue_plus_ride() {
+        let r = Response {
+            t_sample: 1e-3,
+            t_queue: 2e-3,
+            t_exec: 9e-4, // item-only time: not a wall phase on riders
+            latency: 8e-3,
+            coalesced: true,
+            cache_hit: true,
+            ..base_resp()
+        };
+        let segs = segments(0.0, &r);
+        assert!((coverage(&segs) - r.latency).abs() < ACCOUNTING_TOL_S);
+        assert_eq!(segs.last().unwrap().phase, Phase::Ride);
+    }
+
+    #[test]
+    fn update_is_one_segment() {
+        let r = Response {
+            update: true,
+            t_update: 3e-3,
+            latency: 3e-3,
+            device: u32::MAX,
+            ..base_resp()
+        };
+        let segs = segments(0.25, &r);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].phase, Phase::Update);
+        assert!((coverage(&segs) - r.latency).abs() < ACCOUNTING_TOL_S);
+    }
+
+    #[test]
+    fn record_builds_kernel_children_proportional_to_cycles() {
+        let rq = Request::full(1, ZooModel::B1, dataset("CO").unwrap(), 0.0);
+        let r = Response {
+            t_compile: 1e-3,
+            t_exec: 4e-3,
+            latency: 5e-3,
+            ..base_resp()
+        };
+        let layers: Arc<[LayerSlice]> = vec![
+            LayerSlice { layer_id: 0, kind: 0, cycles: 300 },
+            LayerSlice { layer_id: 1, kind: 1, cycles: 100 },
+        ]
+        .into();
+        let job = ObsJob { layers, report: CompileReport::default() };
+        let mut obs = ObsState::new();
+        obs.record(&rq, &r, Some(&job), 4e-5);
+        let kernels: Vec<&Span> = obs.spans().iter().filter(|s| s.cat == "kernel").collect();
+        assert_eq!(kernels.len(), 2);
+        assert!((kernels[0].dur - 3e-3).abs() < 1e-12);
+        assert!((kernels[1].dur - 1e-3).abs() < 1e-12);
+        // Kernel spans tile the exec window exactly.
+        let exec = obs.spans().iter().find(|s| s.name == "exec").unwrap();
+        assert!((kernels[0].from - exec.from).abs() < 1e-12);
+        let k_end = kernels[1].from + kernels[1].dur;
+        assert!((k_end - (exec.from + exec.dur)).abs() < 1e-12);
+    }
+}

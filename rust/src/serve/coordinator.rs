@@ -37,6 +37,7 @@ use crate::exec::{CountingBackend, FunctionalExecutor, RustBackend};
 use crate::graph::{Dataset, GraphMeta, PartitionConfig, Sampler, TileCounts};
 use crate::ir::ZooModel;
 use crate::isa::Program;
+use crate::obs::{self, LayerSlice, ObsJob, ObsState, Span};
 use crate::quant::Precision;
 use crate::sim::{simulate, simulate_dynamic};
 use crate::stream::{ChurnGenerator, ChurnSpec, DynamicGraph};
@@ -520,13 +521,18 @@ fn class_p50(mut lats: Vec<f64>) -> f64 {
 /// quantized program simulates on the widened int8 ack automatically —
 /// the compiled program carries its scale table — so the memo needs no
 /// precision-specific logic beyond the key.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 struct ExecCost {
     secs: f64,
     remaps: u64,
     quant_blocks: u64,
     requant_ops: u64,
     int8_bytes: u64,
+    /// Per-layer cycle split of the simulated program, captured once
+    /// per key for the span tracer's kernel-level breakdown (shared
+    /// via `Arc`: the memo clones are pointer copies; unread when
+    /// tracing is off).
+    layers: Arc<[LayerSlice]>,
 }
 
 /// Fleet-wide modeled execution memo: [`ExecCost`] per program key,
@@ -548,12 +554,22 @@ fn memo_exec<'a>(
                 } else {
                     simulate(&exe.program, hw)
                 };
+                let layers: Vec<LayerSlice> = sim
+                    .layers
+                    .iter()
+                    .map(|l| LayerSlice {
+                        layer_id: l.layer_id,
+                        kind: l.layer_type,
+                        cycles: l.cycles,
+                    })
+                    .collect();
                 ExecCost {
                     secs: sim.loh_seconds(),
                     remaps: sim.remaps,
                     quant_blocks: sim.quant_blocks,
                     requant_ops: sim.requant_ops,
                     int8_bytes: sim.int8_bytes,
+                    layers: layers.into(),
                 }
             })
             .secs
@@ -716,6 +732,17 @@ pub struct Coordinator {
     /// `None` — including after installing an *empty* config — leaves
     /// every historical code path untouched, exactly like `fault`.
     qos: Option<QosState>,
+    /// Active span tracer, if any ([`Coordinator::set_tracing`]).
+    /// Same dormant pattern as `fault`/`qos`: `None` (the default)
+    /// leaves every serving path, response and stat byte-identical to
+    /// a tracing-free build — spans are reconstructed *from* admitted
+    /// responses, never threaded through the serving paths.
+    obs: Option<ObsState>,
+    /// Per-admission scratch for the tracer: the executed program's
+    /// layer split + compile report, stashed by the non-rider serving
+    /// paths and consumed at the end of [`Coordinator::admit`]. Always
+    /// `None` when `obs` is.
+    obs_scratch: Option<ObsJob>,
     /// Every completion record, in admission order.
     pub responses: Vec<Response>,
 }
@@ -752,6 +779,8 @@ impl Coordinator {
             costs: cfg.costs,
             fault: None,
             qos: None,
+            obs: None,
+            obs_scratch: None,
             responses: Vec::new(),
         }
     }
@@ -832,6 +861,55 @@ impl Coordinator {
     /// empty one, which installs nothing).
     pub fn tenants(&self) -> Option<&TenantConfig> {
         self.qos.as_ref().map(|q| q.config())
+    }
+
+    /// Enable (or disable) deterministic span tracing. Off by default;
+    /// the dormant path is byte-identical to a tracing-free build.
+    /// With tracing on, every admitted request records a span tree
+    /// (root + phase windows + compiler-pass and per-layer kernel
+    /// children) built from the same modeled quantities the response
+    /// bills — so the span stream is bit-identical across
+    /// `GA_KERNEL_THREADS` values and across record/replay.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.obs = if on { Some(ObsState::new()) } else { None };
+        self.obs_scratch = None;
+    }
+
+    /// Spans recorded so far, in admission order (empty with tracing
+    /// off).
+    pub fn spans(&self) -> &[Span] {
+        self.obs.as_ref().map_or(&[], |o| o.spans())
+    }
+
+    /// Chrome trace-event JSON of the recorded spans plus the fired
+    /// fault log as instant events (loads in `chrome://tracing` /
+    /// Perfetto).
+    pub fn chrome_trace_json(&self) -> String {
+        obs::chrome_trace(self.spans(), self.fault_log())
+    }
+
+    /// Log-bucketed histogram over served-inference latencies (the
+    /// same population as the exact `p50`/`p99` percentiles: updates
+    /// and sheds excluded).
+    pub fn latency_histogram(&self) -> obs::Histogram {
+        obs::Histogram::from_latencies(
+            self.responses
+                .iter()
+                .filter(|r| !r.update && !r.outcome.is_shed())
+                .map(|r| r.latency),
+        )
+    }
+
+    /// Stash the executed program's tracer scratch ([`ObsJob`]) for
+    /// the request being admitted. No-op when tracing is off — the
+    /// report lookup and `Arc` clone are never paid on the dormant
+    /// path.
+    fn stash_obs(&mut self, dev: usize, key: &Key, cost: &ExecCost) {
+        if self.obs.is_none() {
+            return;
+        }
+        let report = self.devices[dev].cached(key).map(|e| e.report).unwrap_or_default();
+        self.obs_scratch = Some(ObsJob { layers: cost.layers.clone(), report });
     }
 
     /// QoS gap backfills that started ahead of an earlier-admitted,
@@ -950,6 +1028,21 @@ impl Coordinator {
             }
         };
         self.clock.advance_to(rq.arrival + resp.latency);
+        // Per-request accounting invariant: the union of the phase
+        // windows reconstructed from the response's public fields must
+        // cover its latency exactly (every serving path bills every
+        // second it charges). Debug builds check it on every admission,
+        // tracing on or off.
+        debug_assert!(
+            obs::accounting_gap(rq.arrival, &resp) <= obs::ACCOUNTING_TOL_S,
+            "phase accounting drift: gap {} s on {:?}",
+            obs::accounting_gap(rq.arrival, &resp),
+            resp
+        );
+        let job = self.obs_scratch.take();
+        if let Some(o) = self.obs.as_mut() {
+            o.record(&rq, &resp, job.as_ref(), self.costs.visit_overhead_s);
+        }
         self.responses.push(resp);
         resp
     }
@@ -1007,7 +1100,7 @@ impl Coordinator {
         let route = self.dispatcher.route(&self.devices, &key, rq.arrival);
         match route {
             Route::Coalesce(dev, j) => {
-                let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
                 let job = &mut self.devices[dev].jobs[j];
                 job.riders += 1;
                 Response {
@@ -1043,7 +1136,8 @@ impl Coordinator {
                     );
                     device.jobs[j]
                 };
-                let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
+                self.stash_obs(dev, &key, &cost);
                 Response {
                     device: dev as u32,
                     t_compile: job.ready - rq.arrival,
@@ -1098,10 +1192,11 @@ impl Coordinator {
                 // The tail visit's bucket program is compiled (or
                 // compiling) on this device, so its exec time is
                 // already memoized.
-                let cost = *self
+                let cost = self
                     .exec_memo
                     .get(&key)
-                    .expect("batched onto a visit whose exec time is memoized");
+                    .expect("batched onto a visit whose exec time is memoized")
+                    .clone();
                 let device = &mut self.devices[dev];
                 device.extend_batch(j, cost.secs);
                 let job = device.jobs[j];
@@ -1140,7 +1235,8 @@ impl Coordinator {
                     );
                     device.jobs[j]
                 };
-                let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
+                self.stash_obs(dev, &key, &cost);
                 Response {
                     device: dev as u32,
                     t_compile: (job.ready - rq.arrival - t_sample).max(0.0),
@@ -1306,7 +1402,8 @@ impl Coordinator {
                 .reserve(dev, start, t_exec);
             let j = self.devices[dev].commit_gap(key, job_ready, start, done, t_exec, hit);
             let job = self.devices[dev].jobs[j];
-            let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+            let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
+            self.stash_obs(dev, &key, &cost);
             let outcome = if precision != rq.precision {
                 Outcome::Degraded(Degradation::Int8)
             } else {
@@ -1433,7 +1530,8 @@ impl Coordinator {
                 .reserve(dev, start, t_visit);
             let j = self.devices[dev].commit_gap(key, job_ready, start, done, t_visit, hit);
             let job = self.devices[dev].jobs[j];
-            let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+            let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
+            self.stash_obs(dev, &key, &cost);
             let outcome = match (precision != rq.precision, capped) {
                 (false, false) => Outcome::Completed,
                 (true, false) => Outcome::Degraded(Degradation::Int8),
@@ -1632,7 +1730,8 @@ impl Coordinator {
                     }
                     let j = self.devices[dev].commit(key, ready, start, done, t_exec, hit);
                     let job = self.devices[dev].jobs[j];
-                    let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                    let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
+                    self.stash_obs(dev, &key, &cost);
                     let outcome = if precision != rq.precision {
                         Outcome::Degraded(Degradation::Int8)
                     } else {
@@ -1779,7 +1878,8 @@ impl Coordinator {
                     }
                     let j = self.devices[dev].commit(key, ready, start, done, t_visit, hit);
                     let job = self.devices[dev].jobs[j];
-                    let cost = self.exec_memo.get(&key).copied().unwrap_or_default();
+                    let cost = self.exec_memo.get(&key).cloned().unwrap_or_default();
+                    self.stash_obs(dev, &key, &cost);
                     let outcome = match (precision != rq.precision, capped) {
                         (false, false) => Outcome::Completed,
                         (true, false) => Outcome::Degraded(Degradation::Int8),

@@ -1,0 +1,434 @@
+//! Observability suite — the per-request accounting invariant and the
+//! span-stream determinism contract:
+//!
+//! 1. property test over mixed workloads (f32 / int8 / mini-batch /
+//!    churn, then faulty, then QoS-paced): every response's
+//!    reconstructed phase timeline covers its latency to within
+//!    [`ACCOUNTING_TOL_S`], every segment stays inside the request's
+//!    `[arrival, done]` window, and per-phase widths match the public
+//!    accounting fields they were rebuilt from,
+//! 2. with tracing on, the phase children of every root span tile at
+//!    least 99% of the request's latency,
+//! 3. tracing off is dormant: responses and stats are bit-identical to
+//!    a traced run, and no spans are recorded,
+//! 4. span-stream determinism: a faulty and a tenanted daemon session
+//!    (mutually exclusive configs) each replay to Chrome trace JSON
+//!    byte-identical to the live session, across repeated replays, an
+//!    encode/decode cycle, and `GA_KERNEL_THREADS` values,
+//! 5. the histogram-backed percentile brackets the exact sorted-sample
+//!    percentile from above within one log2 bucket factor.
+
+use graphagile::config::HwConfig;
+use graphagile::daemon::{replay, replay_traced, DaemonSession, Trace};
+use graphagile::graph::dataset;
+use graphagile::ir::ZooModel;
+use graphagile::obs::{
+    accounting_gap, coverage, segments, Phase, Segment, ACCOUNTING_TOL_S,
+};
+use graphagile::serve::{
+    percentile, Coordinator, CostModel, FaultEvent, FaultPlan, FleetConfig, Precision,
+    PriorityClass, Request, Response, Tenant, TenantConfig,
+};
+use graphagile::util::{Json, Rng};
+
+/// A fleet whose deadline never fires: the accounting tests isolate the
+/// phase model from the fidelity cascade.
+fn patient_fleet(n_devices: usize) -> FleetConfig {
+    FleetConfig {
+        n_devices,
+        costs: CostModel { deadline_s: f64::INFINITY, ..CostModel::default() },
+        ..FleetConfig::default()
+    }
+}
+
+/// Run `f` with `GA_KERNEL_THREADS` pinned to `t`, restoring the
+/// previous value afterwards (same idiom as rust/tests/daemon_replay.rs).
+fn with_threads<T>(t: &str, f: impl FnOnce() -> T) -> T {
+    let prev = std::env::var("GA_KERNEL_THREADS").ok();
+    std::env::set_var("GA_KERNEL_THREADS", t);
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("GA_KERNEL_THREADS", v),
+        None => std::env::remove_var("GA_KERNEL_THREADS"),
+    }
+    out
+}
+
+/// The deterministic mixed workload every accounting test serves:
+/// whole-graph f32 and int8, mini-batch ego-nets, and churn batches —
+/// arrival-sorted, so `zip`ping with `Coordinator::responses` pairs
+/// each response with its request.
+fn mixed_workload(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B7];
+    let graphs = [dataset("CO").unwrap(), dataset("PU").unwrap()];
+    (0..n)
+        .map(|i| {
+            let tenant = rng.below(4) as u32;
+            let ds = graphs[rng.below(2) as usize];
+            let model = models[rng.below(3) as usize];
+            let arrival = i as f64 * 1e-4;
+            match rng.below(8) {
+                0 => Request::update(
+                    tenant,
+                    ds,
+                    16 + rng.below(48) as u32,
+                    rng.below(8) as u32,
+                    rng.below(3) as u32,
+                    seed ^ i as u64,
+                    arrival,
+                ),
+                1 | 2 => {
+                    let k = 1 + rng.below(3) as usize;
+                    let targets =
+                        (0..k).map(|_| rng.below(ds.n_vertices) as u32).collect();
+                    Request::minibatch(
+                        tenant,
+                        model,
+                        ds,
+                        targets,
+                        vec![8, 4],
+                        seed.wrapping_add(i as u64),
+                        arrival,
+                    )
+                }
+                3 => Request::full(tenant, model, ds, arrival)
+                    .with_precision(Precision::Int8),
+                _ => Request::full(tenant, model, ds, arrival),
+            }
+        })
+        .collect()
+}
+
+/// Total width the reconstructed timeline spends in one phase.
+fn phase_total(segs: &[Segment], phase: Phase) -> f64 {
+    segs.iter().filter(|s| s.phase == phase).map(|s| s.until - s.from).sum()
+}
+
+/// The accounting invariant, checked field by field for one
+/// (request, response) pair.
+fn check_accounting(rq: &Request, r: &Response) {
+    let segs = segments(rq.arrival, r);
+    let gap = accounting_gap(rq.arrival, r);
+    assert!(
+        gap <= ACCOUNTING_TOL_S,
+        "accounting gap {gap} s on {r:?} (arrival {})",
+        rq.arrival
+    );
+    // Every window stays inside the request's lifetime.
+    let done = rq.arrival + r.latency;
+    for s in &segs {
+        assert!(s.until > s.from, "empty or inverted window {s:?}");
+        assert!(
+            s.from >= rq.arrival - ACCOUNTING_TOL_S && s.until <= done + ACCOUNTING_TOL_S,
+            "window {s:?} outside [{}, {done}]",
+            rq.arrival
+        );
+    }
+    // Per-phase widths match the accounting fields they encode.
+    let tol = ACCOUNTING_TOL_S;
+    assert!((phase_total(&segs, Phase::Sample) - r.t_sample).abs() <= tol);
+    if r.update {
+        assert!((phase_total(&segs, Phase::Update) - r.latency).abs() <= tol);
+        return;
+    }
+    assert!((phase_total(&segs, Phase::Backoff) - r.t_backoff).abs() <= tol);
+    if r.outcome.is_shed() {
+        return;
+    }
+    assert!((phase_total(&segs, Phase::Queue) - r.t_queue).abs() <= tol);
+    if r.coalesced || r.batched {
+        // Riders: `t_exec` is item-only time, not a wall phase.
+        assert!(phase_total(&segs, Phase::Exec) == 0.0);
+    } else {
+        assert!((phase_total(&segs, Phase::Exec) - r.t_exec).abs() <= tol);
+        assert!((phase_total(&segs, Phase::Compile) - r.t_compile).abs() <= tol);
+        assert!((phase_total(&segs, Phase::QosPace) - r.t_qos).abs() <= tol);
+    }
+}
+
+#[test]
+fn accounting_invariant_holds_on_mixed_plain_serving() {
+    let reqs = mixed_workload(64, 7);
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+    let stats = c.run(reqs.clone());
+    assert_eq!(stats.completed + stats.shed, 64);
+    // The mix actually exercised the paths the phase model names.
+    assert!(stats.minibatched > 0, "no mini-batches in the mix");
+    assert!(stats.updates > 0, "no churn in the mix");
+    assert!(stats.quantized > 0, "no int8 in the mix");
+    for (rq, r) in reqs.iter().zip(&c.responses) {
+        check_accounting(rq, r);
+    }
+}
+
+#[test]
+fn accounting_invariant_holds_for_coalesced_riders() {
+    // An identical burst: the first request compiles, the other seven
+    // ride its job — the Queue + Ride reconstruction path.
+    let pu = dataset("PU").unwrap();
+    let reqs: Vec<Request> =
+        (0..8).map(|i| Request::full(i, ZooModel::B2, pu, 0.0)).collect();
+    let mut c = Coordinator::new(HwConfig::alveo_u250());
+    let stats = c.run(reqs.clone());
+    assert!(stats.coalesced > 0, "burst did not coalesce");
+    for (rq, r) in reqs.iter().zip(&c.responses) {
+        check_accounting(rq, r);
+    }
+}
+
+#[test]
+fn accounting_invariant_holds_under_faults() {
+    // A crash and a stall at t=0 on a patient 2-device fleet: retries,
+    // backoff pauses, and re-routes all enter the reconstruction.
+    let plan = FaultPlan {
+        seed: 11,
+        events: vec![
+            FaultEvent::DeviceCrash { device: 0, at: 0.0, recover_after: 5e-3 },
+            FaultEvent::TransientStall { device: 1, at: 0.0, duration: 1e-3 },
+        ],
+    };
+    let reqs = mixed_workload(32, 13);
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+    c.set_fault_plan(plan);
+    let stats = c.run(reqs.clone());
+    assert!(stats.retries > 0 || stats.rerouted > 0, "plan never bit");
+    for (rq, r) in reqs.iter().zip(&c.responses) {
+        check_accounting(rq, r);
+    }
+
+    // Fleet wipe: permanent crashes on every device shed with a named
+    // reason — the Sample + Backoff reconstruction path.
+    let wipe = FaultPlan {
+        seed: 3,
+        events: vec![
+            FaultEvent::DeviceCrash { device: 0, at: 0.0, recover_after: f64::INFINITY },
+            FaultEvent::DeviceCrash { device: 1, at: 0.0, recover_after: f64::INFINITY },
+        ],
+    };
+    let co = dataset("CO").unwrap();
+    let wreqs: Vec<Request> = (0..3)
+        .map(|i| Request::full(i, ZooModel::B1, co, i as f64 * 1e-4))
+        .collect();
+    let mut wc = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+    wc.set_fault_plan(wipe);
+    let wstats = wc.run(wreqs.clone());
+    assert!(wstats.shed > 0, "fleet wipe must shed");
+    for (rq, r) in wreqs.iter().zip(&wc.responses) {
+        check_accounting(rq, r);
+    }
+}
+
+#[test]
+fn accounting_invariant_holds_under_qos() {
+    // Saturating three-tenant traffic on one device: SFQ pacing charges
+    // `t_qos`, and the impossible-deadline best-effort tenant sheds.
+    let tenants = TenantConfig {
+        tenants: vec![
+            Tenant { id: 0, weight: 8.0, deadline_s: None, class: PriorityClass::Premium },
+            Tenant { id: 1, weight: 2.0, deadline_s: None, class: PriorityClass::Standard },
+            Tenant {
+                id: 2,
+                weight: 1.0,
+                deadline_s: Some(1e-9),
+                class: PriorityClass::BestEffort,
+            },
+        ],
+    };
+    let models = [ZooModel::B1, ZooModel::B2, ZooModel::B7];
+    let graphs = [dataset("CO").unwrap(), dataset("PU").unwrap()];
+    let mut rng = Rng::new(23);
+    let reqs: Vec<Request> = (0..48)
+        .map(|i| {
+            Request::full(
+                (i % 3) as u32,
+                models[rng.below(3) as usize],
+                graphs[rng.below(2) as usize],
+                i as f64 * 1e-5,
+            )
+        })
+        .collect();
+    let cfg = FleetConfig {
+        n_devices: 1,
+        coalesce: false,
+        microbatch: false,
+        ..FleetConfig::default()
+    };
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), cfg);
+    c.set_tenants(tenants);
+    let stats = c.run(reqs.clone());
+    assert!(c.responses.iter().any(|r| r.t_qos > 0.0), "pacing never charged");
+    assert!(stats.shed > 0, "impossible deadline never shed");
+    for (rq, r) in reqs.iter().zip(&c.responses) {
+        check_accounting(rq, r);
+    }
+}
+
+#[test]
+fn span_phase_children_tile_every_root() {
+    let reqs = mixed_workload(48, 17);
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+    c.set_tracing(true);
+    c.run(reqs);
+    let spans = c.spans();
+    assert!(!spans.is_empty());
+    let roots: Vec<_> = spans.iter().filter(|s| s.cat == "request").collect();
+    assert_eq!(roots.len(), 48, "one root span per admitted request");
+    for root in roots {
+        if root.dur <= 0.0 {
+            continue;
+        }
+        // The phase children of this request, as coverage windows.
+        let windows: Vec<Segment> = spans
+            .iter()
+            .filter(|s| s.request == root.request && s.cat == "phase")
+            .map(|s| Segment { phase: Phase::Exec, from: s.from, until: s.from + s.dur })
+            .collect();
+        let covered = coverage(&windows);
+        assert!(
+            covered >= 0.99 * root.dur,
+            "request {} phases cover {covered} of {} s",
+            root.request,
+            root.dur
+        );
+        // Kernel spans stay inside their request's lifetime.
+        for s in spans.iter().filter(|s| s.request == root.request && s.cat == "kernel") {
+            assert!(s.from >= root.from - ACCOUNTING_TOL_S);
+            assert!(s.from + s.dur <= root.from + root.dur + ACCOUNTING_TOL_S);
+        }
+    }
+}
+
+#[test]
+fn tracing_off_is_dormant_and_byte_identical() {
+    let run = |traced: bool| {
+        let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+        c.set_tracing(traced);
+        let stats = c.run(mixed_workload(40, 29));
+        let spans = c.spans().len();
+        let json = c.chrome_trace_json();
+        (c.responses, stats, spans, json)
+    };
+    let (r_off, s_off, n_off, j_off) = run(false);
+    let (r_on, s_on, n_on, _) = run(true);
+    assert_eq!(r_off, r_on, "tracing changed a response");
+    assert_eq!(s_off, s_on, "tracing changed the stats");
+    assert_eq!(n_off, 0, "dormant tracer recorded spans");
+    assert!(n_on > 0, "live tracer recorded nothing");
+    // An untraced export is the two metadata events and nothing else.
+    let Json::Arr(events) = Json::parse(j_off.trim()).unwrap() else {
+        panic!("chrome trace must be a top-level array")
+    };
+    assert_eq!(events.len(), 2);
+    assert!(events.iter().all(|e| e.str_of("ph").unwrap() == "M"));
+}
+
+/// Replay a trace under both thread counts and through an encode cycle,
+/// asserting the span stream is byte-identical to `live` everywhere.
+fn assert_span_determinism(trace: &Trace, live: &str) {
+    let (r1, s1, j1) = replay_traced(trace);
+    let (_, _, j2) = replay_traced(trace);
+    assert_eq!(j1, j2, "two replays disagree");
+    assert_eq!(j1, live, "replayed span stream diverges from the live session");
+    // Tracing only observes: an untraced replay serves identically.
+    let (ur, us) = replay(trace);
+    assert_eq!(ur, r1);
+    assert_eq!(us, s1);
+    // Bit-identical across kernel thread counts and an encode cycle.
+    let jt1 = with_threads("1", || replay_traced(trace).2);
+    let jt4 = with_threads("4", || replay_traced(trace).2);
+    assert_eq!(jt1, j1, "span stream varies with GA_KERNEL_THREADS=1");
+    assert_eq!(jt4, j1, "span stream varies with GA_KERNEL_THREADS=4");
+    let decoded = Trace::parse(&trace.encode()).unwrap();
+    assert_eq!(replay_traced(&decoded).2, j1, "encode cycle changed the span stream");
+}
+
+#[test]
+fn faulty_span_stream_replays_bit_identically() {
+    let costs = CostModel { deadline_s: f64::INFINITY, ..CostModel::default() };
+    let fleet = FleetConfig { n_devices: 2, costs, ..FleetConfig::default() };
+    let plan = FaultPlan {
+        seed: 7,
+        events: vec![
+            FaultEvent::DeviceCrash { device: 0, at: 0.0, recover_after: 1e-3 },
+            FaultEvent::TransientStall { device: 1, at: 0.0, duration: 1e-6 },
+        ],
+    };
+    let mut s = DaemonSession::with_plan(HwConfig::alveo_u250(), fleet, Some(plan));
+    s.enable_tracing();
+    let co = dataset("CO").unwrap();
+    let pu = dataset("PU").unwrap();
+    s.submit(Request::full(0, ZooModel::B1, co, 0.0)).unwrap();
+    s.submit(Request::minibatch(1, ZooModel::B1, co, vec![5, 9], vec![8, 4], 3, 0.0))
+        .unwrap();
+    s.submit(Request::full(2, ZooModel::B2, pu, 0.0).with_precision(Precision::Int8))
+        .unwrap();
+    s.submit(Request::update(0, pu, 32, 8, 1, 11, 0.0)).unwrap();
+    s.drain();
+    let live = s.chrome_trace_json();
+    let trace = s.finalize();
+    assert_eq!(trace.version, 2);
+    // The fired fault events render as instant events.
+    assert!(live.contains("\"cat\":"), "{}", &live[..live.len().min(200)]);
+    let Json::Arr(events) = Json::parse(live.trim()).unwrap() else {
+        panic!("chrome trace must be a top-level array")
+    };
+    assert!(events.iter().any(|e| e.str_of("ph").map(|p| p == "i").unwrap_or(false)));
+    assert_span_determinism(&trace, &live);
+}
+
+#[test]
+fn tenant_span_stream_replays_bit_identically() {
+    let tenants = TenantConfig {
+        tenants: vec![
+            Tenant { id: 0, weight: 4.0, deadline_s: None, class: PriorityClass::Premium },
+            Tenant {
+                id: 1,
+                weight: 1.0,
+                deadline_s: Some(1e-9),
+                class: PriorityClass::BestEffort,
+            },
+        ],
+    };
+    let fleet = FleetConfig { n_devices: 2, ..FleetConfig::default() };
+    let mut s = DaemonSession::with_tenants(HwConfig::alveo_u250(), fleet, Some(tenants));
+    s.enable_tracing();
+    let co = dataset("CO").unwrap();
+    let pu = dataset("PU").unwrap();
+    s.submit(Request::full(0, ZooModel::B2, co, 0.0)).unwrap();
+    // The impossible deadline walks the cascade and sheds — a span the
+    // replay must reproduce too.
+    s.submit(Request::full(1, ZooModel::B1, co, 0.0)).unwrap();
+    s.submit(Request::minibatch(0, ZooModel::B1, co, vec![5, 9], vec![8, 4], 3, 0.0))
+        .unwrap();
+    s.submit(Request::full(0, ZooModel::B7, pu, 0.0)).unwrap();
+    s.drain();
+    let live = s.chrome_trace_json();
+    let trace = s.finalize();
+    assert_eq!(trace.version, 3);
+    assert_span_determinism(&trace, &live);
+}
+
+#[test]
+fn histogram_percentiles_bracket_the_exact_path() {
+    let reqs = mixed_workload(64, 31);
+    let mut c = Coordinator::fleet(HwConfig::alveo_u250(), patient_fleet(2));
+    c.run(reqs);
+    let hist = c.latency_histogram();
+    let mut lats: Vec<f64> = c
+        .responses
+        .iter()
+        .filter(|r| !r.update && !r.outcome.is_shed())
+        .map(|r| r.latency)
+        .collect();
+    lats.sort_by(f64::total_cmp);
+    assert_eq!(hist.count(), lats.len() as u64);
+    assert!((hist.sum() - lats.iter().sum::<f64>()).abs() <= 1e-9);
+    for p in [0.5, 0.9, 0.99] {
+        let exact = percentile(&lats, p);
+        let bucketed = hist.quantile(p);
+        assert!(exact > 0.0);
+        assert!(bucketed >= exact, "p{p}: bucket bound must bracket from above");
+        assert!(bucketed <= exact * 2.0, "p{p}: within one log2 bucket factor");
+    }
+}
